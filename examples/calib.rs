@@ -1,0 +1,70 @@
+//! Calibration helper: prints model-vs-reported for every survey entry,
+//! and (with --fit) sweeps plausible architectural-parameter
+//! neighborhoods per entry to aid transcription of under-specified
+//! publications (the paper's own "parameter extraction" step).
+
+use imcsim::arch::ImcFamily;
+use imcsim::db::{survey, SurveyEntry};
+use imcsim::model::{peak_tops_per_watt, TechParams};
+
+fn modeled(e: &SurveyEntry) -> f64 {
+    let m = e.to_macro();
+    peak_tops_per_watt(&m, &TechParams::for_node(m.tech_nm), 0.5)
+}
+
+fn main() {
+    let fit = std::env::args().any(|a| a == "--fit");
+    for e in survey() {
+        let mo = modeled(&e);
+        let mis = (mo - e.reported_tops_w).abs() / e.reported_tops_w;
+        println!(
+            "{:28} {:5} node={:4} reported={:8.1} modeled={:8.1} mismatch={:6.1}% {}",
+            format!("{}@{}V/{}b", e.chip, e.vdd, e.act_bits),
+            e.family.as_str(),
+            e.tech_nm,
+            e.reported_tops_w,
+            mo,
+            mis * 100.0,
+            if e.known_outlier { "OUTLIER" } else { "" }
+        );
+        if fit && mis > 0.25 && !e.known_outlier {
+            // sweep plausible neighborhoods
+            let rows_opts = [64, 128, 256, 512, 1024, 1152, 2304];
+            let adc_opts = [3, 4, 5, 6, 7, 8];
+            let dac_opts = [1u32, 2, 4];
+            let mut best: Option<(f64, SurveyEntry)> = None;
+            for &r in &rows_opts {
+                for &a in &adc_opts {
+                    for &d in &dac_opts {
+                        if d > e.act_bits {
+                            continue;
+                        }
+                        let mut v = e.clone();
+                        v.rows = r;
+                        if v.family == ImcFamily::Aimc {
+                            v.adc_res = a;
+                            v.dac_res = d;
+                        } else {
+                            v.dac_res = d.min(2).min(e.act_bits);
+                        }
+                        if v.to_macro().validate().is_err() {
+                            continue;
+                        }
+                        let m = modeled(&v);
+                        let mm = (m - e.reported_tops_w).abs() / e.reported_tops_w;
+                        if best.as_ref().is_none_or(|(b, _)| mm < *b) {
+                            best = Some((mm, v));
+                        }
+                    }
+                }
+            }
+            if let Some((mm, v)) = best {
+                println!(
+                    "    -> fit: rows={} adc={} dac={} gives {:6.1}%",
+                    v.rows, v.adc_res, v.dac_res,
+                    mm * 100.0
+                );
+            }
+        }
+    }
+}

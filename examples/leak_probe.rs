@@ -1,0 +1,17 @@
+use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+fn main() {
+    let engine = Engine::new(load_manifest(&default_artifacts_dir()).unwrap()).unwrap();
+    let d = engine.design("dimc_large").unwrap().clone();
+    let x = vec![1i32; 16 * d.config.rows];
+    let w = vec![1i32; d.config.rows * d.config.d1];
+    println!("start rss {:.1} MB", rss_mb());
+    for i in 0..2000 {
+        engine.execute_mvm("dimc_large", Kind::Macro, &x, &w).unwrap();
+        if i % 500 == 499 { println!("iter {}: rss {:.1} MB", i + 1, rss_mb()); }
+    }
+}

@@ -1,0 +1,78 @@
+//! Quickstart: the public API in five minutes — describe a macro,
+//! evaluate the unified cost model, and map a layer with the DSE.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (No artifacts needed — this is the analytical side only.)
+
+use imcsim::arch::{ImcFamily, ImcMacro, ImcSystem};
+use imcsim::dse::{search_layer, DseOptions};
+use imcsim::model::{
+    cycle_ns, macro_energy, peak_energy_per_mac_fj, peak_tops, peak_tops_per_mm2,
+    peak_tops_per_watt, MacroOpCounts, TechParams,
+};
+use imcsim::workload::Layer;
+
+fn main() {
+    // 1. Describe an IMC macro (paper Table I parameters).
+    let aimc = ImcMacro::new(
+        "my_aimc",
+        ImcFamily::Aimc,
+        1152,
+        256, // R x C
+        4,
+        4, // weight / activation bits
+        4,
+        8, // DAC / ADC resolution
+        0.8,
+        28.0, // vdd, tech node
+    );
+    let dimc = ImcMacro::new("my_dimc", ImcFamily::Dimc, 256, 256, 4, 4, 1, 0, 0.8, 22.0);
+
+    // 2. Technology parameters come from the Fig. 6 regression.
+    for m in [&aimc, &dimc] {
+        let tech = TechParams::for_node(m.tech_nm);
+        println!(
+            "{:8} {}  D1={:3} D2={:4}  {:7.2} fJ/MAC  {:7.1} TOP/s/W  {:6.2} TOP/s  {:6.1} TOP/s/mm2  cycle {:.2} ns",
+            m.name,
+            m.family,
+            m.d1(),
+            m.d2(),
+            peak_energy_per_mac_fj(m, &tech, 0.5),
+            peak_tops_per_watt(m, &tech, 0.5),
+            peak_tops(m),
+            peak_tops_per_mm2(m),
+            cycle_ns(m),
+        );
+    }
+
+    // 3. Full energy breakdown for a concrete workload volume.
+    let tech = TechParams::for_node(aimc.tech_nm);
+    let ops = MacroOpCounts::peak(&aimc, 1000, 0.5);
+    let e = macro_energy(&aimc, &tech, &ops);
+    println!(
+        "\n1000 MVMs on {}: total {:.2} nJ (BL {:.1}% | ADC {:.1}% | DAC {:.1}% | tree {:.1}%)",
+        aimc.name,
+        e.total_fj() * 1e-6,
+        e.bl_fj / e.total_fj() * 100.0,
+        e.adc_fj / e.total_fj() * 100.0,
+        e.dac_fj / e.total_fj() * 100.0,
+        e.adder_tree_fj / e.total_fj() * 100.0,
+    );
+
+    // 4. Map a ResNet8 layer with the DSE and inspect the best mapping.
+    let layer = Layer::conv2d("res2_conv1", 16, 16, 32, 16, 3, 3, 2);
+    let sys = ImcSystem::new("quick", aimc, 1);
+    let r = search_layer(&layer, &sys, &tech, &DseOptions::default());
+    let b = &r.best;
+    println!(
+        "\n{} on {}: policy {}, util {:.1}%, {:.2} nJ macro + {:.2} nJ traffic, {:.1} us ({} mappings searched)",
+        layer.name,
+        sys.name,
+        b.policy.as_str(),
+        b.utilization * 100.0,
+        b.macro_energy.total_fj() * 1e-6,
+        b.traffic.total_fj() * 1e-6,
+        b.time_ns * 1e-3,
+        r.evaluated,
+    );
+}

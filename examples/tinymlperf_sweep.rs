@@ -1,0 +1,152 @@
+//! tinyMLPerf sweep — the paper's §VI case study as a standalone driver,
+//! extended with the ablations DESIGN.md calls out:
+//!
+//! * objective ablation (energy vs latency vs EDP),
+//! * temporal-policy ablation (force WS / OS / IS vs searched),
+//! * sparsity sensitivity (0 %, 50 %, 90 %).
+//!
+//! Run: `cargo run --release --example tinymlperf_sweep [--csv DIR]`
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{search_network, DseOptions, Objective};
+use imcsim::mapping::{TemporalPolicy, ALL_POLICIES};
+use imcsim::report::Table;
+use imcsim::util::cli::Args;
+use imcsim::workload::all_networks;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let systems = table2_systems();
+    let networks = all_networks();
+
+    // --- headline grid (Fig. 7 numbers) ---
+    println!("== case study: energy-optimal mappings ==");
+    let mut grid = Table::new(&["network", "system", "E total [uJ]", "t [ms]", "TOP/s/W", "util"]);
+    for net in &networks {
+        for sys in &systems {
+            let r = search_network(net, sys, &DseOptions::default());
+            grid.row(vec![
+                r.network.clone(),
+                r.system.clone(),
+                format!("{:.2}", r.total_energy_fj() * 1e-9),
+                format!("{:.3}", r.total_time_ns() * 1e-6),
+                format!("{:.2}", r.effective_tops_per_watt()),
+                format!("{:.1}%", r.mean_utilization() * 100.0),
+            ]);
+        }
+    }
+    println!("{}", grid.render());
+
+    // --- ablation 1: temporal policy (ResNet8 on aimc_large) ---
+    println!("== ablation: temporal policy (ResNet8 on aimc_large) ==");
+    let resnet = &networks[1];
+    let mut t = Table::new(&["policy", "E macro [uJ]", "E traffic [uJ]", "E total [uJ]"]);
+    for p in ALL_POLICIES {
+        let r = search_network(
+            resnet,
+            &systems[0],
+            &DseOptions {
+                policy: Some(p),
+                ..Default::default()
+            },
+        );
+        t.row(vec![
+            p.as_str().into(),
+            format!("{:.3}", r.macro_breakdown().total_fj() * 1e-9),
+            format!("{:.3}", r.traffic_breakdown().total_fj() * 1e-9),
+            format!("{:.3}", r.total_energy_fj() * 1e-9),
+        ]);
+    }
+    let free = search_network(resnet, &systems[0], &DseOptions::default());
+    t.row(vec![
+        "searched".into(),
+        format!("{:.3}", free.macro_breakdown().total_fj() * 1e-9),
+        format!("{:.3}", free.traffic_breakdown().total_fj() * 1e-9),
+        format!("{:.3}", free.total_energy_fj() * 1e-9),
+    ]);
+    println!("{}", t.render());
+
+    // --- ablation 2: objective ---
+    println!("== ablation: objective (DS-CNN on dimc_multi) ==");
+    let dscnn = &networks[2];
+    let mut t2 = Table::new(&["objective", "E [uJ]", "t [ms]", "EDP [uJ*ms]"]);
+    for (name, obj) in [
+        ("energy", Objective::Energy),
+        ("latency", Objective::Latency),
+        ("edp", Objective::Edp),
+    ] {
+        let r = search_network(
+            dscnn,
+            &systems[3],
+            &DseOptions {
+                objective: obj,
+                ..Default::default()
+            },
+        );
+        let e = r.total_energy_fj() * 1e-9;
+        let tm = r.total_time_ns() * 1e-6;
+        t2.row(vec![
+            name.into(),
+            format!("{e:.3}"),
+            format!("{tm:.3}"),
+            format!("{:.4}", e * tm),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // --- ablation 3: input sparsity ---
+    println!("== ablation: input sparsity (MobileNet on dimc_large) ==");
+    let mobilenet = &networks[3];
+    let mut t3 = Table::new(&["sparsity", "E macro [uJ]", "TOP/s/W (macro)"]);
+    for s in [0.0, 0.5, 0.9] {
+        let r = search_network(
+            mobilenet,
+            &systems[2],
+            &DseOptions {
+                input_sparsity: s,
+                ..Default::default()
+            },
+        );
+        let m = r.macro_breakdown().total_fj();
+        t3.row(vec![
+            format!("{:.0}%", s * 100.0),
+            format!("{:.3}", m * 1e-9),
+            format!("{:.1}", 2.0e3 * r.total_macs() as f64 / m),
+        ]);
+    }
+    println!("{}", t3.render());
+
+    // --- ablation 4: weight-stationary forced on the autoencoder ---
+    // (the paper's §VI discussion: no weight reuse on dense layers)
+    println!("== ablation: AE weight traffic on aimc_large ==");
+    let ae = &networks[0];
+    let r_ws = search_network(
+        ae,
+        &systems[0],
+        &DseOptions {
+            policy: Some(TemporalPolicy::WeightStationary),
+            ..Default::default()
+        },
+    );
+    let w: f64 = r_ws
+        .layers
+        .iter()
+        .map(|l| l.best.accesses.weight_gb_reads)
+        .sum();
+    let i: f64 = r_ws
+        .layers
+        .iter()
+        .map(|l| l.best.accesses.input_gb_reads)
+        .sum();
+    println!(
+        "weight elements moved: {w:.0}, input elements moved: {i:.0} (ratio {:.1}x)\n",
+        w / i
+    );
+
+    if let Some(dir) = args.opt("csv") {
+        let path = format!("{dir}/case_study.csv");
+        std::fs::create_dir_all(dir).ok();
+        std::fs::write(&path, grid.to_csv()).expect("write csv");
+        println!("wrote {path}");
+    }
+}

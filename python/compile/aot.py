@@ -1,0 +1,123 @@
+"""AOT pipeline: lower the L2/L1 graph to HLO *text* artifacts for rust.
+
+Runs ONCE at build time (``make artifacts``). Emits, per case-study design
+(paper Table II):
+
+* ``artifacts/<name>_mvm.hlo.txt``  — the IMC-macro MVM (pallas kernel,
+  interpret-lowered so it is plain HLO ops executable on any PJRT backend),
+* ``artifacts/<name>_ref.hlo.txt``  — the exact integer MVM with identical
+  shapes (the rust side uses it for accuracy comparisons),
+
+plus ``artifacts/manifest.json`` describing every artifact (shapes,
+dtypes, macro parameters) so the rust runtime can load them generically.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import MacroConfig
+from .model import mvm_entry, mvm_ref_entry
+
+#: Default batch tile the coordinator pads requests to.
+BATCH_TILE = 16
+
+#: The four case-study designs of paper Table II (§VI). Macro geometry is
+#: taken from the table; ADC/DAC resolutions are representative of the
+#: surveyed design families (SAR ADC ~ 6-8b, DAC = full activation
+#: precision for the large-array design, 2b slicing for the multi-macro
+#: one; DIMC is bit-serial, dac_res = 1).
+TABLE2_DESIGNS: dict[str, MacroConfig] = {
+    "aimc_large": MacroConfig(
+        rows=1152, cols=256, weight_bits=4, act_bits=4,
+        dac_res=4, adc_res=8, family="aimc", adc_fs_rows=256,
+    ),
+    "aimc_multi": MacroConfig(
+        rows=64, cols=32, weight_bits=4, act_bits=4,
+        dac_res=2, adc_res=6, family="aimc",
+    ),
+    "dimc_large": MacroConfig(
+        rows=256, cols=256, weight_bits=4, act_bits=4,
+        dac_res=1, adc_res=0, family="dimc",
+    ),
+    "dimc_multi": MacroConfig(
+        rows=48, cols=4, weight_bits=4, act_bits=4,
+        dac_res=1, adc_res=0, family="dimc",
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mvm(cfg: MacroConfig, batch: int, exact: bool) -> str:
+    """Lower one (batch, rows) x (rows, d1) MVM entry point to HLO text."""
+    x_spec = jax.ShapeDtypeStruct((batch, cfg.rows), jnp.int32)
+    w_spec = jax.ShapeDtypeStruct((cfg.rows, cfg.d1), jnp.int32)
+    fn = mvm_ref_entry(cfg, batch) if exact else mvm_entry(cfg, batch)
+    return to_hlo_text(jax.jit(fn).lower(x_spec, w_spec))
+
+
+def _cfg_json(cfg: MacroConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["d1"] = cfg.d1
+    d["n_slices"] = cfg.n_slices
+    d["adc_lsb"] = cfg.adc_lsb if cfg.family == "aimc" else 1.0
+    return d
+
+
+def build_artifacts(out_dir: pathlib.Path, batch: int = BATCH_TILE) -> dict:
+    """Emit all artifacts + manifest; returns the manifest dict."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"batch": batch, "designs": {}}
+    for name, cfg in TABLE2_DESIGNS.items():
+        entry = {"config": _cfg_json(cfg), "files": {}}
+        for kind, exact in (("mvm", False), ("ref", True)):
+            text = lower_mvm(cfg, batch, exact)
+            fname = f"{name}_{kind}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            entry["files"][kind] = {
+                "path": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "inputs": [
+                    {"shape": [batch, cfg.rows], "dtype": "s32"},
+                    {"shape": [cfg.rows, cfg.d1], "dtype": "s32"},
+                ],
+                "outputs": [{"shape": [batch, cfg.d1], "dtype": "s32"}],
+            }
+            print(f"  wrote {fname} ({len(text)} chars)")
+        manifest["designs"][name] = entry
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"  wrote manifest.json ({len(manifest['designs'])} designs)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--batch", type=int, default=BATCH_TILE)
+    args = ap.parse_args()
+    build_artifacts(pathlib.Path(args.out_dir), args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 pallas kernels: bit-true IMC macro datapath + pure-jnp oracles."""
+
+from .imc_macro import (  # noqa: F401
+    MacroConfig,
+    adc_quantize,
+    aimc_error_bound,
+    imc_macro_matmul,
+    macro_output_bound,
+)
+from .ref import exact_matmul, imc_macro_ref  # noqa: F401

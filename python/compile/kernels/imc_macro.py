@@ -1,0 +1,284 @@
+"""Layer 1 — Pallas kernel: bit-true SRAM in-memory-computing macro datapath.
+
+Functionally simulates one IMC macro executing a matrix-vector / matrix-matrix
+multiplication the way the silicon does it (Houshmand et al., "Benchmarking
+and modeling of analog and digital SRAM in-memory computing architectures"):
+
+* Weights are stored in the array as ``B_w``-bit two's-complement words,
+  one bit per SRAM column, ``D1 = C / B_w`` weight operands per row.
+* Activations are unsigned ``B_a``-bit values, streamed bit-serially as
+  ``ceil(B_a / DAC_res)`` slices of ``DAC_res`` bits each (the DAC width).
+* Each (input-slice, weight-bit-plane) pair produces one *bitline
+  accumulation*: the dot product of the slice vector with the weight bit
+  plane along the ``D2`` rows of the array.
+* AIMC: the bitline value is an analog charge → it passes through an ADC
+  with ``ADC_res`` bits of resolution over a full-scale range of
+  ``adc_fs_rows * (2^DAC_res - 1)``; values are clipped and quantized
+  (this is the accuracy/efficiency trade-off of analog IMC).
+* DIMC: the bitline values are digital and accumulated exactly by the
+  adder tree — the result is bit-exact.
+* Digital shift-and-add recombines bit planes/slices (sign bit plane has
+  weight ``-2^(B_w-1)``).
+
+The kernel runs under ``interpret=True`` (CPU) — the BlockSpec tiling
+mirrors the macro geometry: one (batch-tile × D1-tile) output block per
+grid step with the full accumulation axis (D2 rows) resident, i.e. the
+"weights stationary / activations streamed" dataflow of the paper.
+
+Correctness oracle: ``kernels.ref`` (pure jnp, no pallas).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroConfig:
+    """Static configuration of one IMC macro (mirrors rust `arch::ImcMacro`).
+
+    Attributes:
+        rows: physical SRAM rows (the accumulation axis D2).
+        cols: physical SRAM columns; ``cols // weight_bits`` weight
+            operands (output channels) are stored per row.
+        weight_bits: ``B_w`` — weight precision (two's complement).
+        act_bits: ``B_a`` — activation precision (unsigned).
+        dac_res: DAC resolution; activations are streamed in
+            ``ceil(act_bits / dac_res)`` slices. DIMC designs are
+            bit-serial with ``dac_res == 1`` (wordline drivers).
+        adc_res: ADC resolution (AIMC only; ignored for DIMC).
+        family: ``"aimc"`` or ``"dimc"``.
+        adc_fs_rows: number of rows spanned by the ADC full-scale range.
+            Defaults to all rows (conservative, no clipping for uniform
+            inputs). Smaller values trade clipping for finer LSB.
+    """
+
+    rows: int
+    cols: int
+    weight_bits: int = 4
+    act_bits: int = 4
+    dac_res: int = 1
+    adc_res: int = 8
+    family: str = "aimc"
+    adc_fs_rows: int | None = None
+
+    def __post_init__(self):
+        if self.family not in ("aimc", "dimc"):
+            raise ValueError(f"unknown IMC family: {self.family!r}")
+        if self.cols % self.weight_bits != 0:
+            raise ValueError("cols must be a multiple of weight_bits")
+        if not (1 <= self.dac_res <= self.act_bits):
+            raise ValueError("need 1 <= dac_res <= act_bits")
+
+    @property
+    def d1(self) -> int:
+        """Weight operands per row (output-channel axis of the array)."""
+        return self.cols // self.weight_bits
+
+    @property
+    def d2(self) -> int:
+        """Accumulation axis (rows jointly reduced per vector MAC)."""
+        return self.rows
+
+    @property
+    def n_slices(self) -> int:
+        """Bit-serial input slices per full-precision activation."""
+        return math.ceil(self.act_bits / self.dac_res)
+
+    @property
+    def fs_rows(self) -> int:
+        return self.adc_fs_rows if self.adc_fs_rows is not None else self.rows
+
+    @property
+    def adc_full_scale(self) -> float:
+        """Largest bitline value representable without ADC clipping."""
+        return float(self.fs_rows * (2**self.dac_res - 1))
+
+    @property
+    def adc_lsb(self) -> float:
+        """ADC quantization step Δ = max(1, FS / (2^ADC_res - 1)).
+
+        The LSB floors at 1: a bitline accumulation is an integer count of
+        unit cell charges, so an ADC with more codes than the full scale
+        is a lossless digitizer (Δ = 1), not a sub-unit interpolator.
+        """
+        return max(1.0, self.adc_full_scale / float(2**self.adc_res - 1))
+
+    @property
+    def exact_adc_res(self) -> int:
+        """Smallest ADC resolution that makes AIMC bit-exact (Δ <= 1)."""
+        return max(1, math.ceil(math.log2(self.adc_full_scale + 1.0)))
+
+    def weight_range(self) -> tuple[int, int]:
+        """Inclusive two's-complement weight range."""
+        return (-(2 ** (self.weight_bits - 1)), 2 ** (self.weight_bits - 1) - 1)
+
+    def act_range(self) -> tuple[int, int]:
+        """Inclusive unsigned activation range."""
+        return (0, 2**self.act_bits - 1)
+
+
+def adc_quantize(bitline: jax.Array, cfg: MacroConfig) -> jax.Array:
+    """Model of the column ADC: clip to full scale, quantize to ADC_res bits.
+
+    ``bitline`` holds integer-valued float32 analog accumulations in
+    ``[0, D2 * (2^DAC_res - 1)]``. Returns the reconstructed (de-quantized)
+    value ``code * Δ`` as float32 so downstream shift-add sees what the
+    digital logic would.
+    """
+    n_codes = 2**cfg.adc_res - 1
+    fs = cfg.fs_rows * (2**cfg.dac_res - 1)
+    clipped = jnp.clip(bitline, 0.0, float(fs))
+    if cfg.adc_lsb <= 1.0:
+        # Lossless digitizer: every unit charge maps to its own code.
+        return clipped
+    # Integer rounding (round-half-up): bitline values are exact integer
+    # counts of unit charges, so quantization is done in int32 — bit-exact
+    # and immune to 1-ulp float-division differences between jit/eager
+    # evaluation (which matters for pallas-vs-ref equality). Requires
+    # 2 * FS * n_codes < 2^31 (true for every surveyed geometry).
+    bli = clipped.astype(jnp.int32)
+    code = (2 * bli * jnp.int32(n_codes) + jnp.int32(fs)) // jnp.int32(2 * fs)
+    code = jnp.clip(code, 0, n_codes)
+    return code.astype(jnp.float32) * jnp.float32(cfg.adc_lsb)
+
+
+def _macro_kernel(x_ref, w_ref, o_ref, *, cfg: MacroConfig):
+    """Pallas kernel body: one output tile of the IMC matmul.
+
+    x_ref: (TB, D2) int32 unsigned activations
+    w_ref: (D2, TD) int32 signed weights
+    o_ref: (TB, TD) int32 outputs
+
+    Perf note (EXPERIMENTS.md §Perf, L1 iteration 2): the bit-serial /
+    bit-parallel structure is evaluated as ONE stacked matmul — input
+    slices concatenated along the batch axis, weight bit planes along
+    the column axis — instead of `n_slices x weight_bits` separate
+    matmuls. Every output element is the same dot product of the same
+    0/1-valued vectors (all values are integers < 2^24, so f32
+    accumulation is exact regardless of association), so the result is
+    bit-identical to the loop form used by `ref.imc_macro_ref`; the
+    stacked GEMM simply blocks far better on the CPU backend.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    tb = x.shape[0]
+    td = w.shape[1]
+    slice_mask = jnp.int32(2**cfg.dac_res - 1)
+
+    # (S*TB, D2): input DAC slices stacked on the batch axis
+    xs = jnp.concatenate(
+        [
+            ((x >> jnp.int32(s * cfg.dac_res)) & slice_mask).astype(jnp.float32)
+            for s in range(cfg.n_slices)
+        ],
+        axis=0,
+    )
+    # (D2, BW*TD): two's-complement bit planes stacked on the column
+    # axis. Arithmetic >> keeps the sign replicated, so the
+    # (weight_bits-1)-th plane is the sign plane.
+    wp = jnp.concatenate(
+        [
+            ((w >> jnp.int32(b)) & jnp.int32(1)).astype(jnp.float32)
+            for b in range(cfg.weight_bits)
+        ],
+        axis=1,
+    )
+    # Analog (AIMC) / digital (DIMC) accumulation along the rows for all
+    # (slice, plane) pairs at once.
+    bl = jnp.dot(xs, wp, preferred_element_type=jnp.float32)
+    if cfg.family == "aimc":
+        bl = adc_quantize(bl, cfg)
+    # (S, TB, BW, TD): rows are slice-major, columns plane-major
+    bl = bl.reshape(cfg.n_slices, tb, cfg.weight_bits, td)
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for s in range(cfg.n_slices):
+        for b in range(cfg.weight_bits):
+            plane_weight = float(2 ** (b + s * cfg.dac_res))
+            if b == cfg.weight_bits - 1:
+                plane_weight = -plane_weight  # sign plane
+            acc = acc + plane_weight * bl[s, :, b, :]
+    o_ref[...] = jnp.round(acc).astype(jnp.int32)
+
+
+def _pad_to(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "tile_d1"))
+def imc_macro_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: MacroConfig,
+    tile_b: int = 16,
+    tile_d1: int | None = None,
+) -> jax.Array:
+    """Run the IMC macro on a (B, D2) x (D2, D1) integer matmul.
+
+    Args:
+        x: (B, D2) int32 unsigned activations in ``cfg.act_range()``.
+        w: (D2, D1) int32 signed weights in ``cfg.weight_range()``.
+        cfg: macro configuration; ``D2 == cfg.rows`` and ``D1 <= cfg.d1``
+            are enforced (a smaller D1 models a partially-filled array).
+    Returns:
+        (B, D1) int32: the macro's output after ADC + shift-add (AIMC) or
+        the exact product (DIMC).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError("x must be (B, D2), w must be (D2, D1)")
+    if x.shape[1] != cfg.rows or w.shape[0] != cfg.rows:
+        raise ValueError(
+            f"accumulation axis mismatch: x {x.shape}, w {w.shape}, rows={cfg.rows}"
+        )
+    if w.shape[1] > cfg.d1:
+        raise ValueError(f"D1={w.shape[1]} exceeds macro capacity {cfg.d1}")
+
+    b, d1 = x.shape[0], w.shape[1]
+    td = tile_d1 if tile_d1 is not None else min(d1, 128)
+    pb, pd = _pad_to(b, tile_b), _pad_to(d1, td)
+    xp = jnp.pad(x.astype(jnp.int32), ((0, pb - b), (0, 0)))
+    wp = jnp.pad(w.astype(jnp.int32), ((0, 0), (0, pd - d1)))
+
+    out = pl.pallas_call(
+        functools.partial(_macro_kernel, cfg=cfg),
+        grid=(pb // tile_b, pd // td),
+        in_specs=[
+            pl.BlockSpec((tile_b, cfg.rows), lambda i, j: (i, 0)),
+            pl.BlockSpec((cfg.rows, td), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, td), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pd), jnp.int32),
+        interpret=True,  # CPU path; real-TPU lowering would emit Mosaic.
+    )(xp, wp)
+    return out[:b, :d1]
+
+
+def macro_output_bound(cfg: MacroConfig, d2: int | None = None) -> int:
+    """Worst-case |output| of one macro reduction (for requant scaling)."""
+    d2 = cfg.rows if d2 is None else d2
+    amax = 2**cfg.act_bits - 1
+    wmax = 2 ** (cfg.weight_bits - 1)
+    return d2 * amax * wmax
+
+
+def aimc_error_bound(cfg: MacroConfig) -> float:
+    """Upper bound on |AIMC output - exact| from ADC quantization alone.
+
+    Each of the ``n_slices * weight_bits`` bitline conversions contributes
+    at most Δ/2 absolute error (no clipping assumed), scaled by its
+    shift-add plane weight. Clipping can add more; with
+    ``adc_fs_rows == rows`` and in-range operands there is no clipping.
+    """
+    delta = cfg.adc_lsb
+    total = 0.0
+    for s in range(cfg.n_slices):
+        for b in range(cfg.weight_bits):
+            total += (delta / 2.0) * float(2 ** (b + s * cfg.dac_res))
+    return total

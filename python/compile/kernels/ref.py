@@ -1,0 +1,102 @@
+"""Pure-jnp correctness oracles for the IMC macro kernel (no pallas).
+
+Two references:
+
+* :func:`exact_matmul` — the mathematically exact integer product. DIMC
+  must match it bit-exactly; AIMC must match it when the ADC has enough
+  resolution (``cfg.exact_adc_res``).
+* :func:`imc_macro_ref` — the same bit-serial / bit-parallel datapath as
+  the pallas kernel (slicing, ADC clip+quantize, shift-add) written as
+  straight-line jnp. The pallas kernel must match this one exactly in
+  *all* configurations — this is the core correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .imc_macro import MacroConfig, adc_quantize
+
+
+def exact_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Exact integer (B, D2) @ (D2, D1) in int32."""
+    return jnp.dot(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def fast_exact_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Exact integer matmul evaluated through the f32 GEMM path.
+
+    Bit-identical to :func:`exact_matmul` whenever every partial sum
+    stays below 2^24 in magnitude (f32 represents all such integers
+    exactly, so accumulation order cannot matter). All macro geometries
+    in this project satisfy `rows * act_max * |w|_max < 2^24`;
+    `aot.py` asserts the bound before lowering. ~4x faster than the
+    int32 dot on the XLA CPU backend (EXPERIMENTS.md §Perf, L2
+    iteration 1).
+    """
+    y = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.round(y).astype(jnp.int32)
+
+
+def f32_exactness_bound(rows: int, act_bits: int, weight_bits: int) -> int:
+    """Worst-case |partial sum| for the f32-exactness precondition."""
+    return rows * (2**act_bits - 1) * 2 ** (weight_bits - 1)
+
+
+def bit_planes(w: jax.Array, bits: int) -> list[jax.Array]:
+    """Two's-complement bit planes (LSB first) of an int array."""
+    return [((w >> jnp.int32(b)) & jnp.int32(1)) for b in range(bits)]
+
+
+def input_slices(x: jax.Array, act_bits: int, dac_res: int) -> list[jax.Array]:
+    """Unsigned DAC slices (LSB first) of an activation array."""
+    mask = jnp.int32(2**dac_res - 1)
+    n = -(-act_bits // dac_res)
+    return [((x >> jnp.int32(s * dac_res)) & mask) for s in range(n)]
+
+
+def reconstruct_weights(planes: list[jax.Array], bits: int) -> jax.Array:
+    """Inverse of :func:`bit_planes` (two's complement)."""
+    acc = jnp.zeros_like(planes[0])
+    for b, p in enumerate(planes):
+        scale = -(2 ** (bits - 1)) if b == bits - 1 else 2**b
+        acc = acc + jnp.int32(scale) * p
+    return acc
+
+
+def reconstruct_inputs(slices: list[jax.Array], dac_res: int) -> jax.Array:
+    """Inverse of :func:`input_slices`."""
+    acc = jnp.zeros_like(slices[0])
+    for s, sl in enumerate(slices):
+        acc = acc + jnp.int32(2 ** (s * dac_res)) * sl
+    return acc
+
+
+def imc_macro_ref(x: jax.Array, w: jax.Array, cfg: MacroConfig) -> jax.Array:
+    """Straight-line jnp reimplementation of the macro datapath.
+
+    Mirrors ``imc_macro._macro_kernel`` exactly (same op order, same
+    float32 accumulation) but without pallas/tiling.
+    """
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    for s, xs in enumerate(input_slices(x, cfg.act_bits, cfg.dac_res)):
+        xs = xs.astype(jnp.float32)
+        for b, wb in enumerate(bit_planes(w, cfg.weight_bits)):
+            bl = jnp.dot(
+                xs, wb.astype(jnp.float32), preferred_element_type=jnp.float32
+            )
+            if cfg.family == "aimc":
+                bl = adc_quantize(bl, cfg)
+            plane_weight = float(2 ** (b + s * cfg.dac_res))
+            if b == cfg.weight_bits - 1:
+                plane_weight = -plane_weight
+            acc = acc + plane_weight * bl
+    return jnp.round(acc).astype(jnp.int32)

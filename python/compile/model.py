@@ -1,0 +1,260 @@
+"""Layer 2 — JAX model: quantized DNN layers executed *through* the IMC macro.
+
+This is the compute graph that gets AOT-lowered to HLO text and executed by
+the rust runtime. It expresses DNN layers the way an IMC system maps them
+(paper §II, Fig. 2):
+
+* the K (output-channel) loop is unrolled across the macro columns (D1),
+* the C·FX·FY (reduction) loops are unrolled across the macro rows (D2),
+* reductions larger than D2 are split into row-tiles whose partial sums
+  are accumulated *digitally outside the array* — exactly what the
+  coordinator (L3) schedules, and what the analytical model charges as
+  extra partial-sum traffic.
+
+Everything is integer-quantized (unsigned ``act_bits`` activations,
+signed ``weight_bits`` weights) so the macro kernel sees in-range
+operands. Python here runs at *build time only*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import MacroConfig, imc_macro_matmul
+from .kernels.ref import exact_matmul, f32_exactness_bound, fast_exact_matmul
+
+
+# --------------------------------------------------------------------------
+# Quantization helpers
+# --------------------------------------------------------------------------
+
+
+def quantize_act(x: jax.Array, act_bits: int) -> jax.Array:
+    """Clip a non-negative integer tensor into the unsigned act range."""
+    return jnp.clip(x.astype(jnp.int32), 0, 2**act_bits - 1)
+
+
+def quantize_weight(w: jax.Array, weight_bits: int) -> jax.Array:
+    """Clip an integer tensor into the signed two's-complement range."""
+    lo, hi = -(2 ** (weight_bits - 1)), 2 ** (weight_bits - 1) - 1
+    return jnp.clip(w.astype(jnp.int32), lo, hi)
+
+
+def requantize(acc: jax.Array, shift: int, act_bits: int) -> jax.Array:
+    """Requantize a wide accumulator to the next layer's activation range.
+
+    Arithmetic right-shift + ReLU + clip — the standard integer-only
+    post-processing pipeline of edge inference (the "digital SIMD" block
+    next to the macro).
+    """
+    return jnp.clip(acc >> jnp.int32(shift), 0, 2**act_bits - 1)
+
+
+# --------------------------------------------------------------------------
+# MVM with row/column tiling onto the macro geometry
+# --------------------------------------------------------------------------
+
+
+def tiled_mvm(
+    x: jax.Array, w: jax.Array, cfg: MacroConfig, exact: bool = False
+) -> jax.Array:
+    """(B, R_total) @ (R_total, K) through D2xD1 macro tiles.
+
+    Splits the reduction axis into ``ceil(R_total / D2)`` row-tiles (each a
+    separate macro invocation, partial sums accumulated digitally) and the
+    output axis into ``ceil(K / D1)`` column-tiles. Zero-pads the last
+    row-tile — pad rows contribute 0 to every bitline, which is also what
+    unused (power-gated) rows contribute in silicon.
+    """
+    b, r_total = x.shape
+    k = w.shape[1]
+    d2, d1 = cfg.rows, cfg.d1
+    n_row_tiles = -(-r_total // d2)
+
+    pad_r = n_row_tiles * d2 - r_total
+    xp = jnp.pad(x, ((0, 0), (0, pad_r)))
+    wp = jnp.pad(w, ((0, pad_r), (0, 0)))
+
+    acc = jnp.zeros((b, k), jnp.int32)
+    for rt in range(n_row_tiles):
+        xs = xp[:, rt * d2 : (rt + 1) * d2]
+        ws = wp[rt * d2 : (rt + 1) * d2, :]
+        for ct in range(-(-k // d1)):
+            wc = ws[:, ct * d1 : (ct + 1) * d1]
+            if exact:
+                part = exact_matmul(xs, wc)
+            else:
+                part = imc_macro_matmul(xs, wc, cfg)
+            acc = acc.at[:, ct * d1 : ct * d1 + wc.shape[1]].add(part)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+
+def im2col(x: jax.Array, fy: int, fx: int, stride: int = 1) -> jax.Array:
+    """(B, H, W, C) -> (B*OY*OX, FY*FX*C) patch matrix (valid padding)."""
+    b, h, w, c = x.shape
+    oy, ox = (h - fy) // stride + 1, (w - fx) // stride + 1
+    patches = []
+    for iy in range(fy):
+        for ix in range(fx):
+            patches.append(
+                x[:, iy : iy + stride * oy : stride, ix : ix + stride * ox : stride, :]
+            )
+    # (B, OY, OX, FY*FX*C) -> flatten spatial into batch
+    stacked = jnp.concatenate(patches, axis=-1)
+    return stacked.reshape(b * oy * ox, fy * fx * c), (b, oy, ox)
+
+
+def conv2d_via_macro(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: MacroConfig,
+    stride: int = 1,
+    exact: bool = False,
+) -> jax.Array:
+    """Integer conv2d (B,H,W,C)·(FY,FX,C,K) -> (B,OY,OX,K) on the macro.
+
+    The im2col lowering realizes the paper's spatial unrolling: the
+    FY·FX·C reduction lands on the macro rows, K on the columns, and the
+    B·OY·OX loop runs temporally (one MVM per output pixel vector).
+    """
+    fy, fx, c, k = w.shape
+    cols, (b, oy, ox) = im2col(x, fy, fx, stride)
+    wmat = w.reshape(fy * fx * c, k)
+    out = tiled_mvm(cols, wmat, cfg, exact=exact)
+    return out.reshape(b, oy, ox, k)
+
+
+def dense_via_macro(
+    x: jax.Array, w: jax.Array, cfg: MacroConfig, exact: bool = False
+) -> jax.Array:
+    """Integer dense (B, C)·(C, K) on the macro."""
+    return tiled_mvm(x, w, cfg, exact=exact)
+
+
+def avg_pool_int(x: jax.Array, size: int) -> jax.Array:
+    """Integer average pool (floor division) over size x size windows."""
+    b, h, w, c = x.shape
+    oh, ow = h // size, w // size
+    xr = x[:, : oh * size, : ow * size, :].reshape(b, oh, size, ow, size, c)
+    return xr.sum(axis=(2, 4)) // jnp.int32(size * size)
+
+
+# --------------------------------------------------------------------------
+# TinyCNN — the end-to-end functional workload (E10)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyCnnSpec:
+    """A small integer CNN (MNIST-like 16x16x1 input, 10 classes)."""
+
+    act_bits: int = 4
+    weight_bits: int = 4
+    c1: int = 8  # conv1 output channels (3x3)
+    c2: int = 16  # conv2 output channels (3x3, stride 2)
+    classes: int = 10
+    image: int = 16
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        flat = ((self.image - 2 - 3) // 2 + 1) ** 2 * self.c2
+        return {
+            "conv1": (3, 3, 1, self.c1),
+            "conv2": (3, 3, self.c1, self.c2),
+            "dense": (flat, self.classes),
+        }
+
+
+def tiny_cnn_init(spec: TinyCnnSpec, seed: int = 0) -> dict[str, jax.Array]:
+    """Random integer weights in the signed range (deterministic)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    lo, hi = -(2 ** (spec.weight_bits - 1)), 2 ** (spec.weight_bits - 1)
+    for name, shape in spec.param_shapes().items():
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.randint(sub, shape, lo, hi, dtype=jnp.int32)
+    return params
+
+
+def tiny_cnn_forward(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    spec: TinyCnnSpec,
+    cfg: MacroConfig,
+    exact: bool = False,
+) -> jax.Array:
+    """Integer forward pass, every MVM routed through the IMC macro.
+
+    Requant shifts are sized so each layer's accumulator fits back into
+    the activation range for worst-case-ish magnitudes.
+    """
+    h = conv2d_via_macro(x, params["conv1"], cfg, exact=exact)
+    h = requantize(h, shift=4, act_bits=spec.act_bits)
+    h = conv2d_via_macro(h, params["conv2"], cfg, stride=2, exact=exact)
+    h = requantize(h, shift=6, act_bits=spec.act_bits)
+    h = h.reshape(h.shape[0], -1)
+    return dense_via_macro(h, params["dense"], cfg, exact=exact)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (what aot.py lowers; what rust executes)
+# --------------------------------------------------------------------------
+
+
+def _assert_f32_exact(cfg: MacroConfig) -> None:
+    bound = f32_exactness_bound(cfg.rows, cfg.act_bits, cfg.weight_bits)
+    assert bound < 2**24, (
+        f"f32 GEMM path not exact for this geometry (bound {bound} >= 2^24)"
+    )
+
+
+def mvm_entry(cfg: MacroConfig, batch: int, fused: bool | None = None):
+    """Returns fn(x:(batch,rows) i32, w:(rows,d1) i32) -> ((batch,d1) i32,).
+
+    ``fused`` (default: True for DIMC) lowers the macro as one exact f32
+    GEMM instead of the bit-serial datapath graph. For DIMC the two are
+    bit-identical by construction — the adder tree is exact, proven by
+    the kernel test suite (`test_dimc_is_exact`,
+    `test_fused_dimc_entry_equals_bit_true`) — so this is a pure
+    compile-time optimization (EXPERIMENTS.md §Perf, L2 iteration 1).
+    AIMC always lowers the bit-true datapath (ADC quantization is the
+    behaviour under study).
+    """
+    if fused is None:
+        fused = cfg.family == "dimc"
+    if fused and cfg.family == "dimc":
+        _assert_f32_exact(cfg)
+
+        @functools.partial(jax.jit)
+        def fn(x, w):
+            return (fast_exact_matmul(quantize_act(x, cfg.act_bits),
+                                      quantize_weight(w, cfg.weight_bits)),)
+
+        return fn
+
+    @functools.partial(jax.jit)
+    def fn(x, w):
+        return (imc_macro_matmul(quantize_act(x, cfg.act_bits),
+                                 quantize_weight(w, cfg.weight_bits), cfg),)
+
+    return fn
+
+
+def mvm_ref_entry(cfg: MacroConfig, batch: int):
+    """Exact-matmul twin of :func:`mvm_entry` (same shapes/dtypes)."""
+    _assert_f32_exact(cfg)
+
+    @functools.partial(jax.jit)
+    def fn(x, w):
+        return (fast_exact_matmul(quantize_act(x, cfg.act_bits),
+                                  quantize_weight(w, cfg.weight_bits)),)
+
+    return fn

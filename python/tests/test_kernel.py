@@ -1,0 +1,200 @@
+"""L1 correctness: pallas macro kernel vs pure-jnp oracles.
+
+The core signals:
+  1. pallas kernel == straight-line jnp datapath (imc_macro_ref), exactly,
+     for ALL configurations (hypothesis sweep over geometry/precision).
+  2. DIMC == exact integer matmul, bit-exactly.
+  3. AIMC == exact matmul when the ADC is lossless (adc_res >= exact_adc_res).
+  4. AIMC quantization error is bounded by the analytical bound.
+  5. bit-decomposition round-trips.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    MacroConfig,
+    aimc_error_bound,
+    exact_matmul,
+    imc_macro_matmul,
+    imc_macro_ref,
+)
+from compile.kernels import ref as R
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_operands(rng, b, rows, d1, cfg):
+    alo, ahi = cfg.act_range()
+    wlo, whi = cfg.weight_range()
+    x = jnp.asarray(rng.integers(alo, ahi + 1, (b, rows)), jnp.int32)
+    w = jnp.asarray(rng.integers(wlo, whi + 1, (rows, d1)), jnp.int32)
+    return x, w
+
+
+# -- strategy over valid macro configs ------------------------------------
+
+families = st.sampled_from(["aimc", "dimc"])
+
+
+@st.composite
+def macro_configs(draw):
+    weight_bits = draw(st.sampled_from([2, 4, 8]))
+    act_bits = draw(st.sampled_from([2, 4, 8]))
+    dac_res = draw(st.sampled_from([1, 2, act_bits]))
+    rows = draw(st.sampled_from([16, 48, 64, 96]))
+    d1 = draw(st.integers(1, 8))
+    family = draw(families)
+    adc_res = draw(st.integers(3, 10))
+    return MacroConfig(
+        rows=rows,
+        cols=d1 * weight_bits,
+        weight_bits=weight_bits,
+        act_bits=act_bits,
+        dac_res=min(dac_res, act_bits),
+        adc_res=adc_res,
+        family=family,
+    )
+
+
+@given(cfg=macro_configs(), seed=st.integers(0, 2**31 - 1), b=st.integers(1, 9))
+def test_pallas_matches_jnp_datapath(cfg, seed, b):
+    """Signal 1: pallas kernel is exactly the jnp datapath, any config."""
+    rng = np.random.default_rng(seed)
+    x, w = rand_operands(rng, b, cfg.rows, cfg.d1, cfg)
+    out = imc_macro_matmul(x, w, cfg, tile_b=4, tile_d1=min(cfg.d1, 4))
+    ref = imc_macro_ref(x, w, cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.sampled_from([16, 64, 128]),
+    weight_bits=st.sampled_from([2, 4, 8]),
+    act_bits=st.sampled_from([2, 4, 8]),
+)
+def test_dimc_is_exact(seed, rows, weight_bits, act_bits):
+    """Signal 2: the digital adder tree never loses a bit."""
+    cfg = MacroConfig(
+        rows=rows, cols=8 * weight_bits, weight_bits=weight_bits,
+        act_bits=act_bits, dac_res=1, adc_res=0, family="dimc",
+    )
+    rng = np.random.default_rng(seed)
+    x, w = rand_operands(rng, 5, rows, 8, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(imc_macro_matmul(x, w, cfg)), np.asarray(exact_matmul(x, w))
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1), dac_res=st.sampled_from([1, 2, 4]))
+def test_aimc_lossless_adc_is_exact(seed, dac_res):
+    """Signal 3: with adc_res >= exact_adc_res, AIMC == exact."""
+    base = MacroConfig(rows=64, cols=32, dac_res=dac_res, family="aimc")
+    cfg = MacroConfig(
+        rows=64, cols=32, dac_res=dac_res, family="aimc",
+        adc_res=base.exact_adc_res,
+    )
+    rng = np.random.default_rng(seed)
+    x, w = rand_operands(rng, 6, 64, 8, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(imc_macro_matmul(x, w, cfg)), np.asarray(exact_matmul(x, w))
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1), adc_res=st.integers(4, 10))
+def test_aimc_error_within_bound(seed, adc_res):
+    """Signal 4: |AIMC - exact| <= analytical quantization bound."""
+    cfg = MacroConfig(rows=128, cols=32, adc_res=adc_res, family="aimc")
+    rng = np.random.default_rng(seed)
+    x, w = rand_operands(rng, 8, 128, 8, cfg)
+    err = np.abs(
+        np.asarray(imc_macro_matmul(x, w, cfg)) - np.asarray(exact_matmul(x, w))
+    ).max()
+    assert float(err) <= aimc_error_bound(cfg) + 1.0  # +1 for final rounding
+
+
+def test_aimc_clipping_saturates_not_wraps():
+    """A clipped ADC saturates: output underestimates, never overflows."""
+    cfg = MacroConfig(
+        rows=64, cols=8, weight_bits=4, act_bits=4, dac_res=4,
+        adc_res=4, family="aimc", adc_fs_rows=4,  # tiny FS -> heavy clipping
+    )
+    x = jnp.full((2, 64), 15, jnp.int32)  # all-max inputs
+    w = jnp.full((64, 2), 7, jnp.int32)  # all-max positive weights
+    out = np.asarray(imc_macro_matmul(x, w, cfg))
+    exact = np.asarray(exact_matmul(x, w))
+    assert (out <= exact).all() and (out >= 0).all()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bits=st.sampled_from([2, 3, 4, 8]),
+)
+def test_bit_plane_roundtrip(seed, bits):
+    """Signal 5a: two's-complement decomposition is exact."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(
+        rng.integers(-(2 ** (bits - 1)), 2 ** (bits - 1), (13, 7)), jnp.int32
+    )
+    planes = R.bit_planes(w, bits)
+    np.testing.assert_array_equal(
+        np.asarray(R.reconstruct_weights(planes, bits)), np.asarray(w)
+    )
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    act_bits=st.sampled_from([2, 4, 8]),
+    dac_res=st.sampled_from([1, 2, 3, 4]),
+)
+def test_input_slice_roundtrip(seed, act_bits, dac_res):
+    """Signal 5b: DAC slicing decomposition is exact."""
+    dac_res = min(dac_res, act_bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2**act_bits, (11, 5)), jnp.int32)
+    slices = R.input_slices(x, act_bits, dac_res)
+    np.testing.assert_array_equal(
+        np.asarray(R.reconstruct_inputs(slices, dac_res)), np.asarray(x)
+    )
+
+
+def test_uneven_tiling_padding():
+    """Odd B / D1 not divisible by tiles must still be exact (DIMC)."""
+    cfg = MacroConfig(rows=48, cols=4 * 3, weight_bits=4, act_bits=4,
+                      dac_res=1, adc_res=0, family="dimc")
+    rng = np.random.default_rng(7)
+    x, w = rand_operands(rng, 13, 48, 3, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(imc_macro_matmul(x, w, cfg, tile_b=8, tile_d1=2)),
+        np.asarray(exact_matmul(x, w)),
+    )
+
+
+def test_adc_lsb_floors_at_one():
+    cfg = MacroConfig(rows=8, cols=8, dac_res=1, adc_res=12, family="aimc")
+    assert cfg.adc_lsb == 1.0
+    big = MacroConfig(rows=1024, cols=8, dac_res=4, adc_res=4, family="aimc")
+    assert big.adc_lsb > 1.0
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        MacroConfig(rows=8, cols=7, weight_bits=4)  # cols % bw != 0
+    with pytest.raises(ValueError):
+        MacroConfig(rows=8, cols=8, family="quantum")
+    with pytest.raises(ValueError):
+        MacroConfig(rows=8, cols=8, act_bits=4, dac_res=5)
+
+
+def test_shape_validation():
+    cfg = MacroConfig(rows=16, cols=16)
+    x = jnp.zeros((4, 8), jnp.int32)  # wrong D2
+    w = jnp.zeros((16, 4), jnp.int32)
+    with pytest.raises(ValueError):
+        imc_macro_matmul(x, w, cfg)
+    with pytest.raises(ValueError):
+        imc_macro_matmul(jnp.zeros((4, 16), jnp.int32),
+                         jnp.zeros((16, 99), jnp.int32), cfg)  # D1 too big

@@ -1,0 +1,147 @@
+"""L2 correctness: tiled layers through the macro vs dense references."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import MacroConfig, exact_matmul
+from compile import model as M
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+DIMC_SMALL = MacroConfig(rows=16, cols=16, weight_bits=4, act_bits=4,
+                         dac_res=1, adc_res=0, family="dimc")
+
+
+def rand_xw(rng, b, r, k):
+    x = jnp.asarray(rng.integers(0, 16, (b, r)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (r, k)), jnp.int32)
+    return x, w
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    r_total=st.sampled_from([5, 16, 17, 40, 64]),
+    k=st.sampled_from([1, 3, 4, 9]),
+)
+def test_tiled_mvm_row_col_tiling_is_exact(seed, r_total, k):
+    """Row-tile partial sums accumulated digitally == full matmul (DIMC)."""
+    rng = np.random.default_rng(seed)
+    x, w = rand_xw(rng, 6, r_total, k)
+    out = M.tiled_mvm(x, w, DIMC_SMALL)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exact_matmul(x, w)))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    c=st.sampled_from([1, 3]),
+    k=st.sampled_from([2, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_via_macro_matches_lax_conv(seed, c, k, stride):
+    """im2col + macro tiling == jax.lax general conv (integer, DIMC)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 16, (2, 9, 9, c)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (3, 3, c, k)), jnp.int32)
+    got = M.conv2d_via_macro(x, w, DIMC_SMALL, stride=stride)
+    want = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dense_via_macro_exact_flag():
+    rng = np.random.default_rng(3)
+    x, w = rand_xw(rng, 4, 33, 7)
+    np.testing.assert_array_equal(
+        np.asarray(M.dense_via_macro(x, w, DIMC_SMALL, exact=True)),
+        np.asarray(exact_matmul(x, w)),
+    )
+
+
+def test_requantize_range_and_relu():
+    acc = jnp.asarray([[-100, 0, 15, 16, 1000]], jnp.int32)
+    out = np.asarray(M.requantize(acc, shift=0, act_bits=4))
+    assert out.min() >= 0 and out.max() <= 15
+    assert out[0, 0] == 0  # negative clipped (ReLU)
+    out2 = np.asarray(M.requantize(jnp.asarray([[64]], jnp.int32), 3, 4))
+    assert out2[0, 0] == 8  # 64 >> 3
+
+
+def test_avg_pool_int():
+    x = jnp.arange(16, dtype=jnp.int32).reshape(1, 4, 4, 1)
+    out = np.asarray(M.avg_pool_int(x, 2))
+    # window [[0,1],[4,5]] -> 10//4 = 2
+    assert out.shape == (1, 2, 2, 1) and out[0, 0, 0, 0] == 2
+
+
+def test_tiny_cnn_forward_dimc_matches_exact():
+    """On DIMC the whole network is bit-exact vs the exact=True path."""
+    spec = M.TinyCnnSpec(image=12)
+    params = M.tiny_cnn_init(spec, seed=1)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 16, (2, 12, 12, 1)), jnp.int32)
+    got = M.tiny_cnn_forward(params, x, spec, DIMC_SMALL)
+    want = M.tiny_cnn_forward(params, x, spec, DIMC_SMALL, exact=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tiny_cnn_aimc_close_to_exact():
+    """A reasonably-sized ADC keeps AIMC logits near the exact ones."""
+    spec = M.TinyCnnSpec(image=12)
+    params = M.tiny_cnn_init(spec, seed=1)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 16, (2, 12, 12, 1)), jnp.int32)
+    aimc = MacroConfig(rows=16, cols=16, weight_bits=4, act_bits=4,
+                       dac_res=2, adc_res=8, family="aimc")
+    got = np.asarray(M.tiny_cnn_forward(params, x, spec, aimc))
+    want = np.asarray(M.tiny_cnn_forward(params, x, spec, aimc, exact=True))
+    # int4 requant between layers absorbs small ADC error; logits within 15%.
+    denom = np.maximum(np.abs(want).max(), 1)
+    assert np.abs(got - want).max() / denom < 0.15
+
+
+def test_tiny_cnn_param_shapes():
+    spec = M.TinyCnnSpec(image=16)
+    shapes = spec.param_shapes()
+    params = M.tiny_cnn_init(spec)
+    assert {k: tuple(v.shape) for k, v in params.items()} == shapes
+
+
+def test_fused_dimc_entry_equals_bit_true():
+    """The fused (f32 GEMM) DIMC lowering is bit-identical to the
+    bit-serial datapath graph — the equivalence behind the L2 perf
+    optimization (EXPERIMENTS.md §Perf)."""
+    from compile.model import mvm_entry
+
+    cfg = MacroConfig(rows=48, cols=16, weight_bits=4, act_bits=4,
+                      dac_res=1, adc_res=0, family="dimc")
+    fused = mvm_entry(cfg, batch=8, fused=True)
+    bit_true = mvm_entry(cfg, batch=8, fused=False)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(0, 16, (8, 48)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (48, 4)), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(fused(x, w)[0]),
+                                  np.asarray(bit_true(x, w)[0]))
+
+
+def test_fast_exact_matmul_property():
+    """f32 GEMM path == int32 path at worst-case magnitudes."""
+    from compile.kernels.ref import fast_exact_matmul, f32_exactness_bound
+
+    # worst case for the largest geometry in the project
+    assert f32_exactness_bound(1152, 4, 4) < 2**24
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 16, (4, 1152)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (1152, 8)), jnp.int32)
+    # include all-max corner
+    x = x.at[0].set(15)
+    w = w.at[:, 0].set(-8)
+    np.testing.assert_array_equal(np.asarray(fast_exact_matmul(x, w)),
+                                  np.asarray(exact_matmul(x, w)))

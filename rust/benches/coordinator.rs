@@ -1,0 +1,76 @@
+//! Perf bench: the serving hot path — PJRT MVM dispatch, tiled MVM
+//! throughput, and TinyCNN inference rate through the macro artifacts.
+//! Skips (with a notice) when artifacts are missing.
+
+use std::sync::Arc;
+
+use imcsim::coordinator::{MatI32, Tensor4, Tiler, TinyCnn};
+use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
+use imcsim::util::bench::{report_metric, Bench};
+use imcsim::util::prng::Rng;
+
+fn main() {
+    let mut b = Bench::from_args();
+    let Ok(manifest) = load_manifest(&default_artifacts_dir()) else {
+        println!("coordinator bench skipped: run `make artifacts` first");
+        return;
+    };
+    let engine = Arc::new(Engine::new(manifest).expect("PJRT client"));
+    let mut rng = Rng::new(11);
+
+    for design in ["dimc_large", "aimc_large"] {
+        let d = engine.design(design).unwrap().clone();
+        let rows = d.config.rows;
+        let d1 = d.config.d1;
+        let batch = engine.batch();
+        let x: Vec<i32> = (0..batch * rows)
+            .map(|_| rng.range_i64(0, 15) as i32)
+            .collect();
+        let w: Vec<i32> = (0..rows * d1)
+            .map(|_| rng.range_i64(-8, 7) as i32)
+            .collect();
+        engine.execute_mvm(design, Kind::Macro, &x, &w).unwrap(); // compile
+        if let Some(s) = b.bench(&format!("coord/{design}/mvm_dispatch"), || {
+            engine.execute_mvm(design, Kind::Macro, &x, &w).unwrap().len()
+        }) {
+            let macs = (batch * rows * d1) as u64;
+            report_metric(
+                &format!("coord/{design}/gmacs_per_sec"),
+                imcsim::util::bench::Bench::throughput(&s, macs) / 1e9,
+                "GMAC/s",
+            );
+        }
+    }
+
+    // tiled MVM across all axes (dimc_multi is the worst-case tiler load)
+    let d = engine.design("dimc_multi").unwrap().clone();
+    let tiler = Tiler::new(&engine, "dimc_multi").unwrap();
+    let mut x = MatI32::zeros(16, d.config.rows * 2);
+    for v in &mut x.data {
+        *v = rng.range_i64(0, 15) as i32;
+    }
+    let mut w = MatI32::zeros(d.config.rows * 2, 8);
+    for v in &mut w.data {
+        *v = rng.range_i64(-8, 7) as i32;
+    }
+    tiler.mvm(&x, &w, Kind::Macro).unwrap();
+    b.bench("coord/dimc_multi/tiled_mvm_2x8_tiles", || {
+        tiler.mvm(&x, &w, Kind::Macro).unwrap().1.mvms
+    });
+
+    // whole-network inference
+    let d = engine.design("dimc_large").unwrap().clone();
+    let tiler = Tiler::new(&engine, "dimc_large").unwrap();
+    let net = TinyCnn::random(42, 16, d.config.act_bits, d.config.weight_bits);
+    let imgs = Tensor4::random(&mut rng, 16, 16, 16, 1, d.config.act_bits);
+    net.forward(&tiler, &imgs, Kind::Macro).unwrap();
+    if let Some(s) = b.bench("coord/tinycnn_batch16_inference", || {
+        net.forward(&tiler, &imgs, Kind::Macro).unwrap().2.mvms
+    }) {
+        report_metric(
+            "coord/tinycnn_imgs_per_sec",
+            imcsim::util::bench::Bench::throughput(&s, 16),
+            "img/s",
+        );
+    }
+}

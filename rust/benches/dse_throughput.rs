@@ -1,0 +1,52 @@
+//! Perf bench: the DSE hot path — single mapping-point evaluations and
+//! full-layer searches per second (the L3 optimization target of
+//! EXPERIMENTS.md §Perf).
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{evaluate, search_layer, DseOptions};
+use imcsim::mapping::{candidates, TemporalPolicy};
+use imcsim::model::TechParams;
+use imcsim::util::bench::{report_metric, Bench};
+use imcsim::workload::{resnet8, Layer};
+
+fn main() {
+    let mut b = Bench::from_args();
+    let systems = table2_systems();
+    let sys = &systems[0];
+    let tech = TechParams::for_node(sys.imc.tech_nm);
+    let layer = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+    let sp = candidates(&layer, sys).remove(0);
+
+    // single cost-point evaluation (the innermost hot path)
+    if let Some(s) = b.bench("dse/evaluate_one_mapping_point", || {
+        evaluate(
+            &layer,
+            sys,
+            &tech,
+            &sp,
+            TemporalPolicy::WeightStationary,
+            0.5,
+        )
+        .total_energy_fj()
+    }) {
+        report_metric(
+            "dse/evaluations_per_sec",
+            1e9 / s.median_ns,
+            "eval/s (target: >= 100k)",
+        );
+    }
+
+    // one layer search (candidates x policies)
+    b.bench("dse/search_layer", || {
+        search_layer(&layer, sys, &tech, &DseOptions::default()).evaluated
+    });
+
+    // a full network on the most macro-heavy system (parallel fan-out)
+    let net = resnet8();
+    let heavy = &systems[3];
+    b.bench("dse/search_resnet8_dimc_multi", || {
+        imcsim::dse::search_network(&net, heavy, &DseOptions::default())
+            .layers
+            .len()
+    });
+}

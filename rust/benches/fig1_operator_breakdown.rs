@@ -1,0 +1,24 @@
+//! Bench E1 (paper Fig. 1): operator breakdown of the tinyMLPerf models.
+//! Prints the figure data and times its computation.
+
+use imcsim::report::fig1_text;
+use imcsim::util::bench::{report_metric, Bench};
+use imcsim::workload::all_networks;
+
+fn main() {
+    let mut b = Bench::from_args();
+    println!("{}", fig1_text());
+    for net in all_networks() {
+        report_metric(
+            &format!("fig1/{}/total_MMACs", net.name),
+            net.total_macs() as f64 / 1e6,
+            "MMAC",
+        );
+    }
+    b.bench("fig1/operator_breakdown", || {
+        all_networks()
+            .iter()
+            .map(|n| n.operator_breakdown().total_macs)
+            .sum::<u64>()
+    });
+}

@@ -1,0 +1,40 @@
+//! Bench E2 (paper Fig. 4): the survey scatter. Prints the figure and
+//! reports the headline survey metrics the paper calls out in §III.
+
+use imcsim::db::{fig4_points, survey};
+use imcsim::report::fig4_text;
+use imcsim::util::bench::{report_metric, Bench};
+
+fn main() {
+    let mut b = Bench::from_args();
+    println!("{}", fig4_text());
+
+    // §III headlines: best AIMC efficiency ([26]), best density ([32]),
+    // DIMC node dependence ([40] 22nm vs [41] 5nm)
+    let pts = fig4_points();
+    let best_eff = pts
+        .iter()
+        .filter(|p| p.family == "AIMC")
+        .map(|p| p.tops_w)
+        .fold(0.0, f64::max);
+    report_metric("fig4/best_aimc_tops_w", best_eff, "TOP/s/W");
+    let best_dens = pts
+        .iter()
+        .filter_map(|p| p.tops_mm2)
+        .fold(0.0, f64::max);
+    report_metric("fig4/best_density", best_dens, "TOP/s/mm2");
+    let chih = pts.iter().find(|p| p.chip == "chih_isscc21").unwrap();
+    let fuji = pts
+        .iter()
+        .find(|p| p.chip == "fujiwara_isscc22" && p.vdd > 0.8)
+        .unwrap();
+    report_metric(
+        "fig4/dimc_node_gain_22nm_to_5nm",
+        fuji.tops_w / chih.tops_w,
+        "x",
+    );
+
+    b.bench("fig4/survey_derivation", || {
+        fig4_points().len() + survey().len()
+    });
+}

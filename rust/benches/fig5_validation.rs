@@ -1,0 +1,33 @@
+//! Bench E3/E4/E9 (paper Fig. 5 + §V): model validation against the
+//! silicon survey, per family, with the mismatch statistics.
+
+use imcsim::arch::ImcFamily;
+use imcsim::db::{validation_points, validation_stats};
+use imcsim::report::fig5_text;
+use imcsim::util::bench::{report_metric, Bench};
+
+fn main() {
+    let mut b = Bench::from_args();
+    println!("{}", fig5_text(Some(ImcFamily::Aimc)));
+    println!("{}", fig5_text(Some(ImcFamily::Dimc)));
+
+    for (family, tag) in [
+        (Some(ImcFamily::Aimc), "aimc"),
+        (Some(ImcFamily::Dimc), "dimc"),
+        (None, "all"),
+    ] {
+        let s = validation_stats(family);
+        report_metric(
+            &format!("fig5/{tag}/median_mismatch"),
+            s.median_mismatch * 100.0,
+            "%",
+        );
+        report_metric(
+            &format!("fig5/{tag}/within_15pct"),
+            s.n_within_15pct as f64 / s.n.max(1) as f64 * 100.0,
+            "%",
+        );
+    }
+
+    b.bench("fig5/validate_whole_survey", || validation_points(None).len());
+}

@@ -1,0 +1,30 @@
+//! Bench E5/E6 (paper Fig. 6): technology-dependent parameter
+//! extraction — C_inv regression and the DAC k3 fit.
+
+use imcsim::model::tech::{
+    c_inv_ff, cinv_fit_mismatches, fitted_k3_fj, linear_fit, FITTED_CINV_POINTS, K3_FJ,
+};
+use imcsim::report::fig6_text;
+use imcsim::util::bench::{report_metric, Bench};
+
+fn main() {
+    let mut b = Bench::from_args();
+    println!("{}", fig6_text());
+
+    let worst = cinv_fit_mismatches()
+        .into_iter()
+        .map(|m| m.1)
+        .fold(0.0f64, f64::max);
+    report_metric("fig6/cinv_max_mismatch", worst * 100.0, "% (paper: ~10%)");
+    report_metric(
+        "fig6/k3_fit",
+        fitted_k3_fj(),
+        &format!("fJ (paper: {K3_FJ} fJ)"),
+    );
+
+    b.bench("fig6/regression", || {
+        let pts: Vec<(f64, f64)> = FITTED_CINV_POINTS.iter().map(|p| (p.0, p.1)).collect();
+        let (s, i) = linear_fit(&pts);
+        s + i + c_inv_ff(28.0)
+    });
+}

@@ -1,0 +1,54 @@
+//! Bench E8 (paper Fig. 7 + Table II): the full case study — four
+//! normalized architectures × four tinyMLPerf networks, DSE-optimal
+//! mappings, macro-level energy breakdown and data traffic.
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{search_network, DseOptions};
+use imcsim::report::{fig7_results, fig7_text, table2_text};
+use imcsim::util::bench::{report_metric, Bench};
+use imcsim::workload::{all_networks, resnet8};
+
+fn main() {
+    let mut b = Bench::from_args();
+    println!("{}", table2_text());
+    let results = fig7_results();
+    println!("{}", fig7_text(&results));
+
+    // headline shape checks as metrics (who wins where, by how much)
+    let macro_eff = |net: &str, sys: &str| {
+        let r = results
+            .iter()
+            .find(|r| r.network == net && r.system == sys)
+            .unwrap();
+        2.0e3 * r.total_macs() as f64
+            / (r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj)
+    };
+    report_metric(
+        "fig7/dscnn_small_vs_large_aimc",
+        macro_eff("DS-CNN", "aimc_multi") / macro_eff("DS-CNN", "aimc_large"),
+        "x (paper: >1, small arrays win on dw/pw)",
+    );
+    report_metric(
+        "fig7/resnet8_on_aimc_large",
+        macro_eff("ResNet8", "aimc_large"),
+        "TOP/s/W macro-level",
+    );
+    let ae = results
+        .iter()
+        .find(|r| r.network == "DeepAutoEncoder" && r.system == "aimc_large")
+        .unwrap();
+    let w: f64 = ae.layers.iter().map(|l| l.best.accesses.weight_gb_reads).sum();
+    let i: f64 = ae.layers.iter().map(|l| l.best.accesses.input_gb_reads).sum();
+    report_metric("fig7/ae_weight_vs_input_traffic", w / i, "x (paper: >1)");
+
+    // timing: the full grid and a single network search
+    b.bench("fig7/full_case_study_16_points", || fig7_results().len());
+    let systems = table2_systems();
+    let net = resnet8();
+    b.bench("fig7/single_network_search", || {
+        search_network(&net, &systems[0], &DseOptions::default())
+            .layers
+            .len()
+    });
+    let _ = all_networks();
+}

@@ -1,0 +1,275 @@
+//! TOML config loading for architectures (the launcher's config system).
+//!
+//! A config file describes one `ImcSystem`; the four Table II case-study
+//! designs ship in `configs/`. Example:
+//!
+//! ```toml
+//! name = "aimc_large"
+//! n_macros = 1
+//!
+//! [macro]
+//! name = "aimc_1152x256"
+//! family = "aimc"
+//! rows = 1152
+//! cols = 256
+//! weight_bits = 4
+//! act_bits = 4
+//! dac_res = 4
+//! adc_res = 8
+//! vdd = 0.8
+//! tech_nm = 28.0
+//!
+//! # optional; defaults to the edge hierarchy for the macro's node
+//! [[hierarchy.levels]]
+//! name = "gb_sram_256KB"
+//! size_bits = 2097152
+//! read_fj_per_bit = 25.0
+//! write_fj_per_bit = 30.0
+//! bw_bits_per_cycle = 256
+//! operands = ["input", "weight", "output"]
+//! ```
+
+use std::path::Path;
+
+use crate::util::toml_lite::{self, Value};
+
+use super::imc_macro::{ImcFamily, ImcMacro};
+use super::memory::{MemoryHierarchy, MemoryLevel, Operand};
+use super::system::ImcSystem;
+
+/// Errors from config parsing/validation.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        source: std::io::Error,
+    },
+    #[error("parse error in {path}: {message}")]
+    Parse { path: String, message: String },
+    #[error("invalid architecture in {path}: {message}")]
+    Invalid { path: String, message: String },
+}
+
+fn perr(path: &str, message: impl Into<String>) -> ConfigError {
+    ConfigError::Parse {
+        path: path.to_string(),
+        message: message.into(),
+    }
+}
+
+fn req<'a>(t: &'a Value, key: &str, path: &str) -> Result<&'a Value, ConfigError> {
+    t.get(key)
+        .ok_or_else(|| perr(path, format!("missing key '{key}'")))
+}
+
+fn req_str(t: &Value, key: &str, path: &str) -> Result<String, ConfigError> {
+    req(t, key, path)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| perr(path, format!("'{key}' must be a string")))
+}
+
+fn req_usize(t: &Value, key: &str, path: &str) -> Result<usize, ConfigError> {
+    req(t, key, path)?
+        .as_int()
+        .filter(|v| *v >= 0)
+        .map(|v| v as usize)
+        .ok_or_else(|| perr(path, format!("'{key}' must be a non-negative integer")))
+}
+
+fn req_u32(t: &Value, key: &str, path: &str) -> Result<u32, ConfigError> {
+    Ok(req_usize(t, key, path)? as u32)
+}
+
+fn req_f64(t: &Value, key: &str, path: &str) -> Result<f64, ConfigError> {
+    req(t, key, path)?
+        .as_float()
+        .ok_or_else(|| perr(path, format!("'{key}' must be a number")))
+}
+
+fn opt_usize(t: &Value, key: &str, default: usize) -> usize {
+    t.get(key).and_then(|v| v.as_int()).map(|v| v as usize).unwrap_or(default)
+}
+
+fn parse_family(s: &str, path: &str) -> Result<ImcFamily, ConfigError> {
+    match s.to_ascii_lowercase().as_str() {
+        "aimc" => Ok(ImcFamily::Aimc),
+        "dimc" => Ok(ImcFamily::Dimc),
+        other => Err(perr(path, format!("unknown family '{other}'"))),
+    }
+}
+
+fn parse_operand(s: &str, path: &str) -> Result<Operand, ConfigError> {
+    match s.to_ascii_lowercase().as_str() {
+        "input" | "i" => Ok(Operand::Input),
+        "weight" | "w" => Ok(Operand::Weight),
+        "output" | "o" => Ok(Operand::Output),
+        other => Err(perr(path, format!("unknown operand '{other}'"))),
+    }
+}
+
+fn parse_macro(t: &Value, path: &str) -> Result<ImcMacro, ConfigError> {
+    Ok(ImcMacro {
+        name: req_str(t, "name", path)?,
+        family: parse_family(&req_str(t, "family", path)?, path)?,
+        rows: req_usize(t, "rows", path)?,
+        cols: req_usize(t, "cols", path)?,
+        weight_bits: req_u32(t, "weight_bits", path)?,
+        act_bits: req_u32(t, "act_bits", path)?,
+        dac_res: req_u32(t, "dac_res", path)?,
+        adc_res: req_u32(t, "adc_res", path)?,
+        row_mux: opt_usize(t, "row_mux", 1),
+        cols_per_adc: opt_usize(t, "cols_per_adc", 1) as u32,
+        vdd: req_f64(t, "vdd", path)?,
+        tech_nm: req_f64(t, "tech_nm", path)?,
+    })
+}
+
+fn parse_hierarchy(t: &Value, path: &str) -> Result<MemoryHierarchy, ConfigError> {
+    let levels_v = req(t, "levels", path)?
+        .as_arr()
+        .ok_or_else(|| perr(path, "'hierarchy.levels' must be an array of tables"))?;
+    let mut levels = Vec::new();
+    for lv in levels_v {
+        let operands = req(lv, "operands", path)?
+            .as_arr()
+            .ok_or_else(|| perr(path, "'operands' must be an array"))?
+            .iter()
+            .map(|o| {
+                o.as_str()
+                    .ok_or_else(|| perr(path, "operand must be a string"))
+                    .and_then(|s| parse_operand(s, path))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        levels.push(MemoryLevel {
+            name: req_str(lv, "name", path)?,
+            size_bits: req_usize(lv, "size_bits", path)? as u64,
+            read_fj_per_bit: req_f64(lv, "read_fj_per_bit", path)?,
+            write_fj_per_bit: req_f64(lv, "write_fj_per_bit", path)?,
+            bw_bits_per_cycle: req_usize(lv, "bw_bits_per_cycle", path)? as u64,
+            operands,
+        });
+    }
+    Ok(MemoryHierarchy { levels })
+}
+
+/// Parse an `ImcSystem` from TOML text.
+pub fn system_from_toml(text: &str, origin: &str) -> Result<ImcSystem, ConfigError> {
+    let root = toml_lite::parse(text).map_err(|e| perr(origin, e.to_string()))?;
+    let imc = parse_macro(req(&root, "macro", origin)?, origin)?;
+    let hierarchy = match root.get("hierarchy") {
+        Some(h) => parse_hierarchy(h, origin)?,
+        None => MemoryHierarchy::edge_default(imc.tech_nm),
+    };
+    let sys = ImcSystem {
+        name: req_str(&root, "name", origin)?,
+        imc,
+        n_macros: req_usize(&root, "n_macros", origin)?,
+        hierarchy,
+    };
+    sys.validate().map_err(|message| ConfigError::Invalid {
+        path: origin.to_string(),
+        message,
+    })?;
+    Ok(sys)
+}
+
+/// Load an `ImcSystem` from a TOML file.
+pub fn load_system(path: &Path) -> Result<ImcSystem, ConfigError> {
+    let text = std::fs::read_to_string(path).map_err(|source| ConfigError::Io {
+        path: path.display().to_string(),
+        source,
+    })?;
+    system_from_toml(&text, &path.display().to_string())
+}
+
+/// Load every `*.toml` in a directory, sorted by file name.
+pub fn load_system_dir(dir: &Path) -> Result<Vec<ImcSystem>, ConfigError> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|source| ConfigError::Io {
+            path: dir.display().to_string(),
+            source,
+        })?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    paths.sort();
+    paths.iter().map(|p| load_system(p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+        name = "aimc_large"
+        n_macros = 1
+
+        [macro]
+        name = "aimc_1152x256"
+        family = "aimc"
+        rows = 1152
+        cols = 256
+        weight_bits = 4
+        act_bits = 4
+        dac_res = 4
+        adc_res = 8
+        vdd = 0.8
+        tech_nm = 28.0
+    "#;
+
+    #[test]
+    fn parses_minimal_config() {
+        let s = system_from_toml(GOOD, "test").unwrap();
+        assert_eq!(s.name, "aimc_large");
+        assert_eq!(s.imc.family, ImcFamily::Aimc);
+        assert_eq!(s.imc.d1(), 64);
+        // hierarchy defaulted
+        assert_eq!(s.hierarchy.levels.len(), 2);
+    }
+
+    #[test]
+    fn parses_explicit_hierarchy() {
+        let text = format!(
+            "{GOOD}\n[[hierarchy.levels]]\nname = \"l1\"\nsize_bits = 1024\nread_fj_per_bit = 10.0\nwrite_fj_per_bit = 12.0\nbw_bits_per_cycle = 64\noperands = [\"input\", \"weight\", \"output\"]\n"
+        );
+        let s = system_from_toml(&text, "test").unwrap();
+        assert_eq!(s.hierarchy.levels.len(), 1);
+        assert_eq!(s.hierarchy.levels[0].name, "l1");
+    }
+
+    #[test]
+    fn rejects_invalid_architecture() {
+        let bad = GOOD.replace("adc_res = 8", "adc_res = 0");
+        let err = system_from_toml(&bad, "test").unwrap_err();
+        assert!(matches!(err, ConfigError::Invalid { .. }));
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        let bad = GOOD.replace("rows = 1152", "");
+        let err = system_from_toml(&bad, "test").unwrap_err();
+        assert!(matches!(err, ConfigError::Parse { .. }), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_toml() {
+        let err = system_from_toml("not = [toml", "test").unwrap_err();
+        assert!(matches!(err, ConfigError::Parse { .. }));
+    }
+
+    #[test]
+    fn loads_directory() {
+        let dir = std::env::temp_dir().join(format!("imcsim_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.toml"), GOOD).unwrap();
+        std::fs::write(dir.join("b.toml"), GOOD.replace("aimc_large", "second")).unwrap();
+        std::fs::write(dir.join("ignored.txt"), "x").unwrap();
+        let systems = load_system_dir(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(systems.len(), 2);
+        assert_eq!(systems[0].name, "aimc_large");
+        assert_eq!(systems[1].name, "second");
+    }
+}

@@ -1,0 +1,276 @@
+//! The IMC macro hardware template (paper Fig. 3, Table I symbols).
+//!
+//! One `ImcMacro` describes a single SRAM compute array: its geometry
+//! (R × C cells), operand precisions, converter resolutions and operating
+//! point. All analytical-model quantities (D1, D2, bit-serial slice
+//! count, …) derive from it.
+
+
+/// Analog vs digital in-memory computing (paper §II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ImcFamily {
+    /// Analog IMC: all rows jointly activated, bitline charge
+    /// accumulation, ADC per column group, DAC per row.
+    Aimc,
+    /// Digital IMC: bit-serial digital multiplication at the cell,
+    /// exact adder-tree accumulation, no data converters.
+    Dimc,
+}
+
+impl ImcFamily {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ImcFamily::Aimc => "AIMC",
+            ImcFamily::Dimc => "DIMC",
+        }
+    }
+}
+
+impl std::fmt::Display for ImcFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A single SRAM IMC macro (Table I hardware model parameters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImcMacro {
+    pub name: String,
+    pub family: ImcFamily,
+    /// Physical SRAM rows (R). The accumulation axis D2 = R / M.
+    pub rows: usize,
+    /// Physical SRAM columns (C). D1 = C / B_w weight operands per row.
+    pub cols: usize,
+    /// Weight precision B_w (bits stored in parallel per operand).
+    pub weight_bits: u32,
+    /// Activation precision B_a.
+    pub act_bits: u32,
+    /// DAC resolution (AIMC) / input slice width (DIMC, typically 1).
+    pub dac_res: u32,
+    /// ADC resolution (AIMC only; 0 for DIMC).
+    pub adc_res: u32,
+    /// Row multiplexing factor M: rows multiplexed per vector MAC
+    /// (1 for AIMC — all rows compute at once; >= 1 for DIMC/NMC).
+    pub row_mux: usize,
+    /// Columns (bitlines) shared per ADC (1 for most designs; 4 for the
+    /// 7 nm Flash-ADC design of Dong et al. ISSCC'20).
+    pub cols_per_adc: u32,
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Technology node (nm).
+    pub tech_nm: f64,
+}
+
+impl ImcMacro {
+    /// Activation-propagation axis D1: weight operands per row.
+    pub fn d1(&self) -> usize {
+        self.cols / self.weight_bits as usize
+    }
+
+    /// Accumulation axis D2: rows jointly reduced per vector MAC.
+    pub fn d2(&self) -> usize {
+        self.rows / self.row_mux
+    }
+
+    /// Bit-serial input slices per full-precision activation
+    /// (`ceil(B_a / DAC_res)`), i.e. `CC_BS` per activation.
+    pub fn n_slices(&self) -> u32 {
+        self.act_bits.div_ceil(self.dac_res)
+    }
+
+    /// SRAM cells in the array.
+    pub fn n_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Weight operands resident in the array (capacity of one tile).
+    pub fn n_weights(&self) -> usize {
+        self.d1() * self.rows
+    }
+
+    /// Full-precision MACs retired by one full-array MVM (all slices).
+    pub fn macs_per_mvm(&self) -> u64 {
+        (self.d1() * self.d2()) as u64
+    }
+
+    /// Compute cycles per full-array, full-precision MVM:
+    /// bit-serial slices × row-multiplex steps.
+    pub fn cycles_per_mvm(&self) -> u64 {
+        self.n_slices() as u64 * self.row_mux as u64
+    }
+
+    /// ADC conversions per full-array MVM (0 for DIMC).
+    pub fn adcs_per_mvm(&self) -> u64 {
+        match self.family {
+            ImcFamily::Aimc => {
+                (self.d1() as u64 * self.weight_bits as u64 / self.cols_per_adc as u64)
+                    * self.n_slices() as u64
+            }
+            ImcFamily::Dimc => 0,
+        }
+    }
+
+    /// DAC conversions per full-array MVM (`CC_BS` aggregate; 0 for DIMC).
+    pub fn dacs_per_mvm(&self) -> u64 {
+        match self.family {
+            ImcFamily::Aimc => self.d2() as u64 * self.n_slices() as u64,
+            ImcFamily::Dimc => 0,
+        }
+    }
+
+    /// Structural sanity checks; call after constructing from config.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err(format!("{}: empty array", self.name));
+        }
+        if self.weight_bits == 0 || self.cols % self.weight_bits as usize != 0 {
+            return Err(format!(
+                "{}: cols ({}) must be a positive multiple of weight_bits ({})",
+                self.name, self.cols, self.weight_bits
+            ));
+        }
+        if self.dac_res == 0 || self.dac_res > self.act_bits {
+            return Err(format!(
+                "{}: need 1 <= dac_res ({}) <= act_bits ({})",
+                self.name, self.dac_res, self.act_bits
+            ));
+        }
+        if self.row_mux == 0 || self.rows % self.row_mux != 0 {
+            return Err(format!(
+                "{}: rows ({}) must be a positive multiple of row_mux ({})",
+                self.name, self.rows, self.row_mux
+            ));
+        }
+        match self.family {
+            ImcFamily::Aimc => {
+                if self.adc_res == 0 {
+                    return Err(format!("{}: AIMC requires adc_res > 0", self.name));
+                }
+                if self.row_mux != 1 {
+                    return Err(format!(
+                        "{}: AIMC activates all rows jointly (row_mux must be 1)",
+                        self.name
+                    ));
+                }
+            }
+            ImcFamily::Dimc => {
+                if self.cols_per_adc != 1 {
+                    return Err(format!("{}: DIMC has no ADCs", self.name));
+                }
+            }
+        }
+        if !(0.3..=1.3).contains(&self.vdd) {
+            return Err(format!("{}: implausible vdd {}", self.name, self.vdd));
+        }
+        if !(3.0..=180.0).contains(&self.tech_nm) {
+            return Err(format!("{}: implausible tech node {}", self.name, self.tech_nm));
+        }
+        Ok(())
+    }
+
+    /// Convenience constructor for tests and examples.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        family: ImcFamily,
+        rows: usize,
+        cols: usize,
+        weight_bits: u32,
+        act_bits: u32,
+        dac_res: u32,
+        adc_res: u32,
+        vdd: f64,
+        tech_nm: f64,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            family,
+            rows,
+            cols,
+            weight_bits,
+            act_bits,
+            dac_res,
+            adc_res,
+            row_mux: 1,
+            cols_per_adc: 1,
+            vdd,
+            tech_nm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aimc() -> ImcMacro {
+        ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0)
+    }
+
+    fn dimc() -> ImcMacro {
+        ImcMacro::new("d", ImcFamily::Dimc, 256, 256, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    #[test]
+    fn derived_axes() {
+        let m = aimc();
+        assert_eq!(m.d1(), 64);
+        assert_eq!(m.d2(), 1152);
+        assert_eq!(m.n_slices(), 1);
+        assert_eq!(m.macs_per_mvm(), 64 * 1152);
+        assert_eq!(m.n_cells(), 1152 * 256);
+    }
+
+    #[test]
+    fn dimc_bit_serial_cycles() {
+        let m = dimc();
+        assert_eq!(m.n_slices(), 4); // 4b activations, 1b slices
+        assert_eq!(m.cycles_per_mvm(), 4);
+        assert_eq!(m.adcs_per_mvm(), 0);
+        assert_eq!(m.dacs_per_mvm(), 0);
+    }
+
+    #[test]
+    fn aimc_converter_counts() {
+        let m = aimc();
+        // 64 operands x 4 bitlines each, 1 ADC per bitline, 1 slice
+        assert_eq!(m.adcs_per_mvm(), 256);
+        assert_eq!(m.dacs_per_mvm(), 1152);
+    }
+
+    #[test]
+    fn row_mux_reduces_d2() {
+        let mut m = dimc();
+        m.row_mux = 4;
+        assert_eq!(m.d2(), 64);
+        assert_eq!(m.cycles_per_mvm(), 16); // 4 slices x 4 mux steps
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut m = aimc();
+        m.cols = 255;
+        assert!(m.validate().is_err());
+
+        let mut m = aimc();
+        m.adc_res = 0;
+        assert!(m.validate().is_err());
+
+        let mut m = aimc();
+        m.row_mux = 2; // AIMC must have M = 1
+        assert!(m.validate().is_err());
+
+        let mut m = dimc();
+        m.dac_res = 9; // > act_bits
+        assert!(m.validate().is_err());
+
+        let mut m = dimc();
+        m.vdd = 2.5;
+        assert!(m.validate().is_err());
+
+        assert!(aimc().validate().is_ok());
+        assert!(dimc().validate().is_ok());
+    }
+
+}

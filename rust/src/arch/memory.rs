@@ -1,0 +1,158 @@
+//! Memory hierarchy description (the levels *outside* the IMC array).
+//!
+//! The analytical model (paper §IV) covers the macro datapath; accesses to
+//! higher memory levels are costed by the DSE engine against this
+//! hierarchy, exactly as the paper does by integrating the model into
+//! ZigZag. Levels are ordered inner → outer; each level declares which
+//! operands it can hold.
+
+
+/// DNN operand kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// Input feature map (I).
+    Input,
+    /// Weights (W).
+    Weight,
+    /// Output feature map / partial sums (O).
+    Output,
+}
+
+pub const ALL_OPERANDS: [Operand; 3] = [Operand::Input, Operand::Weight, Operand::Output];
+
+impl Operand {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Operand::Input => "I",
+            Operand::Weight => "W",
+            Operand::Output => "O",
+        }
+    }
+}
+
+impl std::fmt::Display for Operand {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One level of the memory hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryLevel {
+    pub name: String,
+    /// Capacity in bits.
+    pub size_bits: u64,
+    /// Read energy per bit (fJ).
+    pub read_fj_per_bit: f64,
+    /// Write energy per bit (fJ).
+    pub write_fj_per_bit: f64,
+    /// Words transferable per cycle × word width (bits/cycle).
+    pub bw_bits_per_cycle: u64,
+    /// Operands this level may hold.
+    pub operands: Vec<Operand>,
+}
+
+impl MemoryLevel {
+    pub fn serves(&self, op: Operand) -> bool {
+        self.operands.contains(&op)
+    }
+}
+
+/// Ordered (inner → outer) list of levels above the IMC array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryHierarchy {
+    pub levels: Vec<MemoryLevel>,
+}
+
+impl MemoryHierarchy {
+    /// The paper's evaluation context: a shared on-chip global buffer and
+    /// an off-chip DRAM. Energies follow the usual scaling rules
+    /// (~`0.05 fJ/bit/KB^0.5` SRAM trend at 28 nm, scaled by node;
+    /// DRAM fixed at 3.9 pJ/bit after Horowitz).
+    pub fn edge_default(tech_nm: f64) -> Self {
+        let s = tech_nm / 28.0; // linear energy scaling with node
+        MemoryHierarchy {
+            levels: vec![
+                MemoryLevel {
+                    name: "gb_sram_256KB".into(),
+                    size_bits: 256 * 1024 * 8,
+                    read_fj_per_bit: 25.0 * s,
+                    write_fj_per_bit: 30.0 * s,
+                    bw_bits_per_cycle: 256,
+                    operands: ALL_OPERANDS.to_vec(),
+                },
+                MemoryLevel {
+                    name: "dram".into(),
+                    size_bits: u64::MAX / 2,
+                    read_fj_per_bit: 3900.0,
+                    write_fj_per_bit: 3900.0,
+                    bw_bits_per_cycle: 64,
+                    operands: ALL_OPERANDS.to_vec(),
+                },
+            ],
+        }
+    }
+
+    /// Innermost level serving `op`.
+    pub fn inner_for(&self, op: Operand) -> Option<&MemoryLevel> {
+        self.levels.iter().find(|l| l.serves(op))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.is_empty() {
+            return Err("memory hierarchy must have at least one level".into());
+        }
+        for op in ALL_OPERANDS {
+            if self.inner_for(op).is_none() {
+                return Err(format!("no memory level serves operand {op}"));
+            }
+        }
+        for w in self.levels.windows(2) {
+            if w[1].size_bits < w[0].size_bits {
+                return Err(format!(
+                    "levels must grow outward: {} ({} b) > {} ({} b)",
+                    w[0].name, w[0].size_bits, w[1].name, w[1].size_bits
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_hierarchy_is_valid() {
+        let h = MemoryHierarchy::edge_default(28.0);
+        assert!(h.validate().is_ok());
+        assert_eq!(h.levels.len(), 2);
+        assert!(h.inner_for(Operand::Weight).unwrap().name.contains("sram"));
+    }
+
+    #[test]
+    fn energy_scales_with_node() {
+        let h28 = MemoryHierarchy::edge_default(28.0);
+        let h5 = MemoryHierarchy::edge_default(5.0);
+        assert!(h5.levels[0].read_fj_per_bit < h28.levels[0].read_fj_per_bit);
+        // DRAM is off-chip: node independent
+        assert_eq!(h5.levels[1].read_fj_per_bit, h28.levels[1].read_fj_per_bit);
+    }
+
+    #[test]
+    fn validation_rejects_shrinking_levels() {
+        let mut h = MemoryHierarchy::edge_default(28.0);
+        h.levels[1].size_bits = 8;
+        assert!(h.validate().is_err());
+    }
+
+    #[test]
+    fn validation_requires_all_operands() {
+        let mut h = MemoryHierarchy::edge_default(28.0);
+        for l in &mut h.levels {
+            l.operands.retain(|o| *o != Operand::Output);
+        }
+        assert!(h.validate().is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Hardware architecture templates: IMC macros, memory hierarchies and
+//! multi-macro systems (paper Fig. 3 modeling template + Table II).
+
+pub mod config;
+pub mod imc_macro;
+pub mod memory;
+pub mod system;
+
+pub use config::{load_system, load_system_dir, system_from_toml, ConfigError};
+pub use imc_macro::{ImcFamily, ImcMacro};
+pub use memory::{MemoryHierarchy, MemoryLevel, Operand, ALL_OPERANDS};
+pub use system::ImcSystem;
+
+/// The four case-study architectures of paper Table II, normalized to the
+/// same total cell count (the largest design, 1152×256).
+pub fn table2_systems() -> Vec<ImcSystem> {
+    let target_cells = 1152 * 256;
+    let mk = |name: &str,
+              family: ImcFamily,
+              rows: usize,
+              cols: usize,
+              n: usize,
+              tech: f64,
+              adc_res: u32,
+              dac_res: u32| {
+        let imc = ImcMacro {
+            name: format!("{name}_macro"),
+            family,
+            rows,
+            cols,
+            weight_bits: 4,
+            act_bits: 4,
+            dac_res,
+            adc_res,
+            row_mux: 1,
+            cols_per_adc: 1,
+            vdd: 0.8,
+            tech_nm: tech,
+        };
+        ImcSystem::new(name, imc, n).normalized_to_cells(target_cells)
+    };
+    vec![
+        // R, C, macros, tech from Table II; converter resolutions are the
+        // representative values used for the functional artifacts too.
+        mk("aimc_large", ImcFamily::Aimc, 1152, 256, 1, 28.0, 8, 4),
+        mk("aimc_multi", ImcFamily::Aimc, 64, 32, 8, 28.0, 6, 2),
+        mk("dimc_large", ImcFamily::Dimc, 256, 256, 4, 22.0, 0, 1),
+        mk("dimc_multi", ImcFamily::Dimc, 48, 4, 192, 28.0, 0, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_systems_are_valid_and_normalized() {
+        let systems = table2_systems();
+        assert_eq!(systems.len(), 4);
+        let target = 1152 * 256;
+        for s in &systems {
+            s.validate().unwrap();
+            assert!(
+                s.total_cells() >= target,
+                "{} has {} cells < {}",
+                s.name,
+                s.total_cells(),
+                target
+            );
+            // within one macro of the target (ceiling normalization)
+            assert!(s.total_cells() - target < s.imc.n_cells());
+        }
+        // Table II macro counts after normalization
+        assert_eq!(systems[0].n_macros, 1);
+        assert_eq!(systems[1].n_macros, 144);
+        assert_eq!(systems[2].n_macros, 5 /* ceil: 22nm design has fewer cells/macro than 4x of table; normalization keeps >= target */);
+        assert_eq!(systems[3].n_macros, 1536);
+    }
+}

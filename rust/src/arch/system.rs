@@ -1,0 +1,106 @@
+//! Multi-macro IMC system: N identical macros + the shared memory
+//! hierarchy (paper §VI: "the number of macros is scaled to make all
+//! designs have the same total number of SRAM cells").
+
+
+use super::imc_macro::ImcMacro;
+use super::memory::MemoryHierarchy;
+
+/// A complete accelerator: replicated IMC macros + memory hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImcSystem {
+    pub name: String,
+    pub imc: ImcMacro,
+    pub n_macros: usize,
+    pub hierarchy: MemoryHierarchy,
+}
+
+impl ImcSystem {
+    pub fn new(name: &str, imc: ImcMacro, n_macros: usize) -> Self {
+        let hierarchy = MemoryHierarchy::edge_default(imc.tech_nm);
+        ImcSystem {
+            name: name.to_string(),
+            imc,
+            n_macros,
+            hierarchy,
+        }
+    }
+
+    /// Total SRAM cells across all macros (the Table II normalization
+    /// quantity).
+    pub fn total_cells(&self) -> usize {
+        self.imc.n_cells() * self.n_macros
+    }
+
+    /// Total weight capacity (operands) across macros.
+    pub fn total_weights(&self) -> usize {
+        self.imc.n_weights() * self.n_macros
+    }
+
+    /// Peak full-precision MACs per cycle across the system.
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        self.n_macros as f64 * self.imc.macs_per_mvm() as f64
+            / self.imc.cycles_per_mvm() as f64
+    }
+
+    /// Rescale the macro count so `total_cells() == target_cells`
+    /// (rounded up). This is the paper's fairness normalization.
+    pub fn normalized_to_cells(mut self, target_cells: usize) -> Self {
+        let per_macro = self.imc.n_cells();
+        self.n_macros = target_cells.div_ceil(per_macro);
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_macros == 0 {
+            return Err(format!("{}: n_macros must be > 0", self.name));
+        }
+        self.imc.validate()?;
+        self.hierarchy.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::imc_macro::ImcFamily;
+
+    fn sys(rows: usize, cols: usize, n: usize) -> ImcSystem {
+        ImcSystem::new(
+            "s",
+            ImcMacro::new("m", ImcFamily::Dimc, rows, cols, 4, 4, 1, 0, 0.8, 22.0),
+            n,
+        )
+    }
+
+    #[test]
+    fn cell_count_normalization() {
+        // aimc_large: 1152x256x1 = 294912 cells is the Table II maximum
+        let target = 1152 * 256;
+        let s = sys(64, 32, 1).normalized_to_cells(target);
+        assert_eq!(s.n_macros, 144);
+        assert!(s.total_cells() >= target);
+        // non-divisible case rounds up (294912 / 65536 = 4.5 -> 5)
+        let s2 = sys(256, 256, 1).normalized_to_cells(target);
+        assert_eq!(s2.n_macros, 5);
+        // exactly divisible case
+        let s3 = sys(1152, 256, 1).normalized_to_cells(target);
+        assert_eq!(s3.n_macros, 1);
+    }
+
+    #[test]
+    fn peak_macs_accounts_for_bit_serial() {
+        let s = sys(256, 256, 4);
+        // 4b acts bit-serial: 4 cycles per MVM; 64 ops x 256 rows per MVM
+        let expect = 4.0 * (64.0 * 256.0) / 4.0;
+        assert_eq!(s.peak_macs_per_cycle(), expect);
+    }
+
+    #[test]
+    fn validate_propagates() {
+        let mut s = sys(64, 32, 2);
+        assert!(s.validate().is_ok());
+        s.n_macros = 0;
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Request batcher: aggregates single-vector MVM requests into the
+//! fixed batch tile the AOT executable expects, flushing on batch-full
+//! or timeout. Std threads + channels (no async runtime on the request
+//! path — the binary is self-contained).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Kind};
+
+use super::tiler::{MatI32, Tiler};
+
+/// One MVM request: an activation vector for the resident weights.
+pub struct MvmRequest {
+    pub x: Vec<i32>,
+    pub respond: Sender<MvmResponse>,
+    pub enqueued: Instant,
+}
+
+/// The response: the output vector + timing.
+#[derive(Debug, Clone)]
+pub struct MvmResponse {
+    pub y: Vec<i32>,
+    pub queue_us: u64,
+    pub batch_size: usize,
+}
+
+/// Aggregate batcher statistics.
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub flush_timeouts: AtomicU64,
+}
+
+impl BatcherStats {
+    pub fn mean_batch_fill(&self, batch: usize) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        let served = self.requests.load(Ordering::Relaxed) as f64;
+        served / (b as f64 * batch as f64)
+    }
+}
+
+/// Batching MVM server for one design with resident weights.
+pub struct BatchServer {
+    tx: Sender<MvmRequest>,
+    pub stats: Arc<BatcherStats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchServer {
+    /// Spawn the server thread. `weights` stay resident (weight-
+    /// stationary serving); each request supplies one activation vector
+    /// of length `weights.rows`.
+    pub fn start(
+        engine: Arc<Engine>,
+        design: &str,
+        weights: MatI32,
+        kind: Kind,
+        linger: Duration,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<MvmRequest>();
+        let stats = Arc::new(BatcherStats::default());
+        let stats2 = stats.clone();
+        let design = design.to_string();
+        let worker = std::thread::spawn(move || {
+            let tiler = match Tiler::new(&engine, &design) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("batcher: {e}");
+                    return;
+                }
+            };
+            serve_loop(&tiler, rx, weights, kind, linger, &stats2);
+        });
+        Ok(BatchServer {
+            tx,
+            stats,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit one activation vector; returns a receiver for the reply.
+    pub fn submit(&self, x: Vec<i32>) -> Receiver<MvmResponse> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(MvmRequest {
+            x,
+            respond: tx,
+            enqueued: Instant::now(),
+        });
+        rx
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        // closing the channel stops the worker
+        let (dummy_tx, _) = mpsc::channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(
+    tiler: &Tiler<'_>,
+    rx: Receiver<MvmRequest>,
+    weights: MatI32,
+    kind: Kind,
+    linger: Duration,
+    stats: &BatcherStats,
+) {
+    let (batch, _rows, _d1) = tiler.geometry();
+    let mut pending: Vec<MvmRequest> = Vec::with_capacity(batch);
+    loop {
+        // wait for the first request of a batch
+        match rx.recv() {
+            Ok(req) => pending.push(req),
+            Err(_) => return, // channel closed
+        }
+        // gather until full or linger expires
+        let deadline = Instant::now() + linger;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                stats.flush_timeouts.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => pending.push(req),
+                Err(RecvTimeoutError::Timeout) => {
+                    stats.flush_timeouts.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        flush(tiler, &weights, kind, &mut pending, batch, stats);
+        if pending.is_empty() && rx.try_recv().map(|r| pending.push(r)).is_err() {
+            // loop back to blocking recv
+            continue;
+        }
+    }
+}
+
+fn flush(
+    tiler: &Tiler<'_>,
+    weights: &MatI32,
+    kind: Kind,
+    pending: &mut Vec<MvmRequest>,
+    batch: usize,
+    stats: &BatcherStats,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let n = pending.len().min(batch);
+    let reqs: Vec<MvmRequest> = pending.drain(..n).collect();
+    let rows = weights.rows;
+    let mut x = MatI32::zeros(n, rows);
+    for (i, r) in reqs.iter().enumerate() {
+        let len = r.x.len().min(rows);
+        x.data[i * rows..i * rows + len].copy_from_slice(&r.x[..len]);
+    }
+    stats.requests.fetch_add(n as u64, Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats
+        .padded_slots
+        .fetch_add((batch - n) as u64, Ordering::Relaxed);
+    match tiler.mvm(&x, weights, kind) {
+        Ok((y, _)) => {
+            for (i, r) in reqs.into_iter().enumerate() {
+                let row = y.data[i * y.cols..(i + 1) * y.cols].to_vec();
+                let _ = r.respond.send(MvmResponse {
+                    y: row,
+                    queue_us: r.enqueued.elapsed().as_micros() as u64,
+                    batch_size: n,
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("batch execute failed: {e}");
+            // drop responders: callers see a closed channel
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! End-to-end batcher tests need real artifacts — see
+    //! `rust/tests/integration_coordinator.rs`.
+
+    use super::*;
+
+    #[test]
+    fn stats_mean_fill() {
+        let s = BatcherStats::default();
+        s.requests.store(24, Ordering::Relaxed);
+        s.batches.store(2, Ordering::Relaxed);
+        assert!((s.mean_batch_fill(16) - 0.75).abs() < 1e-12);
+        let empty = BatcherStats::default();
+        assert_eq!(empty.mean_batch_fill(16), 0.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Rust-side integer CNN executed through the macro artifacts: im2col
+//! lowering + tiled MVMs + digital SIMD post-processing. The functional
+//! twin of `python/compile/model.py` (which is build-time only — this
+//! module is what actually serves inference).
+
+use anyhow::Result;
+
+use crate::runtime::Kind;
+use crate::util::prng::Rng;
+
+use super::tiler::{argmax_rows, requantize, MatI32, Tiler, TileStats};
+
+/// A (B, H, W, C) int32 activation tensor (NHWC, row-major).
+#[derive(Debug, Clone)]
+pub struct Tensor4 {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(b: usize, h: usize, w: usize, c: usize) -> Self {
+        Tensor4 {
+            b,
+            h,
+            w,
+            c,
+            data: vec![0; b * h * w * c],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, bi: usize, y: usize, x: usize, ci: usize) -> i32 {
+        self.data[((bi * self.h + y) * self.w + x) * self.c + ci]
+    }
+
+    #[inline]
+    pub fn set(&mut self, bi: usize, y: usize, x: usize, ci: usize, v: i32) {
+        self.data[((bi * self.h + y) * self.w + x) * self.c + ci] = v;
+    }
+
+    /// Random activations in [0, 2^act_bits).
+    pub fn random(rng: &mut Rng, b: usize, h: usize, w: usize, c: usize, act_bits: u32) -> Self {
+        let mut t = Tensor4::zeros(b, h, w, c);
+        for v in &mut t.data {
+            *v = rng.range_i64(0, (1 << act_bits) - 1) as i32;
+        }
+        t
+    }
+}
+
+/// im2col: (B,H,W,C) → (B·OY·OX, FY·FX·C) patch matrix (valid padding).
+/// Patch column order is (fy, fx, c) — must match the weight reshape.
+pub fn im2col(x: &Tensor4, fy: usize, fx: usize, stride: usize) -> (MatI32, usize, usize) {
+    let oy = (x.h - fy) / stride + 1;
+    let ox = (x.w - fx) / stride + 1;
+    let k = fy * fx * x.c;
+    let mut m = MatI32::zeros(x.b * oy * ox, k);
+    for bi in 0..x.b {
+        for yo in 0..oy {
+            for xo in 0..ox {
+                let row = (bi * oy + yo) * ox + xo;
+                let mut col = 0;
+                for dy in 0..fy {
+                    for dx in 0..fx {
+                        for ci in 0..x.c {
+                            m.set(row, col, x.at(bi, yo * stride + dy, xo * stride + dx, ci));
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (m, oy, ox)
+}
+
+/// Conv weights (FY,FX,C,K) flattened to the (FY·FX·C, K) MVM matrix.
+#[derive(Debug, Clone)]
+pub struct ConvWeights {
+    pub fy: usize,
+    pub fx: usize,
+    pub c: usize,
+    pub k: usize,
+    pub mat: MatI32,
+}
+
+impl ConvWeights {
+    pub fn random(rng: &mut Rng, fy: usize, fx: usize, c: usize, k: usize, weight_bits: u32) -> Self {
+        let lo = -(1i64 << (weight_bits - 1));
+        let hi = (1i64 << (weight_bits - 1)) - 1;
+        let mut mat = MatI32::zeros(fy * fx * c, k);
+        for v in &mut mat.data {
+            *v = rng.range_i64(lo, hi) as i32;
+        }
+        ConvWeights { fy, fx, c, k, mat }
+    }
+}
+
+/// The demo network: conv3x3(k1) → requant → conv3x3/s2(k2) → requant
+/// → dense(classes). Integer-only; all MVMs go through the macro.
+#[derive(Debug, Clone)]
+pub struct TinyCnn {
+    pub act_bits: u32,
+    pub conv1: ConvWeights,
+    pub conv2: ConvWeights,
+    pub dense: MatI32,
+    pub classes: usize,
+    pub image: usize,
+}
+
+impl TinyCnn {
+    /// Deterministic random weights (same geometry as the python spec).
+    pub fn random(seed: u64, image: usize, act_bits: u32, weight_bits: u32) -> Self {
+        let mut rng = Rng::new(seed);
+        let c1 = 8;
+        let c2 = 16;
+        let classes = 10;
+        let conv1 = ConvWeights::random(&mut rng, 3, 3, 1, c1, weight_bits);
+        let conv2 = ConvWeights::random(&mut rng, 3, 3, c1, c2, weight_bits);
+        let s1 = image - 2; // after conv1 (valid)
+        let s2 = (s1 - 3) / 2 + 1; // after conv2 stride 2
+        let flat = s2 * s2 * c2;
+        let lo = -(1i64 << (weight_bits - 1));
+        let hi = (1i64 << (weight_bits - 1)) - 1;
+        let mut dense = MatI32::zeros(flat, classes);
+        for v in &mut dense.data {
+            *v = rng.range_i64(lo, hi) as i32;
+        }
+        TinyCnn {
+            act_bits,
+            conv1,
+            conv2,
+            dense,
+            classes,
+            image,
+        }
+    }
+
+    /// Run a batch of images through the network on `tiler`.
+    /// Returns (logits, predicted classes, accumulated tile stats).
+    pub fn forward(
+        &self,
+        tiler: &Tiler<'_>,
+        x: &Tensor4,
+        kind: Kind,
+    ) -> Result<(MatI32, Vec<usize>, TileStats)> {
+        let mut stats = TileStats::default();
+        let add = |s: &mut TileStats, t: TileStats| {
+            s.mvms += t.mvms;
+            s.row_tiles += t.row_tiles;
+            s.col_tiles += t.col_tiles;
+            s.batch_tiles += t.batch_tiles;
+        };
+
+        // conv1
+        let (cols, oy1, ox1) = im2col(x, 3, 3, 1);
+        let (acc1, t1) = tiler.mvm(&cols, &self.conv1.mat, kind)?;
+        add(&mut stats, t1);
+        let h1m = requantize(&acc1, 4, self.act_bits);
+        // reshape rows (B*OY1*OX1, K1) into a tensor
+        let mut h1 = Tensor4::zeros(x.b, oy1, ox1, self.conv1.k);
+        h1.data.copy_from_slice(&h1m.data);
+
+        // conv2 stride 2
+        let (cols2, oy2, ox2) = im2col(&h1, 3, 3, 2);
+        let (acc2, t2) = tiler.mvm(&cols2, &self.conv2.mat, kind)?;
+        add(&mut stats, t2);
+        let h2m = requantize(&acc2, 6, self.act_bits);
+
+        // flatten (B, OY2*OX2*K2) — rows are already (b, y, x) major
+        let flat = oy2 * ox2 * self.conv2.k;
+        let mut flat_m = MatI32::zeros(x.b, flat);
+        for bi in 0..x.b {
+            for p in 0..oy2 * ox2 {
+                for ci in 0..self.conv2.k {
+                    flat_m.set(
+                        bi,
+                        p * self.conv2.k + ci,
+                        h2m.at(bi * oy2 * ox2 + p, ci),
+                    );
+                }
+            }
+        }
+
+        // classifier
+        let (logits, t3) = tiler.mvm(&flat_m, &self.dense, kind)?;
+        add(&mut stats, t3);
+        let preds = argmax_rows(&logits);
+        Ok((logits, preds, stats))
+    }
+
+    /// Total MACs of one inference (for energy estimates).
+    pub fn macs_per_image(&self) -> u64 {
+        let s1 = self.image - 2;
+        let s2 = (s1 - 3) / 2 + 1;
+        let m1 = (s1 * s1) as u64 * self.conv1.mat.rows as u64 * self.conv1.k as u64;
+        let m2 = (s2 * s2) as u64 * self.conv2.mat.rows as u64 * self.conv2.k as u64;
+        let m3 = self.dense.rows as u64 * self.classes as u64;
+        m1 + m2 + m3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_shapes_and_values() {
+        let mut x = Tensor4::zeros(1, 4, 4, 1);
+        for i in 0..16 {
+            x.data[i] = i as i32;
+        }
+        let (m, oy, ox) = im2col(&x, 3, 3, 1);
+        assert_eq!((oy, ox), (2, 2));
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.cols, 9);
+        // first patch = rows 0..3 x cols 0..3
+        assert_eq!(&m.data[0..9], &[0, 1, 2, 4, 5, 6, 8, 9, 10]);
+    }
+
+    #[test]
+    fn im2col_stride2() {
+        let x = Tensor4::zeros(1, 5, 5, 2);
+        let (m, oy, ox) = im2col(&x, 3, 3, 2);
+        assert_eq!((oy, ox), (2, 2));
+        assert_eq!(m.cols, 18);
+        assert_eq!(m.rows, 4);
+    }
+
+    #[test]
+    fn tinycnn_geometry() {
+        let net = TinyCnn::random(1, 12, 4, 4);
+        assert_eq!(net.conv1.mat.rows, 9);
+        assert_eq!(net.conv2.mat.rows, 72);
+        // image 12 -> conv1 10 -> conv2 s2 (10-3)/2+1 = 4
+        assert_eq!(net.dense.rows, 4 * 4 * 16);
+        assert!(net.macs_per_image() > 0);
+    }
+
+    #[test]
+    fn weights_in_range() {
+        let net = TinyCnn::random(7, 12, 4, 4);
+        for v in net
+            .conv1
+            .mat
+            .data
+            .iter()
+            .chain(&net.conv2.mat.data)
+            .chain(&net.dense.data)
+        {
+            assert!((-8..=7).contains(v));
+        }
+    }
+}

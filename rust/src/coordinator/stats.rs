@@ -1,0 +1,76 @@
+//! Serving statistics: latency percentiles and throughput counters.
+
+use std::time::Duration;
+
+/// Collects latency samples and computes percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p95={}us p99={}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = LatencyStats::default();
+        for us in 1..=100 {
+            s.record_us(us);
+        }
+        // index = round(0.5 * 99) = 50 -> the 51st sample
+        assert_eq!(s.percentile_us(50.0), 51);
+        assert_eq!(s.percentile_us(99.0), 99);
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_us() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let s = LatencyStats::default();
+        assert_eq!(s.percentile_us(50.0), 0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+}

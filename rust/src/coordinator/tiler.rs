@@ -1,0 +1,285 @@
+//! Tile scheduler: executes arbitrarily-shaped integer MVMs on a fixed
+//! macro geometry by row/column tiling — the rust counterpart of the
+//! spatial mapping (K → columns, reduction → rows) with digital
+//! accumulation of row-tile partial sums outside the array.
+//!
+//! This is the functional twin of `mapping::temporal::tile`: the same
+//! tiling that the DSE engine *costs*, executed for real against the
+//! AOT-compiled macro artifacts.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{CachedLiteral, Engine, Kind};
+
+/// Execution statistics of one tiled MVM.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TileStats {
+    /// Macro MVM invocations dispatched.
+    pub mvms: u64,
+    /// Row tiles (partial-sum accumulations).
+    pub row_tiles: u64,
+    /// Column tiles.
+    pub col_tiles: u64,
+    /// Batch tiles.
+    pub batch_tiles: u64,
+}
+
+/// A (rows x cols) row-major int32 matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(anyhow!("shape ({rows},{cols}) != data len {}", data.len()));
+        }
+        Ok(MatI32 { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Copy a (r0..r0+nr, c0..c0+nc) block, zero-padded out of range.
+    pub fn block(&self, r0: usize, nr: usize, c0: usize, nc: usize) -> MatI32 {
+        let mut out = MatI32::zeros(nr, nc);
+        for r in 0..nr.min(self.rows.saturating_sub(r0)) {
+            for c in 0..nc.min(self.cols.saturating_sub(c0)) {
+                out.set(r, c, self.at(r0 + r, c0 + c));
+            }
+        }
+        out
+    }
+
+    /// Exact integer matmul on the host (oracle for tests).
+    pub fn matmul(&self, other: &MatI32) -> Result<MatI32> {
+        if self.cols != other.rows {
+            return Err(anyhow!("inner dims {} != {}", self.cols, other.rows));
+        }
+        let mut out = MatI32::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k) as i64;
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let v = out.at(i, j) as i64 + a * other.at(k, j) as i64;
+                    out.set(i, j, v as i32);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The tile scheduler for one design.
+///
+/// Weight tiles are marshalled into device literals once per distinct
+/// weight matrix and reused across dispatches (weights are stationary
+/// in the array — re-marshalling them per MVM was the top L3 hot-path
+/// cost; see EXPERIMENTS.md §Perf, iteration 3).
+pub struct Tiler<'a> {
+    engine: &'a Engine,
+    design: String,
+    rows: usize,
+    d1: usize,
+    batch: usize,
+    /// content-hash → per-(row,col)-tile weight literals
+    weight_cache: Mutex<HashMap<u64, std::sync::Arc<Vec<CachedLiteral>>>>,
+}
+
+/// FNV-1a over the weight matrix contents + dims.
+fn weight_key(w: &MatI32) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut step = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    step(w.rows as u64);
+    step(w.cols as u64);
+    for &v in &w.data {
+        step(v as u32 as u64);
+    }
+    h
+}
+
+impl<'a> Tiler<'a> {
+    pub fn new(engine: &'a Engine, design: &str) -> Result<Self> {
+        let d = engine.design(design)?;
+        Ok(Tiler {
+            engine,
+            design: design.to_string(),
+            rows: d.config.rows,
+            d1: d.config.d1,
+            batch: engine.batch(),
+            weight_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Get (or build) the cached per-tile weight literals for `w`.
+    fn weight_tiles(&self, w: &MatI32) -> Result<std::sync::Arc<Vec<CachedLiteral>>> {
+        let key = weight_key(w);
+        if let Some(t) = self.weight_cache.lock().unwrap().get(&key) {
+            return Ok(t.clone());
+        }
+        let n_r = w.rows.div_ceil(self.rows).max(1);
+        let n_k = w.cols.div_ceil(self.d1).max(1);
+        let mut tiles = Vec::with_capacity(n_r * n_k);
+        // tile order: (kt outer, rt inner) — must match `mvm`'s loops
+        for kt in 0..n_k {
+            for rt in 0..n_r {
+                let wb = w.block(rt * self.rows, self.rows, kt * self.d1, self.d1);
+                tiles.push(
+                    self.engine
+                        .make_literal_i32(&wb.data, &[self.rows, self.d1])?,
+                );
+            }
+        }
+        let arc = std::sync::Arc::new(tiles);
+        let mut cache = self.weight_cache.lock().unwrap();
+        if cache.len() > 64 {
+            cache.clear(); // crude bound; serving uses a handful of matrices
+        }
+        cache.insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        (self.batch, self.rows, self.d1)
+    }
+
+    /// Execute `x (B x R_total) @ w (R_total x K)` through the macro,
+    /// tiling all three axes onto the (batch, rows, d1) geometry.
+    /// Padding rows contribute zero to every bitline (as power-gated
+    /// rows do in silicon), so padding never changes results.
+    pub fn mvm(&self, x: &MatI32, w: &MatI32, kind: Kind) -> Result<(MatI32, TileStats)> {
+        if x.cols != w.rows {
+            return Err(anyhow!("inner dims {} != {}", x.cols, w.rows));
+        }
+        let b_total = x.rows;
+        let r_total = x.cols;
+        let k_total = w.cols;
+        let n_b = b_total.div_ceil(self.batch).max(1);
+        let n_r = r_total.div_ceil(self.rows).max(1);
+        let n_k = k_total.div_ceil(self.d1).max(1);
+
+        let mut out = MatI32::zeros(b_total, k_total);
+        let mut stats = TileStats {
+            batch_tiles: n_b as u64,
+            row_tiles: n_r as u64,
+            col_tiles: n_k as u64,
+            ..Default::default()
+        };
+        let wtiles = self.weight_tiles(w)?;
+        for bt in 0..n_b {
+            let b0 = bt * self.batch;
+            for kt in 0..n_k {
+                let k0 = kt * self.d1;
+                for rt in 0..n_r {
+                    let r0 = rt * self.rows;
+                    let xb = x.block(b0, self.batch, r0, self.rows);
+                    let part = self.engine.execute_mvm_cached(
+                        &self.design,
+                        kind,
+                        &xb.data,
+                        &wtiles[kt * n_r + rt],
+                    )?;
+                    stats.mvms += 1;
+                    // digital accumulation of row-tile partial sums
+                    for br in 0..self.batch.min(b_total - b0) {
+                        for kc in 0..self.d1.min(k_total - k0) {
+                            let cur = out.at(b0 + br, k0 + kc);
+                            out.set(b0 + br, k0 + kc, cur + part[br * self.d1 + kc]);
+                        }
+                    }
+                }
+            }
+        }
+        Ok((out, stats))
+    }
+}
+
+/// Digital SIMD post-processing (the logic next to the macro):
+/// arithmetic shift + ReLU + clip back to the activation range.
+pub fn requantize(acc: &MatI32, shift: u32, act_bits: u32) -> MatI32 {
+    let hi = (1i32 << act_bits) - 1;
+    MatI32 {
+        rows: acc.rows,
+        cols: acc.cols,
+        data: acc.data.iter().map(|&v| (v >> shift).clamp(0, hi)).collect(),
+    }
+}
+
+/// Row-wise argmax (classification readout).
+pub fn argmax_rows(m: &MatI32) -> Vec<usize> {
+    (0..m.rows)
+        .map(|r| {
+            (0..m.cols)
+                .max_by_key(|&c| m.at(r, c))
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_block_pads_with_zeros() {
+        let m = MatI32::from_vec(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let b = m.block(1, 2, 1, 2);
+        assert_eq!(b.data, vec![4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn host_matmul_oracle() {
+        let a = MatI32::from_vec(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let b = MatI32::from_vec(2, 2, vec![1, 1, 1, 1]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3, 3, 7, 7]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = MatI32::zeros(2, 3);
+        let b = MatI32::zeros(2, 2);
+        assert!(a.matmul(&b).is_err());
+        assert!(MatI32::from_vec(2, 2, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn requantize_clips_and_relus() {
+        let m = MatI32::from_vec(1, 4, vec![-5, 0, 40, 1000]).unwrap();
+        let q = requantize(&m, 2, 4);
+        assert_eq!(q.data, vec![0, 0, 10, 15]);
+    }
+
+    #[test]
+    fn argmax() {
+        let m = MatI32::from_vec(2, 3, vec![1, 9, 2, 7, 0, 3]).unwrap();
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+}

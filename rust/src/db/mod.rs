@@ -1,0 +1,11 @@
+//! Survey database of published AIMC/DIMC silicon and the derived
+//! benchmarking/validation datasets (paper §III Fig. 4, §V Fig. 5).
+
+pub mod designs;
+pub mod survey_eval;
+
+pub use designs::{aimc_survey, dimc_survey, survey, Provenance, SurveyEntry};
+pub use survey_eval::{
+    fig4_points, validate_entry, validation_points, validation_stats, SurveyPoint,
+    SURVEY_SPARSITY,
+};

@@ -1,0 +1,204 @@
+//! Cost evaluation: one (layer × system × spatial × policy) point →
+//! energy breakdown + latency + utilization. This is the DSE hot path.
+
+use crate::arch::ImcSystem;
+use crate::mapping::{tile, SpatialMapping, TemporalPolicy, TileCounts};
+use crate::model::{macro_energy, EnergyBreakdown, MacroOpCounts, TechParams};
+use crate::model::latency::cycle_ns;
+use crate::workload::Layer;
+
+use super::reuse::{access_counts, traffic_energy_fj, AccessCounts, TrafficEnergy};
+
+/// Default input sparsity assumed by the paper's comparisons.
+pub const DEFAULT_SPARSITY: f64 = 0.5;
+
+/// Full evaluation of one mapping point.
+#[derive(Debug, Clone)]
+pub struct MappingEval {
+    pub spatial: SpatialMapping,
+    pub policy: TemporalPolicy,
+    pub tiles: TileCounts,
+    /// Macro datapath energy, summed over all active macros (fJ).
+    pub macro_energy: EnergyBreakdown,
+    /// Buffer/DRAM traffic energy (fJ).
+    pub traffic: TrafficEnergy,
+    pub accesses: AccessCounts,
+    /// End-to-end layer latency (ns); macros run in parallel, the
+    /// shared buffer serializes.
+    pub time_ns: f64,
+    pub cycles: f64,
+    /// Spatial array utilization in [0, 1].
+    pub utilization: f64,
+}
+
+impl MappingEval {
+    /// Total energy (fJ): datapath + memory traffic.
+    pub fn total_energy_fj(&self) -> f64 {
+        self.macro_energy.total_fj() + self.traffic.total_fj()
+    }
+
+    /// Energy-delay product (fJ·ns) — a common DSE objective.
+    pub fn edp(&self) -> f64 {
+        self.total_energy_fj() * self.time_ns
+    }
+
+    /// Effective TOP/s/W on this layer (2 ops per MAC).
+    pub fn tops_per_watt(&self) -> f64 {
+        let macs = self.tiles.macs_per_macro() * self.tiles.active_macros as f64;
+        2.0e3 * macs / self.total_energy_fj()
+    }
+}
+
+/// Evaluate one mapping point.
+pub fn evaluate(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    spatial: &SpatialMapping,
+    policy: TemporalPolicy,
+    input_sparsity: f64,
+) -> MappingEval {
+    let tiles = tile(layer, sys, spatial);
+    let accesses = access_counts(layer, sys, spatial, &tiles, policy);
+
+    // --- datapath energy: per macro, × active macros ---
+    let ops = MacroOpCounts {
+        mvms: tiles.mvms,
+        weight_loads: accesses.weight_loads_per_macro,
+        rows_used: tiles.rows_used_avg,
+        cols_used: tiles.cols_used_avg,
+        input_sparsity,
+    };
+    let per_macro = macro_energy(&sys.imc, tech, &ops);
+    let macro_e = per_macro.scaled(tiles.active_macros as f64);
+
+    // --- traffic energy ---
+    let traffic = traffic_energy_fj(layer, sys, &accesses);
+
+    // --- latency ---
+    let t_cycle = cycle_ns(&sys.imc);
+    // compute: MVMs × bit-serial cycles; weight loads write one row/cycle
+    let compute_cycles =
+        tiles.mvms as f64 * sys.imc.cycles_per_mvm() as f64
+            + accesses.weight_loads_per_macro as f64 * tiles.rows_used_avg;
+    // shared-buffer bandwidth (bits/cycle) serializes all macro traffic
+    let gb = &sys.hierarchy.levels[0];
+    let avg_bits = 8.0; // traffic mix; element widths are 4–16 b
+    let mem_cycles = accesses.gb_total() * avg_bits / gb.bw_bits_per_cycle as f64;
+    let cycles = compute_cycles.max(mem_cycles);
+    let time_ns = cycles * t_cycle;
+
+    MappingEval {
+        spatial: spatial.clone(),
+        policy,
+        utilization: tiles.utilization(sys),
+        tiles,
+        macro_energy: macro_e,
+        traffic,
+        accesses,
+        time_ns,
+        cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ImcFamily, ImcMacro};
+    use crate::mapping::candidates;
+
+    fn sys(family: ImcFamily, rows: usize, cols: usize, n: usize) -> ImcSystem {
+        let (adc, dac) = match family {
+            ImcFamily::Aimc => (8, 4),
+            ImcFamily::Dimc => (0, 1),
+        };
+        ImcSystem::new(
+            "s",
+            ImcMacro::new("m", family, rows, cols, 4, 4, dac, adc, 0.8, 28.0),
+            n,
+        )
+    }
+
+    fn eval_first(layer: &Layer, s: &ImcSystem, policy: TemporalPolicy) -> MappingEval {
+        let tech = TechParams::for_node(s.imc.tech_nm);
+        let sp = &candidates(layer, s)[0];
+        evaluate(layer, s, &tech, sp, policy, DEFAULT_SPARSITY)
+    }
+
+    #[test]
+    fn energy_and_time_positive() {
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let e = eval_first(&l, &s, TemporalPolicy::WeightStationary);
+        assert!(e.total_energy_fj() > 0.0);
+        assert!(e.time_ns > 0.0);
+        assert!(e.utilization > 0.0 && e.utilization <= 1.0);
+        assert!(e.tops_per_watt() > 0.0);
+    }
+
+    #[test]
+    fn dense_layer_prefers_weight_stationary_nowhere() {
+        // Dense: 1 pixel — WS and OS must coincide on weight loads
+        let l = Layer::dense("fc", 128, 640);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let ws = eval_first(&l, &s, TemporalPolicy::WeightStationary);
+        let os = eval_first(&l, &s, TemporalPolicy::OutputStationary);
+        assert_eq!(
+            ws.accesses.weight_loads_per_macro,
+            os.accesses.weight_loads_per_macro
+        );
+    }
+
+    #[test]
+    fn depthwise_underutilizes_large_aimc() {
+        let dw = Layer::depthwise("dw", 24, 24, 64, 3, 3, 1);
+        let big = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let e = eval_first(&dw, &big, TemporalPolicy::WeightStationary);
+        assert!(e.utilization < 0.01, "utilization {}", e.utilization);
+        // energy per MAC far above peak due to idle-array overhead
+        let conv = Layer::conv2d("c", 24, 24, 64, 64, 3, 3, 1);
+        let ec = eval_first(&conv, &big, TemporalPolicy::WeightStationary);
+        let per_mac_dw = e.total_energy_fj() / dw.macs() as f64;
+        let per_mac_conv = ec.total_energy_fj() / conv.macs() as f64;
+        assert!(per_mac_dw > 3.0 * per_mac_conv);
+    }
+
+    #[test]
+    fn dimc_small_arrays_do_better_on_depthwise() {
+        // the paper's §VI headline: multi-macro small arrays win on dw/pw
+        let dw = Layer::depthwise("dw", 24, 24, 64, 3, 3, 1);
+        let tech = TechParams::for_node(28.0);
+        let big = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let small = sys(ImcFamily::Dimc, 48, 4, 192);
+        let best = |s: &ImcSystem| {
+            let mut es: Vec<MappingEval> = vec![];
+            for sp in candidates(&dw, s) {
+                for p in crate::mapping::ALL_POLICIES {
+                    es.push(evaluate(&dw, s, &tech, &sp, p, DEFAULT_SPARSITY));
+                }
+            }
+            es.into_iter()
+                .min_by(|a, b| a.total_energy_fj().partial_cmp(&b.total_energy_fj()).unwrap())
+                .unwrap()
+        };
+        let e_big = best(&big);
+        let e_small = best(&small);
+        assert!(
+            e_small.total_energy_fj() < e_big.total_energy_fj(),
+            "small {} fJ !< big {} fJ",
+            e_small.total_energy_fj(),
+            e_big.total_energy_fj()
+        );
+    }
+
+    #[test]
+    fn latency_roofline_switches_to_memory_bound() {
+        // pointwise with huge K on a bandwidth-starved hierarchy
+        let l = Layer::pointwise("pw", 24, 24, 256, 256);
+        let mut s = sys(ImcFamily::Dimc, 256, 256, 4);
+        s.hierarchy.levels[0].bw_bits_per_cycle = 1; // starve the buffer
+        let e = eval_first(&l, &s, TemporalPolicy::WeightStationary);
+        let compute = e.tiles.mvms as f64 * s.imc.cycles_per_mvm() as f64;
+        assert!(e.cycles > compute, "not memory bound: {} vs {compute}", e.cycles);
+    }
+}

@@ -1,0 +1,253 @@
+//! The DSE engine: enumerate (spatial × temporal) mappings per layer,
+//! evaluate in parallel, pick the best per objective, aggregate per
+//! network — the rust counterpart of integrating the model into ZigZag
+//! (paper §VI).
+
+use crate::arch::ImcSystem;
+use crate::mapping::{candidates, TemporalPolicy, ALL_POLICIES};
+use crate::model::{EnergyBreakdown, TechParams};
+use crate::util::pool::parallel_map;
+use crate::workload::{Layer, Network};
+
+use super::cost::{evaluate, MappingEval, DEFAULT_SPARSITY};
+use super::reuse::TrafficEnergy;
+
+/// Optimization objective for mapping selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Energy,
+    Latency,
+    /// Energy–delay product.
+    Edp,
+}
+
+impl Objective {
+    fn score(&self, e: &MappingEval) -> f64 {
+        match self {
+            Objective::Energy => e.total_energy_fj(),
+            Objective::Latency => e.time_ns,
+            Objective::Edp => e.edp(),
+        }
+    }
+}
+
+/// Best mapping found for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    pub layer: Layer,
+    pub best: MappingEval,
+    /// Number of mapping points evaluated.
+    pub evaluated: usize,
+}
+
+/// Aggregated result for a whole network on one system.
+#[derive(Debug, Clone)]
+pub struct NetworkResult {
+    pub system: String,
+    pub network: String,
+    pub layers: Vec<LayerResult>,
+}
+
+impl NetworkResult {
+    pub fn total_energy_fj(&self) -> f64 {
+        self.layers.iter().map(|l| l.best.total_energy_fj()).sum()
+    }
+
+    pub fn total_time_ns(&self) -> f64 {
+        self.layers.iter().map(|l| l.best.time_ns).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.layer.macs()).sum()
+    }
+
+    /// Network-level efficiency (TOP/s/W) including memory traffic.
+    pub fn effective_tops_per_watt(&self) -> f64 {
+        2.0e3 * self.total_macs() as f64 / self.total_energy_fj()
+    }
+
+    /// Sum of the macro-level energy breakdowns (Fig. 7 stacks).
+    pub fn macro_breakdown(&self) -> EnergyBreakdown {
+        let mut acc = EnergyBreakdown::default();
+        for l in &self.layers {
+            acc.add(&l.best.macro_energy);
+        }
+        acc
+    }
+
+    /// Sum of the traffic energies (Fig. 7 data-transfer panel).
+    pub fn traffic_breakdown(&self) -> TrafficEnergy {
+        let mut gb = 0.0;
+        let mut dram = 0.0;
+        for l in &self.layers {
+            gb += l.best.traffic.gb_fj;
+            dram += l.best.traffic.dram_fj;
+        }
+        TrafficEnergy {
+            gb_fj: gb,
+            dram_fj: dram,
+        }
+    }
+
+    /// MAC-weighted mean array utilization.
+    pub fn mean_utilization(&self) -> f64 {
+        let total: f64 = self.total_macs() as f64;
+        self.layers
+            .iter()
+            .map(|l| l.best.utilization * l.layer.macs() as f64)
+            .sum::<f64>()
+            / total
+    }
+}
+
+/// DSE configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DseOptions {
+    pub objective: Objective,
+    pub input_sparsity: f64,
+    /// Restrict the temporal policies searched (None = all).
+    pub policy: Option<TemporalPolicy>,
+}
+
+impl Default for DseOptions {
+    fn default() -> Self {
+        DseOptions {
+            objective: Objective::Energy,
+            input_sparsity: DEFAULT_SPARSITY,
+            policy: None,
+        }
+    }
+}
+
+/// Search the best mapping for one layer.
+pub fn search_layer(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    opts: &DseOptions,
+) -> LayerResult {
+    let spatials = candidates(layer, sys);
+    let policies: Vec<TemporalPolicy> = match opts.policy {
+        Some(p) => vec![p],
+        None => ALL_POLICIES.to_vec(),
+    };
+    let mut best: Option<MappingEval> = None;
+    let mut evaluated = 0;
+    for sp in &spatials {
+        for &p in &policies {
+            let e = evaluate(layer, sys, tech, sp, p, opts.input_sparsity);
+            evaluated += 1;
+            let better = match &best {
+                None => true,
+                Some(b) => opts.objective.score(&e) < opts.objective.score(b),
+            };
+            if better {
+                best = Some(e);
+            }
+        }
+    }
+    LayerResult {
+        layer: layer.clone(),
+        best: best.expect("at least one mapping candidate"),
+        evaluated,
+    }
+}
+
+/// Run the DSE for a whole network (layers evaluated in parallel).
+pub fn search_network(
+    net: &Network,
+    sys: &ImcSystem,
+    opts: &DseOptions,
+) -> NetworkResult {
+    let tech = TechParams::for_node(sys.imc.tech_nm);
+    let layers = parallel_map(&net.layers, |l| search_layer(l, sys, &tech, opts));
+    NetworkResult {
+        system: sys.name.clone(),
+        network: net.name.clone(),
+        layers,
+    }
+}
+
+/// Evaluate several systems on several networks (the Fig. 7 grid).
+pub fn case_study(
+    systems: &[ImcSystem],
+    networks: &[Network],
+    opts: &DseOptions,
+) -> Vec<NetworkResult> {
+    let mut out = Vec::new();
+    for net in networks {
+        for sys in systems {
+            out.push(search_network(net, sys, opts));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::table2_systems;
+    use crate::workload::{deep_autoencoder, ds_cnn, resnet8};
+
+    #[test]
+    fn search_layer_picks_minimum() {
+        let systems = table2_systems();
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let tech = TechParams::for_node(28.0);
+        let opts = DseOptions::default();
+        let r = search_layer(&l, &systems[0], &tech, &opts);
+        assert!(r.evaluated >= 3);
+        // exhaustively verify minimality
+        for sp in candidates(&l, &systems[0]) {
+            for p in ALL_POLICIES {
+                let e = evaluate(&l, &systems[0], &tech, &sp, p, 0.5);
+                assert!(
+                    r.best.total_energy_fj() <= e.total_energy_fj() * (1.0 + 1e-12),
+                    "found better point"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn network_result_aggregates() {
+        let systems = table2_systems();
+        let net = resnet8();
+        let r = search_network(&net, &systems[0], &DseOptions::default());
+        assert_eq!(r.layers.len(), net.layers.len());
+        assert!(r.total_energy_fj() > 0.0);
+        assert_eq!(r.total_macs(), net.total_macs());
+        let sum: f64 = r.layers.iter().map(|l| l.best.total_energy_fj()).sum();
+        assert!((sum - r.total_energy_fj()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_objective_never_slower_than_energy_objective() {
+        let systems = table2_systems();
+        let net = ds_cnn();
+        let e = search_network(&net, &systems[1], &DseOptions::default());
+        let l = search_network(
+            &net,
+            &systems[1],
+            &DseOptions {
+                objective: Objective::Latency,
+                ..Default::default()
+            },
+        );
+        assert!(l.total_time_ns() <= e.total_time_ns() * (1.0 + 1e-9));
+        assert!(e.total_energy_fj() <= l.total_energy_fj() * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn autoencoder_pays_weight_traffic_on_large_aimc() {
+        // §VI: AE is all-dense, no weight reuse across cycles → weight
+        // transfers dominate the traffic of the large-array design.
+        let systems = table2_systems();
+        let r = search_network(&deep_autoencoder(), &systems[0], &DseOptions::default());
+        let t = r.traffic_breakdown();
+        assert!(t.total_fj() > 0.0);
+        let w_reads: f64 = r.layers.iter().map(|l| l.best.accesses.weight_gb_reads).sum();
+        let i_reads: f64 = r.layers.iter().map(|l| l.best.accesses.input_gb_reads).sum();
+        assert!(w_reads > i_reads, "weights {w_reads} !> inputs {i_reads}");
+    }
+}

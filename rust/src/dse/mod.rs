@@ -1,0 +1,14 @@
+//! Design-space exploration: reuse analysis, cost evaluation, mapping
+//! search and Pareto utilities (the ZigZag-integration of paper §VI).
+
+pub mod cost;
+pub mod engine;
+pub mod pareto;
+pub mod reuse;
+
+pub use cost::{evaluate, MappingEval, DEFAULT_SPARSITY};
+pub use engine::{
+    case_study, search_layer, search_network, DseOptions, LayerResult, NetworkResult, Objective,
+};
+pub use pareto::pareto_front;
+pub use reuse::{access_counts, psum_bits, traffic_energy_fj, AccessCounts, TrafficEnergy};

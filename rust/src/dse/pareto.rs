@@ -1,0 +1,54 @@
+//! Pareto-front utilities over (energy, latency) mapping points.
+
+/// Returns the indices of the Pareto-optimal points (minimizing both
+/// coordinates). Stable: preserves input order among non-dominated points.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut out = Vec::new();
+    'outer: for (i, &(e_i, t_i)) in points.iter().enumerate() {
+        for (j, &(e_j, t_j)) in points.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let dominates = e_j <= e_i && t_j <= t_i && (e_j < e_i || t_j < t_i);
+            if dominates {
+                continue 'outer;
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_front() {
+        let pts = [(1.0, 10.0), (2.0, 5.0), (3.0, 6.0), (0.5, 20.0)];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 3]); // (3,6) dominated by (2,5)
+    }
+
+    #[test]
+    fn duplicates_both_kept() {
+        let pts = [(1.0, 1.0), (1.0, 1.0)];
+        assert_eq!(pareto_front(&pts).len(), 2);
+    }
+
+    #[test]
+    fn single_point() {
+        assert_eq!(pareto_front(&[(4.0, 2.0)]), vec![0]);
+    }
+
+    #[test]
+    fn empty() {
+        assert!(pareto_front(&[]).is_empty());
+    }
+
+    #[test]
+    fn strictly_dominated_removed() {
+        let pts = [(1.0, 1.0), (2.0, 2.0)];
+        assert_eq!(pareto_front(&pts), vec![0]);
+    }
+}

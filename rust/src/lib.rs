@@ -1,0 +1,42 @@
+//! # imcsim — analog/digital SRAM in-memory-computing benchmarking & DSE
+//!
+//! Rust implementation of the system described in *"Benchmarking and
+//! modeling of analog and digital SRAM in-memory computing architectures"*
+//! (P. Houshmand, J. Sun, M. Verhelst — MICAS KU Leuven, 2023):
+//!
+//! * [`arch`] — hardware templates: IMC macro geometry, memory hierarchy,
+//!   multi-macro systems (paper Fig. 3, Table II).
+//! * [`model`] — the unified analytical cost model for AIMC and DIMC
+//!   (paper §IV, Eqs. 1–11), with technology scaling (Fig. 6), an area
+//!   and latency model, and the validation harness (Fig. 5).
+//! * [`workload`] — the 8-nested-loop DNN layer algebra (Fig. 1) and the
+//!   tinyMLPerf model zoo used by the case studies.
+//! * [`mapping`] — spatial unrolling (K → columns, C/FX/FY → rows,
+//!   OX/OY/G → macros) and temporal loop ordering.
+//! * [`dse`] — the ZigZag-style design-space-exploration engine: data
+//!   reuse analysis, per-memory-level access counting, mapping search,
+//!   cost evaluation (paper §VI, Fig. 7).
+//! * [`db`] — the survey database of published AIMC/DIMC silicon
+//!   (paper §III, Fig. 4) with provenance-tagged reported metrics.
+//! * [`runtime`] — PJRT loader executing the AOT-compiled functional
+//!   macro simulator (JAX/Pallas, built once by `make artifacts`).
+//! * [`coordinator`] — the serving layer: tile scheduler + batcher that
+//!   runs real inference through the functional macro artifacts.
+//! * [`report`] — text/CSV renderers regenerating every paper figure.
+//!
+//! Python is build-time only: the rust binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod arch;
+pub mod coordinator;
+pub mod util;
+pub mod db;
+pub mod dse;
+pub mod mapping;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod workload;
+
+pub use arch::{ImcFamily, ImcMacro, ImcSystem};
+pub use model::{EnergyBreakdown, MacroOpCounts, TechParams};

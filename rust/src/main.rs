@@ -1,0 +1,462 @@
+//! `imcsim` — the launcher.
+//!
+//! Subcommands regenerate every table/figure of the paper, run the DSE,
+//! validate the model against the silicon survey, and serve functional
+//! inference through the AOT-compiled macro artifacts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use imcsim::arch::{load_system, table2_systems, ImcFamily};
+use imcsim::coordinator::{Tensor4, Tiler, TinyCnn};
+use imcsim::dse::{search_network, DseOptions, Objective};
+use imcsim::mapping::TemporalPolicy;
+use imcsim::report::{
+    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, table2_text, Table,
+};
+use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
+use imcsim::util::cli::Args;
+use imcsim::util::prng::Rng;
+
+const HELP: &str = "\
+imcsim — benchmarking & modeling of analog/digital SRAM in-memory computing
+(reproduction of Houshmand, Sun, Verhelst 2023)
+
+USAGE: imcsim <command> [options]
+
+Paper artifacts:
+  fig1                 operator breakdown of the tinyMLPerf models
+  fig4                 survey scatter: TOP/s/W vs TOP/s/mm2
+  fig5 [--family aimc|dimc]
+                       model validation vs reported silicon
+  fig6                 technology parameter extraction (C_inv, k3)
+  fig7 [--csv FILE]    case study: 4 systems x 4 tinyMLPerf networks
+  table2               case-study architecture table
+  validate             aggregate model-vs-silicon mismatch statistics
+
+Exploration & serving:
+  dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
+      [--objective energy|latency|edp] [--policy ws|os|is] [--sparsity F]
+                       per-layer optimal mappings for one network
+  serve [--design aimc_large|...] [--images N]
+                       run the functional TinyCNN through the PJRT
+                       artifacts; reports accuracy vs exact + throughput
+  sweep --network <ae|resnet8|dscnn|mobilenet> [--family aimc|dimc]
+      [--cells N]      architecture sweep at equal SRAM budget;
+                       prints the (energy, latency) Pareto front
+  artifacts            show the AOT artifact manifest
+
+Options:
+  --artifacts DIR      artifact directory (default: ./artifacts or $IMCSIM_ARTIFACTS)
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("fig1") => {
+            println!("{}", fig1_text());
+            0
+        }
+        Some("fig4") => {
+            println!("{}", fig4_text());
+            0
+        }
+        Some("fig5") => {
+            let family = match args.opt("family") {
+                Some("aimc") => Some(ImcFamily::Aimc),
+                Some("dimc") => Some(ImcFamily::Dimc),
+                None => None,
+                Some(other) => {
+                    eprintln!("unknown family '{other}'");
+                    std::process::exit(2);
+                }
+            };
+            println!("{}", fig5_text(family));
+            0
+        }
+        Some("fig6") => {
+            println!("{}", fig6_text());
+            0
+        }
+        Some("fig7") => cmd_fig7(&args),
+        Some("table2") => {
+            println!("{}", table2_text());
+            0
+        }
+        Some("validate") => cmd_validate(),
+        Some("dse") => cmd_dse(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => {
+            println!("{HELP}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_fig7(args: &Args) -> i32 {
+    let t0 = Instant::now();
+    let results = fig7_results();
+    println!("{}", fig7_text(&results));
+    println!("(evaluated in {:.2}s)", t0.elapsed().as_secs_f64());
+    if let Some(path) = args.opt("csv") {
+        let mut t = Table::new(&["network", "system", "total_fj", "time_ns", "tops_w", "util"]);
+        for r in &results {
+            t.row(vec![
+                r.network.clone(),
+                r.system.clone(),
+                format!("{}", r.total_energy_fj()),
+                format!("{}", r.total_time_ns()),
+                format!("{}", r.effective_tops_per_watt()),
+                format!("{}", r.mean_utilization()),
+            ]);
+        }
+        if let Err(e) = std::fs::write(path, t.to_csv()) {
+            eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_validate() -> i32 {
+    for (family, label) in [
+        (Some(ImcFamily::Aimc), "AIMC (Fig. 5a)"),
+        (Some(ImcFamily::Dimc), "DIMC (Fig. 5b)"),
+        (None, "overall"),
+    ] {
+        let s = imcsim::db::validation_stats(family);
+        println!(
+            "{label:16} n={} within15%={} median={:.1}% mean={:.1}% max={:.1}%",
+            s.n,
+            s.n_within_15pct,
+            s.median_mismatch * 100.0,
+            s.mean_mismatch * 100.0,
+            s.max_mismatch * 100.0
+        );
+    }
+    0
+}
+
+fn cmd_dse(args: &Args) -> i32 {
+    let net = match args.opt("network") {
+        Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
+        Some("resnet8") => imcsim::workload::resnet8(),
+        Some("dscnn") | Some("ds-cnn") => imcsim::workload::ds_cnn(),
+        Some("mobilenet") => imcsim::workload::mobilenet_v1(),
+        other => {
+            eprintln!("--network must be ae|resnet8|dscnn|mobilenet (got {other:?})");
+            return 2;
+        }
+    };
+    let systems = if let Some(cfg) = args.opt("config") {
+        match load_system(&PathBuf::from(cfg)) {
+            Ok(s) => vec![s],
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        let all = table2_systems();
+        match args.opt("system") {
+            Some(name) => match all.into_iter().find(|s| s.name == name) {
+                Some(s) => vec![s],
+                None => {
+                    eprintln!("unknown system '{name}'");
+                    return 2;
+                }
+            },
+            None => all,
+        }
+    };
+    let objective = match args.opt_or("objective", "energy") {
+        "energy" => Objective::Energy,
+        "latency" => Objective::Latency,
+        "edp" => Objective::Edp,
+        other => {
+            eprintln!("unknown objective '{other}'");
+            return 2;
+        }
+    };
+    let policy = match args.opt("policy") {
+        Some("ws") => Some(TemporalPolicy::WeightStationary),
+        Some("os") => Some(TemporalPolicy::OutputStationary),
+        Some("is") => Some(TemporalPolicy::InputStationary),
+        None => None,
+        Some(other) => {
+            eprintln!("unknown policy '{other}'");
+            return 2;
+        }
+    };
+    let sparsity: f64 = args
+        .opt("sparsity")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    let opts = DseOptions {
+        objective,
+        input_sparsity: sparsity,
+        policy,
+    };
+    for sys in &systems {
+        let t0 = Instant::now();
+        let r = search_network(&net, sys, &opts);
+        println!(
+            "\n=== {} on {} ({} layers, {:.1} ms search) ===",
+            r.network,
+            r.system,
+            r.layers.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let mut t = Table::new(&[
+            "layer", "type", "MACs", "policy", "macros", "util", "E_macro[nJ]", "E_mem[nJ]",
+            "t[us]", "TOP/s/W",
+        ]);
+        for l in &r.layers {
+            let b = &l.best;
+            t.row(vec![
+                l.layer.name.clone(),
+                l.layer.ltype.to_string(),
+                eng(l.layer.macs() as f64),
+                b.policy.as_str().into(),
+                b.tiles.active_macros.to_string(),
+                format!("{:.1}%", b.utilization * 100.0),
+                format!("{:.2}", b.macro_energy.total_fj() * 1e-6),
+                format!("{:.2}", b.traffic.total_fj() * 1e-6),
+                format!("{:.2}", b.time_ns * 1e-3),
+                format!("{:.0}", b.tops_per_watt()),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "total: E={:.2} uJ  t={:.2} ms  eff={:.1} TOP/s/W  util={:.1}%",
+            r.total_energy_fj() * 1e-9,
+            r.total_time_ns() * 1e-6,
+            r.effective_tops_per_watt(),
+            r.mean_utilization() * 100.0
+        );
+    }
+    0
+}
+
+/// Architecture sweep: enumerate macro geometries at a fixed total
+/// SRAM-cell budget, evaluate the chosen network on each, and report
+/// the (energy, latency) Pareto-optimal design points — the "optimal
+/// design points for targeted tinyMLperf workloads" use of the model.
+fn cmd_sweep(args: &Args) -> i32 {
+    use imcsim::arch::{ImcFamily, ImcMacro, ImcSystem};
+    use imcsim::dse::pareto_front;
+
+    let net = match args.opt("network") {
+        Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
+        Some("resnet8") => imcsim::workload::resnet8(),
+        Some("dscnn") | Some("ds-cnn") => imcsim::workload::ds_cnn(),
+        Some("mobilenet") => imcsim::workload::mobilenet_v1(),
+        other => {
+            eprintln!("--network must be ae|resnet8|dscnn|mobilenet (got {other:?})");
+            return 2;
+        }
+    };
+    let families: Vec<ImcFamily> = match args.opt("family") {
+        Some("aimc") => vec![ImcFamily::Aimc],
+        Some("dimc") => vec![ImcFamily::Dimc],
+        None => vec![ImcFamily::Aimc, ImcFamily::Dimc],
+        Some(other) => {
+            eprintln!("unknown family '{other}'");
+            return 2;
+        }
+    };
+    let cells: usize = args
+        .opt("cells")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1152 * 256);
+
+    // geometry grid: rows x cols per macro, 4b/4b, macro count from the
+    // cell budget (the Table II normalization)
+    let rows_grid = [48usize, 64, 128, 256, 512, 1152];
+    let cols_grid = [4usize, 32, 64, 128, 256];
+    let mut points = Vec::new();
+    let t0 = Instant::now();
+    for family in &families {
+        for &rows in &rows_grid {
+            for &cols in &cols_grid {
+                let (dac, adc) = match family {
+                    ImcFamily::Aimc => (4, 8),
+                    ImcFamily::Dimc => (1, 0),
+                };
+                let m = ImcMacro::new(
+                    &format!("{}_{rows}x{cols}", family.as_str().to_lowercase()),
+                    *family, rows, cols, 4, 4, dac, adc, 0.8, 28.0,
+                );
+                if m.validate().is_err() {
+                    continue;
+                }
+                let name = m.name.clone();
+                let sys = ImcSystem::new(&name, m, 1).normalized_to_cells(cells);
+                let r = search_network(&net, &sys, &DseOptions::default());
+                // Pareto energy axis: macro + buffer level (DRAM traffic
+                // is geometry-independent and would flatten the sweep)
+                let e_macro = r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj;
+                points.push((
+                    name,
+                    sys.n_macros,
+                    e_macro,
+                    r.total_time_ns(),
+                    r.mean_utilization(),
+                ));
+            }
+        }
+    }
+    let et: Vec<(f64, f64)> = points.iter().map(|p| (p.2, p.3)).collect();
+    let front = pareto_front(&et);
+    let mut t = Table::new(&[
+        "design", "macros", "E_macro+GB [uJ]", "t [us]", "util", "pareto",
+    ]);
+    let mut sorted: Vec<usize> = (0..points.len()).collect();
+    sorted.sort_by(|&a, &b| points[a].2.partial_cmp(&points[b].2).unwrap());
+    for i in sorted {
+        let p = &points[i];
+        t.row(vec![
+            p.0.clone(),
+            p.1.to_string(),
+            format!("{:.3}", p.2 * 1e-9),
+            format!("{:.1}", p.3 * 1e-3),
+            format!("{:.1}%", p.4 * 100.0),
+            if front.contains(&i) { "*".into() } else { String::new() },
+        ]);
+    }
+    println!(
+        "architecture sweep: {} on {} geometries at {} cells ({:.2}s)
+",
+        net.name,
+        points.len(),
+        cells,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", t.render());
+    println!("(* = (energy, latency) Pareto-optimal at equal SRAM budget)");
+    0
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir)
+}
+
+fn cmd_artifacts(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    match load_manifest(&dir) {
+        Ok(m) => {
+            println!("artifacts in {} (batch tile {}):", dir.display(), m.batch);
+            for (name, d) in &m.designs {
+                println!(
+                    "  {name:12} {}  {}x{} (D1={})  {}b/{}b  dac={} adc={}  [{} | {}]",
+                    d.config.family,
+                    d.config.rows,
+                    d.config.d1 * d.config.weight_bits as usize,
+                    d.config.d1,
+                    d.config.act_bits,
+                    d.config.weight_bits,
+                    d.config.dac_res,
+                    d.config.adc_res,
+                    d.mvm.path.file_name().unwrap().to_string_lossy(),
+                    d.reference.path.file_name().unwrap().to_string_lossy(),
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}\nrun `make artifacts` first");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    let design = args.opt_or("design", "aimc_large").to_string();
+    let images: usize = args
+        .opt("images")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    match serve(&dir, &design, images) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn serve(dir: &PathBuf, design: &str, images: usize) -> anyhow::Result<()> {
+    let manifest = load_manifest(dir)?;
+    let engine = Arc::new(Engine::new(manifest)?);
+    println!(
+        "PJRT platform: {} | design: {design} | images: {images}",
+        engine.platform()
+    );
+    let d = engine.design(design)?;
+    let act_bits = d.config.act_bits;
+    let net = TinyCnn::random(42, 16, act_bits, d.config.weight_bits);
+    let tiler = Tiler::new(&engine, design)?;
+
+    let mut rng = Rng::new(7);
+    let batch = engine.batch();
+    let mut done = 0usize;
+    let mut agree = 0usize;
+    let mut mvms = 0u64;
+    let t0 = Instant::now();
+    while done < images {
+        let b = batch.min(images - done);
+        let x = Tensor4::random(&mut rng, b, net.image, net.image, 1, act_bits);
+        let (_, preds, st) = net.forward(&tiler, &x, Kind::Macro)?;
+        let (_, preds_ref, _) = net.forward(&tiler, &x, Kind::Reference)?;
+        agree += preds
+            .iter()
+            .zip(&preds_ref)
+            .filter(|(a, b)| a == b)
+            .count();
+        mvms += st.mvms;
+        done += b;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    // analytical energy estimate for this workload on the matching system
+    let sys = table2_systems().into_iter().find(|s| s.name == design);
+    let energy_note = match sys {
+        Some(sys) => {
+            let tech = imcsim::model::TechParams::for_node(sys.imc.tech_nm);
+            let per_mac = imcsim::model::peak_energy_per_mac_fj(&sys.imc, &tech, 0.5);
+            let e_inf = per_mac * net.macs_per_image() as f64;
+            format!(
+                "analytical macro energy: {:.2} fJ/MAC -> {:.2} nJ/inference (peak-mapping bound)",
+                per_mac,
+                e_inf * 1e-6
+            )
+        }
+        None => String::new(),
+    };
+    println!(
+        "served {done} images in {dt:.2}s ({:.1} img/s, {:.0} MACs/img, {mvms} macro MVMs)",
+        done as f64 / dt,
+        net.macs_per_image() as f64
+    );
+    println!(
+        "AIMC-vs-exact prediction agreement: {}/{} ({:.1}%)",
+        agree,
+        done,
+        agree as f64 / done as f64 * 100.0
+    );
+    if !energy_note.is_empty() {
+        println!("{energy_note}");
+    }
+    Ok(())
+}

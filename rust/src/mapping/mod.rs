@@ -1,0 +1,8 @@
+//! Spatial + temporal mapping of DNN layers onto IMC systems
+//! (paper §II-A dataflow concepts).
+
+pub mod spatial;
+pub mod temporal;
+
+pub use spatial::{candidates, SpatialMapping, Unroll};
+pub use temporal::{tile, weight_loads, TemporalPolicy, TileCounts, ALL_POLICIES};

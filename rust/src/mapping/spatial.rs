@@ -1,0 +1,344 @@
+//! Spatial mapping: unrolling layer loops across the IMC array axes and
+//! across macros (paper §II-A, Fig. 2).
+//!
+//! Physical constraints of the IMC template:
+//!
+//! * **columns (D1)** — multicast axis: loops *irrelevant to the input*
+//!   (K) so one activation drives many weights. DIMC's reconfigurable
+//!   periphery additionally allows G here (depthwise-friendly), one of
+//!   the flexibility advantages the paper attributes to DIMC.
+//! * **rows (D2)** — accumulation axis: loops *irrelevant to the output*
+//!   (C, FX, FY) so bitline/adder-tree accumulation is a true reduction.
+//! * **macros** — chip-level parallelism: OX, OY or G are replicated
+//!   across macros at the cost of weight duplication (paper §II-A); K
+//!   can also be split across macros (no duplication).
+
+use crate::arch::{ImcFamily, ImcSystem};
+use crate::workload::{Layer, LoopDim};
+
+/// One unrolled loop: dimension and unroll factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Unroll {
+    pub dim: LoopDim,
+    pub factor: usize,
+}
+
+/// A complete spatial mapping for one layer on one system.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SpatialMapping {
+    /// Unrolls along the accumulation axis (array rows, D2).
+    pub rows: Vec<Unroll>,
+    /// Unrolls along the multicast axis (array columns, D1).
+    pub cols: Vec<Unroll>,
+    /// Unrolls across macros.
+    pub macros: Vec<Unroll>,
+}
+
+impl SpatialMapping {
+    fn product(unrolls: &[Unroll]) -> usize {
+        unrolls.iter().map(|u| u.factor).product::<usize>().max(1)
+    }
+
+    /// Rows of the array filled by this mapping.
+    pub fn rows_used(&self) -> usize {
+        Self::product(&self.rows)
+    }
+
+    /// Weight operands per row filled by this mapping.
+    pub fn cols_used(&self) -> usize {
+        Self::product(&self.cols)
+    }
+
+    /// Macros running in parallel.
+    pub fn macros_used(&self) -> usize {
+        Self::product(&self.macros)
+    }
+
+    /// Spatial unroll factor of a given loop dimension (1 if temporal).
+    pub fn factor(&self, dim: LoopDim) -> usize {
+        self.rows
+            .iter()
+            .chain(&self.cols)
+            .chain(&self.macros)
+            .filter(|u| u.dim == dim)
+            .map(|u| u.factor)
+            .product::<usize>()
+            .max(1)
+    }
+
+    /// True if weights are duplicated across macros (OX/OY/B unrolled
+    /// there — paper §II-A "requiring, however, duplication of weights").
+    pub fn duplicates_weights(&self) -> bool {
+        self.macros
+            .iter()
+            .any(|u| u.factor > 1 && u.dim.weight_irrelevant())
+    }
+
+    /// Validate against the physical array and the layer bounds.
+    pub fn validate(&self, layer: &Layer, sys: &ImcSystem) -> Result<(), String> {
+        if self.rows_used() > sys.imc.rows {
+            return Err(format!(
+                "row unroll {} exceeds array rows {}",
+                self.rows_used(),
+                sys.imc.rows
+            ));
+        }
+        if self.cols_used() > sys.imc.d1() {
+            return Err(format!(
+                "col unroll {} exceeds D1 {}",
+                self.cols_used(),
+                sys.imc.d1()
+            ));
+        }
+        if self.macros_used() > sys.n_macros {
+            return Err(format!(
+                "macro unroll {} exceeds {} macros",
+                self.macros_used(),
+                sys.n_macros
+            ));
+        }
+        for u in self.rows.iter().chain(&self.cols).chain(&self.macros) {
+            if u.factor == 0 || u.factor > layer.size(u.dim) {
+                return Err(format!(
+                    "unroll {}={} out of bounds (dim size {})",
+                    u.dim,
+                    u.factor,
+                    layer.size(u.dim)
+                ));
+            }
+        }
+        // axis legality
+        for u in &self.rows {
+            if !u.dim.output_irrelevant() {
+                return Err(format!("{} cannot map to rows (not a reduction loop)", u.dim));
+            }
+        }
+        for u in &self.cols {
+            let dimc_flex = sys.imc.family == ImcFamily::Dimc && u.dim == LoopDim::G;
+            if !u.dim.input_irrelevant() && !dimc_flex {
+                return Err(format!("{} cannot map to columns", u.dim));
+            }
+        }
+        for u in &self.macros {
+            if !matches!(u.dim, LoopDim::OX | LoopDim::OY | LoopDim::G | LoopDim::K | LoopDim::B) {
+                return Err(format!("{} cannot map across macros", u.dim));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Greedily fill the array rows with the reduction loops C → FY → FX
+/// (paper Fig. 2 ordering). Returns the unrolls and the filled factor.
+fn fill_rows(layer: &Layer, capacity: usize) -> Vec<Unroll> {
+    let mut unrolls = Vec::new();
+    let mut cap = capacity.max(1);
+    for dim in [LoopDim::C, LoopDim::FY, LoopDim::FX] {
+        let size = layer.size(dim);
+        if size <= 1 {
+            continue;
+        }
+        let f = size.min(cap);
+        if f > 1 {
+            unrolls.push(Unroll { dim, factor: f });
+            cap /= f;
+        }
+        if cap <= 1 {
+            break;
+        }
+    }
+    unrolls
+}
+
+/// Enumerate candidate spatial mappings for `layer` on `sys`.
+///
+/// The candidate set covers the design space the paper discusses:
+/// rows always greedily filled with C/FY/FX; columns with K (or G for
+/// DIMC depthwise); macro-level parallelism over each of OX / OY / G /
+/// K / OX×OY. Typically 4–10 candidates per layer.
+pub fn candidates(layer: &Layer, sys: &ImcSystem) -> Vec<SpatialMapping> {
+    let d1 = sys.imc.d1();
+    let rows = fill_rows(layer, sys.imc.rows);
+    let mut cols_options: Vec<Vec<Unroll>> = Vec::new();
+
+    let k_fill = layer.k.min(d1);
+    if k_fill > 1 {
+        cols_options.push(vec![Unroll {
+            dim: LoopDim::K,
+            factor: k_fill,
+        }]);
+    }
+    // DIMC flexibility: depthwise groups across columns
+    if sys.imc.family == ImcFamily::Dimc && layer.g > 1 {
+        let g_fill = layer.g.min(d1);
+        if g_fill > 1 {
+            cols_options.push(vec![Unroll {
+                dim: LoopDim::G,
+                factor: g_fill,
+            }]);
+        }
+    }
+    if cols_options.is_empty() {
+        cols_options.push(Vec::new()); // K = 1 and no flex: single column used
+    }
+
+    // macro-level options
+    let nm = sys.n_macros;
+    let mut macro_options: Vec<Vec<Unroll>> = vec![Vec::new()];
+    if nm > 1 {
+        let push = |opts: &mut Vec<Vec<Unroll>>, dim: LoopDim, size: usize| {
+            let f = size.min(nm);
+            if f > 1 {
+                opts.push(vec![Unroll { dim, factor: f }]);
+            }
+        };
+        push(&mut macro_options, LoopDim::OX, layer.ox);
+        push(&mut macro_options, LoopDim::OY, layer.oy);
+        push(&mut macro_options, LoopDim::G, layer.g);
+        // K across macros only when K overflows one macro's columns
+        if layer.k > d1 {
+            push(&mut macro_options, LoopDim::K, (layer.k / d1).max(2).min(layer.k));
+        }
+        // 2D spatial tiling OX × OY
+        if layer.ox > 1 && layer.oy > 1 && nm >= 4 {
+            let side = (nm as f64).sqrt().floor() as usize;
+            let fx = layer.ox.min(side);
+            let fy = layer.oy.min(side);
+            if fx > 1 && fy > 1 {
+                macro_options.push(vec![
+                    Unroll { dim: LoopDim::OX, factor: fx },
+                    Unroll { dim: LoopDim::OY, factor: fy },
+                ]);
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for cols in &cols_options {
+        for macros in &macro_options {
+            // avoid G on both cols and macros
+            let g_twice = cols.iter().any(|u| u.dim == LoopDim::G)
+                && macros.iter().any(|u| u.dim == LoopDim::G);
+            if g_twice {
+                continue;
+            }
+            let m = SpatialMapping {
+                rows: rows.clone(),
+                cols: cols.clone(),
+                macros: macros.clone(),
+            };
+            debug_assert!(m.validate(layer, sys).is_ok(), "{:?}", m.validate(layer, sys));
+            out.push(m);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ImcFamily, ImcMacro};
+
+    fn sys(family: ImcFamily, rows: usize, cols: usize, n: usize) -> ImcSystem {
+        let (adc, dac) = match family {
+            ImcFamily::Aimc => (8, 4),
+            ImcFamily::Dimc => (0, 1),
+        };
+        ImcSystem::new(
+            "s",
+            ImcMacro::new("m", family, rows, cols, 4, 4, dac, adc, 0.8, 28.0),
+            n,
+        )
+    }
+
+    #[test]
+    fn conv_fills_rows_with_reduction_loops() {
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let cands = candidates(&l, &s);
+        assert!(!cands.is_empty());
+        let m = &cands[0];
+        // reduction 16*3*3 = 144 <= 1152: fully unrolled
+        assert_eq!(m.rows_used(), 144);
+        // K = 32 <= 64 columns
+        assert_eq!(m.cols_used(), 32);
+        m.validate(&l, &s).unwrap();
+    }
+
+    #[test]
+    fn row_capacity_caps_unroll() {
+        let l = Layer::conv2d("c", 16, 16, 32, 256, 3, 3, 1);
+        let s = sys(ImcFamily::Dimc, 48, 4, 8);
+        for m in candidates(&l, &s) {
+            assert!(m.rows_used() <= 48);
+            m.validate(&l, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn depthwise_on_aimc_wastes_columns() {
+        let l = Layer::depthwise("dw", 24, 24, 64, 3, 3, 1);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let cands = candidates(&l, &s);
+        // K = 1: only one operand column used on AIMC
+        assert!(cands.iter().all(|m| m.cols_used() == 1));
+    }
+
+    #[test]
+    fn depthwise_on_dimc_can_use_group_flex() {
+        let l = Layer::depthwise("dw", 24, 24, 64, 3, 3, 1);
+        let s = sys(ImcFamily::Dimc, 48, 256, 1);
+        let cands = candidates(&l, &s);
+        // DIMC flexibility: some candidate maps G across columns
+        assert!(cands.iter().any(|m| m.cols_used() == 64));
+    }
+
+    #[test]
+    fn multi_macro_unrolls_spatial_dims() {
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let s = sys(ImcFamily::Dimc, 48, 4, 192);
+        let cands = candidates(&l, &s);
+        assert!(cands.iter().any(|m| m.factor(LoopDim::OX) > 1));
+        assert!(cands.iter().any(|m| m.macros.len() == 2)); // OX x OY tiling
+        for m in &cands {
+            assert!(m.macros_used() <= 192);
+            m.validate(&l, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn weight_duplication_detection() {
+        let m = SpatialMapping {
+            rows: vec![],
+            cols: vec![],
+            macros: vec![Unroll { dim: LoopDim::OX, factor: 4 }],
+        };
+        assert!(m.duplicates_weights());
+        let m2 = SpatialMapping {
+            rows: vec![],
+            cols: vec![],
+            macros: vec![Unroll { dim: LoopDim::K, factor: 4 }],
+        };
+        assert!(!m2.duplicates_weights());
+    }
+
+    #[test]
+    fn illegal_axis_rejected() {
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let m = SpatialMapping {
+            rows: vec![Unroll { dim: LoopDim::K, factor: 2 }], // K is not a reduction
+            cols: vec![],
+            macros: vec![],
+        };
+        assert!(m.validate(&l, &s).is_err());
+        // G on AIMC columns is illegal (no flex periphery)
+        let m2 = SpatialMapping {
+            rows: vec![],
+            cols: vec![Unroll { dim: LoopDim::G, factor: 2 }],
+            macros: vec![],
+        };
+        let dw = Layer::depthwise("dw", 8, 8, 4, 3, 3, 1);
+        assert!(m2.validate(&dw, &s).is_err());
+    }
+}

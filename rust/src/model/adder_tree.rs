@@ -1,0 +1,99 @@
+//! Adder-tree model (paper §IV-C, Eqs. 9–10).
+//!
+//! A binary reduction tree with `N` first-stage inputs of `B` bits each.
+//! Stage `n` (1-based) has `N / 2^n` adders of width `B + n - 1`, so the
+//! number of 1-bit full adders per complete reduction is
+//!
+//! ```text
+//! F = Σ_{n=1}^{log2 N} (B + n - 1) · N / 2^n  =  B·N + N − B + log2 N − 1
+//! ```
+
+/// Number of 1-bit full-adder operations per complete tree reduction
+/// (Eq. 10). `n_inputs` is rounded up to the next power of two, matching
+/// a physical tree with padded inputs.
+pub fn full_adders(n_inputs: usize, input_bits: u32) -> f64 {
+    if n_inputs <= 1 {
+        return 0.0;
+    }
+    let n = n_inputs.next_power_of_two() as f64;
+    let b = input_bits as f64;
+    b * n + n - b - n.log2() - 1.0
+}
+
+/// Closed-form check value via the explicit stage sum (used by tests and
+/// property checks; same rounding convention as [`full_adders`]).
+pub fn full_adders_stage_sum(n_inputs: usize, input_bits: u32) -> f64 {
+    if n_inputs <= 1 {
+        return 0.0;
+    }
+    let n = n_inputs.next_power_of_two();
+    let stages = (n as f64).log2() as u32;
+    let b = input_bits as f64;
+    let mut total = 0.0;
+    for stage in 1..=stages {
+        let adders = (n >> stage) as f64;
+        let width = b + stage as f64 - 1.0;
+        total += adders * width;
+    }
+    total
+}
+
+/// Tree depth in adder stages.
+pub fn depth(n_inputs: usize) -> u32 {
+    if n_inputs <= 1 {
+        0
+    } else {
+        (n_inputs.next_power_of_two() as f64).log2() as u32
+    }
+}
+
+/// Output width of the tree (bits): input width + log2(N) carry growth.
+pub fn output_bits(n_inputs: usize, input_bits: u32) -> u32 {
+    input_bits + depth(n_inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_stage_sum() {
+        for n in [2usize, 4, 8, 16, 64, 256, 1024] {
+            for b in [1u32, 4, 8, 12] {
+                let cf = full_adders(n, b);
+                let ss = full_adders_stage_sum(n, b);
+                assert!(
+                    (cf - ss).abs() < 1e-9,
+                    "N={n} B={b}: closed-form {cf} != stage sum {ss}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example_values() {
+        // Eq. 10 (sign-corrected) with N=64, B=4: 4*64 + 64 - 4 - 6 - 1 = 309
+        assert_eq!(full_adders(64, 4), 309.0);
+        // N=B_w=4, B=ADC_res=8 (AIMC recombination): 8*4+4-8-2-1 = 25
+        assert_eq!(full_adders(4, 8), 25.0);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(full_adders(0, 8), 0.0);
+        assert_eq!(full_adders(1, 8), 0.0);
+        assert_eq!(depth(1), 0);
+    }
+
+    #[test]
+    fn non_power_of_two_rounds_up() {
+        assert_eq!(full_adders(48, 4), full_adders(64, 4));
+        assert_eq!(depth(48), 6);
+    }
+
+    #[test]
+    fn output_width_growth() {
+        assert_eq!(output_bits(256, 4), 12);
+        assert_eq!(output_bits(2, 8), 9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Area model: SRAM array + cell-level compute overhead + peripherals.
+//!
+//! Used to derive the computational-density axis (TOP/s/mm²) of the
+//! survey (Fig. 4). Calibrated on foundry-reported 6T cell sizes
+//! (~150 F²) and the relative cell overheads the surveyed papers report:
+//! AIMC cells with local capacitors ≈ 1.8× a 6T cell, DIMC cells with the
+//! fused NAND multiplier ≈ 2.2×, plus per-column adder-tree /
+//! shift-accumulate logic.
+
+use crate::arch::{ImcFamily, ImcMacro};
+
+use super::adc;
+use super::adder_tree;
+use super::dac;
+
+/// 6T SRAM cell size in F² (feature-size-squared units).
+pub const SRAM_CELL_F2: f64 = 150.0;
+/// AIMC compute cell overhead vs plain 6T (local cap / switches).
+pub const AIMC_CELL_FACTOR: f64 = 1.8;
+/// DIMC compute cell overhead vs plain 6T (NAND multiplier per cell).
+pub const DIMC_CELL_FACTOR: f64 = 2.2;
+/// Area per logic gate in F² (std-cell NAND2 footprint incl. routing).
+pub const GATE_F2: f64 = 280.0;
+
+fn f2_to_um2(f2: f64, tech_nm: f64) -> f64 {
+    // 1 F² = (tech_nm * 1e-3 µm)²
+    f2 * (tech_nm * 1e-3) * (tech_nm * 1e-3)
+}
+
+/// Array (cell matrix) area in µm².
+pub fn array_area_um2(m: &ImcMacro) -> f64 {
+    let factor = match m.family {
+        ImcFamily::Aimc => AIMC_CELL_FACTOR,
+        ImcFamily::Dimc => DIMC_CELL_FACTOR,
+    };
+    f2_to_um2(SRAM_CELL_F2 * factor, m.tech_nm) * (m.rows * m.cols) as f64
+}
+
+/// Peripheral area in µm²: converters + digital accumulation.
+pub fn periphery_area_um2(m: &ImcMacro) -> f64 {
+    match m.family {
+        ImcFamily::Aimc => {
+            let n_adc = (m.d1() as u32 * m.weight_bits / m.cols_per_adc) as f64;
+            let n_dac = m.rows as f64;
+            let adc_a = adc::area_um2(m.adc_res, m.tech_nm) * n_adc;
+            let dac_a = dac::area_um2(m.dac_res, m.tech_nm) * n_dac;
+            // shift-add recombination tree per operand column
+            let f = adder_tree::full_adders(m.weight_bits as usize, m.adc_res);
+            let tree_a = f2_to_um2(GATE_F2, m.tech_nm) * f * super::tech::G_FA * m.d1() as f64;
+            adc_a + dac_a + tree_a
+        }
+        ImcFamily::Dimc => {
+            let f = adder_tree::full_adders(m.d2(), m.weight_bits);
+            f2_to_um2(GATE_F2, m.tech_nm) * f * super::tech::G_FA * m.d1() as f64
+        }
+    }
+}
+
+/// Total macro area in mm².
+pub fn macro_area_mm2(m: &ImcMacro) -> f64 {
+    (array_area_um2(m) + periphery_area_um2(m)) * 1e-6
+}
+
+/// Fraction of macro area spent on peripherals (the AIMC amortization
+/// argument of §II-B: a large array amortizes its converters).
+pub fn periphery_fraction(m: &ImcMacro) -> f64 {
+    periphery_area_um2(m) / (array_area_um2(m) + periphery_area_um2(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ImcFamily;
+
+    fn aimc(rows: usize, cols: usize) -> ImcMacro {
+        ImcMacro::new("a", ImcFamily::Aimc, rows, cols, 4, 4, 4, 8, 0.8, 28.0)
+    }
+
+    fn dimc(rows: usize, cols: usize) -> ImcMacro {
+        ImcMacro::new("d", ImcFamily::Dimc, rows, cols, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    #[test]
+    fn cell_area_calibration() {
+        // 28 nm 6T ≈ 150 * (0.028)² ≈ 0.1176 µm²; AIMC cell 1.8x
+        let m = aimc(1, 1);
+        assert!((array_area_um2(&m) - 0.2117).abs() < 0.01);
+    }
+
+    #[test]
+    fn large_array_amortizes_peripherals() {
+        let small = aimc(64, 256);
+        let large = aimc(1152, 256);
+        assert!(periphery_fraction(&large) < periphery_fraction(&small));
+    }
+
+    #[test]
+    fn dimc_has_no_converter_area() {
+        let d = dimc(256, 256);
+        // periphery = adder trees only; grows with D2
+        let d_small = dimc(64, 256);
+        assert!(periphery_area_um2(&d) > periphery_area_um2(&d_small));
+        let a = aimc(256, 256);
+        assert!(periphery_area_um2(&a) > periphery_area_um2(&dimc_same_node(&a)));
+    }
+
+    fn dimc_same_node(a: &ImcMacro) -> ImcMacro {
+        let mut d = a.clone();
+        d.family = ImcFamily::Dimc;
+        d.adc_res = 0;
+        d.dac_res = 1;
+        d
+    }
+
+    #[test]
+    fn area_scales_quadratically_with_node() {
+        let m28 = aimc(256, 256);
+        let mut m7 = m28.clone();
+        m7.tech_nm = 7.0;
+        let ratio = array_area_um2(&m28) / array_area_um2(&m7);
+        assert!((ratio - (28.0f64 / 7.0).powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn macro_area_plausible() {
+        // 1152x256 AIMC in 28nm: a fraction of a mm²
+        let a = macro_area_mm2(&aimc(1152, 256));
+        assert!((0.05..2.0).contains(&a), "area {a} mm2");
+    }
+}

@@ -1,0 +1,371 @@
+//! The unified AIMC/DIMC datapath energy model (paper §IV, Eqs. 1–11).
+//!
+//! ```text
+//! E_total = E_MUL + E_ACC + E_peripherals                         (Eq. 1)
+//! E_MUL   = E_cell + E_logic                                      (Eq. 2)
+//! E_cell  = (E_WL + E_BL) · CC_prech                              (Eq. 3)
+//! E_WL    = C_WL · V² · B_w · D1  [· active rows]                 (Eq. 4)
+//! E_BL    = C_BL · V² · B_w · D2 · M  [· D1 bitline groups]       (Eq. 5)
+//! E_logic = V² · C_gate · G_MUL · MACs          (DIMC only)       (Eq. 6)
+//! E_ACC   = E_ADC + E_adder_tree                                  (Eq. 7)
+//! E_ADC   = (k1·res + k2·4^res) · V² · B_w · MACs/D2  (AIMC)      (Eq. 8)
+//! E_tree  = C_gate · G_FA · V² · D1 · F · CC_acc                  (Eq. 9)
+//! F       = B·N + N − B + log2 N − 1                              (Eq. 10)
+//! E_DAC   = k3 · DAC_res · V² · CC_BS             (AIMC)          (Eq. 11)
+//! ```
+//!
+//! **Interpretation choices** (the paper writes Eqs. 4–5 per wordline /
+//! per bitline group; we evaluate them at array level per compute cycle —
+//! see DESIGN.md §6):
+//!
+//! * AIMC toggles all active rows' wordlines and all bitlines every
+//!   compute cycle (`CC_prech` = every bit-serial step of every MVM).
+//! * DIMC keeps weights stationary on the bitlines; `CC_prech` counts
+//!   only weight-(re)load events. The per-cycle input broadcast and
+//!   multiply energy is `E_logic` (Eq. 6) with `G_MUL = B_w` gates per
+//!   operand MAC per input slice.
+//! * Input sparsity (the paper's surveys assume 50 %) scales the
+//!   input-dependent switching terms (WL drive, logic, adder tree).
+//! * Underutilization: wordline/bitline capacitance is charged over the
+//!   *physical* array span; converters and trees only fire on *used*
+//!   columns/rows. Unused-column energy is the large-array penalty the
+//!   case studies expose.
+
+
+use crate::arch::{ImcFamily, ImcMacro};
+
+use super::adc;
+use super::adder_tree;
+use super::dac;
+use super::tech::{TechParams, G_FA, G_MUL_1B};
+
+/// Mapping-dependent operation counts for one macro executing (part of) a
+/// layer (Table I "mapping dependent extracted parameters").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacroOpCounts {
+    /// Full-array MVM invocations (each spans `n_slices` compute cycles).
+    pub mvms: u64,
+    /// Full-array weight (re)load events.
+    pub weight_loads: u64,
+    /// Average rows used per MVM (≤ D2·M; drives converter/tree counts).
+    pub rows_used: f64,
+    /// Average weight operands used per row (≤ D1).
+    pub cols_used: f64,
+    /// Fraction of input bits that are zero (no switching). The survey
+    /// comparisons use 0.5.
+    pub input_sparsity: f64,
+}
+
+impl MacroOpCounts {
+    /// Peak workload: array fully used, weights stationary.
+    pub fn peak(m: &ImcMacro, mvms: u64, input_sparsity: f64) -> Self {
+        MacroOpCounts {
+            mvms,
+            weight_loads: 0,
+            rows_used: m.rows as f64,
+            cols_used: m.d1() as f64,
+            input_sparsity,
+        }
+    }
+
+    /// Useful full-precision MACs represented by these counts.
+    pub fn useful_macs(&self) -> f64 {
+        self.mvms as f64 * self.rows_used * self.cols_used
+    }
+
+    pub fn validate(&self, m: &ImcMacro) -> Result<(), String> {
+        if self.rows_used < 0.0 || self.rows_used > m.rows as f64 {
+            return Err(format!("rows_used {} out of [0, {}]", self.rows_used, m.rows));
+        }
+        if self.cols_used < 0.0 || self.cols_used > m.d1() as f64 {
+            return Err(format!("cols_used {} out of [0, {}]", self.cols_used, m.d1()));
+        }
+        if !(0.0..=1.0).contains(&self.input_sparsity) {
+            return Err(format!("input_sparsity {} out of [0,1]", self.input_sparsity));
+        }
+        Ok(())
+    }
+}
+
+/// Per-component datapath energy (fJ) — the Fig. 7 breakdown categories.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EnergyBreakdown {
+    /// Wordline charging (part of E_cell).
+    pub wl_fj: f64,
+    /// Bitline charging (part of E_cell; analog accumulation for AIMC).
+    pub bl_fj: f64,
+    /// Cell-adjacent multiplier gates (DIMC only, Eq. 6).
+    pub logic_fj: f64,
+    /// A/D conversion (AIMC only, Eq. 8).
+    pub adc_fj: f64,
+    /// Digital adder tree (Eq. 9).
+    pub adder_tree_fj: f64,
+    /// D/A conversion (AIMC only, Eq. 11).
+    pub dac_fj: f64,
+    /// Weight (re)load writes into the array.
+    pub weight_load_fj: f64,
+}
+
+impl EnergyBreakdown {
+    /// E_total (Eq. 1) + weight loading.
+    pub fn total_fj(&self) -> f64 {
+        self.wl_fj
+            + self.bl_fj
+            + self.logic_fj
+            + self.adc_fj
+            + self.adder_tree_fj
+            + self.dac_fj
+            + self.weight_load_fj
+    }
+
+    /// E_MUL (Eq. 2).
+    pub fn e_mul_fj(&self) -> f64 {
+        self.wl_fj + self.bl_fj + self.logic_fj
+    }
+
+    /// E_ACC (Eq. 7).
+    pub fn e_acc_fj(&self) -> f64 {
+        self.adc_fj + self.adder_tree_fj
+    }
+
+    /// E_peripherals (Eq. 11 contribution).
+    pub fn e_peripherals_fj(&self) -> f64 {
+        self.dac_fj
+    }
+
+    pub fn scaled(&self, k: f64) -> Self {
+        EnergyBreakdown {
+            wl_fj: self.wl_fj * k,
+            bl_fj: self.bl_fj * k,
+            logic_fj: self.logic_fj * k,
+            adc_fj: self.adc_fj * k,
+            adder_tree_fj: self.adder_tree_fj * k,
+            dac_fj: self.dac_fj * k,
+            weight_load_fj: self.weight_load_fj * k,
+        }
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.wl_fj += other.wl_fj;
+        self.bl_fj += other.bl_fj;
+        self.logic_fj += other.logic_fj;
+        self.adc_fj += other.adc_fj;
+        self.adder_tree_fj += other.adder_tree_fj;
+        self.dac_fj += other.dac_fj;
+        self.weight_load_fj += other.weight_load_fj;
+    }
+}
+
+/// Energy to (re)write the full weight array once: every cell sees a
+/// wordline pulse and a bitline swing (read-modify-write style drive).
+fn full_array_write_fj(m: &ImcMacro, t: &TechParams) -> f64 {
+    let v2 = m.vdd * m.vdd;
+    let cells = (m.rows * m.cols) as f64;
+    (t.c_wl_ff + t.c_bl_ff) * v2 * cells
+}
+
+/// Evaluate the unified model for one macro and one set of op counts.
+pub fn macro_energy(m: &ImcMacro, t: &TechParams, ops: &MacroOpCounts) -> EnergyBreakdown {
+    debug_assert!(ops.validate(m).is_ok(), "{:?}", ops.validate(m));
+    let v2 = m.vdd * m.vdd;
+    let bw = m.weight_bits as f64;
+    let d1_phys = m.d1() as f64;
+    let d2_phys = m.d2() as f64;
+    let mrows = m.row_mux as f64;
+    let slices = m.n_slices() as f64;
+    let mvms = ops.mvms as f64;
+    let act = 1.0 - ops.input_sparsity;
+    let rows_used = ops.rows_used;
+    let cols_used = ops.cols_used;
+
+    let mut e = EnergyBreakdown::default();
+
+    match m.family {
+        ImcFamily::Aimc => {
+            // Eq. 3–5, array level per compute cycle: active rows' WLs
+            // toggle with the (sparse) input, all physical bitline spans
+            // share charge. CC_prech = slices · mvms.
+            let cc_prech = slices * mvms;
+            // Eq. 4 ·(active rows): wordline cap across the full row span
+            // (B_w · D1_phys cells) — unused columns still load the WL.
+            e.wl_fj = t.c_wl_ff * v2 * bw * d1_phys * rows_used * cc_prech * act;
+            // Eq. 5 ·(D1 bitline groups): all physical bitlines swing.
+            e.bl_fj = t.c_bl_ff * v2 * bw * d1_phys * d2_phys * mrows * cc_prech;
+            // Eq. 8: one conversion per *used* bitline (power-gated
+            // otherwise), per compute cycle.
+            let adcs = (cols_used * bw / m.cols_per_adc as f64) * cc_prech;
+            e.adc_fj = adc::conversion_energy_fj_at(m.adc_res, m.vdd, m.tech_nm) * adcs;
+            // Eq. 11: one DAC conversion per used row per cycle (CC_BS).
+            let cc_bs = rows_used * cc_prech;
+            e.dac_fj = dac::conversion_energy_fj(m.dac_res, m.vdd) * cc_bs;
+            // Eq. 9–10: shift-add recombination across B_w bitline ADC
+            // results (N = B_w, B = ADC_res), one tree per used operand
+            // column per cycle.
+            let f = adder_tree::full_adders(m.weight_bits as usize, m.adc_res);
+            e.adder_tree_fj = t.c_gate_ff * G_FA * v2 * f * cols_used * cc_prech * act;
+        }
+        ImcFamily::Dimc => {
+            // Weights stationary: bitlines only toggle on weight loads
+            // (CC_prech = weight_loads) — folded into weight_load_fj.
+            // Eq. 6: one NAND per weight bit per used operand pair per
+            // input slice; sparsity gates switching.
+            let gmul = G_MUL_1B * bw;
+            let macs_slices = cols_used * rows_used / mrows * slices * mvms * mrows;
+            e.logic_fj = t.c_gate_ff * gmul * v2 * macs_slices * act;
+            // Eq. 9–10: accumulation across D2 rows (N = D2, B = B_w),
+            // one tree per used operand column, per compute cycle
+            // (slices · row-mux steps per MVM).
+            let f = adder_tree::full_adders(m.d2(), m.weight_bits);
+            let cc_acc = slices * mrows * mvms;
+            let row_activity = (rows_used / (d2_phys * mrows)).min(1.0);
+            e.adder_tree_fj =
+                t.c_gate_ff * G_FA * v2 * f * cols_used * cc_acc * act * row_activity;
+        }
+    }
+
+    e.weight_load_fj = full_array_write_fj(m, t) * ops.weight_loads as f64;
+    e
+}
+
+/// Peak datapath energy per full-precision MAC (fJ/MAC) at the given
+/// input sparsity — the quantity behind the survey's TOP/s/W axis
+/// (1 MAC = 2 OP).
+pub fn peak_energy_per_mac_fj(m: &ImcMacro, t: &TechParams, input_sparsity: f64) -> f64 {
+    let ops = MacroOpCounts::peak(m, 1, input_sparsity);
+    let e = macro_energy(m, t, &ops);
+    e.total_fj() / ops.useful_macs()
+}
+
+/// Peak energy efficiency in TOP/s/W (2 ops per MAC): `2 / (fJ/MAC) * 1e3`
+/// gives TOPS/W when energy is in fJ.
+pub fn peak_tops_per_watt(m: &ImcMacro, t: &TechParams, input_sparsity: f64) -> f64 {
+    2.0e3 / peak_energy_per_mac_fj(m, t, input_sparsity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ImcFamily;
+
+    fn tech(node: f64) -> TechParams {
+        TechParams::for_node(node)
+    }
+
+    fn aimc_large() -> ImcMacro {
+        ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0)
+    }
+
+    fn dimc_chih() -> ImcMacro {
+        ImcMacro::new("d", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    #[test]
+    fn aimc_has_converter_energy_dimc_does_not() {
+        let t = tech(28.0);
+        let a = macro_energy(&aimc_large(), &t, &MacroOpCounts::peak(&aimc_large(), 10, 0.5));
+        assert!(a.adc_fj > 0.0 && a.dac_fj > 0.0);
+        assert_eq!(a.logic_fj, 0.0);
+
+        let d = macro_energy(&dimc_chih(), &tech(22.0), &MacroOpCounts::peak(&dimc_chih(), 10, 0.5));
+        assert_eq!(d.adc_fj, 0.0);
+        assert_eq!(d.dac_fj, 0.0);
+        assert!(d.logic_fj > 0.0 && d.adder_tree_fj > 0.0);
+    }
+
+    #[test]
+    fn energy_linear_in_mvms() {
+        let m = aimc_large();
+        let t = tech(28.0);
+        let e1 = macro_energy(&m, &t, &MacroOpCounts::peak(&m, 1, 0.5)).total_fj();
+        let e10 = macro_energy(&m, &t, &MacroOpCounts::peak(&m, 10, 0.5)).total_fj();
+        assert!((e10 / e1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparsity_reduces_switching_terms_only() {
+        let m = dimc_chih();
+        let t = tech(22.0);
+        let dense = macro_energy(&m, &t, &MacroOpCounts::peak(&m, 1, 0.0));
+        let sparse = macro_energy(&m, &t, &MacroOpCounts::peak(&m, 1, 0.5));
+        assert!((sparse.logic_fj / dense.logic_fj - 0.5).abs() < 1e-9);
+        assert!((sparse.adder_tree_fj / dense.adder_tree_fj - 0.5).abs() < 1e-9);
+
+        let a = aimc_large();
+        let t28 = tech(28.0);
+        let ad = macro_energy(&a, &t28, &MacroOpCounts::peak(&a, 1, 0.0));
+        let asp = macro_energy(&a, &t28, &MacroOpCounts::peak(&a, 1, 0.5));
+        // bitlines + converters are not input-gated
+        assert_eq!(ad.bl_fj, asp.bl_fj);
+        assert_eq!(ad.adc_fj, asp.adc_fj);
+        assert_eq!(ad.dac_fj, asp.dac_fj);
+        assert!(asp.wl_fj < ad.wl_fj);
+    }
+
+    #[test]
+    fn underutilization_hurts_aimc_energy_per_mac() {
+        // Half the rows used: BL energy unchanged, useful MACs halved →
+        // fJ/MAC strictly worse than full utilization.
+        let m = aimc_large();
+        let t = tech(28.0);
+        let full = MacroOpCounts::peak(&m, 1, 0.5);
+        let half = MacroOpCounts {
+            rows_used: m.rows as f64 / 2.0,
+            ..full
+        };
+        let e_full = macro_energy(&m, &t, &full).total_fj() / full.useful_macs();
+        let e_half = macro_energy(&m, &t, &half).total_fj() / half.useful_macs();
+        assert!(e_half > e_full * 1.2, "full {e_full} vs half {e_half}");
+    }
+
+    #[test]
+    fn dimc_weight_reload_costs() {
+        let m = dimc_chih();
+        let t = tech(22.0);
+        let stationary = MacroOpCounts::peak(&m, 100, 0.5);
+        let mut reload = stationary;
+        reload.weight_loads = 100;
+        let e0 = macro_energy(&m, &t, &stationary).total_fj();
+        let e1 = macro_energy(&m, &t, &reload).total_fj();
+        assert!(e1 > e0);
+    }
+
+    #[test]
+    fn peak_efficiency_plausible_bands() {
+        // DIMC (Chih et al. '21-like, 22 nm 4b/4b): tens of TOPS/W
+        let d = dimc_chih();
+        let eff_d = peak_tops_per_watt(&d, &tech(22.0), 0.5);
+        assert!(
+            (30.0..300.0).contains(&eff_d),
+            "DIMC peak {eff_d} TOPS/W out of band"
+        );
+        // AIMC large array: hundreds of TOPS/W, better than DIMC
+        let a = aimc_large();
+        let eff_a = peak_tops_per_watt(&a, &tech(28.0), 0.5);
+        assert!(
+            (100.0..3000.0).contains(&eff_a),
+            "AIMC peak {eff_a} TOPS/W out of band"
+        );
+        assert!(eff_a > eff_d);
+    }
+
+    #[test]
+    fn breakdown_component_sums() {
+        let m = aimc_large();
+        let t = tech(28.0);
+        let e = macro_energy(&m, &t, &MacroOpCounts::peak(&m, 3, 0.5));
+        let total = e.e_mul_fj() + e.e_acc_fj() + e.e_peripherals_fj() + e.weight_load_fj;
+        assert!((total - e.total_fj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn op_count_validation() {
+        let m = aimc_large();
+        let mut ops = MacroOpCounts::peak(&m, 1, 0.5);
+        assert!(ops.validate(&m).is_ok());
+        ops.rows_used = 1e9;
+        assert!(ops.validate(&m).is_err());
+        ops.rows_used = 10.0;
+        ops.input_sparsity = 1.5;
+        assert!(ops.validate(&m).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Latency / throughput model.
+//!
+//! Cycle time per family, calibrated on the surveyed designs' reported
+//! clock rates: AIMC MVM cycles are paced by the analog settle + ADC
+//! (~5 ns at 28 nm), DIMC by the adder-tree critical path (~1 ns at
+//! 28 nm for D2 = 256, shorter for smaller trees), both scaling roughly
+//! linearly with the node.
+
+use crate::arch::{ImcFamily, ImcMacro};
+
+use super::adder_tree;
+use super::area::macro_area_mm2;
+
+/// Macro compute-cycle time (ns).
+pub fn cycle_ns(m: &ImcMacro) -> f64 {
+    let node_scale = m.tech_nm / 28.0;
+    // voltage derating: delay grows as V drops below nominal 0.9 V
+    let v_scale = (0.9 / m.vdd).max(0.6);
+    match m.family {
+        ImcFamily::Aimc => 5.0 * node_scale * v_scale,
+        ImcFamily::Dimc => {
+            // tree depth paces the clock; ~0.125 ns per stage at 28 nm
+            let depth = adder_tree::depth(m.d2()).max(4) as f64;
+            0.125 * depth * node_scale * v_scale
+        }
+    }
+}
+
+/// Peak throughput of one macro in TOP/s (2 ops per MAC, full precision:
+/// one MVM takes `cycles_per_mvm` compute cycles).
+pub fn peak_tops(m: &ImcMacro) -> f64 {
+    let macs_per_ns = m.macs_per_mvm() as f64 / (m.cycles_per_mvm() as f64 * cycle_ns(m));
+    2.0 * macs_per_ns * 1e-3 // MAC/ns → TOP/s
+}
+
+/// Peak computational density in TOP/s/mm² (the Fig. 4 x-axis).
+pub fn peak_tops_per_mm2(m: &ImcMacro) -> f64 {
+    peak_tops(m) / macro_area_mm2(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ImcFamily;
+
+    fn aimc() -> ImcMacro {
+        ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0)
+    }
+
+    fn dimc() -> ImcMacro {
+        ImcMacro::new("d", ImcFamily::Dimc, 256, 256, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    #[test]
+    fn dimc_clocks_faster_than_aimc() {
+        assert!(cycle_ns(&dimc()) < cycle_ns(&aimc()));
+    }
+
+    #[test]
+    fn smaller_node_is_faster() {
+        let mut d5 = dimc();
+        d5.tech_nm = 5.0;
+        assert!(cycle_ns(&d5) < cycle_ns(&dimc()));
+    }
+
+    #[test]
+    fn low_voltage_slows_down() {
+        let mut slow = dimc();
+        slow.vdd = 0.6;
+        assert!(cycle_ns(&slow) > cycle_ns(&dimc()));
+    }
+
+    #[test]
+    fn peak_tops_accounts_for_bit_serial() {
+        // DIMC 4b act bit-serial: 4 cycles per MVM
+        let d = dimc();
+        let macs = d.macs_per_mvm() as f64;
+        let expect = 2.0 * macs / (4.0 * cycle_ns(&d)) * 1e-3;
+        assert!((peak_tops(&d) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_in_survey_band() {
+        // Fig. 4 densities span ~0.1..400 TOP/s/mm²
+        for m in [aimc(), dimc()] {
+            let dens = peak_tops_per_mm2(&m);
+            assert!((0.05..500.0).contains(&dens), "{}: {dens}", m.name);
+        }
+    }
+
+    #[test]
+    fn tall_aimc_array_beats_dimc_density_same_node() {
+        // The AIMC structural density advantage (no per-cell multiplier,
+        // amortized periphery) at equal node/precision.
+        let mut a = aimc();
+        a.tech_nm = 22.0;
+        let mut d = dimc();
+        d.tech_nm = 22.0;
+        assert!(peak_tops_per_mm2(&a) > peak_tops_per_mm2(&d) * 0.5);
+    }
+}

@@ -1,0 +1,25 @@
+//! The unified analytical cost model for AIMC and DIMC (paper §IV).
+//!
+//! * [`tech`] — technology-dependent parameter extraction (Fig. 6).
+//! * [`energy`] — the datapath energy model (Eqs. 1–11).
+//! * [`adc`] / [`dac`] — converter sub-models (Murmann k1/k2; k3).
+//! * [`adder_tree`] — digital accumulation cost (Eqs. 9–10).
+//! * [`area`] — cell + periphery area (Fig. 4 density axis).
+//! * [`latency`] — cycle time and peak throughput.
+//! * [`validation`] — model-vs-reported comparison (Fig. 5).
+
+pub mod adc;
+pub mod adder_tree;
+pub mod area;
+pub mod dac;
+pub mod energy;
+pub mod latency;
+pub mod tech;
+pub mod validation;
+
+pub use energy::{
+    macro_energy, peak_energy_per_mac_fj, peak_tops_per_watt, EnergyBreakdown, MacroOpCounts,
+};
+pub use latency::{cycle_ns, peak_tops, peak_tops_per_mm2};
+pub use tech::TechParams;
+pub use validation::{validate_design, ValidationPoint, ValidationStats};

@@ -1,0 +1,155 @@
+//! Technology-dependent parameter extraction (paper §IV-E, Fig. 6).
+//!
+//! All capacitances in the unified model are expressed relative to a
+//! reference inverter capacitance `C_inv`. Following the paper, `C_inv`
+//! values fitted per published DIMC design are linearly regressed across
+//! technology nodes (Fig. 6a/6b); the DAC energy constant `k3` is fitted
+//! across AIMC DAC-based designs (Fig. 6c).
+
+
+/// Murmann ADC model constant `k1` (fJ per bit of resolution), paper Eq. 8.
+pub const K1_FJ: f64 = 100.0;
+/// Murmann ADC model constant `k2` (fJ; paper: 1 aJ = 1e-3 fJ), Eq. 8.
+pub const K2_FJ: f64 = 1e-3;
+/// DAC energy per conversion step (fJ), fitted in Fig. 6c, Eq. 11.
+pub const K3_FJ: f64 = 44.0;
+/// Gates per 1-bit full adder (paper §IV-C: assumed 5).
+pub const G_FA: f64 = 5.0;
+/// Gates per 1-bit multiplier (paper §IV-B: single NAND/NOR, ~1).
+pub const G_MUL_1B: f64 = 1.0;
+
+/// Per-design fitted `C_inv` points (node nm, fitted C_inv fF) used for
+/// the Fig. 6a/6b regression. The fits correspond to the DIMC designs the
+/// paper lists for this purpose ([40] 22 nm, [41] 5 nm, [42] 28 nm,
+/// [44] 65 nm near-memory). Values are this reproduction's fits (fF).
+pub const FITTED_CINV_POINTS: [(f64, f64, &str); 4] = [
+    (5.0, 0.095, "fujiwara_isscc22"),
+    (22.0, 0.325, "chih_isscc21"),
+    (28.0, 0.405, "tu_isscc22"),
+    (65.0, 0.980, "problp_dac19"),
+];
+
+/// Per-design fitted DAC energy/conversion-step points (node nm, fJ) for
+/// the Fig. 6c fit of `k3` across AIMC DAC-based designs.
+pub const FITTED_DAC_POINTS: [(f64, f64, &str); 3] = [
+    (22.0, 40.0, "papistas_cicc21"),
+    (16.0, 43.0, "jia_isscc21"),
+    (28.0, 49.0, "su_isscc21"),
+];
+
+/// Technology-dependent capacitance parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TechParams {
+    /// Reference inverter capacitance (fF).
+    pub c_inv_ff: f64,
+    /// Standard logic gate capacitance (fF) — paper: ≈ 2 × C_inv.
+    pub c_gate_ff: f64,
+    /// Wordline capacitance per cell (fF) — paper: ≈ C_inv.
+    pub c_wl_ff: f64,
+    /// Bitline capacitance per cell (fF) — paper: ≈ C_inv.
+    pub c_bl_ff: f64,
+}
+
+impl TechParams {
+    /// Build parameters for a technology node from the Fig. 6 regression.
+    pub fn for_node(tech_nm: f64) -> Self {
+        let c_inv = c_inv_ff(tech_nm);
+        TechParams {
+            c_inv_ff: c_inv,
+            c_gate_ff: 2.0 * c_inv,
+            c_wl_ff: c_inv,
+            c_bl_ff: c_inv,
+        }
+    }
+}
+
+/// Ordinary least-squares linear fit `y = slope * x + intercept`.
+pub fn linear_fit(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    assert!(n >= 2.0, "need at least two points for a fit");
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Regressed `C_inv(node)` in fF (Fig. 6a/6b line).
+pub fn c_inv_ff(tech_nm: f64) -> f64 {
+    let pts: Vec<(f64, f64)> = FITTED_CINV_POINTS.iter().map(|p| (p.0, p.1)).collect();
+    let (slope, intercept) = linear_fit(&pts);
+    (slope * tech_nm + intercept).max(0.01)
+}
+
+/// Fitted DAC fJ/conversion-step (Fig. 6c): the mean of the per-design
+/// fits — the paper reports `k3 ≈ 44 fJ` with ~9 % average mismatch.
+pub fn fitted_k3_fj() -> f64 {
+    let s: f64 = FITTED_DAC_POINTS.iter().map(|p| p.1).sum();
+    s / FITTED_DAC_POINTS.len() as f64
+}
+
+/// Relative mismatch of each fitted C_inv point vs the regression line
+/// (the "~10 % model mismatch" of §IV-E).
+pub fn cinv_fit_mismatches() -> Vec<(f64, f64, &'static str)> {
+    FITTED_CINV_POINTS
+        .iter()
+        .map(|&(node, fitted, name)| {
+            let modeled = c_inv_ff(node);
+            (node, (modeled - fitted).abs() / fitted, name)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fit_recovers_exact_line() {
+        let pts = [(1.0, 3.0), (2.0, 5.0), (3.0, 7.0)];
+        let (m, b) = linear_fit(&pts);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((b - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c_inv_monotone_in_node() {
+        assert!(c_inv_ff(5.0) < c_inv_ff(22.0));
+        assert!(c_inv_ff(22.0) < c_inv_ff(65.0));
+        // plausible magnitudes (fF)
+        assert!(c_inv_ff(28.0) > 0.1 && c_inv_ff(28.0) < 1.0);
+    }
+
+    #[test]
+    fn c_inv_never_negative() {
+        assert!(c_inv_ff(1.0) >= 0.01);
+    }
+
+    #[test]
+    fn k3_close_to_paper_value() {
+        // the paper sets k3 = 44 fJ from the same style of fit
+        assert!((fitted_k3_fj() - K3_FJ).abs() / K3_FJ < 0.05);
+    }
+
+    #[test]
+    fn cinv_regression_mismatch_band() {
+        // §IV-E reports ~10 % mismatch; our fit should stay in that band
+        for (node, mismatch, name) in cinv_fit_mismatches() {
+            assert!(
+                mismatch < 0.20,
+                "{name} at {node} nm has {:.0} % mismatch",
+                mismatch * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn tech_params_derived_ratios() {
+        let t = TechParams::for_node(28.0);
+        assert_eq!(t.c_gate_ff, 2.0 * t.c_inv_ff);
+        assert_eq!(t.c_wl_ff, t.c_inv_ff);
+        assert_eq!(t.c_bl_ff, t.c_inv_ff);
+    }
+}

@@ -1,0 +1,123 @@
+//! Model validation against reported silicon numbers (paper §V, Fig. 5).
+//!
+//! For every surveyed design we evaluate the unified model at the chip's
+//! architectural parameters and compare against the publication's
+//! reported peak energy efficiency. The paper finds mismatches within
+//! ~15 % for most designs, with known outliers (unmodeled digital
+//! overheads, inefficient ADCs ~4×, leakage at low voltage).
+
+
+use crate::arch::ImcMacro;
+
+use super::energy::peak_tops_per_watt;
+use super::latency::peak_tops_per_mm2;
+use super::tech::TechParams;
+
+/// One model-vs-reported comparison point.
+#[derive(Debug, Clone)]
+pub struct ValidationPoint {
+    pub name: String,
+    pub family: String,
+    pub tech_nm: f64,
+    pub reported_tops_w: f64,
+    pub modeled_tops_w: f64,
+    pub reported_tops_mm2: Option<f64>,
+    pub modeled_tops_mm2: f64,
+    /// |modeled − reported| / reported for energy efficiency.
+    pub mismatch: f64,
+    /// Designs the paper itself flags as >15 % (unmodeled overheads).
+    pub known_outlier: bool,
+}
+
+/// Validate one design: run the model at the design's parameters.
+pub fn validate_design(
+    m: &ImcMacro,
+    reported_tops_w: f64,
+    reported_tops_mm2: Option<f64>,
+    input_sparsity: f64,
+    known_outlier: bool,
+) -> ValidationPoint {
+    let tech = TechParams::for_node(m.tech_nm);
+    let modeled_tops_w = peak_tops_per_watt(m, &tech, input_sparsity);
+    let modeled_tops_mm2 = peak_tops_per_mm2(m);
+    let mismatch = (modeled_tops_w - reported_tops_w).abs() / reported_tops_w;
+    ValidationPoint {
+        name: m.name.clone(),
+        family: m.family.as_str().to_string(),
+        tech_nm: m.tech_nm,
+        reported_tops_w,
+        modeled_tops_w,
+        reported_tops_mm2,
+        modeled_tops_mm2,
+        mismatch,
+        known_outlier,
+    }
+}
+
+/// Aggregate mismatch statistics over a set of validation points.
+#[derive(Debug, Clone)]
+pub struct ValidationStats {
+    pub n: usize,
+    pub n_within_15pct: usize,
+    pub n_known_outliers: usize,
+    pub mean_mismatch: f64,
+    pub median_mismatch: f64,
+    pub max_mismatch: f64,
+}
+
+impl ValidationStats {
+    pub fn from_points(points: &[ValidationPoint]) -> Self {
+        let mut mismatches: Vec<f64> = points.iter().map(|p| p.mismatch).collect();
+        mismatches.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = points.len();
+        let mean = if n == 0 {
+            0.0
+        } else {
+            mismatches.iter().sum::<f64>() / n as f64
+        };
+        let median = if n == 0 {
+            0.0
+        } else {
+            mismatches[n / 2]
+        };
+        ValidationStats {
+            n,
+            n_within_15pct: points.iter().filter(|p| p.mismatch <= 0.15).count(),
+            n_known_outliers: points.iter().filter(|p| p.known_outlier).count(),
+            mean_mismatch: mean,
+            median_mismatch: median,
+            max_mismatch: mismatches.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ImcFamily;
+
+    #[test]
+    fn perfect_report_has_zero_mismatch() {
+        let m = ImcMacro::new("x", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, 22.0);
+        let tech = TechParams::for_node(m.tech_nm);
+        let exact = peak_tops_per_watt(&m, &tech, 0.5);
+        let p = validate_design(&m, exact, None, 0.5, false);
+        assert!(p.mismatch < 1e-12);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let m = ImcMacro::new("x", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, 22.0);
+        let tech = TechParams::for_node(m.tech_nm);
+        let exact = peak_tops_per_watt(&m, &tech, 0.5);
+        let pts = vec![
+            validate_design(&m, exact, None, 0.5, false),
+            validate_design(&m, exact * 2.0, None, 0.5, true), // 50 % off
+        ];
+        let s = ValidationStats::from_points(&pts);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.n_within_15pct, 1);
+        assert_eq!(s.n_known_outliers, 1);
+        assert!(s.max_mismatch > 0.4);
+    }
+}

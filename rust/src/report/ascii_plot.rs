@@ -1,0 +1,176 @@
+//! ASCII scatter plots for terminal figure reproduction (Fig. 4 log-log
+//! survey scatter, Fig. 5 parity plots).
+
+/// A labeled scatter series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: char,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render a scatter plot. `log` switches both axes to log10 scale.
+pub struct ScatterPlot {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    pub log: bool,
+    pub series: Vec<Series>,
+}
+
+impl ScatterPlot {
+    pub fn new(title: &str, x_label: &str, y_label: &str, log: bool) -> Self {
+        ScatterPlot {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 24,
+            log,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add_series(&mut self, label: char, points: Vec<(f64, f64)>) {
+        self.series.push(Series { label, points });
+    }
+
+    fn tx(&self, v: f64) -> f64 {
+        if self.log {
+            v.max(1e-12).log10()
+        } else {
+            v
+        }
+    }
+
+    /// Render to a multi-line string.
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|&(x, y)| (self.tx(x), self.tx(y))))
+            .collect();
+        if all.is_empty() {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        // pad degenerate ranges
+        if (x1 - x0).abs() < 1e-12 {
+            x0 -= 0.5;
+            x1 += 0.5;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y0 -= 0.5;
+            y1 += 0.5;
+        }
+        let w = self.width;
+        let h = self.height;
+        let mut grid = vec![vec![' '; w]; h];
+        for s in &self.series {
+            for &(px, py) in &s.points {
+                let (px, py) = (self.tx(px), self.tx(py));
+                let cx = ((px - x0) / (x1 - x0) * (w - 1) as f64).round() as usize;
+                let cy = ((py - y0) / (y1 - y0) * (h - 1) as f64).round() as usize;
+                let row = h - 1 - cy.min(h - 1);
+                let col = cx.min(w - 1);
+                grid[row][col] = if grid[row][col] == ' ' || grid[row][col] == s.label {
+                    s.label
+                } else {
+                    '*' // collision of different series
+                };
+            }
+        }
+        let fmt_tick = |v: f64| -> String {
+            let raw = if self.log { 10f64.powf(v) } else { v };
+            if raw >= 100.0 {
+                format!("{raw:.0}")
+            } else if raw >= 1.0 {
+                format!("{raw:.1}")
+            } else {
+                format!("{raw:.3}")
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&format!("y: {}{}\n", self.y_label, if self.log { " (log)" } else { "" }));
+        for (i, row) in grid.iter().enumerate() {
+            let tick = if i == 0 {
+                fmt_tick(y1)
+            } else if i == h - 1 {
+                fmt_tick(y0)
+            } else {
+                String::new()
+            };
+            out.push_str(&format!("{tick:>9} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{:>9}  {}^ {}\n",
+            "",
+            " ".repeat(0),
+            ""
+        ));
+        out.push_str(&format!(
+            "{:>10} {:<w$}\n",
+            fmt_tick(x0),
+            format!("{:>w$}", fmt_tick(x1), w = w - 1),
+            w = w
+        ));
+        out.push_str(&format!(
+            "x: {}{}\n",
+            self.x_label,
+            if self.log { " (log)" } else { "" }
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_in_grid() {
+        let mut p = ScatterPlot::new("t", "x", "y", false);
+        p.add_series('a', vec![(0.0, 0.0), (10.0, 10.0)]);
+        let s = p.render();
+        assert!(s.contains('a'));
+        assert!(s.contains("t\n"));
+        // two distinct points
+        assert_eq!(s.matches('a').count(), 2);
+    }
+
+    #[test]
+    fn log_scale_compresses_decades() {
+        let mut p = ScatterPlot::new("t", "x", "y", true);
+        p.add_series('o', vec![(1.0, 1.0), (10.0, 10.0), (100.0, 100.0)]);
+        let s = p.render();
+        // count only grid rows (delimited by '|'), not axis labels
+        let in_grid: usize = s
+            .lines()
+            .filter(|l| l.contains('|'))
+            .map(|l| l.matches('o').count())
+            .sum();
+        assert_eq!(in_grid, 3);
+    }
+
+    #[test]
+    fn collision_marker() {
+        let mut p = ScatterPlot::new("t", "x", "y", false);
+        p.add_series('a', vec![(5.0, 5.0)]);
+        p.add_series('b', vec![(5.0, 5.0)]);
+        assert!(p.render().contains('*'));
+    }
+
+    #[test]
+    fn empty_plot() {
+        let p = ScatterPlot::new("t", "x", "y", false);
+        assert!(p.render().contains("no data"));
+    }
+}

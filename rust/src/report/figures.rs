@@ -1,0 +1,284 @@
+//! Regeneration of every table and figure in the paper's evaluation, as
+//! terminal text (+ CSV via `Table::to_csv`). Used by both the `imcsim`
+//! CLI and the bench harness.
+
+use crate::arch::{table2_systems, ImcFamily};
+use crate::db::{fig4_points, validation_points, validation_stats};
+use crate::dse::{case_study, DseOptions, NetworkResult};
+use crate::model::tech::{
+    c_inv_ff, cinv_fit_mismatches, fitted_k3_fj, linear_fit, FITTED_CINV_POINTS,
+    FITTED_DAC_POINTS, K3_FJ,
+};
+use crate::workload::all_networks;
+
+use super::ascii_plot::ScatterPlot;
+use super::table::{eng, Table};
+
+/// Fig. 1 (bottom panel): operator breakdown of the tinyMLPerf models.
+pub fn fig1_text() -> String {
+    let mut t = Table::new(&["network", "total MACs", "operator", "MACs", "share"]);
+    for net in all_networks() {
+        let b = net.operator_breakdown();
+        for (i, (ty, macs, frac)) in b.shares.iter().enumerate() {
+            t.row(vec![
+                if i == 0 { net.name.clone() } else { String::new() },
+                if i == 0 { eng(b.total_macs as f64) } else { String::new() },
+                ty.to_string(),
+                eng(*macs as f64),
+                format!("{:.1}%", frac * 100.0),
+            ]);
+        }
+    }
+    format!(
+        "Fig. 1 — operator breakdown of tinyMLPerf benchmark models\n\n{}",
+        t.render()
+    )
+}
+
+/// Fig. 4: the survey scatter (TOP/s/W vs TOP/s/mm²) + the point table.
+pub fn fig4_text() -> String {
+    let pts = fig4_points();
+    let mut plot = ScatterPlot::new(
+        "Fig. 4 — benchmarking of AIMC (a) / DIMC (d) architectures",
+        "computational density [TOP/s/mm2]",
+        "energy efficiency [TOP/s/W]",
+        true,
+    );
+    let mut aimc = Vec::new();
+    let mut dimc = Vec::new();
+    for p in &pts {
+        if let Some(d) = p.tops_mm2 {
+            if p.family == "AIMC" {
+                aimc.push((d, p.tops_w));
+            } else {
+                dimc.push((d, p.tops_w));
+            }
+        }
+    }
+    plot.add_series('a', aimc);
+    plot.add_series('d', dimc);
+
+    let mut t = Table::new(&[
+        "chip", "ref", "family", "tech", "precision", "V", "TOP/s/W", "TOP/s/mm2",
+    ]);
+    for p in &pts {
+        t.row(vec![
+            p.chip.clone(),
+            p.reference.to_string(),
+            p.family.clone(),
+            format!("{:.0}nm", p.tech_nm),
+            p.precision.clone(),
+            format!("{:.2}", p.vdd),
+            format!("{:.1}", p.tops_w),
+            p.tops_mm2.map(|d| format!("{d:.1}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    format!("{}\n{}", plot.render(), t.render())
+}
+
+/// Fig. 5: model validation parity data for one family (or both).
+pub fn fig5_text(family: Option<ImcFamily>) -> String {
+    let pts = validation_points(family);
+    let mut plot = ScatterPlot::new(
+        "Fig. 5 — IMC model validation (reported vs modeled, parity = diagonal)",
+        "reported [TOP/s/W]",
+        "modeled [TOP/s/W]",
+        true,
+    );
+    plot.add_series(
+        'o',
+        pts.iter()
+            .filter(|p| !p.known_outlier)
+            .map(|p| (p.reported_tops_w, p.modeled_tops_w))
+            .collect(),
+    );
+    plot.add_series(
+        'x',
+        pts.iter()
+            .filter(|p| p.known_outlier)
+            .map(|p| (p.reported_tops_w, p.modeled_tops_w))
+            .collect(),
+    );
+
+    let mut t = Table::new(&[
+        "design", "family", "tech", "reported", "modeled", "mismatch", "flag",
+    ]);
+    for p in &pts {
+        t.row(vec![
+            p.name.clone(),
+            p.family.clone(),
+            format!("{:.0}nm", p.tech_nm),
+            format!("{:.1}", p.reported_tops_w),
+            format!("{:.1}", p.modeled_tops_w),
+            format!("{:.0}%", p.mismatch * 100.0),
+            if p.known_outlier { "outlier".into() } else { String::new() },
+        ]);
+    }
+    let stats = validation_stats(family);
+    format!(
+        "{}\n{}\nnon-outlier points: n={}  within 15%: {}  median mismatch: {:.0}%  mean: {:.0}%\n\
+         ('x' points are the paper's known outliers: unmodeled ADC/digital overheads, leakage)\n",
+        plot.render(),
+        t.render(),
+        stats.n,
+        stats.n_within_15pct,
+        stats.median_mismatch * 100.0,
+        stats.mean_mismatch * 100.0
+    )
+}
+
+/// Fig. 6: technology-dependent parameter extraction.
+pub fn fig6_text() -> String {
+    let pts: Vec<(f64, f64)> = FITTED_CINV_POINTS.iter().map(|p| (p.0, p.1)).collect();
+    let (slope, intercept) = linear_fit(&pts);
+    let mut t = Table::new(&["design", "node", "fitted C_inv [fF]", "model C_inv [fF]", "mismatch"]);
+    for &(node, fitted, name) in FITTED_CINV_POINTS.iter() {
+        t.row(vec![
+            name.to_string(),
+            format!("{node:.0}nm"),
+            format!("{fitted:.3}"),
+            format!("{:.3}", c_inv_ff(node)),
+            format!(
+                "{:.0}%",
+                (c_inv_ff(node) - fitted).abs() / fitted * 100.0
+            ),
+        ]);
+    }
+    let mut d = Table::new(&["design", "node", "fitted DAC fJ/conv-step"]);
+    for &(node, fj, name) in FITTED_DAC_POINTS.iter() {
+        d.row(vec![name.to_string(), format!("{node:.0}nm"), format!("{fj:.1}")]);
+    }
+    let worst = cinv_fit_mismatches()
+        .into_iter()
+        .map(|m| m.1)
+        .fold(0.0f64, f64::max);
+    format!(
+        "Fig. 6 — technology-dependent parameter extraction\n\n\
+         (a/b) C_inv regression: C_inv(node) = {slope:.4} fF/nm * node + {intercept:.4} fF  \
+         (max point mismatch {:.0}%)\n\n{}\n\
+         (c) DAC energy/conversion-step fit: k3 = {:.1} fJ (paper: {K3_FJ} fJ)\n\n{}",
+        worst * 100.0,
+        t.render(),
+        fitted_k3_fj(),
+        d.render()
+    )
+}
+
+/// Table II: the case-study architectures.
+pub fn table2_text() -> String {
+    let systems = table2_systems();
+    let mut t = Table::new(&[
+        "design", "R", "C", "macros(norm)", "tech", "V", "A/W bits", "total cells",
+    ]);
+    for s in &systems {
+        t.row(vec![
+            s.name.clone(),
+            s.imc.rows.to_string(),
+            s.imc.cols.to_string(),
+            s.n_macros.to_string(),
+            format!("{:.0}nm", s.imc.tech_nm),
+            format!("{:.1}", s.imc.vdd),
+            format!("{}b/{}b", s.imc.act_bits, s.imc.weight_bits),
+            s.total_cells().to_string(),
+        ]);
+    }
+    format!(
+        "Table II — case-study architectures (macro counts normalized to\n\
+         equal total SRAM cells, §VI)\n\n{}",
+        t.render()
+    )
+}
+
+/// Fig. 7: the full case study (4 systems × 4 networks): macro-level
+/// energy breakdown + data traffic + peak efficiencies.
+pub fn fig7_results() -> Vec<NetworkResult> {
+    let systems = table2_systems();
+    let networks = all_networks();
+    case_study(&systems, &networks, &DseOptions::default())
+}
+
+/// Render Fig. 7 results as text.
+pub fn fig7_text(results: &[NetworkResult]) -> String {
+    let mut t = Table::new(&[
+        "network", "system", "macro E [uJ]", "WL", "BL", "logic", "ADC", "tree", "DAC",
+        "w-load", "GB traffic [uJ]", "DRAM [uJ]", "total [uJ]", "util", "TOP/s/W(macro)",
+        "TOP/s/W(sys)",
+    ]);
+    for r in results {
+        let m = r.macro_breakdown();
+        let tr = r.traffic_breakdown();
+        let pct = |x: f64| format!("{:.0}%", x / m.total_fj().max(1e-12) * 100.0);
+        t.row(vec![
+            r.network.clone(),
+            r.system.clone(),
+            format!("{:.2}", m.total_fj() * 1e-9),
+            pct(m.wl_fj),
+            pct(m.bl_fj),
+            pct(m.logic_fj),
+            pct(m.adc_fj),
+            pct(m.adder_tree_fj),
+            pct(m.dac_fj),
+            pct(m.weight_load_fj),
+            format!("{:.2}", tr.gb_fj * 1e-9),
+            format!("{:.2}", tr.dram_fj * 1e-9),
+            format!("{:.2}", r.total_energy_fj() * 1e-9),
+            format!("{:.1}%", r.mean_utilization() * 100.0),
+            format!(
+                "{:.1}",
+                2.0e3 * r.total_macs() as f64 / (m.total_fj() + tr.gb_fj)
+            ),
+            format!("{:.1}", r.effective_tops_per_watt()),
+        ]);
+    }
+    format!(
+        "Fig. 7 — energy breakdown at macro level and data traffic for the\n\
+         selected IMC designs on the tinyMLPerf workloads\n\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_contains_all_networks() {
+        let s = fig1_text();
+        for n in ["DeepAutoEncoder", "ResNet8", "DS-CNN", "MobileNetV1-0.25"] {
+            assert!(s.contains(n), "missing {n}");
+        }
+        assert!(s.contains("Dense") && s.contains("Pointwise"));
+    }
+
+    #[test]
+    fn fig4_contains_survey_chips() {
+        let s = fig4_text();
+        assert!(s.contains("papistas_cicc21"));
+        assert!(s.contains("chih_isscc21"));
+        assert!(s.contains("TOP/s/W"));
+    }
+
+    #[test]
+    fn fig5_reports_stats() {
+        let s = fig5_text(None);
+        assert!(s.contains("median mismatch"));
+        assert!(s.contains("outlier"));
+        let aimc_only = fig5_text(Some(ImcFamily::Aimc));
+        assert!(!aimc_only.contains("chih_isscc21"));
+    }
+
+    #[test]
+    fn fig6_reports_fits() {
+        let s = fig6_text();
+        assert!(s.contains("C_inv regression"));
+        assert!(s.contains("k3"));
+    }
+
+    #[test]
+    fn table2_lists_four_designs() {
+        let s = table2_text();
+        for d in ["aimc_large", "aimc_multi", "dimc_large", "dimc_multi"] {
+            assert!(s.contains(d), "missing {d}");
+        }
+    }
+}

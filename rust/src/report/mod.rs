@@ -1,0 +1,12 @@
+//! Report renderers: ASCII plots, aligned tables, CSV, and the
+//! regeneration of every paper figure/table.
+
+pub mod ascii_plot;
+pub mod figures;
+pub mod table;
+
+pub use ascii_plot::ScatterPlot;
+pub use figures::{
+    fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, table2_text,
+};
+pub use table::{eng, Table};

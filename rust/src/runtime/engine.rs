@@ -1,0 +1,233 @@
+//! PJRT execution engine: load AOT HLO-text artifacts and run them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): text → `HloModuleProto`
+//! → `XlaComputation` → `PjRtLoadedExecutable`. HLO *text* is the
+//! interchange format (see `python/compile/aot.py`); the text parser
+//! reassigns instruction ids, so jax ≥ 0.5 output round-trips into
+//! xla_extension 0.5.1 cleanly.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{DesignArtifacts, Manifest, TensorSpec};
+
+/// Which of a design's two executables to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// The bit-true IMC macro datapath (AIMC quantization included).
+    Macro,
+    /// The exact integer matmul (accuracy baseline).
+    Reference,
+}
+
+/// One compiled executable + its interface.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+}
+
+/// The PJRT engine: one CPU client + compiled executables per
+/// (design, kind). Execution is serialized per executable via a mutex
+/// (the PJRT CPU client is not Sync for concurrent executes of the same
+/// loaded executable).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<(String, Kind), Compiled>>,
+}
+
+// SAFETY boundary note: the engine is used from multiple coordinator
+// threads; all PJRT calls go through the `compiled` mutex.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine for an artifacts directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn design(&self, name: &str) -> Result<&DesignArtifacts> {
+        self.manifest
+            .designs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown design '{name}' (have: {:?})",
+                self.manifest.designs.keys().collect::<Vec<_>>()))
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Ensure (design, kind) is compiled; compile lazily on first use.
+    pub fn warm(&self, design: &str, kind: Kind) -> Result<()> {
+        let key = (design.to_string(), kind);
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(&key) {
+            return Ok(());
+        }
+        let d = self.design(design)?;
+        let f = match kind {
+            Kind::Macro => &d.mvm,
+            Kind::Reference => &d.reference,
+        };
+        let exe = self.compile(&f.path)?;
+        cache.insert(
+            key,
+            Compiled {
+                exe,
+                inputs: f.inputs.clone(),
+                outputs: f.outputs.clone(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Execute one MVM: `x` is (batch, rows) row-major, `w` is (rows, d1)
+    /// row-major, both int32. Returns the (batch, d1) output row-major.
+    pub fn execute_mvm(&self, design: &str, kind: Kind, x: &[i32], w: &[i32]) -> Result<Vec<i32>> {
+        self.warm(design, kind)?;
+        let key = (design.to_string(), kind);
+        let cache = self.compiled.lock().unwrap();
+        let c = cache.get(&key).expect("warmed above");
+        let xs = &c.inputs[0];
+        let ws = &c.inputs[1];
+        if x.len() != xs.elems() {
+            return Err(anyhow!(
+                "x has {} elements, executable expects {:?}",
+                x.len(),
+                xs.shape
+            ));
+        }
+        if w.len() != ws.elems() {
+            return Err(anyhow!(
+                "w has {} elements, executable expects {:?}",
+                w.len(),
+                ws.shape
+            ));
+        }
+        // NOTE: args go in as PjRtBuffers (execute_b), not Literals: the
+        // C shim backing `execute` converts literal args to device
+        // buffers internally and never frees them (~ the size of the
+        // operands leaked per call). Buffers created here are owned by
+        // this frame and freed by Drop. (EXPERIMENTS.md §Perf, iter. 4)
+        let xb = self
+            .client
+            .buffer_from_host_buffer::<i32>(x, &xs.shape, None)?;
+        let wb = self
+            .client
+            .buffer_from_host_buffer::<i32>(w, &ws.shape, None)?;
+        let result = c.exe.execute_b::<&xla::PjRtBuffer>(&[&xb, &wb])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<i32>()?;
+        debug_assert_eq!(v.len(), c.outputs[0].elems());
+        Ok(v)
+    }
+
+    /// Batch size every MVM execution must be padded to.
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    /// Marshal an int32 matrix into a device buffer once, for reuse
+    /// across many executions (weight-stationary serving: EXPERIMENTS.md
+    /// §Perf, L3 iteration 3).
+    pub fn make_literal_i32(&self, data: &[i32], shape: &[usize]) -> Result<CachedLiteral> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(anyhow!("literal shape {:?} != data len {}", shape, data.len()));
+        }
+        let buf = self.client.buffer_from_host_buffer::<i32>(data, shape, None)?;
+        Ok(CachedLiteral {
+            buf,
+            shape: shape.to_vec(),
+        })
+    }
+
+    /// [`Self::execute_mvm`] with a pre-marshalled weight literal.
+    pub fn execute_mvm_cached(
+        &self,
+        design: &str,
+        kind: Kind,
+        x: &[i32],
+        w: &CachedLiteral,
+    ) -> Result<Vec<i32>> {
+        self.warm(design, kind)?;
+        let key = (design.to_string(), kind);
+        let cache = self.compiled.lock().unwrap();
+        let c = cache.get(&key).expect("warmed above");
+        let xs = &c.inputs[0];
+        if x.len() != xs.elems() {
+            return Err(anyhow!(
+                "x has {} elements, executable expects {:?}",
+                x.len(),
+                xs.shape
+            ));
+        }
+        if w.shape != c.inputs[1].shape {
+            return Err(anyhow!(
+                "cached weight shape {:?} != executable {:?}",
+                w.shape,
+                c.inputs[1].shape
+            ));
+        }
+        let xb = self
+            .client
+            .buffer_from_host_buffer::<i32>(x, &xs.shape, None)?;
+        let result = c.exe.execute_b::<&xla::PjRtBuffer>(&[&xb, &w.buf])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// A pre-marshalled device buffer (weights that stay resident).
+pub struct CachedLiteral {
+    buf: xla::PjRtBuffer,
+    shape: Vec<usize>,
+}
+
+// SAFETY: the buffer lives on the single-device CPU client; all
+// executions go through the Engine mutex.
+unsafe impl Send for CachedLiteral {}
+unsafe impl Sync for CachedLiteral {}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests that need real artifacts live in
+    //! `rust/tests/integration_runtime.rs` (they require `make artifacts`).
+
+    use super::*;
+
+    #[test]
+    fn kind_is_hashable_key() {
+        let mut m = std::collections::HashMap::new();
+        m.insert(("a".to_string(), Kind::Macro), 1);
+        m.insert(("a".to_string(), Kind::Reference), 2);
+        assert_eq!(m.len(), 2);
+    }
+}

@@ -1,0 +1,258 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted.
+//!
+//! `artifacts/manifest.json` describes, per case-study design, the two
+//! HLO-text executables (`mvm` — the bit-true macro datapath; `ref` —
+//! the exact integer matmul with identical shapes) plus the macro
+//! configuration the kernel was specialized for.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Tensor interface of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One HLO artifact file.
+#[derive(Debug, Clone)]
+pub struct ArtifactFile {
+    pub path: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Macro configuration baked into the artifact (mirrors the python
+/// `MacroConfig`).
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub family: String,
+    pub rows: usize,
+    pub d1: usize,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+    pub dac_res: u32,
+    pub adc_res: u32,
+    pub n_slices: u32,
+    pub adc_lsb: f64,
+}
+
+/// One design's artifacts.
+#[derive(Debug, Clone)]
+pub struct DesignArtifacts {
+    pub name: String,
+    pub config: ArtifactConfig,
+    pub mvm: ArtifactFile,
+    pub reference: ArtifactFile,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub dir: PathBuf,
+    pub designs: BTreeMap<String, DesignArtifacts>,
+}
+
+/// Manifest loading errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: String,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Json(String),
+    #[error("manifest missing field: {0}")]
+    Missing(String),
+}
+
+fn jstr(j: &Json, key: &str) -> Result<String, ManifestError> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| ManifestError::Missing(key.to_string()))
+}
+
+fn jnum(j: &Json, key: &str) -> Result<f64, ManifestError> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| ManifestError::Missing(key.to_string()))
+}
+
+fn tensor_specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>, ManifestError> {
+    let arr = j
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| ManifestError::Missing(key.to_string()))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| ManifestError::Missing("shape".into()))?
+                .iter()
+                .map(|d| d.as_u64().map(|u| u as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| ManifestError::Missing("shape dims".into()))?;
+            Ok(TensorSpec {
+                shape,
+                dtype: jstr(t, "dtype")?,
+            })
+        })
+        .collect()
+}
+
+fn artifact_file(dir: &Path, j: &Json) -> Result<ArtifactFile, ManifestError> {
+    Ok(ArtifactFile {
+        path: dir.join(jstr(j, "path")?),
+        sha256: jstr(j, "sha256")?,
+        inputs: tensor_specs(j, "inputs")?,
+        outputs: tensor_specs(j, "outputs")?,
+    })
+}
+
+/// Load and validate `manifest.json` from an artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<Manifest, ManifestError> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+        path: path.display().to_string(),
+        source,
+    })?;
+    let j = json::parse(&text).map_err(|e| ManifestError::Json(e.to_string()))?;
+    let batch = j
+        .get("batch")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| ManifestError::Missing("batch".into()))? as usize;
+    let designs_j = j
+        .get("designs")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| ManifestError::Missing("designs".into()))?;
+    let mut designs = BTreeMap::new();
+    for (name, dj) in designs_j {
+        let cj = dj
+            .get("config")
+            .ok_or_else(|| ManifestError::Missing("config".into()))?;
+        let config = ArtifactConfig {
+            family: jstr(cj, "family")?,
+            rows: jnum(cj, "rows")? as usize,
+            d1: jnum(cj, "d1")? as usize,
+            weight_bits: jnum(cj, "weight_bits")? as u32,
+            act_bits: jnum(cj, "act_bits")? as u32,
+            dac_res: jnum(cj, "dac_res")? as u32,
+            adc_res: jnum(cj, "adc_res")? as u32,
+            n_slices: jnum(cj, "n_slices")? as u32,
+            adc_lsb: jnum(cj, "adc_lsb")?,
+        };
+        let files = dj
+            .get("files")
+            .ok_or_else(|| ManifestError::Missing("files".into()))?;
+        let mvm = artifact_file(
+            dir,
+            files
+                .get("mvm")
+                .ok_or_else(|| ManifestError::Missing("files.mvm".into()))?,
+        )?;
+        let reference = artifact_file(
+            dir,
+            files
+                .get("ref")
+                .ok_or_else(|| ManifestError::Missing("files.ref".into()))?,
+        )?;
+        designs.insert(
+            name.clone(),
+            DesignArtifacts {
+                name: name.clone(),
+                config,
+                mvm,
+                reference,
+            },
+        );
+    }
+    Ok(Manifest {
+        batch,
+        dir: dir.to_path_buf(),
+        designs,
+    })
+}
+
+/// Default artifacts directory: `$IMCSIM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("IMCSIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        let text = r#"{
+          "batch": 4,
+          "designs": {
+            "d": {
+              "config": {"family": "dimc", "rows": 16, "d1": 4,
+                         "weight_bits": 4, "act_bits": 4, "dac_res": 1,
+                         "adc_res": 0, "n_slices": 4, "adc_lsb": 1.0},
+              "files": {
+                "mvm": {"path": "d_mvm.hlo.txt", "sha256": "x",
+                        "inputs": [{"shape": [4, 16], "dtype": "s32"},
+                                    {"shape": [16, 4], "dtype": "s32"}],
+                        "outputs": [{"shape": [4, 4], "dtype": "s32"}]},
+                "ref": {"path": "d_ref.hlo.txt", "sha256": "y",
+                        "inputs": [{"shape": [4, 16], "dtype": "s32"},
+                                    {"shape": [16, 4], "dtype": "s32"}],
+                        "outputs": [{"shape": [4, 4], "dtype": "s32"}]}
+              }
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("imcsim_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = load_manifest(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(m.batch, 4);
+        let d = &m.designs["d"];
+        assert_eq!(d.config.rows, 16);
+        assert_eq!(d.mvm.inputs[0].shape, vec![4, 16]);
+        assert_eq!(d.mvm.inputs[0].elems(), 64);
+        assert!(d.mvm.path.ends_with("d_mvm.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_is_io_error() {
+        let r = load_manifest(Path::new("/nonexistent_imcsim"));
+        assert!(matches!(r, Err(ManifestError::Io { .. })));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // integration-style: if `make artifacts` has run, the real
+        // manifest must parse and contain the four Table II designs
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = load_manifest(&dir).unwrap();
+            for d in ["aimc_large", "aimc_multi", "dimc_large", "dimc_multi"] {
+                assert!(m.designs.contains_key(d), "missing {d}");
+            }
+        }
+    }
+}

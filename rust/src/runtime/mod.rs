@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest + execution engine for the
+//! AOT-compiled functional macro simulator (built by `make artifacts`).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{CachedLiteral, Engine, Kind};
+pub use manifest::{
+    default_artifacts_dir, load_manifest, ArtifactConfig, ArtifactFile, DesignArtifacts,
+    Manifest, ManifestError, TensorSpec,
+};

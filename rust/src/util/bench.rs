@@ -1,0 +1,173 @@
+//! Tiny benchmark harness for `cargo bench` targets (offline build: no
+//! criterion). Prints per-benchmark statistics in a criterion-like
+//! format and supports `--quick` (fewer samples) plus substring filters
+//! passed on the command line, as `cargo bench <filter>` does.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over the measured sample times.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+fn human(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner — one per bench binary.
+pub struct Bench {
+    filters: Vec<String>,
+    quick: bool,
+    results: Vec<(String, Stats)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Bench {
+    /// Parse `--quick` / `--bench` (ignored, cargo passes it) / filters
+    /// from argv.
+    pub fn from_args() -> Self {
+        let mut filters = Vec::new();
+        let mut quick = std::env::var("IMCSIM_BENCH_QUICK").is_ok();
+        for a in std::env::args().skip(1) {
+            match a.as_str() {
+                "--bench" | "--test" => {}
+                "--quick" => quick = true,
+                s if s.starts_with('-') => {}
+                s => filters.push(s.to_string()),
+            }
+        }
+        Bench {
+            filters,
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filters.is_empty() || self.filters.iter().any(|f| name.contains(f))
+    }
+
+    /// Time `f` repeatedly; returns stats (also prints a summary line).
+    /// The closure's return value is black-boxed to keep the work alive.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Option<Stats> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // warm-up: at least 3 runs or 200 ms
+        let warm_deadline = Instant::now() + Duration::from_millis(if self.quick { 50 } else { 200 });
+        let mut warm_runs = 0u32;
+        let mut last = Duration::ZERO;
+        while warm_runs < 3 || Instant::now() < warm_deadline {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            last = t0.elapsed();
+            warm_runs += 1;
+            if warm_runs > 10_000 {
+                break;
+            }
+        }
+        // choose sample count so total time ~ 1 s (quick: 0.2 s)
+        let budget = Duration::from_millis(if self.quick { 200 } else { 1000 });
+        let per = last.max(Duration::from_nanos(50));
+        let target: usize = (budget.as_nanos() / per.as_nanos().max(1)) as usize;
+        let samples = target.clamp(5, if self.quick { 200 } else { 2000 });
+
+        let mut times: Vec<f64> = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let stats = Stats {
+            samples,
+            mean_ns: mean,
+            median_ns: times[times.len() / 2],
+            stddev_ns: var.sqrt(),
+            min_ns: times[0],
+            max_ns: *times.last().unwrap(),
+        };
+        println!(
+            "{name:<44} time: [{} {} {}]  ({} samples)",
+            human(stats.min_ns),
+            human(stats.median_ns),
+            human(stats.max_ns),
+            stats.samples
+        );
+        self.results.push((name.to_string(), stats));
+        Some(stats)
+    }
+
+    /// Throughput helper: elements/second from a stats record.
+    pub fn throughput(stats: &Stats, elems: u64) -> f64 {
+        elems as f64 / (stats.median_ns * 1e-9)
+    }
+
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+}
+
+/// Convenience: print a named metric line in the bench output (for
+/// paper-figure values that accompany the timing numbers).
+pub fn report_metric(name: &str, value: f64, unit: &str) {
+    println!("{name:<44} metric: {value:.4} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_stats() {
+        let mut b = Bench {
+            filters: vec![],
+            quick: true,
+            results: vec![],
+        };
+        let s = b.bench("noop", || 1 + 1).unwrap();
+        assert!(s.samples >= 5);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn filters_disable() {
+        let mut b = Bench {
+            filters: vec!["other".into()],
+            quick: true,
+            results: vec![],
+        };
+        assert!(b.bench("this", || ()).is_none());
+        assert!(b.bench("the_other_one", || ()).is_some());
+    }
+
+    #[test]
+    fn human_format() {
+        assert_eq!(human(500.0), "500.0 ns");
+        assert!(human(5_000.0).contains("µs"));
+        assert!(human(5_000_000.0).contains("ms"));
+        assert!(human(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CLI argument parser (offline build: no clap).
+//!
+//! Supports `imcsim <subcommand> [--flag] [--key value] [positional…]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Option<Result<T, String>> {
+        self.opt(name).map(|s| {
+            s.parse::<T>()
+                .map_err(|_| format!("invalid value for --{name}: {s}"))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig5 --family aimc --sparsity 0.5 --csv");
+        assert_eq!(a.subcommand.as_deref(), Some("fig5"));
+        assert_eq!(a.opt("family"), Some("aimc"));
+        assert_eq!(a.opt("sparsity"), Some("0.5"));
+        assert!(a.flag("csv"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("dse --network=resnet8 --top=5");
+        assert_eq!(a.opt("network"), Some("resnet8"));
+        assert_eq!(a.opt_parse::<usize>("top"), Some(Ok(5)));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_positional() {
+        let a = parse("serve model.hlo --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["model.hlo"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn opt_parse_error() {
+        let a = parse("x --n abc");
+        assert!(a.opt_parse::<u32>("n").unwrap().is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Std-only infrastructure: this workspace builds fully offline, so the
+//! usual ecosystem crates are replaced by small focused implementations.
+//!
+//! * [`json`] — JSON parser/writer (artifact manifest, report output).
+//! * [`toml_lite`] — TOML subset parser (architecture configs).
+//! * [`pool`] — scoped parallel map over std threads (DSE fan-out).
+//! * [`prng`] — deterministic xoshiro256** (tests, synthetic workloads).
+//! * [`bench`] — criterion-style bench harness for `cargo bench`.
+//! * [`cli`] — argument parsing for the `imcsim` launcher.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod toml_lite;

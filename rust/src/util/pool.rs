@@ -1,0 +1,120 @@
+//! Scoped parallel-map on std threads (offline build: no rayon).
+//!
+//! The DSE engine evaluates thousands of independent (layer × mapping)
+//! cost points; [`parallel_map`] fans them out over a fixed worker count
+//! with a simple atomic work index (dynamic load balancing, no unsafe).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: respects `IMCSIM_THREADS`, defaults to the number
+/// of available cores (capped at 16 — the workloads here saturate well
+/// before that).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("IMCSIM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Apply `f` to every item in parallel, preserving order of results.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_with(items, default_threads(), f)
+}
+
+/// [`parallel_map`] with an explicit worker count.
+pub fn parallel_map_with<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker failed to fill slot"))
+        .collect()
+}
+
+/// Parallel fold: map every item then reduce with `combine` (associative).
+pub fn parallel_fold<T, A, F, G>(items: &[T], init: A, f: F, combine: G) -> A
+where
+    T: Sync,
+    A: Send + Clone,
+    F: Fn(&T) -> A + Sync,
+    G: Fn(A, A) -> A,
+{
+    let mapped = parallel_map(items, f);
+    mapped.into_iter().fold(init, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = [1, 2, 3];
+        assert_eq!(parallel_map_with(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = [7];
+        assert_eq!(parallel_map_with(&items, 32, |&x| x), vec![7]);
+    }
+
+    #[test]
+    fn fold_sums() {
+        let items: Vec<u64> = (1..=100).collect();
+        let total = parallel_fold(&items, 0u64, |&x| x, |a, b| a + b);
+        assert_eq!(total, 5050);
+    }
+}

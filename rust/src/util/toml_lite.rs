@@ -1,0 +1,325 @@
+//! Minimal TOML subset parser (std-only, offline build).
+//!
+//! Supports what the `configs/*.toml` architecture files need:
+//! `key = value` pairs (string / integer / float / bool / flat arrays),
+//! `[table]` and `[table.subtable]` headers, `[[array-of-tables]]`,
+//! comments, and blank lines. Multiline strings/arrays are not supported.
+
+use std::collections::BTreeMap;
+
+/// A TOML-lite value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_table().and_then(|t| t.get(key))
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {message}")]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+fn err(line: usize, message: impl Into<String>) -> TomlError {
+    TomlError {
+        line,
+        message: message.into(),
+    }
+}
+
+/// Parse a TOML-lite document into a root table.
+pub fn parse(text: &str) -> Result<Value, TomlError> {
+    let mut root = BTreeMap::new();
+    // current table path ([] = root); path + is_array_elem
+    let mut path: Vec<String> = Vec::new();
+
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix("[[") {
+            let h = h
+                .strip_suffix("]]")
+                .ok_or_else(|| err(lineno, "unterminated [[header]]"))?;
+            path = split_path(h);
+            push_array_table(&mut root, &path, lineno)?;
+        } else if let Some(h) = line.strip_prefix('[') {
+            let h = h
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated [header]"))?;
+            path = split_path(h);
+            ensure_table(&mut root, &path, lineno)?;
+        } else {
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = k.trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let val = parse_value(v.trim(), lineno)?;
+            let table = current_table(&mut root, &path, lineno)?;
+            if table.insert(key.clone(), val).is_some() {
+                return Err(err(lineno, format!("duplicate key '{key}'")));
+            }
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_path(h: &str) -> Vec<String> {
+    h.split('.').map(|s| s.trim().to_string()).collect()
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, TomlError> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::Arr(v) => match v.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return Err(err(lineno, format!("'{seg}' is not a table"))),
+            },
+            _ => return Err(err(lineno, format!("'{seg}' is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), TomlError> {
+    let (last, parent_path) = path
+        .split_last()
+        .ok_or_else(|| err(lineno, "empty [[header]]"))?;
+    let parent = ensure_table(root, parent_path, lineno)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::Arr(Vec::new()));
+    match entry {
+        Value::Arr(v) => {
+            v.push(Value::Table(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(err(lineno, format!("'{last}' is not an array of tables"))),
+    }
+}
+
+fn current_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, TomlError> {
+    ensure_table(root, path, lineno)
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, TomlError> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items = split_top_level(inner);
+        return items
+            .into_iter()
+            .map(|it| parse_value(it.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::Arr);
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value: {s}")))
+}
+
+/// Split on commas not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_architecture_config() {
+        let text = r#"
+            # case-study design
+            name = "aimc_large"
+            n_macros = 1
+
+            [macro]
+            name = "aimc_1152x256"
+            family = "aimc"
+            rows = 1152
+            vdd = 0.8
+        "#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("aimc_large"));
+        assert_eq!(v.get("n_macros").unwrap().as_int(), Some(1));
+        let m = v.get("macro").unwrap();
+        assert_eq!(m.get("rows").unwrap().as_int(), Some(1152));
+        assert_eq!(m.get("vdd").unwrap().as_float(), Some(0.8));
+        assert_eq!(m.get("family").unwrap().as_str(), Some("aimc"));
+    }
+
+    #[test]
+    fn nested_and_array_tables() {
+        let text = r#"
+            [a.b]
+            x = 1
+            [[levels]]
+            name = "sram"
+            ops = ["i", "w", "o"]
+            [[levels]]
+            name = "dram"
+            size = 1_000_000
+        "#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("a").unwrap().get("b").unwrap().get("x").unwrap().as_int(), Some(1));
+        let levels = v.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].get("name").unwrap().as_str(), Some("sram"));
+        assert_eq!(levels[1].get("size").unwrap().as_int(), Some(1_000_000));
+        let ops = levels[0].get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops.len(), 3);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let v = parse("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn arrays_of_numbers() {
+        let v = parse("a = [1, 2.5, -3]").unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].as_int(), Some(1));
+        assert_eq!(a[1].as_float(), Some(2.5));
+        assert_eq!(a[2].as_int(), Some(-3));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = 1\ny =").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("dup = 1\ndup = 2").is_err());
+    }
+}

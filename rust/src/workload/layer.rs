@@ -1,0 +1,334 @@
+//! DNN layer algebra: the 8-nested-loop representation (paper Fig. 1).
+//!
+//! ```text
+//! for b  in 0..B    batch
+//! for g  in 0..G    groups
+//! for ox in 0..OX   output columns
+//! for oy in 0..OY   output rows
+//! for k  in 0..K    output channels (per group)
+//! for c  in 0..C    input channels (per group)
+//! for fx in 0..FX   weight columns
+//! for fy in 0..FY   weight rows
+//!   O[b][g][k][ox][oy] += I[b][g][c][ox·s+fx][oy·s+fy] · W[k][g][c][fx][fy]
+//! ```
+
+
+/// The seven loop dimensions of Fig. 1 (+ stride).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopDim {
+    B,
+    G,
+    OX,
+    OY,
+    K,
+    C,
+    FX,
+    FY,
+}
+
+pub const ALL_DIMS: [LoopDim; 8] = [
+    LoopDim::B,
+    LoopDim::G,
+    LoopDim::OX,
+    LoopDim::OY,
+    LoopDim::K,
+    LoopDim::C,
+    LoopDim::FX,
+    LoopDim::FY,
+];
+
+impl LoopDim {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LoopDim::B => "B",
+            LoopDim::G => "G",
+            LoopDim::OX => "OX",
+            LoopDim::OY => "OY",
+            LoopDim::K => "K",
+            LoopDim::C => "C",
+            LoopDim::FX => "FX",
+            LoopDim::FY => "FY",
+        }
+    }
+
+    /// Dimensions irrelevant for the *input* operand: iterating them
+    /// re-reads the same input element (spatial multicast opportunity).
+    pub fn input_irrelevant(&self) -> bool {
+        matches!(self, LoopDim::K)
+    }
+
+    /// Dimensions irrelevant for the *weight* operand.
+    pub fn weight_irrelevant(&self) -> bool {
+        matches!(self, LoopDim::B | LoopDim::OX | LoopDim::OY)
+    }
+
+    /// Dimensions irrelevant for the *output* operand (reduction loops —
+    /// iterating them accumulates into the same output element).
+    pub fn output_irrelevant(&self) -> bool {
+        matches!(self, LoopDim::C | LoopDim::FX | LoopDim::FY)
+    }
+}
+
+impl std::fmt::Display for LoopDim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Operator taxonomy of Fig. 1's workload table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerType {
+    /// Full convolution (G=1).
+    Conv2d,
+    /// Depthwise convolution (K=1, C=1, G = channels).
+    Depthwise,
+    /// 1×1 convolution (FX=FY=1).
+    Pointwise,
+    /// Fully connected (OX=OY=FX=FY=1).
+    Dense,
+}
+
+impl LayerType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerType::Conv2d => "Conv2D",
+            LayerType::Depthwise => "Depthwise",
+            LayerType::Pointwise => "Pointwise",
+            LayerType::Dense => "Dense",
+        }
+    }
+}
+
+impl std::fmt::Display for LayerType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One DNN layer: loop bounds + stride.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub ltype: LayerType,
+    pub b: usize,
+    pub g: usize,
+    pub k: usize,
+    pub c: usize,
+    pub ox: usize,
+    pub oy: usize,
+    pub fx: usize,
+    pub fy: usize,
+    pub stride: usize,
+}
+
+impl Layer {
+    pub fn size(&self, d: LoopDim) -> usize {
+        match d {
+            LoopDim::B => self.b,
+            LoopDim::G => self.g,
+            LoopDim::OX => self.ox,
+            LoopDim::OY => self.oy,
+            LoopDim::K => self.k,
+            LoopDim::C => self.c,
+            LoopDim::FX => self.fx,
+            LoopDim::FY => self.fy,
+        }
+    }
+
+    /// Total MAC operations.
+    pub fn macs(&self) -> u64 {
+        ALL_DIMS.iter().map(|&d| self.size(d) as u64).product()
+    }
+
+    /// Input feature-map elements (stride-aware receptive field).
+    pub fn input_elems(&self) -> u64 {
+        let ix = (self.ox - 1) * self.stride + self.fx;
+        let iy = (self.oy - 1) * self.stride + self.fy;
+        (self.b * self.g * self.c * ix * iy) as u64
+    }
+
+    /// Weight elements.
+    pub fn weight_elems(&self) -> u64 {
+        (self.g * self.k * self.c * self.fx * self.fy) as u64
+    }
+
+    /// Output feature-map elements.
+    pub fn output_elems(&self) -> u64 {
+        (self.b * self.g * self.k * self.ox * self.oy) as u64
+    }
+
+    /// Reduction size per output element (accumulation depth on the
+    /// macro rows: C·FX·FY).
+    pub fn reduction_size(&self) -> usize {
+        self.c * self.fx * self.fy
+    }
+
+    /// Structural validation + taxonomy consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        for d in ALL_DIMS {
+            if self.size(d) == 0 {
+                return Err(format!("{}: dimension {d} is zero", self.name));
+            }
+        }
+        if self.stride == 0 {
+            return Err(format!("{}: stride is zero", self.name));
+        }
+        let ok = match self.ltype {
+            LayerType::Conv2d => self.g == 1,
+            LayerType::Depthwise => self.k == 1 && self.c == 1 && self.g > 1,
+            LayerType::Pointwise => self.fx == 1 && self.fy == 1 && self.g == 1,
+            LayerType::Dense => {
+                self.ox == 1 && self.oy == 1 && self.fx == 1 && self.fy == 1 && self.g == 1
+            }
+        };
+        if !ok {
+            return Err(format!(
+                "{}: dimensions inconsistent with type {}",
+                self.name, self.ltype
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- constructors matching Fig. 1's workload table ----
+
+    /// Conv2D: G=1.
+    pub fn conv2d(name: &str, oy: usize, ox: usize, k: usize, c: usize, fy: usize, fx: usize, stride: usize) -> Self {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Conv2d,
+            b: 1,
+            g: 1,
+            k,
+            c,
+            ox,
+            oy,
+            fx,
+            fy,
+            stride,
+        }
+    }
+
+    /// Depthwise: G=channels, K=C=1.
+    pub fn depthwise(name: &str, oy: usize, ox: usize, g: usize, fy: usize, fx: usize, stride: usize) -> Self {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Depthwise,
+            b: 1,
+            g,
+            k: 1,
+            c: 1,
+            ox,
+            oy,
+            fx,
+            fy,
+            stride,
+        }
+    }
+
+    /// Pointwise: FX=FY=1.
+    pub fn pointwise(name: &str, oy: usize, ox: usize, k: usize, c: usize) -> Self {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Pointwise,
+            b: 1,
+            g: 1,
+            k,
+            c,
+            ox,
+            oy,
+            fx: 1,
+            fy: 1,
+            stride: 1,
+        }
+    }
+
+    /// Dense: OX=OY=FX=FY=1.
+    pub fn dense(name: &str, k: usize, c: usize) -> Self {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Dense,
+            b: 1,
+            g: 1,
+            k,
+            c,
+            ox: 1,
+            oy: 1,
+            fx: 1,
+            fy: 1,
+            stride: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_counts() {
+        let l = Layer::conv2d("c", 32, 32, 16, 3, 3, 3, 1);
+        assert_eq!(l.macs(), 32 * 32 * 16 * 3 * 3 * 3);
+        let d = Layer::dense("d", 128, 640);
+        assert_eq!(d.macs(), 128 * 640);
+    }
+
+    #[test]
+    fn operand_sizes_stride1() {
+        let l = Layer::conv2d("c", 30, 30, 8, 3, 3, 3, 1);
+        assert_eq!(l.input_elems(), 3 * 32 * 32);
+        assert_eq!(l.weight_elems(), 8 * 3 * 3 * 3);
+        assert_eq!(l.output_elems(), 8 * 30 * 30);
+    }
+
+    #[test]
+    fn operand_sizes_stride2() {
+        let l = Layer::conv2d("c", 16, 16, 8, 3, 3, 3, 2);
+        // receptive field: (16-1)*2 + 3 = 33
+        assert_eq!(l.input_elems(), 3 * 33 * 33);
+    }
+
+    #[test]
+    fn depthwise_taxonomy() {
+        let l = Layer::depthwise("dw", 24, 24, 32, 3, 3, 1);
+        l.validate().unwrap();
+        assert_eq!(l.macs(), 24 * 24 * 32 * 9);
+        assert_eq!(l.weight_elems(), 32 * 9);
+        // depthwise has no accumulation across channels
+        assert_eq!(l.reduction_size(), 9);
+    }
+
+    #[test]
+    fn pointwise_has_no_spatial_reduction() {
+        let l = Layer::pointwise("pw", 24, 24, 64, 32);
+        l.validate().unwrap();
+        assert_eq!(l.reduction_size(), 32);
+    }
+
+    #[test]
+    fn validation_catches_type_mismatch() {
+        let mut l = Layer::dense("d", 10, 64);
+        l.ox = 2;
+        assert!(l.validate().is_err());
+        let mut l = Layer::pointwise("p", 8, 8, 16, 16);
+        l.fx = 3;
+        assert!(l.validate().is_err());
+        let mut l = Layer::conv2d("c", 8, 8, 16, 16, 3, 3, 1);
+        l.stride = 0;
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn irrelevance_sets_match_paper() {
+        // K loops are irrelevant for inputs (multicast across columns);
+        // C, FX, FY irrelevant for outputs (accumulated along rows).
+        assert!(LoopDim::K.input_irrelevant());
+        assert!(!LoopDim::C.input_irrelevant());
+        for d in [LoopDim::C, LoopDim::FX, LoopDim::FY] {
+            assert!(d.output_irrelevant());
+        }
+        for d in [LoopDim::B, LoopDim::OX, LoopDim::OY] {
+            assert!(d.weight_irrelevant());
+        }
+    }
+}

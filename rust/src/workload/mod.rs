@@ -1,0 +1,10 @@
+//! DNN workload representation: the 8-nested-loop layer algebra (paper
+//! Fig. 1) and the tinyMLPerf model zoo used by the §VI case studies.
+
+pub mod layer;
+pub mod network;
+pub mod tinymlperf;
+
+pub use layer::{Layer, LayerType, LoopDim, ALL_DIMS};
+pub use network::{Network, OperatorBreakdown};
+pub use tinymlperf::{all_networks, deep_autoencoder, ds_cnn, mobilenet_v1, resnet8};

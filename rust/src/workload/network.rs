@@ -1,0 +1,96 @@
+//! Networks: ordered layer lists + the Fig. 1 operator breakdown.
+
+use std::collections::BTreeMap;
+
+
+use super::layer::{Layer, LayerType};
+
+/// A DNN workload: a sequence of layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// MAC share per operator type (the Fig. 1 pie-chart data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OperatorBreakdown {
+    pub total_macs: u64,
+    /// (type, macs, fraction) sorted by descending share.
+    pub shares: Vec<(LayerType, u64, f64)>,
+}
+
+impl Network {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Self {
+        Network {
+            name: name.into(),
+            layers,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems()).sum()
+    }
+
+    /// MAC share per operator type (Fig. 1 operator breakdown).
+    pub fn operator_breakdown(&self) -> OperatorBreakdown {
+        let mut by_type: BTreeMap<&'static str, (LayerType, u64)> = BTreeMap::new();
+        for l in &self.layers {
+            let e = by_type.entry(l.ltype.as_str()).or_insert((l.ltype, 0));
+            e.1 += l.macs();
+        }
+        let total: u64 = by_type.values().map(|v| v.1).sum();
+        let mut shares: Vec<(LayerType, u64, f64)> = by_type
+            .values()
+            .map(|&(t, m)| (t, m, m as f64 / total.max(1) as f64))
+            .collect();
+        shares.sort_by(|a, b| b.1.cmp(&a.1));
+        OperatorBreakdown {
+            total_macs: total,
+            shares,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err(format!("{}: no layers", self.name));
+        }
+        for l in &self.layers {
+            l.validate()
+                .map_err(|e| format!("{}/{}", self.name, e))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let net = Network::new(
+            "t",
+            vec![
+                Layer::conv2d("c1", 8, 8, 16, 3, 3, 3, 1),
+                Layer::pointwise("p1", 8, 8, 32, 16),
+                Layer::dense("d1", 10, 256),
+            ],
+        );
+        let b = net.operator_breakdown();
+        let sum: f64 = b.shares.iter().map(|s| s.2).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(b.total_macs, net.total_macs());
+        // sorted descending
+        assert!(b.shares.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn empty_network_invalid() {
+        assert!(Network::new("e", vec![]).validate().is_err());
+    }
+}

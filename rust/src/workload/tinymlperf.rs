@@ -1,0 +1,155 @@
+//! The tinyMLPerf benchmark model zoo (paper §VI case studies; [22]).
+//!
+//! Layer tables transcribed from the MLPerf Tiny reference models:
+//!
+//! * **DeepAutoEncoder** — anomaly detection (ToyADMOS): all Dense.
+//! * **ResNet8** — CIFAR-10 image classification: mostly Conv2D.
+//! * **DS-CNN** — keyword spotting (Speech Commands): depthwise-separable.
+//! * **MobileNetV1 0.25×** — visual wake words (96×96): dw/pw stacks.
+//!
+//! Only loop bounds matter to the cost model; batch = 1 (edge inference).
+
+use super::layer::Layer;
+use super::network::Network;
+
+/// MLPerf Tiny anomaly-detection autoencoder: 640-128×4-8-128×4-640.
+pub fn deep_autoencoder() -> Network {
+    let dims = [640, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640];
+    let layers = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| Layer::dense(&format!("fc{}", i + 1), w[1], w[0]))
+        .collect();
+    Network::new("DeepAutoEncoder", layers)
+}
+
+/// MLPerf Tiny ResNet8 for CIFAR-10 (32×32×3 input).
+pub fn resnet8() -> Network {
+    let layers = vec![
+        Layer::conv2d("conv1", 32, 32, 16, 3, 3, 3, 1),
+        // stack 1 (16ch, stride 1)
+        Layer::conv2d("res1_conv1", 32, 32, 16, 16, 3, 3, 1),
+        Layer::conv2d("res1_conv2", 32, 32, 16, 16, 3, 3, 1),
+        // stack 2 (32ch, stride 2 + 1x1 projection skip)
+        Layer::conv2d("res2_conv1", 16, 16, 32, 16, 3, 3, 2),
+        Layer::conv2d("res2_conv2", 16, 16, 32, 32, 3, 3, 1),
+        Layer::pointwise("res2_skip", 16, 16, 32, 16),
+        // stack 3 (64ch, stride 2 + 1x1 projection skip)
+        Layer::conv2d("res3_conv1", 8, 8, 64, 32, 3, 3, 2),
+        Layer::conv2d("res3_conv2", 8, 8, 64, 64, 3, 3, 1),
+        Layer::pointwise("res3_skip", 8, 8, 64, 32),
+        // classifier
+        Layer::dense("fc", 10, 64),
+    ];
+    Network::new("ResNet8", layers)
+}
+
+/// MLPerf Tiny DS-CNN for keyword spotting (49×10×1 MFCC input).
+pub fn ds_cnn() -> Network {
+    let mut layers = vec![Layer::conv2d("conv1", 25, 5, 64, 1, 10, 4, 2)];
+    for i in 1..=4 {
+        layers.push(Layer::depthwise(&format!("dw{i}"), 25, 5, 64, 3, 3, 1));
+        layers.push(Layer::pointwise(&format!("pw{i}"), 25, 5, 64, 64));
+    }
+    layers.push(Layer::dense("fc", 12, 64));
+    Network::new("DS-CNN", layers)
+}
+
+/// MLPerf Tiny MobileNetV1 (width 0.25, 96×96×3) for visual wake words.
+pub fn mobilenet_v1() -> Network {
+    // (name suffix, out spatial, channels-in, channels-out, stride of dw)
+    // follows the standard 13 dw/pw pairs at width multiplier 0.25
+    let mut layers = vec![Layer::conv2d("conv1", 48, 48, 8, 3, 3, 3, 2)];
+    let stages: [(usize, usize, usize, usize); 13] = [
+        // (spatial_out, c_in, c_out, dw_stride)
+        (48, 8, 16, 1),
+        (24, 16, 32, 2),
+        (24, 32, 32, 1),
+        (12, 32, 64, 2),
+        (12, 64, 64, 1),
+        (6, 64, 128, 2),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (6, 128, 128, 1),
+        (3, 128, 256, 2),
+        (3, 256, 256, 1),
+    ];
+    for (i, &(sp, cin, cout, s)) in stages.iter().enumerate() {
+        layers.push(Layer::depthwise(&format!("dw{}", i + 1), sp, sp, cin, 3, 3, s));
+        layers.push(Layer::pointwise(&format!("pw{}", i + 1), sp, sp, cout, cin));
+    }
+    layers.push(Layer::dense("fc", 2, 256));
+    Network::new("MobileNetV1-0.25", layers)
+}
+
+/// All four case-study networks in paper order.
+pub fn all_networks() -> Vec<Network> {
+    vec![deep_autoencoder(), resnet8(), ds_cnn(), mobilenet_v1()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layer::LayerType;
+
+    #[test]
+    fn all_networks_valid() {
+        for n in all_networks() {
+            n.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn autoencoder_is_all_dense() {
+        let b = deep_autoencoder().operator_breakdown();
+        assert_eq!(b.shares.len(), 1);
+        assert_eq!(b.shares[0].0, LayerType::Dense);
+        // 264.2 kMAC total (sum of the 10 FC layers)
+        assert_eq!(deep_autoencoder().total_macs(), 264_192);
+    }
+
+    #[test]
+    fn resnet8_is_conv_dominated() {
+        let b = resnet8().operator_breakdown();
+        assert_eq!(b.shares[0].0, LayerType::Conv2d);
+        assert!(b.shares[0].2 > 0.9, "conv share {}", b.shares[0].2);
+        // MLPerf Tiny ResNet8 ≈ 12.5 MMAC
+        let m = resnet8().total_macs();
+        assert!((12_000_000..13_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn ds_cnn_is_pointwise_dominated() {
+        let b = ds_cnn().operator_breakdown();
+        assert_eq!(b.shares[0].0, LayerType::Pointwise);
+        // paper Fig. 1: pointwise dominates DS-CNN's MACs
+        assert!(b.shares[0].2 > 0.5);
+        let m = ds_cnn().total_macs();
+        assert!((2_000_000..3_500_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn mobilenet_is_pointwise_dominated_with_depthwise() {
+        let net = mobilenet_v1();
+        let b = net.operator_breakdown();
+        assert_eq!(b.shares[0].0, LayerType::Pointwise);
+        let has_dw = b.shares.iter().any(|s| s.0 == LayerType::Depthwise);
+        assert!(has_dw);
+        // MLPerf Tiny MobileNetV1-0.25 ≈ 7-8 MMAC
+        let m = net.total_macs();
+        assert!((6_000_000..9_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn channel_chaining_consistent() {
+        // every pw's C equals the preceding dw's G
+        let net = mobilenet_v1();
+        for w in net.layers.windows(2) {
+            if w[0].name.starts_with("dw") && w[1].name.starts_with("pw") {
+                assert_eq!(w[0].g, w[1].c, "{} -> {}", w[0].name, w[1].name);
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration: the serving coordinator end-to-end (batcher + tiler +
+//! TinyCNN) against real artifacts. Skips without `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use imcsim::coordinator::{BatchServer, MatI32, Tensor4, Tiler, TinyCnn};
+use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
+use imcsim::util::prng::Rng;
+
+fn engine() -> Option<Arc<Engine>> {
+    match load_manifest(&default_artifacts_dir()) {
+        Ok(m) => Some(Arc::new(Engine::new(m).expect("PJRT client"))),
+        Err(_) => {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn tinycnn_dimc_macro_equals_reference_predictions() {
+    let Some(e) = engine() else { return };
+    let d = e.design("dimc_large").unwrap().clone();
+    let net = TinyCnn::random(42, 16, d.config.act_bits, d.config.weight_bits);
+    let tiler = Tiler::new(&e, "dimc_large").unwrap();
+    let mut rng = Rng::new(5);
+    let x = Tensor4::random(&mut rng, 8, 16, 16, 1, d.config.act_bits);
+    let (logits_m, preds_m, _) = net.forward(&tiler, &x, Kind::Macro).unwrap();
+    let (logits_r, preds_r, _) = net.forward(&tiler, &x, Kind::Reference).unwrap();
+    // DIMC is bit-exact: logits, not just argmaxes, must match
+    assert_eq!(logits_m, logits_r);
+    assert_eq!(preds_m, preds_r);
+}
+
+#[test]
+fn tinycnn_aimc_stays_close_to_reference() {
+    let Some(e) = engine() else { return };
+    let d = e.design("aimc_large").unwrap().clone();
+    let net = TinyCnn::random(42, 16, d.config.act_bits, d.config.weight_bits);
+    let tiler = Tiler::new(&e, "aimc_large").unwrap();
+    let mut rng = Rng::new(6);
+    let x = Tensor4::random(&mut rng, 16, 16, 16, 1, d.config.act_bits);
+    let (_, preds_m, _) = net.forward(&tiler, &x, Kind::Macro).unwrap();
+    let (_, preds_r, _) = net.forward(&tiler, &x, Kind::Reference).unwrap();
+    let agree = preds_m.iter().zip(&preds_r).filter(|(a, b)| a == b).count();
+    // ADC quantization may flip a few argmaxes but not most of them
+    assert!(
+        agree * 2 > preds_m.len(),
+        "only {agree}/{} predictions agree",
+        preds_m.len()
+    );
+}
+
+#[test]
+fn batch_server_serves_all_requests_correctly() {
+    let Some(e) = engine() else { return };
+    let d = e.design("dimc_large").unwrap().clone();
+    let rows = d.config.rows;
+    let d1 = d.config.d1;
+    let mut rng = Rng::new(7);
+    let mut w = MatI32::zeros(rows, d1);
+    for v in &mut w.data {
+        *v = rng.range_i64(-8, 7) as i32;
+    }
+    let server = BatchServer::start(
+        e.clone(),
+        "dimc_large",
+        w.clone(),
+        Kind::Macro,
+        Duration::from_micros(100),
+    )
+    .unwrap();
+
+    let n = 50;
+    let mut xs = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let x: Vec<i32> = (0..rows).map(|_| rng.range_i64(0, 15) as i32).collect();
+        rxs.push(server.submit(x.clone()));
+        xs.push(x);
+    }
+    for (x, rx) in xs.iter().zip(rxs) {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("reply");
+        // verify against host matmul
+        let xm = MatI32::from_vec(1, rows, x.clone()).unwrap();
+        let want = xm.matmul(&w).unwrap();
+        assert_eq!(resp.y, want.data);
+        assert!(resp.batch_size >= 1 && resp.batch_size <= e.batch());
+    }
+    let served = server
+        .stats
+        .requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(served, n as u64);
+}
+
+#[test]
+fn batch_server_batches_under_load() {
+    let Some(e) = engine() else { return };
+    let d = e.design("dimc_multi").unwrap().clone();
+    let rows = d.config.rows;
+    let mut rng = Rng::new(8);
+    let mut w = MatI32::zeros(rows, d.config.d1);
+    for v in &mut w.data {
+        *v = rng.range_i64(-8, 7) as i32;
+    }
+    let server = BatchServer::start(
+        e.clone(),
+        "dimc_multi",
+        w,
+        Kind::Macro,
+        Duration::from_millis(5),
+    )
+    .unwrap();
+    // fire a burst >> batch size, then check mean fill is decent
+    let n = 96;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let x: Vec<i32> = (0..rows).map(|_| rng.range_i64(0, 15) as i32).collect();
+            server.submit(x)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("reply");
+    }
+    let batches = server
+        .stats
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches < n as u64, "no batching happened ({batches} batches)");
+}
+
+#[test]
+fn concurrent_tiler_use_is_safe() {
+    // engine executes under a mutex; concurrent callers must all get
+    // correct results
+    let Some(e) = engine() else { return };
+    let rows = e.design("dimc_large").unwrap().config.rows;
+    let d1 = e.design("dimc_large").unwrap().config.d1;
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let e = e.clone();
+            s.spawn(move || {
+                let tiler = Tiler::new(&e, "dimc_large").unwrap();
+                let mut rng = Rng::new(100 + t);
+                let mut x = MatI32::zeros(4, rows);
+                for v in &mut x.data {
+                    *v = rng.range_i64(0, 15) as i32;
+                }
+                let mut w = MatI32::zeros(rows, d1);
+                for v in &mut w.data {
+                    *v = rng.range_i64(-8, 7) as i32;
+                }
+                let (y, _) = tiler.mvm(&x, &w, Kind::Macro).unwrap();
+                assert_eq!(y, x.matmul(&w).unwrap());
+            });
+        }
+    });
+}

@@ -1,0 +1,208 @@
+//! Integration: the DSE engine end-to-end — the §VI case-study story
+//! plus randomized mapping invariants.
+
+use imcsim::arch::{table2_systems, ImcFamily, ImcMacro, ImcSystem};
+use imcsim::dse::reuse::reuse_lower_bounds_ok;
+use imcsim::dse::{evaluate, search_network, DseOptions};
+use imcsim::mapping::{candidates, tile, ALL_POLICIES};
+use imcsim::model::TechParams;
+use imcsim::util::prng::Rng;
+use imcsim::workload::{all_networks, deep_autoencoder, ds_cnn, mobilenet_v1, resnet8, Layer};
+
+fn macro_tops_w(r: &imcsim::dse::NetworkResult) -> f64 {
+    // macro-level efficiency (excludes DRAM, like the paper's Fig. 7
+    // "peak energy efficiencies" panel)
+    let m = r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj;
+    2.0e3 * r.total_macs() as f64 / m
+}
+
+#[test]
+fn case_study_story_depthwise_networks_prefer_small_arrays() {
+    // §VI: DS-CNN and MobileNetV1 are unsuitable for large-array designs;
+    // multi-macro / smaller-array architectures do better at macro level.
+    let systems = table2_systems();
+    let opts = DseOptions::default();
+    for net in [ds_cnn(), mobilenet_v1()] {
+        let large = search_network(&net, &systems[0], &opts); // aimc_large
+        let multi = search_network(&net, &systems[1], &opts); // aimc_multi
+        let dimc_multi = search_network(&net, &systems[3], &opts);
+        assert!(
+            macro_tops_w(&multi) > macro_tops_w(&large),
+            "{}: aimc_multi {:.1} !> aimc_large {:.1}",
+            net.name,
+            macro_tops_w(&multi),
+            macro_tops_w(&large)
+        );
+        assert!(
+            macro_tops_w(&dimc_multi) > macro_tops_w(&large),
+            "{}: dimc_multi must beat aimc_large at macro level",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn case_study_story_resnet_likes_large_arrays() {
+    // §VI: ResNet8 (large-reduction convs) achieves high efficiency on
+    // the large-array AIMC design: it must beat its own depthwise-
+    // dominated counterpart by a wide utilization margin.
+    let systems = table2_systems();
+    let opts = DseOptions::default();
+    let resnet_large = search_network(&resnet8(), &systems[0], &opts);
+    let dscnn_large = search_network(&ds_cnn(), &systems[0], &opts);
+    assert!(
+        resnet_large.mean_utilization() > 3.0 * dscnn_large.mean_utilization(),
+        "resnet util {:.2}% !>> dscnn util {:.2}%",
+        resnet_large.mean_utilization() * 100.0,
+        dscnn_large.mean_utilization() * 100.0
+    );
+    // and at macro level ResNet8 on aimc_large is its best network
+    let ae_large = search_network(&deep_autoencoder(), &systems[0], &opts);
+    assert!(macro_tops_w(&resnet_large) > macro_tops_w(&ae_large));
+}
+
+#[test]
+fn case_study_story_autoencoder_pays_weight_traffic() {
+    // §VI: the AE has no weight reuse across computing cycles — weight
+    // transfers dominate its buffer traffic on every design.
+    let systems = table2_systems();
+    let opts = DseOptions::default();
+    for sys in &systems {
+        let r = search_network(&deep_autoencoder(), sys, &opts);
+        let w: f64 = r.layers.iter().map(|l| l.best.accesses.weight_gb_reads).sum();
+        let i: f64 = r.layers.iter().map(|l| l.best.accesses.input_gb_reads).sum();
+        assert!(
+            w > i,
+            "{}: weight traffic {w:.0} !> input traffic {i:.0}",
+            sys.name
+        );
+    }
+}
+
+#[test]
+fn dimc_group_flex_helps_depthwise() {
+    // the DIMC flexibility advantage: a DIMC system with wide arrays
+    // beats an identical-geometry AIMC system on depthwise utilization
+    let dw_net = imcsim::workload::Network::new(
+        "dw_only",
+        vec![Layer::depthwise("dw", 24, 24, 64, 3, 3, 1)],
+    );
+    let aimc = ImcSystem::new(
+        "aimc",
+        ImcMacro::new("a", ImcFamily::Aimc, 64, 256, 4, 4, 4, 8, 0.8, 28.0),
+        4,
+    );
+    let dimc = ImcSystem::new(
+        "dimc",
+        ImcMacro::new("d", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, 28.0),
+        4,
+    );
+    let opts = DseOptions::default();
+    let ra = search_network(&dw_net, &aimc, &opts);
+    let rd = search_network(&dw_net, &dimc, &opts);
+    assert!(
+        rd.mean_utilization() > 10.0 * ra.mean_utilization(),
+        "dimc {:.3} !>> aimc {:.3}",
+        rd.mean_utilization(),
+        ra.mean_utilization()
+    );
+}
+
+#[test]
+fn all_networks_on_all_systems_complete_and_conserve_macs() {
+    let systems = table2_systems();
+    let opts = DseOptions::default();
+    for net in all_networks() {
+        for sys in &systems {
+            let r = search_network(&net, sys, &opts);
+            assert_eq!(r.total_macs(), net.total_macs());
+            assert!(r.total_energy_fj() > 0.0);
+            assert!(r.total_time_ns() > 0.0);
+            for l in &r.layers {
+                assert!(l.best.utilization > 0.0 && l.best.utilization <= 1.0);
+                // MAC conservation per layer (>= because ceil padding)
+                let total = l.best.tiles.macs_per_macro()
+                    * l.best.tiles.active_macros as f64;
+                assert!(total >= l.layer.macs() as f64 * 0.999);
+            }
+        }
+    }
+}
+
+#[test]
+fn property_random_layers_reuse_lower_bounds() {
+    // randomized: every candidate mapping on random layers respects the
+    // reuse lower bounds (can't move less data than exists)
+    let mut rng = Rng::new(2024);
+    let systems = table2_systems();
+    for i in 0..60 {
+        let k = 1 << rng.below(7); // 1..64
+        let c = 1 << rng.below(7);
+        let sp = 1 + rng.below(24) as usize;
+        let f = [1usize, 3, 5][rng.below(3) as usize];
+        let layer = if f == 1 {
+            Layer::pointwise(&format!("pw{i}"), sp, sp, k as usize, c as usize)
+        } else {
+            Layer::conv2d(&format!("c{i}"), sp, sp, k as usize, c as usize, f, f, 1)
+        };
+        layer.validate().unwrap();
+        let sys = &systems[rng.below(4) as usize];
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        for spm in candidates(&layer, sys) {
+            let t = tile(&layer, sys, &spm);
+            for p in ALL_POLICIES {
+                let e = evaluate(&layer, sys, &tech, &spm, p, 0.5);
+                assert!(
+                    reuse_lower_bounds_ok(&layer, &e.accesses, t.active_macros),
+                    "lower bound violated: {layer:?} on {} ({p:?})",
+                    sys.name
+                );
+                assert!(e.total_energy_fj().is_finite() && e.total_energy_fj() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn searched_mapping_never_worse_than_fixed_policy() {
+    let systems = table2_systems();
+    let net = resnet8();
+    let free = search_network(&net, &systems[2], &DseOptions::default());
+    for p in ALL_POLICIES {
+        let fixed = search_network(
+            &net,
+            &systems[2],
+            &DseOptions {
+                policy: Some(p),
+                ..Default::default()
+            },
+        );
+        assert!(
+            free.total_energy_fj() <= fixed.total_energy_fj() * (1.0 + 1e-9),
+            "search worse than fixed {p:?}"
+        );
+    }
+}
+
+#[test]
+fn sparsity_reduces_macro_energy_not_traffic() {
+    let systems = table2_systems();
+    let net = resnet8();
+    let dense = search_network(
+        &net,
+        &systems[2],
+        &DseOptions {
+            input_sparsity: 0.0,
+            ..Default::default()
+        },
+    );
+    let sparse = search_network(
+        &net,
+        &systems[2],
+        &DseOptions {
+            input_sparsity: 0.9,
+            ..Default::default()
+        },
+    );
+    assert!(sparse.macro_breakdown().total_fj() < dense.macro_breakdown().total_fj());
+}

@@ -1,0 +1,173 @@
+//! Integration: the analytical model end-to-end against the survey DB
+//! and the paper's §III/§V claims.
+
+use imcsim::arch::{table2_systems, ImcFamily, ImcMacro};
+use imcsim::db::{aimc_survey, dimc_survey, survey, validation_stats};
+use imcsim::model::{
+    peak_energy_per_mac_fj, peak_tops_per_mm2, peak_tops_per_watt, TechParams,
+};
+use imcsim::util::prng::Rng;
+
+#[test]
+fn survey_validation_matches_paper_claims() {
+    // §V: most designs within ~15 %; median (non-outlier) well inside.
+    let all = validation_stats(None);
+    assert!(all.n >= 14);
+    assert!(
+        all.n_within_15pct as f64 >= all.n as f64 * 0.75,
+        "only {}/{} within 15 %",
+        all.n_within_15pct,
+        all.n
+    );
+    assert!(all.median_mismatch < 0.15, "median {:.1}%", all.median_mismatch * 100.0);
+
+    // Fig. 5b: DIMC matches closely at nominal voltage
+    let dimc = validation_stats(Some(ImcFamily::Dimc));
+    assert!(dimc.median_mismatch < 0.15);
+}
+
+#[test]
+fn known_outliers_are_actually_outliers() {
+    // the flagged designs must diverge far beyond the 15 % band —
+    // otherwise the flag (and the paper's statement) is meaningless
+    for e in survey().iter().filter(|e| e.known_outlier) {
+        let p = imcsim::db::validate_entry(e);
+        assert!(
+            p.mismatch > 0.3,
+            "{} flagged as outlier but mismatch is only {:.0}%",
+            e.chip,
+            p.mismatch * 100.0
+        );
+    }
+}
+
+#[test]
+fn aimc_beats_dimc_on_peak_efficiency_same_class() {
+    // §II-B: AIMC guarantees better peak energy efficiency when the
+    // converter cost is amortized over a large array (equal node/precision)
+    let aimc = ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 22.0);
+    let dimc = ImcMacro::new("d", ImcFamily::Dimc, 256, 256, 4, 4, 1, 0, 0.8, 22.0);
+    let t = TechParams::for_node(22.0);
+    assert!(peak_tops_per_watt(&aimc, &t, 0.5) > peak_tops_per_watt(&dimc, &t, 0.5));
+}
+
+#[test]
+fn small_aimc_arrays_lose_their_advantage() {
+    // §II-B: "only if the peripheral cost is amortized across a very
+    // large array" — shrink the array and efficiency collapses
+    let t = TechParams::for_node(28.0);
+    let big = ImcMacro::new("big", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0);
+    let small = ImcMacro::new("small", ImcFamily::Aimc, 64, 256, 4, 4, 4, 8, 0.8, 28.0);
+    let e_big = peak_energy_per_mac_fj(&big, &t, 0.5);
+    let e_small = peak_energy_per_mac_fj(&small, &t, 0.5);
+    assert!(
+        e_small > 3.0 * e_big,
+        "small {e_small:.2} fJ/MAC !> 3x big {e_big:.2}"
+    );
+}
+
+#[test]
+fn dimc_density_is_node_driven_aimc_is_not() {
+    // §III: "in AIMC designs the technology node … only marginally
+    // affects energy efficiency. The performance of DIMC is highly
+    // dependent on the technology node."
+    let t5 = TechParams::for_node(5.0);
+    let t28 = TechParams::for_node(28.0);
+
+    let mk_dimc = |node: f64| ImcMacro::new("d", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, node);
+    let mk_aimc = |node: f64| ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, node);
+
+    let dimc_gain = peak_tops_per_watt(&mk_dimc(5.0), &t5, 0.5)
+        / peak_tops_per_watt(&mk_dimc(28.0), &t28, 0.5);
+    let aimc_gain = peak_tops_per_watt(&mk_aimc(5.0), &t5, 0.5)
+        / peak_tops_per_watt(&mk_aimc(28.0), &t28, 0.5);
+    assert!(
+        dimc_gain > aimc_gain,
+        "DIMC node gain {dimc_gain:.2}x !> AIMC {aimc_gain:.2}x"
+    );
+    // density improves with node for both (quadratic cell shrink)
+    assert!(peak_tops_per_mm2(&mk_dimc(5.0)) > peak_tops_per_mm2(&mk_dimc(28.0)));
+}
+
+#[test]
+fn precision_hurts_dimc_density() {
+    // §III: "higher precisions cause drops in computational density
+    // with similar technology" (as in [40] vs [42])
+    let lo = ImcMacro::new("d4", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, 28.0);
+    let hi = ImcMacro::new("d8", ImcFamily::Dimc, 64, 256, 8, 8, 1, 0, 0.8, 28.0);
+    assert!(peak_tops_per_mm2(&hi) < peak_tops_per_mm2(&lo));
+    // and efficiency too
+    let t = TechParams::for_node(28.0);
+    assert!(peak_tops_per_watt(&hi, &t, 0.5) < peak_tops_per_watt(&lo, &t, 0.5));
+}
+
+#[test]
+fn survey_db_efficiency_landscape_shape() {
+    // Fig. 4 shape: the best AIMC efficiency exceeds the best DIMC
+    // efficiency; the best DIMC density (5 nm) beats every DIMC at
+    // older nodes.
+    let best_aimc = aimc_survey()
+        .iter()
+        .map(|e| e.reported_tops_w)
+        .fold(0.0, f64::max);
+    let best_dimc = dimc_survey()
+        .iter()
+        .map(|e| e.reported_tops_w)
+        .fold(0.0, f64::max);
+    assert!(best_aimc > best_dimc);
+}
+
+#[test]
+fn property_energy_monotone_in_voltage_and_bits() {
+    // randomized property check: higher vdd and higher precision can
+    // never reduce the peak energy per MAC
+    let mut rng = Rng::new(99);
+    for _ in 0..200 {
+        let rows = [64usize, 128, 256, 1152][rng.below(4) as usize];
+        let d1 = [8usize, 16, 64][rng.below(3) as usize];
+        let bw = [2u32, 4, 8][rng.below(3) as usize];
+        let family = if rng.below(2) == 0 {
+            ImcFamily::Aimc
+        } else {
+            ImcFamily::Dimc
+        };
+        let (dac, adc) = match family {
+            ImcFamily::Aimc => (2, 6),
+            ImcFamily::Dimc => (1, 0),
+        };
+        let node = [7.0, 22.0, 28.0, 65.0][rng.below(4) as usize];
+        let t = TechParams::for_node(node);
+        let mk = |v: f64, bw: u32| {
+            ImcMacro::new("p", family, rows, d1 * bw as usize, bw, 4, dac, adc, v, node)
+        };
+        let e_lo_v = peak_energy_per_mac_fj(&mk(0.6, bw), &t, 0.5);
+        let e_hi_v = peak_energy_per_mac_fj(&mk(0.9, bw), &t, 0.5);
+        assert!(
+            e_hi_v > e_lo_v,
+            "vdd monotonicity violated: {e_hi_v} <= {e_lo_v} (rows={rows} bw={bw})"
+        );
+        if bw < 8 {
+            let e_hi_b = peak_energy_per_mac_fj(&mk(0.8, bw * 2), &t, 0.5);
+            let e_lo_b = peak_energy_per_mac_fj(&mk(0.8, bw), &t, 0.5);
+            assert!(
+                e_hi_b > e_lo_b,
+                "precision monotonicity violated (rows={rows} bw={bw})"
+            );
+        }
+    }
+}
+
+#[test]
+fn table2_systems_peak_numbers_are_sane() {
+    for s in table2_systems() {
+        let t = TechParams::for_node(s.imc.tech_nm);
+        let eff = peak_tops_per_watt(&s.imc, &t, 0.5);
+        assert!(
+            (5.0..5000.0).contains(&eff),
+            "{}: {eff} TOP/s/W out of plausible band",
+            s.name
+        );
+        let dens = peak_tops_per_mm2(&s.imc);
+        assert!(dens > 0.01, "{}: density {dens}", s.name);
+    }
+}
