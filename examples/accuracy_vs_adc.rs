@@ -57,7 +57,7 @@ fn analytical_sweep() {
     println!("{}", t.render());
 }
 
-fn measured(engine: &Engine) -> anyhow::Result<()> {
+fn measured(engine: &Engine) -> imcsim::anyhow::Result<()> {
     println!("== measured: bit-true artifacts vs exact reference ==");
     let mut t = Table::new(&[
         "design", "ADC bits", "mean |err|", "max |err|", "max |out|", "rel err",

@@ -1,18 +1,29 @@
+//! Probe the PJRT dispatch latency of every design's executables.
+//! Requires `make artifacts` and the `xla` build feature.
+
+use std::time::Instant;
+
 use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
 use imcsim::util::prng::Rng;
-use std::time::Instant;
+
 fn main() {
     let engine = Engine::new(load_manifest(&default_artifacts_dir()).unwrap()).unwrap();
     let mut rng = Rng::new(1);
     for name in ["dimc_large", "aimc_large", "dimc_multi", "aimc_multi"] {
         let d = engine.design(name).unwrap().clone();
-        let x: Vec<i32> = (0..16*d.config.rows).map(|_| rng.range_i64(0,15) as i32).collect();
-        let w: Vec<i32> = (0..d.config.rows*d.config.d1).map(|_| rng.range_i64(-8,7) as i32).collect();
+        let x: Vec<i32> = (0..16 * d.config.rows)
+            .map(|_| rng.range_i64(0, 15) as i32)
+            .collect();
+        let w: Vec<i32> = (0..d.config.rows * d.config.d1)
+            .map(|_| rng.range_i64(-8, 7) as i32)
+            .collect();
         for kind in [Kind::Macro, Kind::Reference] {
             engine.execute_mvm(name, kind, &x, &w).unwrap();
             let n = 50;
             let t0 = Instant::now();
-            for _ in 0..n { engine.execute_mvm(name, kind, &x, &w).unwrap(); }
+            for _ in 0..n {
+                engine.execute_mvm(name, kind, &x, &w).unwrap();
+            }
             let us = t0.elapsed().as_micros() as f64 / n as f64;
             println!("{name:12} {kind:?}: {us:.0} us/dispatch");
         }

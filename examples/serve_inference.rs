@@ -31,7 +31,7 @@ use imcsim::util::prng::Rng;
 const IMAGES: usize = 48;
 const MVM_REQUESTS: usize = 256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> imcsim::anyhow::Result<()> {
     let dir = default_artifacts_dir();
     let manifest = match load_manifest(&dir) {
         Ok(m) => m,

@@ -1,0 +1,67 @@
+//! Perf bench: the grid-sweep pipeline — memoized vs exhaustive layer
+//! search, and a mini-grid end-to-end run at several shard widths.
+//! Reports the cache hit rate the full survey grid achieves.
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{search_layer, DseOptions, LayerEvaluator, ALL_OBJECTIVES};
+use imcsim::model::TechParams;
+use imcsim::sweep::{run_sweep, CostCache, SweepGrid, SweepOptions};
+use imcsim::util::bench::{report_metric, Bench};
+use imcsim::workload::{deep_autoencoder, ds_cnn, Layer};
+
+fn main() {
+    let mut b = Bench::from_args();
+    let systems = table2_systems();
+    let sys = &systems[1];
+    let tech = TechParams::for_node(sys.imc.tech_nm);
+    let layer = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+    let opts = DseOptions::default();
+
+    // the uncached baseline: a full mapping search per call
+    if let Some(cold) = b.bench("sweep/layer_search_uncached", || {
+        search_layer(&layer, sys, &tech, &opts).best.time_ns
+    }) {
+        // the memoized path after warm-up: a key build + map lookup
+        let cache = CostCache::new();
+        cache.evaluate_layer(&layer, sys, &tech, &opts);
+        if let Some(warm) = b.bench("sweep/layer_search_cached", || {
+            cache.evaluate_layer(&layer, sys, &tech, &opts).best.time_ns
+        }) {
+            report_metric(
+                "sweep/cache_speedup",
+                cold.median_ns / warm.median_ns.max(1.0),
+                "x",
+            );
+        }
+    }
+
+    // mini-grid end-to-end at different shard widths
+    let grid = SweepGrid {
+        systems: systems.clone(),
+        networks: vec![deep_autoencoder(), ds_cnn()],
+        objectives: ALL_OBJECTIVES.to_vec(),
+    };
+    for threads in [1usize, 4] {
+        let name = format!("sweep/mini_grid_{threads}_threads");
+        b.bench(&name, || {
+            let run = SweepOptions {
+                threads,
+                ..Default::default()
+            };
+            run_sweep(&grid, &run).points.len()
+        });
+    }
+
+    // the headline metric: cache effectiveness on the real survey grid
+    // (the most expensive section — skipped under --quick or when
+    // filtered out, like any timed benchmark)
+    if b.enabled("sweep/survey_cache") && !b.is_quick() {
+        let survey = SweepGrid::survey_tinymlperf(imcsim::sweep::DEFAULT_GRID_CELLS);
+        let s = run_sweep(&survey, &SweepOptions::default());
+        let hit_pct = s.cache.hit_rate() * 100.0;
+        let entries = s.cache.entries as f64;
+        report_metric("sweep/survey_grid_tasks", s.points.len() as f64, "tasks");
+        report_metric("sweep/survey_cache_hit_rate", hit_pct, "%");
+        report_metric("sweep/survey_cache_entries", entries, "entries");
+    }
+}

@@ -1,0 +1,178 @@
+//! Minimal in-crate stand-in for the `anyhow` crate (offline build: no
+//! external dependencies). The PJRT runtime and serving coordinator were
+//! written against `anyhow`'s surface; with 2018-edition uniform paths,
+//! `use anyhow::{anyhow, Context, Result}` resolves to this module, so
+//! those files compile unchanged and the dependency stays out of the
+//! manifest.
+//!
+//! Only the surface actually used is provided: [`Error`] (a context
+//! chain), [`Result`], the [`Context`] extension trait and the
+//! [`anyhow!`](crate::anyhow::anyhow) macro. `{:#}` formatting renders
+//! the full `outer: inner: root` chain like `anyhow` does.
+
+use std::fmt;
+
+/// An error: a chain of messages, outermost context first.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error {
+            frames: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.frames.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (root cause last).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same blanket conversion `anyhow` uses; it is the reason `Error`
+// itself must not implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result`, converting the error into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::anyhow::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::anyhow::Error::msg($err)
+    };
+}
+
+pub(crate) use anyhow;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/nonexistent/imcsim-shim-test").context("reading probe file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = io_fail().with_context(|| format!("step {}", 2)).unwrap_err();
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames[0], "step 2");
+        assert_eq!(frames[1], "reading probe file");
+        assert!(frames.len() >= 3, "io root cause missing: {frames:?}");
+        // `{}` shows the outermost frame, `{:#}` the full chain
+        assert_eq!(format!("{e}"), "step 2");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("step 2: reading probe file: "), "{alt}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(format!("{plain}"), "plain");
+        let n = 3;
+        let captured = anyhow!("value {n}");
+        assert_eq!(format!("{captured}"), "value 3");
+        let formatted = anyhow!("{} of {}", 1, n);
+        assert_eq!(format!("{formatted}"), "1 of 3");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(format!("{from_string}"), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "not a number".parse()?;
+            Ok(v)
+        }
+        let e = parse().unwrap_err();
+        assert!(!e.root_cause().is_empty());
+    }
+}

@@ -38,17 +38,35 @@ use super::memory::{MemoryHierarchy, MemoryLevel, Operand};
 use super::system::ImcSystem;
 
 /// Errors from config parsing/validation.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io error reading {path}: {source}")]
     Io {
         path: String,
         source: std::io::Error,
     },
-    #[error("parse error in {path}: {message}")]
     Parse { path: String, message: String },
-    #[error("invalid architecture in {path}: {message}")]
     Invalid { path: String, message: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io { path, source } => write!(f, "io error reading {path}: {source}"),
+            ConfigError::Parse { path, message } => write!(f, "parse error in {path}: {message}"),
+            ConfigError::Invalid { path, message } => {
+                write!(f, "invalid architecture in {path}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 fn perr(path: &str, message: impl Into<String>) -> ConfigError {
@@ -89,7 +107,10 @@ fn req_f64(t: &Value, key: &str, path: &str) -> Result<f64, ConfigError> {
 }
 
 fn opt_usize(t: &Value, key: &str, default: usize) -> usize {
-    t.get(key).and_then(|v| v.as_int()).map(|v| v as usize).unwrap_or(default)
+    t.get(key)
+        .and_then(|v| v.as_int())
+        .map(|v| v as usize)
+        .unwrap_or(default)
 }
 
 fn parse_family(s: &str, path: &str) -> Result<ImcFamily, ConfigError> {

@@ -5,7 +5,6 @@
 //! point. All analytical-model quantities (D1, D2, bit-serial slice
 //! count, …) derive from it.
 
-
 /// Analog vs digital in-memory computing (paper §II-B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ImcFamily {
@@ -272,5 +271,4 @@ mod tests {
         assert!(aimc().validate().is_ok());
         assert!(dimc().validate().is_ok());
     }
-
 }

@@ -6,7 +6,6 @@
 //! ZigZag. Levels are ordered inner → outer; each level declares which
 //! operands it can hold.
 
-
 /// DNN operand kinds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Operand {

@@ -73,7 +73,9 @@ mod tests {
         // Table II macro counts after normalization
         assert_eq!(systems[0].n_macros, 1);
         assert_eq!(systems[1].n_macros, 144);
-        assert_eq!(systems[2].n_macros, 5 /* ceil: 22nm design has fewer cells/macro than 4x of table; normalization keeps >= target */);
+        // ceil: the 22 nm design has fewer cells/macro than 4x of the
+        // table; normalization keeps >= target
+        assert_eq!(systems[2].n_macros, 5);
         assert_eq!(systems[3].n_macros, 1536);
     }
 }

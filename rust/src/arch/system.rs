@@ -2,7 +2,6 @@
 //! hierarchy (paper §VI: "the number of macros is scaled to make all
 //! designs have the same total number of SRAM cells").
 
-
 use super::imc_macro::ImcMacro;
 use super::memory::MemoryHierarchy;
 

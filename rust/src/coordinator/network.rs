@@ -3,7 +3,7 @@
 //! twin of `python/compile/model.py` (which is build-time only — this
 //! module is what actually serves inference).
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use crate::runtime::Kind;
 use crate::util::prng::Rng;
@@ -88,7 +88,14 @@ pub struct ConvWeights {
 }
 
 impl ConvWeights {
-    pub fn random(rng: &mut Rng, fy: usize, fx: usize, c: usize, k: usize, weight_bits: u32) -> Self {
+    pub fn random(
+        rng: &mut Rng,
+        fy: usize,
+        fx: usize,
+        c: usize,
+        k: usize,
+        weight_bits: u32,
+    ) -> Self {
         let lo = -(1i64 << (weight_bits - 1));
         let hi = (1i64 << (weight_bits - 1)) - 1;
         let mut mat = MatI32::zeros(fy * fx * c, k);

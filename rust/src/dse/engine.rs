@@ -6,20 +6,24 @@
 use crate::arch::ImcSystem;
 use crate::mapping::{candidates, TemporalPolicy, ALL_POLICIES};
 use crate::model::{EnergyBreakdown, TechParams};
-use crate::util::pool::parallel_map;
+use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{Layer, Network};
 
 use super::cost::{evaluate, MappingEval, DEFAULT_SPARSITY};
 use super::reuse::TrafficEnergy;
 
 /// Optimization objective for mapping selection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Objective {
     Energy,
     Latency,
     /// Energy–delay product.
     Edp,
 }
+
+/// All objectives, in the canonical grid order.
+pub const ALL_OBJECTIVES: [Objective; 3] =
+    [Objective::Energy, Objective::Latency, Objective::Edp];
 
 impl Objective {
     fn score(&self, e: &MappingEval) -> f64 {
@@ -28,6 +32,20 @@ impl Objective {
             Objective::Latency => e.time_ns,
             Objective::Edp => e.edp(),
         }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::Energy => "energy",
+            Objective::Latency => "latency",
+            Objective::Edp => "edp",
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
     }
 }
 
@@ -119,6 +137,84 @@ impl Default for DseOptions {
     }
 }
 
+/// The best mapping per objective for one layer, found in a *single*
+/// pass over the mapping space (evaluation dominates; scoring per
+/// objective is free). This is the unit the grid-sweep cost cache
+/// stores: one entry serves Energy, Latency and EDP queries alike.
+#[derive(Debug, Clone)]
+pub struct LayerSearch {
+    /// Number of mapping points evaluated.
+    pub evaluated: usize,
+    best_energy: MappingEval,
+    best_latency: MappingEval,
+    best_edp: MappingEval,
+}
+
+impl LayerSearch {
+    /// The winning mapping for `objective`.
+    pub fn best(&self, objective: Objective) -> &MappingEval {
+        match objective {
+            Objective::Energy => &self.best_energy,
+            Objective::Latency => &self.best_latency,
+            Objective::Edp => &self.best_edp,
+        }
+    }
+
+    /// Materialize a per-objective [`LayerResult`] for `layer` (which
+    /// must have the shape this search was run on; only its name may
+    /// differ — the cache shares entries across identically-shaped
+    /// layers of different networks).
+    pub fn to_result(&self, layer: &Layer, objective: Objective) -> LayerResult {
+        LayerResult {
+            layer: layer.clone(),
+            best: self.best(objective).clone(),
+            evaluated: self.evaluated,
+        }
+    }
+}
+
+/// Exhaustively search one layer's mapping space, tracking the optimum
+/// for every objective at once. Ties keep the earlier candidate, so for
+/// any single objective the winner is identical to the historical
+/// single-objective search.
+pub fn search_layer_all(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    input_sparsity: f64,
+    policy: Option<TemporalPolicy>,
+) -> LayerSearch {
+    let spatials = candidates(layer, sys);
+    let policies: Vec<TemporalPolicy> = match policy {
+        Some(p) => vec![p],
+        None => ALL_POLICIES.to_vec(),
+    };
+    let mut evaluated = 0;
+    let mut best: [Option<MappingEval>; 3] = [None, None, None];
+    for sp in &spatials {
+        for &p in &policies {
+            let e = evaluate(layer, sys, tech, sp, p, input_sparsity);
+            evaluated += 1;
+            for (slot, objective) in best.iter_mut().zip(ALL_OBJECTIVES) {
+                let better = match slot {
+                    None => true,
+                    Some(b) => objective.score(&e) < objective.score(b),
+                };
+                if better {
+                    *slot = Some(e.clone());
+                }
+            }
+        }
+    }
+    let [energy, latency, edp] = best;
+    LayerSearch {
+        evaluated,
+        best_energy: energy.expect("at least one mapping candidate"),
+        best_latency: latency.expect("at least one mapping candidate"),
+        best_edp: edp.expect("at least one mapping candidate"),
+    }
+}
+
 /// Search the best mapping for one layer.
 pub fn search_layer(
     layer: &Layer,
@@ -126,30 +222,58 @@ pub fn search_layer(
     tech: &TechParams,
     opts: &DseOptions,
 ) -> LayerResult {
-    let spatials = candidates(layer, sys);
-    let policies: Vec<TemporalPolicy> = match opts.policy {
-        Some(p) => vec![p],
-        None => ALL_POLICIES.to_vec(),
-    };
-    let mut best: Option<MappingEval> = None;
-    let mut evaluated = 0;
-    for sp in &spatials {
-        for &p in &policies {
-            let e = evaluate(layer, sys, tech, sp, p, opts.input_sparsity);
-            evaluated += 1;
-            let better = match &best {
-                None => true,
-                Some(b) => opts.objective.score(&e) < opts.objective.score(b),
-            };
-            if better {
-                best = Some(e);
-            }
-        }
+    search_layer_all(layer, sys, tech, opts.input_sparsity, opts.policy)
+        .to_result(layer, opts.objective)
+}
+
+/// The reusable per-layer evaluation hook: the single-network DSE and
+/// the grid sweep both drive network search through this trait, so a
+/// memoizing implementation (see `sweep::CostCache`) slots in wherever
+/// the plain exhaustive search does.
+pub trait LayerEvaluator: Sync {
+    fn evaluate_layer(
+        &self,
+        layer: &Layer,
+        sys: &ImcSystem,
+        tech: &TechParams,
+        opts: &DseOptions,
+    ) -> LayerResult;
+}
+
+/// The stateless evaluator: a full mapping search on every call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExhaustiveSearch;
+
+impl LayerEvaluator for ExhaustiveSearch {
+    fn evaluate_layer(
+        &self,
+        layer: &Layer,
+        sys: &ImcSystem,
+        tech: &TechParams,
+        opts: &DseOptions,
+    ) -> LayerResult {
+        search_layer(layer, sys, tech, opts)
     }
-    LayerResult {
-        layer: layer.clone(),
-        best: best.expect("at least one mapping candidate"),
-        evaluated,
+}
+
+/// Run the DSE for a whole network through an explicit evaluator, with
+/// an explicit layer-level worker count (grid sweeps parallelize across
+/// grid tasks instead and pass `threads = 1` here).
+pub fn search_network_with<E: LayerEvaluator + ?Sized>(
+    net: &Network,
+    sys: &ImcSystem,
+    opts: &DseOptions,
+    eval: &E,
+    threads: usize,
+) -> NetworkResult {
+    let tech = TechParams::for_node(sys.imc.tech_nm);
+    let layers = parallel_map_with(&net.layers, threads, |l| {
+        eval.evaluate_layer(l, sys, &tech, opts)
+    });
+    NetworkResult {
+        system: sys.name.clone(),
+        network: net.name.clone(),
+        layers,
     }
 }
 
@@ -159,13 +283,7 @@ pub fn search_network(
     sys: &ImcSystem,
     opts: &DseOptions,
 ) -> NetworkResult {
-    let tech = TechParams::for_node(sys.imc.tech_nm);
-    let layers = parallel_map(&net.layers, |l| search_layer(l, sys, &tech, opts));
-    NetworkResult {
-        system: sys.name.clone(),
-        network: net.name.clone(),
-        layers,
-    }
+    search_network_with(net, sys, opts, &ExhaustiveSearch, default_threads())
 }
 
 /// Evaluate several systems on several networks (the Fig. 7 grid).
@@ -236,6 +354,39 @@ mod tests {
         );
         assert!(l.total_time_ns() <= e.total_time_ns() * (1.0 + 1e-9));
         assert!(e.total_energy_fj() <= l.total_energy_fj() * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn all_objective_search_matches_single_objective_search() {
+        let systems = table2_systems();
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let tech = TechParams::for_node(systems[1].imc.tech_nm);
+        let all = search_layer_all(&l, &systems[1], &tech, DEFAULT_SPARSITY, None);
+        for objective in ALL_OBJECTIVES {
+            let opts = DseOptions {
+                objective,
+                ..Default::default()
+            };
+            let single = search_layer(&l, &systems[1], &tech, &opts);
+            assert_eq!(all.evaluated, single.evaluated);
+            assert_eq!(
+                all.best(objective).total_energy_fj(),
+                single.best.total_energy_fj()
+            );
+            assert_eq!(all.best(objective).time_ns, single.best.time_ns);
+            assert_eq!(all.best(objective).policy, single.best.policy);
+        }
+    }
+
+    #[test]
+    fn evaluator_trait_matches_free_function() {
+        let systems = table2_systems();
+        let net = resnet8();
+        let opts = DseOptions::default();
+        let direct = search_network(&net, &systems[1], &opts);
+        let via_trait = search_network_with(&net, &systems[1], &opts, &ExhaustiveSearch, 1);
+        assert_eq!(direct.total_energy_fj(), via_trait.total_energy_fj());
+        assert_eq!(direct.total_time_ns(), via_trait.total_time_ns());
     }
 
     #[test]

@@ -8,7 +8,9 @@ pub mod reuse;
 
 pub use cost::{evaluate, MappingEval, DEFAULT_SPARSITY};
 pub use engine::{
-    case_study, search_layer, search_network, DseOptions, LayerResult, NetworkResult, Objective,
+    case_study, search_layer, search_layer_all, search_network, search_network_with, DseOptions,
+    ExhaustiveSearch, LayerEvaluator, LayerResult, LayerSearch, NetworkResult, Objective,
+    ALL_OBJECTIVES,
 };
 pub use pareto::pareto_front;
 pub use reuse::{access_counts, psum_bits, traffic_energy_fj, AccessCounts, TrafficEnergy};

@@ -18,16 +18,23 @@
 //!   cost evaluation (paper §VI, Fig. 7).
 //! * [`db`] — the survey database of published AIMC/DIMC silicon
 //!   (paper §III, Fig. 4) with provenance-tagged reported metrics.
+//! * [`sweep`] — the sharded full-grid design-space sweep: survey
+//!   designs × tinyMLPerf networks × objectives, with a memoized
+//!   cost-model cache and global Pareto aggregation.
 //! * [`runtime`] — PJRT loader executing the AOT-compiled functional
 //!   macro simulator (JAX/Pallas, built once by `make artifacts`).
+//!   The executor needs the `xla` cargo feature; the manifest does not.
 //! * [`coordinator`] — the serving layer: tile scheduler + batcher that
-//!   runs real inference through the functional macro artifacts.
+//!   runs real inference through the functional macro artifacts
+//!   (`xla` feature).
 //! * [`report`] — text/CSV renderers regenerating every paper figure.
 //!
 //! Python is build-time only: the rust binary is self-contained once
 //! `artifacts/` exists.
 
+pub mod anyhow;
 pub mod arch;
+#[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod util;
 pub mod db;
@@ -36,6 +43,7 @@ pub mod mapping;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod sweep;
 pub mod workload;
 
 pub use arch::{ImcFamily, ImcMacro, ImcSystem};

@@ -5,18 +5,25 @@
 //! inference through the AOT-compiled macro artifacts.
 
 use std::path::PathBuf;
+#[cfg(feature = "xla")]
 use std::sync::Arc;
 use std::time::Instant;
 
 use imcsim::arch::{load_system, table2_systems, ImcFamily};
+#[cfg(feature = "xla")]
 use imcsim::coordinator::{Tensor4, Tiler, TinyCnn};
 use imcsim::dse::{search_network, DseOptions, Objective};
 use imcsim::mapping::TemporalPolicy;
 use imcsim::report::{
-    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, table2_text, Table,
+    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, sweep_csv,
+    sweep_text, table2_text, Table,
 };
-use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
+use imcsim::runtime::{default_artifacts_dir, load_manifest};
+#[cfg(feature = "xla")]
+use imcsim::runtime::{Engine, Kind};
+use imcsim::sweep::{merge_summaries, run_sweep, SweepGrid, SweepOptions, DEFAULT_GRID_CELLS};
 use imcsim::util::cli::Args;
+#[cfg(feature = "xla")]
 use imcsim::util::prng::Rng;
 
 const HELP: &str = "\
@@ -39,12 +46,19 @@ Exploration & serving:
   dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
       [--objective energy|latency|edp] [--policy ws|os|is] [--sparsity F]
                        per-layer optimal mappings for one network
+  sweep [--shards N] [--shard-index K] [--cells N] [--sparsity F]
+      [--csv FILE]     full-grid DSE sweep: every surveyed design x
+                       every tinyMLPerf network x every objective, with
+                       a memoized cost cache; prints per-network Pareto
+                       frontiers. --shards/--shard-index split the grid
+                       deterministically across CI jobs or machines.
+  archsweep --network <ae|resnet8|dscnn|mobilenet> [--family aimc|dimc]
+      [--cells N]      geometry sweep of one network at equal SRAM
+                       budget; prints the (energy, latency) Pareto front
   serve [--design aimc_large|...] [--images N]
                        run the functional TinyCNN through the PJRT
                        artifacts; reports accuracy vs exact + throughput
-  sweep --network <ae|resnet8|dscnn|mobilenet> [--family aimc|dimc]
-      [--cells N]      architecture sweep at equal SRAM budget;
-                       prints the (energy, latency) Pareto front
+                       (requires the `xla` build feature)
   artifacts            show the AOT artifact manifest
 
 Options:
@@ -87,6 +101,7 @@ fn main() {
         Some("validate") => cmd_validate(),
         Some("dse") => cmd_dse(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("archsweep") => cmd_archsweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
@@ -112,10 +127,10 @@ fn cmd_fig7(args: &Args) -> i32 {
             t.row(vec![
                 r.network.clone(),
                 r.system.clone(),
-                format!("{}", r.total_energy_fj()),
-                format!("{}", r.total_time_ns()),
-                format!("{}", r.effective_tops_per_watt()),
-                format!("{}", r.mean_utilization()),
+                r.total_energy_fj().to_string(),
+                r.total_time_ns().to_string(),
+                r.effective_tops_per_watt().to_string(),
+                r.mean_utilization().to_string(),
             ]);
         }
         if let Err(e) = std::fs::write(path, t.to_csv()) {
@@ -247,11 +262,135 @@ fn cmd_dse(args: &Args) -> i32 {
     0
 }
 
+/// Full-grid DSE sweep: every surveyed silicon design (normalized to a
+/// common SRAM-cell budget) × every tinyMLPerf network × every
+/// objective, evaluated through the memoized cost cache and aggregated
+/// into per-network Pareto frontiers. `--shards N --shard-index K`
+/// evaluates one deterministic slice (for CI jobs / multiple machines);
+/// `--shards N` alone runs all N shards locally and merges them,
+/// exercising the same merge path the distributed run uses.
+fn cmd_sweep(args: &Args) -> i32 {
+    if args.opt("network").is_some() || args.opt("family").is_some() {
+        eprintln!(
+            "sweep no longer takes --network/--family: it always runs the full \
+             survey grid. The single-network geometry sweep is now `archsweep`."
+        );
+        return 2;
+    }
+    // Reject unknown options and valueless forms of the known ones
+    // rather than silently falling back to defaults: a CI matrix job
+    // with an empty or misspelled shard variable must not quietly run
+    // the whole grid.
+    const KNOWN: [&str; 5] = ["shards", "shard-index", "cells", "sparsity", "csv"];
+    if let Some(unknown) = args
+        .options
+        .keys()
+        .chain(args.flags.iter())
+        .find(|k| !KNOWN.contains(&k.as_str()))
+    {
+        eprintln!(
+            "unknown option --{unknown} (sweep takes --shards, --shard-index, \
+             --cells, --sparsity, --csv)"
+        );
+        return 2;
+    }
+    for opt in KNOWN {
+        if args.flag(opt) {
+            eprintln!("--{opt} requires a value");
+            return 2;
+        }
+    }
+    let shards: usize = match args.opt_parse("shards").unwrap_or(Ok(1)) {
+        Ok(n) if n >= 1 => n,
+        _ => {
+            eprintln!("--shards must be a positive integer");
+            return 2;
+        }
+    };
+    let shard_index: Option<usize> = match args.opt_parse("shard-index") {
+        None => None,
+        Some(Ok(k)) if k < shards => Some(k),
+        _ => {
+            eprintln!("--shard-index must be an integer in 0..{shards}");
+            return 2;
+        }
+    };
+    let cells: usize = match args.opt_parse("cells") {
+        None => DEFAULT_GRID_CELLS,
+        Some(Ok(n)) if n > 0 => n,
+        _ => {
+            eprintln!("--cells must be a positive integer");
+            return 2;
+        }
+    };
+    let sparsity: f64 = match args.opt_parse("sparsity") {
+        None => imcsim::dse::DEFAULT_SPARSITY,
+        Some(Ok(f)) if (0.0..=1.0).contains(&f) => f,
+        _ => {
+            eprintln!("--sparsity must be a number in [0, 1]");
+            return 2;
+        }
+    };
+
+    let grid = SweepGrid::survey_tinymlperf(cells);
+    println!(
+        "grid: {} designs x {} networks x {} objectives = {} tasks ({} cells/design)",
+        grid.systems.len(),
+        grid.networks.len(),
+        grid.objectives.len(),
+        grid.n_tasks(),
+        cells
+    );
+    let t0 = Instant::now();
+    let summary = match shard_index {
+        Some(_) => {
+            let opts = SweepOptions {
+                shards,
+                shard_index,
+                input_sparsity: sparsity,
+                ..Default::default()
+            };
+            run_sweep(&grid, &opts)
+        }
+        None if shards > 1 => {
+            let parts: Vec<_> = (0..shards)
+                .map(|k| {
+                    let opts = SweepOptions {
+                        shards,
+                        shard_index: Some(k),
+                        input_sparsity: sparsity,
+                        ..Default::default()
+                    };
+                    run_sweep(&grid, &opts)
+                })
+                .collect();
+            merge_summaries(&parts)
+        }
+        None => {
+            let opts = SweepOptions {
+                input_sparsity: sparsity,
+                ..Default::default()
+            };
+            run_sweep(&grid, &opts)
+        }
+    };
+    println!("{}", sweep_text(&summary));
+    println!("(evaluated in {:.2}s)", t0.elapsed().as_secs_f64());
+    if let Some(path) = args.opt("csv") {
+        if let Err(e) = std::fs::write(path, sweep_csv(&summary)) {
+            eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
 /// Architecture sweep: enumerate macro geometries at a fixed total
 /// SRAM-cell budget, evaluate the chosen network on each, and report
 /// the (energy, latency) Pareto-optimal design points — the "optimal
 /// design points for targeted tinyMLperf workloads" use of the model.
-fn cmd_sweep(args: &Args) -> i32 {
+fn cmd_archsweep(args: &Args) -> i32 {
     use imcsim::arch::{ImcFamily, ImcMacro, ImcSystem};
     use imcsim::dse::pareto_front;
 
@@ -274,10 +413,14 @@ fn cmd_sweep(args: &Args) -> i32 {
             return 2;
         }
     };
-    let cells: usize = args
-        .opt("cells")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1152 * 256);
+    let cells: usize = match args.opt_parse("cells") {
+        None => 1152 * 256,
+        Some(Ok(n)) if n > 0 => n,
+        _ => {
+            eprintln!("--cells must be a positive integer");
+            return 2;
+        }
+    };
 
     // geometry grid: rows x cols per macro, 4b/4b, macro count from the
     // cell budget (the Table II normalization)
@@ -381,6 +524,16 @@ fn cmd_artifacts(args: &Args) -> i32 {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_serve(_args: &Args) -> i32 {
+    eprintln!(
+        "serve needs the PJRT executor: rebuild with `--features xla` \
+         (requires the `xla` crate; see rust/Cargo.toml)"
+    );
+    1
+}
+
+#[cfg(feature = "xla")]
 fn cmd_serve(args: &Args) -> i32 {
     let dir = artifacts_dir(args);
     let design = args.opt_or("design", "aimc_large").to_string();
@@ -397,7 +550,8 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
-fn serve(dir: &PathBuf, design: &str, images: usize) -> anyhow::Result<()> {
+#[cfg(feature = "xla")]
+fn serve(dir: &PathBuf, design: &str, images: usize) -> imcsim::anyhow::Result<()> {
     let manifest = load_manifest(dir)?;
     let engine = Arc::new(Engine::new(manifest)?);
     println!(

@@ -31,7 +31,6 @@
 //!   columns/rows. Unused-column energy is the large-array penalty the
 //!   case studies expose.
 
-
 use crate::arch::{ImcFamily, ImcMacro};
 
 use super::adc;
@@ -266,7 +265,8 @@ mod tests {
         assert!(a.adc_fj > 0.0 && a.dac_fj > 0.0);
         assert_eq!(a.logic_fj, 0.0);
 
-        let d = macro_energy(&dimc_chih(), &tech(22.0), &MacroOpCounts::peak(&dimc_chih(), 10, 0.5));
+        let ops = MacroOpCounts::peak(&dimc_chih(), 10, 0.5);
+        let d = macro_energy(&dimc_chih(), &tech(22.0), &ops);
         assert_eq!(d.adc_fj, 0.0);
         assert_eq!(d.dac_fj, 0.0);
         assert!(d.logic_fj > 0.0 && d.adder_tree_fj > 0.0);

@@ -6,7 +6,6 @@
 //! technology nodes (Fig. 6a/6b); the DAC energy constant `k3` is fitted
 //! across AIMC DAC-based designs (Fig. 6c).
 
-
 /// Murmann ADC model constant `k1` (fJ per bit of resolution), paper Eq. 8.
 pub const K1_FJ: f64 = 100.0;
 /// Murmann ADC model constant `k2` (fJ; paper: 1 aJ = 1e-3 fJ), Eq. 8.

@@ -6,7 +6,6 @@
 //! ~15 % for most designs, with known outliers (unmodeled digital
 //! overheads, inefficient ADCs ~4×, leakage at low voltage).
 
-
 use crate::arch::ImcMacro;
 
 use super::energy::peak_tops_per_watt;

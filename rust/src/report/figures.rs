@@ -131,7 +131,13 @@ pub fn fig5_text(family: Option<ImcFamily>) -> String {
 pub fn fig6_text() -> String {
     let pts: Vec<(f64, f64)> = FITTED_CINV_POINTS.iter().map(|p| (p.0, p.1)).collect();
     let (slope, intercept) = linear_fit(&pts);
-    let mut t = Table::new(&["design", "node", "fitted C_inv [fF]", "model C_inv [fF]", "mismatch"]);
+    let mut t = Table::new(&[
+        "design",
+        "node",
+        "fitted C_inv [fF]",
+        "model C_inv [fF]",
+        "mismatch",
+    ]);
     for &(node, fitted, name) in FITTED_CINV_POINTS.iter() {
         t.row(vec![
             name.to_string(),

@@ -1,0 +1,162 @@
+//! Renderers for the full-grid sweep: per-network Pareto-frontier
+//! tables, a survey-wide (energy, latency) scatter, cache statistics and
+//! a CSV dump of every grid point.
+
+use crate::arch::ImcFamily;
+use crate::sweep::{GridPoint, SweepSummary};
+
+use super::ascii_plot::ScatterPlot;
+use super::table::Table;
+
+fn point_row(p: &GridPoint) -> Vec<String> {
+    vec![
+        p.design.clone(),
+        p.network.clone(),
+        p.objective.to_string(),
+        p.n_macros.to_string(),
+        format!("{:.3}", p.energy_fj * 1e-9),
+        format!("{:.2}", p.time_ns * 1e-3),
+        format!("{:.1}", p.tops_per_watt),
+        format!("{:.1}%", p.utilization * 100.0),
+    ]
+}
+
+const POINT_HEADERS: [&str; 8] = [
+    "design", "network", "objective", "macros", "E [uJ]", "t [us]", "TOP/s/W", "util",
+];
+
+/// Human-readable sweep summary: scope line, per-network Pareto
+/// frontiers, the family scatter and the cost-cache statistics.
+pub fn sweep_text(s: &SweepSummary) -> String {
+    let mut out = String::new();
+    let scope = match s.shard_index {
+        Some(k) => format!(
+            "shard {k}/{} ({} of {} tasks)",
+            s.shards,
+            s.points.len(),
+            s.total_tasks
+        ),
+        None => format!("full grid ({} tasks)", s.total_tasks),
+    };
+    out.push_str(&format!("== full-grid DSE sweep: {scope} ==\n"));
+
+    for (network, frontier) in &s.frontiers {
+        let n_points = s.points.iter().filter(|p| &p.network == network).count();
+        out.push_str(&format!(
+            "\n-- {network}: (energy, latency) Pareto frontier — {} of {} points --\n",
+            frontier.len(),
+            n_points
+        ));
+        let mut t = Table::new(&POINT_HEADERS);
+        let mut rows: Vec<&GridPoint> = frontier.iter().map(|&i| &s.points[i]).collect();
+        rows.sort_by(|a, b| a.energy_fj.partial_cmp(&b.energy_fj).unwrap());
+        for p in rows {
+            t.row(point_row(p));
+        }
+        out.push_str(&t.render());
+    }
+
+    if !s.points.is_empty() {
+        let mut plot = ScatterPlot::new(
+            "all grid points (A = AIMC, D = DIMC)",
+            "energy [uJ]",
+            "latency [us]",
+            true,
+        );
+        for (label, family) in [('A', ImcFamily::Aimc), ('D', ImcFamily::Dimc)] {
+            let pts: Vec<(f64, f64)> = s
+                .points
+                .iter()
+                .filter(|p| p.family == family)
+                .map(|p| (p.energy_fj * 1e-9, p.time_ns * 1e-3))
+                .collect();
+            if !pts.is_empty() {
+                plot.add_series(label, pts);
+            }
+        }
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+
+    // merged shard runs sum independent caches, so label accordingly
+    let entries_label = if s.merged {
+        " (summed across shard caches)"
+    } else {
+        ""
+    };
+    out.push_str(&format!(
+        "\ncost cache: {} entries{entries_label}, {} hits / {} lookups ({:.1}% hit rate)\n",
+        s.cache.entries,
+        s.cache.hits,
+        s.cache.lookups(),
+        s.cache.hit_rate() * 100.0
+    ));
+    out
+}
+
+/// Every evaluated grid point as CSV (canonical task order).
+pub fn sweep_csv(s: &SweepSummary) -> String {
+    let mut t = Table::new(&[
+        "task", "design", "family", "network", "objective", "macros", "energy_fj", "macro_fj",
+        "time_ns", "edp_fj_ns", "tops_w", "util", "pareto",
+    ]);
+    for (i, p) in s.points.iter().enumerate() {
+        let on_front = s.frontier(&p.network).is_some_and(|f| f.contains(&i));
+        t.row(vec![
+            p.task_index.to_string(),
+            p.design.clone(),
+            p.family.to_string(),
+            p.network.clone(),
+            p.objective.to_string(),
+            p.n_macros.to_string(),
+            p.energy_fj.to_string(),
+            p.macro_fj.to_string(),
+            p.time_ns.to_string(),
+            p.edp().to_string(),
+            p.tops_per_watt.to_string(),
+            p.utilization.to_string(),
+            if on_front { "1".into() } else { "0".into() },
+        ]);
+    }
+    t.to_csv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::Objective;
+    use crate::sweep::{run_sweep, SweepGrid, SweepOptions};
+    use crate::workload::deep_autoencoder;
+
+    fn summary() -> SweepSummary {
+        let grid = SweepGrid {
+            systems: crate::arch::table2_systems().into_iter().take(2).collect(),
+            networks: vec![deep_autoencoder()],
+            objectives: vec![Objective::Energy],
+        };
+        run_sweep(&grid, &SweepOptions::default())
+    }
+
+    #[test]
+    fn text_mentions_frontier_and_cache() {
+        let s = summary();
+        let text = sweep_text(&s);
+        assert!(text.contains("full grid"), "{text}");
+        assert!(text.contains("Pareto frontier"), "{text}");
+        assert!(text.contains("cost cache:"), "{text}");
+        assert!(text.contains("hit rate"), "{text}");
+    }
+
+    #[test]
+    fn csv_has_header_and_all_points() {
+        let s = summary();
+        let csv = sweep_csv(&s);
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines.len(), s.points.len() + 1);
+        assert!(lines[0].starts_with("task,design,family"));
+        // every frontier point is flagged
+        let flagged = lines[1..].iter().filter(|l| l.ends_with(",1")).count();
+        let on_front: usize = s.frontiers.iter().map(|(_, f)| f.len()).sum();
+        assert_eq!(flagged, on_front);
+    }
+}

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow::{anyhow, Context, Result};
 
 use super::manifest::{DesignArtifacts, Manifest, TensorSpec};
 

@@ -65,17 +65,33 @@ pub struct Manifest {
 }
 
 /// Manifest loading errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {path}: {source}")]
     Io {
         path: String,
         source: std::io::Error,
     },
-    #[error("manifest parse error: {0}")]
     Json(String),
-    #[error("manifest missing field: {0}")]
     Missing(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, source } => write!(f, "cannot read {path}: {source}"),
+            ManifestError::Json(m) => write!(f, "manifest parse error: {m}"),
+            ManifestError::Missing(m) => write!(f, "manifest missing field: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 fn jstr(j: &Json, key: &str) -> Result<String, ManifestError> {

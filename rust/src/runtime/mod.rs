@@ -1,9 +1,15 @@
 //! PJRT runtime: artifact manifest + execution engine for the
 //! AOT-compiled functional macro simulator (built by `make artifacts`).
+//!
+//! The manifest side is always available; the PJRT executor wraps the
+//! `xla` crate and is gated behind the `xla` cargo feature so the crate
+//! builds fully offline by default.
 
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 
+#[cfg(feature = "xla")]
 pub use engine::{CachedLiteral, Engine, Kind};
 pub use manifest::{
     default_artifacts_dir, load_manifest, ArtifactConfig, ArtifactFile, DesignArtifacts,

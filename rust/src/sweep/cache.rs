@@ -1,0 +1,297 @@
+//! Memoized cost-model cache for grid sweeps.
+//!
+//! The full survey × tinyMLPerf grid evaluates the same (macro
+//! geometry, layer shape) cost points over and over: networks repeat
+//! layer shapes internally (DS-CNN's four identical dw/pw stages, the
+//! autoencoder's 128×128 stack), and the three objectives share one
+//! mapping-space pass. The cache keys on everything that determines a
+//! [`LayerSearch`] — macro geometry, memory hierarchy, macro count,
+//! layer *shape* (names excluded), sparsity and policy restriction —
+//! and stores the per-objective optima, so a hit answers any objective.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::arch::{ImcFamily, ImcSystem};
+use crate::dse::{search_layer_all, DseOptions, LayerEvaluator, LayerResult, LayerSearch};
+use crate::mapping::TemporalPolicy;
+use crate::model::TechParams;
+use crate::workload::{Layer, LayerType};
+
+/// Everything that determines the outcome of a layer mapping search.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CostKey {
+    // --- macro geometry (paper Table I) ---
+    family: ImcFamily,
+    rows: usize,
+    cols: usize,
+    weight_bits: u32,
+    act_bits: u32,
+    dac_res: u32,
+    adc_res: u32,
+    row_mux: usize,
+    cols_per_adc: u32,
+    vdd_bits: u64,
+    tech_bits: u64,
+    /// Bit patterns of the [`TechParams`] capacitances — callers may
+    /// pass hand-calibrated parameters, not just `for_node` defaults.
+    tech_params: [u64; 4],
+    // --- system context ---
+    n_macros: usize,
+    /// Fingerprint of the memory hierarchy levels (size, read/write
+    /// energy bits, bandwidth, operand mask), inner → outer.
+    hierarchy: Vec<(u64, u64, u64, u64, u8)>,
+    // --- layer shape (name deliberately excluded) ---
+    ltype: LayerType,
+    dims: [usize; 9],
+    // --- search options ---
+    sparsity_bits: u64,
+    policy: Option<TemporalPolicy>,
+}
+
+impl CostKey {
+    pub fn new(
+        layer: &Layer,
+        sys: &ImcSystem,
+        tech: &TechParams,
+        input_sparsity: f64,
+        policy: Option<TemporalPolicy>,
+    ) -> Self {
+        let m = &sys.imc;
+        let hierarchy = sys
+            .hierarchy
+            .levels
+            .iter()
+            .map(|l| {
+                let mut mask = 0u8;
+                for (bit, op) in crate::arch::ALL_OPERANDS.iter().enumerate() {
+                    if l.serves(*op) {
+                        mask |= 1u8 << bit;
+                    }
+                }
+                (
+                    l.size_bits,
+                    l.read_fj_per_bit.to_bits(),
+                    l.write_fj_per_bit.to_bits(),
+                    l.bw_bits_per_cycle,
+                    mask,
+                )
+            })
+            .collect();
+        CostKey {
+            family: m.family,
+            rows: m.rows,
+            cols: m.cols,
+            weight_bits: m.weight_bits,
+            act_bits: m.act_bits,
+            dac_res: m.dac_res,
+            adc_res: m.adc_res,
+            row_mux: m.row_mux,
+            cols_per_adc: m.cols_per_adc,
+            vdd_bits: m.vdd.to_bits(),
+            tech_bits: m.tech_nm.to_bits(),
+            tech_params: [
+                tech.c_inv_ff.to_bits(),
+                tech.c_gate_ff.to_bits(),
+                tech.c_wl_ff.to_bits(),
+                tech.c_bl_ff.to_bits(),
+            ],
+            n_macros: sys.n_macros,
+            hierarchy,
+            ltype: layer.ltype,
+            dims: [
+                layer.b, layer.g, layer.k, layer.c, layer.ox, layer.oy, layer.fx, layer.fy,
+                layer.stride,
+            ],
+            sparsity_bits: input_sparsity.to_bits(),
+            policy,
+        }
+    }
+}
+
+/// Hit/miss counters of a [`CostCache`] (or of several merged shards).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Accumulate another shard's counters. `entries` becomes the total
+    /// held across the (independent) shard caches — shards may cache the
+    /// same key, so this is an upper bound on distinct keys.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.entries += other.entries;
+    }
+}
+
+/// Thread-safe memoized layer-search cache. Plugs into network search as
+/// a [`LayerEvaluator`]. Misses are computed outside the lock, so
+/// concurrent first lookups of the same key may both evaluate (both
+/// count as misses; the first insert wins).
+#[derive(Default)]
+pub struct CostCache {
+    map: Mutex<HashMap<CostKey, LayerSearch>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    /// Memoized [`search_layer_all`].
+    pub fn search(
+        &self,
+        layer: &Layer,
+        sys: &ImcSystem,
+        tech: &TechParams,
+        input_sparsity: f64,
+        policy: Option<TemporalPolicy>,
+    ) -> LayerSearch {
+        let key = CostKey::new(layer, sys, tech, input_sparsity, policy);
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let search = search_layer_all(layer, sys, tech, input_sparsity, policy);
+        self.map
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(search)
+            .clone()
+    }
+}
+
+impl LayerEvaluator for CostCache {
+    fn evaluate_layer(
+        &self,
+        layer: &Layer,
+        sys: &ImcSystem,
+        tech: &TechParams,
+        opts: &DseOptions,
+    ) -> LayerResult {
+        self.search(layer, sys, tech, opts.input_sparsity, opts.policy)
+            .to_result(layer, opts.objective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::table2_systems;
+    use crate::dse::{search_layer, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY};
+
+    fn ctx() -> (ImcSystem, TechParams) {
+        let sys = table2_systems().remove(1); // aimc_multi: cheap search
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        (sys, tech)
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::dense("fc", 128, 640);
+        let a = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        let b = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(
+            a.best(Objective::Energy).total_energy_fj(),
+            b.best(Objective::Energy).total_energy_fj()
+        );
+    }
+
+    #[test]
+    fn key_ignores_layer_name_but_result_keeps_it() {
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let opts = DseOptions::default();
+        let first = Layer::dense("fc_a", 64, 256);
+        let same_shape = Layer::dense("fc_b", 64, 256);
+        let ra = cache.evaluate_layer(&first, &sys, &tech, &opts);
+        let rb = cache.evaluate_layer(&same_shape, &sys, &tech, &opts);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(ra.layer.name, "fc_a");
+        assert_eq!(rb.layer.name, "fc_b");
+        assert_eq!(ra.best.total_energy_fj(), rb.best.total_energy_fj());
+    }
+
+    #[test]
+    fn key_distinguishes_shape_options_and_system() {
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::dense("fc", 64, 256);
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        // different shape
+        let wider = Layer::dense("fc", 64, 512);
+        cache.search(&wider, &sys, &tech, DEFAULT_SPARSITY, None);
+        // different sparsity
+        cache.search(&l, &sys, &tech, 0.9, None);
+        // different policy restriction
+        cache.search(
+            &l,
+            &sys,
+            &tech,
+            DEFAULT_SPARSITY,
+            Some(TemporalPolicy::WeightStationary),
+        );
+        // different system
+        let other = table2_systems().remove(3);
+        let other_tech = TechParams::for_node(other.imc.tech_nm);
+        cache.search(&l, &other, &other_tech, DEFAULT_SPARSITY, None);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 5, 5));
+    }
+
+    #[test]
+    fn cached_result_matches_direct_search_per_objective() {
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        for objective in ALL_OBJECTIVES {
+            let opts = DseOptions {
+                objective,
+                ..Default::default()
+            };
+            let cached = cache.evaluate_layer(&l, &sys, &tech, &opts);
+            let direct = search_layer(&l, &sys, &tech, &opts);
+            assert_eq!(cached.best.total_energy_fj(), direct.best.total_energy_fj());
+            assert_eq!(cached.best.time_ns, direct.best.time_ns);
+            assert_eq!(cached.evaluated, direct.evaluated);
+        }
+        // one search pass served all three objectives
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+    }
+}

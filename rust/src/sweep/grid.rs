@@ -1,0 +1,383 @@
+//! Grid construction, sharding and execution for the full-grid sweep.
+//!
+//! The grid is the cross product *survey designs × tinyMLPerf networks
+//! × objectives*, every design normalized to the same total SRAM-cell
+//! budget (the paper's fairness rule). Tasks are numbered in canonical
+//! order and dealt round-robin across shards, so `--shards N` splits
+//! the grid into N near-equal, deterministic slices that CI jobs or
+//! machines can run independently; [`merge_summaries`] recombines shard
+//! outputs into the same global Pareto frontier a single-shard run
+//! produces.
+
+use crate::arch::{ImcFamily, ImcSystem};
+use crate::db;
+use crate::dse::{
+    pareto_front, LayerResult, NetworkResult, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY,
+};
+use crate::model::TechParams;
+use crate::util::pool::{default_threads, parallel_map_with};
+use crate::workload::{all_networks, Network};
+
+use super::cache::{CacheStats, CostCache};
+
+/// Total SRAM cells every design is normalized to: the largest survey
+/// macro geometry (1152 × 256, as in paper Table II).
+pub const DEFAULT_GRID_CELLS: usize = 1152 * 256;
+
+/// The full evaluation grid.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub systems: Vec<ImcSystem>,
+    pub networks: Vec<Network>,
+    pub objectives: Vec<Objective>,
+}
+
+impl SweepGrid {
+    /// The paper-scale grid: every surveyed silicon operating point
+    /// (instantiated as a multi-macro system at `target_cells` total
+    /// SRAM cells) × the four tinyMLPerf networks × all objectives.
+    pub fn survey_tinymlperf(target_cells: usize) -> Self {
+        let mut systems = Vec::new();
+        for entry in db::survey() {
+            let imc = entry.to_macro();
+            let name = imc.name.clone();
+            let sys = ImcSystem::new(&name, imc, 1).normalized_to_cells(target_cells);
+            if sys.validate().is_ok() {
+                systems.push(sys);
+            }
+        }
+        SweepGrid {
+            systems,
+            networks: all_networks(),
+            objectives: ALL_OBJECTIVES.to_vec(),
+        }
+    }
+
+    /// Number of grid tasks (design × network × objective points).
+    pub fn n_tasks(&self) -> usize {
+        self.systems.len() * self.networks.len() * self.objectives.len()
+    }
+
+    /// Number of (design, network) evaluation groups. A group is the
+    /// unit of work: one mapping-space pass serves every objective, so
+    /// both the parallel fan-out and the shard deal operate on groups —
+    /// splitting a group's objective points across workers or shard
+    /// processes would re-run the search up to `objectives.len()` times.
+    pub fn n_groups(&self) -> usize {
+        self.systems.len() * self.networks.len()
+    }
+
+    /// Decompose a task index into its (system, network, objective)
+    /// grid coordinates — the inverse of the canonical task numbering.
+    pub fn coords(&self, task: usize) -> (usize, usize, usize) {
+        let n_obj = self.objectives.len();
+        let n_net = self.networks.len();
+        (task / (n_obj * n_net), (task / n_obj) % n_net, task % n_obj)
+    }
+
+    /// Group indices belonging to one shard (round-robin deal).
+    pub fn shard_groups(&self, shards: usize, shard_index: usize) -> Vec<usize> {
+        (0..self.n_groups())
+            .filter(|g| g % shards.max(1) == shard_index)
+            .collect()
+    }
+
+    /// Task indices belonging to one shard (the shard's groups expanded
+    /// to their per-objective grid points, in canonical order).
+    pub fn shard_tasks(&self, shards: usize, shard_index: usize) -> Vec<usize> {
+        let n_obj = self.objectives.len();
+        self.shard_groups(shards, shard_index)
+            .into_iter()
+            .flat_map(|g| (g * n_obj)..((g + 1) * n_obj))
+            .collect()
+    }
+}
+
+/// Execution options for [`run_sweep`].
+#[derive(Debug, Clone, Copy)]
+pub struct SweepOptions {
+    /// Number of shards the grid is (conceptually) split into.
+    pub shards: usize,
+    /// Evaluate only this shard (`None`: the whole grid).
+    pub shard_index: Option<usize>,
+    pub input_sparsity: f64,
+    /// Worker threads for the group-level fan-out.
+    pub threads: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            shards: 1,
+            shard_index: None,
+            input_sparsity: DEFAULT_SPARSITY,
+            threads: default_threads(),
+        }
+    }
+}
+
+/// One evaluated grid point: a network mapped onto a design under one
+/// objective (the aggregate of its per-layer optima).
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    /// Canonical grid position — the shard-independent identity.
+    pub task_index: usize,
+    pub design: String,
+    pub family: ImcFamily,
+    pub n_macros: usize,
+    pub network: String,
+    pub objective: Objective,
+    /// Total energy (fJ), datapath + memory traffic.
+    pub energy_fj: f64,
+    /// Macro + global-buffer energy (fJ), the Fig. 7 macro-level axis.
+    pub macro_fj: f64,
+    pub time_ns: f64,
+    pub tops_per_watt: f64,
+    pub utilization: f64,
+}
+
+impl GridPoint {
+    pub fn edp(&self) -> f64 {
+        self.energy_fj * self.time_ns
+    }
+}
+
+/// Aggregated outcome of a sweep run (one shard, or the merged grid).
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    pub shards: usize,
+    /// Shard this summary covers (`None`: full grid / merged).
+    pub shard_index: Option<usize>,
+    /// Size of the *full* grid, independent of sharding.
+    pub total_tasks: usize,
+    /// Evaluated points, sorted by `task_index`.
+    pub points: Vec<GridPoint>,
+    /// Per-network (energy, latency) Pareto frontiers over all evaluated
+    /// designs and objectives: (network name, indices into `points`).
+    pub frontiers: Vec<(String, Vec<usize>)>,
+    pub cache: CacheStats,
+    /// True when this summary was assembled by [`merge_summaries`] —
+    /// `cache` then aggregates several independent per-shard caches.
+    pub merged: bool,
+}
+
+impl SweepSummary {
+    /// Indices of `points` on the frontier of `network`.
+    pub fn frontier(&self, network: &str) -> Option<&[usize]> {
+        self.frontiers
+            .iter()
+            .find(|(n, _)| n == network)
+            .map(|(_, f)| f.as_slice())
+    }
+}
+
+/// Evaluate the grid (or one shard of it). *(design, network)* groups
+/// fan out over the thread pool; every group searches each layer once
+/// through the shared memoized cost cache (serially, so identical keys
+/// never race) and materializes one grid point per objective from that
+/// single pass.
+pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepSummary {
+    let shards = opts.shards.max(1);
+    let groups: Vec<usize> = match opts.shard_index {
+        Some(k) => grid.shard_groups(shards, k),
+        None => (0..grid.n_groups()).collect(),
+    };
+    let cache = CostCache::new();
+    let points: Vec<GridPoint> = parallel_map_with(&groups, opts.threads, |&group| {
+        eval_group(grid, group, opts.input_sparsity, &cache)
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    let frontiers = compute_frontiers(&points);
+    SweepSummary {
+        shards,
+        shard_index: opts.shard_index,
+        total_tasks: grid.n_tasks(),
+        points,
+        frontiers,
+        cache: cache.stats(),
+        merged: false,
+    }
+}
+
+/// Map one network onto one design and emit a grid point per objective,
+/// all served by a single all-objective search per layer.
+fn eval_group(
+    grid: &SweepGrid,
+    group: usize,
+    input_sparsity: f64,
+    cache: &CostCache,
+) -> Vec<GridPoint> {
+    let n_obj = grid.objectives.len();
+    let sys = &grid.systems[group / grid.networks.len()];
+    let net = &grid.networks[group % grid.networks.len()];
+    let tech = TechParams::for_node(sys.imc.tech_nm);
+    let searches: Vec<_> = net
+        .layers
+        .iter()
+        .map(|l| cache.search(l, sys, &tech, input_sparsity, None))
+        .collect();
+    grid.objectives
+        .iter()
+        .enumerate()
+        .map(|(oi, &objective)| {
+            let layers: Vec<LayerResult> = net
+                .layers
+                .iter()
+                .zip(&searches)
+                .map(|(l, s)| s.to_result(l, objective))
+                .collect();
+            let r = NetworkResult {
+                system: sys.name.clone(),
+                network: net.name.clone(),
+                layers,
+            };
+            GridPoint {
+                task_index: group * n_obj + oi,
+                design: sys.name.clone(),
+                family: sys.imc.family,
+                n_macros: sys.n_macros,
+                network: net.name.clone(),
+                objective,
+                energy_fj: r.total_energy_fj(),
+                macro_fj: r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj,
+                time_ns: r.total_time_ns(),
+                tops_per_watt: r.effective_tops_per_watt(),
+                utilization: r.mean_utilization(),
+            }
+        })
+        .collect()
+}
+
+/// Per-network (energy, latency) Pareto frontiers, preserving first-seen
+/// network order. Depends only on the *set* of points (inputs are sorted
+/// by task index), so shard count never changes the outcome.
+fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
+    let mut networks: Vec<&str> = Vec::new();
+    for p in points {
+        if !networks.contains(&p.network.as_str()) {
+            networks.push(&p.network);
+        }
+    }
+    networks
+        .iter()
+        .map(|&name| {
+            let idx: Vec<usize> = (0..points.len())
+                .filter(|&i| points[i].network == name)
+                .collect();
+            let coords: Vec<(f64, f64)> = idx
+                .iter()
+                .map(|&i| (points[i].energy_fj, points[i].time_ns))
+                .collect();
+            let front = pareto_front(&coords);
+            (name.to_string(), front.into_iter().map(|j| idx[j]).collect())
+        })
+        .collect()
+}
+
+/// Merge per-shard summaries back into a full-grid summary: points are
+/// reassembled in canonical task order (duplicates collapse), cache
+/// counters accumulate, and the global Pareto frontier is recomputed —
+/// bit-identical to a single-shard run over the same tasks.
+pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
+    let mut points: Vec<GridPoint> = parts.iter().flat_map(|s| s.points.clone()).collect();
+    points.sort_by_key(|p| p.task_index);
+    points.dedup_by_key(|p| p.task_index);
+    let mut cache = CacheStats::default();
+    for s in parts {
+        cache.merge(&s.cache);
+    }
+    let frontiers = compute_frontiers(&points);
+    SweepSummary {
+        shards: parts.first().map(|s| s.shards).unwrap_or(1),
+        shard_index: None,
+        total_tasks: parts.iter().map(|s| s.total_tasks).max().unwrap_or(0),
+        points,
+        frontiers,
+        cache,
+        merged: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::table2_systems;
+    use crate::workload::deep_autoencoder;
+
+    fn tiny_grid() -> SweepGrid {
+        SweepGrid {
+            systems: table2_systems().into_iter().take(2).collect(),
+            networks: vec![deep_autoencoder()],
+            objectives: vec![Objective::Energy, Objective::Latency],
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_grid() {
+        let grid = tiny_grid();
+        let shards = 3;
+        let mut seen: Vec<usize> = Vec::new();
+        for k in 0..shards {
+            let part = grid.shard_tasks(shards, k);
+            for t in part {
+                assert!(!seen.contains(&t), "task {t} dealt twice");
+                seen.push(t);
+            }
+        }
+        seen.sort_unstable();
+        let all: Vec<usize> = (0..grid.n_tasks()).collect();
+        assert_eq!(seen, all);
+    }
+
+    #[test]
+    fn coords_roundtrip_canonical_order() {
+        let grid = tiny_grid();
+        let mut last = None;
+        for t in 0..grid.n_tasks() {
+            let (si, ni, oi) = grid.coords(t);
+            assert!(si < grid.systems.len());
+            assert!(ni < grid.networks.len());
+            assert!(oi < grid.objectives.len());
+            let flat = (si * grid.networks.len() + ni) * grid.objectives.len() + oi;
+            assert_eq!(flat, t);
+            assert!(Some(flat) > last, "tasks not in canonical order");
+            last = Some(flat);
+        }
+    }
+
+    #[test]
+    fn single_shard_run_covers_grid_and_caches() {
+        let grid = tiny_grid();
+        let opts = SweepOptions {
+            threads: 2,
+            ..Default::default()
+        };
+        let s = run_sweep(&grid, &opts);
+        assert_eq!(s.points.len(), grid.n_tasks());
+        assert_eq!(s.total_tasks, grid.n_tasks());
+        // points come back in canonical order
+        for (i, p) in s.points.iter().enumerate() {
+            assert_eq!(p.task_index, i);
+            assert!(p.energy_fj > 0.0 && p.time_ns > 0.0);
+        }
+        // the autoencoder repeats its 128×128 stack, and layers within a
+        // group are searched serially — hits are deterministic, not racy
+        assert!(s.cache.hits > 0, "no cache hits: {:?}", s.cache);
+        // one frontier, for the one network, and it is non-empty
+        assert_eq!(s.frontiers.len(), 1);
+        assert!(!s.frontiers[0].1.is_empty());
+    }
+
+    #[test]
+    fn latency_objective_point_is_no_slower() {
+        let grid = tiny_grid();
+        let s = run_sweep(&grid, &SweepOptions::default());
+        // tasks 0/1 are (design 0, AE, energy) and (design 0, AE, latency)
+        assert_eq!(s.points[0].objective, Objective::Energy);
+        assert_eq!(s.points[1].objective, Objective::Latency);
+        assert!(s.points[1].time_ns <= s.points[0].time_ns * (1.0 + 1e-9));
+        assert!(s.points[0].energy_fj <= s.points[1].energy_fj * (1.0 + 1e-9));
+    }
+}

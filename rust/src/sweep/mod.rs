@@ -1,0 +1,20 @@
+//! The sharded full-grid design-space sweep (paper §VI–VII at survey
+//! scale): every surveyed silicon design × every tinyMLPerf network ×
+//! every objective, evaluated as a parallel pipeline with a memoized
+//! cost-model cache and aggregated into per-network Pareto frontiers.
+//!
+//! * [`cache`] — the memoized cost cache keyed on (macro geometry,
+//!   layer shape, search options); identical layer shapes across
+//!   networks and objectives are searched once.
+//! * [`grid`] — grid construction, deterministic sharding
+//!   (`--shards`/`--shard-index`), parallel execution and shard-result
+//!   merging into a global Pareto frontier.
+
+pub mod cache;
+pub mod grid;
+
+pub use cache::{CacheStats, CostCache};
+pub use grid::{
+    merge_summaries, run_sweep, GridPoint, SweepGrid, SweepOptions, SweepSummary,
+    DEFAULT_GRID_CELLS,
+};

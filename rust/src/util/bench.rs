@@ -62,8 +62,15 @@ impl Bench {
         }
     }
 
-    fn enabled(&self, name: &str) -> bool {
+    /// Whether `name` passes the command-line substring filters.
+    pub fn enabled(&self, name: &str) -> bool {
         self.filters.is_empty() || self.filters.iter().any(|f| name.contains(f))
+    }
+
+    /// Whether `--quick` / `IMCSIM_BENCH_QUICK` is in effect (benches
+    /// use this to skip expensive non-timed sections too).
+    pub fn is_quick(&self) -> bool {
+        self.quick
     }
 
     /// Time `f` repeatedly; returns stats (also prints a summary line).
@@ -73,7 +80,8 @@ impl Bench {
             return None;
         }
         // warm-up: at least 3 runs or 200 ms
-        let warm_deadline = Instant::now() + Duration::from_millis(if self.quick { 50 } else { 200 });
+        let warm_ms = if self.quick { 50 } else { 200 };
+        let warm_deadline = Instant::now() + Duration::from_millis(warm_ms);
         let mut warm_runs = 0u32;
         let mut last = Duration::ZERO;
         while warm_runs < 3 || Instant::now() < warm_deadline {

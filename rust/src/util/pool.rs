@@ -112,9 +112,57 @@ mod tests {
     }
 
     #[test]
+    fn zero_threads_clamps_to_one() {
+        let items = [1, 2, 3];
+        assert_eq!(parallel_map_with(&items, 0, |&x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn empty_input_with_zero_threads() {
+        let items: Vec<u8> = vec![];
+        assert!(parallel_map_with(&items, 0, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn non_divisible_item_count_preserves_order() {
+        // 3 workers over 10 items: dynamic work-stealing must still
+        // return results in input order
+        let items: Vec<usize> = (0..10).collect();
+        let out = parallel_map_with(&items, 3, |&x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uneven_work_is_balanced_dynamically() {
+        // front-loaded work: the atomic work index must let idle workers
+        // pick up the tail (order still preserved)
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map_with(&items, 4, |&x| {
+            if x < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x + 1
+        });
+        assert_eq!(out, (1..=64).collect::<Vec<u64>>());
+    }
+
+    #[test]
     fn fold_sums() {
         let items: Vec<u64> = (1..=100).collect();
         let total = parallel_fold(&items, 0u64, |&x| x, |a, b| a + b);
         assert_eq!(total, 5050);
+    }
+
+    #[test]
+    fn fold_empty_returns_init() {
+        let items: Vec<u64> = vec![];
+        assert_eq!(parallel_fold(&items, 41, |&x| x, |a, b| a + b), 41);
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_capped() {
+        let n = default_threads();
+        assert!(n >= 1);
+        assert!(n <= 16 || std::env::var("IMCSIM_THREADS").is_ok());
     }
 }

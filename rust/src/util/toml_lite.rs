@@ -68,12 +68,23 @@ impl Value {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {message}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "toml parse error on line {}: {}",
+            self.line, self.message
+        )
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn err(line: usize, message: impl Into<String>) -> TomlError {
     TomlError {

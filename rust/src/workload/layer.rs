@@ -12,7 +12,6 @@
 //!   O[b][g][k][ox][oy] += I[b][g][c][ox·s+fx][oy·s+fy] · W[k][g][c][fx][fy]
 //! ```
 
-
 /// The seven loop dimensions of Fig. 1 (+ stride).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LoopDim {
@@ -193,7 +192,17 @@ impl Layer {
     // ---- constructors matching Fig. 1's workload table ----
 
     /// Conv2D: G=1.
-    pub fn conv2d(name: &str, oy: usize, ox: usize, k: usize, c: usize, fy: usize, fx: usize, stride: usize) -> Self {
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        name: &str,
+        oy: usize,
+        ox: usize,
+        k: usize,
+        c: usize,
+        fy: usize,
+        fx: usize,
+        stride: usize,
+    ) -> Self {
         Layer {
             name: name.into(),
             ltype: LayerType::Conv2d,
@@ -210,7 +219,15 @@ impl Layer {
     }
 
     /// Depthwise: G=channels, K=C=1.
-    pub fn depthwise(name: &str, oy: usize, ox: usize, g: usize, fy: usize, fx: usize, stride: usize) -> Self {
+    pub fn depthwise(
+        name: &str,
+        oy: usize,
+        ox: usize,
+        g: usize,
+        fy: usize,
+        fx: usize,
+        stride: usize,
+    ) -> Self {
         Layer {
             name: name.into(),
             ltype: LayerType::Depthwise,

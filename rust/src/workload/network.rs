@@ -2,7 +2,6 @@
 
 use std::collections::BTreeMap;
 
-
 use super::layer::{Layer, LayerType};
 
 /// A DNN workload: a sequence of layers.

@@ -1,5 +1,7 @@
 //! Integration: the serving coordinator end-to-end (batcher + tiler +
 //! TinyCNN) against real artifacts. Skips without `make artifacts`.
+//! The whole suite needs the PJRT executor (`xla` cargo feature).
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 use std::time::Duration;

@@ -1,6 +1,8 @@
 //! Integration: the PJRT runtime against the real AOT artifacts.
 //! Requires `make artifacts`; every test skips (with a notice) if the
 //! artifacts are absent so `cargo test` stays green pre-build.
+//! The whole suite needs the PJRT executor (`xla` cargo feature).
+#![cfg(feature = "xla")]
 
 use imcsim::coordinator::MatI32;
 use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
@@ -17,7 +19,14 @@ fn engine() -> Option<Engine> {
     }
 }
 
-fn rand_operands(rng: &mut Rng, rows: usize, d1: usize, batch: usize, ab: u32, wb: u32) -> (Vec<i32>, Vec<i32>) {
+fn rand_operands(
+    rng: &mut Rng,
+    rows: usize,
+    d1: usize,
+    batch: usize,
+    ab: u32,
+    wb: u32,
+) -> (Vec<i32>, Vec<i32>) {
     let x: Vec<i32> = (0..batch * rows)
         .map(|_| rng.range_i64(0, (1 << ab) - 1) as i32)
         .collect();

@@ -1,0 +1,167 @@
+//! Integration: the sharded full-grid sweep — shard determinism (the
+//! Pareto frontier must not depend on the shard count), cache
+//! correctness against the uncached DSE, and the survey-grid builder.
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{
+    search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES,
+};
+use imcsim::sweep::{
+    merge_summaries, run_sweep, CostCache, SweepGrid, SweepOptions, DEFAULT_GRID_CELLS,
+};
+use imcsim::workload::{deep_autoencoder, ds_cnn};
+
+/// A small but representative grid: 2 designs × 2 networks × 3
+/// objectives (DS-CNN brings the repeated dw/pw stages that exercise
+/// the cache; the autoencoder brings the repeated 128×128 stack).
+fn small_grid() -> SweepGrid {
+    SweepGrid {
+        systems: table2_systems().into_iter().take(2).collect(),
+        networks: vec![deep_autoencoder(), ds_cnn()],
+        objectives: ALL_OBJECTIVES.to_vec(),
+    }
+}
+
+fn points_equal(a: &imcsim::sweep::SweepSummary, b: &imcsim::sweep::SweepSummary) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.task_index, y.task_index);
+        assert_eq!(x.design, y.design);
+        assert_eq!(x.network, y.network);
+        assert_eq!(x.objective, y.objective);
+        // bit-identical: same deterministic arithmetic on both paths
+        assert_eq!(x.energy_fj.to_bits(), y.energy_fj.to_bits());
+        assert_eq!(x.time_ns.to_bits(), y.time_ns.to_bits());
+    }
+}
+
+#[test]
+fn pareto_frontier_identical_across_shard_counts() {
+    let grid = small_grid();
+    let single = run_sweep(&grid, &SweepOptions::default());
+    assert_eq!(single.points.len(), grid.n_tasks());
+
+    for shards in [3, 8] {
+        let parts: Vec<_> = (0..shards)
+            .map(|k| {
+                let opts = SweepOptions {
+                    shards,
+                    shard_index: Some(k),
+                    threads: 2,
+                    ..Default::default()
+                };
+                run_sweep(&grid, &opts)
+            })
+            .collect();
+        let merged = merge_summaries(&parts);
+        points_equal(&single, &merged);
+        assert_eq!(single.frontiers, merged.frontiers);
+    }
+}
+
+#[test]
+fn shard_summaries_cover_disjoint_slices() {
+    let grid = small_grid();
+    let shards = 5;
+    let mut seen = vec![false; grid.n_tasks()];
+    for k in 0..shards {
+        let opts = SweepOptions {
+            shards,
+            shard_index: Some(k),
+            threads: 1,
+            ..Default::default()
+        };
+        let s = run_sweep(&grid, &opts);
+        assert_eq!(s.shard_index, Some(k));
+        assert_eq!(s.total_tasks, grid.n_tasks());
+        for p in &s.points {
+            assert!(!seen[p.task_index], "task {} in two shards", p.task_index);
+            seen[p.task_index] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some task never evaluated");
+}
+
+#[test]
+fn grid_run_reports_cache_hits() {
+    let grid = small_grid();
+    let s = run_sweep(&grid, &SweepOptions::default());
+    assert!(s.cache.hits > 0, "expected cache hits on the grid run");
+    assert!(s.cache.hit_rate() > 0.0);
+    // Layers inside a (design, network) group are searched serially, so
+    // intra-network shape repeats hit deterministically: the AE's
+    // 128×128 stack repeats 5 of 10 layers, DS-CNN's dw/pw stages 6 of
+    // 10 — at least a quarter of all lookups must hit.
+    assert!(
+        s.cache.hits >= s.cache.lookups() / 4,
+        "hits {} < lookups/4 ({})",
+        s.cache.hits,
+        s.cache.lookups() / 4
+    );
+    // one lookup per layer per (design, network) group: all objectives
+    // share a single search pass
+    let total_layers: usize = grid.networks.iter().map(|n| n.layers.len()).sum();
+    assert_eq!(s.cache.lookups() as usize, grid.systems.len() * total_layers);
+}
+
+#[test]
+fn cached_network_search_matches_uncached() {
+    let systems = table2_systems();
+    let sys = &systems[1];
+    let net = ds_cnn();
+    let cache = CostCache::new();
+    for objective in ALL_OBJECTIVES {
+        let opts = DseOptions {
+            objective,
+            ..Default::default()
+        };
+        let plain = search_network(&net, sys, &opts);
+        let cached = search_network_with(&net, sys, &opts, &cache, 1);
+        assert_eq!(plain.total_energy_fj(), cached.total_energy_fj());
+        assert_eq!(plain.total_time_ns(), cached.total_time_ns());
+        assert_eq!(plain.mean_utilization(), cached.mean_utilization());
+        for (a, b) in plain.layers.iter().zip(&cached.layers) {
+            assert_eq!(a.layer.name, b.layer.name);
+            assert_eq!(a.best.policy, b.best.policy);
+            assert_eq!(a.evaluated, b.evaluated);
+        }
+    }
+}
+
+#[test]
+fn survey_grid_builds_every_design() {
+    let grid = SweepGrid::survey_tinymlperf(DEFAULT_GRID_CELLS);
+    // every survey operating point instantiates (22+ entries, both
+    // families), all four tinyMLPerf networks, all three objectives
+    assert!(grid.systems.len() >= 20, "only {} systems", grid.systems.len());
+    assert_eq!(grid.networks.len(), 4);
+    assert_eq!(grid.objectives.len(), 3);
+    for sys in &grid.systems {
+        sys.validate().unwrap();
+        assert!(sys.total_cells() >= DEFAULT_GRID_CELLS);
+        assert!(sys.total_cells() - DEFAULT_GRID_CELLS < sys.imc.n_cells());
+    }
+    // names are unique (chip @ voltage / precision operating points)
+    let mut names: Vec<&str> = grid.systems.iter().map(|s| s.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), grid.systems.len(), "duplicate design names");
+}
+
+#[test]
+fn objective_grid_points_are_consistent() {
+    // For any (design, network): the latency-objective point is no
+    // slower than the energy-objective point, and vice versa on energy.
+    let grid = small_grid();
+    let s = run_sweep(&grid, &SweepOptions::default());
+    let n_obj = grid.objectives.len();
+    for chunk in s.points.chunks(n_obj) {
+        let energy = chunk.iter().find(|p| p.objective == Objective::Energy);
+        let latency = chunk.iter().find(|p| p.objective == Objective::Latency);
+        let (e, l) = (energy.unwrap(), latency.unwrap());
+        assert_eq!(e.design, l.design);
+        assert_eq!(e.network, l.network);
+        assert!(l.time_ns <= e.time_ns * (1.0 + 1e-9));
+        assert!(e.energy_fj <= l.energy_fj * (1.0 + 1e-9));
+    }
+}
