@@ -1,9 +1,14 @@
 //! Perf bench: the grid-sweep pipeline — memoized vs exhaustive layer
-//! search, and a mini-grid end-to-end run at several shard widths.
-//! Reports the cache hit rate the full survey grid achieves.
+//! search, pruned vs unpruned mapping search, and a mini-grid
+//! end-to-end run at several shard widths. Reports the cache hit rate
+//! and the bound-pruning evaluation reduction the full survey grid
+//! achieves (the acceptance bar is ≥2× fewer full cost evaluations).
 
 use imcsim::arch::table2_systems;
-use imcsim::dse::{search_layer, DseOptions, LayerEvaluator, ALL_OBJECTIVES};
+use imcsim::dse::{
+    search_layer, search_layer_all, search_layer_all_unpruned, DseOptions, LayerEvaluator,
+    ALL_OBJECTIVES, DEFAULT_SPARSITY,
+};
 use imcsim::model::TechParams;
 use imcsim::sweep::{run_sweep, CostCache, SweepGrid, SweepOptions};
 use imcsim::util::bench::{report_metric, Bench};
@@ -35,10 +40,27 @@ fn main() {
         }
     }
 
+    // pruned vs unpruned single-layer search (identical optima; the
+    // pruned pass skips full evaluation for bound-dominated candidates)
+    if let Some(pruned) = b.bench("sweep/layer_search_pruned", || {
+        search_layer_all(&layer, sys, &tech, DEFAULT_SPARSITY, None).evaluated
+    }) {
+        if let Some(unpruned) = b.bench("sweep/layer_search_unpruned", || {
+            search_layer_all_unpruned(&layer, sys, &tech, DEFAULT_SPARSITY, None).evaluated
+        }) {
+            report_metric(
+                "sweep/prune_time_speedup",
+                unpruned.median_ns / pruned.median_ns.max(1.0),
+                "x",
+            );
+        }
+    }
+
     // mini-grid end-to-end at different shard widths
     let grid = SweepGrid {
         systems: systems.clone(),
         networks: vec![deep_autoencoder(), ds_cnn()],
+        sparsities: vec![DEFAULT_SPARSITY],
         objectives: ALL_OBJECTIVES.to_vec(),
     };
     for threads in [1usize, 4] {
@@ -52,9 +74,21 @@ fn main() {
         });
     }
 
-    // the headline metric: cache effectiveness on the real survey grid
-    // (the most expensive section — skipped under --quick or when
-    // filtered out, like any timed benchmark)
+    // evaluation-reduction on the mini grid (cheap enough for --quick)
+    {
+        let s = run_sweep(&grid, &SweepOptions::default());
+        let evaluated = s.cache.evaluated.max(1) as f64;
+        report_metric(
+            "sweep/mini_grid_eval_reduction",
+            s.cache.candidates() as f64 / evaluated,
+            "x",
+        );
+    }
+
+    // the headline metrics: cache effectiveness and bound-pruning
+    // reduction on the real survey grid (the most expensive section —
+    // skipped under --quick or when filtered out, like any timed
+    // benchmark)
     if b.enabled("sweep/survey_cache") && !b.is_quick() {
         let survey = SweepGrid::survey_tinymlperf(imcsim::sweep::DEFAULT_GRID_CELLS);
         let s = run_sweep(&survey, &SweepOptions::default());
@@ -63,5 +97,14 @@ fn main() {
         report_metric("sweep/survey_grid_tasks", s.points.len() as f64, "tasks");
         report_metric("sweep/survey_cache_hit_rate", hit_pct, "%");
         report_metric("sweep/survey_cache_entries", entries, "entries");
+        // candidates / evaluated: how many fewer full evaluate() calls
+        // the admissible bound buys on the default grid (target: >= 2x)
+        report_metric("sweep/survey_candidates", s.cache.candidates() as f64, "cands");
+        report_metric("sweep/survey_evaluated", s.cache.evaluated as f64, "evals");
+        report_metric(
+            "sweep/survey_eval_reduction",
+            s.cache.candidates() as f64 / s.cache.evaluated.max(1) as f64,
+            "x",
+        );
     }
 }

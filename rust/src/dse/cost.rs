@@ -2,12 +2,14 @@
 //! energy breakdown + latency + utilization. This is the DSE hot path.
 
 use crate::arch::ImcSystem;
-use crate::mapping::{tile, SpatialMapping, TemporalPolicy, TileCounts};
+use crate::mapping::{tile, weight_loads, SpatialMapping, TemporalPolicy, TileCounts};
 use crate::model::{macro_energy, EnergyBreakdown, MacroOpCounts, TechParams};
 use crate::model::latency::cycle_ns;
 use crate::workload::Layer;
 
-use super::reuse::{access_counts, traffic_energy_fj, AccessCounts, TrafficEnergy};
+use super::reuse::{
+    access_counts, input_gb_reads_per_macro, traffic_energy_fj, AccessCounts, TrafficEnergy,
+};
 
 /// Default input sparsity assumed by the paper's comparisons.
 pub const DEFAULT_SPARSITY: f64 = 0.5;
@@ -58,8 +60,22 @@ pub fn evaluate(
     policy: TemporalPolicy,
     input_sparsity: f64,
 ) -> MappingEval {
-    let tiles = tile(layer, sys, spatial);
-    let accesses = access_counts(layer, sys, spatial, &tiles, policy);
+    evaluate_tiled(layer, sys, tech, spatial, policy, input_sparsity, tile(layer, sys, spatial))
+}
+
+/// [`evaluate`] with precomputed tile counts — the streaming pruned
+/// search computes `tiles` once for the bound and reuses them here when
+/// the candidate survives.
+pub fn evaluate_tiled(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    spatial: &SpatialMapping,
+    policy: TemporalPolicy,
+    input_sparsity: f64,
+    tiles: TileCounts,
+) -> MappingEval {
+    let accesses = access_counts(layer, sys, &tiles, policy);
 
     // --- datapath energy: per macro, × active macros ---
     let ops = MacroOpCounts {
@@ -99,6 +115,122 @@ pub fn evaluate(
         time_ns,
         cycles,
     }
+}
+
+/// Admissible lower bounds on the objectives of one mapping candidate,
+/// computed without the full [`evaluate`] pass.
+///
+/// Guarantee: for every candidate, `energy_fj <= evaluate(..).total_energy_fj()`
+/// and `time_ns <= evaluate(..).time_ns` hold *numerically* (not just
+/// mathematically) — the bound reuses the evaluator's own building
+/// blocks with identical operation order and drops only the
+/// non-negative partial-sum spill terms. The search may therefore
+/// discard any candidate whose bound cannot beat an incumbent and still
+/// return bit-identical optima to the exhaustive pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CandidateBound {
+    /// Lower bound on total energy (fJ): exact datapath + spill-free
+    /// traffic.
+    pub energy_fj: f64,
+    /// Lower bound on layer latency (ns): exact compute / spill-free
+    /// memory roofline.
+    pub time_ns: f64,
+}
+
+impl CandidateBound {
+    /// Lower bound on the energy–delay product (product of two
+    /// non-negative lower bounds; IEEE multiplication is monotone).
+    pub fn edp(&self) -> f64 {
+        self.energy_fj * self.time_ns
+    }
+}
+
+/// Compute the admissible [`CandidateBound`] for one (tiles, policy)
+/// candidate. Relative to [`evaluate_tiled`] it drops exactly one class
+/// of non-negative terms: the partial-sum spill traffic — its buffer
+/// energy and its share of the memory-roofline cycles (zero under
+/// OutputStationary anyway). Everything else — datapath op counts
+/// (including the policy-exact weight-reload count), the policy-exact
+/// input term, the DRAM fit/miss branch and the cycle time — uses the
+/// evaluator's own arithmetic in the same operation order.
+///
+/// The bound is therefore very tight — for spill-free candidates it
+/// *equals* the full evaluation bit-for-bit — while skipping the
+/// [`MappingEval`] materialization on the losers.
+pub fn lower_bound(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    tiles: &TileCounts,
+    policy: TemporalPolicy,
+    input_sparsity: f64,
+) -> CandidateBound {
+    let nm = tiles.active_macros.max(1) as f64;
+    let wloads = weight_loads(tiles, policy);
+
+    // --- datapath: exact op counts ---
+    let ops = MacroOpCounts {
+        mvms: tiles.mvms,
+        weight_loads: wloads,
+        rows_used: tiles.rows_used_avg,
+        cols_used: tiles.cols_used_avg,
+        input_sparsity,
+    };
+    let per_macro = macro_energy(&sys.imc, tech, &ops);
+    let macro_fj = per_macro.scaled(tiles.active_macros as f64).total_fj();
+
+    // --- traffic floor: exact per-policy counts, spills dropped ---
+    // (locals mirror `access_counts` so the arithmetic stays bitwise
+    // identical to the evaluator's)
+    let input_per_macro = input_gb_reads_per_macro(layer, tiles, policy);
+    let tile_elems = tiles.rows_used_avg * tiles.cols_used_avg;
+    let weight_per_macro = wloads as f64 * tile_elems;
+    let pixels = tiles.pixels as f64;
+    let groups = tiles.groups as f64;
+    let nct = tiles.n_col_tiles as f64;
+    let cols = tiles.cols_used_avg;
+    let outputs_per_macro = pixels * groups * nct * cols;
+
+    let gb = &sys.hierarchy.levels[0];
+    let w_bits_total = layer.weight_elems() as f64 * sys.imc.weight_bits as f64;
+    let weights_fit = w_bits_total <= gb.size_bits as f64 * 0.5;
+    let weight_dram = if weights_fit {
+        layer.weight_elems() as f64
+    } else {
+        weight_per_macro * nm
+    };
+    let i_bits_total = layer.input_elems() as f64 * sys.imc.act_bits as f64;
+    let inputs_fit = i_bits_total <= gb.size_bits as f64 * 0.5;
+    let input_dram = if inputs_fit {
+        layer.input_elems() as f64
+    } else {
+        input_per_macro * nm
+    };
+
+    let floor = AccessCounts {
+        input_gb_reads: input_per_macro * nm,
+        weight_gb_reads: weight_per_macro * nm,
+        psum_gb_reads: 0.0,
+        psum_gb_writes: 0.0,
+        output_gb_writes: outputs_per_macro * nm,
+        input_dram_reads: input_dram,
+        weight_dram_reads: weight_dram,
+        output_dram_writes: layer.output_elems() as f64,
+        weight_loads_per_macro: wloads,
+    };
+    let traffic = traffic_energy_fj(layer, sys, &floor);
+    let energy_fj = macro_fj + traffic.total_fj();
+
+    // --- latency: same roofline as the evaluator over the floor counts ---
+    let t_cycle = cycle_ns(&sys.imc);
+    let compute_cycles =
+        tiles.mvms as f64 * sys.imc.cycles_per_mvm() as f64
+            + wloads as f64 * tiles.rows_used_avg;
+    let avg_bits = 8.0;
+    let mem_cycles = floor.gb_total() * avg_bits / gb.bw_bits_per_cycle as f64;
+    let time_ns = compute_cycles.max(mem_cycles) * t_cycle;
+
+    CandidateBound { energy_fj, time_ns }
 }
 
 #[cfg(test)]
@@ -189,6 +321,65 @@ mod tests {
             e_small.total_energy_fj(),
             e_big.total_energy_fj()
         );
+    }
+
+    #[test]
+    fn lower_bound_is_admissible_on_every_candidate() {
+        use crate::mapping::ALL_POLICIES;
+        let cases = [
+            (Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1), sys(ImcFamily::Aimc, 1152, 256, 1)),
+            (Layer::conv2d("c2", 8, 8, 128, 256, 3, 3, 1), sys(ImcFamily::Dimc, 48, 4, 192)),
+            (Layer::depthwise("dw", 24, 24, 64, 3, 3, 1), sys(ImcFamily::Dimc, 48, 256, 8)),
+            (Layer::dense("fc", 128, 640), sys(ImcFamily::Aimc, 64, 32, 8)),
+            (Layer::pointwise("pw", 24, 24, 256, 256), sys(ImcFamily::Dimc, 256, 256, 4)),
+        ];
+        for (layer, s) in &cases {
+            let tech = TechParams::for_node(s.imc.tech_nm);
+            for sparsity in [0.0, 0.5, 0.9] {
+                for sp in candidates(layer, s) {
+                    let t = tile(layer, s, &sp);
+                    for p in ALL_POLICIES {
+                        let b = lower_bound(layer, s, &tech, &t, p, sparsity);
+                        let e = evaluate(layer, s, &tech, &sp, p, sparsity);
+                        assert!(
+                            b.energy_fj <= e.total_energy_fj(),
+                            "{}/{p:?}: energy bound {} > actual {}",
+                            layer.name,
+                            b.energy_fj,
+                            e.total_energy_fj()
+                        );
+                        assert!(
+                            b.time_ns <= e.time_ns,
+                            "{}/{p:?}: time bound {} > actual {}",
+                            layer.name,
+                            b.time_ns,
+                            e.time_ns
+                        );
+                        assert!(b.edp() <= e.edp());
+                        assert!(b.energy_fj > 0.0 && b.time_ns > 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_exact_for_spill_free_candidates() {
+        // single-tile candidate: no partial-sum spills under any policy
+        // — the only terms the bound drops are zero, so it must
+        // coincide with the full evaluation bit-for-bit.
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let tech = TechParams::for_node(s.imc.tech_nm);
+        let sp = &candidates(&l, &s)[0];
+        let t = tile(&l, &s, sp);
+        assert_eq!(t.n_row_tiles, 1, "layer must be spill-free");
+        for p in crate::mapping::ALL_POLICIES {
+            let b = lower_bound(&l, &s, &tech, &t, p, 0.5);
+            let e = evaluate(&l, &s, &tech, sp, p, 0.5);
+            assert_eq!(b.time_ns.to_bits(), e.time_ns.to_bits(), "{p:?}");
+            assert_eq!(b.energy_fj.to_bits(), e.total_energy_fj().to_bits(), "{p:?}");
+        }
     }
 
     #[test]

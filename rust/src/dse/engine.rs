@@ -1,15 +1,22 @@
-//! The DSE engine: enumerate (spatial × temporal) mappings per layer,
-//! evaluate in parallel, pick the best per objective, aggregate per
-//! network — the rust counterpart of integrating the model into ZigZag
-//! (paper §VI).
+//! The DSE engine: stream the (spatial × temporal) mapping space per
+//! layer, prune candidates whose admissible lower bound cannot beat the
+//! per-objective incumbents, fully evaluate the survivors, and pick the
+//! best per objective — the rust counterpart of integrating the model
+//! into ZigZag (paper §VI), with the branch-and-bound treatment large
+//! co-design spaces need (cf. AnalogNAS).
+//!
+//! Because the bounds are admissible ([`super::cost::lower_bound`]),
+//! the pruned search returns *bit-identical* optima to the exhaustive
+//! pass; `search_layer_all_unpruned` keeps the reference path alive for
+//! equivalence tests and benchmarks.
 
 use crate::arch::ImcSystem;
-use crate::mapping::{candidates, TemporalPolicy, ALL_POLICIES};
+use crate::mapping::{tile, MappingCandidate, MappingSpace, TemporalPolicy};
 use crate::model::{EnergyBreakdown, TechParams};
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{Layer, Network};
 
-use super::cost::{evaluate, MappingEval, DEFAULT_SPARSITY};
+use super::cost::{evaluate_tiled, lower_bound, CandidateBound, MappingEval, DEFAULT_SPARSITY};
 use super::reuse::TrafficEnergy;
 
 /// Optimization objective for mapping selection.
@@ -34,6 +41,16 @@ impl Objective {
         }
     }
 
+    /// Score of an admissible candidate bound under this objective: a
+    /// lower bound on [`Objective::score`] of the full evaluation.
+    pub fn bound_score(&self, b: &CandidateBound) -> f64 {
+        match self {
+            Objective::Energy => b.energy_fj,
+            Objective::Latency => b.time_ns,
+            Objective::Edp => b.edp(),
+        }
+    }
+
     pub fn as_str(&self) -> &'static str {
         match self {
             Objective::Energy => "energy",
@@ -54,8 +71,11 @@ impl std::fmt::Display for Objective {
 pub struct LayerResult {
     pub layer: Layer,
     pub best: MappingEval,
-    /// Number of mapping points evaluated.
+    /// Number of mapping points fully evaluated.
     pub evaluated: usize,
+    /// Candidates discarded by the admissible bound without a full
+    /// evaluation (`evaluated + pruned` spans the whole space).
+    pub pruned: usize,
 }
 
 /// Aggregated result for a whole network on one system.
@@ -143,8 +163,10 @@ impl Default for DseOptions {
 /// stores: one entry serves Energy, Latency and EDP queries alike.
 #[derive(Debug, Clone)]
 pub struct LayerSearch {
-    /// Number of mapping points evaluated.
+    /// Number of mapping points fully evaluated.
     pub evaluated: usize,
+    /// Candidates discarded by the admissible bound.
+    pub pruned: usize,
     best_energy: MappingEval,
     best_latency: MappingEval,
     best_edp: MappingEval,
@@ -160,6 +182,24 @@ impl LayerSearch {
         }
     }
 
+    /// Reassemble a search from its parts (the persistent sweep cache
+    /// deserializes entries through this).
+    pub fn from_parts(
+        evaluated: usize,
+        pruned: usize,
+        best_energy: MappingEval,
+        best_latency: MappingEval,
+        best_edp: MappingEval,
+    ) -> Self {
+        LayerSearch {
+            evaluated,
+            pruned,
+            best_energy,
+            best_latency,
+            best_edp,
+        }
+    }
+
     /// Materialize a per-objective [`LayerResult`] for `layer` (which
     /// must have the shape this search was run on; only its name may
     /// differ — the cache shares entries across identically-shaped
@@ -169,14 +209,68 @@ impl LayerSearch {
             layer: layer.clone(),
             best: self.best(objective).clone(),
             evaluated: self.evaluated,
+            pruned: self.pruned,
         }
     }
 }
 
-/// Exhaustively search one layer's mapping space, tracking the optimum
-/// for every objective at once. Ties keep the earlier candidate, so for
-/// any single objective the winner is identical to the historical
-/// single-objective search.
+fn search_layer_all_impl(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    input_sparsity: f64,
+    policy: Option<TemporalPolicy>,
+    prune: bool,
+) -> LayerSearch {
+    let space = MappingSpace::new(layer, sys, policy);
+    let mut evaluated = 0;
+    let mut pruned = 0;
+    let mut best: [Option<MappingEval>; 3] = [None, None, None];
+    for cand in space {
+        let MappingCandidate { spatial, policy } = cand;
+        let tiles = tile(layer, sys, &spatial);
+        if prune {
+            let bound = lower_bound(layer, sys, tech, &tiles, policy, input_sparsity);
+            // A candidate can only displace an incumbent with a
+            // *strictly* better score; an admissible bound at or above
+            // every incumbent proves it cannot win anywhere.
+            let can_win = best.iter().zip(ALL_OBJECTIVES).any(|(slot, objective)| match slot {
+                None => true,
+                Some(inc) => objective.bound_score(&bound) < objective.score(inc),
+            });
+            if !can_win {
+                pruned += 1;
+                continue;
+            }
+        }
+        let e = evaluate_tiled(layer, sys, tech, &spatial, policy, input_sparsity, tiles);
+        evaluated += 1;
+        for (slot, objective) in best.iter_mut().zip(ALL_OBJECTIVES) {
+            let better = match slot {
+                None => true,
+                Some(b) => objective.score(&e) < objective.score(b),
+            };
+            if better {
+                *slot = Some(e.clone());
+            }
+        }
+    }
+    let [energy, latency, edp] = best;
+    LayerSearch {
+        evaluated,
+        pruned,
+        best_energy: energy.expect("at least one mapping candidate"),
+        best_latency: latency.expect("at least one mapping candidate"),
+        best_edp: edp.expect("at least one mapping candidate"),
+    }
+}
+
+/// Search one layer's mapping space, tracking the optimum for every
+/// objective at once. Candidates whose admissible lower bound cannot
+/// beat any incumbent are skipped without full evaluation; ties keep
+/// the earlier candidate. Both together make the result bit-identical
+/// to [`search_layer_all_unpruned`] — the equivalence tests in
+/// `tests/integration_dse.rs` lock that down.
 pub fn search_layer_all(
     layer: &Layer,
     sys: &ImcSystem,
@@ -184,35 +278,20 @@ pub fn search_layer_all(
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
 ) -> LayerSearch {
-    let spatials = candidates(layer, sys);
-    let policies: Vec<TemporalPolicy> = match policy {
-        Some(p) => vec![p],
-        None => ALL_POLICIES.to_vec(),
-    };
-    let mut evaluated = 0;
-    let mut best: [Option<MappingEval>; 3] = [None, None, None];
-    for sp in &spatials {
-        for &p in &policies {
-            let e = evaluate(layer, sys, tech, sp, p, input_sparsity);
-            evaluated += 1;
-            for (slot, objective) in best.iter_mut().zip(ALL_OBJECTIVES) {
-                let better = match slot {
-                    None => true,
-                    Some(b) => objective.score(&e) < objective.score(b),
-                };
-                if better {
-                    *slot = Some(e.clone());
-                }
-            }
-        }
-    }
-    let [energy, latency, edp] = best;
-    LayerSearch {
-        evaluated,
-        best_energy: energy.expect("at least one mapping candidate"),
-        best_latency: latency.expect("at least one mapping candidate"),
-        best_edp: edp.expect("at least one mapping candidate"),
-    }
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, true)
+}
+
+/// The no-pruning reference: evaluates every candidate in the space.
+/// Exists for equivalence tests and the `sweep_grid` benchmark; the
+/// production paths all go through the pruned [`search_layer_all`].
+pub fn search_layer_all_unpruned(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    input_sparsity: f64,
+    policy: Option<TemporalPolicy>,
+) -> LayerSearch {
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, false)
 }
 
 /// Search the best mapping for one layer.
@@ -305,6 +384,8 @@ pub fn case_study(
 mod tests {
     use super::*;
     use crate::arch::table2_systems;
+    use crate::dse::cost::evaluate;
+    use crate::mapping::{candidates, ALL_POLICIES};
     use crate::workload::{deep_autoencoder, ds_cnn, resnet8};
 
     #[test]
@@ -314,7 +395,12 @@ mod tests {
         let tech = TechParams::for_node(28.0);
         let opts = DseOptions::default();
         let r = search_layer(&l, &systems[0], &tech, &opts);
-        assert!(r.evaluated >= 3);
+        assert!(r.evaluated >= 1);
+        // evaluated + pruned spans the whole space
+        assert_eq!(
+            r.evaluated + r.pruned,
+            candidates(&l, &systems[0]).len() * ALL_POLICIES.len()
+        );
         // exhaustively verify minimality
         for sp in candidates(&l, &systems[0]) {
             for p in ALL_POLICIES {
@@ -323,6 +409,34 @@ mod tests {
                     r.best.total_energy_fj() <= e.total_energy_fj() * (1.0 + 1e-12),
                     "found better point"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_search_matches_unpruned_bit_for_bit() {
+        let systems = table2_systems();
+        let layers = [
+            Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
+            Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
+            Layer::dense("fc", 128, 640),
+            Layer::pointwise("pw", 24, 24, 256, 256),
+        ];
+        for sys in &systems {
+            let tech = TechParams::for_node(sys.imc.tech_nm);
+            for l in &layers {
+                let pruned = search_layer_all(l, sys, &tech, DEFAULT_SPARSITY, None);
+                let full = search_layer_all_unpruned(l, sys, &tech, DEFAULT_SPARSITY, None);
+                assert_eq!(pruned.evaluated + pruned.pruned, full.evaluated);
+                assert_eq!(full.pruned, 0);
+                for objective in ALL_OBJECTIVES {
+                    let a = pruned.best(objective);
+                    let b = full.best(objective);
+                    assert_eq!(a.total_energy_fj().to_bits(), b.total_energy_fj().to_bits());
+                    assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+                    assert_eq!(a.policy, b.policy);
+                    assert_eq!(a.spatial, b.spatial);
+                }
             }
         }
     }

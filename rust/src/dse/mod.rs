@@ -6,11 +6,13 @@ pub mod engine;
 pub mod pareto;
 pub mod reuse;
 
-pub use cost::{evaluate, MappingEval, DEFAULT_SPARSITY};
+pub use cost::{
+    evaluate, evaluate_tiled, lower_bound, CandidateBound, MappingEval, DEFAULT_SPARSITY,
+};
 pub use engine::{
-    case_study, search_layer, search_layer_all, search_network, search_network_with, DseOptions,
-    ExhaustiveSearch, LayerEvaluator, LayerResult, LayerSearch, NetworkResult, Objective,
-    ALL_OBJECTIVES,
+    case_study, search_layer, search_layer_all, search_layer_all_unpruned, search_network,
+    search_network_with, DseOptions, ExhaustiveSearch, LayerEvaluator, LayerResult, LayerSearch,
+    NetworkResult, Objective, ALL_OBJECTIVES,
 };
 pub use pareto::pareto_front;
 pub use reuse::{access_counts, psum_bits, traffic_energy_fj, AccessCounts, TrafficEnergy};

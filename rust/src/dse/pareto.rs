@@ -2,20 +2,52 @@
 
 /// Returns the indices of the Pareto-optimal points (minimizing both
 /// coordinates). Stable: preserves input order among non-dominated points.
+/// Duplicates of a non-dominated point are all kept (neither dominates
+/// the other — domination requires a strict improvement somewhere).
+///
+/// Sort-based O(n log n) scan (grids past ~10⁴ points made the old
+/// all-pairs check a hot spot): walk the points in (energy, latency)
+/// order; a point is dominated iff a strictly-cheaper point was at
+/// least as fast, or an equal-energy point was strictly faster.
 pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .total_cmp(&points[b].0)
+            .then(points[a].1.total_cmp(&points[b].1))
+            .then(a.cmp(&b))
+    });
     let mut out = Vec::new();
-    'outer: for (i, &(e_i, t_i)) in points.iter().enumerate() {
-        for (j, &(e_j, t_j)) in points.iter().enumerate() {
-            if i == j {
-                continue;
-            }
-            let dominates = e_j <= e_i && t_j <= t_i && (e_j < e_i || t_j < t_i);
-            if dominates {
-                continue 'outer;
+    // min latency among points with strictly smaller energy
+    let mut best_t_prev = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        // group of equal-energy points, latency ascending. `j` starts
+        // past `i`, so the loop always advances; a NaN energy (never
+        // equal to anything, including itself) forms a singleton group
+        // that is incomparable under `<=`, so it neither consults nor
+        // feeds `best_t_prev` — matching the all-pairs definition,
+        // which keeps NaN points.
+        let e = points[idx[i]].0;
+        let group_min_t = points[idx[i]].1;
+        let mut j = i + 1;
+        while j < idx.len() && points[idx[j]].0 == e {
+            j += 1;
+        }
+        for &p in &idx[i..j] {
+            let t = points[p].1;
+            let dominated = (!e.is_nan() && best_t_prev <= t) || t > group_min_t;
+            if !dominated {
+                out.push(p);
             }
         }
-        out.push(i);
+        if !e.is_nan() && group_min_t < best_t_prev {
+            best_t_prev = group_min_t;
+        }
+        i = j;
     }
+    out.sort_unstable();
     out
 }
 
@@ -50,5 +82,53 @@ mod tests {
     fn strictly_dominated_removed() {
         let pts = [(1.0, 1.0), (2.0, 2.0)];
         assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn equal_energy_keeps_only_fastest_and_its_duplicates() {
+        let pts = [(1.0, 3.0), (1.0, 2.0), (1.0, 2.0), (1.0, 5.0)];
+        assert_eq!(pareto_front(&pts), vec![1, 2]);
+    }
+
+    /// The naive O(n²) definition the scan must match exactly.
+    fn reference(points: &[(f64, f64)]) -> Vec<usize> {
+        let mut out = Vec::new();
+        'outer: for (i, &(e_i, t_i)) in points.iter().enumerate() {
+            for (j, &(e_j, t_j)) in points.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                if e_j <= e_i && t_j <= t_i && (e_j < e_i || t_j < t_i) {
+                    continue 'outer;
+                }
+            }
+            out.push(i);
+        }
+        out
+    }
+
+    #[test]
+    fn nan_points_kept_and_scan_terminates() {
+        // every comparison with NaN is false, so the all-pairs
+        // definition keeps NaN points; the scan must match and must not
+        // hang on the never-equal group key
+        let pts = [(f64::NAN, 1.0), (1.0, f64::NAN), (1.0, 2.0), (2.0, 1.0)];
+        assert_eq!(pareto_front(&pts), reference(&pts));
+    }
+
+    #[test]
+    fn scan_matches_naive_reference_on_random_grids() {
+        let mut rng = crate::util::prng::Rng::new(7);
+        for n in [1usize, 2, 3, 10, 64, 257] {
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    // coarse values force plenty of exact ties/duplicates
+                    let e = rng.below(8) as f64;
+                    let t = rng.below(8) as f64;
+                    (e, t)
+                })
+                .collect();
+            assert_eq!(pareto_front(&pts), reference(&pts), "n={n}: {pts:?}");
+        }
     }
 }

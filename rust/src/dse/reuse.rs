@@ -14,7 +14,7 @@
 //! the accumulator cannot be held (WS/IS revisit outputs per row tile).
 
 use crate::arch::ImcSystem;
-use crate::mapping::{weight_loads, SpatialMapping, TemporalPolicy, TileCounts};
+use crate::mapping::{weight_loads, TemporalPolicy, TileCounts};
 use crate::workload::Layer;
 
 /// Per-operand read/write element counts at the global buffer and DRAM
@@ -49,11 +49,36 @@ impl AccessCounts {
     }
 }
 
-/// Count accesses for one layer under (spatial, policy).
+/// Input-operand global-buffer reads *per macro* for one layer under a
+/// temporal policy (the policy-dependent term of [`access_counts`]).
+/// Shared with the admissible candidate bound in `dse::cost` so both
+/// paths stay arithmetically identical.
+pub(crate) fn input_gb_reads_per_macro(
+    layer: &Layer,
+    tiles: &TileCounts,
+    policy: TemporalPolicy,
+) -> f64 {
+    let nm = tiles.active_macros.max(1) as f64;
+    let pixels = tiles.pixels as f64;
+    let groups = tiles.groups as f64;
+    let nrt = tiles.n_row_tiles as f64;
+    let rows = tiles.rows_used_avg;
+    match policy {
+        // re-streamed for every MVM (weight-tile loop outer)
+        TemporalPolicy::WeightStationary => tiles.mvms as f64 * rows,
+        // shared across column tiles at the same pixel/row-tile
+        TemporalPolicy::OutputStationary => pixels * groups * nrt * rows,
+        // line-buffered: unique elements only (halo ignored)
+        TemporalPolicy::InputStationary => layer.input_elems() as f64 / nm,
+    }
+}
+
+/// Count accesses for one layer under (tiles, policy). The tile counts
+/// already fold in everything the spatial mapping decides (the seed
+/// version also took the `SpatialMapping`, as an unused parameter).
 pub fn access_counts(
     layer: &Layer,
     sys: &ImcSystem,
-    spatial: &SpatialMapping,
     tiles: &TileCounts,
     policy: TemporalPolicy,
 ) -> AccessCounts {
@@ -64,18 +89,10 @@ pub fn access_counts(
     let groups = tiles.groups as f64;
     let nrt = tiles.n_row_tiles as f64;
     let nct = tiles.n_col_tiles as f64;
-    let rows = tiles.rows_used_avg;
     let cols = tiles.cols_used_avg;
 
     // ---- global buffer traffic (per macro, then × macros) ----
-    let input_per_macro = match policy {
-        // re-streamed for every MVM (weight-tile loop outer)
-        TemporalPolicy::WeightStationary => tiles.mvms as f64 * rows,
-        // shared across column tiles at the same pixel/row-tile
-        TemporalPolicy::OutputStationary => pixels * groups * nrt * rows,
-        // line-buffered: unique elements only (halo ignored)
-        TemporalPolicy::InputStationary => layer.input_elems() as f64 / nm,
-    };
+    let input_per_macro = input_gb_reads_per_macro(layer, tiles, policy);
     let weight_per_macro = wloads as f64 * tile_elems;
 
     // outputs per macro across the layer
@@ -192,7 +209,7 @@ mod tests {
     fn eval(layer: &Layer, sys: &ImcSystem, policy: P) -> AccessCounts {
         let sp = &candidates(layer, sys)[0];
         let t = tile(layer, sys, sp);
-        access_counts(layer, sys, sp, &t, policy)
+        access_counts(layer, sys, &t, policy)
     }
 
     #[test]
@@ -235,7 +252,7 @@ mod tests {
         let s = sys(64, 32, 8);
         for sp in candidates(&l, &s) {
             let t = tile(&l, &s, &sp);
-            let c = access_counts(&l, &s, &sp, &t, P::WeightStationary);
+            let c = access_counts(&l, &s, &t, P::WeightStationary);
             assert_eq!(c.output_dram_writes, l.output_elems() as f64);
         }
     }
@@ -247,7 +264,7 @@ mod tests {
         for sp in candidates(&l, &s) {
             let t = tile(&l, &s, &sp);
             for p in [P::WeightStationary, P::OutputStationary] {
-                let c = access_counts(&l, &s, &sp, &t, p);
+                let c = access_counts(&l, &s, &t, p);
                 assert!(
                     c.output_gb_writes >= l.output_elems() as f64 * 0.999,
                     "{:?} writes {} < {}",
@@ -268,8 +285,8 @@ mod tests {
         let dup = cands.iter().find(|m| m.duplicates_weights()).unwrap();
         let tp = tile(&l, &s, plain);
         let td = tile(&l, &s, dup);
-        let cp = access_counts(&l, &s, plain, &tp, P::WeightStationary);
-        let cd = access_counts(&l, &s, dup, &td, P::WeightStationary);
+        let cp = access_counts(&l, &s, &tp, P::WeightStationary);
+        let cd = access_counts(&l, &s, &td, P::WeightStationary);
         // every macro loads its own weight copy from the buffer
         assert!(cd.weight_gb_reads > cp.weight_gb_reads * 1.5);
         // but DRAM weights are read once (buffer multicasts)

@@ -15,13 +15,16 @@ use imcsim::coordinator::{Tensor4, Tiler, TinyCnn};
 use imcsim::dse::{search_network, DseOptions, Objective};
 use imcsim::mapping::TemporalPolicy;
 use imcsim::report::{
-    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, sweep_csv,
-    sweep_text, table2_text, Table,
+    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, parse_sweep_csv,
+    sweep_csv, sweep_text, table2_text, Table,
 };
 use imcsim::runtime::{default_artifacts_dir, load_manifest};
 #[cfg(feature = "xla")]
 use imcsim::runtime::{Engine, Kind};
-use imcsim::sweep::{merge_summaries, run_sweep, SweepGrid, SweepOptions, DEFAULT_GRID_CELLS};
+use imcsim::sweep::{
+    load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
+    CostCache, SweepGrid, SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,
+};
 use imcsim::util::cli::Args;
 #[cfg(feature = "xla")]
 use imcsim::util::prng::Rng;
@@ -46,12 +49,20 @@ Exploration & serving:
   dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
       [--objective energy|latency|edp] [--policy ws|os|is] [--sparsity F]
                        per-layer optimal mappings for one network
-  sweep [--shards N] [--shard-index K] [--cells N] [--sparsity F]
-      [--csv FILE]     full-grid DSE sweep: every surveyed design x
-                       every tinyMLPerf network x every objective, with
-                       a memoized cost cache; prints per-network Pareto
-                       frontiers. --shards/--shard-index split the grid
-                       deterministically across CI jobs or machines.
+  sweep [--shards N] [--shard-index K] [--cells N[,N...]]
+      [--sparsity F[,F...]] [--cache-file FILE] [--csv FILE]
+                       full-grid DSE sweep: every surveyed design (per
+                       SRAM-cell budget) x every tinyMLPerf network x
+                       every sparsity level x every objective, streamed
+                       through the bound-pruned mapping search and a
+                       memoized cost cache; prints per-network Pareto
+                       frontiers plus evaluated/pruned candidate counts.
+                       --shards/--shard-index split the grid
+                       deterministically across CI jobs or machines;
+                       --cache-file persists the cost cache across runs.
+  sweepmerge [--csv FILE] SHARD.csv [SHARD.csv ...]
+                       merge shard CSVs (written by `sweep --csv`) back
+                       into the full-grid summary and Pareto frontiers
   archsweep --network <ae|resnet8|dscnn|mobilenet> [--family aimc|dimc]
       [--cells N]      geometry sweep of one network at equal SRAM
                        budget; prints the (energy, latency) Pareto front
@@ -101,6 +112,7 @@ fn main() {
         Some("validate") => cmd_validate(),
         Some("dse") => cmd_dse(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("sweepmerge") => cmd_sweepmerge(&args),
         Some("archsweep") => cmd_archsweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -258,17 +270,40 @@ fn cmd_dse(args: &Args) -> i32 {
             r.effective_tops_per_watt(),
             r.mean_utilization() * 100.0
         );
+        let (evaluated, pruned) = r
+            .layers
+            .iter()
+            .fold((0usize, 0usize), |(e, p), l| (e + l.evaluated, p + l.pruned));
+        println!(
+            "mapping search: {} candidates — {evaluated} evaluated, {pruned} pruned by bound",
+            evaluated + pruned
+        );
     }
     0
 }
 
-/// Full-grid DSE sweep: every surveyed silicon design (normalized to a
-/// common SRAM-cell budget) × every tinyMLPerf network × every
-/// objective, evaluated through the memoized cost cache and aggregated
+/// Parse a comma-separated option value list (`--cells 294912,147456`).
+fn parse_list<T: std::str::FromStr>(raw: &str, what: &str) -> Result<Vec<T>, String> {
+    let vals: Result<Vec<T>, _> = raw
+        .split(',')
+        .map(|p| p.trim().parse::<T>().map_err(|_| format!("invalid {what} value '{p}'")))
+        .collect();
+    match vals {
+        Ok(v) if !v.is_empty() => Ok(v),
+        Ok(_) => Err(format!("--{what} needs at least one value")),
+        Err(e) => Err(e),
+    }
+}
+
+/// Full-grid DSE sweep: every surveyed silicon design (instantiated per
+/// SRAM-cell budget) × every tinyMLPerf network × every activation
+/// sparsity × every objective, evaluated through the bound-pruned
+/// streaming mapping search and the memoized cost cache, aggregated
 /// into per-network Pareto frontiers. `--shards N --shard-index K`
 /// evaluates one deterministic slice (for CI jobs / multiple machines);
 /// `--shards N` alone runs all N shards locally and merges them,
 /// exercising the same merge path the distributed run uses.
+/// `--cache-file` persists the cost cache so the next run starts warm.
 fn cmd_sweep(args: &Args) -> i32 {
     if args.opt("network").is_some() || args.opt("family").is_some() {
         eprintln!(
@@ -281,7 +316,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     // rather than silently falling back to defaults: a CI matrix job
     // with an empty or misspelled shard variable must not quietly run
     // the whole grid.
-    const KNOWN: [&str; 5] = ["shards", "shard-index", "cells", "sparsity", "csv"];
+    const KNOWN: [&str; 6] = ["shards", "shard-index", "cells", "sparsity", "csv", "cache-file"];
     if let Some(unknown) = args
         .options
         .keys()
@@ -290,7 +325,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     {
         eprintln!(
             "unknown option --{unknown} (sweep takes --shards, --shard-index, \
-             --cells, --sparsity, --csv)"
+             --cells, --sparsity, --csv, --cache-file)"
         );
         return 2;
     }
@@ -315,69 +350,155 @@ fn cmd_sweep(args: &Args) -> i32 {
             return 2;
         }
     };
-    let cells: usize = match args.opt_parse("cells") {
-        None => DEFAULT_GRID_CELLS,
-        Some(Ok(n)) if n > 0 => n,
-        _ => {
-            eprintln!("--cells must be a positive integer");
-            return 2;
-        }
+    let cells: Vec<usize> = match args.opt("cells") {
+        None => vec![DEFAULT_GRID_CELLS],
+        Some(raw) => match parse_list::<usize>(raw, "cells") {
+            Ok(v) if v.iter().all(|&n| n > 0) => v,
+            _ => {
+                eprintln!("--cells must be a comma-separated list of positive integers");
+                return 2;
+            }
+        },
     };
-    let sparsity: f64 = match args.opt_parse("sparsity") {
-        None => imcsim::dse::DEFAULT_SPARSITY,
-        Some(Ok(f)) if (0.0..=1.0).contains(&f) => f,
-        _ => {
-            eprintln!("--sparsity must be a number in [0, 1]");
-            return 2;
-        }
+    let sparsities: Vec<f64> = match args.opt("sparsity") {
+        None => vec![imcsim::dse::DEFAULT_SPARSITY],
+        Some(raw) => match parse_list::<f64>(raw, "sparsity") {
+            Ok(v) if v.iter().all(|f| (0.0..=1.0).contains(f)) => v,
+            _ => {
+                eprintln!("--sparsity must be a comma-separated list of numbers in [0, 1]");
+                return 2;
+            }
+        },
     };
 
-    let grid = SweepGrid::survey_tinymlperf(cells);
+    let grid = SweepGrid::survey_tinymlperf_grid(&cells, &sparsities);
     println!(
-        "grid: {} designs x {} networks x {} objectives = {} tasks ({} cells/design)",
+        "grid: {} designs ({} cell budgets) x {} networks x {} sparsities x {} objectives \
+         = {} tasks",
         grid.systems.len(),
+        cells.len(),
         grid.networks.len(),
+        grid.sparsities.len(),
         grid.objectives.len(),
-        grid.n_tasks(),
-        cells
+        grid.n_tasks()
     );
+
+    let cache = CostCache::new();
+    let cache_file = args.opt("cache-file").map(PathBuf::from);
+    if let Some(path) = &cache_file {
+        match load_cache_into(path, &cache) {
+            Some(n) => println!("cost cache: warmed {n} entries from {}", path.display()),
+            None => println!("cost cache: {} missing or stale — starting cold", path.display()),
+        }
+    }
+
     let t0 = Instant::now();
     let summary = match shard_index {
         Some(_) => {
             let opts = SweepOptions {
                 shards,
                 shard_index,
-                input_sparsity: sparsity,
                 ..Default::default()
             };
-            run_sweep(&grid, &opts)
+            run_sweep_with_cache(&grid, &opts, &cache)
         }
         None if shards > 1 => {
+            // Without --cache-file each shard gets its own cache, like
+            // the distributed CI run this path models — sharing one
+            // would inflate the merged hit-rate/entry stats. A cache
+            // file opts into sharing (that is its whole point).
             let parts: Vec<_> = (0..shards)
                 .map(|k| {
                     let opts = SweepOptions {
                         shards,
                         shard_index: Some(k),
-                        input_sparsity: sparsity,
                         ..Default::default()
                     };
-                    run_sweep(&grid, &opts)
+                    if cache_file.is_some() {
+                        run_sweep_with_cache(&grid, &opts, &cache)
+                    } else {
+                        run_sweep(&grid, &opts)
+                    }
                 })
                 .collect();
             merge_summaries(&parts)
         }
-        None => {
-            let opts = SweepOptions {
-                input_sparsity: sparsity,
-                ..Default::default()
-            };
-            run_sweep(&grid, &opts)
-        }
+        None => run_sweep_with_cache(&grid, &SweepOptions::default(), &cache),
     };
     println!("{}", sweep_text(&summary));
     println!("(evaluated in {:.2}s)", t0.elapsed().as_secs_f64());
+    if let Some(path) = &cache_file {
+        match save_cache(&cache, path) {
+            Ok(()) => println!(
+                "cost cache: saved {} entries to {}",
+                cache.stats().entries,
+                path.display()
+            ),
+            Err(e) => {
+                eprintln!("cannot write cache file: {e}");
+                return 1;
+            }
+        }
+    }
     if let Some(path) = args.opt("csv") {
         if let Err(e) = std::fs::write(path, sweep_csv(&summary)) {
+            eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// Merge shard CSVs (written by `sweep --shards N --shard-index K
+/// --csv ...`) back into the full-grid summary: the CI matrix path.
+/// Points are parsed losslessly, reassembled in canonical task order
+/// and the per-network Pareto frontiers recomputed — bit-identical to a
+/// single-process run over the same tasks.
+fn cmd_sweepmerge(args: &Args) -> i32 {
+    if args.positional.is_empty() {
+        eprintln!(
+            "sweepmerge needs at least one shard CSV \
+             (usage: sweepmerge [--csv OUT] SHARD.csv ...)"
+        );
+        return 2;
+    }
+    let mut parts: Vec<SweepSummary> = Vec::new();
+    for path in &args.positional {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 1;
+            }
+        };
+        let points = match parse_sweep_csv(&text) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 1;
+            }
+        };
+        let max_task = points.iter().map(|p| p.task_index + 1).max().unwrap_or(0);
+        parts.push(SweepSummary {
+            shards: args.positional.len(),
+            shard_index: None,
+            total_tasks: max_task,
+            points,
+            frontiers: Vec::new(),
+            cache: CacheStats::default(),
+            merged: false,
+        });
+    }
+    let merged = merge_summaries(&parts);
+    println!(
+        "merged {} shard files -> {} grid points",
+        args.positional.len(),
+        merged.points.len()
+    );
+    println!("{}", sweep_text(&merged));
+    if let Some(path) = args.opt("csv") {
+        if let Err(e) = std::fs::write(path, sweep_csv(&merged)) {
             eprintln!("cannot write csv: {e}");
             return 1;
         }
@@ -423,9 +544,12 @@ fn cmd_archsweep(args: &Args) -> i32 {
     };
 
     // geometry grid: rows x cols per macro, 4b/4b, macro count from the
-    // cell budget (the Table II normalization)
+    // cell budget (the Table II normalization). The memoized cost cache
+    // shares layer searches across geometries through the same pruned
+    // streaming search the grid sweep uses.
     let rows_grid = [48usize, 64, 128, 256, 512, 1152];
     let cols_grid = [4usize, 32, 64, 128, 256];
+    let cache = CostCache::new();
     let mut points = Vec::new();
     let t0 = Instant::now();
     for family in &families {
@@ -444,7 +568,13 @@ fn cmd_archsweep(args: &Args) -> i32 {
                 }
                 let name = m.name.clone();
                 let sys = ImcSystem::new(&name, m, 1).normalized_to_cells(cells);
-                let r = search_network(&net, &sys, &DseOptions::default());
+                let r = imcsim::dse::search_network_with(
+                    &net,
+                    &sys,
+                    &DseOptions::default(),
+                    &cache,
+                    imcsim::util::pool::default_threads(),
+                );
                 // Pareto energy axis: macro + buffer level (DRAM traffic
                 // is geometry-independent and would flatten the sweep)
                 let e_macro = r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj;
@@ -486,6 +616,18 @@ fn cmd_archsweep(args: &Args) -> i32 {
     );
     println!("{}", t.render());
     println!("(* = (energy, latency) Pareto-optimal at equal SRAM budget)");
+    let s = cache.stats();
+    println!(
+        "mapping search: {} candidates — {} evaluated, {} pruned by bound ({:.1}%); \
+         cost cache: {} entries, {} hits / {} lookups",
+        s.candidates(),
+        s.evaluated,
+        s.pruned,
+        s.prune_rate() * 100.0,
+        s.entries,
+        s.hits,
+        s.lookups()
+    );
     0
 }
 

@@ -1,8 +1,10 @@
 //! Spatial + temporal mapping of DNN layers onto IMC systems
 //! (paper §II-A dataflow concepts).
 
+pub mod space;
 pub mod spatial;
 pub mod temporal;
 
+pub use space::{MappingCandidate, MappingSpace, SpatialSpace};
 pub use spatial::{candidates, SpatialMapping, Unroll};
 pub use temporal::{tile, weight_loads, TemporalPolicy, TileCounts, ALL_POLICIES};

@@ -1,0 +1,305 @@
+//! Streaming enumeration of the (spatial × temporal) mapping space.
+//!
+//! The DSE used to materialize every [`SpatialMapping`] into a `Vec` and
+//! cross it with every [`TemporalPolicy`] before costing anything. With
+//! the widened sweep grids (cell budgets × sparsity levels × survey
+//! designs) that eager product sits on the hot path, so this module
+//! yields candidates *lazily* instead: [`SpatialSpace`] walks the
+//! cols-option × macro-option cross product around the fixed greedy row
+//! fill, and [`MappingSpace`] nests the temporal policies innermost.
+//!
+//! The nesting is the historical one (spatial outer, policy inner),
+//! but macro options are deliberately reordered most-parallel-first so
+//! the pruned search meets strong latency/EDP incumbents early. The
+//! search keeps the *first* candidate on exact score ties, so this
+//! reorder can pick a different (equal-cost) winner than pre-reorder
+//! releases on ties; what *is* guaranteed bit-for-bit is equivalence
+//! between the pruned and exhaustive searches, which both walk this
+//! same sequence (`candidates()` delegates here too).
+//!
+//! The cheap admissible lower bound that lets the search discard
+//! candidates without full evaluation lives in [`crate::dse::cost`]
+//! (`lower_bound`): it shares the traffic/energy building blocks with
+//! the exact evaluator, which is what makes its admissibility easy to
+//! audit.
+
+use crate::arch::{ImcFamily, ImcSystem};
+use crate::workload::{Layer, LoopDim};
+
+use super::spatial::{SpatialMapping, Unroll};
+use super::temporal::{TemporalPolicy, ALL_POLICIES};
+
+/// One streamed point of the mapping space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MappingCandidate {
+    pub spatial: SpatialMapping,
+    pub policy: TemporalPolicy,
+}
+
+/// Greedily fill the array rows with the reduction loops C → FY → FX
+/// (paper Fig. 2 ordering).
+fn fill_rows(layer: &Layer, capacity: usize) -> Vec<Unroll> {
+    let mut unrolls = Vec::new();
+    let mut cap = capacity.max(1);
+    for dim in [LoopDim::C, LoopDim::FY, LoopDim::FX] {
+        let size = layer.size(dim);
+        if size <= 1 {
+            continue;
+        }
+        let f = size.min(cap);
+        if f > 1 {
+            unrolls.push(Unroll { dim, factor: f });
+            cap /= f;
+        }
+        if cap <= 1 {
+            break;
+        }
+    }
+    unrolls
+}
+
+/// Lazy enumerator of the candidate spatial mappings for one layer on
+/// one system (the design space of paper §II-A): rows always greedily
+/// filled with C/FY/FX; columns with K (or G for DIMC depthwise); macro
+/// parallelism over each of OX / OY / G / K / OX×OY. The per-axis
+/// option lists are tiny (≤ ~7 entries each); only the cross product is
+/// streamed.
+pub struct SpatialSpace {
+    rows: Vec<Unroll>,
+    cols_options: Vec<Vec<Unroll>>,
+    macro_options: Vec<Vec<Unroll>>,
+    ci: usize,
+    mi: usize,
+}
+
+impl SpatialSpace {
+    pub fn new(layer: &Layer, sys: &ImcSystem) -> Self {
+        let d1 = sys.imc.d1();
+        let rows = fill_rows(layer, sys.imc.rows);
+        let mut cols_options: Vec<Vec<Unroll>> = Vec::new();
+
+        let k_fill = layer.k.min(d1);
+        if k_fill > 1 {
+            cols_options.push(vec![Unroll {
+                dim: LoopDim::K,
+                factor: k_fill,
+            }]);
+        }
+        // DIMC flexibility: depthwise groups across columns
+        if sys.imc.family == ImcFamily::Dimc && layer.g > 1 {
+            let g_fill = layer.g.min(d1);
+            if g_fill > 1 {
+                cols_options.push(vec![Unroll {
+                    dim: LoopDim::G,
+                    factor: g_fill,
+                }]);
+            }
+        }
+        if cols_options.is_empty() {
+            cols_options.push(Vec::new()); // K = 1 and no flex: single column used
+        }
+
+        // macro-level options
+        let nm = sys.n_macros;
+        let mut macro_options: Vec<Vec<Unroll>> = vec![Vec::new()];
+        if nm > 1 {
+            let push = |opts: &mut Vec<Vec<Unroll>>, dim: LoopDim, size: usize| {
+                let f = size.min(nm);
+                if f > 1 {
+                    opts.push(vec![Unroll { dim, factor: f }]);
+                }
+            };
+            push(&mut macro_options, LoopDim::OX, layer.ox);
+            push(&mut macro_options, LoopDim::OY, layer.oy);
+            push(&mut macro_options, LoopDim::G, layer.g);
+            // K across macros only when K overflows one macro's columns
+            if layer.k > d1 {
+                push(&mut macro_options, LoopDim::K, (layer.k / d1).max(2).min(layer.k));
+            }
+            // 2D spatial tiling OX × OY
+            if layer.ox > 1 && layer.oy > 1 && nm >= 4 {
+                let side = (nm as f64).sqrt().floor() as usize;
+                let fx = layer.ox.min(side);
+                let fy = layer.oy.min(side);
+                if fx > 1 && fy > 1 {
+                    macro_options.push(vec![
+                        Unroll { dim: LoopDim::OX, factor: fx },
+                        Unroll { dim: LoopDim::OY, factor: fy },
+                    ]);
+                }
+            }
+        }
+        // Most-parallel first (stable on ties, serial option last): the
+        // streamed search establishes strong latency/EDP incumbents
+        // early, which is what lets the admissible bound prune the
+        // weakly-parallel tail without evaluating it. Pure reordering —
+        // the candidate *set* is unchanged, and the pruned and
+        // exhaustive searches walk the same sequence.
+        macro_options.sort_by_key(|opt| {
+            std::cmp::Reverse(opt.iter().map(|u| u.factor).product::<usize>().max(1))
+        });
+
+        SpatialSpace {
+            rows,
+            cols_options,
+            macro_options,
+            ci: 0,
+            mi: 0,
+        }
+    }
+
+    /// Upper bound on the number of spatial candidates (the cross
+    /// product before the G-on-both-axes exclusion).
+    pub fn len_upper_bound(&self) -> usize {
+        self.cols_options.len() * self.macro_options.len()
+    }
+}
+
+impl Iterator for SpatialSpace {
+    type Item = SpatialMapping;
+
+    fn next(&mut self) -> Option<SpatialMapping> {
+        while self.ci < self.cols_options.len() {
+            let cols = &self.cols_options[self.ci];
+            while self.mi < self.macro_options.len() {
+                let macros = &self.macro_options[self.mi];
+                self.mi += 1;
+                // avoid G on both cols and macros
+                let g_twice = cols.iter().any(|u| u.dim == LoopDim::G)
+                    && macros.iter().any(|u| u.dim == LoopDim::G);
+                if g_twice {
+                    continue;
+                }
+                return Some(SpatialMapping {
+                    rows: self.rows.clone(),
+                    cols: cols.clone(),
+                    macros: macros.clone(),
+                });
+            }
+            self.mi = 0;
+            self.ci += 1;
+        }
+        None
+    }
+}
+
+/// Lazy iterator over the full (spatial × temporal) mapping space of one
+/// layer, policies innermost — the streamed equivalent of the historical
+/// `for spatial { for policy { … } }` double loop.
+pub struct MappingSpace {
+    spatials: SpatialSpace,
+    policies: Vec<TemporalPolicy>,
+    current: Option<SpatialMapping>,
+    pi: usize,
+}
+
+impl MappingSpace {
+    /// Build the space for `layer` on `sys`. `policy` restricts the
+    /// temporal axis to one archetype (None = all three).
+    pub fn new(layer: &Layer, sys: &ImcSystem, policy: Option<TemporalPolicy>) -> Self {
+        MappingSpace {
+            spatials: SpatialSpace::new(layer, sys),
+            policies: match policy {
+                Some(p) => vec![p],
+                None => ALL_POLICIES.to_vec(),
+            },
+            current: None,
+            pi: 0,
+        }
+    }
+
+    /// Upper bound on the number of streamed candidates.
+    pub fn len_upper_bound(&self) -> usize {
+        self.spatials.len_upper_bound() * self.policies.len()
+    }
+}
+
+impl Iterator for MappingSpace {
+    type Item = MappingCandidate;
+
+    fn next(&mut self) -> Option<MappingCandidate> {
+        loop {
+            if self.current.is_none() {
+                self.current = self.spatials.next();
+                self.pi = 0;
+                self.current.as_ref()?;
+            }
+            if self.pi < self.policies.len() {
+                let policy = self.policies[self.pi];
+                self.pi += 1;
+                let spatial = self.current.as_ref().unwrap().clone();
+                return Some(MappingCandidate { spatial, policy });
+            }
+            self.current = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ImcMacro;
+    use crate::mapping::spatial::candidates;
+
+    fn sys(family: ImcFamily, rows: usize, cols: usize, n: usize) -> ImcSystem {
+        let (adc, dac) = match family {
+            ImcFamily::Aimc => (8, 4),
+            ImcFamily::Dimc => (0, 1),
+        };
+        ImcSystem::new(
+            "s",
+            ImcMacro::new("m", family, rows, cols, 4, 4, dac, adc, 0.8, 28.0),
+            n,
+        )
+    }
+
+    #[test]
+    fn streamed_spatials_match_materialized_candidates() {
+        let cases = [
+            (Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1), sys(ImcFamily::Dimc, 48, 4, 192)),
+            (Layer::depthwise("dw", 24, 24, 64, 3, 3, 1), sys(ImcFamily::Dimc, 48, 256, 8)),
+            (Layer::dense("fc", 128, 640), sys(ImcFamily::Aimc, 1152, 256, 1)),
+            (Layer::pointwise("pw", 24, 24, 256, 256), sys(ImcFamily::Aimc, 64, 32, 8)),
+        ];
+        for (layer, s) in &cases {
+            let streamed: Vec<SpatialMapping> = SpatialSpace::new(layer, s).collect();
+            assert_eq!(streamed, candidates(layer, s), "{}", layer.name);
+            for m in &streamed {
+                m.validate(layer, s).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn policies_nest_innermost_in_historical_order() {
+        let layer = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let s = sys(ImcFamily::Dimc, 48, 4, 8);
+        let spatials = candidates(&layer, &s);
+        let all: Vec<MappingCandidate> = MappingSpace::new(&layer, &s, None).collect();
+        assert_eq!(all.len(), spatials.len() * ALL_POLICIES.len());
+        for (i, cand) in all.iter().enumerate() {
+            assert_eq!(cand.spatial, spatials[i / ALL_POLICIES.len()]);
+            assert_eq!(cand.policy, ALL_POLICIES[i % ALL_POLICIES.len()]);
+        }
+    }
+
+    #[test]
+    fn policy_restriction_limits_temporal_axis() {
+        let layer = Layer::dense("fc", 64, 256);
+        let s = sys(ImcFamily::Aimc, 1152, 256, 1);
+        let only_ws: Vec<MappingCandidate> =
+            MappingSpace::new(&layer, &s, Some(TemporalPolicy::WeightStationary)).collect();
+        assert!(!only_ws.is_empty());
+        assert!(only_ws.iter().all(|c| c.policy == TemporalPolicy::WeightStationary));
+        assert_eq!(only_ws.len(), candidates(&layer, &s).len());
+    }
+
+    #[test]
+    fn upper_bound_covers_yielded_count() {
+        let layer = Layer::depthwise("dw", 24, 24, 64, 3, 3, 1);
+        let s = sys(ImcFamily::Dimc, 48, 256, 192);
+        let space = MappingSpace::new(&layer, &s, None);
+        let ub = space.len_upper_bound();
+        assert!(space.count() <= ub);
+    }
+}

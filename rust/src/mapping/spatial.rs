@@ -128,108 +128,20 @@ impl SpatialMapping {
     }
 }
 
-/// Greedily fill the array rows with the reduction loops C → FY → FX
-/// (paper Fig. 2 ordering). Returns the unrolls and the filled factor.
-fn fill_rows(layer: &Layer, capacity: usize) -> Vec<Unroll> {
-    let mut unrolls = Vec::new();
-    let mut cap = capacity.max(1);
-    for dim in [LoopDim::C, LoopDim::FY, LoopDim::FX] {
-        let size = layer.size(dim);
-        if size <= 1 {
-            continue;
-        }
-        let f = size.min(cap);
-        if f > 1 {
-            unrolls.push(Unroll { dim, factor: f });
-            cap /= f;
-        }
-        if cap <= 1 {
-            break;
-        }
-    }
-    unrolls
-}
-
 /// Enumerate candidate spatial mappings for `layer` on `sys`.
 ///
 /// The candidate set covers the design space the paper discusses:
 /// rows always greedily filled with C/FY/FX; columns with K (or G for
 /// DIMC depthwise); macro-level parallelism over each of OX / OY / G /
 /// K / OX×OY. Typically 4–10 candidates per layer.
+///
+/// This is the materialized view of [`super::space::SpatialSpace`] —
+/// the streaming search iterates the space directly and never builds
+/// this `Vec`.
 pub fn candidates(layer: &Layer, sys: &ImcSystem) -> Vec<SpatialMapping> {
-    let d1 = sys.imc.d1();
-    let rows = fill_rows(layer, sys.imc.rows);
-    let mut cols_options: Vec<Vec<Unroll>> = Vec::new();
-
-    let k_fill = layer.k.min(d1);
-    if k_fill > 1 {
-        cols_options.push(vec![Unroll {
-            dim: LoopDim::K,
-            factor: k_fill,
-        }]);
-    }
-    // DIMC flexibility: depthwise groups across columns
-    if sys.imc.family == ImcFamily::Dimc && layer.g > 1 {
-        let g_fill = layer.g.min(d1);
-        if g_fill > 1 {
-            cols_options.push(vec![Unroll {
-                dim: LoopDim::G,
-                factor: g_fill,
-            }]);
-        }
-    }
-    if cols_options.is_empty() {
-        cols_options.push(Vec::new()); // K = 1 and no flex: single column used
-    }
-
-    // macro-level options
-    let nm = sys.n_macros;
-    let mut macro_options: Vec<Vec<Unroll>> = vec![Vec::new()];
-    if nm > 1 {
-        let push = |opts: &mut Vec<Vec<Unroll>>, dim: LoopDim, size: usize| {
-            let f = size.min(nm);
-            if f > 1 {
-                opts.push(vec![Unroll { dim, factor: f }]);
-            }
-        };
-        push(&mut macro_options, LoopDim::OX, layer.ox);
-        push(&mut macro_options, LoopDim::OY, layer.oy);
-        push(&mut macro_options, LoopDim::G, layer.g);
-        // K across macros only when K overflows one macro's columns
-        if layer.k > d1 {
-            push(&mut macro_options, LoopDim::K, (layer.k / d1).max(2).min(layer.k));
-        }
-        // 2D spatial tiling OX × OY
-        if layer.ox > 1 && layer.oy > 1 && nm >= 4 {
-            let side = (nm as f64).sqrt().floor() as usize;
-            let fx = layer.ox.min(side);
-            let fy = layer.oy.min(side);
-            if fx > 1 && fy > 1 {
-                macro_options.push(vec![
-                    Unroll { dim: LoopDim::OX, factor: fx },
-                    Unroll { dim: LoopDim::OY, factor: fy },
-                ]);
-            }
-        }
-    }
-
-    let mut out = Vec::new();
-    for cols in &cols_options {
-        for macros in &macro_options {
-            // avoid G on both cols and macros
-            let g_twice = cols.iter().any(|u| u.dim == LoopDim::G)
-                && macros.iter().any(|u| u.dim == LoopDim::G);
-            if g_twice {
-                continue;
-            }
-            let m = SpatialMapping {
-                rows: rows.clone(),
-                cols: cols.clone(),
-                macros: macros.clone(),
-            };
-            debug_assert!(m.validate(layer, sys).is_ok(), "{:?}", m.validate(layer, sys));
-            out.push(m);
-        }
+    let out: Vec<SpatialMapping> = super::space::SpatialSpace::new(layer, sys).collect();
+    for m in &out {
+        debug_assert!(m.validate(layer, sys).is_ok(), "{:?}", m.validate(layer, sys));
     }
     out
 }

@@ -250,7 +250,11 @@ mod tests {
         let l = conv();
         let s = sys(64, 32, 8);
         let cands = candidates(&l, &s);
-        let base = tile(&l, &s, &cands[0]);
+        let serial = cands
+            .iter()
+            .find(|m| m.macros.is_empty())
+            .expect("serial candidate");
+        let base = tile(&l, &s, serial);
         let ox_unrolled = cands
             .iter()
             .find(|m| m.factor(LoopDim::OX) > 1)

@@ -1,8 +1,12 @@
 //! Renderers for the full-grid sweep: per-network Pareto-frontier
-//! tables, a survey-wide (energy, latency) scatter, cache statistics and
-//! a CSV dump of every grid point.
+//! tables, a survey-wide (energy, latency) scatter, cache + pruning
+//! statistics, and a CSV dump of every grid point (plus its parser, so
+//! shard CSVs written by CI matrix jobs can be merged back losslessly).
+
+use std::collections::HashSet;
 
 use crate::arch::ImcFamily;
+use crate::dse::Objective;
 use crate::sweep::{GridPoint, SweepSummary};
 
 use super::ascii_plot::ScatterPlot;
@@ -14,6 +18,8 @@ fn point_row(p: &GridPoint) -> Vec<String> {
         p.network.clone(),
         p.objective.to_string(),
         p.n_macros.to_string(),
+        super::table::eng(p.cells as f64),
+        format!("{:.2}", p.sparsity),
         format!("{:.3}", p.energy_fj * 1e-9),
         format!("{:.2}", p.time_ns * 1e-3),
         format!("{:.1}", p.tops_per_watt),
@@ -21,8 +27,9 @@ fn point_row(p: &GridPoint) -> Vec<String> {
     ]
 }
 
-const POINT_HEADERS: [&str; 8] = [
-    "design", "network", "objective", "macros", "E [uJ]", "t [us]", "TOP/s/W", "util",
+const POINT_HEADERS: [&str; 10] = [
+    "design", "network", "objective", "macros", "cells", "spars", "E [uJ]", "t [us]", "TOP/s/W",
+    "util",
 ];
 
 /// Human-readable sweep summary: scope line, per-network Pareto
@@ -40,10 +47,21 @@ pub fn sweep_text(s: &SweepSummary) -> String {
     };
     out.push_str(&format!("== full-grid DSE sweep: {scope} ==\n"));
 
-    for (network, frontier) in &s.frontiers {
-        let n_points = s.points.iter().filter(|p| &p.network == network).count();
+    for (label, frontier) in &s.frontiers {
+        let n_points = match frontier.first() {
+            Some(&i) => {
+                let p0 = &s.points[i];
+                s.points
+                    .iter()
+                    .filter(|p| {
+                        p.network == p0.network && p.sparsity.to_bits() == p0.sparsity.to_bits()
+                    })
+                    .count()
+            }
+            None => 0,
+        };
         out.push_str(&format!(
-            "\n-- {network}: (energy, latency) Pareto frontier — {} of {} points --\n",
+            "\n-- {label}: (energy, latency) Pareto frontier — {} of {} points --\n",
             frontier.len(),
             n_points
         ));
@@ -91,34 +109,110 @@ pub fn sweep_text(s: &SweepSummary) -> String {
         s.cache.lookups(),
         s.cache.hit_rate() * 100.0
     ));
+    out.push_str(&format!(
+        "mapping search: {} candidates — {} evaluated, {} pruned by bound ({:.1}%)\n",
+        s.cache.candidates(),
+        s.cache.evaluated,
+        s.cache.pruned,
+        s.cache.prune_rate() * 100.0
+    ));
     out
 }
 
-/// Every evaluated grid point as CSV (canonical task order).
+/// The sweep CSV column set; [`sweep_csv`] and [`parse_sweep_csv`] must
+/// stay inverses of each other over it.
+const CSV_HEADERS: [&str; 15] = [
+    "task", "design", "family", "network", "sparsity", "objective", "macros", "cells",
+    "energy_fj", "macro_fj", "time_ns", "edp_fj_ns", "tops_w", "util", "pareto",
+];
+
+/// Every evaluated grid point as CSV (canonical task order). Floats are
+/// written with Rust's shortest-roundtrip formatting, so
+/// [`parse_sweep_csv`] recovers them bit-for-bit.
 pub fn sweep_csv(s: &SweepSummary) -> String {
-    let mut t = Table::new(&[
-        "task", "design", "family", "network", "objective", "macros", "energy_fj", "macro_fj",
-        "time_ns", "edp_fj_ns", "tops_w", "util", "pareto",
-    ]);
+    let on_front: HashSet<usize> = s
+        .frontiers
+        .iter()
+        .flat_map(|(_, f)| f.iter().copied())
+        .collect();
+    let mut t = Table::new(&CSV_HEADERS);
     for (i, p) in s.points.iter().enumerate() {
-        let on_front = s.frontier(&p.network).is_some_and(|f| f.contains(&i));
         t.row(vec![
             p.task_index.to_string(),
             p.design.clone(),
             p.family.to_string(),
             p.network.clone(),
+            p.sparsity.to_string(),
             p.objective.to_string(),
             p.n_macros.to_string(),
+            p.cells.to_string(),
             p.energy_fj.to_string(),
             p.macro_fj.to_string(),
             p.time_ns.to_string(),
             p.edp().to_string(),
             p.tops_per_watt.to_string(),
             p.utilization.to_string(),
-            if on_front { "1".into() } else { "0".into() },
+            if on_front.contains(&i) { "1".into() } else { "0".into() },
         ]);
     }
     t.to_csv()
+}
+
+/// Parse a CSV produced by [`sweep_csv`] back into grid points (the
+/// shard-merge path: CI matrix jobs ship CSVs, the merge job rebuilds
+/// summaries and recombines them via `sweep::merge_summaries`). The
+/// derived `edp`/`pareto` columns are validated for presence but
+/// recomputed downstream.
+pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty sweep csv")?;
+    let expected = CSV_HEADERS.join(",");
+    if header != expected {
+        return Err(format!("unexpected sweep csv header: {header}"));
+    }
+    let mut points = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != CSV_HEADERS.len() {
+            return Err(format!(
+                "line {}: {} fields, expected {}",
+                ln + 2,
+                fields.len(),
+                CSV_HEADERS.len()
+            ));
+        }
+        let err = |what: &str| format!("line {}: bad {what}: {line}", ln + 2);
+        let family = match fields[2] {
+            "AIMC" => ImcFamily::Aimc,
+            "DIMC" => ImcFamily::Dimc,
+            _ => return Err(err("family")),
+        };
+        let objective = match fields[5] {
+            "energy" => Objective::Energy,
+            "latency" => Objective::Latency,
+            "edp" => Objective::Edp,
+            _ => return Err(err("objective")),
+        };
+        points.push(GridPoint {
+            task_index: fields[0].parse().map_err(|_| err("task"))?,
+            design: fields[1].to_string(),
+            family,
+            network: fields[3].to_string(),
+            sparsity: fields[4].parse().map_err(|_| err("sparsity"))?,
+            objective,
+            n_macros: fields[6].parse().map_err(|_| err("macros"))?,
+            cells: fields[7].parse().map_err(|_| err("cells"))?,
+            energy_fj: fields[8].parse().map_err(|_| err("energy_fj"))?,
+            macro_fj: fields[9].parse().map_err(|_| err("macro_fj"))?,
+            time_ns: fields[10].parse().map_err(|_| err("time_ns"))?,
+            tops_per_watt: fields[12].parse().map_err(|_| err("tops_w"))?,
+            utilization: fields[13].parse().map_err(|_| err("util"))?,
+        });
+    }
+    Ok(points)
 }
 
 #[cfg(test)]
@@ -132,19 +226,22 @@ mod tests {
         let grid = SweepGrid {
             systems: crate::arch::table2_systems().into_iter().take(2).collect(),
             networks: vec![deep_autoencoder()],
+            sparsities: vec![crate::dse::DEFAULT_SPARSITY],
             objectives: vec![Objective::Energy],
         };
         run_sweep(&grid, &SweepOptions::default())
     }
 
     #[test]
-    fn text_mentions_frontier_and_cache() {
+    fn text_mentions_frontier_cache_and_pruning() {
         let s = summary();
         let text = sweep_text(&s);
         assert!(text.contains("full grid"), "{text}");
         assert!(text.contains("Pareto frontier"), "{text}");
         assert!(text.contains("cost cache:"), "{text}");
         assert!(text.contains("hit rate"), "{text}");
+        assert!(text.contains("pruned by bound"), "{text}");
+        assert!(text.contains("evaluated"), "{text}");
     }
 
     #[test]
@@ -158,5 +255,48 @@ mod tests {
         let flagged = lines[1..].iter().filter(|l| l.ends_with(",1")).count();
         let on_front: usize = s.frontiers.iter().map(|(_, f)| f.len()).sum();
         assert_eq!(flagged, on_front);
+    }
+
+    #[test]
+    fn csv_roundtrips_bit_exact() {
+        let s = summary();
+        let parsed = parse_sweep_csv(&sweep_csv(&s)).unwrap();
+        assert_eq!(parsed.len(), s.points.len());
+        for (a, b) in s.points.iter().zip(&parsed) {
+            assert_eq!(a.task_index, b.task_index);
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.family, b.family);
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.objective, b.objective);
+            assert_eq!(a.n_macros, b.n_macros);
+            assert_eq!(a.cells, b.cells);
+            assert_eq!(a.sparsity.to_bits(), b.sparsity.to_bits());
+            assert_eq!(a.energy_fj.to_bits(), b.energy_fj.to_bits());
+            assert_eq!(a.macro_fj.to_bits(), b.macro_fj.to_bits());
+            assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+            assert_eq!(a.tops_per_watt.to_bits(), b.tops_per_watt.to_bits());
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_csv() {
+        assert!(parse_sweep_csv("").is_err());
+        assert!(parse_sweep_csv("not,a,sweep\n1,2,3\n").is_err());
+        let s = summary();
+        let csv = sweep_csv(&s);
+        let truncated: String = csv
+            .lines()
+            .enumerate()
+            .map(|(i, l)| {
+                if i == 1 {
+                    l.split_once(',').unwrap().1.to_string()
+                } else {
+                    l.to_string()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(parse_sweep_csv(&truncated).is_err());
     }
 }

@@ -20,34 +20,36 @@ use crate::model::TechParams;
 use crate::workload::{Layer, LayerType};
 
 /// Everything that determines the outcome of a layer mapping search.
+/// Fields are `pub(crate)` so the on-disk cache (`super::persist`) can
+/// serialize and reassemble keys without widening the public API.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CostKey {
     // --- macro geometry (paper Table I) ---
-    family: ImcFamily,
-    rows: usize,
-    cols: usize,
-    weight_bits: u32,
-    act_bits: u32,
-    dac_res: u32,
-    adc_res: u32,
-    row_mux: usize,
-    cols_per_adc: u32,
-    vdd_bits: u64,
-    tech_bits: u64,
+    pub(crate) family: ImcFamily,
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) weight_bits: u32,
+    pub(crate) act_bits: u32,
+    pub(crate) dac_res: u32,
+    pub(crate) adc_res: u32,
+    pub(crate) row_mux: usize,
+    pub(crate) cols_per_adc: u32,
+    pub(crate) vdd_bits: u64,
+    pub(crate) tech_bits: u64,
     /// Bit patterns of the [`TechParams`] capacitances — callers may
     /// pass hand-calibrated parameters, not just `for_node` defaults.
-    tech_params: [u64; 4],
+    pub(crate) tech_params: [u64; 4],
     // --- system context ---
-    n_macros: usize,
+    pub(crate) n_macros: usize,
     /// Fingerprint of the memory hierarchy levels (size, read/write
     /// energy bits, bandwidth, operand mask), inner → outer.
-    hierarchy: Vec<(u64, u64, u64, u64, u8)>,
+    pub(crate) hierarchy: Vec<(u64, u64, u64, u64, u8)>,
     // --- layer shape (name deliberately excluded) ---
-    ltype: LayerType,
-    dims: [usize; 9],
+    pub(crate) ltype: LayerType,
+    pub(crate) dims: [usize; 9],
     // --- search options ---
-    sparsity_bits: u64,
-    policy: Option<TemporalPolicy>,
+    pub(crate) sparsity_bits: u64,
+    pub(crate) policy: Option<TemporalPolicy>,
 }
 
 impl CostKey {
@@ -110,12 +112,18 @@ impl CostKey {
     }
 }
 
-/// Hit/miss counters of a [`CostCache`] (or of several merged shards).
+/// Hit/miss and mapping-search counters of a [`CostCache`] (or of
+/// several merged shards).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Mapping candidates fully costed across all cache misses.
+    pub evaluated: u64,
+    /// Mapping candidates discarded by the admissible bound across all
+    /// cache misses (no full evaluation).
+    pub pruned: u64,
 }
 
 impl CacheStats {
@@ -131,6 +139,20 @@ impl CacheStats {
         }
     }
 
+    /// Candidates considered across all misses (full + pruned).
+    pub fn candidates(&self) -> u64 {
+        self.evaluated + self.pruned
+    }
+
+    /// Fraction of considered candidates discarded by the bound.
+    pub fn prune_rate(&self) -> f64 {
+        if self.candidates() == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / self.candidates() as f64
+        }
+    }
+
     /// Accumulate another shard's counters. `entries` becomes the total
     /// held across the (independent) shard caches — shards may cache the
     /// same key, so this is an upper bound on distinct keys.
@@ -138,6 +160,21 @@ impl CacheStats {
         self.hits += other.hits;
         self.misses += other.misses;
         self.entries += other.entries;
+        self.evaluated += other.evaluated;
+        self.pruned += other.pruned;
+    }
+
+    /// Counters accumulated since an earlier snapshot of the *same*
+    /// cache (`entries` stays the current total). Lets a long-lived,
+    /// possibly disk-warmed cache report per-run statistics.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            entries: self.entries,
+            evaluated: self.evaluated - earlier.evaluated,
+            pruned: self.pruned - earlier.pruned,
+        }
     }
 }
 
@@ -150,6 +187,8 @@ pub struct CostCache {
     map: Mutex<HashMap<CostKey, LayerSearch>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evaluated: AtomicU64,
+    pruned: AtomicU64,
 }
 
 impl CostCache {
@@ -162,6 +201,8 @@ impl CostCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.map.lock().unwrap().len(),
+            evaluated: self.evaluated.load(Ordering::Relaxed),
+            pruned: self.pruned.load(Ordering::Relaxed),
         }
     }
 
@@ -181,12 +222,30 @@ impl CostCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let search = search_layer_all(layer, sys, tech, input_sparsity, policy);
+        self.evaluated.fetch_add(search.evaluated as u64, Ordering::Relaxed);
+        self.pruned.fetch_add(search.pruned as u64, Ordering::Relaxed);
         self.map
             .lock()
             .unwrap()
             .entry(key)
             .or_insert(search)
             .clone()
+    }
+
+    /// Pre-seed an entry without touching the hit/miss counters (the
+    /// disk-cache load path).
+    pub(crate) fn preload(&self, key: CostKey, search: LayerSearch) {
+        self.map.lock().unwrap().insert(key, search);
+    }
+
+    /// Clone out every entry (the disk-cache save path).
+    pub(crate) fn snapshot(&self) -> Vec<(CostKey, LayerSearch)> {
+        self.map
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
     }
 }
 

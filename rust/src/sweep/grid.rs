@@ -1,13 +1,15 @@
 //! Grid construction, sharding and execution for the full-grid sweep.
 //!
-//! The grid is the cross product *survey designs × tinyMLPerf networks
-//! × objectives*, every design normalized to the same total SRAM-cell
-//! budget (the paper's fairness rule). Tasks are numbered in canonical
-//! order and dealt round-robin across shards, so `--shards N` splits
-//! the grid into N near-equal, deterministic slices that CI jobs or
-//! machines can run independently; [`merge_summaries`] recombines shard
-//! outputs into the same global Pareto frontier a single-shard run
-//! produces.
+//! The grid is the cross product *survey designs (per SRAM-cell budget)
+//! × tinyMLPerf networks × activation sparsities × objectives*; within
+//! one budget every design is normalized to the same total cell count
+//! (the paper's fairness rule), and the cell-budget / sparsity axes are
+//! the DVFS-style widening of the Sun et al. 2024 follow-up. Tasks are
+//! numbered in canonical order and dealt round-robin across shards, so
+//! `--shards N` splits the grid into N near-equal, deterministic slices
+//! that CI jobs or machines can run independently; [`merge_summaries`]
+//! recombines shard outputs into the same global Pareto frontier a
+//! single-shard run produces.
 
 use crate::arch::{ImcFamily, ImcSystem};
 use crate::db;
@@ -24,55 +26,83 @@ use super::cache::{CacheStats, CostCache};
 /// macro geometry (1152 × 256, as in paper Table II).
 pub const DEFAULT_GRID_CELLS: usize = 1152 * 256;
 
-/// The full evaluation grid.
+/// The full evaluation grid. Canonical task order: systems outermost,
+/// then networks, then sparsities, then objectives.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub systems: Vec<ImcSystem>,
     pub networks: Vec<Network>,
+    /// Activation-sparsity grid axis (every value in [0, 1]).
+    pub sparsities: Vec<f64>,
     pub objectives: Vec<Objective>,
 }
 
 impl SweepGrid {
     /// The paper-scale grid: every surveyed silicon operating point
     /// (instantiated as a multi-macro system at `target_cells` total
-    /// SRAM cells) × the four tinyMLPerf networks × all objectives.
+    /// SRAM cells) × the four tinyMLPerf networks × all objectives, at
+    /// the paper's default 50 % activation sparsity.
     pub fn survey_tinymlperf(target_cells: usize) -> Self {
+        Self::survey_tinymlperf_grid(&[target_cells], &[DEFAULT_SPARSITY])
+    }
+
+    /// The widened grid: the survey designs instantiated at *each* of
+    /// `cell_budgets` (suffixed `@<cells>c` when more than one budget
+    /// keeps the names unique) × the tinyMLPerf networks × each of
+    /// `sparsities` × all objectives.
+    pub fn survey_tinymlperf_grid(cell_budgets: &[usize], sparsities: &[f64]) -> Self {
         let mut systems = Vec::new();
-        for entry in db::survey() {
-            let imc = entry.to_macro();
-            let name = imc.name.clone();
-            let sys = ImcSystem::new(&name, imc, 1).normalized_to_cells(target_cells);
-            if sys.validate().is_ok() {
-                systems.push(sys);
+        for &cells in cell_budgets {
+            for entry in db::survey() {
+                let imc = entry.to_macro();
+                let name = if cell_budgets.len() > 1 {
+                    format!("{}@{}c", imc.name, cells)
+                } else {
+                    imc.name.clone()
+                };
+                let sys = ImcSystem::new(&name, imc, 1).normalized_to_cells(cells);
+                if sys.validate().is_ok() {
+                    systems.push(sys);
+                }
             }
         }
         SweepGrid {
             systems,
             networks: all_networks(),
+            sparsities: sparsities.to_vec(),
             objectives: ALL_OBJECTIVES.to_vec(),
         }
     }
 
-    /// Number of grid tasks (design × network × objective points).
+    /// Number of grid tasks (design × network × sparsity × objective
+    /// points).
     pub fn n_tasks(&self) -> usize {
-        self.systems.len() * self.networks.len() * self.objectives.len()
+        self.systems.len() * self.networks.len() * self.sparsities.len() * self.objectives.len()
     }
 
-    /// Number of (design, network) evaluation groups. A group is the
-    /// unit of work: one mapping-space pass serves every objective, so
-    /// both the parallel fan-out and the shard deal operate on groups —
-    /// splitting a group's objective points across workers or shard
-    /// processes would re-run the search up to `objectives.len()` times.
+    /// Number of (design, network, sparsity) evaluation groups. A group
+    /// is the unit of work: one mapping-space pass serves every
+    /// objective, so both the parallel fan-out and the shard deal
+    /// operate on groups — splitting a group's objective points across
+    /// workers or shard processes would re-run the search up to
+    /// `objectives.len()` times.
     pub fn n_groups(&self) -> usize {
-        self.systems.len() * self.networks.len()
+        self.systems.len() * self.networks.len() * self.sparsities.len()
     }
 
-    /// Decompose a task index into its (system, network, objective)
-    /// grid coordinates — the inverse of the canonical task numbering.
-    pub fn coords(&self, task: usize) -> (usize, usize, usize) {
+    /// Decompose a task index into its (system, network, sparsity,
+    /// objective) grid coordinates — the inverse of the canonical task
+    /// numbering.
+    pub fn coords(&self, task: usize) -> (usize, usize, usize, usize) {
         let n_obj = self.objectives.len();
+        let n_sp = self.sparsities.len();
         let n_net = self.networks.len();
-        (task / (n_obj * n_net), (task / n_obj) % n_net, task % n_obj)
+        (
+            task / (n_obj * n_sp * n_net),
+            (task / (n_obj * n_sp)) % n_net,
+            (task / n_obj) % n_sp,
+            task % n_obj,
+        )
     }
 
     /// Group indices belonging to one shard (round-robin deal).
@@ -100,7 +130,6 @@ pub struct SweepOptions {
     pub shards: usize,
     /// Evaluate only this shard (`None`: the whole grid).
     pub shard_index: Option<usize>,
-    pub input_sparsity: f64,
     /// Worker threads for the group-level fan-out.
     pub threads: usize,
 }
@@ -110,14 +139,14 @@ impl Default for SweepOptions {
         SweepOptions {
             shards: 1,
             shard_index: None,
-            input_sparsity: DEFAULT_SPARSITY,
             threads: default_threads(),
         }
     }
 }
 
 /// One evaluated grid point: a network mapped onto a design under one
-/// objective (the aggregate of its per-layer optima).
+/// (sparsity, objective) setting — the aggregate of its per-layer
+/// optima.
 #[derive(Debug, Clone)]
 pub struct GridPoint {
     /// Canonical grid position — the shard-independent identity.
@@ -125,7 +154,11 @@ pub struct GridPoint {
     pub design: String,
     pub family: ImcFamily,
     pub n_macros: usize,
+    /// Total SRAM cells of this design instance (the budget axis).
+    pub cells: usize,
     pub network: String,
+    /// Activation sparsity this point was evaluated at.
+    pub sparsity: f64,
     pub objective: Objective,
     /// Total energy (fJ), datapath + memory traffic.
     pub energy_fj: f64,
@@ -152,8 +185,10 @@ pub struct SweepSummary {
     pub total_tasks: usize,
     /// Evaluated points, sorted by `task_index`.
     pub points: Vec<GridPoint>,
-    /// Per-network (energy, latency) Pareto frontiers over all evaluated
-    /// designs and objectives: (network name, indices into `points`).
+    /// Per-(network, sparsity) (energy, latency) Pareto frontiers over
+    /// all evaluated designs and objectives: (label, indices into
+    /// `points`). The label is the network name, suffixed with the
+    /// sparsity level when the summary spans more than one.
     pub frontiers: Vec<(String, Vec<usize>)>,
     pub cache: CacheStats,
     /// True when this summary was assembled by [`merge_summaries`] —
@@ -162,29 +197,42 @@ pub struct SweepSummary {
 }
 
 impl SweepSummary {
-    /// Indices of `points` on the frontier of `network`.
-    pub fn frontier(&self, network: &str) -> Option<&[usize]> {
+    /// Indices of `points` on the frontier labeled `label` (the network
+    /// name; plus the sparsity suffix in multi-sparsity summaries).
+    pub fn frontier(&self, label: &str) -> Option<&[usize]> {
         self.frontiers
             .iter()
-            .find(|(n, _)| n == network)
+            .find(|(n, _)| n == label)
             .map(|(_, f)| f.as_slice())
     }
 }
 
-/// Evaluate the grid (or one shard of it). *(design, network)* groups
-/// fan out over the thread pool; every group searches each layer once
-/// through the shared memoized cost cache (serially, so identical keys
-/// never race) and materializes one grid point per objective from that
-/// single pass.
+/// Evaluate the grid (or one shard of it) with a fresh cost cache.
 pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepSummary {
+    run_sweep_with_cache(grid, opts, &CostCache::new())
+}
+
+/// Evaluate the grid (or one shard of it) through an explicit — and
+/// possibly disk-warmed or shared — cost cache. *(design, network,
+/// sparsity)* groups fan out over the thread pool; every group searches
+/// each layer once through the memoized cache (serially, so identical
+/// keys never race) and materializes one grid point per objective from
+/// that single pass. The summary reports only the statistics this run
+/// accumulated, so reusing one cache across several runs keeps each
+/// summary honest.
+pub fn run_sweep_with_cache(
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    cache: &CostCache,
+) -> SweepSummary {
     let shards = opts.shards.max(1);
     let groups: Vec<usize> = match opts.shard_index {
         Some(k) => grid.shard_groups(shards, k),
         None => (0..grid.n_groups()).collect(),
     };
-    let cache = CostCache::new();
+    let stats_before = cache.stats();
     let points: Vec<GridPoint> = parallel_map_with(&groups, opts.threads, |&group| {
-        eval_group(grid, group, opts.input_sparsity, &cache)
+        eval_group(grid, group, cache)
     })
     .into_iter()
     .flatten()
@@ -196,27 +244,26 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepSummary {
         total_tasks: grid.n_tasks(),
         points,
         frontiers,
-        cache: cache.stats(),
+        cache: cache.stats().since(&stats_before),
         merged: false,
     }
 }
 
-/// Map one network onto one design and emit a grid point per objective,
-/// all served by a single all-objective search per layer.
-fn eval_group(
-    grid: &SweepGrid,
-    group: usize,
-    input_sparsity: f64,
-    cache: &CostCache,
-) -> Vec<GridPoint> {
+/// Map one network onto one design at one sparsity and emit a grid
+/// point per objective, all served by a single all-objective search per
+/// layer.
+fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoint> {
     let n_obj = grid.objectives.len();
-    let sys = &grid.systems[group / grid.networks.len()];
-    let net = &grid.networks[group % grid.networks.len()];
+    let n_sp = grid.sparsities.len();
+    let n_net = grid.networks.len();
+    let sys = &grid.systems[group / (n_sp * n_net)];
+    let net = &grid.networks[(group / n_sp) % n_net];
+    let sparsity = grid.sparsities[group % n_sp];
     let tech = TechParams::for_node(sys.imc.tech_nm);
     let searches: Vec<_> = net
         .layers
         .iter()
-        .map(|l| cache.search(l, sys, &tech, input_sparsity, None))
+        .map(|l| cache.search(l, sys, &tech, sparsity, None))
         .collect();
     grid.objectives
         .iter()
@@ -238,7 +285,9 @@ fn eval_group(
                 design: sys.name.clone(),
                 family: sys.imc.family,
                 n_macros: sys.n_macros,
+                cells: sys.total_cells(),
                 network: net.name.clone(),
+                sparsity,
                 objective,
                 energy_fj: r.total_energy_fj(),
                 macro_fj: r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj,
@@ -250,28 +299,50 @@ fn eval_group(
         .collect()
 }
 
-/// Per-network (energy, latency) Pareto frontiers, preserving first-seen
-/// network order. Depends only on the *set* of points (inputs are sorted
-/// by task index), so shard count never changes the outcome.
-fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
-    let mut networks: Vec<&str> = Vec::new();
+/// Label a frontier group: per network, and per sparsity level when the
+/// summary spans more than one (mixing workload-sparsity assumptions in
+/// one frontier would compare incomparable points).
+fn frontier_label(network: &str, sparsity: f64, multi_sparsity: bool) -> String {
+    if multi_sparsity {
+        format!("{network} @ sparsity {sparsity}")
+    } else {
+        network.to_string()
+    }
+}
+
+/// Per-(network, sparsity) (energy, latency) Pareto frontiers,
+/// preserving first-seen order. Depends only on the *set* of points
+/// (inputs are sorted by task index), so shard count never changes the
+/// outcome.
+pub(crate) fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
+    let mut groups: Vec<(&str, u64)> = Vec::new();
     for p in points {
-        if !networks.contains(&p.network.as_str()) {
-            networks.push(&p.network);
+        let key = (p.network.as_str(), p.sparsity.to_bits());
+        if !groups.contains(&key) {
+            groups.push(key);
         }
     }
-    networks
+    let multi_sparsity = {
+        let mut sparsities: Vec<u64> = groups.iter().map(|&(_, s)| s).collect();
+        sparsities.sort_unstable();
+        sparsities.dedup();
+        sparsities.len() > 1
+    };
+    groups
         .iter()
-        .map(|&name| {
+        .map(|&(name, sp_bits)| {
             let idx: Vec<usize> = (0..points.len())
-                .filter(|&i| points[i].network == name)
+                .filter(|&i| points[i].network == name && points[i].sparsity.to_bits() == sp_bits)
                 .collect();
             let coords: Vec<(f64, f64)> = idx
                 .iter()
                 .map(|&i| (points[i].energy_fj, points[i].time_ns))
                 .collect();
             let front = pareto_front(&coords);
-            (name.to_string(), front.into_iter().map(|j| idx[j]).collect())
+            (
+                frontier_label(name, f64::from_bits(sp_bits), multi_sparsity),
+                front.into_iter().map(|j| idx[j]).collect(),
+            )
         })
         .collect()
 }
@@ -310,6 +381,7 @@ mod tests {
         SweepGrid {
             systems: table2_systems().into_iter().take(2).collect(),
             networks: vec![deep_autoencoder()],
+            sparsities: vec![DEFAULT_SPARSITY],
             objectives: vec![Objective::Energy, Objective::Latency],
         }
     }
@@ -333,18 +405,62 @@ mod tests {
 
     #[test]
     fn coords_roundtrip_canonical_order() {
-        let grid = tiny_grid();
+        let mut grid = tiny_grid();
+        grid.sparsities = vec![0.3, 0.5, 0.9];
         let mut last = None;
         for t in 0..grid.n_tasks() {
-            let (si, ni, oi) = grid.coords(t);
+            let (si, ni, pi, oi) = grid.coords(t);
             assert!(si < grid.systems.len());
             assert!(ni < grid.networks.len());
+            assert!(pi < grid.sparsities.len());
             assert!(oi < grid.objectives.len());
-            let flat = (si * grid.networks.len() + ni) * grid.objectives.len() + oi;
+            let flat = ((si * grid.networks.len() + ni) * grid.sparsities.len() + pi)
+                * grid.objectives.len()
+                + oi;
             assert_eq!(flat, t);
             assert!(Some(flat) > last, "tasks not in canonical order");
             last = Some(flat);
         }
+    }
+
+    #[test]
+    fn sparsity_axis_expands_tasks_and_labels_frontiers() {
+        let mut grid = tiny_grid();
+        grid.sparsities = vec![0.0, 0.9];
+        assert_eq!(grid.n_tasks(), 2 * 1 * 2 * 2);
+        let s = run_sweep(&grid, &SweepOptions::default());
+        assert_eq!(s.points.len(), grid.n_tasks());
+        // one frontier per (network, sparsity), labeled with the level
+        assert_eq!(s.frontiers.len(), 2);
+        assert!(s.frontiers.iter().all(|(l, f)| l.contains("sparsity") && !f.is_empty()));
+        // per design: dense inputs (sparsity 0) must cost more energy
+        // than 90 %-sparse inputs (only switching terms differ)
+        let n_obj = grid.objectives.len();
+        for si in 0..grid.systems.len() {
+            let base = si * grid.sparsities.len() * n_obj;
+            for oi in 0..n_obj {
+                let dense = &s.points[base + oi];
+                let sparse = &s.points[base + n_obj + oi];
+                assert_eq!(dense.design, sparse.design);
+                assert_eq!(dense.objective, sparse.objective);
+                assert!((dense.sparsity, sparse.sparsity) == (0.0, 0.9));
+                assert!(dense.energy_fj > sparse.energy_fj);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_cell_budgets_keep_design_names_unique() {
+        let grid = SweepGrid::survey_tinymlperf_grid(
+            &[DEFAULT_GRID_CELLS, DEFAULT_GRID_CELLS / 2],
+            &[DEFAULT_SPARSITY],
+        );
+        let mut names: Vec<&str> = grid.systems.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate design names across budgets");
+        assert!(grid.systems.iter().any(|s| s.name.ends_with('c')));
     }
 
     #[test]

@@ -6,15 +6,20 @@
 //! * [`cache`] — the memoized cost cache keyed on (macro geometry,
 //!   layer shape, search options); identical layer shapes across
 //!   networks and objectives are searched once.
-//! * [`grid`] — grid construction, deterministic sharding
+//! * [`grid`] — grid construction (including the widened SRAM-cell
+//!   budget and activation-sparsity axes), deterministic sharding
 //!   (`--shards`/`--shard-index`), parallel execution and shard-result
 //!   merging into a global Pareto frontier.
+//! * [`persist`] — bit-exact on-disk serialization of the cost cache
+//!   (`sweep --cache-file`), so repeated CI sweeps start warm.
 
 pub mod cache;
 pub mod grid;
+pub mod persist;
 
 pub use cache::{CacheStats, CostCache};
 pub use grid::{
-    merge_summaries, run_sweep, GridPoint, SweepGrid, SweepOptions, SweepSummary,
-    DEFAULT_GRID_CELLS,
+    merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, SweepGrid, SweepOptions,
+    SweepSummary, DEFAULT_GRID_CELLS,
 };
+pub use persist::{load_cache_into, save_cache, SWEEP_CACHE_VERSION};

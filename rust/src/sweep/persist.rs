@@ -1,0 +1,526 @@
+//! On-disk persistence for the sweep cost cache.
+//!
+//! CI sweeps re-run the identical survey grid on every push; a warm
+//! cache turns the whole mapping search into a lookup. The format is
+//! the workspace's own minimal JSON ([`crate::util::json`] — no serde):
+//! a version tag plus a flat entry list of `(CostKey, LayerSearch)`
+//! pairs. Files with a different version tag (or any malformed
+//! structure) are discarded wholesale — a stale schema must never seed
+//! a cache with wrong costs — and the run simply starts cold.
+//!
+//! Every `f64` (and every `u64` bit pattern inside [`CostKey`]) is
+//! stored as a 16-digit hex string of its bit pattern, so a
+//! save/load round trip is *bit-exact*: a warm run reproduces the cold
+//! run's grid points to the bit and reports a 100 % hit rate.
+
+use std::io;
+use std::path::Path;
+
+use crate::arch::ImcFamily;
+use crate::dse::{LayerSearch, MappingEval, Objective};
+use crate::mapping::{SpatialMapping, TemporalPolicy, TileCounts, Unroll};
+use crate::model::EnergyBreakdown;
+use crate::util::json::{parse, Json};
+use crate::workload::{LayerType, LoopDim};
+
+use super::cache::{CostCache, CostKey};
+use crate::dse::reuse::{AccessCounts, TrafficEnergy};
+
+/// Schema version of the cache file. Bump on any change to [`CostKey`],
+/// [`LayerSearch`] or the cost model's meaning of either.
+pub const SWEEP_CACHE_VERSION: u64 = 1;
+
+// ---- encoding helpers ----------------------------------------------------
+
+/// Exact `u64` as a 16-digit hex string (JSON numbers lose precision
+/// past 2^53).
+fn jbits(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+/// Exact `f64` via its bit pattern.
+fn jf(x: f64) -> Json {
+    jbits(x.to_bits())
+}
+
+/// Small non-negative integer (safe inside the f64 mantissa).
+fn jn(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// ---- decoding helpers ----------------------------------------------------
+
+fn bits_of(j: &Json) -> Option<u64> {
+    u64::from_str_radix(j.as_str()?, 16).ok()
+}
+
+fn f_of(j: &Json) -> Option<f64> {
+    Some(f64::from_bits(bits_of(j)?))
+}
+
+fn n_of(j: &Json) -> Option<usize> {
+    j.as_u64().map(|u| u as usize)
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    j.get(key)
+}
+
+fn policy_tag(p: TemporalPolicy) -> &'static str {
+    p.as_str()
+}
+
+fn parse_policy(s: &str) -> Option<TemporalPolicy> {
+    match s {
+        "WS" => Some(TemporalPolicy::WeightStationary),
+        "OS" => Some(TemporalPolicy::OutputStationary),
+        "IS" => Some(TemporalPolicy::InputStationary),
+        _ => None,
+    }
+}
+
+fn parse_family(s: &str) -> Option<ImcFamily> {
+    match s {
+        "AIMC" => Some(ImcFamily::Aimc),
+        "DIMC" => Some(ImcFamily::Dimc),
+        _ => None,
+    }
+}
+
+fn parse_ltype(s: &str) -> Option<LayerType> {
+    match s {
+        "Conv2D" => Some(LayerType::Conv2d),
+        "Depthwise" => Some(LayerType::Depthwise),
+        "Pointwise" => Some(LayerType::Pointwise),
+        "Dense" => Some(LayerType::Dense),
+        _ => None,
+    }
+}
+
+fn parse_dim(s: &str) -> Option<LoopDim> {
+    match s {
+        "B" => Some(LoopDim::B),
+        "G" => Some(LoopDim::G),
+        "OX" => Some(LoopDim::OX),
+        "OY" => Some(LoopDim::OY),
+        "K" => Some(LoopDim::K),
+        "C" => Some(LoopDim::C),
+        "FX" => Some(LoopDim::FX),
+        "FY" => Some(LoopDim::FY),
+        _ => None,
+    }
+}
+
+// ---- CostKey -------------------------------------------------------------
+
+fn level_to_json(level: &(u64, u64, u64, u64, u8)) -> Json {
+    let (size, read, write, bw, mask) = *level;
+    Json::Arr(vec![jbits(size), jbits(read), jbits(write), jbits(bw), jn(mask as usize)])
+}
+
+fn key_to_json(k: &CostKey) -> Json {
+    let hierarchy = Json::Arr(k.hierarchy.iter().map(level_to_json).collect());
+    obj(vec![
+        ("family", jstr(k.family.as_str())),
+        ("rows", jn(k.rows)),
+        ("cols", jn(k.cols)),
+        ("weight_bits", jn(k.weight_bits as usize)),
+        ("act_bits", jn(k.act_bits as usize)),
+        ("dac_res", jn(k.dac_res as usize)),
+        ("adc_res", jn(k.adc_res as usize)),
+        ("row_mux", jn(k.row_mux)),
+        ("cols_per_adc", jn(k.cols_per_adc as usize)),
+        ("vdd_bits", jbits(k.vdd_bits)),
+        ("tech_bits", jbits(k.tech_bits)),
+        ("tech_params", Json::Arr(k.tech_params.iter().map(|&b| jbits(b)).collect())),
+        ("n_macros", jn(k.n_macros)),
+        ("hierarchy", hierarchy),
+        ("ltype", jstr(k.ltype.as_str())),
+        ("dims", Json::Arr(k.dims.iter().map(|&d| jn(d)).collect())),
+        ("sparsity_bits", jbits(k.sparsity_bits)),
+        (
+            "policy",
+            match k.policy {
+                Some(p) => jstr(policy_tag(p)),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn key_from_json(j: &Json) -> Option<CostKey> {
+    let hierarchy = get(j, "hierarchy")?
+        .as_arr()?
+        .iter()
+        .map(|level| {
+            let l = level.as_arr()?;
+            if l.len() != 5 {
+                return None;
+            }
+            Some((
+                bits_of(&l[0])?,
+                bits_of(&l[1])?,
+                bits_of(&l[2])?,
+                bits_of(&l[3])?,
+                n_of(&l[4])? as u8,
+            ))
+        })
+        .collect::<Option<Vec<_>>>()?;
+    let tp = get(j, "tech_params")?.as_arr()?;
+    if tp.len() != 4 {
+        return None;
+    }
+    let tech_params = [
+        bits_of(&tp[0])?,
+        bits_of(&tp[1])?,
+        bits_of(&tp[2])?,
+        bits_of(&tp[3])?,
+    ];
+    let dims_arr = get(j, "dims")?.as_arr()?;
+    if dims_arr.len() != 9 {
+        return None;
+    }
+    let mut dims = [0usize; 9];
+    for (slot, d) in dims.iter_mut().zip(dims_arr) {
+        *slot = n_of(d)?;
+    }
+    let policy = match get(j, "policy")? {
+        Json::Null => None,
+        p => Some(parse_policy(p.as_str()?)?),
+    };
+    Some(CostKey {
+        family: parse_family(get(j, "family")?.as_str()?)?,
+        rows: n_of(get(j, "rows")?)?,
+        cols: n_of(get(j, "cols")?)?,
+        weight_bits: n_of(get(j, "weight_bits")?)? as u32,
+        act_bits: n_of(get(j, "act_bits")?)? as u32,
+        dac_res: n_of(get(j, "dac_res")?)? as u32,
+        adc_res: n_of(get(j, "adc_res")?)? as u32,
+        row_mux: n_of(get(j, "row_mux")?)?,
+        cols_per_adc: n_of(get(j, "cols_per_adc")?)? as u32,
+        vdd_bits: bits_of(get(j, "vdd_bits")?)?,
+        tech_bits: bits_of(get(j, "tech_bits")?)?,
+        tech_params,
+        n_macros: n_of(get(j, "n_macros")?)?,
+        hierarchy,
+        ltype: parse_ltype(get(j, "ltype")?.as_str()?)?,
+        dims,
+        sparsity_bits: bits_of(get(j, "sparsity_bits")?)?,
+        policy,
+    })
+}
+
+// ---- LayerSearch ---------------------------------------------------------
+
+fn unrolls_to_json(unrolls: &[Unroll]) -> Json {
+    Json::Arr(
+        unrolls
+            .iter()
+            .map(|u| obj(vec![("dim", jstr(u.dim.as_str())), ("factor", jn(u.factor))]))
+            .collect(),
+    )
+}
+
+fn unroll_from_json(u: &Json) -> Option<Unroll> {
+    Some(Unroll {
+        dim: parse_dim(get(u, "dim")?.as_str()?)?,
+        factor: n_of(get(u, "factor")?)?,
+    })
+}
+
+fn unrolls_from_json(j: &Json) -> Option<Vec<Unroll>> {
+    j.as_arr()?.iter().map(unroll_from_json).collect()
+}
+
+fn eval_to_json(e: &MappingEval) -> Json {
+    let t = &e.tiles;
+    let m = &e.macro_energy;
+    let a = &e.accesses;
+    let tr = &e.traffic;
+    obj(vec![
+        (
+            "spatial",
+            obj(vec![
+                ("rows", unrolls_to_json(&e.spatial.rows)),
+                ("cols", unrolls_to_json(&e.spatial.cols)),
+                ("macros", unrolls_to_json(&e.spatial.macros)),
+            ]),
+        ),
+        ("policy", jstr(policy_tag(e.policy))),
+        (
+            "tiles",
+            obj(vec![
+                ("active_macros", jn(t.active_macros)),
+                ("n_row_tiles", jbits(t.n_row_tiles)),
+                ("n_col_tiles", jbits(t.n_col_tiles)),
+                ("pixels", jbits(t.pixels)),
+                ("groups", jbits(t.groups)),
+                ("mvms", jbits(t.mvms)),
+                ("weight_tiles", jbits(t.weight_tiles)),
+                ("rows_used_avg", jf(t.rows_used_avg)),
+                ("cols_used_avg", jf(t.cols_used_avg)),
+            ]),
+        ),
+        (
+            "macro_energy",
+            obj(vec![
+                ("wl_fj", jf(m.wl_fj)),
+                ("bl_fj", jf(m.bl_fj)),
+                ("logic_fj", jf(m.logic_fj)),
+                ("adc_fj", jf(m.adc_fj)),
+                ("adder_tree_fj", jf(m.adder_tree_fj)),
+                ("dac_fj", jf(m.dac_fj)),
+                ("weight_load_fj", jf(m.weight_load_fj)),
+            ]),
+        ),
+        ("traffic", obj(vec![("gb_fj", jf(tr.gb_fj)), ("dram_fj", jf(tr.dram_fj))])),
+        (
+            "accesses",
+            obj(vec![
+                ("input_gb_reads", jf(a.input_gb_reads)),
+                ("weight_gb_reads", jf(a.weight_gb_reads)),
+                ("psum_gb_reads", jf(a.psum_gb_reads)),
+                ("psum_gb_writes", jf(a.psum_gb_writes)),
+                ("output_gb_writes", jf(a.output_gb_writes)),
+                ("input_dram_reads", jf(a.input_dram_reads)),
+                ("weight_dram_reads", jf(a.weight_dram_reads)),
+                ("output_dram_writes", jf(a.output_dram_writes)),
+                ("weight_loads_per_macro", jbits(a.weight_loads_per_macro)),
+            ]),
+        ),
+        ("time_ns", jf(e.time_ns)),
+        ("cycles", jf(e.cycles)),
+        ("utilization", jf(e.utilization)),
+    ])
+}
+
+fn eval_from_json(j: &Json) -> Option<MappingEval> {
+    let sp = get(j, "spatial")?;
+    let spatial = SpatialMapping {
+        rows: unrolls_from_json(get(sp, "rows")?)?,
+        cols: unrolls_from_json(get(sp, "cols")?)?,
+        macros: unrolls_from_json(get(sp, "macros")?)?,
+    };
+    let t = get(j, "tiles")?;
+    let tiles = TileCounts {
+        active_macros: n_of(get(t, "active_macros")?)?,
+        n_row_tiles: bits_of(get(t, "n_row_tiles")?)?,
+        n_col_tiles: bits_of(get(t, "n_col_tiles")?)?,
+        pixels: bits_of(get(t, "pixels")?)?,
+        groups: bits_of(get(t, "groups")?)?,
+        mvms: bits_of(get(t, "mvms")?)?,
+        weight_tiles: bits_of(get(t, "weight_tiles")?)?,
+        rows_used_avg: f_of(get(t, "rows_used_avg")?)?,
+        cols_used_avg: f_of(get(t, "cols_used_avg")?)?,
+    };
+    let m = get(j, "macro_energy")?;
+    let macro_energy = EnergyBreakdown {
+        wl_fj: f_of(get(m, "wl_fj")?)?,
+        bl_fj: f_of(get(m, "bl_fj")?)?,
+        logic_fj: f_of(get(m, "logic_fj")?)?,
+        adc_fj: f_of(get(m, "adc_fj")?)?,
+        adder_tree_fj: f_of(get(m, "adder_tree_fj")?)?,
+        dac_fj: f_of(get(m, "dac_fj")?)?,
+        weight_load_fj: f_of(get(m, "weight_load_fj")?)?,
+    };
+    let tr = get(j, "traffic")?;
+    let traffic = TrafficEnergy {
+        gb_fj: f_of(get(tr, "gb_fj")?)?,
+        dram_fj: f_of(get(tr, "dram_fj")?)?,
+    };
+    let a = get(j, "accesses")?;
+    let accesses = AccessCounts {
+        input_gb_reads: f_of(get(a, "input_gb_reads")?)?,
+        weight_gb_reads: f_of(get(a, "weight_gb_reads")?)?,
+        psum_gb_reads: f_of(get(a, "psum_gb_reads")?)?,
+        psum_gb_writes: f_of(get(a, "psum_gb_writes")?)?,
+        output_gb_writes: f_of(get(a, "output_gb_writes")?)?,
+        input_dram_reads: f_of(get(a, "input_dram_reads")?)?,
+        weight_dram_reads: f_of(get(a, "weight_dram_reads")?)?,
+        output_dram_writes: f_of(get(a, "output_dram_writes")?)?,
+        weight_loads_per_macro: bits_of(get(a, "weight_loads_per_macro")?)?,
+    };
+    Some(MappingEval {
+        spatial,
+        policy: parse_policy(get(j, "policy")?.as_str()?)?,
+        tiles,
+        macro_energy,
+        traffic,
+        accesses,
+        time_ns: f_of(get(j, "time_ns")?)?,
+        cycles: f_of(get(j, "cycles")?)?,
+        utilization: f_of(get(j, "utilization")?)?,
+    })
+}
+
+fn search_to_json(s: &LayerSearch) -> Json {
+    obj(vec![
+        ("evaluated", jn(s.evaluated)),
+        ("pruned", jn(s.pruned)),
+        ("best_energy", eval_to_json(s.best(Objective::Energy))),
+        ("best_latency", eval_to_json(s.best(Objective::Latency))),
+        ("best_edp", eval_to_json(s.best(Objective::Edp))),
+    ])
+}
+
+fn search_from_json(j: &Json) -> Option<LayerSearch> {
+    Some(LayerSearch::from_parts(
+        n_of(get(j, "evaluated")?)?,
+        n_of(get(j, "pruned")?)?,
+        eval_from_json(get(j, "best_energy")?)?,
+        eval_from_json(get(j, "best_latency")?)?,
+        eval_from_json(get(j, "best_edp")?)?,
+    ))
+}
+
+// ---- file API ------------------------------------------------------------
+
+/// Serialize every cache entry to `path` (atomic-enough: full rewrite).
+pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
+    // serialize each key once; sort on the prebuilt string for a
+    // deterministic file
+    let mut entries: Vec<(String, Json)> = cache
+        .snapshot()
+        .iter()
+        .map(|(k, s)| {
+            let key = key_to_json(k);
+            let sort_key = key.to_string();
+            (sort_key, obj(vec![("key", key), ("search", search_to_json(s))]))
+        })
+        .collect();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    let doc = obj(vec![
+        ("version", Json::Num(SWEEP_CACHE_VERSION as f64)),
+        ("entries", Json::Arr(entries.into_iter().map(|(_, e)| e).collect())),
+    ]);
+    std::fs::write(path, doc.to_string())
+}
+
+/// Load a cache file. Returns the number of entries preloaded into
+/// `cache`; `None` when the file is missing, has a stale version tag,
+/// or fails to parse — in every such case `cache` is left untouched and
+/// the caller starts cold.
+pub fn load_cache_into(path: &Path, cache: &CostCache) -> Option<usize> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return None,
+    };
+    let doc = parse(&text).ok()?;
+    if doc.get("version")?.as_u64()? != SWEEP_CACHE_VERSION {
+        return None;
+    }
+    // parse everything before touching the cache: a half-loaded file
+    // must not leave a partially-seeded cache behind
+    let entries: Vec<(CostKey, LayerSearch)> = doc
+        .get("entries")?
+        .as_arr()?
+        .iter()
+        .map(|e| Some((key_from_json(get(e, "key")?)?, search_from_json(get(e, "search")?)?)))
+        .collect::<Option<Vec<_>>>()?;
+    let n = entries.len();
+    for (k, s) in entries {
+        cache.preload(k, s);
+    }
+    Some(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::table2_systems;
+    use crate::dse::{DseOptions, LayerEvaluator, DEFAULT_SPARSITY};
+    use crate::model::TechParams;
+    use crate::workload::Layer;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("imcsim_{name}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_and_warm_cache_fully_hits() {
+        let sys = table2_systems().remove(1);
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        let cold = CostCache::new();
+        let layers = [
+            Layer::dense("fc", 128, 640),
+            Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
+            Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
+        ];
+        for l in &layers {
+            cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
+        }
+        let path = tmp("cache_roundtrip");
+        save_cache(&cold, &path).unwrap();
+
+        let warm = CostCache::new();
+        let loaded = load_cache_into(&path, &warm);
+        assert_eq!(loaded, Some(layers.len()));
+        for l in &layers {
+            let a = cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
+            let b = warm.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
+            for objective in crate::dse::ALL_OBJECTIVES {
+                let (x, y) = (a.best(objective), b.best(objective));
+                assert_eq!(x.total_energy_fj().to_bits(), y.total_energy_fj().to_bits());
+                assert_eq!(x.time_ns.to_bits(), y.time_ns.to_bits());
+                assert_eq!(x.policy, y.policy);
+                assert_eq!(x.spatial, y.spatial);
+                assert_eq!(x.tiles, y.tiles);
+                assert_eq!(x.accesses, y.accesses);
+            }
+            assert_eq!(a.evaluated, b.evaluated);
+            assert_eq!(a.pruned, b.pruned);
+        }
+        // the warm cache answered everything from disk
+        let s = warm.stats();
+        assert_eq!(s.misses, 0, "warm run missed: {s:?}");
+        assert_eq!(s.hits, layers.len() as u64);
+        assert!((s.hit_rate() - 1.0).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_version_is_discarded() {
+        let sys = table2_systems().remove(1);
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        let cache = CostCache::new();
+        cache.evaluate_layer(
+            &Layer::dense("fc", 64, 256),
+            &sys,
+            &tech,
+            &DseOptions::default(),
+        );
+        let path = tmp("cache_stale");
+        save_cache(&cache, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bumped = text.replacen(
+            &format!("\"version\":{SWEEP_CACHE_VERSION}"),
+            &format!("\"version\":{}", SWEEP_CACHE_VERSION + 1),
+            1,
+        );
+        assert_ne!(text, bumped, "version tag not found in file");
+        std::fs::write(&path, bumped).unwrap();
+        let fresh = CostCache::new();
+        assert_eq!(load_cache_into(&path, &fresh), None);
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_and_corrupt_files_start_cold() {
+        let fresh = CostCache::new();
+        assert_eq!(load_cache_into(Path::new("/nonexistent/imcsim.json"), &fresh), None);
+        let path = tmp("cache_corrupt");
+        std::fs::write(&path, "{not json").unwrap();
+        assert_eq!(load_cache_into(&path, &fresh), None);
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,11 +1,17 @@
-//! Integration: the DSE engine end-to-end — the §VI case-study story
-//! plus randomized mapping invariants.
+//! Integration: the DSE engine end-to-end — the §VI case-study story,
+//! randomized mapping invariants, and the pruned-search equivalence
+//! property (streamed bound-pruned search ≡ exhaustive search, bit for
+//! bit, over survey designs × tinyMLPerf layers).
 
 use imcsim::arch::{table2_systems, ImcFamily, ImcMacro, ImcSystem};
 use imcsim::dse::reuse::reuse_lower_bounds_ok;
-use imcsim::dse::{evaluate, search_network, DseOptions};
+use imcsim::dse::{
+    evaluate, lower_bound, search_layer_all, search_layer_all_unpruned, search_network,
+    DseOptions, ALL_OBJECTIVES, DEFAULT_SPARSITY,
+};
 use imcsim::mapping::{candidates, tile, ALL_POLICIES};
 use imcsim::model::TechParams;
+use imcsim::sweep::DEFAULT_GRID_CELLS;
 use imcsim::util::prng::Rng;
 use imcsim::workload::{all_networks, deep_autoencoder, ds_cnn, mobilenet_v1, resnet8, Layer};
 
@@ -158,6 +164,117 @@ fn property_random_layers_reuse_lower_bounds() {
                     sys.name
                 );
                 assert!(e.total_energy_fj().is_finite() && e.total_energy_fj() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn property_pruned_search_equals_exhaustive_on_survey_designs() {
+    // The tentpole equivalence property: for a sample of survey designs
+    // (normalized to the grid cell budget, as the sweep instantiates
+    // them) × tinyMLPerf layers × sparsities, the bound-pruned
+    // streaming search returns the exhaustive search's per-objective
+    // optima bit for bit, never evaluates more points, and accounts for
+    // the whole space as evaluated + pruned.
+    let designs: Vec<ImcSystem> = imcsim::db::survey()
+        .iter()
+        .step_by(4) // a spread of operating points, both families
+        .filter_map(|entry| {
+            let imc = entry.to_macro();
+            let name = imc.name.clone();
+            let sys = ImcSystem::new(&name, imc, 1).normalized_to_cells(DEFAULT_GRID_CELLS);
+            sys.validate().ok().map(|()| sys)
+        })
+        .collect();
+    assert!(designs.len() >= 4, "survey sample too small");
+
+    // one representative layer per tinyMLPerf operator class, plus the
+    // real networks' most repeated shapes
+    let mut layers: Vec<Layer> = vec![
+        Layer::dense("fc", 128, 640),
+        Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
+        Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
+        Layer::pointwise("pw", 24, 24, 64, 64),
+    ];
+    for net in [ds_cnn(), deep_autoencoder()] {
+        layers.extend(net.layers.into_iter().step_by(5));
+    }
+
+    let mut total_candidates = 0usize;
+    let mut total_evaluated = 0usize;
+    for sys in &designs {
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        for layer in &layers {
+            for sparsity in [DEFAULT_SPARSITY, 0.9] {
+                let pruned = search_layer_all(layer, sys, &tech, sparsity, None);
+                let full = search_layer_all_unpruned(layer, sys, &tech, sparsity, None);
+                assert_eq!(full.pruned, 0);
+                assert_eq!(
+                    pruned.evaluated + pruned.pruned,
+                    full.evaluated,
+                    "{} on {}: space accounting broken",
+                    layer.name,
+                    sys.name
+                );
+                assert!(pruned.evaluated <= full.evaluated);
+                for objective in ALL_OBJECTIVES {
+                    let a = pruned.best(objective);
+                    let b = full.best(objective);
+                    assert_eq!(
+                        a.total_energy_fj().to_bits(),
+                        b.total_energy_fj().to_bits(),
+                        "{} on {} ({objective}): energy differs",
+                        layer.name,
+                        sys.name
+                    );
+                    assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+                    assert_eq!(a.policy, b.policy);
+                    assert_eq!(a.spatial, b.spatial);
+                    assert_eq!(a.tiles, b.tiles);
+                }
+                total_candidates += full.evaluated;
+                total_evaluated += pruned.evaluated;
+            }
+        }
+    }
+    // across the sample the bound must discard a meaningful share
+    assert!(
+        total_evaluated < total_candidates,
+        "pruning never fired ({total_candidates} candidates)"
+    );
+}
+
+#[test]
+fn property_lower_bound_admissible_on_random_layers() {
+    // randomized admissibility: the bound never exceeds the true cost
+    // on any candidate of any random layer (the invariant the pruned
+    // search's correctness rests on)
+    let mut rng = Rng::new(4242);
+    let systems = table2_systems();
+    for i in 0..40 {
+        let k = 1 << rng.below(7);
+        let c = 1 << rng.below(7);
+        let sp = 1 + rng.below(24) as usize;
+        let f = [1usize, 3, 5][rng.below(3) as usize];
+        let layer = if f == 1 {
+            Layer::pointwise(&format!("pw{i}"), sp, sp, k as usize, c as usize)
+        } else {
+            Layer::conv2d(&format!("c{i}"), sp, sp, k as usize, c as usize, f, f, 1)
+        };
+        let sys = &systems[rng.below(4) as usize];
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        let sparsity = rng.below(10) as f64 / 10.0;
+        for spm in candidates(&layer, sys) {
+            let t = tile(&layer, sys, &spm);
+            for p in ALL_POLICIES {
+                let b = lower_bound(&layer, sys, &tech, &t, p, sparsity);
+                let e = evaluate(&layer, sys, &tech, &spm, p, sparsity);
+                assert!(
+                    b.energy_fj <= e.total_energy_fj() && b.time_ns <= e.time_ns,
+                    "bound above actual: {layer:?} on {} ({p:?})",
+                    sys.name
+                );
             }
         }
     }

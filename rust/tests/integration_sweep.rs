@@ -1,13 +1,16 @@
 //! Integration: the sharded full-grid sweep — shard determinism (the
-//! Pareto frontier must not depend on the shard count), cache
-//! correctness against the uncached DSE, and the survey-grid builder.
+//! Pareto frontier must not depend on the shard count, including over
+//! the widened cells × sparsity axes), cache correctness against the
+//! uncached DSE, the survey-grid builder, and warm starts from the
+//! persistent cost cache.
 
 use imcsim::arch::table2_systems;
 use imcsim::dse::{
-    search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES,
+    search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use imcsim::sweep::{
-    merge_summaries, run_sweep, CostCache, SweepGrid, SweepOptions, DEFAULT_GRID_CELLS,
+    load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CostCache,
+    SweepGrid, SweepOptions, DEFAULT_GRID_CELLS,
 };
 use imcsim::workload::{deep_autoencoder, ds_cnn};
 
@@ -18,6 +21,26 @@ fn small_grid() -> SweepGrid {
     SweepGrid {
         systems: table2_systems().into_iter().take(2).collect(),
         networks: vec![deep_autoencoder(), ds_cnn()],
+        sparsities: vec![DEFAULT_SPARSITY],
+        objectives: ALL_OBJECTIVES.to_vec(),
+    }
+}
+
+/// The widened axes: the same two designs instantiated at two SRAM-cell
+/// budgets × two sparsity levels.
+fn widened_grid() -> SweepGrid {
+    let mut systems = Vec::new();
+    for sys in table2_systems().into_iter().take(2) {
+        for cells in [DEFAULT_GRID_CELLS, DEFAULT_GRID_CELLS / 4] {
+            let mut s = sys.clone().normalized_to_cells(cells);
+            s.name = format!("{}@{cells}c", sys.name);
+            systems.push(s);
+        }
+    }
+    SweepGrid {
+        systems,
+        networks: vec![ds_cnn()],
+        sparsities: vec![0.3, 0.8],
         objectives: ALL_OBJECTIVES.to_vec(),
     }
 }
@@ -29,6 +52,8 @@ fn points_equal(a: &imcsim::sweep::SweepSummary, b: &imcsim::sweep::SweepSummary
         assert_eq!(x.design, y.design);
         assert_eq!(x.network, y.network);
         assert_eq!(x.objective, y.objective);
+        assert_eq!(x.cells, y.cells);
+        assert_eq!(x.sparsity.to_bits(), y.sparsity.to_bits());
         // bit-identical: same deterministic arithmetic on both paths
         assert_eq!(x.energy_fj.to_bits(), y.energy_fj.to_bits());
         assert_eq!(x.time_ns.to_bits(), y.time_ns.to_bits());
@@ -57,6 +82,106 @@ fn pareto_frontier_identical_across_shard_counts() {
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
     }
+}
+
+#[test]
+fn shard_determinism_holds_on_widened_cells_sparsity_axes() {
+    let grid = widened_grid();
+    assert_eq!(grid.n_tasks(), 4 * 1 * 2 * 3);
+    let single = run_sweep(&grid, &SweepOptions::default());
+    assert_eq!(single.points.len(), grid.n_tasks());
+    // both budgets and both sparsity levels appear in the points
+    let mut cells: Vec<usize> = single.points.iter().map(|p| p.cells).collect();
+    cells.sort_unstable();
+    cells.dedup();
+    assert!(cells.len() >= 2, "cell budgets collapsed: {cells:?}");
+    let mut sp: Vec<u64> = single.points.iter().map(|p| p.sparsity.to_bits()).collect();
+    sp.sort_unstable();
+    sp.dedup();
+    assert_eq!(sp.len(), 2);
+    // frontiers are per-(network, sparsity) in multi-sparsity summaries
+    assert_eq!(single.frontiers.len(), 2);
+
+    for shards in [2, 5] {
+        let parts: Vec<_> = (0..shards)
+            .map(|k| {
+                let opts = SweepOptions {
+                    shards,
+                    shard_index: Some(k),
+                    threads: 2,
+                    ..Default::default()
+                };
+                run_sweep(&grid, &opts)
+            })
+            .collect();
+        let merged = merge_summaries(&parts);
+        points_equal(&single, &merged);
+        assert_eq!(single.frontiers, merged.frontiers);
+    }
+}
+
+#[test]
+fn warm_cache_file_reproduces_cold_run_with_full_hits() {
+    let grid = small_grid();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("imcsim_sweep_cache_{}.json", std::process::id()));
+
+    let cold_cache = CostCache::new();
+    let cold = run_sweep_with_cache(&grid, &SweepOptions::default(), &cold_cache);
+    assert!(cold.cache.misses > 0);
+    save_cache(&cold_cache, &path).unwrap();
+
+    let warm_cache = CostCache::new();
+    let loaded = load_cache_into(&path, &warm_cache).expect("cache file loads");
+    assert_eq!(loaded, cold_cache.stats().entries);
+    let warm = run_sweep_with_cache(&grid, &SweepOptions::default(), &warm_cache);
+
+    // the warm run answers every lookup from disk: 100 % hit rate
+    assert_eq!(warm.cache.misses, 0, "warm run missed: {:?}", warm.cache);
+    assert_eq!(warm.cache.lookups(), cold.cache.lookups());
+    assert!((warm.cache.hit_rate() - 1.0).abs() < 1e-12);
+    // and reproduces the cold run's grid points bit-for-bit
+    points_equal(&cold, &warm);
+    assert_eq!(cold.frontiers, warm.frontiers);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sweep_reports_bound_pruning() {
+    let grid = small_grid();
+    let s = run_sweep(&grid, &SweepOptions::default());
+    assert!(
+        s.cache.pruned > 0,
+        "expected the admissible bound to prune candidates: {:?}",
+        s.cache
+    );
+    assert!(s.cache.evaluated > 0);
+    assert!(
+        s.cache.candidates() * 5 >= s.cache.evaluated * 6,
+        "prune reduction below 1.2x: {} candidates, {} evaluated",
+        s.cache.candidates(),
+        s.cache.evaluated
+    );
+
+    // Multi-macro systems running conv-heavy networks carry the wide,
+    // reload-punishing mapping spaces the bound is for — the mix that
+    // dominates the default survey grid. There the reduction must clear
+    // the 2x acceptance bar (the sweep_grid bench reports the same
+    // ratio for the full default grid).
+    let systems = table2_systems();
+    let multi = SweepGrid {
+        systems: vec![systems[1].clone(), systems[3].clone()],
+        networks: vec![imcsim::workload::resnet8(), imcsim::workload::mobilenet_v1()],
+        sparsities: vec![DEFAULT_SPARSITY],
+        objectives: ALL_OBJECTIVES.to_vec(),
+    };
+    let m = run_sweep(&multi, &SweepOptions::default());
+    assert!(
+        m.cache.candidates() >= 2 * m.cache.evaluated,
+        "multi-macro prune reduction below 2x: {} candidates, {} evaluated",
+        m.cache.candidates(),
+        m.cache.evaluated
+    );
 }
 
 #[test]
