@@ -10,7 +10,7 @@ use imcsim::dse::{
     ALL_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use imcsim::model::TechParams;
-use imcsim::sweep::{run_sweep, CostCache, SweepGrid, SweepOptions};
+use imcsim::sweep::{run_sweep, CostCache, PrecisionPoint, SweepGrid, SweepOptions};
 use imcsim::util::bench::{report_metric, Bench};
 use imcsim::workload::{deep_autoencoder, ds_cnn, Layer};
 
@@ -60,6 +60,7 @@ fn main() {
     let grid = SweepGrid {
         systems: systems.clone(),
         networks: vec![deep_autoencoder(), ds_cnn()],
+        precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
         objectives: ALL_OBJECTIVES.to_vec(),
     };

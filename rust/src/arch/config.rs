@@ -6,6 +6,9 @@
 //! ```toml
 //! name = "aimc_large"
 //! n_macros = 1
+//! # optional: re-quantize the macro below to another (weight x act)
+//! # operating point, re-deriving the converter resolutions
+//! # precision = "2x8"
 //!
 //! [macro]
 //! name = "aimc_1152x256"
@@ -33,7 +36,7 @@ use std::path::Path;
 
 use crate::util::toml_lite::{self, Value};
 
-use super::imc_macro::{ImcFamily, ImcMacro};
+use super::imc_macro::{ImcFamily, ImcMacro, Precision};
 use super::memory::{MemoryHierarchy, MemoryLevel, Operand};
 use super::system::ImcSystem;
 
@@ -175,10 +178,23 @@ fn parse_hierarchy(t: &Value, path: &str) -> Result<MemoryHierarchy, ConfigError
     Ok(MemoryHierarchy { levels })
 }
 
-/// Parse an `ImcSystem` from TOML text.
+/// Parse an `ImcSystem` from TOML text. A top-level `precision = "WxA"`
+/// key re-quantizes the parsed macro to that operating point (see
+/// [`ImcMacro::requantized`]); omitting it keeps the macro's native
+/// precision.
 pub fn system_from_toml(text: &str, origin: &str) -> Result<ImcSystem, ConfigError> {
     let root = toml_lite::parse(text).map_err(|e| perr(origin, e.to_string()))?;
-    let imc = parse_macro(req(&root, "macro", origin)?, origin)?;
+    let mut imc = parse_macro(req(&root, "macro", origin)?, origin)?;
+    if let Some(v) = root.get("precision") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| perr(origin, "'precision' must be a string like \"4x8\""))?;
+        let p: Precision = s.parse().map_err(|e: String| perr(origin, e))?;
+        imc = imc.requantized(p).map_err(|message| ConfigError::Invalid {
+            path: origin.to_string(),
+            message,
+        })?;
+    }
     let hierarchy = match root.get("hierarchy") {
         Some(h) => parse_hierarchy(h, origin)?,
         None => MemoryHierarchy::edge_default(imc.tech_nm),
@@ -258,6 +274,35 @@ mod tests {
         let s = system_from_toml(&text, "test").unwrap();
         assert_eq!(s.hierarchy.levels.len(), 1);
         assert_eq!(s.hierarchy.levels[0].name, "l1");
+    }
+
+    /// Insert a top-level `precision` key (it must precede `[macro]` —
+    /// TOML keys after a table header belong to that table).
+    fn with_precision(p: &str) -> String {
+        GOOD.replace("n_macros = 1", &format!("n_macros = 1\n        precision = \"{p}\""))
+    }
+
+    #[test]
+    fn precision_override_requantizes_macro() {
+        let s = system_from_toml(&with_precision("2x8"), "test").unwrap();
+        assert_eq!(s.imc.weight_bits, 2);
+        assert_eq!(s.imc.act_bits, 8);
+        // converters re-derived: dac clamp no-op, slack-preserving adc
+        assert_eq!((s.imc.dac_res, s.imc.adc_res), (4, 8));
+        assert_eq!(s.imc.d1(), 128);
+    }
+
+    #[test]
+    fn precision_override_rejects_bad_values() {
+        assert!(matches!(
+            system_from_toml(&with_precision("eight"), "test").unwrap_err(),
+            ConfigError::Parse { .. }
+        ));
+        // 3-bit weight slices do not pack into 256 columns
+        assert!(matches!(
+            system_from_toml(&with_precision("3x8"), "test").unwrap_err(),
+            ConfigError::Invalid { .. }
+        ));
     }
 
     #[test]

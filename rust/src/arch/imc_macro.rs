@@ -4,6 +4,14 @@
 //! (R × C cells), operand precisions, converter resolutions and operating
 //! point. All analytical-model quantities (D1, D2, bit-serial slice
 //! count, …) derive from it.
+//!
+//! Precision is a first-class operating-point descriptor here:
+//! [`Precision`] names a (weight × activation) bit-width pair and
+//! [`ImcMacro::requantized`] re-instantiates a macro at a different
+//! pair — re-deriving the converter resolutions from the model-side
+//! rules in [`crate::model::adc`] / [`crate::model::dac`] rather than
+//! rescaling any output numbers (see `docs/COST_MODEL.md` for the
+//! contract).
 
 /// Analog vs digital in-memory computing (paper §II-B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -28,6 +36,75 @@ impl ImcFamily {
 impl std::fmt::Display for ImcFamily {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())
+    }
+}
+
+/// A (weight × activation) operand bit-width pair — one precision
+/// operating point of a macro. The canonical text form is `"WxA"` with
+/// weights first: `"2x8"` means 2-bit weights × 8-bit activations.
+///
+/// ```
+/// use imcsim::arch::Precision;
+///
+/// let p: Precision = "2x8".parse().unwrap();
+/// assert_eq!((p.weight_bits, p.act_bits), (2, 8));
+/// assert_eq!(p.to_string(), "2x8");
+/// assert!("0x8".parse::<Precision>().is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Precision {
+    /// Weight operand bit-width B_w.
+    pub weight_bits: u32,
+    /// Activation operand bit-width B_a.
+    pub act_bits: u32,
+}
+
+impl Precision {
+    pub fn new(weight_bits: u32, act_bits: u32) -> Self {
+        Precision {
+            weight_bits,
+            act_bits,
+        }
+    }
+
+    /// Sanity bounds: integer DNN inference uses 1–16-bit operands.
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, bits) in [("weight", self.weight_bits), ("activation", self.act_bits)] {
+            if !(1..=16).contains(&bits) {
+                return Err(format!("{what} precision {bits} outside 1..=16 bits"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let (w, a) = s
+            .split_once('x')
+            .ok_or_else(|| format!("precision must be WxA, e.g. 4x8 (got '{s}')"))?;
+        let weight_bits: u32 = w
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad weight bits in precision '{s}'"))?;
+        let act_bits: u32 = a
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad activation bits in precision '{s}'"))?;
+        let p = Precision {
+            weight_bits,
+            act_bits,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.weight_bits, self.act_bits)
     }
 }
 
@@ -72,9 +149,11 @@ impl ImcMacro {
     }
 
     /// Bit-serial input slices per full-precision activation
-    /// (`ceil(B_a / DAC_res)`), i.e. `CC_BS` per activation.
+    /// (`ceil(B_a / DAC_res)`), i.e. `CC_BS` per activation. Delegates
+    /// to [`crate::model::dac::cycles_per_activation`] — the single
+    /// source of the slicing rule.
     pub fn n_slices(&self) -> u32 {
-        self.act_bits.div_ceil(self.dac_res)
+        crate::model::dac::cycles_per_activation(self.act_bits, self.dac_res)
     }
 
     /// SRAM cells in the array.
@@ -115,6 +194,64 @@ impl ImcMacro {
             ImcFamily::Aimc => self.d2() as u64 * self.n_slices() as u64,
             ImcFamily::Dimc => 0,
         }
+    }
+
+    /// The macro's (weight × activation) precision operating point.
+    pub fn precision(&self) -> Precision {
+        Precision {
+            weight_bits: self.weight_bits,
+            act_bits: self.act_bits,
+        }
+    }
+
+    /// Re-quantize this macro to precision `p`, re-deriving the
+    /// converter operating point instead of rescaling any cost numbers:
+    ///
+    /// * the weight bit-slices per operand change, so D1 = C / B_w
+    ///   shrinks or grows with the weight precision (the array must be
+    ///   able to pack an integer number of operands per row);
+    /// * the DAC/input-driver resolution is clamped to the new
+    ///   activation width ([`crate::model::dac::resolution_for`]), which
+    ///   in turn re-derives the bit-serial slice count
+    ///   `ceil(B_a / DAC_res)`;
+    /// * the AIMC ADC resolution shifts with the input-slice width under
+    ///   the design's preserved quantization slack
+    ///   ([`crate::model::adc::requantized_resolution`]); DIMC stays
+    ///   converter-free.
+    ///
+    /// Geometry, voltage, node, row multiplexing and ADC sharing are
+    /// untouched — a re-quantized macro occupies the same SRAM cells.
+    /// `Err` means the macro cannot realize `p` (the validity filter the
+    /// sweep's precision axis relies on). Re-quantizing to the native
+    /// precision is the identity.
+    pub fn requantized(&self, p: Precision) -> Result<ImcMacro, String> {
+        p.validate()?;
+        if p == self.precision() {
+            return Ok(self.clone());
+        }
+        if self.cols % p.weight_bits as usize != 0 {
+            return Err(format!(
+                "{}: cannot realize {}b weights — cols ({}) is not a multiple of the weight bit-slices",
+                self.name, p.weight_bits, self.cols
+            ));
+        }
+        let dac_res = crate::model::dac::resolution_for(self.dac_res, p.act_bits);
+        let adc_res = match self.family {
+            ImcFamily::Aimc => {
+                crate::model::adc::requantized_resolution(self.adc_res, self.dac_res, dac_res)
+            }
+            ImcFamily::Dimc => 0,
+        };
+        let m = ImcMacro {
+            name: format!("{}/w{}a{}", self.name, p.weight_bits, p.act_bits),
+            weight_bits: p.weight_bits,
+            act_bits: p.act_bits,
+            dac_res,
+            adc_res,
+            ..self.clone()
+        };
+        m.validate()?;
+        Ok(m)
     }
 
     /// Structural sanity checks; call after constructing from config.
@@ -244,6 +381,63 @@ mod tests {
         assert_eq!(m.d2(), 64);
         assert_eq!(m.cycles_per_mvm(), 16); // 4 slices x 4 mux steps
         assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn precision_parses_and_roundtrips() {
+        let p: Precision = "8x4".parse().unwrap();
+        assert_eq!(p, Precision::new(8, 4));
+        assert_eq!(p.to_string(), "8x4");
+        assert!("8".parse::<Precision>().is_err());
+        assert!("ax4".parse::<Precision>().is_err());
+        assert!("4x17".parse::<Precision>().is_err());
+        assert!("0x4".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn requantize_native_precision_is_identity() {
+        let m = aimc();
+        let same = m.requantized(m.precision()).unwrap();
+        assert_eq!(same, m);
+    }
+
+    #[test]
+    fn requantize_rederives_converters_not_outputs() {
+        // aimc(): 4b/4b, dac 4, adc 8
+        let m = aimc();
+        // wider weights: D1 shrinks, converters untouched (clamp is a
+        // no-op, slice width unchanged)
+        let w8 = m.requantized(Precision::new(8, 4)).unwrap();
+        assert_eq!(w8.d1(), m.d1() / 2);
+        assert_eq!((w8.dac_res, w8.adc_res), (4, 8));
+        assert_eq!(w8.n_cells(), m.n_cells());
+        // narrower activations: the 4b DAC runs as a 2b DAC, and the ADC
+        // sheds the two bits of input-slice dynamic range
+        let a2 = m.requantized(Precision::new(4, 2)).unwrap();
+        assert_eq!((a2.dac_res, a2.adc_res), (2, 6));
+        assert_eq!(a2.n_slices(), 1);
+        // wider activations: slice width capped by the hardware DAC, so
+        // the slice count grows instead and the ADC stays put
+        let a8 = m.requantized(Precision::new(4, 8)).unwrap();
+        assert_eq!((a8.dac_res, a8.adc_res), (4, 8));
+        assert_eq!(a8.n_slices(), 2);
+        // DIMC stays converter-free and bit-serial
+        let d8 = dimc().requantized(Precision::new(8, 8)).unwrap();
+        assert_eq!((d8.dac_res, d8.adc_res), (1, 0));
+        assert_eq!(d8.n_slices(), 8);
+        assert_eq!(d8.d1(), dimc().d1() / 2);
+        assert!(d8.validate().is_ok());
+    }
+
+    #[test]
+    fn requantize_rejects_unrealizable_weight_widths() {
+        // 256 columns cannot pack 3-bit weight slices evenly
+        assert!(aimc().requantized(Precision::new(3, 4)).is_err());
+        // but a divisible odd width is fine on a 255-column array
+        let mut m = dimc();
+        m.cols = 255;
+        m.weight_bits = 5;
+        assert!(m.requantized(Precision::new(3, 4)).is_ok());
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod memory;
 pub mod system;
 
 pub use config::{load_system, load_system_dir, system_from_toml, ConfigError};
-pub use imc_macro::{ImcFamily, ImcMacro};
+pub use imc_macro::{ImcFamily, ImcMacro, Precision};
 pub use memory::{MemoryHierarchy, MemoryLevel, Operand, ALL_OPERANDS};
 pub use system::ImcSystem;
 

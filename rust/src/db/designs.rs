@@ -12,7 +12,7 @@
 //! are best-effort transcriptions from the papers. The validation
 //! experiment (Fig. 5) compares the unified model against these values.
 
-use crate::arch::{ImcFamily, ImcMacro};
+use crate::arch::{ImcFamily, ImcMacro, Precision};
 
 /// Where a reported number comes from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +70,21 @@ impl SurveyEntry {
             vdd: self.vdd,
             tech_nm: self.tech_nm,
         }
+    }
+
+    /// Whether this design can realize precision `p` (see
+    /// [`ImcMacro::requantized`] for the validity conditions).
+    pub fn supports_precision(&self, p: Precision) -> bool {
+        self.to_macro_at(p).is_some()
+    }
+
+    /// Instantiate the architectural template *re-quantized* to `p`:
+    /// the published operating point with the weight/activation widths
+    /// replaced and the converter resolutions re-derived — not a
+    /// rescaling of the reported numbers. `None` when the macro cannot
+    /// realize `p` (the sweep's precision-axis validity filter).
+    pub fn to_macro_at(&self, p: Precision) -> Option<ImcMacro> {
+        self.to_macro().requantized(p).ok()
     }
 }
 
@@ -299,6 +314,39 @@ mod tests {
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap();
         assert_eq!(best_dens_dimc.0.chip, "fujiwara_isscc22");
+    }
+
+    #[test]
+    fn requantized_survey_macros_stay_valid() {
+        // every power-of-two weight width divides the surveyed arrays'
+        // column counts, so the standard precision grid instantiates the
+        // whole survey; re-derived macros must all validate
+        for e in survey() {
+            for (w, a) in [(2u32, 8u32), (4, 8), (8, 8), (8, 2)] {
+                let p = Precision::new(w, a);
+                assert!(e.supports_precision(p), "{} cannot realize {p}", e.chip);
+                let m = e.to_macro_at(p).unwrap();
+                m.validate().unwrap_or_else(|err| panic!("{}@{p}: {err}", e.chip));
+                assert_eq!((m.weight_bits, m.act_bits), (w, a));
+                assert_eq!(m.n_cells(), e.to_macro().n_cells());
+            }
+        }
+    }
+
+    #[test]
+    fn unrealizable_precisions_are_filtered() {
+        // 3-bit weight slices only pack into the one 384-column array
+        let p = Precision::new(3, 4);
+        let supported: Vec<&'static str> = survey()
+            .iter()
+            .filter(|e| e.supports_precision(p))
+            .map(|e| e.chip)
+            .collect();
+        assert_eq!(supported, vec!["su_isscc21"]);
+        assert!(survey()
+            .iter()
+            .filter(|e| !e.supports_precision(p))
+            .all(|e| e.to_macro_at(p).is_none()));
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod survey_eval;
 
 pub use designs::{aimc_survey, dimc_survey, survey, Provenance, SurveyEntry};
 pub use survey_eval::{
-    fig4_points, validate_entry, validation_points, validation_stats, SurveyPoint,
-    SURVEY_SPARSITY,
+    fig4_points, survey_macros_at, validate_entry, validation_points, validation_stats,
+    SurveyPoint, SURVEY_SPARSITY,
 };

@@ -1,6 +1,9 @@
-//! Derived survey metrics (the Fig. 4 axes) and the model-validation
-//! sweep over the whole database (Fig. 5, §V).
+//! Derived survey metrics (the Fig. 4 axes), the model-validation sweep
+//! over the whole database (Fig. 5, §V), and re-quantized survey
+//! instantiation (the CLI's precision-realizability report; shares its
+//! core with the sweep grid's own skip logic).
 
+use crate::arch::{ImcMacro, Precision};
 use crate::model::{validate_design, ValidationPoint, ValidationStats};
 
 use super::designs::{survey, SurveyEntry};
@@ -34,6 +37,23 @@ pub fn fig4_points() -> Vec<SurveyPoint> {
             vdd: e.vdd,
             tops_w: e.reported_tops_w,
             tops_mm2: e.reported_tops_mm2,
+        })
+        .collect()
+}
+
+/// The survey's architectural templates, re-instantiated at `precision`
+/// (`None` = each design's published native operating point). Entries
+/// that cannot realize the precision are skipped. Both this filter and
+/// the sweep's per-group skip (`sweep::grid::PrecisionPoint::apply`)
+/// delegate to the same [`crate::arch::ImcMacro::requantized`], so the
+/// "supported" sets cannot diverge; callers must still not assume the
+/// returned set covers the whole survey.
+pub fn survey_macros_at(precision: Option<Precision>) -> Vec<ImcMacro> {
+    survey()
+        .iter()
+        .filter_map(|e| match precision {
+            None => Some(e.to_macro()),
+            Some(p) => e.to_macro_at(p),
         })
         .collect()
 }
@@ -80,6 +100,18 @@ mod tests {
         assert!(pts.len() >= 20);
         assert!(pts.iter().any(|p| p.family == "AIMC"));
         assert!(pts.iter().any(|p| p.family == "DIMC"));
+    }
+
+    #[test]
+    fn requantized_survey_filters_and_relabels() {
+        let native = survey_macros_at(None);
+        assert_eq!(native.len(), survey().len());
+        let int8 = survey_macros_at(Some(Precision::new(8, 8)));
+        assert_eq!(int8.len(), native.len(), "8x8 must instantiate the whole survey");
+        assert!(int8.iter().all(|m| (m.weight_bits, m.act_bits) == (8, 8)));
+        // 3-bit weights only fit one array — the filter must shrink the set
+        let odd = survey_macros_at(Some(Precision::new(3, 4)));
+        assert!(odd.len() < native.len() && !odd.is_empty(), "len {}", odd.len());
     }
 
     #[test]

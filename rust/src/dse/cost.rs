@@ -157,6 +157,14 @@ impl CandidateBound {
 /// The bound is therefore very tight — for spill-free candidates it
 /// *equals* the full evaluation bit-for-bit — while skipping the
 /// [`MappingEval`] materialization on the losers.
+///
+/// The guarantee is precision-independent: every term reads the
+/// operand widths and converter resolutions from the macro itself
+/// (`weight_bits`, `act_bits`, `dac_res`, `adc_res`), so a re-quantized
+/// design is just another macro and the dropped-terms argument is
+/// untouched — the bound stays admissible at every precision point (see
+/// `docs/COST_MODEL.md` §admissibility; locked down by tests here and
+/// in `tests/integration_dse.rs`).
 pub fn lower_bound(
     layer: &Layer,
     sys: &ImcSystem,
@@ -361,6 +369,43 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lower_bound_admissible_under_precision_requantization() {
+        use crate::arch::Precision;
+        use crate::mapping::ALL_POLICIES;
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        let bases = [
+            sys(ImcFamily::Aimc, 1152, 256, 1),
+            sys(ImcFamily::Dimc, 48, 4, 192),
+        ];
+        let mut checked = 0;
+        for base in &bases {
+            for (w, a) in [(2u32, 8u32), (8, 8), (8, 2), (1, 4)] {
+                let Ok(imc) = base.imc.requantized(Precision::new(w, a)) else {
+                    continue; // unrealizable pair: the grid would skip it
+                };
+                let s = ImcSystem { imc, ..base.clone() };
+                let tech = TechParams::for_node(s.imc.tech_nm);
+                for sp in candidates(&l, &s) {
+                    let t = tile(&l, &s, &sp);
+                    for p in ALL_POLICIES {
+                        let b = lower_bound(&l, &s, &tech, &t, p, DEFAULT_SPARSITY);
+                        let e = evaluate(&l, &s, &tech, &sp, p, DEFAULT_SPARSITY);
+                        assert!(
+                            b.energy_fj <= e.total_energy_fj(),
+                            "{w}x{a}/{p:?}: energy bound {} > actual {}",
+                            b.energy_fj,
+                            e.total_energy_fj()
+                        );
+                        assert!(b.time_ns <= e.time_ns, "{w}x{a}/{p:?}: time bound");
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 0, "no realizable precision points exercised");
     }
 
     #[test]

@@ -1,5 +1,26 @@
 //! Design-space exploration: reuse analysis, cost evaluation, mapping
 //! search and Pareto utilities (the ZigZag-integration of paper §VI).
+//!
+//! The search is *streaming and bound-pruned*: [`mapping::MappingSpace`]
+//! yields (spatial × temporal) candidates lazily, [`cost::lower_bound`]
+//! attaches an admissible per-objective lower bound to each — the
+//! evaluator's own arithmetic minus only the non-negative partial-sum
+//! spill terms, so bounds never exceed actuals *numerically* — and
+//! [`engine::search_layer_all`] keeps per-objective incumbents,
+//! skipping the full [`cost::evaluate`] for any candidate whose bound
+//! cannot beat them. Admissibility makes the pruned optima bit-identical
+//! to the exhaustive reference ([`engine::search_layer_all_unpruned`]),
+//! at every sparsity and every precision operating point; the equations
+//! and the admissibility argument are written down in
+//! `docs/COST_MODEL.md`.
+//!
+//! One search pass serves all three [`engine::Objective`]s, which is
+//! what the grid sweep's memoized cost cache
+//! ([`crate::sweep::CostCache`]) stores — keyed on macro geometry
+//! (including operand precisions and converter resolutions), hierarchy,
+//! layer shape, sparsity and policy restriction.
+//!
+//! [`mapping::MappingSpace`]: crate::mapping::MappingSpace
 
 pub mod cost;
 pub mod engine;

@@ -9,6 +9,14 @@
 /// all-pairs check a hot spot): walk the points in (energy, latency)
 /// order; a point is dominated iff a strictly-cheaper point was at
 /// least as fast, or an equal-energy point was strictly faster.
+///
+/// ```
+/// use imcsim::dse::pareto_front;
+///
+/// // minimizing (energy, latency): (3.0, 6.0) loses to (2.0, 5.0)
+/// let points = [(1.0, 10.0), (2.0, 5.0), (3.0, 6.0), (0.5, 20.0)];
+/// assert_eq!(pareto_front(&points), vec![0, 1, 3]);
+/// ```
 pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
     idx.sort_by(|&a, &b| {

@@ -46,5 +46,5 @@ pub mod runtime;
 pub mod sweep;
 pub mod workload;
 
-pub use arch::{ImcFamily, ImcMacro, ImcSystem};
+pub use arch::{ImcFamily, ImcMacro, ImcSystem, Precision};
 pub use model::{EnergyBreakdown, MacroOpCounts, TechParams};

@@ -23,7 +23,7 @@ use imcsim::runtime::{default_artifacts_dir, load_manifest};
 use imcsim::runtime::{Engine, Kind};
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
-    CostCache, SweepGrid, SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,
+    CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,
 };
 use imcsim::util::cli::Args;
 #[cfg(feature = "xla")]
@@ -50,16 +50,23 @@ Exploration & serving:
       [--objective energy|latency|edp] [--policy ws|os|is] [--sparsity F]
                        per-layer optimal mappings for one network
   sweep [--shards N] [--shard-index K] [--cells N[,N...]]
-      [--sparsity F[,F...]] [--cache-file FILE] [--csv FILE]
+      [--precision P[,P...]] [--sparsity F[,F...]] [--cache-file FILE]
+      [--csv FILE]
                        full-grid DSE sweep: every surveyed design (per
                        SRAM-cell budget) x every tinyMLPerf network x
-                       every sparsity level x every objective, streamed
-                       through the bound-pruned mapping search and a
-                       memoized cost cache; prints per-network Pareto
+                       every precision point x every sparsity level x
+                       every objective, streamed through the
+                       bound-pruned mapping search and a memoized cost
+                       cache; prints per-(network, precision) Pareto
                        frontiers plus evaluated/pruned candidate counts.
-                       --shards/--shard-index split the grid
+                       --precision takes WxA weight-x-activation pairs
+                       (e.g. 2x8,4x8,8x8) and/or 'native'; each design
+                       is re-quantized to each point (converter
+                       resolutions re-derived, unrealizable pairs
+                       skipped). --shards/--shard-index split the grid
                        deterministically across CI jobs or machines;
-                       --cache-file persists the cost cache across runs.
+                       --cache-file persists the cost cache across runs
+                       (version-tagged; stale schemas are rejected).
   sweepmerge [--csv FILE] SHARD.csv [SHARD.csv ...]
                        merge shard CSVs (written by `sweep --csv`) back
                        into the full-grid summary and Pareto frontiers
@@ -316,7 +323,9 @@ fn cmd_sweep(args: &Args) -> i32 {
     // rather than silently falling back to defaults: a CI matrix job
     // with an empty or misspelled shard variable must not quietly run
     // the whole grid.
-    const KNOWN: [&str; 6] = ["shards", "shard-index", "cells", "sparsity", "csv", "cache-file"];
+    const KNOWN: [&str; 7] = [
+        "shards", "shard-index", "cells", "precision", "sparsity", "csv", "cache-file",
+    ];
     if let Some(unknown) = args
         .options
         .keys()
@@ -325,7 +334,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     {
         eprintln!(
             "unknown option --{unknown} (sweep takes --shards, --shard-index, \
-             --cells, --sparsity, --csv, --cache-file)"
+             --cells, --precision, --sparsity, --csv, --cache-file)"
         );
         return 2;
     }
@@ -360,6 +369,16 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         },
     };
+    let precisions: Vec<PrecisionPoint> = match args.opt("precision") {
+        None => vec![PrecisionPoint::Native],
+        Some(raw) => match parse_list::<PrecisionPoint>(raw, "precision") {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e} (--precision takes WxA pairs like 2x8,4x8,8x8, or 'native')");
+                return 2;
+            }
+        },
+    };
     let sparsities: Vec<f64> = match args.opt("sparsity") {
         None => vec![imcsim::dse::DEFAULT_SPARSITY],
         Some(raw) => match parse_list::<f64>(raw, "sparsity") {
@@ -371,13 +390,29 @@ fn cmd_sweep(args: &Args) -> i32 {
         },
     };
 
-    let grid = SweepGrid::survey_tinymlperf_grid(&cells, &sparsities);
+    // Per-precision realizability report (the db-level validity filter;
+    // same ImcMacro::requantized core the grid's per-group skip uses)
+    let n_survey = imcsim::db::survey().len();
+    for point in &precisions {
+        if let PrecisionPoint::Fixed(p) = point {
+            let realizable = imcsim::db::survey_macros_at(Some(*p)).len();
+            if realizable < n_survey {
+                println!(
+                    "precision {p}: {realizable}/{n_survey} survey designs can realize it \
+                     (the rest are skipped)"
+                );
+            }
+        }
+    }
+
+    let grid = SweepGrid::survey_tinymlperf_full(&cells, &precisions, &sparsities);
     println!(
-        "grid: {} designs ({} cell budgets) x {} networks x {} sparsities x {} objectives \
-         = {} tasks",
+        "grid: {} designs ({} cell budgets) x {} networks x {} precisions x {} sparsities \
+         x {} objectives = {} tasks (unrealizable design-precision pairs are skipped)",
         grid.systems.len(),
         cells.len(),
         grid.networks.len(),
+        grid.precisions.len(),
         grid.sparsities.len(),
         grid.objectives.len(),
         grid.n_tasks()
@@ -386,9 +421,16 @@ fn cmd_sweep(args: &Args) -> i32 {
     let cache = CostCache::new();
     let cache_file = args.opt("cache-file").map(PathBuf::from);
     if let Some(path) = &cache_file {
+        use imcsim::sweep::CacheLoadError;
         match load_cache_into(path, &cache) {
-            Some(n) => println!("cost cache: warmed {n} entries from {}", path.display()),
-            None => println!("cost cache: {} missing or stale — starting cold", path.display()),
+            Ok(n) => println!("cost cache: warmed {n} entries from {}", path.display()),
+            // no file yet is the normal first run, not an error
+            Err(CacheLoadError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => {
+                println!("cost cache: {} not found — starting cold", path.display())
+            }
+            // other errors name the cause explicitly (a pre-precision
+            // v1 file must say *why* it was refused)
+            Err(e) => println!("cost cache: starting cold — {}: {e}", path.display()),
         }
     }
 

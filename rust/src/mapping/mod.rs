@@ -1,5 +1,16 @@
 //! Spatial + temporal mapping of DNN layers onto IMC systems
 //! (paper §II-A dataflow concepts).
+//!
+//! [`space::MappingSpace`] streams the (spatial × temporal) candidate
+//! sequence lazily — most-parallel macro options first, temporal
+//! policies innermost — and is the *single* enumeration both the
+//! bound-pruned production search and the exhaustive reference walk, so
+//! their bit-for-bit equivalence is an invariant of the sequence, not
+//! of two implementations kept in sync by hand. The candidate set
+//! depends only on the layer shape and the system geometry (operand
+//! precisions enter through D1 = C / B_w), never on the sparsity or
+//! objective — which is what lets the sweep cache one search per
+//! (design, shape, options) key and reuse it across the whole grid.
 
 pub mod space;
 pub mod spatial;

@@ -186,6 +186,23 @@ impl Iterator for SpatialSpace {
 /// Lazy iterator over the full (spatial × temporal) mapping space of one
 /// layer, policies innermost — the streamed equivalent of the historical
 /// `for spatial { for policy { … } }` double loop.
+///
+/// ```
+/// use imcsim::arch::{ImcFamily, ImcMacro, ImcSystem};
+/// use imcsim::mapping::{MappingSpace, ALL_POLICIES};
+/// use imcsim::workload::Layer;
+///
+/// let imc = ImcMacro::new("m", ImcFamily::Dimc, 64, 256, 4, 4, 1, 0, 0.8, 22.0);
+/// let sys = ImcSystem::new("sys", imc, 4);
+/// let layer = Layer::conv2d("conv", 16, 16, 32, 16, 3, 3, 1);
+///
+/// let space: Vec<_> = MappingSpace::new(&layer, &sys, None).collect();
+/// // policies nest innermost, so the stream length is a whole number
+/// // of policy blocks
+/// assert!(!space.is_empty());
+/// assert_eq!(space.len() % ALL_POLICIES.len(), 0);
+/// assert_eq!(space[0].policy, ALL_POLICIES[0]);
+/// ```
 pub struct MappingSpace {
     spatials: SpatialSpace,
     policies: Vec<TemporalPolicy>,

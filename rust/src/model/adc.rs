@@ -24,6 +24,23 @@ pub fn conversion_energy_fj(adc_res: u32, vdd: f64) -> f64 {
     conversion_energy_fj_at(adc_res, vdd, K1_REF_NODE_NM)
 }
 
+/// ADC resolution re-derived for a re-quantized operating point (the
+/// precision-scaling rule documented in `docs/COST_MODEL.md`).
+///
+/// One conversion digitizes the bitline sum of up to D2 single-bit
+/// weight cells driven by a `dac_res`-bit input slice, so the
+/// full-precision requirement is `dac_res + ceil(log2 D2)` bits.
+/// Published designs under-provision that requirement by a fixed
+/// *slack* (they accept clipping/quantization noise); re-quantization
+/// preserves the slack. With the array geometry — and hence the D2
+/// term — unchanged, the resolution shifts 1:1 with the input-slice
+/// width and never drops below 1 bit. Weight precision does not enter:
+/// each bitline still carries single-bit weight slices, so the per-ADC
+/// dynamic range is weight-width independent.
+pub fn requantized_resolution(native_adc_res: u32, native_dac_res: u32, new_dac_res: u32) -> u32 {
+    (native_adc_res as i64 + new_dac_res as i64 - native_dac_res as i64).max(1) as u32
+}
+
 /// ADC area (µm²). SAR-style layout: comparator + capacitive DAC whose
 /// size doubles per bit, scaled quadratically with node. Calibrated so an
 /// 8-bit SAR in 28 nm occupies ~2 000 µm² (representative of the compact
@@ -78,6 +95,18 @@ mod tests {
         let a = conversion_energy_fj(8, 1.0);
         let b = conversion_energy_fj(8, 0.5);
         assert!((a / b - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn requantized_resolution_shifts_with_slice_width() {
+        // narrower input slices shed exactly their dynamic-range bits
+        assert_eq!(requantized_resolution(8, 4, 2), 6);
+        // unchanged slice width: identity
+        assert_eq!(requantized_resolution(8, 4, 4), 8);
+        // never below 1 bit
+        assert_eq!(requantized_resolution(1, 4, 1), 1);
+        // wider slices (hypothetical) add range bits
+        assert_eq!(requantized_resolution(5, 1, 2), 6);
     }
 
     #[test]

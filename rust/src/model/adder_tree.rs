@@ -38,6 +38,23 @@ pub fn full_adders_stage_sum(n_inputs: usize, input_bits: u32) -> f64 {
     total
 }
 
+/// 1-bit full adders of the *DIMC accumulation* tree: D2 first-stage
+/// inputs whose width is the weight precision. This is the term that
+/// makes DIMC pay adder-width energy when weights get wider — the
+/// digital counterpart of AIMC's ADC-resolution cost (precision
+/// contract, `docs/COST_MODEL.md`).
+pub fn accumulation_full_adders(d2: usize, weight_bits: u32) -> f64 {
+    full_adders(d2, weight_bits)
+}
+
+/// 1-bit full adders of the *AIMC shift-add recombination* tree: one
+/// `adc_res`-bit input per weight bit-slice (B_w inputs), so the
+/// recombination cost scales with both the weight precision and the
+/// re-derived ADC resolution.
+pub fn recombination_full_adders(weight_bits: u32, adc_res: u32) -> f64 {
+    full_adders(weight_bits as usize, adc_res)
+}
+
 /// Tree depth in adder stages.
 pub fn depth(n_inputs: usize) -> u32 {
     if n_inputs <= 1 {
@@ -76,6 +93,17 @@ mod tests {
         assert_eq!(full_adders(64, 4), 309.0);
         // N=B_w=4, B=ADC_res=8 (AIMC recombination): 8*4+4-8-2-1 = 25
         assert_eq!(full_adders(4, 8), 25.0);
+    }
+
+    #[test]
+    fn precision_wrappers_delegate_to_the_tree_sum() {
+        // the named trees are the same Eq. 10 kernel with the operand
+        // roles pinned down — bit-identical to the raw call
+        assert_eq!(accumulation_full_adders(256, 4), full_adders(256, 4));
+        assert_eq!(recombination_full_adders(4, 8), full_adders(4, 8));
+        // wider weights cost more in both families' trees
+        assert!(accumulation_full_adders(256, 8) > accumulation_full_adders(256, 4));
+        assert!(recombination_full_adders(8, 8) > recombination_full_adders(4, 8));
     }
 
     #[test]

@@ -45,12 +45,12 @@ pub fn periphery_area_um2(m: &ImcMacro) -> f64 {
             let adc_a = adc::area_um2(m.adc_res, m.tech_nm) * n_adc;
             let dac_a = dac::area_um2(m.dac_res, m.tech_nm) * n_dac;
             // shift-add recombination tree per operand column
-            let f = adder_tree::full_adders(m.weight_bits as usize, m.adc_res);
+            let f = adder_tree::recombination_full_adders(m.weight_bits, m.adc_res);
             let tree_a = f2_to_um2(GATE_F2, m.tech_nm) * f * super::tech::G_FA * m.d1() as f64;
             adc_a + dac_a + tree_a
         }
         ImcFamily::Dimc => {
-            let f = adder_tree::full_adders(m.d2(), m.weight_bits);
+            let f = adder_tree::accumulation_full_adders(m.d2(), m.weight_bits);
             f2_to_um2(GATE_F2, m.tech_nm) * f * super::tech::G_FA * m.d1() as f64
         }
     }

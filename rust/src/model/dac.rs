@@ -13,6 +13,23 @@ pub fn conversion_energy_fj(dac_res: u32, vdd: f64) -> f64 {
     K3_FJ * dac_res as f64 * vdd * vdd
 }
 
+/// DAC (input-driver) resolution at a re-quantized activation width:
+/// the slice width is fixed by the hardware, but can never exceed the
+/// activation precision it drives — a 4-bit DAC fed 2-bit activations
+/// runs as a 2-bit DAC (precision-scaling rule, `docs/COST_MODEL.md`).
+pub fn resolution_for(native_dac_res: u32, act_bits: u32) -> u32 {
+    native_dac_res.min(act_bits).max(1)
+}
+
+/// Bit-serial DAC conversion cycles per full-precision activation,
+/// `ceil(B_a / DAC_res)` — the `CC_BS` count per activation. Mirrors
+/// [`crate::arch::ImcMacro::n_slices`], which evaluates the same rule on
+/// the macro's own fields; activations wider than the slice pay extra
+/// cycles rather than extra converter resolution.
+pub fn cycles_per_activation(act_bits: u32, dac_res: u32) -> u32 {
+    act_bits.div_ceil(dac_res.max(1))
+}
+
 /// DAC area (µm²): resistor/current-steering ladder, linear in
 /// resolution, quadratic node scaling. Calibrated to ~35 µm² for a 4-bit
 /// row DAC at 28 nm (row-pitch-matched layouts in the surveyed designs).
@@ -43,6 +60,24 @@ mod tests {
         assert!((conversion_energy_fj(2, 1.0) - 88.0).abs() < 1e-12);
         // 1-bit input drive is a wordline driver, not a DAC
         assert_eq!(conversion_energy_fj(1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn requantized_resolution_clamps_to_activation_width() {
+        assert_eq!(resolution_for(4, 2), 2);
+        assert_eq!(resolution_for(4, 8), 4);
+        assert_eq!(resolution_for(1, 8), 1);
+        assert_eq!(resolution_for(2, 1), 1);
+    }
+
+    #[test]
+    fn slice_count_matches_macro_rule() {
+        use crate::arch::{ImcFamily, ImcMacro};
+        assert_eq!(cycles_per_activation(8, 4), 2);
+        assert_eq!(cycles_per_activation(8, 3), 3);
+        assert_eq!(cycles_per_activation(4, 4), 1);
+        let m = ImcMacro::new("d", ImcFamily::Dimc, 64, 256, 8, 8, 2, 0, 0.8, 22.0);
+        assert_eq!(cycles_per_activation(m.act_bits, m.dac_res), m.n_slices());
     }
 
     #[test]

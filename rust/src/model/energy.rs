@@ -200,7 +200,7 @@ pub fn macro_energy(m: &ImcMacro, t: &TechParams, ops: &MacroOpCounts) -> Energy
             // Eq. 9–10: shift-add recombination across B_w bitline ADC
             // results (N = B_w, B = ADC_res), one tree per used operand
             // column per cycle.
-            let f = adder_tree::full_adders(m.weight_bits as usize, m.adc_res);
+            let f = adder_tree::recombination_full_adders(m.weight_bits, m.adc_res);
             e.adder_tree_fj = t.c_gate_ff * G_FA * v2 * f * cols_used * cc_prech * act;
         }
         ImcFamily::Dimc => {
@@ -214,7 +214,7 @@ pub fn macro_energy(m: &ImcMacro, t: &TechParams, ops: &MacroOpCounts) -> Energy
             // Eq. 9–10: accumulation across D2 rows (N = D2, B = B_w),
             // one tree per used operand column, per compute cycle
             // (slices · row-mux steps per MVM).
-            let f = adder_tree::full_adders(m.d2(), m.weight_bits);
+            let f = adder_tree::accumulation_full_adders(m.d2(), m.weight_bits);
             let cc_acc = slices * mrows * mvms;
             let row_activity = (rows_used / (d2_phys * mrows)).min(1.0);
             e.adder_tree_fj =

@@ -7,6 +7,14 @@
 //! * [`area`] — cell + periphery area (Fig. 4 density axis).
 //! * [`latency`] — cycle time and peak throughput.
 //! * [`validation`] — model-vs-reported comparison (Fig. 5).
+//!
+//! Every equation, the constants behind it, the precision-scaling rules
+//! ([`adc::requantized_resolution`], [`dac::resolution_for`], the
+//! [`adder_tree`] width contract) and the mapping from paper figures to
+//! this repo's benches are written down in `docs/COST_MODEL.md` — treat
+//! that file as the model's contract: sweep caches key on these
+//! semantics, so a change here is a persistent-cache schema change
+//! ([`crate::sweep::SWEEP_CACHE_VERSION`]).
 
 pub mod adc;
 pub mod adder_tree;

@@ -1,6 +1,12 @@
 //! Regeneration of every table and figure in the paper's evaluation, as
 //! terminal text (+ CSV via `Table::to_csv`). Used by both the `imcsim`
-//! CLI and the bench harness.
+//! CLI and the bench harness: each `benches/figN_*.rs` bench times the
+//! renderer of the matching paper figure ([`fig1_text`] ↔ Fig. 1
+//! operator breakdown, [`fig4_text`] ↔ Fig. 4 survey scatter,
+//! [`fig5_text`] ↔ Fig. 5 validation, [`fig6_text`] ↔ Fig. 6 parameter
+//! fits, [`fig7_text`] ↔ Fig. 7 case study + Table II; Figs. 2–3 are
+//! concept drawings with nothing to compute). The figure-to-equation
+//! trail continues in `docs/COST_MODEL.md`.
 
 use crate::arch::{table2_systems, ImcFamily};
 use crate::db::{fig4_points, validation_points, validation_stats};

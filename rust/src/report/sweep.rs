@@ -7,7 +7,7 @@ use std::collections::HashSet;
 
 use crate::arch::ImcFamily;
 use crate::dse::Objective;
-use crate::sweep::{GridPoint, SweepSummary};
+use crate::sweep::{GridPoint, PrecisionPoint, SweepSummary};
 
 use super::ascii_plot::ScatterPlot;
 use super::table::Table;
@@ -16,6 +16,8 @@ fn point_row(p: &GridPoint) -> Vec<String> {
     vec![
         p.design.clone(),
         p.network.clone(),
+        // realized operand widths (native points show the published pair)
+        format!("{}x{}", p.weight_bits, p.act_bits),
         p.objective.to_string(),
         p.n_macros.to_string(),
         super::table::eng(p.cells as f64),
@@ -27,9 +29,9 @@ fn point_row(p: &GridPoint) -> Vec<String> {
     ]
 }
 
-const POINT_HEADERS: [&str; 10] = [
-    "design", "network", "objective", "macros", "cells", "spars", "E [uJ]", "t [us]", "TOP/s/W",
-    "util",
+const POINT_HEADERS: [&str; 11] = [
+    "design", "network", "prec", "objective", "macros", "cells", "spars", "E [uJ]", "t [us]",
+    "TOP/s/W", "util",
 ];
 
 /// Human-readable sweep summary: scope line, per-network Pareto
@@ -54,7 +56,9 @@ pub fn sweep_text(s: &SweepSummary) -> String {
                 s.points
                     .iter()
                     .filter(|p| {
-                        p.network == p0.network && p.sparsity.to_bits() == p0.sparsity.to_bits()
+                        p.network == p0.network
+                            && p.precision == p0.precision
+                            && p.sparsity.to_bits() == p0.sparsity.to_bits()
                     })
                     .count()
             }
@@ -120,10 +124,13 @@ pub fn sweep_text(s: &SweepSummary) -> String {
 }
 
 /// The sweep CSV column set; [`sweep_csv`] and [`parse_sweep_csv`] must
-/// stay inverses of each other over it.
-const CSV_HEADERS: [&str; 15] = [
-    "task", "design", "family", "network", "sparsity", "objective", "macros", "cells",
-    "energy_fj", "macro_fj", "time_ns", "edp_fj_ns", "tops_w", "util", "pareto",
+/// stay inverses of each other over it. `precision` is the grid-axis
+/// *setting* (`native` or a `WxA` pair); `weight_bits`/`act_bits` are
+/// the realized operand widths of the evaluated macro.
+const CSV_HEADERS: [&str; 18] = [
+    "task", "design", "family", "network", "precision", "weight_bits", "act_bits", "sparsity",
+    "objective", "macros", "cells", "energy_fj", "macro_fj", "time_ns", "edp_fj_ns", "tops_w",
+    "util", "pareto",
 ];
 
 /// Every evaluated grid point as CSV (canonical task order). Floats are
@@ -142,6 +149,9 @@ pub fn sweep_csv(s: &SweepSummary) -> String {
             p.design.clone(),
             p.family.to_string(),
             p.network.clone(),
+            p.precision.to_string(),
+            p.weight_bits.to_string(),
+            p.act_bits.to_string(),
             p.sparsity.to_string(),
             p.objective.to_string(),
             p.n_macros.to_string(),
@@ -190,7 +200,7 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             "DIMC" => ImcFamily::Dimc,
             _ => return Err(err("family")),
         };
-        let objective = match fields[5] {
+        let objective = match fields[8] {
             "energy" => Objective::Energy,
             "latency" => Objective::Latency,
             "edp" => Objective::Edp,
@@ -201,15 +211,20 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             design: fields[1].to_string(),
             family,
             network: fields[3].to_string(),
-            sparsity: fields[4].parse().map_err(|_| err("sparsity"))?,
+            precision: fields[4]
+                .parse::<PrecisionPoint>()
+                .map_err(|_| err("precision"))?,
+            weight_bits: fields[5].parse().map_err(|_| err("weight_bits"))?,
+            act_bits: fields[6].parse().map_err(|_| err("act_bits"))?,
+            sparsity: fields[7].parse().map_err(|_| err("sparsity"))?,
             objective,
-            n_macros: fields[6].parse().map_err(|_| err("macros"))?,
-            cells: fields[7].parse().map_err(|_| err("cells"))?,
-            energy_fj: fields[8].parse().map_err(|_| err("energy_fj"))?,
-            macro_fj: fields[9].parse().map_err(|_| err("macro_fj"))?,
-            time_ns: fields[10].parse().map_err(|_| err("time_ns"))?,
-            tops_per_watt: fields[12].parse().map_err(|_| err("tops_w"))?,
-            utilization: fields[13].parse().map_err(|_| err("util"))?,
+            n_macros: fields[9].parse().map_err(|_| err("macros"))?,
+            cells: fields[10].parse().map_err(|_| err("cells"))?,
+            energy_fj: fields[11].parse().map_err(|_| err("energy_fj"))?,
+            macro_fj: fields[12].parse().map_err(|_| err("macro_fj"))?,
+            time_ns: fields[13].parse().map_err(|_| err("time_ns"))?,
+            tops_per_watt: fields[15].parse().map_err(|_| err("tops_w"))?,
+            utilization: fields[16].parse().map_err(|_| err("util"))?,
         });
     }
     Ok(points)
@@ -226,6 +241,10 @@ mod tests {
         let grid = SweepGrid {
             systems: crate::arch::table2_systems().into_iter().take(2).collect(),
             networks: vec![deep_autoencoder()],
+            precisions: vec![
+                PrecisionPoint::Native,
+                PrecisionPoint::Fixed(crate::arch::Precision::new(2, 8)),
+            ],
             sparsities: vec![crate::dse::DEFAULT_SPARSITY],
             objectives: vec![Objective::Energy],
         };
@@ -242,6 +261,11 @@ mod tests {
         assert!(text.contains("hit rate"), "{text}");
         assert!(text.contains("pruned by bound"), "{text}");
         assert!(text.contains("evaluated"), "{text}");
+        // multi-precision summaries label frontiers with the point and
+        // the tables carry the realized-width column
+        assert!(text.contains("@ 2x8"), "{text}");
+        assert!(text.contains("@ native"), "{text}");
+        assert!(text.contains("prec"), "{text}");
     }
 
     #[test]
@@ -260,6 +284,13 @@ mod tests {
     #[test]
     fn csv_roundtrips_bit_exact() {
         let s = summary();
+        // the grid above carries both a native and a fixed precision
+        // point, so the roundtrip exercises both CSV encodings
+        assert!(s.points.iter().any(|p| p.precision == PrecisionPoint::Native));
+        assert!(s
+            .points
+            .iter()
+            .any(|p| matches!(p.precision, PrecisionPoint::Fixed(_))));
         let parsed = parse_sweep_csv(&sweep_csv(&s)).unwrap();
         assert_eq!(parsed.len(), s.points.len());
         for (a, b) in s.points.iter().zip(&parsed) {
@@ -267,6 +298,9 @@ mod tests {
             assert_eq!(a.design, b.design);
             assert_eq!(a.family, b.family);
             assert_eq!(a.network, b.network);
+            assert_eq!(a.precision, b.precision);
+            assert_eq!(a.weight_bits, b.weight_bits);
+            assert_eq!(a.act_bits, b.act_bits);
             assert_eq!(a.objective, b.objective);
             assert_eq!(a.n_macros, b.n_macros);
             assert_eq!(a.cells, b.cells);

@@ -22,6 +22,15 @@ use crate::workload::{Layer, LayerType};
 /// Everything that determines the outcome of a layer mapping search.
 /// Fields are `pub(crate)` so the on-disk cache (`super::persist`) can
 /// serialize and reassemble keys without widening the public API.
+///
+/// The precision axis is covered *by construction*: a re-quantized
+/// design differs in `weight_bits`/`act_bits` and in the re-derived
+/// `dac_res`/`adc_res`, all of which are key fields — so grid points at
+/// different precision settings can never alias in the cache, and no
+/// separate precision tag is needed. What *is* needed is the schema
+/// version of the persistent cache ([`super::persist`]): the rules that
+/// *produce* those fields are part of the cost model's meaning, so
+/// changing them bumps `SWEEP_CACHE_VERSION`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CostKey {
     // --- macro geometry (paper Table I) ---
@@ -331,6 +340,24 @@ mod tests {
         cache.search(&l, &other, &other_tech, DEFAULT_SPARSITY, None);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (0, 5, 5));
+    }
+
+    #[test]
+    fn requantized_systems_key_separately() {
+        use crate::arch::Precision;
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::dense("fc", 64, 256);
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        // same chip re-quantized to INT8: the macro's precision and
+        // re-derived converter fields change the key — no aliasing
+        let re = ImcSystem {
+            imc: sys.imc.requantized(Precision::new(8, 8)).unwrap(),
+            ..sys.clone()
+        };
+        cache.search(&l, &re, &tech, DEFAULT_SPARSITY, None);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
     }
 
     #[test]

@@ -1,17 +1,26 @@
 //! Grid construction, sharding and execution for the full-grid sweep.
 //!
 //! The grid is the cross product *survey designs (per SRAM-cell budget)
-//! × tinyMLPerf networks × activation sparsities × objectives*; within
-//! one budget every design is normalized to the same total cell count
-//! (the paper's fairness rule), and the cell-budget / sparsity axes are
-//! the DVFS-style widening of the Sun et al. 2024 follow-up. Tasks are
-//! numbered in canonical order and dealt round-robin across shards, so
-//! `--shards N` splits the grid into N near-equal, deterministic slices
-//! that CI jobs or machines can run independently; [`merge_summaries`]
-//! recombines shard outputs into the same global Pareto frontier a
-//! single-shard run produces.
+//! × tinyMLPerf networks × precision points × activation sparsities ×
+//! objectives*; within one budget every design is normalized to the
+//! same total cell count (the paper's fairness rule), and the
+//! cell-budget / precision / sparsity axes are the widening knobs of
+//! the Sun et al. 2024 follow-up. A [`PrecisionPoint`] other than
+//! `Native` *re-quantizes* each design — converter resolutions
+//! re-derived, outputs never rescaled (see `docs/COST_MODEL.md`) — and
+//! designs that cannot realize a precision are skipped, so a grid may
+//! legitimately evaluate fewer points than `n_tasks()`.
+//!
+//! Shard-determinism invariant: tasks are numbered in canonical order
+//! (systems → networks → precisions → sparsities → objectives) and
+//! whole *(design, network, precision, sparsity)* groups are dealt
+//! round-robin across shards, so `--shards N` splits the grid into N
+//! near-equal, deterministic slices that CI jobs or machines can run
+//! independently; [`merge_summaries`] recombines shard outputs into the
+//! same global Pareto frontier — bit-identical points and frontiers —
+//! that a single-shard run produces, for any shard count.
 
-use crate::arch::{ImcFamily, ImcSystem};
+use crate::arch::{ImcFamily, ImcSystem, Precision};
 use crate::db;
 use crate::dse::{
     pareto_front, LayerResult, NetworkResult, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY,
@@ -26,12 +35,66 @@ use super::cache::{CacheStats, CostCache};
 /// macro geometry (1152 × 256, as in paper Table II).
 pub const DEFAULT_GRID_CELLS: usize = 1152 * 256;
 
+/// One value of the precision grid axis: evaluate each design at its
+/// published operating point (`Native`, the identity re-quantization)
+/// or re-quantized to a fixed (weight × activation) bit-width pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrecisionPoint {
+    /// The design's own published precision.
+    Native,
+    /// Every design re-quantized to this pair; designs that cannot
+    /// realize it are skipped (validity filtering).
+    Fixed(Precision),
+}
+
+impl PrecisionPoint {
+    /// Instantiate `sys` at this precision point: `Native` is the
+    /// identity, `Fixed` re-quantizes the macro (same geometry, cell
+    /// count and hierarchy; converters re-derived). `None` when the
+    /// design cannot realize the precision.
+    pub fn apply(&self, sys: &ImcSystem) -> Option<ImcSystem> {
+        match self {
+            PrecisionPoint::Native => Some(sys.clone()),
+            PrecisionPoint::Fixed(p) => sys
+                .imc
+                .requantized(*p)
+                .ok()
+                .map(|imc| ImcSystem { imc, ..sys.clone() }),
+        }
+    }
+}
+
+impl std::str::FromStr for PrecisionPoint {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        if s.trim().eq_ignore_ascii_case("native") {
+            Ok(PrecisionPoint::Native)
+        } else {
+            s.parse::<Precision>().map(PrecisionPoint::Fixed)
+        }
+    }
+}
+
+impl std::fmt::Display for PrecisionPoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrecisionPoint::Native => f.write_str("native"),
+            PrecisionPoint::Fixed(p) => write!(f, "{p}"),
+        }
+    }
+}
+
 /// The full evaluation grid. Canonical task order: systems outermost,
-/// then networks, then sparsities, then objectives.
+/// then networks, then precisions, then sparsities, then objectives.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub systems: Vec<ImcSystem>,
     pub networks: Vec<Network>,
+    /// Precision grid axis: each design is re-quantized to each point
+    /// (`Native` = published operating point); unrealizable
+    /// (design, precision) pairs evaluate to no grid points.
+    pub precisions: Vec<PrecisionPoint>,
     /// Activation-sparsity grid axis (every value in [0, 1]).
     pub sparsities: Vec<f64>,
     pub objectives: Vec<Objective>,
@@ -46,10 +109,25 @@ impl SweepGrid {
         Self::survey_tinymlperf_grid(&[target_cells], &[DEFAULT_SPARSITY])
     }
 
+    /// [`SweepGrid::survey_tinymlperf_grid`] widened further with the
+    /// precision axis: every design additionally re-quantized to each
+    /// of `precisions` (unrealizable pairs skipped at evaluation time).
+    pub fn survey_tinymlperf_full(
+        cell_budgets: &[usize],
+        precisions: &[PrecisionPoint],
+        sparsities: &[f64],
+    ) -> Self {
+        let mut grid = Self::survey_tinymlperf_grid(cell_budgets, sparsities);
+        if !precisions.is_empty() {
+            grid.precisions = precisions.to_vec();
+        }
+        grid
+    }
+
     /// The widened grid: the survey designs instantiated at *each* of
     /// `cell_budgets` (suffixed `@<cells>c` when more than one budget
     /// keeps the names unique) × the tinyMLPerf networks × each of
-    /// `sparsities` × all objectives.
+    /// `sparsities` × all objectives, at native precision.
     pub fn survey_tinymlperf_grid(cell_budgets: &[usize], sparsities: &[f64]) -> Self {
         let mut systems = Vec::new();
         for &cells in cell_budgets {
@@ -69,37 +147,46 @@ impl SweepGrid {
         SweepGrid {
             systems,
             networks: all_networks(),
+            precisions: vec![PrecisionPoint::Native],
             sparsities: sparsities.to_vec(),
             objectives: ALL_OBJECTIVES.to_vec(),
         }
     }
 
-    /// Number of grid tasks (design × network × sparsity × objective
-    /// points).
+    /// Number of grid tasks (design × network × precision × sparsity ×
+    /// objective points). Unrealizable (design, precision) pairs still
+    /// occupy task indices but evaluate to no grid points, so the
+    /// evaluated point count may be lower.
     pub fn n_tasks(&self) -> usize {
-        self.systems.len() * self.networks.len() * self.sparsities.len() * self.objectives.len()
+        self.systems.len()
+            * self.networks.len()
+            * self.precisions.len()
+            * self.sparsities.len()
+            * self.objectives.len()
     }
 
-    /// Number of (design, network, sparsity) evaluation groups. A group
-    /// is the unit of work: one mapping-space pass serves every
-    /// objective, so both the parallel fan-out and the shard deal
-    /// operate on groups — splitting a group's objective points across
-    /// workers or shard processes would re-run the search up to
-    /// `objectives.len()` times.
+    /// Number of (design, network, precision, sparsity) evaluation
+    /// groups. A group is the unit of work: one mapping-space pass
+    /// serves every objective, so both the parallel fan-out and the
+    /// shard deal operate on groups — splitting a group's objective
+    /// points across workers or shard processes would re-run the search
+    /// up to `objectives.len()` times.
     pub fn n_groups(&self) -> usize {
-        self.systems.len() * self.networks.len() * self.sparsities.len()
+        self.systems.len() * self.networks.len() * self.precisions.len() * self.sparsities.len()
     }
 
-    /// Decompose a task index into its (system, network, sparsity,
-    /// objective) grid coordinates — the inverse of the canonical task
-    /// numbering.
-    pub fn coords(&self, task: usize) -> (usize, usize, usize, usize) {
+    /// Decompose a task index into its (system, network, precision,
+    /// sparsity, objective) grid coordinates — the inverse of the
+    /// canonical task numbering.
+    pub fn coords(&self, task: usize) -> (usize, usize, usize, usize, usize) {
         let n_obj = self.objectives.len();
         let n_sp = self.sparsities.len();
+        let n_prec = self.precisions.len();
         let n_net = self.networks.len();
         (
-            task / (n_obj * n_sp * n_net),
-            (task / (n_obj * n_sp)) % n_net,
+            task / (n_obj * n_sp * n_prec * n_net),
+            (task / (n_obj * n_sp * n_prec)) % n_net,
+            (task / (n_obj * n_sp)) % n_prec,
             (task / n_obj) % n_sp,
             task % n_obj,
         )
@@ -145,8 +232,8 @@ impl Default for SweepOptions {
 }
 
 /// One evaluated grid point: a network mapped onto a design under one
-/// (sparsity, objective) setting — the aggregate of its per-layer
-/// optima.
+/// (precision, sparsity, objective) setting — the aggregate of its
+/// per-layer optima.
 #[derive(Debug, Clone)]
 pub struct GridPoint {
     /// Canonical grid position — the shard-independent identity.
@@ -157,6 +244,13 @@ pub struct GridPoint {
     /// Total SRAM cells of this design instance (the budget axis).
     pub cells: usize,
     pub network: String,
+    /// Precision grid-axis setting this point was evaluated at.
+    pub precision: PrecisionPoint,
+    /// Realized weight bit-width of the evaluated macro (equals the
+    /// design's published width at `Native`).
+    pub weight_bits: u32,
+    /// Realized activation bit-width of the evaluated macro.
+    pub act_bits: u32,
     /// Activation sparsity this point was evaluated at.
     pub sparsity: f64,
     pub objective: Objective,
@@ -185,10 +279,11 @@ pub struct SweepSummary {
     pub total_tasks: usize,
     /// Evaluated points, sorted by `task_index`.
     pub points: Vec<GridPoint>,
-    /// Per-(network, sparsity) (energy, latency) Pareto frontiers over
-    /// all evaluated designs and objectives: (label, indices into
-    /// `points`). The label is the network name, suffixed with the
-    /// sparsity level when the summary spans more than one.
+    /// Per-(network, precision, sparsity) (energy, latency) Pareto
+    /// frontiers over all evaluated designs and objectives: (label,
+    /// indices into `points`). The label is the network name, suffixed
+    /// with the precision point and/or sparsity level when the summary
+    /// spans more than one of either.
     pub frontiers: Vec<(String, Vec<usize>)>,
     pub cache: CacheStats,
     /// True when this summary was assembled by [`merge_summaries`] —
@@ -214,7 +309,8 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepSummary {
 
 /// Evaluate the grid (or one shard of it) through an explicit — and
 /// possibly disk-warmed or shared — cost cache. *(design, network,
-/// sparsity)* groups fan out over the thread pool; every group searches
+/// precision, sparsity)* groups fan out over the thread pool; every
+/// group searches
 /// each layer once through the memoized cache (serially, so identical
 /// keys never race) and materializes one grid point per objective from
 /// that single pass. The summary reports only the statistics this run
@@ -249,16 +345,25 @@ pub fn run_sweep_with_cache(
     }
 }
 
-/// Map one network onto one design at one sparsity and emit a grid
-/// point per objective, all served by a single all-objective search per
-/// layer.
+/// Map one network onto one design at one (precision, sparsity) and
+/// emit a grid point per objective, all served by a single
+/// all-objective search per layer. Returns no points when the design
+/// cannot realize the precision (validity filtering — the skip is a
+/// pure function of the grid coordinates, so it is shard-independent).
 fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoint> {
     let n_obj = grid.objectives.len();
     let n_sp = grid.sparsities.len();
+    let n_prec = grid.precisions.len();
     let n_net = grid.networks.len();
-    let sys = &grid.systems[group / (n_sp * n_net)];
-    let net = &grid.networks[(group / n_sp) % n_net];
+    let base = &grid.systems[group / (n_sp * n_prec * n_net)];
+    let net = &grid.networks[(group / (n_sp * n_prec)) % n_net];
+    let precision = grid.precisions[(group / n_sp) % n_prec];
     let sparsity = grid.sparsities[group % n_sp];
+    let sys = match precision.apply(base) {
+        Some(sys) => sys,
+        None => return Vec::new(),
+    };
+    let sys = &sys;
     let tech = TechParams::for_node(sys.imc.tech_nm);
     let searches: Vec<_> = net
         .layers
@@ -287,6 +392,9 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
                 n_macros: sys.n_macros,
                 cells: sys.total_cells(),
                 network: net.name.clone(),
+                precision,
+                weight_bits: sys.imc.weight_bits,
+                act_bits: sys.imc.act_bits,
                 sparsity,
                 objective,
                 energy_fj: r.total_energy_fj(),
@@ -299,48 +407,66 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
         .collect()
 }
 
-/// Label a frontier group: per network, and per sparsity level when the
-/// summary spans more than one (mixing workload-sparsity assumptions in
-/// one frontier would compare incomparable points).
-fn frontier_label(network: &str, sparsity: f64, multi_sparsity: bool) -> String {
-    if multi_sparsity {
-        format!("{network} @ sparsity {sparsity}")
-    } else {
-        network.to_string()
+/// Label a frontier group: per network, plus the precision point and/or
+/// sparsity level when the summary spans more than one of either
+/// (mixing precision or workload-sparsity assumptions in one frontier
+/// would compare incomparable points).
+fn frontier_label(
+    network: &str,
+    precision: PrecisionPoint,
+    multi_precision: bool,
+    sparsity: f64,
+    multi_sparsity: bool,
+) -> String {
+    let mut label = network.to_string();
+    if multi_precision {
+        label.push_str(&format!(" @ {precision}"));
     }
+    if multi_sparsity {
+        label.push_str(&format!(" @ sparsity {sparsity}"));
+    }
+    label
 }
 
-/// Per-(network, sparsity) (energy, latency) Pareto frontiers,
-/// preserving first-seen order. Depends only on the *set* of points
-/// (inputs are sorted by task index), so shard count never changes the
-/// outcome.
+/// Per-(network, precision, sparsity) (energy, latency) Pareto
+/// frontiers, preserving first-seen order. Depends only on the *set* of
+/// points (inputs are sorted by task index), so shard count never
+/// changes the outcome.
 pub(crate) fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
-    let mut groups: Vec<(&str, u64)> = Vec::new();
+    let mut groups: Vec<(&str, PrecisionPoint, u64)> = Vec::new();
     for p in points {
-        let key = (p.network.as_str(), p.sparsity.to_bits());
+        let key = (p.network.as_str(), p.precision, p.sparsity.to_bits());
         if !groups.contains(&key) {
             groups.push(key);
         }
     }
+    let multi_precision = groups
+        .first()
+        .is_some_and(|&(_, first, _)| groups.iter().any(|&(_, p, _)| p != first));
     let multi_sparsity = {
-        let mut sparsities: Vec<u64> = groups.iter().map(|&(_, s)| s).collect();
+        let mut sparsities: Vec<u64> = groups.iter().map(|&(_, _, s)| s).collect();
         sparsities.sort_unstable();
         sparsities.dedup();
         sparsities.len() > 1
     };
     groups
         .iter()
-        .map(|&(name, sp_bits)| {
+        .map(|&(name, prec, sp_bits)| {
             let idx: Vec<usize> = (0..points.len())
-                .filter(|&i| points[i].network == name && points[i].sparsity.to_bits() == sp_bits)
+                .filter(|&i| {
+                    points[i].network == name
+                        && points[i].precision == prec
+                        && points[i].sparsity.to_bits() == sp_bits
+                })
                 .collect();
             let coords: Vec<(f64, f64)> = idx
                 .iter()
                 .map(|&i| (points[i].energy_fj, points[i].time_ns))
                 .collect();
             let front = pareto_front(&coords);
+            let sparsity = f64::from_bits(sp_bits);
             (
-                frontier_label(name, f64::from_bits(sp_bits), multi_sparsity),
+                frontier_label(name, prec, multi_precision, sparsity, multi_sparsity),
                 front.into_iter().map(|j| idx[j]).collect(),
             )
         })
@@ -381,6 +507,7 @@ mod tests {
         SweepGrid {
             systems: table2_systems().into_iter().take(2).collect(),
             networks: vec![deep_autoencoder()],
+            precisions: vec![PrecisionPoint::Native],
             sparsities: vec![DEFAULT_SPARSITY],
             objectives: vec![Objective::Energy, Objective::Latency],
         }
@@ -406,15 +533,22 @@ mod tests {
     #[test]
     fn coords_roundtrip_canonical_order() {
         let mut grid = tiny_grid();
+        grid.precisions = vec![
+            PrecisionPoint::Native,
+            PrecisionPoint::Fixed(Precision::new(8, 8)),
+        ];
         grid.sparsities = vec![0.3, 0.5, 0.9];
         let mut last = None;
         for t in 0..grid.n_tasks() {
-            let (si, ni, pi, oi) = grid.coords(t);
+            let (si, ni, pri, spi, oi) = grid.coords(t);
             assert!(si < grid.systems.len());
             assert!(ni < grid.networks.len());
-            assert!(pi < grid.sparsities.len());
+            assert!(pri < grid.precisions.len());
+            assert!(spi < grid.sparsities.len());
             assert!(oi < grid.objectives.len());
-            let flat = ((si * grid.networks.len() + ni) * grid.sparsities.len() + pi)
+            let flat = (((si * grid.networks.len() + ni) * grid.precisions.len() + pri)
+                * grid.sparsities.len()
+                + spi)
                 * grid.objectives.len()
                 + oi;
             assert_eq!(flat, t);
@@ -484,6 +618,78 @@ mod tests {
         // one frontier, for the one network, and it is non-empty
         assert_eq!(s.frontiers.len(), 1);
         assert!(!s.frontiers[0].1.is_empty());
+    }
+
+    #[test]
+    fn precision_axis_requantizes_designs_and_splits_frontiers() {
+        let mut grid = tiny_grid();
+        grid.systems.truncate(1); // aimc_large: 4b/4b native
+        grid.precisions = vec![
+            PrecisionPoint::Native,
+            PrecisionPoint::Fixed(Precision::new(8, 8)),
+        ];
+        grid.objectives = vec![Objective::Energy];
+        assert_eq!(grid.n_tasks(), 2);
+        let s = run_sweep(&grid, &SweepOptions::default());
+        assert_eq!(s.points.len(), 2);
+        let (native, int8) = (&s.points[0], &s.points[1]);
+        assert_eq!(native.precision, PrecisionPoint::Native);
+        assert_eq!((native.weight_bits, native.act_bits), (4, 4));
+        assert_eq!(int8.precision, PrecisionPoint::Fixed(Precision::new(8, 8)));
+        assert_eq!((int8.weight_bits, int8.act_bits), (8, 8));
+        // same silicon, same cell budget — precision is a re-quantized
+        // operating point, not a different chip
+        assert_eq!(native.design, int8.design);
+        assert_eq!(native.cells, int8.cells);
+        // INT8 packs half the operands per row and doubles the
+        // bit-serial slices: strictly more energy per network
+        assert!(int8.energy_fj > native.energy_fj);
+        // one frontier per (network, precision), labeled with the point
+        assert_eq!(s.frontiers.len(), 2);
+        assert!(s.frontiers.iter().any(|(l, _)| l.contains("native")));
+        assert!(s.frontiers.iter().any(|(l, _)| l.contains("8x8")));
+    }
+
+    #[test]
+    fn unrealizable_precision_points_are_skipped() {
+        let mut grid = tiny_grid();
+        // 3-bit weights divide neither 256 nor 32 columns: every design
+        // skips that precision, native evaluates normally
+        grid.precisions = vec![
+            PrecisionPoint::Fixed(Precision::new(3, 4)),
+            PrecisionPoint::Native,
+        ];
+        let s = run_sweep(&grid, &SweepOptions::default());
+        assert_eq!(s.points.len(), grid.n_tasks() / 2);
+        assert!(s
+            .points
+            .iter()
+            .all(|p| p.precision == PrecisionPoint::Native));
+        // the skip is part of the canonical numbering: surviving task
+        // indices are exactly the native-precision slots
+        for p in &s.points {
+            let (_, _, pri, _, _) = grid.coords(p.task_index);
+            assert_eq!(grid.precisions[pri], PrecisionPoint::Native);
+        }
+    }
+
+    #[test]
+    fn precision_point_parses_and_applies() {
+        assert_eq!("native".parse::<PrecisionPoint>(), Ok(PrecisionPoint::Native));
+        assert_eq!(
+            "2x8".parse::<PrecisionPoint>(),
+            Ok(PrecisionPoint::Fixed(Precision::new(2, 8)))
+        );
+        assert!("2by8".parse::<PrecisionPoint>().is_err());
+        let grid = tiny_grid();
+        let sys = &grid.systems[0];
+        let same = PrecisionPoint::Native.apply(sys).unwrap();
+        assert_eq!(&same, sys);
+        let re = PrecisionPoint::Fixed(Precision::new(2, 8)).apply(sys).unwrap();
+        assert_eq!((re.imc.weight_bits, re.imc.act_bits), (2, 8));
+        assert_eq!(re.name, sys.name);
+        assert_eq!(re.total_cells(), sys.total_cells());
+        assert!(PrecisionPoint::Fixed(Precision::new(3, 4)).apply(sys).is_none());
     }
 
     #[test]

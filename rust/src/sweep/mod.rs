@@ -1,17 +1,34 @@
 //! The sharded full-grid design-space sweep (paper §VI–VII at survey
 //! scale): every surveyed silicon design × every tinyMLPerf network ×
-//! every objective, evaluated as a parallel pipeline with a memoized
-//! cost-model cache and aggregated into per-network Pareto frontiers.
+//! every precision point × every sparsity × every objective, evaluated
+//! as a parallel pipeline with a memoized cost-model cache and
+//! aggregated into per-(network, precision) Pareto frontiers.
 //!
-//! * [`cache`] — the memoized cost cache keyed on (macro geometry,
-//!   layer shape, search options); identical layer shapes across
-//!   networks and objectives are searched once.
-//! * [`grid`] — grid construction (including the widened SRAM-cell
-//!   budget and activation-sparsity axes), deterministic sharding
+//! * [`cache`] — the memoized cost cache keyed on everything that
+//!   determines a layer search: macro geometry *including the operand
+//!   precisions and re-derived converter resolutions*, memory
+//!   hierarchy, layer shape, sparsity and policy restriction. Identical
+//!   layer shapes across networks and objectives are searched once; a
+//!   re-quantized design keys differently by construction, so precision
+//!   points can never alias in the cache.
+//! * [`grid`] — grid construction (SRAM-cell budget, precision and
+//!   activation-sparsity axes), deterministic sharding
 //!   (`--shards`/`--shard-index`), parallel execution and shard-result
-//!   merging into a global Pareto frontier.
+//!   merging. The shard-determinism invariant: points and Pareto
+//!   frontiers are bit-identical for any shard count, because tasks are
+//!   canonically numbered, whole evaluation groups are dealt
+//!   round-robin, and every per-point computation is a pure function of
+//!   the grid coordinates.
 //! * [`persist`] — bit-exact on-disk serialization of the cost cache
-//!   (`sweep --cache-file`), so repeated CI sweeps start warm.
+//!   (`sweep --cache-file`), version-tagged with
+//!   [`persist::SWEEP_CACHE_VERSION`]; files from another schema
+//!   generation (e.g. pre-precision-axis caches) are rejected with an
+//!   error naming the mismatch, so repeated CI sweeps start warm but
+//!   never warm *wrong*.
+//!
+//! The cost-model equations behind every cached number, the
+//! precision-scaling rules and the admissibility argument for the
+//! pruned search are written down in `docs/COST_MODEL.md`.
 
 pub mod cache;
 pub mod grid;
@@ -19,7 +36,7 @@ pub mod persist;
 
 pub use cache::{CacheStats, CostCache};
 pub use grid::{
-    merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, SweepGrid, SweepOptions,
-    SweepSummary, DEFAULT_GRID_CELLS,
+    merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, PrecisionPoint, SweepGrid,
+    SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,
 };
-pub use persist::{load_cache_into, save_cache, SWEEP_CACHE_VERSION};
+pub use persist::{load_cache_into, save_cache, CacheLoadError, SWEEP_CACHE_VERSION};

@@ -5,8 +5,9 @@
 //! the workspace's own minimal JSON ([`crate::util::json`] — no serde):
 //! a version tag plus a flat entry list of `(CostKey, LayerSearch)`
 //! pairs. Files with a different version tag (or any malformed
-//! structure) are discarded wholesale — a stale schema must never seed
-//! a cache with wrong costs — and the run simply starts cold.
+//! structure) are rejected wholesale with a [`CacheLoadError`] naming
+//! the mismatch — a stale schema must never seed a cache with wrong
+//! costs — and the run simply starts cold.
 //!
 //! Every `f64` (and every `u64` bit pattern inside [`CostKey`]) is
 //! stored as a 16-digit hex string of its bit pattern, so a
@@ -28,7 +29,50 @@ use crate::dse::reuse::{AccessCounts, TrafficEnergy};
 
 /// Schema version of the cache file. Bump on any change to [`CostKey`],
 /// [`LayerSearch`] or the cost model's meaning of either.
-pub const SWEEP_CACHE_VERSION: u64 = 1;
+///
+/// History: **1** — the pre-precision-axis schema; **2** — the
+/// precision axis landed (re-quantized survey operating points flow
+/// through the cache, and the converter-derivation rules the key's
+/// `dac_res`/`adc_res` fields are produced by changed meaning), so v1
+/// files must be rejected rather than reused.
+pub const SWEEP_CACHE_VERSION: u64 = 2;
+
+/// Why a cache file was rejected. In every case the in-memory cache is
+/// left untouched and the caller starts cold.
+#[derive(Debug)]
+pub enum CacheLoadError {
+    /// The file could not be read (missing, unreadable, …).
+    Io(io::Error),
+    /// The file carries a different schema version — most commonly a
+    /// pre-precision (v1) cache after the precision-axis change.
+    VersionMismatch { found: u64, expected: u64 },
+    /// The file is not a structurally valid sweep cost cache.
+    Malformed,
+}
+
+impl std::fmt::Display for CacheLoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheLoadError::Io(e) => write!(f, "cannot read cache file: {e}"),
+            CacheLoadError::VersionMismatch { found, expected } => write!(
+                f,
+                "cache file has schema version {found}, but this build requires version \
+                 {expected} (the CostKey/cost-model schema changed — e.g. a pre-precision-axis \
+                 cache); delete the file or let this run rewrite it"
+            ),
+            CacheLoadError::Malformed => f.write_str("cache file is not a valid sweep cost cache"),
+        }
+    }
+}
+
+impl std::error::Error for CacheLoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CacheLoadError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 // ---- encoding helpers ----------------------------------------------------
 
@@ -405,31 +449,40 @@ pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
 }
 
 /// Load a cache file. Returns the number of entries preloaded into
-/// `cache`; `None` when the file is missing, has a stale version tag,
-/// or fails to parse — in every such case `cache` is left untouched and
-/// the caller starts cold.
-pub fn load_cache_into(path: &Path, cache: &CostCache) -> Option<usize> {
-    let text = match std::fs::read_to_string(path) {
-        Ok(t) => t,
-        Err(_) => return None,
-    };
-    let doc = parse(&text).ok()?;
-    if doc.get("version")?.as_u64()? != SWEEP_CACHE_VERSION {
-        return None;
+/// `cache`; a [`CacheLoadError`] when the file is missing, carries a
+/// different schema version, or fails to parse — in every such case
+/// `cache` is left untouched and the caller starts cold. A version
+/// mismatch is reported explicitly (not silently reused): pre-precision
+/// v1 caches hold costs derived under a different converter-derivation
+/// schema.
+pub fn load_cache_into(path: &Path, cache: &CostCache) -> Result<usize, CacheLoadError> {
+    let text = std::fs::read_to_string(path).map_err(CacheLoadError::Io)?;
+    let doc = parse(&text).map_err(|_| CacheLoadError::Malformed)?;
+    let found = doc
+        .get("version")
+        .and_then(|v| v.as_u64())
+        .ok_or(CacheLoadError::Malformed)?;
+    if found != SWEEP_CACHE_VERSION {
+        return Err(CacheLoadError::VersionMismatch {
+            found,
+            expected: SWEEP_CACHE_VERSION,
+        });
     }
     // parse everything before touching the cache: a half-loaded file
     // must not leave a partially-seeded cache behind
     let entries: Vec<(CostKey, LayerSearch)> = doc
-        .get("entries")?
-        .as_arr()?
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or(CacheLoadError::Malformed)?
         .iter()
         .map(|e| Some((key_from_json(get(e, "key")?)?, search_from_json(get(e, "search")?)?)))
-        .collect::<Option<Vec<_>>>()?;
+        .collect::<Option<Vec<_>>>()
+        .ok_or(CacheLoadError::Malformed)?;
     let n = entries.len();
     for (k, s) in entries {
         cache.preload(k, s);
     }
-    Some(n)
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -461,8 +514,8 @@ mod tests {
         save_cache(&cold, &path).unwrap();
 
         let warm = CostCache::new();
-        let loaded = load_cache_into(&path, &warm);
-        assert_eq!(loaded, Some(layers.len()));
+        let loaded = load_cache_into(&path, &warm).expect("cache file loads");
+        assert_eq!(loaded, layers.len());
         for l in &layers {
             let a = cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
             let b = warm.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
@@ -486,8 +539,9 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
-    #[test]
-    fn stale_version_is_discarded() {
+    /// Write a one-entry cache file, rewrite its version tag to
+    /// `fake_version`, and return the path.
+    fn cache_file_with_version(name: &str, fake_version: u64) -> std::path::PathBuf {
         let sys = table2_systems().remove(1);
         let tech = TechParams::for_node(sys.imc.tech_nm);
         let cache = CostCache::new();
@@ -497,18 +551,53 @@ mod tests {
             &tech,
             &DseOptions::default(),
         );
-        let path = tmp("cache_stale");
+        let path = tmp(name);
         save_cache(&cache, &path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let bumped = text.replacen(
             &format!("\"version\":{SWEEP_CACHE_VERSION}"),
-            &format!("\"version\":{}", SWEEP_CACHE_VERSION + 1),
+            &format!("\"version\":{fake_version}"),
             1,
         );
         assert_ne!(text, bumped, "version tag not found in file");
         std::fs::write(&path, bumped).unwrap();
+        path
+    }
+
+    #[test]
+    fn stale_version_is_rejected_with_named_mismatch() {
+        let path = cache_file_with_version("cache_stale", SWEEP_CACHE_VERSION + 1);
         let fresh = CostCache::new();
-        assert_eq!(load_cache_into(&path, &fresh), None);
+        let err = load_cache_into(&path, &fresh).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheLoadError::VersionMismatch { found, expected }
+                if found == SWEEP_CACHE_VERSION + 1 && expected == SWEEP_CACHE_VERSION
+        ));
+        // the message names both versions — a CI log must say *why* the
+        // warm start was refused
+        let msg = err.to_string();
+        assert!(
+            msg.contains(&format!("version {}", SWEEP_CACHE_VERSION + 1))
+                && msg.contains(&format!("version {SWEEP_CACHE_VERSION}")),
+            "unhelpful message: {msg}"
+        );
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_precision_v1_cache_is_rejected_not_reused() {
+        // a v1 file predates the precision axis: its costs were derived
+        // under the old converter schema and must never seed this build
+        let path = cache_file_with_version("cache_v1", 1);
+        let fresh = CostCache::new();
+        let err = load_cache_into(&path, &fresh).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheLoadError::VersionMismatch { found: 1, expected: SWEEP_CACHE_VERSION }
+        ));
+        assert!(err.to_string().contains("pre-precision"), "{err}");
         assert_eq!(fresh.stats().entries, 0);
         std::fs::remove_file(&path).ok();
     }
@@ -516,10 +605,16 @@ mod tests {
     #[test]
     fn missing_and_corrupt_files_start_cold() {
         let fresh = CostCache::new();
-        assert_eq!(load_cache_into(Path::new("/nonexistent/imcsim.json"), &fresh), None);
+        assert!(matches!(
+            load_cache_into(Path::new("/nonexistent/imcsim.json"), &fresh),
+            Err(CacheLoadError::Io(_))
+        ));
         let path = tmp("cache_corrupt");
         std::fs::write(&path, "{not json").unwrap();
-        assert_eq!(load_cache_into(&path, &fresh), None);
+        assert!(matches!(
+            load_cache_into(&path, &fresh),
+            Err(CacheLoadError::Malformed)
+        ));
         assert_eq!(fresh.stats().entries, 0);
         std::fs::remove_file(&path).ok();
     }

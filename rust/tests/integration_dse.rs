@@ -246,6 +246,58 @@ fn property_pruned_search_equals_exhaustive_on_survey_designs() {
 }
 
 #[test]
+fn property_pruned_search_equals_exhaustive_at_requantized_precisions() {
+    // the precision axis evaluates *re-quantized* operating points; the
+    // bound-pruned search must stay bit-identical to the exhaustive
+    // reference on those macros too (admissibility is
+    // precision-independent — see docs/COST_MODEL.md)
+    use imcsim::arch::Precision;
+    let layers = [
+        Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
+        Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
+        Layer::dense("fc", 128, 640),
+    ];
+    let mut exercised = 0;
+    for base in table2_systems() {
+        for (w, a) in [(2u32, 8u32), (8, 8), (8, 2)] {
+            let Ok(imc) = base.imc.requantized(Precision::new(w, a)) else {
+                continue; // e.g. dimc_multi's 4-column array at 8b weights
+            };
+            let sys = ImcSystem { imc, ..base.clone() };
+            let tech = TechParams::for_node(sys.imc.tech_nm);
+            for layer in &layers {
+                let pruned = search_layer_all(layer, &sys, &tech, DEFAULT_SPARSITY, None);
+                let full = search_layer_all_unpruned(layer, &sys, &tech, DEFAULT_SPARSITY, None);
+                assert_eq!(full.pruned, 0);
+                assert_eq!(
+                    pruned.evaluated + pruned.pruned,
+                    full.evaluated,
+                    "{} on {} at {w}x{a}: space accounting broken",
+                    layer.name,
+                    sys.name
+                );
+                for objective in ALL_OBJECTIVES {
+                    let p = pruned.best(objective);
+                    let f = full.best(objective);
+                    assert_eq!(
+                        p.total_energy_fj().to_bits(),
+                        f.total_energy_fj().to_bits(),
+                        "{} on {} at {w}x{a} ({objective}): energy differs",
+                        layer.name,
+                        sys.name
+                    );
+                    assert_eq!(p.time_ns.to_bits(), f.time_ns.to_bits());
+                    assert_eq!(p.policy, f.policy);
+                    assert_eq!(p.spatial, f.spatial);
+                }
+                exercised += 1;
+            }
+        }
+    }
+    assert!(exercised >= 9, "too few realizable precision points: {exercised}");
+}
+
+#[test]
 fn property_lower_bound_admissible_on_random_layers() {
     // randomized admissibility: the bound never exceeds the true cost
     // on any candidate of any random layer (the invariant the pruned

@@ -1,16 +1,16 @@
 //! Integration: the sharded full-grid sweep — shard determinism (the
 //! Pareto frontier must not depend on the shard count, including over
-//! the widened cells × sparsity axes), cache correctness against the
-//! uncached DSE, the survey-grid builder, and warm starts from the
-//! persistent cost cache.
+//! the widened cells × precision × sparsity axes), cache correctness
+//! against the uncached DSE, the survey-grid builder, and warm starts
+//! from the persistent cost cache (with schema-mismatch rejection).
 
-use imcsim::arch::table2_systems;
+use imcsim::arch::{table2_systems, Precision};
 use imcsim::dse::{
     search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use imcsim::sweep::{
-    load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CostCache,
-    SweepGrid, SweepOptions, DEFAULT_GRID_CELLS,
+    load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheLoadError,
+    CostCache, PrecisionPoint, SweepGrid, SweepOptions, DEFAULT_GRID_CELLS, SWEEP_CACHE_VERSION,
 };
 use imcsim::workload::{deep_autoencoder, ds_cnn};
 
@@ -21,6 +21,7 @@ fn small_grid() -> SweepGrid {
     SweepGrid {
         systems: table2_systems().into_iter().take(2).collect(),
         networks: vec![deep_autoencoder(), ds_cnn()],
+        precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
         objectives: ALL_OBJECTIVES.to_vec(),
     }
@@ -40,6 +41,7 @@ fn widened_grid() -> SweepGrid {
     SweepGrid {
         systems,
         networks: vec![ds_cnn()],
+        precisions: vec![PrecisionPoint::Native],
         sparsities: vec![0.3, 0.8],
         objectives: ALL_OBJECTIVES.to_vec(),
     }
@@ -53,6 +55,8 @@ fn points_equal(a: &imcsim::sweep::SweepSummary, b: &imcsim::sweep::SweepSummary
         assert_eq!(x.network, y.network);
         assert_eq!(x.objective, y.objective);
         assert_eq!(x.cells, y.cells);
+        assert_eq!(x.precision, y.precision);
+        assert_eq!((x.weight_bits, x.act_bits), (y.weight_bits, y.act_bits));
         assert_eq!(x.sparsity.to_bits(), y.sparsity.to_bits());
         // bit-identical: same deterministic arithmetic on both paths
         assert_eq!(x.energy_fj.to_bits(), y.energy_fj.to_bits());
@@ -121,6 +125,107 @@ fn shard_determinism_holds_on_widened_cells_sparsity_axes() {
 }
 
 #[test]
+fn shard_determinism_holds_on_precision_axis() {
+    // the precision axis re-quantizes designs per group at evaluation
+    // time; the N-shard merge must still be bit-identical to the
+    // 1-shard run, including the per-(network, precision) frontiers
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    grid.precisions = vec![
+        PrecisionPoint::Native,
+        PrecisionPoint::Fixed(Precision::new(2, 8)),
+        PrecisionPoint::Fixed(Precision::new(8, 8)),
+    ];
+    let single = run_sweep(&grid, &SweepOptions::default());
+    // both table2 designs have power-of-two column counts: every
+    // precision point is realizable, nothing is skipped
+    assert_eq!(single.points.len(), grid.n_tasks());
+    let mut realized: Vec<(u32, u32)> = single
+        .points
+        .iter()
+        .map(|p| (p.weight_bits, p.act_bits))
+        .collect();
+    realized.sort_unstable();
+    realized.dedup();
+    assert_eq!(realized, vec![(2, 8), (4, 4), (8, 8)]);
+    // one frontier per (network, precision point)
+    assert_eq!(single.frontiers.len(), grid.precisions.len());
+
+    for shards in [2, 5] {
+        let parts: Vec<_> = (0..shards)
+            .map(|k| {
+                let opts = SweepOptions {
+                    shards,
+                    shard_index: Some(k),
+                    threads: 2,
+                    ..Default::default()
+                };
+                run_sweep(&grid, &opts)
+            })
+            .collect();
+        let merged = merge_summaries(&parts);
+        points_equal(&single, &merged);
+        assert_eq!(single.frontiers, merged.frontiers);
+    }
+}
+
+#[test]
+fn unrealizable_precisions_skip_identically_across_shards() {
+    // 3-bit weight slices fit neither 256- nor 32-column arrays: the
+    // whole Fixed(3x4) slice of the grid evaluates to no points, and
+    // the skip pattern must be shard-independent
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    grid.precisions = vec![
+        PrecisionPoint::Fixed(Precision::new(3, 4)),
+        PrecisionPoint::Native,
+    ];
+    let single = run_sweep(&grid, &SweepOptions::default());
+    assert_eq!(single.points.len(), grid.n_tasks() / 2);
+    assert!(single.points.iter().all(|p| p.precision == PrecisionPoint::Native));
+
+    let parts: Vec<_> = (0..3)
+        .map(|k| {
+            let opts = SweepOptions {
+                shards: 3,
+                shard_index: Some(k),
+                threads: 1,
+                ..Default::default()
+            };
+            run_sweep(&grid, &opts)
+        })
+        .collect();
+    let merged = merge_summaries(&parts);
+    points_equal(&single, &merged);
+    assert_eq!(single.frontiers, merged.frontiers);
+}
+
+#[test]
+fn precision_cache_entries_never_alias_native_ones() {
+    // one shared cache across a native and an INT8 run: the re-derived
+    // macro fields key separately, so the INT8 pass must add entries
+    // (not silently reuse native costs)
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    let cache = CostCache::new();
+    let native = run_sweep_with_cache(&grid, &SweepOptions::default(), &cache);
+    let entries_after_native = cache.stats().entries;
+    assert!(entries_after_native > 0);
+    grid.precisions = vec![PrecisionPoint::Fixed(Precision::new(8, 8))];
+    let int8 = run_sweep_with_cache(&grid, &SweepOptions::default(), &cache);
+    assert!(
+        cache.stats().entries > entries_after_native,
+        "INT8 run reused native cache entries: {:?}",
+        cache.stats()
+    );
+    // and the evaluated numbers genuinely differ per design/network
+    for (a, b) in native.points.iter().zip(&int8.points) {
+        assert_eq!(a.design, b.design);
+        assert_ne!(a.energy_fj.to_bits(), b.energy_fj.to_bits());
+    }
+}
+
+#[test]
 fn warm_cache_file_reproduces_cold_run_with_full_hits() {
     let grid = small_grid();
     let dir = std::env::temp_dir();
@@ -143,6 +248,46 @@ fn warm_cache_file_reproduces_cold_run_with_full_hits() {
     // and reproduces the cold run's grid points bit-for-bit
     points_equal(&cold, &warm);
     assert_eq!(cold.frontiers, warm.frontiers);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cache_file_with_mismatched_schema_is_rejected_cold() {
+    // end-to-end: a sweep-produced cache file whose version tag is
+    // rewritten (as a pre-precision v1 file would present itself) must
+    // be refused with an error naming both versions, leaving the run
+    // cold but correct
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("imcsim_sweep_badver_{}.json", std::process::id()));
+
+    let cold_cache = CostCache::new();
+    let cold = run_sweep_with_cache(&grid, &SweepOptions::default(), &cold_cache);
+    save_cache(&cold_cache, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let downgraded = text.replacen(
+        &format!("\"version\":{SWEEP_CACHE_VERSION}"),
+        "\"version\":1",
+        1,
+    );
+    assert_ne!(text, downgraded, "version tag not found");
+    std::fs::write(&path, downgraded).unwrap();
+
+    let fresh_cache = CostCache::new();
+    let err = load_cache_into(&path, &fresh_cache).unwrap_err();
+    assert!(matches!(
+        err,
+        CacheLoadError::VersionMismatch { found: 1, expected: SWEEP_CACHE_VERSION }
+    ));
+    let msg = err.to_string();
+    assert!(msg.contains("version 1") && msg.contains(&format!("version {SWEEP_CACHE_VERSION}")));
+    // the rejected file seeded nothing: the rerun starts cold (same
+    // miss count as the original cold run) but stays bit-identical
+    assert_eq!(fresh_cache.stats().entries, 0);
+    let rerun = run_sweep_with_cache(&grid, &SweepOptions::default(), &fresh_cache);
+    assert_eq!(rerun.cache.misses, cold.cache.misses);
+    points_equal(&cold, &rerun);
     std::fs::remove_file(&path).ok();
 }
 
@@ -172,6 +317,7 @@ fn sweep_reports_bound_pruning() {
     let multi = SweepGrid {
         systems: vec![systems[1].clone(), systems[3].clone()],
         networks: vec![imcsim::workload::resnet8(), imcsim::workload::mobilenet_v1()],
+        precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
         objectives: ALL_OBJECTIVES.to_vec(),
     };
