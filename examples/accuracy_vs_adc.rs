@@ -1,21 +1,21 @@
 //! Accuracy vs efficiency across ADC resolution — the AIMC trade-off the
 //! paper motivates (§I: "the analog nature … compromises the output
-//! accuracy"), quantified two ways:
+//! accuracy"), quantified two ways, both offline (no `xla` feature, no
+//! artifacts):
 //!
-//! * **analytical sweep** (no artifacts): ADC quantization error bound
-//!   vs energy per MAC as ADC_res goes 4 → 12 on the aimc_large macro;
-//! * **measured** (needs `make artifacts`): logit deviation of the
-//!   bit-true PJRT artifacts (aimc_large adc=8/fs=256, aimc_multi adc=6)
-//!   against the exact reference executable on random MVMs.
+//! * **analytical sweep**: worst-case ADC quantization error bound vs
+//!   energy per MAC as ADC_res goes 4 → 12 on the aimc_large macro;
+//! * **simulated**: the std-only bit-true functional simulator
+//!   (`imcsim::sim`) measures SQNR / max-abs error / clip rate of the
+//!   same macro on tinyMLPerf layer tensors at each resolution.
 //!
 //! Run: `cargo run --release --example accuracy_vs_adc`
 
 use imcsim::arch::{ImcFamily, ImcMacro};
-use imcsim::coordinator::MatI32;
 use imcsim::model::{peak_energy_per_mac_fj, TechParams};
-use imcsim::report::Table;
-use imcsim::runtime::{default_artifacts_dir, load_manifest, Engine, Kind};
-use imcsim::util::prng::Rng;
+use imcsim::report::{fmt_sqnr, Table};
+use imcsim::sim::layer_accuracy;
+use imcsim::workload::Layer;
 
 /// Worst-case |error| on one D2-long dot product from ADC quantization
 /// (Δ/2 per bitline conversion, shift-add weighted) — mirrors
@@ -33,16 +33,20 @@ fn aimc_error_bound(m: &ImcMacro, adc_fs_rows: usize) -> f64 {
     total
 }
 
+fn sweep_macro(adc_res: u32) -> ImcMacro {
+    ImcMacro::new(
+        "sweep", ImcFamily::Aimc, 1152, 256, 4, 4, 4, adc_res, 0.8, 28.0,
+    )
+}
+
 fn analytical_sweep() {
-    println!("== analytical: ADC resolution vs energy & error (aimc_large geometry) ==");
+    println!("== analytical: ADC resolution vs energy & error bound (aimc_large geometry) ==");
     let tech = TechParams::for_node(28.0);
     let mut t = Table::new(&[
         "ADC bits", "fJ/MAC", "TOP/s/W", "worst-case |err| (FS=256 rows)", "err / max|out|",
     ]);
     for adc_res in 4..=12 {
-        let m = ImcMacro::new(
-            "sweep", ImcFamily::Aimc, 1152, 256, 4, 4, 4, adc_res, 0.8, 28.0,
-        );
+        let m = sweep_macro(adc_res);
         let e = peak_energy_per_mac_fj(&m, &tech, 0.5);
         let bound = aimc_error_bound(&m, 256);
         let max_out = 256.0 * 15.0 * 8.0; // FS rows * max act * max |w|
@@ -57,66 +61,36 @@ fn analytical_sweep() {
     println!("{}", t.render());
 }
 
-fn measured(engine: &Engine) -> imcsim::anyhow::Result<()> {
-    println!("== measured: bit-true artifacts vs exact reference ==");
-    let mut t = Table::new(&[
-        "design", "ADC bits", "mean |err|", "max |err|", "max |out|", "rel err",
-    ]);
-    let mut rng = Rng::new(123);
-    for (name, d) in engine.manifest().designs.clone() {
-        if d.config.family != "aimc" {
-            continue;
+fn simulated_sweep() {
+    println!("== simulated: bit-true functional simulator vs exact reference ==");
+    let layers = [
+        Layer::conv2d("resnet8_conv", 16, 16, 32, 16, 3, 3, 1),
+        Layer::dense("ae_fc", 128, 640),
+    ];
+    for layer in &layers {
+        println!("layer {} ({} MACs):", layer.name, layer.macs());
+        let mut t = Table::new(&["ADC bits", "SQNR [dB]", "max |err|", "clip rate", "fJ/MAC"]);
+        let tech = TechParams::for_node(28.0);
+        for adc_res in 4..=12 {
+            let m = sweep_macro(adc_res);
+            let r = layer_accuracy(layer, &m);
+            t.row(vec![
+                adc_res.to_string(),
+                fmt_sqnr(r.sqnr_db()),
+                format!("{:.0}", r.max_abs_err),
+                format!("{:.2}%", r.clip_rate() * 100.0),
+                format!("{:.2}", peak_energy_per_mac_fj(&m, &tech, 0.5)),
+            ]);
         }
-        let batch = engine.batch();
-        let rows = d.config.rows;
-        let d1 = d.config.d1;
-        // random in-range operands
-        let mut x = MatI32::zeros(batch, rows);
-        for v in &mut x.data {
-            *v = rng.range_i64(0, (1 << d.config.act_bits) - 1) as i32;
-        }
-        let mut w = MatI32::zeros(rows, d1);
-        let hi = (1i64 << (d.config.weight_bits - 1)) - 1;
-        for v in &mut w.data {
-            *v = rng.range_i64(-hi - 1, hi) as i32;
-        }
-        let y = engine.execute_mvm(&name, Kind::Macro, &x.data, &w.data)?;
-        let yr = engine.execute_mvm(&name, Kind::Reference, &x.data, &w.data)?;
-        let mut max_err = 0i64;
-        let mut sum_err = 0f64;
-        let mut max_out = 0i64;
-        for (a, b) in y.iter().zip(&yr) {
-            let e = (*a as i64 - *b as i64).abs();
-            max_err = max_err.max(e);
-            sum_err += e as f64;
-            max_out = max_out.max((*b as i64).abs());
-        }
-        t.row(vec![
-            name.clone(),
-            d.config.adc_res.to_string(),
-            format!("{:.1}", sum_err / y.len() as f64),
-            max_err.to_string(),
-            max_out.to_string(),
-            format!("{:.2}%", max_err as f64 / max_out.max(1) as f64 * 100.0),
-        ]);
+        println!("{}", t.render());
     }
-    println!("{}", t.render());
-    Ok(())
+    println!(
+        "(tensors: deterministic PRNG layer protocol — see docs/COST_MODEL.md, \
+         'Accuracy model')"
+    );
 }
 
 fn main() {
     analytical_sweep();
-    let dir = default_artifacts_dir();
-    match load_manifest(&dir).and_then(|m| {
-        Engine::new(m).map_err(|e| imcsim::runtime::ManifestError::Json(e.to_string()))
-    }) {
-        Ok(engine) => {
-            if let Err(e) = measured(&engine) {
-                eprintln!("measured sweep failed: {e:#}");
-            }
-        }
-        Err(e) => {
-            println!("(skipping measured sweep: {e}; run `make artifacts`)");
-        }
-    }
+    simulated_sweep();
 }

@@ -7,7 +7,7 @@
 use imcsim::arch::table2_systems;
 use imcsim::dse::{
     search_layer, search_layer_all, search_layer_all_unpruned, DseOptions, LayerEvaluator,
-    ALL_OBJECTIVES, DEFAULT_SPARSITY,
+    COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use imcsim::model::TechParams;
 use imcsim::sweep::{run_sweep, CostCache, PrecisionPoint, SweepGrid, SweepOptions};
@@ -62,7 +62,7 @@ fn main() {
         networks: vec![deep_autoencoder(), ds_cnn()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
-        objectives: ALL_OBJECTIVES.to_vec(),
+        objectives: COST_OBJECTIVES.to_vec(),
     };
     for threads in [1usize, 4] {
         let name = format!("sweep/mini_grid_{threads}_threads");

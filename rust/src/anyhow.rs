@@ -87,7 +87,9 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Attach context to a `Result`, converting the error into [`Error`].
 pub trait Context<T> {
+    /// Wrap the error with a context message.
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

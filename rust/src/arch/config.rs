@@ -43,12 +43,27 @@ use super::system::ImcSystem;
 /// Errors from config parsing/validation.
 #[derive(Debug)]
 pub enum ConfigError {
+    /// The config file could not be read.
     Io {
+        /// Path that failed.
         path: String,
+        /// Underlying I/O error.
         source: std::io::Error,
     },
-    Parse { path: String, message: String },
-    Invalid { path: String, message: String },
+    /// The file is not valid TOML of the expected shape.
+    Parse {
+        /// Path that failed.
+        path: String,
+        /// What went wrong.
+        message: String,
+    },
+    /// The parsed architecture fails validation.
+    Invalid {
+        /// Path that failed.
+        path: String,
+        /// What went wrong.
+        message: String,
+    },
 }
 
 impl std::fmt::Display for ConfigError {

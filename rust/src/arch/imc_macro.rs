@@ -25,6 +25,7 @@ pub enum ImcFamily {
 }
 
 impl ImcFamily {
+    /// Canonical family tag (`AIMC`/`DIMC`).
     pub fn as_str(&self) -> &'static str {
         match self {
             ImcFamily::Aimc => "AIMC",
@@ -60,6 +61,7 @@ pub struct Precision {
 }
 
 impl Precision {
+    /// Build a (weight × activation) precision pair.
     pub fn new(weight_bits: u32, act_bits: u32) -> Self {
         Precision {
             weight_bits,
@@ -111,7 +113,9 @@ impl std::fmt::Display for Precision {
 /// A single SRAM IMC macro (Table I hardware model parameters).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ImcMacro {
+    /// Macro name (chip @ operating point for survey designs).
     pub name: String,
+    /// Analog or digital compute family.
     pub family: ImcFamily,
     /// Physical SRAM rows (R). The accumulation axis D2 = R / M.
     pub rows: usize,

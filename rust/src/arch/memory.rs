@@ -17,9 +17,11 @@ pub enum Operand {
     Output,
 }
 
+/// Every operand kind, in canonical order.
 pub const ALL_OPERANDS: [Operand; 3] = [Operand::Input, Operand::Weight, Operand::Output];
 
 impl Operand {
+    /// One-letter operand tag (`I`/`W`/`O`).
     pub fn as_str(&self) -> &'static str {
         match self {
             Operand::Input => "I",
@@ -38,6 +40,7 @@ impl std::fmt::Display for Operand {
 /// One level of the memory hierarchy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemoryLevel {
+    /// Level name (e.g. `GB`, `DRAM`).
     pub name: String,
     /// Capacity in bits.
     pub size_bits: u64,
@@ -52,6 +55,7 @@ pub struct MemoryLevel {
 }
 
 impl MemoryLevel {
+    /// Whether this level may hold operand `op`.
     pub fn serves(&self, op: Operand) -> bool {
         self.operands.contains(&op)
     }
@@ -60,6 +64,7 @@ impl MemoryLevel {
 /// Ordered (inner → outer) list of levels above the IMC array.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemoryHierarchy {
+    /// Levels, innermost first.
     pub levels: Vec<MemoryLevel>,
 }
 
@@ -97,6 +102,7 @@ impl MemoryHierarchy {
         self.levels.iter().find(|l| l.serves(op))
     }
 
+    /// Structural validation: non-empty, every operand served.
     pub fn validate(&self) -> Result<(), String> {
         if self.levels.is_empty() {
             return Err("memory hierarchy must have at least one level".into());

@@ -8,13 +8,18 @@ use super::memory::MemoryHierarchy;
 /// A complete accelerator: replicated IMC macros + memory hierarchy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ImcSystem {
+    /// System name.
     pub name: String,
+    /// The replicated IMC macro.
     pub imc: ImcMacro,
+    /// Number of identical macros.
     pub n_macros: usize,
+    /// Shared memory hierarchy above the macros.
     pub hierarchy: MemoryHierarchy,
 }
 
 impl ImcSystem {
+    /// Build a system with the default edge memory hierarchy.
     pub fn new(name: &str, imc: ImcMacro, n_macros: usize) -> Self {
         let hierarchy = MemoryHierarchy::edge_default(imc.tech_nm);
         ImcSystem {
@@ -50,6 +55,7 @@ impl ImcSystem {
         self
     }
 
+    /// Structural validation of macro, hierarchy and macro count.
     pub fn validate(&self) -> Result<(), String> {
         if self.n_macros == 0 {
             return Err(format!("{}: n_macros must be > 0", self.name));

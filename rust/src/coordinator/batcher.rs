@@ -16,29 +16,40 @@ use super::tiler::{MatI32, Tiler};
 
 /// One MVM request: an activation vector for the resident weights.
 pub struct MvmRequest {
+    /// The activation vector.
     pub x: Vec<i32>,
+    /// Channel the response is delivered on.
     pub respond: Sender<MvmResponse>,
+    /// Enqueue timestamp (for queue-latency accounting).
     pub enqueued: Instant,
 }
 
 /// The response: the output vector + timing.
 #[derive(Debug, Clone)]
 pub struct MvmResponse {
+    /// The output vector.
     pub y: Vec<i32>,
+    /// Time spent queued (µs).
     pub queue_us: u64,
+    /// Size of the batch this request rode in.
     pub batch_size: usize,
 }
 
 /// Aggregate batcher statistics.
 #[derive(Debug, Default)]
 pub struct BatcherStats {
+    /// Requests served.
     pub requests: AtomicU64,
+    /// Batches dispatched.
     pub batches: AtomicU64,
+    /// Padding slots wasted across all batches.
     pub padded_slots: AtomicU64,
+    /// Batches flushed by timeout rather than fill.
     pub flush_timeouts: AtomicU64,
 }
 
 impl BatcherStats {
+    /// Mean batch occupancy in [0, 1].
     pub fn mean_batch_fill(&self, batch: usize) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -52,6 +63,7 @@ impl BatcherStats {
 /// Batching MVM server for one design with resident weights.
 pub struct BatchServer {
     tx: Sender<MvmRequest>,
+    /// Shared statistics counters.
     pub stats: Arc<BatcherStats>,
     worker: Option<std::thread::JoinHandle<()>>,
 }

@@ -13,14 +13,20 @@ use super::tiler::{argmax_rows, requantize, MatI32, Tiler, TileStats};
 /// A (B, H, W, C) int32 activation tensor (NHWC, row-major).
 #[derive(Debug, Clone)]
 pub struct Tensor4 {
+    /// Batch.
     pub b: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
+    /// NHWC row-major elements.
     pub data: Vec<i32>,
 }
 
 impl Tensor4 {
+    /// All-zero tensor.
     pub fn zeros(b: usize, h: usize, w: usize, c: usize) -> Self {
         Tensor4 {
             b,
@@ -32,11 +38,13 @@ impl Tensor4 {
     }
 
     #[inline]
+    /// Element at (b, y, x, c).
     pub fn at(&self, bi: usize, y: usize, x: usize, ci: usize) -> i32 {
         self.data[((bi * self.h + y) * self.w + x) * self.c + ci]
     }
 
     #[inline]
+    /// Set element (b, y, x, c).
     pub fn set(&mut self, bi: usize, y: usize, x: usize, ci: usize, v: i32) {
         self.data[((bi * self.h + y) * self.w + x) * self.c + ci] = v;
     }
@@ -80,14 +88,20 @@ pub fn im2col(x: &Tensor4, fy: usize, fx: usize, stride: usize) -> (MatI32, usiz
 /// Conv weights (FY,FX,C,K) flattened to the (FY·FX·C, K) MVM matrix.
 #[derive(Debug, Clone)]
 pub struct ConvWeights {
+    /// Kernel rows.
     pub fy: usize,
+    /// Kernel columns.
     pub fx: usize,
+    /// Input channels.
     pub c: usize,
+    /// Output channels.
     pub k: usize,
+    /// Flattened (FY·FX·C, K) matrix.
     pub mat: MatI32,
 }
 
 impl ConvWeights {
+    /// Uniform random weights at the given precision.
     pub fn random(
         rng: &mut Rng,
         fy: usize,
@@ -110,11 +124,17 @@ impl ConvWeights {
 /// → dense(classes). Integer-only; all MVMs go through the macro.
 #[derive(Debug, Clone)]
 pub struct TinyCnn {
+    /// Activation precision between layers.
     pub act_bits: u32,
+    /// First conv layer weights.
     pub conv1: ConvWeights,
+    /// Second (strided) conv layer weights.
     pub conv2: ConvWeights,
+    /// Classifier weights.
     pub dense: MatI32,
+    /// Output classes.
     pub classes: usize,
+    /// Input image side length.
     pub image: usize,
 }
 

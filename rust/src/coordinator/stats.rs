@@ -9,18 +9,22 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         self.samples_us.push(d.as_micros() as u64);
     }
 
+    /// Record one latency sample in microseconds.
     pub fn record_us(&mut self, us: u64) {
         self.samples_us.push(us);
     }
 
+    /// Number of samples recorded.
     pub fn count(&self) -> usize {
         self.samples_us.len()
     }
 
+    /// Latency percentile `p` in [0, 100] (µs).
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.samples_us.is_empty() {
             return 0;
@@ -31,6 +35,7 @@ impl LatencyStats {
         s[idx.min(s.len() - 1)]
     }
 
+    /// Mean latency (µs).
     pub fn mean_us(&self) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
@@ -38,6 +43,7 @@ impl LatencyStats {
         self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
     }
 
+    /// One-line human summary (count, mean, p50/p95/p99).
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:.0}us p50={}us p95={}us p99={}us",

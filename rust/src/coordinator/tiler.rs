@@ -30,12 +30,16 @@ pub struct TileStats {
 /// A (rows x cols) row-major int32 matrix.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MatI32 {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major elements.
     pub data: Vec<i32>,
 }
 
 impl MatI32 {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         MatI32 {
             rows,
@@ -44,6 +48,7 @@ impl MatI32 {
         }
     }
 
+    /// Wrap a row-major vector (length must equal rows × cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Result<Self> {
         if data.len() != rows * cols {
             return Err(anyhow!("shape ({rows},{cols}) != data len {}", data.len()));
@@ -52,11 +57,13 @@ impl MatI32 {
     }
 
     #[inline]
+    /// Element at (r, c).
     pub fn at(&self, r: usize, c: usize) -> i32 {
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Set element (r, c).
     pub fn set(&mut self, r: usize, c: usize, v: i32) {
         self.data[r * self.cols + c] = v;
     }
@@ -126,6 +133,7 @@ fn weight_key(w: &MatI32) -> u64 {
 }
 
 impl<'a> Tiler<'a> {
+    /// Bind a tiler to one design's compiled geometry.
     pub fn new(engine: &'a Engine, design: &str) -> Result<Self> {
         let d = engine.design(design)?;
         Ok(Tiler {
@@ -166,6 +174,7 @@ impl<'a> Tiler<'a> {
         Ok(arc)
     }
 
+    /// (batch, rows, d1) tile geometry of the bound design.
     pub fn geometry(&self) -> (usize, usize, usize) {
         (self.batch, self.rows, self.d1)
     }

@@ -30,26 +30,39 @@ pub struct SurveyEntry {
     pub chip: &'static str,
     /// Paper reference number ([24]…[42]).
     pub reference: &'static str,
+    /// Analog or digital compute family.
     pub family: ImcFamily,
+    /// Physical SRAM rows.
     pub rows: usize,
+    /// Physical SRAM columns.
     pub cols: usize,
+    /// Weight precision (bits).
     pub weight_bits: u32,
+    /// Activation precision (bits).
     pub act_bits: u32,
+    /// DAC / input slice resolution (bits).
     pub dac_res: u32,
+    /// ADC resolution (bits; 0 for DIMC).
     pub adc_res: u32,
+    /// Row multiplexing factor.
     pub row_mux: usize,
+    /// Bitlines shared per ADC.
     pub cols_per_adc: u32,
+    /// Supply voltage (V).
     pub vdd: f64,
+    /// Technology node (nm).
     pub tech_nm: f64,
     /// Reported peak energy efficiency (TOP/s/W) at 50 % sparsity.
     pub reported_tops_w: f64,
     /// Reported computational density (TOP/s/mm²), when published.
     pub reported_tops_mm2: Option<f64>,
+    /// Where the reported numbers come from.
     pub provenance: Provenance,
     /// Flagged by the paper as a >15 % model outlier (unmodeled
     /// overheads: inefficient ADCs ~4x [28][29][36], digital overheads
     /// [30][36], leakage at low voltage [42]@0.6V).
     pub known_outlier: bool,
+    /// Free-form transcription note.
     pub note: &'static str,
 }
 

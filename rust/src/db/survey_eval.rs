@@ -14,13 +14,21 @@ pub const SURVEY_SPARSITY: f64 = 0.5;
 /// One Fig. 4 scatter point.
 #[derive(Debug, Clone)]
 pub struct SurveyPoint {
+    /// Chip tag.
     pub chip: String,
+    /// Paper reference number.
     pub reference: &'static str,
+    /// Family tag (`AIMC`/`DIMC`).
     pub family: String,
+    /// Technology node (nm).
     pub tech_nm: f64,
+    /// Operand precision label (`WxA`).
     pub precision: String,
+    /// Supply voltage (V).
     pub vdd: f64,
+    /// Reported peak efficiency (TOP/s/W).
     pub tops_w: f64,
+    /// Reported computational density, when published.
     pub tops_mm2: Option<f64>,
 }
 

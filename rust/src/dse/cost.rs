@@ -17,17 +17,22 @@ pub const DEFAULT_SPARSITY: f64 = 0.5;
 /// Full evaluation of one mapping point.
 #[derive(Debug, Clone)]
 pub struct MappingEval {
+    /// The spatial unrolling evaluated.
     pub spatial: SpatialMapping,
+    /// The temporal policy evaluated.
     pub policy: TemporalPolicy,
+    /// Derived tile/iteration counts.
     pub tiles: TileCounts,
     /// Macro datapath energy, summed over all active macros (fJ).
     pub macro_energy: EnergyBreakdown,
     /// Buffer/DRAM traffic energy (fJ).
     pub traffic: TrafficEnergy,
+    /// Per-memory-level access counts behind the traffic energy.
     pub accesses: AccessCounts,
     /// End-to-end layer latency (ns); macros run in parallel, the
     /// shared buffer serializes.
     pub time_ns: f64,
+    /// Latency in macro cycles (max of compute and memory rooflines).
     pub cycles: f64,
     /// Spatial array utilization in [0, 1].
     pub utilization: f64,

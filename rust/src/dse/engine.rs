@@ -8,29 +8,61 @@
 //! Because the bounds are admissible ([`super::cost::lower_bound`]),
 //! the pruned search returns *bit-identical* optima to the exhaustive
 //! pass; `search_layer_all_unpruned` keeps the reference path alive for
-//! equivalence tests and benchmarks.
+//! equivalence tests and benchmarks. `search_layer_all_seeded`
+//! additionally warm-starts the incumbents from mapping candidates
+//! carried over from a previously-searched identically-shaped layer —
+//! more pruning on the first touch, same bit-identical optima.
+//!
+//! Every search also runs the bit-true functional simulator
+//! ([`crate::sim`]) once per layer: the resulting [`AccuracyRecord`]
+//! rides on [`LayerSearch`]/[`LayerResult`]/[`NetworkResult`], making
+//! accuracy a first-class objective axis next to energy/latency/EDP.
 
 use crate::arch::ImcSystem;
-use crate::mapping::{tile, MappingCandidate, MappingSpace, TemporalPolicy};
+use crate::mapping::{tile, MappingCandidate, MappingSpace, SpatialMapping, TemporalPolicy};
 use crate::model::{EnergyBreakdown, TechParams};
+use crate::sim::AccuracyRecord;
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{Layer, Network};
 
 use super::cost::{evaluate_tiled, lower_bound, CandidateBound, MappingEval, DEFAULT_SPARSITY};
 use super::reuse::TrafficEnergy;
 
-/// Optimization objective for mapping selection.
+/// Optimization objective for design and mapping selection.
+///
+/// The first three are *cost* objectives — per-mapping quantities the
+/// search minimizes. [`Objective::Accuracy`] is mapping-invariant (the
+/// datapath's quantization error depends on the macro and the layer,
+/// not on how loops are unrolled), so as a mapping-selection objective
+/// it ties everywhere and falls back to the energy optimum; as a *grid*
+/// objective it ranks designs by the simulated [`AccuracyRecord`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Objective {
+    /// Total energy (datapath + memory traffic), fJ.
     Energy,
+    /// End-to-end layer latency, ns.
     Latency,
     /// Energy–delay product.
     Edp,
+    /// Task accuracy (simulated quantization error; mapping-invariant).
+    Accuracy,
 }
 
-/// All objectives, in the canonical grid order.
-pub const ALL_OBJECTIVES: [Objective; 3] =
+/// The cost objectives, in the canonical grid order. These are the
+/// objectives a mapping search can distinguish — one search pass keeps
+/// an incumbent per entry — and the default objective axis of the grid
+/// sweep (accuracy is reported as columns on every grid point instead
+/// of as duplicate rows).
+pub const COST_OBJECTIVES: [Objective; 3] =
     [Objective::Energy, Objective::Latency, Objective::Edp];
+
+/// Every objective, canonical order (cost objectives first).
+pub const ALL_OBJECTIVES: [Objective; 4] = [
+    Objective::Energy,
+    Objective::Latency,
+    Objective::Edp,
+    Objective::Accuracy,
+];
 
 impl Objective {
     fn score(&self, e: &MappingEval) -> f64 {
@@ -38,6 +70,8 @@ impl Objective {
             Objective::Energy => e.total_energy_fj(),
             Objective::Latency => e.time_ns,
             Objective::Edp => e.edp(),
+            // accuracy is mapping-invariant: tie-break by energy
+            Objective::Accuracy => e.total_energy_fj(),
         }
     }
 
@@ -45,17 +79,33 @@ impl Objective {
     /// lower bound on [`Objective::score`] of the full evaluation.
     pub fn bound_score(&self, b: &CandidateBound) -> f64 {
         match self {
-            Objective::Energy => b.energy_fj,
+            Objective::Energy | Objective::Accuracy => b.energy_fj,
             Objective::Latency => b.time_ns,
             Objective::Edp => b.edp(),
         }
     }
 
+    /// Canonical lowercase name (CLI/CSV token).
     pub fn as_str(&self) -> &'static str {
         match self {
             Objective::Energy => "energy",
             Objective::Latency => "latency",
             Objective::Edp => "edp",
+            Objective::Accuracy => "accuracy",
+        }
+    }
+}
+
+impl std::str::FromStr for Objective {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "energy" => Ok(Objective::Energy),
+            "latency" => Ok(Objective::Latency),
+            "edp" => Ok(Objective::Edp),
+            "accuracy" => Ok(Objective::Accuracy),
+            other => Err(format!("unknown objective '{other}'")),
         }
     }
 }
@@ -69,8 +119,13 @@ impl std::fmt::Display for Objective {
 /// Best mapping found for one layer.
 #[derive(Debug, Clone)]
 pub struct LayerResult {
+    /// The layer searched.
     pub layer: Layer,
+    /// The winning mapping's full evaluation.
     pub best: MappingEval,
+    /// Simulated quantization-error record of this (macro, layer) point
+    /// (mapping-invariant — identical for every objective).
+    pub accuracy: AccuracyRecord,
     /// Number of mapping points fully evaluated.
     pub evaluated: usize,
     /// Candidates discarded by the admissible bound without a full
@@ -81,20 +136,26 @@ pub struct LayerResult {
 /// Aggregated result for a whole network on one system.
 #[derive(Debug, Clone)]
 pub struct NetworkResult {
+    /// Name of the system evaluated.
     pub system: String,
+    /// Name of the network evaluated.
     pub network: String,
+    /// Per-layer search results, in network order.
     pub layers: Vec<LayerResult>,
 }
 
 impl NetworkResult {
+    /// Total energy (fJ) over all layers.
     pub fn total_energy_fj(&self) -> f64 {
         self.layers.iter().map(|l| l.best.total_energy_fj()).sum()
     }
 
+    /// Total latency (ns) over all layers.
     pub fn total_time_ns(&self) -> f64 {
         self.layers.iter().map(|l| l.best.time_ns).sum()
     }
 
+    /// Total MAC operations over all layers.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.layer.macs()).sum()
     }
@@ -136,12 +197,25 @@ impl NetworkResult {
             .sum::<f64>()
             / total
     }
+
+    /// Network-level accuracy record: the layer records pooled in
+    /// network order (sums of signal/noise energies and conversion
+    /// counts; max of the absolute errors).
+    pub fn accuracy(&self) -> AccuracyRecord {
+        let mut acc = AccuracyRecord::default();
+        for l in &self.layers {
+            acc.merge(&l.accuracy);
+        }
+        acc
+    }
 }
 
 /// DSE configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct DseOptions {
+    /// Objective the per-layer winner is selected by.
     pub objective: Objective,
+    /// Assumed activation sparsity in `[0, 1]`.
     pub input_sparsity: f64,
     /// Restrict the temporal policies searched (None = all).
     pub policy: Option<TemporalPolicy>,
@@ -157,29 +231,39 @@ impl Default for DseOptions {
     }
 }
 
-/// The best mapping per objective for one layer, found in a *single*
-/// pass over the mapping space (evaluation dominates; scoring per
-/// objective is free). This is the unit the grid-sweep cost cache
-/// stores: one entry serves Energy, Latency and EDP queries alike.
+/// The best mapping per cost objective for one layer — plus the layer's
+/// simulated accuracy record — found in a *single* pass over the
+/// mapping space (evaluation dominates; scoring per objective is free).
+/// This is the unit the grid-sweep cost cache stores: one entry serves
+/// Energy, Latency, EDP and Accuracy queries alike.
 #[derive(Debug, Clone)]
 pub struct LayerSearch {
     /// Number of mapping points fully evaluated.
     pub evaluated: usize,
     /// Candidates discarded by the admissible bound.
     pub pruned: usize,
+    accuracy: AccuracyRecord,
     best_energy: MappingEval,
     best_latency: MappingEval,
     best_edp: MappingEval,
 }
 
 impl LayerSearch {
-    /// The winning mapping for `objective`.
+    /// The winning mapping for `objective`. Accuracy is
+    /// mapping-invariant, so its winner is the energy optimum (the
+    /// documented tie-break).
     pub fn best(&self, objective: Objective) -> &MappingEval {
         match objective {
-            Objective::Energy => &self.best_energy,
+            Objective::Energy | Objective::Accuracy => &self.best_energy,
             Objective::Latency => &self.best_latency,
             Objective::Edp => &self.best_edp,
         }
+    }
+
+    /// The simulated quantization-error record of this (macro, layer)
+    /// point.
+    pub fn accuracy(&self) -> &AccuracyRecord {
+        &self.accuracy
     }
 
     /// Reassemble a search from its parts (the persistent sweep cache
@@ -187,6 +271,7 @@ impl LayerSearch {
     pub fn from_parts(
         evaluated: usize,
         pruned: usize,
+        accuracy: AccuracyRecord,
         best_energy: MappingEval,
         best_latency: MappingEval,
         best_edp: MappingEval,
@@ -194,10 +279,27 @@ impl LayerSearch {
         LayerSearch {
             evaluated,
             pruned,
+            accuracy,
             best_energy,
             best_latency,
             best_edp,
         }
+    }
+
+    /// The warm-start seeds of this search's winners: the per-cost-
+    /// objective optimal (spatial, policy) candidates, deduplicated.
+    /// Feeding them to [`search_layer_all_seeded`] on an
+    /// identically-shaped layer prunes from the first candidate on.
+    pub fn seed_mappings(&self) -> Vec<(SpatialMapping, TemporalPolicy)> {
+        let mut seeds: Vec<(SpatialMapping, TemporalPolicy)> = Vec::with_capacity(3);
+        for objective in COST_OBJECTIVES {
+            let b = self.best(objective);
+            let pair = (b.spatial.clone(), b.policy);
+            if !seeds.contains(&pair) {
+                seeds.push(pair);
+            }
+        }
+        seeds
     }
 
     /// Materialize a per-objective [`LayerResult`] for `layer` (which
@@ -208,6 +310,7 @@ impl LayerSearch {
         LayerResult {
             layer: layer.clone(),
             best: self.best(objective).clone(),
+            accuracy: self.accuracy,
             evaluated: self.evaluated,
             pruned: self.pruned,
         }
@@ -221,7 +324,33 @@ fn search_layer_all_impl(
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
     prune: bool,
+    seeds: &[(SpatialMapping, TemporalPolicy)],
 ) -> LayerSearch {
+    // Warm-start scores: full evaluations of seed candidates (mappings
+    // carried over from an identically-shaped search). A seed score is
+    // the score of *some* candidate in this space, so any candidate
+    // whose bound is *strictly above* it is provably not a winner — but
+    // only strictly: at equal score the reference keeps the earliest
+    // *streamed* candidate, which the seed is not. Seed evaluations do
+    // not count toward `evaluated` (they are not streamed candidates);
+    // `evaluated + pruned` still spans the whole space.
+    let mut seed_scores: [Option<f64>; 3] = [None, None, None];
+    if prune {
+        for (spatial, p) in seeds {
+            if let Some(restriction) = policy {
+                if *p != restriction {
+                    continue; // not a candidate of the restricted space
+                }
+            }
+            let tiles = tile(layer, sys, spatial);
+            let e = evaluate_tiled(layer, sys, tech, spatial, *p, input_sparsity, tiles);
+            for (slot, objective) in seed_scores.iter_mut().zip(COST_OBJECTIVES) {
+                let s = objective.score(&e);
+                let cur = slot.unwrap_or(f64::INFINITY);
+                *slot = Some(cur.min(s));
+            }
+        }
+    }
     let space = MappingSpace::new(layer, sys, policy);
     let mut evaluated = 0;
     let mut pruned = 0;
@@ -233,11 +362,25 @@ fn search_layer_all_impl(
             let bound = lower_bound(layer, sys, tech, &tiles, policy, input_sparsity);
             // A candidate can only displace an incumbent with a
             // *strictly* better score; an admissible bound at or above
-            // every incumbent proves it cannot win anywhere.
-            let can_win = best.iter().zip(ALL_OBJECTIVES).any(|(slot, objective)| match slot {
-                None => true,
-                Some(inc) => objective.bound_score(&bound) < objective.score(inc),
-            });
+            // every incumbent proves it cannot win anywhere. A seed
+            // score additionally rules out any objective whose bound
+            // exceeds it strictly (see above).
+            let can_win = best
+                .iter()
+                .zip(seed_scores)
+                .zip(COST_OBJECTIVES)
+                .any(|((slot, seed), objective)| {
+                    let b = objective.bound_score(&bound);
+                    let vs_incumbent = match slot {
+                        None => true,
+                        Some(inc) => b < objective.score(inc),
+                    };
+                    let vs_seed = match seed {
+                        None => true,
+                        Some(s) => b <= s,
+                    };
+                    vs_incumbent && vs_seed
+                });
             if !can_win {
                 pruned += 1;
                 continue;
@@ -245,7 +388,7 @@ fn search_layer_all_impl(
         }
         let e = evaluate_tiled(layer, sys, tech, &spatial, policy, input_sparsity, tiles);
         evaluated += 1;
-        for (slot, objective) in best.iter_mut().zip(ALL_OBJECTIVES) {
+        for (slot, objective) in best.iter_mut().zip(COST_OBJECTIVES) {
             let better = match slot {
                 None => true,
                 Some(b) => objective.score(&e) < objective.score(b),
@@ -259,6 +402,7 @@ fn search_layer_all_impl(
     LayerSearch {
         evaluated,
         pruned,
+        accuracy: crate::sim::layer_accuracy(layer, &sys.imc),
         best_energy: energy.expect("at least one mapping candidate"),
         best_latency: latency.expect("at least one mapping candidate"),
         best_edp: edp.expect("at least one mapping candidate"),
@@ -266,11 +410,11 @@ fn search_layer_all_impl(
 }
 
 /// Search one layer's mapping space, tracking the optimum for every
-/// objective at once. Candidates whose admissible lower bound cannot
-/// beat any incumbent are skipped without full evaluation; ties keep
-/// the earlier candidate. Both together make the result bit-identical
-/// to [`search_layer_all_unpruned`] — the equivalence tests in
-/// `tests/integration_dse.rs` lock that down.
+/// cost objective at once. Candidates whose admissible lower bound
+/// cannot beat any incumbent are skipped without full evaluation; ties
+/// keep the earlier candidate. Both together make the result
+/// bit-identical to [`search_layer_all_unpruned`] — the equivalence
+/// tests in `tests/integration_dse.rs` lock that down.
 pub fn search_layer_all(
     layer: &Layer,
     sys: &ImcSystem,
@@ -278,7 +422,32 @@ pub fn search_layer_all(
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
 ) -> LayerSearch {
-    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, true)
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, true, &[])
+}
+
+/// [`search_layer_all`] warm-started with mapping candidates from a
+/// previously-searched *identically-shaped* layer (the cross-layer
+/// bound carryover): each seed is re-evaluated under the current
+/// setting and its score rules out bound-dominated candidates from the
+/// first stream element on. The optima remain bit-identical to
+/// [`search_layer_all_unpruned`] — seeds tighten only the pruning test,
+/// never the incumbent slots (a seed with a tying score must not
+/// displace the earliest streamed winner).
+///
+/// Seeds whose temporal policy falls outside a `policy` restriction are
+/// ignored (they are not candidates of the restricted space, so their
+/// scores would not be admissible evidence). Invalid seeds for a
+/// *differently*-shaped layer are the caller's bug: seed mappings must
+/// come from a layer with identical loop bounds on the same system.
+pub fn search_layer_all_seeded(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    input_sparsity: f64,
+    policy: Option<TemporalPolicy>,
+    seeds: &[(SpatialMapping, TemporalPolicy)],
+) -> LayerSearch {
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, true, seeds)
 }
 
 /// The no-pruning reference: evaluates every candidate in the space.
@@ -291,7 +460,7 @@ pub fn search_layer_all_unpruned(
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
 ) -> LayerSearch {
-    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, false)
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, false, &[])
 }
 
 /// Search the best mapping for one layer.
@@ -310,6 +479,8 @@ pub fn search_layer(
 /// memoizing implementation (see `sweep::CostCache`) slots in wherever
 /// the plain exhaustive search does.
 pub trait LayerEvaluator: Sync {
+    /// Search (or look up) the per-objective optima of one layer on one
+    /// system and materialize the result for `opts.objective`.
     fn evaluate_layer(
         &self,
         layer: &Layer,
@@ -437,6 +608,35 @@ mod tests {
                     assert_eq!(a.policy, b.policy);
                     assert_eq!(a.spatial, b.spatial);
                 }
+                // the functional simulation is search-path independent
+                assert_eq!(pruned.accuracy(), full.accuracy());
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_search_matches_unpruned_bit_for_bit() {
+        // carry incumbents from a donor search at another sparsity onto
+        // the same shape: optima must stay bit-identical and the space
+        // must stay fully accounted
+        let systems = table2_systems();
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        for sys in systems.iter().take(2) {
+            let tech = TechParams::for_node(sys.imc.tech_nm);
+            let donor = search_layer_all(&l, sys, &tech, 0.3, None);
+            let seeds = donor.seed_mappings();
+            assert!(!seeds.is_empty());
+            let seeded =
+                search_layer_all_seeded(&l, sys, &tech, DEFAULT_SPARSITY, None, &seeds);
+            let full = search_layer_all_unpruned(&l, sys, &tech, DEFAULT_SPARSITY, None);
+            assert_eq!(seeded.evaluated + seeded.pruned, full.evaluated);
+            for objective in ALL_OBJECTIVES {
+                let a = seeded.best(objective);
+                let b = full.best(objective);
+                assert_eq!(a.total_energy_fj().to_bits(), b.total_energy_fj().to_bits());
+                assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+                assert_eq!(a.policy, b.policy);
+                assert_eq!(a.spatial, b.spatial);
             }
         }
     }
@@ -451,6 +651,10 @@ mod tests {
         assert_eq!(r.total_macs(), net.total_macs());
         let sum: f64 = r.layers.iter().map(|l| l.best.total_energy_fj()).sum();
         assert!((sum - r.total_energy_fj()).abs() < 1e-6);
+        // the network accuracy record pools the layer records
+        let acc = r.accuracy();
+        assert_eq!(acc.outputs, r.layers.iter().map(|l| l.accuracy.outputs).sum::<u64>());
+        assert!(acc.signal > 0.0);
     }
 
     #[test]
@@ -490,6 +694,22 @@ mod tests {
             assert_eq!(all.best(objective).time_ns, single.best.time_ns);
             assert_eq!(all.best(objective).policy, single.best.policy);
         }
+    }
+
+    #[test]
+    fn accuracy_objective_falls_back_to_energy_mapping() {
+        let systems = table2_systems();
+        let l = Layer::dense("fc", 64, 256);
+        let tech = TechParams::for_node(systems[1].imc.tech_nm);
+        let search = search_layer_all(&l, &systems[1], &tech, DEFAULT_SPARSITY, None);
+        let acc = search.best(Objective::Accuracy);
+        let eng = search.best(Objective::Energy);
+        assert_eq!(acc.total_energy_fj().to_bits(), eng.total_energy_fj().to_bits());
+        assert_eq!(acc.policy, eng.policy);
+        // objective parsing covers the new variant
+        assert_eq!("accuracy".parse::<Objective>(), Ok(Objective::Accuracy));
+        assert!("speed".parse::<Objective>().is_err());
+        assert_eq!(Objective::Accuracy.to_string(), "accuracy");
     }
 
     #[test]

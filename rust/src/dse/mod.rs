@@ -14,11 +14,15 @@
 //! and the admissibility argument are written down in
 //! `docs/COST_MODEL.md`.
 //!
-//! One search pass serves all three [`engine::Objective`]s, which is
-//! what the grid sweep's memoized cost cache
+//! One search pass serves every cost [`engine::Objective`] and carries
+//! the layer's simulated [`crate::sim::AccuracyRecord`] (accuracy is
+//! mapping-invariant, so it is computed once per search, not per
+//! candidate), which is what the grid sweep's memoized cost cache
 //! ([`crate::sweep::CostCache`]) stores — keyed on macro geometry
 //! (including operand precisions and converter resolutions), hierarchy,
-//! layer shape, sparsity and policy restriction.
+//! layer shape, sparsity and policy restriction. The cache additionally
+//! carries winning mappings across identically-shaped entries as
+//! warm-start seeds for [`engine::search_layer_all_seeded`].
 //!
 //! [`mapping::MappingSpace`]: crate::mapping::MappingSpace
 
@@ -31,9 +35,10 @@ pub use cost::{
     evaluate, evaluate_tiled, lower_bound, CandidateBound, MappingEval, DEFAULT_SPARSITY,
 };
 pub use engine::{
-    case_study, search_layer, search_layer_all, search_layer_all_unpruned, search_network,
-    search_network_with, DseOptions, ExhaustiveSearch, LayerEvaluator, LayerResult, LayerSearch,
-    NetworkResult, Objective, ALL_OBJECTIVES,
+    case_study, search_layer, search_layer_all, search_layer_all_seeded,
+    search_layer_all_unpruned, search_network, search_network_with, DseOptions,
+    ExhaustiveSearch, LayerEvaluator, LayerResult, LayerSearch, NetworkResult, Objective,
+    ALL_OBJECTIVES, COST_OBJECTIVES,
 };
 pub use pareto::pareto_front;
 pub use reuse::{access_counts, psum_bits, traffic_energy_fj, AccessCounts, TrafficEnergy};

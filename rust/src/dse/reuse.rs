@@ -21,13 +21,21 @@ use crate::workload::Layer;
 /// (whole system, all macros).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AccessCounts {
+    /// Input elements read from the global buffer.
     pub input_gb_reads: f64,
+    /// Weight elements read from the global buffer.
     pub weight_gb_reads: f64,
+    /// Partial-sum elements read back from the global buffer.
     pub psum_gb_reads: f64,
+    /// Partial-sum elements spilled to the global buffer.
     pub psum_gb_writes: f64,
+    /// Final output elements written to the global buffer.
     pub output_gb_writes: f64,
+    /// Input elements read from DRAM.
     pub input_dram_reads: f64,
+    /// Weight elements read from DRAM.
     pub weight_dram_reads: f64,
+    /// Output elements written to DRAM.
     pub output_dram_writes: f64,
     /// Weight-tile (re)load events per macro (for the energy model).
     pub weight_loads_per_macro: u64,
@@ -166,11 +174,14 @@ pub fn traffic_energy_fj(layer: &Layer, sys: &ImcSystem, c: &AccessCounts) -> Tr
 /// Energy split by memory level.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TrafficEnergy {
+    /// Global-buffer traffic energy (fJ).
     pub gb_fj: f64,
+    /// DRAM traffic energy (fJ).
     pub dram_fj: f64,
 }
 
 impl TrafficEnergy {
+    /// Total traffic energy (fJ).
     pub fn total_fj(&self) -> f64 {
         self.gb_fj + self.dram_fj
     }

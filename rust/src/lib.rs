@@ -18,9 +18,15 @@
 //!   cost evaluation (paper §VI, Fig. 7).
 //! * [`db`] — the survey database of published AIMC/DIMC silicon
 //!   (paper §III, Fig. 4) with provenance-tagged reported metrics.
+//! * [`sim`] — the std-only bit-true functional MVM simulator: DIMC
+//!   exact accumulation, AIMC DAC-slicing + ADC clipping/truncation,
+//!   exact partial-sum recombination; turns quantization error (SQNR,
+//!   max-abs error, clip rate) into a first-class sweep axis without
+//!   the `xla` runtime.
 //! * [`sweep`] — the sharded full-grid design-space sweep: survey
-//!   designs × tinyMLPerf networks × objectives, with a memoized
-//!   cost-model cache and global Pareto aggregation.
+//!   designs × tinyMLPerf networks × precision points × objectives,
+//!   with a memoized cost+accuracy cache and global Pareto aggregation
+//!   (cost frontiers and accuracy-vs-energy frontiers).
 //! * [`runtime`] — PJRT loader executing the AOT-compiled functional
 //!   macro simulator (JAX/Pallas, built once by `make artifacts`).
 //!   The executor needs the `xla` cargo feature; the manifest does not.
@@ -31,6 +37,8 @@
 //!
 //! Python is build-time only: the rust binary is self-contained once
 //! `artifacts/` exists.
+
+#![warn(missing_docs)]
 
 pub mod anyhow;
 pub mod arch;
@@ -43,8 +51,12 @@ pub mod mapping;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod sim;
 pub mod sweep;
 pub mod workload;
+#[cfg(feature = "xla")]
+pub mod xla;
 
 pub use arch::{ImcFamily, ImcMacro, ImcSystem, Precision};
 pub use model::{EnergyBreakdown, MacroOpCounts, TechParams};
+pub use sim::AccuracyRecord;

@@ -15,8 +15,8 @@ use imcsim::coordinator::{Tensor4, Tiler, TinyCnn};
 use imcsim::dse::{search_network, DseOptions, Objective};
 use imcsim::mapping::TemporalPolicy;
 use imcsim::report::{
-    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, parse_sweep_csv,
-    sweep_csv, sweep_text, table2_text, Table,
+    eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, fmt_sqnr,
+    parse_sweep_csv, sweep_csv, sweep_text, table2_text, Table,
 };
 use imcsim::runtime::{default_artifacts_dir, load_manifest};
 #[cfg(feature = "xla")]
@@ -47,8 +47,11 @@ Paper artifacts:
 
 Exploration & serving:
   dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
-      [--objective energy|latency|edp] [--policy ws|os|is] [--sparsity F]
-                       per-layer optimal mappings for one network
+      [--objective energy|latency|edp|accuracy] [--policy ws|os|is] [--sparsity F]
+                       per-layer optimal mappings for one network, with
+                       the bit-true simulator's per-layer SQNR (the
+                       accuracy objective is mapping-invariant and
+                       reports the energy-optimal mapping)
   sweep [--shards N] [--shard-index K] [--cells N[,N...]]
       [--precision P[,P...]] [--sparsity F[,F...]] [--cache-file FILE]
       [--csv FILE]
@@ -56,9 +59,12 @@ Exploration & serving:
                        SRAM-cell budget) x every tinyMLPerf network x
                        every precision point x every sparsity level x
                        every objective, streamed through the
-                       bound-pruned mapping search and a memoized cost
-                       cache; prints per-(network, precision) Pareto
-                       frontiers plus evaluated/pruned candidate counts.
+                       bound-pruned mapping search and a memoized
+                       cost+accuracy cache; prints per-(network,
+                       precision) cost Pareto frontiers, per-network
+                       accuracy-vs-energy frontiers (bit-true simulated
+                       SQNR / max-abs error / ADC clip rate columns),
+                       plus evaluated/pruned candidate counts.
                        --precision takes WxA weight-x-activation pairs
                        (e.g. 2x8,4x8,8x8) and/or 'native'; each design
                        is re-quantized to each point (converter
@@ -212,12 +218,10 @@ fn cmd_dse(args: &Args) -> i32 {
             None => all,
         }
     };
-    let objective = match args.opt_or("objective", "energy") {
-        "energy" => Objective::Energy,
-        "latency" => Objective::Latency,
-        "edp" => Objective::Edp,
-        other => {
-            eprintln!("unknown objective '{other}'");
+    let objective: Objective = match args.opt_or("objective", "energy").parse() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e} (expected energy|latency|edp|accuracy)");
             return 2;
         }
     };
@@ -252,10 +256,11 @@ fn cmd_dse(args: &Args) -> i32 {
         );
         let mut t = Table::new(&[
             "layer", "type", "MACs", "policy", "macros", "util", "E_macro[nJ]", "E_mem[nJ]",
-            "t[us]", "TOP/s/W",
+            "t[us]", "TOP/s/W", "SQNR[dB]",
         ]);
         for l in &r.layers {
             let b = &l.best;
+            let sqnr = fmt_sqnr(l.accuracy.sqnr_db());
             t.row(vec![
                 l.layer.name.clone(),
                 l.layer.ltype.to_string(),
@@ -267,9 +272,11 @@ fn cmd_dse(args: &Args) -> i32 {
                 format!("{:.2}", b.traffic.total_fj() * 1e-6),
                 format!("{:.2}", b.time_ns * 1e-3),
                 format!("{:.0}", b.tops_per_watt()),
+                sqnr,
             ]);
         }
         println!("{}", t.render());
+        let acc = r.accuracy();
         println!(
             "total: E={:.2} uJ  t={:.2} ms  eff={:.1} TOP/s/W  util={:.1}%",
             r.total_energy_fj() * 1e-9,
@@ -277,6 +284,18 @@ fn cmd_dse(args: &Args) -> i32 {
             r.effective_tops_per_watt(),
             r.mean_utilization() * 100.0
         );
+        if acc.is_exact() {
+            println!("accuracy: bit-exact datapath (simulated, {} outputs)", acc.outputs);
+        } else {
+            println!(
+                "accuracy: SQNR={:.1} dB  max|err|={:.0}  ADC clip rate={:.2}% \
+                 (simulated, {} outputs)",
+                acc.sqnr_db(),
+                acc.max_abs_err,
+                acc.clip_rate() * 100.0,
+                acc.outputs
+            );
+        }
         let (evaluated, pruned) = r
             .layers
             .iter()
@@ -528,6 +547,7 @@ fn cmd_sweepmerge(args: &Args) -> i32 {
             total_tasks: max_task,
             points,
             frontiers: Vec::new(),
+            accuracy_frontiers: Vec::new(),
             cache: CacheStats::default(),
             merged: false,
         });

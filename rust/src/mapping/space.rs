@@ -32,7 +32,9 @@ use super::temporal::{TemporalPolicy, ALL_POLICIES};
 /// One streamed point of the mapping space.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MappingCandidate {
+    /// The spatial unrolling of this candidate.
     pub spatial: SpatialMapping,
+    /// The temporal (dataflow) policy of this candidate.
     pub policy: TemporalPolicy,
 }
 
@@ -73,6 +75,7 @@ pub struct SpatialSpace {
 }
 
 impl SpatialSpace {
+    /// Build the spatial-unroll option space for one layer on one system.
     pub fn new(layer: &Layer, sys: &ImcSystem) -> Self {
         let d1 = sys.imc.d1();
         let rows = fill_rows(layer, sys.imc.rows);

@@ -19,7 +19,9 @@ use crate::workload::{Layer, LoopDim};
 /// One unrolled loop: dimension and unroll factor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Unroll {
+    /// The unrolled loop dimension.
     pub dim: LoopDim,
+    /// The spatial unroll factor.
     pub factor: usize,
 }
 

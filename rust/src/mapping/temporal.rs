@@ -28,6 +28,7 @@ pub enum TemporalPolicy {
     InputStationary,
 }
 
+/// Every temporal policy, in canonical search order.
 pub const ALL_POLICIES: [TemporalPolicy; 3] = [
     TemporalPolicy::WeightStationary,
     TemporalPolicy::OutputStationary,
@@ -35,6 +36,7 @@ pub const ALL_POLICIES: [TemporalPolicy; 3] = [
 ];
 
 impl TemporalPolicy {
+    /// Two-letter dataflow tag (`WS`/`OS`/`IS`).
     pub fn as_str(&self) -> &'static str {
         match self {
             TemporalPolicy::WeightStationary => "WS",

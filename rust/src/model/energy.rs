@@ -72,6 +72,7 @@ impl MacroOpCounts {
         self.mvms as f64 * self.rows_used * self.cols_used
     }
 
+    /// Sanity-check the counts against the macro's geometry.
     pub fn validate(&self, m: &ImcMacro) -> Result<(), String> {
         if self.rows_used < 0.0 || self.rows_used > m.rows as f64 {
             return Err(format!("rows_used {} out of [0, {}]", self.rows_used, m.rows));
@@ -132,6 +133,7 @@ impl EnergyBreakdown {
         self.dac_fj
     }
 
+    /// Every component scaled by `k` (e.g. × active macros).
     pub fn scaled(&self, k: f64) -> Self {
         EnergyBreakdown {
             wl_fj: self.wl_fj * k,
@@ -144,6 +146,7 @@ impl EnergyBreakdown {
         }
     }
 
+    /// Accumulate another breakdown component-wise.
     pub fn add(&mut self, other: &EnergyBreakdown) {
         self.wl_fj += other.wl_fj;
         self.bl_fj += other.bl_fj;

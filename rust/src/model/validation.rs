@@ -15,12 +15,19 @@ use super::tech::TechParams;
 /// One model-vs-reported comparison point.
 #[derive(Debug, Clone)]
 pub struct ValidationPoint {
+    /// Design name (chip @ operating point).
     pub name: String,
+    /// Family tag (`AIMC`/`DIMC`).
     pub family: String,
+    /// Technology node (nm).
     pub tech_nm: f64,
+    /// Reported peak efficiency (TOP/s/W).
     pub reported_tops_w: f64,
+    /// Model-predicted peak efficiency (TOP/s/W).
     pub modeled_tops_w: f64,
+    /// Reported computational density, when published.
     pub reported_tops_mm2: Option<f64>,
+    /// Model-predicted computational density (TOP/s/mm²).
     pub modeled_tops_mm2: f64,
     /// |modeled − reported| / reported for energy efficiency.
     pub mismatch: f64,
@@ -56,15 +63,22 @@ pub fn validate_design(
 /// Aggregate mismatch statistics over a set of validation points.
 #[derive(Debug, Clone)]
 pub struct ValidationStats {
+    /// Points compared.
     pub n: usize,
+    /// Points within the paper's 15 % band.
     pub n_within_15pct: usize,
+    /// Points the paper flags as known outliers.
     pub n_known_outliers: usize,
+    /// Mean relative mismatch.
     pub mean_mismatch: f64,
+    /// Median relative mismatch.
     pub median_mismatch: f64,
+    /// Worst relative mismatch.
     pub max_mismatch: f64,
 }
 
 impl ValidationStats {
+    /// Aggregate a set of validation points.
     pub fn from_points(points: &[ValidationPoint]) -> Self {
         let mut mismatches: Vec<f64> = points.iter().map(|p| p.mismatch).collect();
         mismatches.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -4,22 +4,32 @@
 /// A labeled scatter series.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Marker character.
     pub label: char,
+    /// (x, y) data points.
     pub points: Vec<(f64, f64)>,
 }
 
 /// Render a scatter plot. `log` switches both axes to log10 scale.
 pub struct ScatterPlot {
+    /// Plot title.
     pub title: String,
+    /// X-axis label.
     pub x_label: String,
+    /// Y-axis label.
     pub y_label: String,
+    /// Plot width in characters.
     pub width: usize,
+    /// Plot height in rows.
     pub height: usize,
+    /// Log-log axes when true.
     pub log: bool,
+    /// Data series.
     pub series: Vec<Series>,
 }
 
 impl ScatterPlot {
+    /// Create an empty plot (72×24 characters by default).
     pub fn new(title: &str, x_label: &str, y_label: &str, log: bool) -> Self {
         ScatterPlot {
             title: title.to_string(),
@@ -32,6 +42,7 @@ impl ScatterPlot {
         }
     }
 
+    /// Add one labeled series.
     pub fn add_series(&mut self, label: char, points: Vec<(f64, f64)>) {
         self.series.push(Series { label, points });
     }

@@ -249,6 +249,67 @@ pub fn fig7_text(results: &[NetworkResult]) -> String {
     )
 }
 
+/// Bit-exact points (infinite SQNR) are plotted at this display ceiling
+/// on the accuracy scatter; the tables print them as `exact`.
+pub const SQNR_PLOT_CAP_DB: f64 = 96.0;
+
+/// The accuracy-vs-energy frontier view of a sweep summary — the
+/// accuracy/efficiency trade-off narrative of the paper (and of the
+/// Sun et al. 2024 follow-up): per (network, sparsity), the Pareto
+/// frontier over (energy, −SQNR) pooled across designs *and precision
+/// points*, rendered as a table plus an ASCII scatter. Analog designs
+/// that buy energy with quantization error and exact digital designs
+/// that pay for bit-true outputs both survive on this frontier.
+pub fn accuracy_tradeoff_text(s: &crate::sweep::SweepSummary) -> String {
+    let mut out = String::new();
+    for (label, front) in &s.accuracy_frontiers {
+        out.push_str(&format!(
+            "\n-- {label}: (energy, SQNR) Pareto frontier — {} points --\n",
+            front.len()
+        ));
+        let mut t = Table::new(&[
+            "design", "prec", "objective", "E [uJ]", "SQNR[dB]", "max|err|", "clip",
+        ]);
+        let mut rows: Vec<&crate::sweep::GridPoint> =
+            front.iter().map(|&i| &s.points[i]).collect();
+        rows.sort_by(|a, b| a.energy_fj.partial_cmp(&b.energy_fj).unwrap());
+        for p in rows {
+            t.row(vec![
+                p.design.clone(),
+                format!("{}x{}", p.weight_bits, p.act_bits),
+                p.objective.to_string(),
+                format!("{:.3}", p.energy_fj * 1e-9),
+                super::sweep::fmt_sqnr(p.sqnr_db),
+                format!("{:.0}", p.max_abs_err),
+                format!("{:.2}%", p.clip_rate * 100.0),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    if !s.points.is_empty() {
+        let mut plot = ScatterPlot::new(
+            "accuracy vs energy, all grid points (A = AIMC, D = DIMC; exact capped at 96 dB)",
+            "energy [uJ]",
+            "SQNR [dB]",
+            true,
+        );
+        for (label, family) in [('A', ImcFamily::Aimc), ('D', ImcFamily::Dimc)] {
+            let pts: Vec<(f64, f64)> = s
+                .points
+                .iter()
+                .filter(|p| p.family == family)
+                .map(|p| (p.energy_fj * 1e-9, p.sqnr_db.min(SQNR_PLOT_CAP_DB).max(0.1)))
+                .collect();
+            if !pts.is_empty() {
+                plot.add_series(label, pts);
+            }
+        }
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

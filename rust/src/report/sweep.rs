@@ -12,6 +12,17 @@ use crate::sweep::{GridPoint, PrecisionPoint, SweepSummary};
 use super::ascii_plot::ScatterPlot;
 use super::table::Table;
 
+/// Render an SQNR for humans: bit-exact datapaths print `exact`. The
+/// single display rule every SQNR cell goes through (sweep tables, the
+/// accuracy-tradeoff view, the `dse` CLI, examples).
+pub fn fmt_sqnr(sqnr_db: f64) -> String {
+    if sqnr_db == f64::INFINITY {
+        "exact".to_string()
+    } else {
+        format!("{sqnr_db:.1}")
+    }
+}
+
 fn point_row(p: &GridPoint) -> Vec<String> {
     vec![
         p.design.clone(),
@@ -26,12 +37,14 @@ fn point_row(p: &GridPoint) -> Vec<String> {
         format!("{:.2}", p.time_ns * 1e-3),
         format!("{:.1}", p.tops_per_watt),
         format!("{:.1}%", p.utilization * 100.0),
+        fmt_sqnr(p.sqnr_db),
+        format!("{:.2}%", p.clip_rate * 100.0),
     ]
 }
 
-const POINT_HEADERS: [&str; 11] = [
+const POINT_HEADERS: [&str; 13] = [
     "design", "network", "prec", "objective", "macros", "cells", "spars", "E [uJ]", "t [us]",
-    "TOP/s/W", "util",
+    "TOP/s/W", "util", "SQNR[dB]", "clip",
 ];
 
 /// Human-readable sweep summary: scope line, per-network Pareto
@@ -100,6 +113,10 @@ pub fn sweep_text(s: &SweepSummary) -> String {
         out.push_str(&plot.render());
     }
 
+    // the accuracy–efficiency trade-off view (paper narrative: analog
+    // designs buy efficiency with quantization error)
+    out.push_str(&super::figures::accuracy_tradeoff_text(s));
+
     // merged shard runs sum independent caches, so label accordingly
     let entries_label = if s.merged {
         " (summed across shard caches)"
@@ -126,11 +143,14 @@ pub fn sweep_text(s: &SweepSummary) -> String {
 /// The sweep CSV column set; [`sweep_csv`] and [`parse_sweep_csv`] must
 /// stay inverses of each other over it. `precision` is the grid-axis
 /// *setting* (`native` or a `WxA` pair); `weight_bits`/`act_bits` are
-/// the realized operand widths of the evaluated macro.
-const CSV_HEADERS: [&str; 18] = [
+/// the realized operand widths of the evaluated macro;
+/// `sqnr_db`/`max_abs_err`/`clip_rate` are the simulated accuracy
+/// record (`sqnr_db` is `inf` for bit-exact datapaths and round-trips
+/// through Rust float formatting).
+const CSV_HEADERS: [&str; 21] = [
     "task", "design", "family", "network", "precision", "weight_bits", "act_bits", "sparsity",
     "objective", "macros", "cells", "energy_fj", "macro_fj", "time_ns", "edp_fj_ns", "tops_w",
-    "util", "pareto",
+    "util", "sqnr_db", "max_abs_err", "clip_rate", "pareto",
 ];
 
 /// Every evaluated grid point as CSV (canonical task order). Floats are
@@ -162,6 +182,9 @@ pub fn sweep_csv(s: &SweepSummary) -> String {
             p.edp().to_string(),
             p.tops_per_watt.to_string(),
             p.utilization.to_string(),
+            p.sqnr_db.to_string(),
+            p.max_abs_err.to_string(),
+            p.clip_rate.to_string(),
             if on_front.contains(&i) { "1".into() } else { "0".into() },
         ]);
     }
@@ -200,12 +223,7 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             "DIMC" => ImcFamily::Dimc,
             _ => return Err(err("family")),
         };
-        let objective = match fields[8] {
-            "energy" => Objective::Energy,
-            "latency" => Objective::Latency,
-            "edp" => Objective::Edp,
-            _ => return Err(err("objective")),
-        };
+        let objective: Objective = fields[8].parse().map_err(|_| err("objective"))?;
         points.push(GridPoint {
             task_index: fields[0].parse().map_err(|_| err("task"))?,
             design: fields[1].to_string(),
@@ -225,6 +243,9 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             time_ns: fields[13].parse().map_err(|_| err("time_ns"))?,
             tops_per_watt: fields[15].parse().map_err(|_| err("tops_w"))?,
             utilization: fields[16].parse().map_err(|_| err("util"))?,
+            sqnr_db: fields[17].parse().map_err(|_| err("sqnr_db"))?,
+            max_abs_err: fields[18].parse().map_err(|_| err("max_abs_err"))?,
+            clip_rate: fields[19].parse().map_err(|_| err("clip_rate"))?,
         });
     }
     Ok(points)
@@ -266,6 +287,15 @@ mod tests {
         assert!(text.contains("@ 2x8"), "{text}");
         assert!(text.contains("@ native"), "{text}");
         assert!(text.contains("prec"), "{text}");
+        // accuracy columns and the trade-off view are rendered
+        assert!(text.contains("SQNR"), "{text}");
+        assert!(text.contains("accuracy-vs-energy"), "{text}");
+    }
+
+    #[test]
+    fn sqnr_formatting_marks_exact_datapaths() {
+        assert_eq!(fmt_sqnr(f64::INFINITY), "exact");
+        assert_eq!(fmt_sqnr(42.0512), "42.1");
     }
 
     #[test]
@@ -310,7 +340,14 @@ mod tests {
             assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
             assert_eq!(a.tops_per_watt.to_bits(), b.tops_per_watt.to_bits());
             assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+            // accuracy columns round-trip too, including infinite SQNR
+            assert_eq!(a.sqnr_db.to_bits(), b.sqnr_db.to_bits());
+            assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
+            assert_eq!(a.clip_rate.to_bits(), b.clip_rate.to_bits());
         }
+        // the grid above carries finite-SQNR (AIMC) points; exact
+        // (infinite) SQNR round-trips through "inf"
+        assert_eq!("inf".parse::<f64>().unwrap(), f64::INFINITY);
     }
 
     #[test]

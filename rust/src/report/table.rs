@@ -3,11 +3,14 @@
 /// Build aligned text tables.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each as wide as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -15,6 +18,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),

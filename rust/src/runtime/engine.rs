@@ -11,6 +11,10 @@ use std::path::Path;
 use std::sync::Mutex;
 
 use crate::anyhow::{anyhow, Context, Result};
+// Uniform-path import: `xla::…` below resolves to the in-crate stub
+// (`crate::xla`) unless a real `xla` crate is patched in — mirroring
+// the `crate::anyhow` shim arrangement.
+use crate::xla;
 
 use super::manifest::{DesignArtifacts, Manifest, TensorSpec};
 
@@ -56,14 +60,17 @@ impl Engine {
         })
     }
 
+    /// The artifact manifest this engine serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name of the backing client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Look up a design's artifacts by name.
     pub fn design(&self, name: &str) -> Result<&DesignArtifacts> {
         self.manifest
             .designs

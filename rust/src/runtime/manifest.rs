@@ -13,11 +13,14 @@ use crate::util::json::{self, Json};
 /// Tensor interface of one executable input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Tensor dimensions, row-major.
     pub shape: Vec<usize>,
+    /// Element dtype tag (e.g. `s32`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -26,9 +29,13 @@ impl TensorSpec {
 /// One HLO artifact file.
 #[derive(Debug, Clone)]
 pub struct ArtifactFile {
+    /// Path of the HLO-text file.
     pub path: PathBuf,
+    /// Content digest recorded at AOT-compile time.
     pub sha256: String,
+    /// Input tensor interfaces, in argument order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor interfaces.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -36,42 +43,63 @@ pub struct ArtifactFile {
 /// `MacroConfig`).
 #[derive(Debug, Clone)]
 pub struct ArtifactConfig {
+    /// Macro family tag (`aimc`/`dimc`).
     pub family: String,
+    /// Physical SRAM rows.
     pub rows: usize,
+    /// Weight operands per row.
     pub d1: usize,
+    /// Weight precision (bits).
     pub weight_bits: u32,
+    /// Activation precision (bits).
     pub act_bits: u32,
+    /// DAC / input slice resolution (bits).
     pub dac_res: u32,
+    /// ADC resolution (bits; 0 for DIMC).
     pub adc_res: u32,
+    /// Bit-serial input slices per activation.
     pub n_slices: u32,
+    /// ADC LSB step baked into the kernel.
     pub adc_lsb: f64,
 }
 
 /// One design's artifacts.
 #[derive(Debug, Clone)]
 pub struct DesignArtifacts {
+    /// Design name (matches the case-study system names).
     pub name: String,
+    /// Macro configuration the kernels were specialized for.
     pub config: ArtifactConfig,
+    /// The bit-true macro datapath executable.
     pub mvm: ArtifactFile,
+    /// The exact integer reference executable.
     pub reference: ArtifactFile,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Batch size every execution must be padded to.
     pub batch: usize,
+    /// Directory the artifact paths are relative to.
     pub dir: PathBuf,
+    /// Artifacts per design name.
     pub designs: BTreeMap<String, DesignArtifacts>,
 }
 
 /// Manifest loading errors.
 #[derive(Debug)]
 pub enum ManifestError {
+    /// The manifest (or an artifact file) could not be read.
     Io {
+        /// Path that failed.
         path: String,
+        /// Underlying I/O error.
         source: std::io::Error,
     },
+    /// The manifest is not valid JSON of the expected shape.
     Json(String),
+    /// A referenced artifact is missing on disk.
     Missing(String),
 }
 

@@ -1,0 +1,130 @@
+//! Quantization-error metrics of a functional simulation.
+//!
+//! The record keeps *raw sums* (signal energy, noise energy, conversion
+//! counts) rather than derived ratios, so records merge associatively:
+//! a network-level record is the plain sum of its layers', and the
+//! derived SQNR / clip rate are computed on demand. All fields
+//! round-trip bit-exactly through the persistent sweep cache.
+
+/// Quantization-error record of one simulation (one layer, or a merged
+/// set of layers).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccuracyRecord {
+    /// Σ reference² over the sampled outputs (signal energy).
+    pub signal: f64,
+    /// Σ (simulated − reference)² over the sampled outputs (noise
+    /// energy). `0` means the datapath was bit-exact.
+    pub noise: f64,
+    /// Largest |simulated − reference| over the sampled outputs.
+    pub max_abs_err: f64,
+    /// Sampled outputs accumulated into this record.
+    pub outputs: u64,
+    /// ADC conversions performed (0 for DIMC).
+    pub conversions: u64,
+    /// Conversions that clipped at the ADC full scale.
+    pub clipped: u64,
+}
+
+impl AccuracyRecord {
+    /// Fold one simulated output into the record.
+    pub fn record_output(&mut self, exact: i64, simulated: i64) {
+        let e = exact as f64;
+        let err = (simulated - exact) as f64;
+        self.signal += e * e;
+        self.noise += err * err;
+        self.max_abs_err = self.max_abs_err.max(err.abs());
+        self.outputs += 1;
+    }
+
+    /// Merge another record (layer → network aggregation). Associative
+    /// and commutative up to IEEE addition order — callers must merge
+    /// in a deterministic order (the sweep merges layers in network
+    /// order).
+    pub fn merge(&mut self, other: &AccuracyRecord) {
+        self.signal += other.signal;
+        self.noise += other.noise;
+        self.max_abs_err = self.max_abs_err.max(other.max_abs_err);
+        self.outputs += other.outputs;
+        self.conversions += other.conversions;
+        self.clipped += other.clipped;
+    }
+
+    /// Signal-to-quantization-noise ratio in dB;
+    /// [`f64::INFINITY`] for a bit-exact datapath (zero noise).
+    pub fn sqnr_db(&self) -> f64 {
+        if self.noise == 0.0 {
+            f64::INFINITY
+        } else {
+            10.0 * (self.signal / self.noise).log10()
+        }
+    }
+
+    /// Fraction of ADC conversions that clipped (0 when converter-free).
+    pub fn clip_rate(&self) -> f64 {
+        if self.conversions == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.conversions as f64
+        }
+    }
+
+    /// True when the simulated datapath reproduced every sampled output
+    /// exactly (DIMC always; AIMC with a fully-provisioned ADC).
+    pub fn is_exact(&self) -> bool {
+        self.noise == 0.0 && self.max_abs_err == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_record_has_infinite_sqnr() {
+        let mut r = AccuracyRecord::default();
+        r.record_output(100, 100);
+        r.record_output(-40, -40);
+        assert!(r.is_exact());
+        assert_eq!(r.sqnr_db(), f64::INFINITY);
+        assert_eq!(r.clip_rate(), 0.0);
+        assert_eq!(r.outputs, 2);
+    }
+
+    #[test]
+    fn noisy_record_metrics() {
+        let mut r = AccuracyRecord::default();
+        r.record_output(100, 90); // err 10
+        r.record_output(50, 53); // err 3
+        assert!(!r.is_exact());
+        assert_eq!(r.max_abs_err, 10.0);
+        let expect = 10.0 * ((100.0f64 * 100.0 + 50.0 * 50.0) / (100.0 + 9.0)).log10();
+        assert!((r.sqnr_db() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_pools_sums_and_maxima() {
+        let mut a = AccuracyRecord {
+            signal: 4.0,
+            noise: 1.0,
+            max_abs_err: 1.0,
+            outputs: 2,
+            conversions: 10,
+            clipped: 1,
+        };
+        let b = AccuracyRecord {
+            signal: 6.0,
+            noise: 0.0,
+            max_abs_err: 3.0,
+            outputs: 3,
+            conversions: 0,
+            clipped: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.signal, 10.0);
+        assert_eq!(a.noise, 1.0);
+        assert_eq!(a.max_abs_err, 3.0);
+        assert_eq!(a.outputs, 5);
+        assert_eq!((a.conversions, a.clipped), (10, 1));
+        assert!((a.clip_rate() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bit-true functional MVM simulator — the accuracy half of the
+//! accuracy–efficiency–flexibility space (paper §I; Sun et al. 2024).
+//!
+//! The cost model prices a datapath; this module *executes* it, std-only
+//! and deterministic, so task-level quantization error becomes a sweep
+//! axis that runs in CI without the `xla` runtime. The simulator mirrors
+//! the cost model's datapath contracts, module for module:
+//!
+//! * **DIMC** — exact integer multiply-accumulate at the adder-tree
+//!   width ([`crate::model::adder_tree::accumulation_full_adders`]'s
+//!   operand roles): bit-serial input slices, full-width signed weights,
+//!   no data converters — zero quantization error by construction.
+//! * **AIMC** — activations stream through the DAC slice rule
+//!   ([`crate::model::dac::cycles_per_activation`]), weights are stored
+//!   offset-binary and bit-sliced across `B_w` bitlines, every bitline
+//!   sum passes an ADC transfer whose range/step is derived from the
+//!   macro's own `adc_res`/`dac_res`/D2 fields (the same fields
+//!   [`crate::model::adc::requantized_resolution`] re-derives), clipping
+//!   at full scale and truncating sub-LSB bits; shift-add recombination
+//!   and the digital offset removal are exact.
+//! * **Partial sums** — reductions longer than the array fold into
+//!   `ceil(red / rows)` chunks recombined exactly at the recombination
+//!   width, as in the cost model's tiling.
+//!
+//! Inputs follow the deterministic PRNG tensor protocol
+//! ([`tensor::generate`]): seeded from the layer *shape* and precision
+//! only, so every design is judged on identical tensors and every
+//! shard/thread/warm-cache run reproduces identical bits. The output is
+//! an [`AccuracyRecord`] (SQNR, max-abs error, clip rate) that
+//! [`crate::dse`] attaches to every layer search and the sweep memoizes
+//! alongside cost (`docs/COST_MODEL.md` § Accuracy model).
+
+pub mod metrics;
+pub mod mvm;
+pub mod tensor;
+
+pub use metrics::AccuracyRecord;
+pub use mvm::{layer_accuracy, macro_reduce, AdcTransfer, ConvStats};
+pub use tensor::{generate, layer_seed, LayerTensors};

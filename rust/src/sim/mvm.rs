@@ -1,0 +1,342 @@
+//! The bit-true macro datapath: DIMC exact accumulation, AIMC
+//! DAC-sliced / ADC-converted accumulation, exact partial-sum
+//! recombination.
+//!
+//! The simulator evaluates one *reduction* (one output element's dot
+//! product) the way the hardware template retires it:
+//!
+//! ```text
+//! reduction (len = C·FX·FY)
+//!   └─ chunks of `rows` resident weights      — recombined exactly
+//!        └─ row-mux groups of D2 rows          — adder-tree / bitline sum
+//!             └─ bit-serial input slices       — ceil(B_a / DAC_res) cycles
+//!                  └─ AIMC only: B_w weight bit-slices → one ADC each
+//! ```
+//!
+//! AIMC stores weights **offset-binary** (`w + 2^(B_w-1)`, all-positive
+//! cells) and removes the offset digitally — the standard trick of the
+//! surveyed charge-domain macros. This makes every ADC error a
+//! *deficit* (truncated LSBs and clipped full-scale both reconstruct at
+//! or below the true bitline value), so the per-output error is a
+//! non-negative sum of per-conversion deficits — and therefore
+//! pointwise non-increasing in the ADC resolution, the monotonicity the
+//! contract tests lock down.
+
+use crate::arch::{ImcFamily, ImcMacro};
+use crate::model::adder_tree;
+use crate::workload::Layer;
+
+use super::metrics::AccuracyRecord;
+use super::tensor;
+
+/// ADC conversion counters accumulated over a simulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConvStats {
+    /// Total ADC conversions performed.
+    pub conversions: u64,
+    /// Conversions whose input exceeded the ADC full scale.
+    pub clipped: u64,
+}
+
+/// The ADC transfer function of an AIMC macro, derived from the same
+/// fields the cost model prices ([`crate::model::adc`]): an `adc_res`-bit
+/// uniform converter whose range covers `2^(DAC_res + floor(log2 D2))`
+/// bitline levels. When that range undershoots the requirement
+/// (`adc_res < DAC_res + log2 D2`, the under-provisioning the survey
+/// designs accept), the converter truncates the `shift` least
+/// significant bits and clips at full scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdcTransfer {
+    /// Truncated LSBs per conversion (`0` = quantization-free).
+    pub shift: u32,
+    /// Largest output code (`2^adc_res - 1`).
+    pub max_code: i64,
+}
+
+impl AdcTransfer {
+    /// Derive the transfer for a macro; `None` for DIMC (no converters).
+    pub fn for_macro(m: &ImcMacro) -> Option<AdcTransfer> {
+        match m.family {
+            ImcFamily::Dimc => None,
+            ImcFamily::Aimc => {
+                let d2 = m.d2().max(1) as u64;
+                let floor_log2 = 63 - d2.leading_zeros();
+                let covered_bits = m.dac_res + floor_log2;
+                Some(AdcTransfer {
+                    shift: covered_bits.saturating_sub(m.adc_res),
+                    max_code: (1i64 << m.adc_res) - 1,
+                })
+            }
+        }
+    }
+
+    /// Largest bitline value reconstructed without clipping.
+    pub fn full_scale(&self) -> i64 {
+        self.max_code << self.shift
+    }
+
+    /// Digitize one non-negative bitline value and reconstruct it at
+    /// the recombination input. The reconstruction never exceeds the
+    /// true value (truncation and clipping are both deficits).
+    pub fn convert(&self, v: i64, stats: &mut ConvStats) -> i64 {
+        debug_assert!(v >= 0, "bitline sums are unsigned");
+        stats.conversions += 1;
+        let code = v >> self.shift;
+        if code > self.max_code {
+            stats.clipped += 1;
+            self.full_scale()
+        } else {
+            code << self.shift
+        }
+    }
+}
+
+/// One macro-resident chunk (`len <= rows`): bit-serial slices over the
+/// family's accumulation datapath.
+fn chunk_mvm(
+    m: &ImcMacro,
+    adc: Option<&AdcTransfer>,
+    w: &[i64],
+    a: &[i64],
+    stats: &mut ConvStats,
+) -> i64 {
+    debug_assert_eq!(w.len(), a.len());
+    let n_slices = m.n_slices();
+    let dac = m.dac_res.max(1);
+    let slice_mask = (1i64 << dac) - 1;
+    match adc {
+        // DIMC: digital multiply at the cell, exact adder-tree
+        // accumulation per D2 row-mux group, exact shift-add across
+        // slices and mux steps.
+        None => {
+            let d2 = m.d2().max(1);
+            let mut acc = 0i64;
+            for s in 0..n_slices {
+                let mut slice_sum = 0i64;
+                for (wg, ag) in w.chunks(d2).zip(a.chunks(d2)) {
+                    let mut tree = 0i64;
+                    for (&wi, &ai) in wg.iter().zip(ag) {
+                        tree += wi * ((ai >> (s * dac)) & slice_mask);
+                    }
+                    // the signed sum fits the Eq. 9–10 tree width for
+                    // (B_w + DAC_res - 1)-bit products over D2 inputs
+                    let ob = adder_tree::output_bits(d2, m.weight_bits + dac);
+                    debug_assert!(
+                        tree.unsigned_abs() <= 1u64 << (ob.min(62) - 1),
+                        "adder-tree width contract violated"
+                    );
+                    slice_sum += tree;
+                }
+                acc += slice_sum << (s * dac);
+            }
+            acc
+        }
+        // AIMC: offset-binary weight bit-slices on B_w bitlines, one
+        // ADC conversion per (slice, bitline), exact shift-add
+        // recombination, exact digital offset removal.
+        Some(adc) => {
+            let bw = m.weight_bits;
+            let offset = 1i64 << (bw - 1);
+            let act_sum: i64 = a.iter().sum();
+            let mut acc = 0i64;
+            for s in 0..n_slices {
+                for b in 0..bw {
+                    let mut bl = 0i64;
+                    for (&wi, &ai) in w.iter().zip(a) {
+                        let wbit = ((wi + offset) >> b) & 1;
+                        bl += wbit * ((ai >> (s * dac)) & slice_mask);
+                    }
+                    acc += adc.convert(bl, stats) << (b + s * dac);
+                }
+            }
+            acc - offset * act_sum
+        }
+    }
+}
+
+/// Simulate one full reduction (any length) on one macro: the reduction
+/// folds into chunks of `rows` resident weights; chunk partial sums are
+/// recombined exactly at the recombination width, mirroring the cost
+/// model's tiling.
+pub fn macro_reduce(
+    m: &ImcMacro,
+    adc: Option<&AdcTransfer>,
+    weights: &[i64],
+    acts: &[i64],
+    stats: &mut ConvStats,
+) -> i64 {
+    debug_assert_eq!(weights.len(), acts.len());
+    let rows = m.rows.max(1);
+    weights
+        .chunks(rows)
+        .zip(acts.chunks(rows))
+        .map(|(wc, ac)| chunk_mvm(m, adc, wc, ac, stats))
+        .sum()
+}
+
+/// Simulate the sampled outputs of one layer on one macro and compare
+/// against the exact integer reference: the per-(design, precision)
+/// quantization-error record the DSE attaches to every layer search.
+/// Pure and deterministic — identical bits for any shard count, thread
+/// count or cache temperature.
+pub fn layer_accuracy(layer: &Layer, m: &ImcMacro) -> AccuracyRecord {
+    let t = tensor::generate(layer, m.precision());
+    let adc = AdcTransfer::for_macro(m);
+    let mut rec = AccuracyRecord::default();
+    let mut stats = ConvStats::default();
+    for w in &t.weights {
+        for x in &t.inputs {
+            let exact: i64 = w.iter().zip(x).map(|(&wi, &xi)| wi * xi).sum();
+            let got = macro_reduce(m, adc.as_ref(), w, x, &mut stats);
+            rec.record_output(exact, got);
+        }
+    }
+    rec.conversions = stats.conversions;
+    rec.clipped = stats.clipped;
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+
+    fn aimc(rows: usize, dac: u32, adc: u32) -> ImcMacro {
+        ImcMacro::new("a", ImcFamily::Aimc, rows, 256, 4, 4, dac, adc, 0.8, 28.0)
+    }
+
+    fn dimc(rows: usize) -> ImcMacro {
+        ImcMacro::new("d", ImcFamily::Dimc, rows, 256, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    #[test]
+    fn dimc_reduce_is_exact() {
+        let m = dimc(16);
+        let w: Vec<i64> = (0..40).map(|i| (i % 16) - 8).collect();
+        let a: Vec<i64> = (0..40).map(|i| (i * 7) % 16).collect();
+        let exact: i64 = w.iter().zip(&a).map(|(x, y)| x * y).sum();
+        let mut st = ConvStats::default();
+        assert_eq!(macro_reduce(&m, None, &w, &a, &mut st), exact);
+        assert_eq!(st, ConvStats::default());
+    }
+
+    #[test]
+    fn aimc_reduce_exact_when_fully_provisioned() {
+        // adc_res >= dac + ceil(log2 d2) + 1: shift 0 and no clipping
+        let m = aimc(16, 4, 10);
+        let adc = AdcTransfer::for_macro(&m).unwrap();
+        assert_eq!(adc.shift, 0);
+        let w: Vec<i64> = (0..16).map(|i| i - 8).collect();
+        let a: Vec<i64> = (0..16).map(|i| (i * 5) % 16).collect();
+        let exact: i64 = w.iter().zip(&a).map(|(x, y)| x * y).sum();
+        let mut st = ConvStats::default();
+        let got = macro_reduce(&m, Some(&adc), &w, &a, &mut st);
+        assert_eq!(got, exact);
+        assert_eq!(st.clipped, 0);
+        // one conversion per (slice, bitline) per chunk
+        assert_eq!(st.conversions, (m.n_slices() * m.weight_bits) as u64);
+    }
+
+    #[test]
+    fn aimc_reconstruction_never_exceeds_truth() {
+        // under-provisioned ADC: every reconstructed output is at or
+        // below the exact value (offset-binary deficit property)
+        let m = aimc(64, 4, 6);
+        let adc = AdcTransfer::for_macro(&m).unwrap();
+        assert!(adc.shift > 0);
+        let w: Vec<i64> = (0..64).map(|i| ((i * 11) % 16) - 8).collect();
+        let a: Vec<i64> = (0..64).map(|i| (i * 3) % 16).collect();
+        let exact: i64 = w.iter().zip(&a).map(|(x, y)| x * y).sum();
+        let mut st = ConvStats::default();
+        let got = macro_reduce(&m, Some(&adc), &w, &a, &mut st);
+        assert!(got <= exact, "reconstruction {got} above exact {exact}");
+    }
+
+    #[test]
+    fn adc_transfer_clips_at_full_scale() {
+        let t = AdcTransfer { shift: 2, max_code: 15 };
+        let mut st = ConvStats::default();
+        // in range: truncates the 2 LSBs
+        assert_eq!(t.convert(13, &mut st), 12);
+        assert_eq!(st.clipped, 0);
+        // beyond full scale: clips
+        assert_eq!(t.convert(1000, &mut st), t.full_scale());
+        assert_eq!((st.conversions, st.clipped), (2, 1));
+        assert_eq!(t.full_scale(), 60);
+    }
+
+    #[test]
+    fn partial_sum_recombination_splits_long_reductions() {
+        // a reduction longer than the array must recombine exactly for
+        // DIMC and count conversions per chunk for AIMC
+        let m = aimc(8, 4, 12);
+        let adc = AdcTransfer::for_macro(&m).unwrap();
+        let w: Vec<i64> = (0..20).map(|i| (i % 16) - 8).collect();
+        let a: Vec<i64> = (0..20).map(|i| (i * 7) % 16).collect();
+        let exact: i64 = w.iter().zip(&a).map(|(x, y)| x * y).sum();
+        let mut st = ConvStats::default();
+        let got = macro_reduce(&m, Some(&adc), &w, &a, &mut st);
+        assert_eq!(got, exact, "fully-provisioned ADC must be exact");
+        // ceil(20 / 8) = 3 chunks
+        assert_eq!(st.conversions, 3 * (m.n_slices() * m.weight_bits) as u64);
+    }
+
+    #[test]
+    fn layer_accuracy_exact_for_dimc_and_lossy_for_starved_aimc() {
+        let l = Layer::dense("fc", 32, 96);
+        let exact = layer_accuracy(&l, &dimc(64));
+        assert!(exact.is_exact(), "{exact:?}");
+        assert_eq!(exact.sqnr_db(), f64::INFINITY);
+        assert_eq!(exact.conversions, 0);
+        let lossy = layer_accuracy(&l, &aimc(64, 4, 4));
+        assert!(lossy.noise > 0.0, "starved ADC produced no error");
+        assert!(lossy.sqnr_db().is_finite());
+        assert!(lossy.max_abs_err > 0.0);
+        assert!(lossy.conversions > 0);
+    }
+
+    #[test]
+    fn aimc_error_monotone_non_increasing_in_adc_resolution() {
+        let l = Layer::conv2d("c", 8, 8, 16, 8, 3, 3, 1);
+        let mut last_noise = f64::INFINITY;
+        let mut last_max = f64::INFINITY;
+        for adc_res in 2..=12 {
+            let m = aimc(128, 4, adc_res);
+            let r = layer_accuracy(&l, &m);
+            assert!(
+                r.noise <= last_noise,
+                "adc {adc_res}: noise {} above {}",
+                r.noise,
+                last_noise
+            );
+            assert!(r.max_abs_err <= last_max);
+            last_noise = r.noise;
+            last_max = r.max_abs_err;
+        }
+        // at full provisioning the simulation is exact
+        let m = aimc(128, 4, 4 + 7 + 1);
+        assert!(layer_accuracy(&l, &m).is_exact());
+    }
+
+    #[test]
+    fn accuracy_is_design_independent_of_tensor_draw() {
+        // two designs at the same precision see the same exact signal
+        let l = Layer::dense("fc", 32, 128);
+        let a = layer_accuracy(&l, &aimc(64, 4, 8));
+        let b = layer_accuracy(&l, &dimc(256));
+        assert_eq!(a.signal.to_bits(), b.signal.to_bits());
+        assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
+    fn requantization_preserves_the_adc_slack() {
+        // the ADC shifts 1:1 with the DAC under requantization
+        // (model::adc::requantized_resolution), so the transfer's
+        // truncation depth is invariant
+        let m = ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0);
+        let native = AdcTransfer::for_macro(&m).unwrap();
+        let re = m.requantized(Precision::new(4, 2)).unwrap();
+        let requant = AdcTransfer::for_macro(&re).unwrap();
+        assert_eq!(native.shift, requant.shift);
+    }
+}

@@ -1,0 +1,133 @@
+//! Deterministic PRNG tensor protocol for the functional simulator.
+//!
+//! The accuracy of a (design, precision) point must be comparable across
+//! designs and reproducible across shards, threads and warm-cache runs,
+//! so the tensors are a pure function of the layer *shape* (name
+//! excluded, like the sweep cost cache) and the operand precision —
+//! never of the design evaluated on them. Weights are signed
+//! `B_w`-bit integers, activations unsigned `B_a`-bit integers (the
+//! convention of the surveyed macros: signed weights, post-ReLU
+//! activations), drawn uniformly from [`crate::util::prng::Rng`]
+//! seeded with [`layer_seed`]; weights are drawn first, then inputs
+//! (the draw order is part of the protocol — changing it is a
+//! cost-cache schema change, see `docs/COST_MODEL.md`).
+
+use crate::arch::Precision;
+use crate::util::prng::Rng;
+use crate::workload::{Layer, LayerType};
+
+/// Input vectors sampled per layer.
+pub const N_VECTORS: usize = 8;
+
+/// Output channels sampled per layer (capped; layers with fewer
+/// channels use what they have).
+pub const MAX_CHANNELS: usize = 8;
+
+/// Sampled operands for one (layer shape, precision) point.
+#[derive(Debug, Clone)]
+pub struct LayerTensors {
+    /// One signed weight vector per sampled output channel, each
+    /// `layer.reduction_size()` long, values in `[-2^(B_w-1), 2^(B_w-1)-1]`.
+    pub weights: Vec<Vec<i64>>,
+    /// Sampled input vectors, each `layer.reduction_size()` long,
+    /// values in `[0, 2^B_a - 1]`.
+    pub inputs: Vec<Vec<i64>>,
+}
+
+fn fold(h: u64, v: u64) -> u64 {
+    // FNV-1a over 64-bit words: cheap, stable across platforms
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// Deterministic seed for a (layer shape, precision) point. The layer
+/// *name* is deliberately excluded — identically-shaped layers of
+/// different networks share tensors, exactly as they share cost-cache
+/// entries.
+pub fn layer_seed(layer: &Layer, p: Precision) -> u64 {
+    let tag = match layer.ltype {
+        LayerType::Conv2d => 1u64,
+        LayerType::Depthwise => 2,
+        LayerType::Pointwise => 3,
+        LayerType::Dense => 4,
+    };
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = fold(h, tag);
+    for d in [
+        layer.b, layer.g, layer.k, layer.c, layer.ox, layer.oy, layer.fx, layer.fy, layer.stride,
+    ] {
+        h = fold(h, d as u64);
+    }
+    h = fold(h, p.weight_bits as u64);
+    h = fold(h, p.act_bits as u64);
+    h
+}
+
+/// Generate the sampled tensors for one (layer shape, precision) point.
+pub fn generate(layer: &Layer, p: Precision) -> LayerTensors {
+    let red = layer.reduction_size();
+    let n_out = (layer.k * layer.g).clamp(1, MAX_CHANNELS);
+    let mut rng = Rng::new(layer_seed(layer, p));
+    let w_lo = -(1i64 << (p.weight_bits - 1));
+    let w_hi = (1i64 << (p.weight_bits - 1)) - 1;
+    let a_hi = (1i64 << p.act_bits) - 1;
+    let weights = (0..n_out)
+        .map(|_| (0..red).map(|_| rng.range_i64(w_lo, w_hi)).collect())
+        .collect();
+    let inputs = (0..N_VECTORS)
+        .map(|_| (0..red).map(|_| rng.range_i64(0, a_hi)).collect())
+        .collect();
+    LayerTensors { weights, inputs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_ignores_name_but_not_shape_or_precision() {
+        let a = Layer::dense("fc_a", 64, 256);
+        let b = Layer::dense("fc_b", 64, 256);
+        let p = Precision::new(4, 4);
+        assert_eq!(layer_seed(&a, p), layer_seed(&b, p));
+        let wider = Layer::dense("fc_a", 64, 512);
+        assert_ne!(layer_seed(&a, p), layer_seed(&wider, p));
+        assert_ne!(layer_seed(&a, p), layer_seed(&a, Precision::new(8, 8)));
+    }
+
+    #[test]
+    fn tensors_are_deterministic_and_in_range() {
+        let l = Layer::conv2d("c", 8, 8, 16, 4, 3, 3, 1);
+        let p = Precision::new(4, 4);
+        let t1 = generate(&l, p);
+        let t2 = generate(&l, p);
+        assert_eq!(t1.weights, t2.weights);
+        assert_eq!(t1.inputs, t2.inputs);
+        assert_eq!(t1.weights.len(), MAX_CHANNELS.min(16));
+        assert_eq!(t1.inputs.len(), N_VECTORS);
+        for w in &t1.weights {
+            assert_eq!(w.len(), l.reduction_size());
+            assert!(w.iter().all(|&v| (-8..=7).contains(&v)));
+        }
+        for x in &t1.inputs {
+            assert!(x.iter().all(|&v| (0..=15).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn one_bit_weights_are_twos_complement() {
+        let l = Layer::dense("fc", 16, 64);
+        let t = generate(&l, Precision::new(1, 4));
+        for w in &t.weights {
+            assert!(w.iter().all(|&v| v == -1 || v == 0));
+        }
+    }
+
+    #[test]
+    fn depthwise_samples_group_channels() {
+        // depthwise has K=1 but G channels: the sample must still cover
+        // several output channels
+        let l = Layer::depthwise("dw", 24, 24, 64, 3, 3, 1);
+        let t = generate(&l, Precision::new(4, 4));
+        assert_eq!(t.weights.len(), MAX_CHANNELS);
+    }
+}

@@ -14,8 +14,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::arch::{ImcFamily, ImcSystem};
-use crate::dse::{search_layer_all, DseOptions, LayerEvaluator, LayerResult, LayerSearch};
-use crate::mapping::TemporalPolicy;
+use crate::dse::{
+    search_layer_all_seeded, DseOptions, LayerEvaluator, LayerResult, LayerSearch,
+};
+use crate::mapping::{SpatialMapping, TemporalPolicy};
 use crate::model::TechParams;
 use crate::workload::{Layer, LayerType};
 
@@ -62,6 +64,7 @@ pub struct CostKey {
 }
 
 impl CostKey {
+    /// Fingerprint one (layer, system, tech, options) search setting.
     pub fn new(
         layer: &Layer,
         sys: &ImcSystem,
@@ -125,8 +128,11 @@ impl CostKey {
 /// several merged shards).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that ran a search.
     pub misses: u64,
+    /// Entries currently held.
     pub entries: usize,
     /// Mapping candidates fully costed across all cache misses.
     pub evaluated: u64,
@@ -136,10 +142,12 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Total lookups (hits + misses).
     pub fn lookups(&self) -> u64 {
         self.hits + self.misses
     }
 
+    /// Fraction of lookups answered from the cache.
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {
             0.0
@@ -191,20 +199,38 @@ impl CacheStats {
 /// a [`LayerEvaluator`]. Misses are computed outside the lock, so
 /// concurrent first lookups of the same key may both evaluate (both
 /// count as misses; the first insert wins).
+///
+/// **Cross-layer bound carryover.** Beside the exact-result map, the
+/// cache keeps the winning (spatial, policy) candidates of every search
+/// indexed by the key *with the sparsity field erased*. A miss whose
+/// shape/system/policy fingerprint was searched before at another
+/// sparsity warm-starts [`search_layer_all_seeded`] with those
+/// candidates: pruning bites from the first stream element, the optima
+/// stay bit-identical to the unpruned reference (the seeded search's
+/// guarantee), only the evaluated/pruned *statistics* may depend on
+/// which sparsity happened to be searched first.
 #[derive(Default)]
 pub struct CostCache {
     map: Mutex<HashMap<CostKey, LayerSearch>>,
+    /// Winning mappings per sparsity-erased key (the seed index).
+    seeds: Mutex<HashMap<CostKey, Vec<(SpatialMapping, TemporalPolicy)>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evaluated: AtomicU64,
     pruned: AtomicU64,
 }
 
+/// Bit pattern no legal sparsity produces (a quiet NaN): the sentinel
+/// that erases the sparsity field of a seed-index key.
+const SEED_SPARSITY_SENTINEL: u64 = u64::MAX;
+
 impl CostCache {
+    /// An empty cache.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Snapshot the counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -215,7 +241,8 @@ impl CostCache {
         }
     }
 
-    /// Memoized [`search_layer_all`].
+    /// Memoized [`crate::dse::search_layer_all`], warm-started across
+    /// identically-shaped entries (see the type docs).
     pub fn search(
         &self,
         layer: &Layer,
@@ -230,9 +257,23 @@ impl CostCache {
             return hit.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let search = search_layer_all(layer, sys, tech, input_sparsity, policy);
+        let mut seed_key = key.clone();
+        seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
+        let seeds = self
+            .seeds
+            .lock()
+            .unwrap()
+            .get(&seed_key)
+            .cloned()
+            .unwrap_or_default();
+        let search =
+            search_layer_all_seeded(layer, sys, tech, input_sparsity, policy, &seeds);
         self.evaluated.fetch_add(search.evaluated as u64, Ordering::Relaxed);
         self.pruned.fetch_add(search.pruned as u64, Ordering::Relaxed);
+        self.seeds
+            .lock()
+            .unwrap()
+            .insert(seed_key, search.seed_mappings());
         self.map
             .lock()
             .unwrap()
@@ -242,8 +283,15 @@ impl CostCache {
     }
 
     /// Pre-seed an entry without touching the hit/miss counters (the
-    /// disk-cache load path).
+    /// disk-cache load path). The entry's winners also join the seed
+    /// index, so a warm cache warm-starts sparsities it has not seen.
     pub(crate) fn preload(&self, key: CostKey, search: LayerSearch) {
+        let mut seed_key = key.clone();
+        seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
+        self.seeds
+            .lock()
+            .unwrap()
+            .insert(seed_key, search.seed_mappings());
         self.map.lock().unwrap().insert(key, search);
     }
 
@@ -275,7 +323,7 @@ impl LayerEvaluator for CostCache {
 mod tests {
     use super::*;
     use crate::arch::table2_systems;
-    use crate::dse::{search_layer, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY};
+    use crate::dse::{search_layer, Objective, COST_OBJECTIVES, DEFAULT_SPARSITY};
 
     fn ctx() -> (ImcSystem, TechParams) {
         let sys = table2_systems().remove(1); // aimc_multi: cheap search
@@ -343,6 +391,30 @@ mod tests {
     }
 
     #[test]
+    fn cross_sparsity_seed_carryover_stays_bit_identical() {
+        // the second sparsity's miss is warm-started from the first
+        // search's winners; its optima must still equal the unpruned
+        // reference bit for bit, with the space fully accounted
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        cache.search(&l, &sys, &tech, 0.3, None);
+        let seeded = cache.search(&l, &sys, &tech, 0.8, None);
+        let reference = crate::dse::search_layer_all_unpruned(&l, &sys, &tech, 0.8, None);
+        assert_eq!(seeded.evaluated + seeded.pruned, reference.evaluated);
+        for objective in COST_OBJECTIVES {
+            let a = seeded.best(objective);
+            let b = reference.best(objective);
+            assert_eq!(a.total_energy_fj().to_bits(), b.total_energy_fj().to_bits());
+            assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.spatial, b.spatial);
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
+    }
+
+    #[test]
     fn requantized_systems_key_separately() {
         use crate::arch::Precision;
         let (sys, tech) = ctx();
@@ -365,7 +437,7 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
-        for objective in ALL_OBJECTIVES {
+        for objective in COST_OBJECTIVES {
             let opts = DseOptions {
                 objective,
                 ..Default::default()

@@ -11,6 +11,13 @@
 //! designs that cannot realize a precision are skipped, so a grid may
 //! legitimately evaluate fewer points than `n_tasks()`.
 //!
+//! Every grid point also carries the bit-true simulator's accuracy
+//! record ([`crate::sim`]): SQNR, max-abs error and ADC clip rate of the
+//! network on that (design, precision) — memoized alongside cost in the
+//! [`CostCache`] — and the summary exposes per-(network, sparsity)
+//! accuracy-vs-energy frontiers pooled across precision points, so
+//! precision trades accuracy, not just energy/latency.
+//!
 //! Shard-determinism invariant: tasks are numbered in canonical order
 //! (systems → networks → precisions → sparsities → objectives) and
 //! whole *(design, network, precision, sparsity)* groups are dealt
@@ -23,9 +30,10 @@
 use crate::arch::{ImcFamily, ImcSystem, Precision};
 use crate::db;
 use crate::dse::{
-    pareto_front, LayerResult, NetworkResult, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY,
+    pareto_front, LayerResult, NetworkResult, Objective, COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use crate::model::TechParams;
+use crate::sim::AccuracyRecord;
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{all_networks, Network};
 
@@ -89,7 +97,9 @@ impl std::fmt::Display for PrecisionPoint {
 /// then networks, then precisions, then sparsities, then objectives.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
+    /// Design axis: the systems evaluated.
     pub systems: Vec<ImcSystem>,
+    /// Workload axis: the networks evaluated.
     pub networks: Vec<Network>,
     /// Precision grid axis: each design is re-quantized to each point
     /// (`Native` = published operating point); unrealizable
@@ -97,6 +107,7 @@ pub struct SweepGrid {
     pub precisions: Vec<PrecisionPoint>,
     /// Activation-sparsity grid axis (every value in [0, 1]).
     pub sparsities: Vec<f64>,
+    /// Objective axis (cost objectives; accuracy rides as columns).
     pub objectives: Vec<Objective>,
 }
 
@@ -149,7 +160,7 @@ impl SweepGrid {
             networks: all_networks(),
             precisions: vec![PrecisionPoint::Native],
             sparsities: sparsities.to_vec(),
-            objectives: ALL_OBJECTIVES.to_vec(),
+            objectives: COST_OBJECTIVES.to_vec(),
         }
     }
 
@@ -215,6 +226,7 @@ impl SweepGrid {
 pub struct SweepOptions {
     /// Number of shards the grid is (conceptually) split into.
     pub shards: usize,
+
     /// Evaluate only this shard (`None`: the whole grid).
     pub shard_index: Option<usize>,
     /// Worker threads for the group-level fan-out.
@@ -238,11 +250,15 @@ impl Default for SweepOptions {
 pub struct GridPoint {
     /// Canonical grid position — the shard-independent identity.
     pub task_index: usize,
+    /// Design (system) name.
     pub design: String,
+    /// Compute family of the design.
     pub family: ImcFamily,
+    /// Macros in the evaluated system instance.
     pub n_macros: usize,
     /// Total SRAM cells of this design instance (the budget axis).
     pub cells: usize,
+    /// Network name.
     pub network: String,
     /// Precision grid-axis setting this point was evaluated at.
     pub precision: PrecisionPoint,
@@ -253,17 +269,30 @@ pub struct GridPoint {
     pub act_bits: u32,
     /// Activation sparsity this point was evaluated at.
     pub sparsity: f64,
+    /// Objective the per-layer winners were selected by.
     pub objective: Objective,
     /// Total energy (fJ), datapath + memory traffic.
     pub energy_fj: f64,
     /// Macro + global-buffer energy (fJ), the Fig. 7 macro-level axis.
     pub macro_fj: f64,
+    /// End-to-end network latency (ns).
     pub time_ns: f64,
+    /// Network-level efficiency including memory traffic.
     pub tops_per_watt: f64,
+    /// MAC-weighted mean array utilization.
     pub utilization: f64,
+    /// Simulated network SQNR in dB ([`f64::INFINITY`] when the
+    /// datapath is bit-exact, e.g. DIMC). Mapping-invariant: identical
+    /// across the objective rows of one evaluation group.
+    pub sqnr_db: f64,
+    /// Largest simulated |output error| over the sampled outputs.
+    pub max_abs_err: f64,
+    /// Fraction of simulated ADC conversions that clipped.
+    pub clip_rate: f64,
 }
 
 impl GridPoint {
+    /// Energy–delay product (fJ·ns).
     pub fn edp(&self) -> f64 {
         self.energy_fj * self.time_ns
     }
@@ -272,6 +301,7 @@ impl GridPoint {
 /// Aggregated outcome of a sweep run (one shard, or the merged grid).
 #[derive(Debug, Clone)]
 pub struct SweepSummary {
+    /// Shard count the run was configured with.
     pub shards: usize,
     /// Shard this summary covers (`None`: full grid / merged).
     pub shard_index: Option<usize>,
@@ -285,6 +315,13 @@ pub struct SweepSummary {
     /// with the precision point and/or sparsity level when the summary
     /// spans more than one of either.
     pub frontiers: Vec<(String, Vec<usize>)>,
+    /// Per-(network, sparsity) (energy, quantization-error) Pareto
+    /// frontiers *across precision points and designs* — the
+    /// accuracy–efficiency trade-off view: (label, indices into
+    /// `points`). Minimizes energy and `-sqnr_db`, so a cheap but lossy
+    /// re-quantized point and an expensive but exact one both survive.
+    pub accuracy_frontiers: Vec<(String, Vec<usize>)>,
+    /// Cost-cache statistics accumulated by this run.
     pub cache: CacheStats,
     /// True when this summary was assembled by [`merge_summaries`] —
     /// `cache` then aggregates several independent per-shard caches.
@@ -334,12 +371,14 @@ pub fn run_sweep_with_cache(
     .flatten()
     .collect();
     let frontiers = compute_frontiers(&points);
+    let accuracy_frontiers = compute_accuracy_frontiers(&points);
     SweepSummary {
         shards,
         shard_index: opts.shard_index,
         total_tasks: grid.n_tasks(),
         points,
         frontiers,
+        accuracy_frontiers,
         cache: cache.stats().since(&stats_before),
         merged: false,
     }
@@ -370,6 +409,12 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
         .iter()
         .map(|l| cache.search(l, sys, &tech, sparsity, None))
         .collect();
+    // network accuracy: layer records pooled in network order
+    // (mapping- and objective-invariant, so computed once per group)
+    let mut accuracy = AccuracyRecord::default();
+    for s in &searches {
+        accuracy.merge(s.accuracy());
+    }
     grid.objectives
         .iter()
         .enumerate()
@@ -402,6 +447,9 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
                 time_ns: r.total_time_ns(),
                 tops_per_watt: r.effective_tops_per_watt(),
                 utilization: r.mean_utilization(),
+                sqnr_db: accuracy.sqnr_db(),
+                max_abs_err: accuracy.max_abs_err,
+                clip_rate: accuracy.clip_rate(),
             }
         })
         .collect()
@@ -473,10 +521,54 @@ pub(crate) fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>
         .collect()
 }
 
+/// Per-(network, sparsity) (energy, −SQNR) Pareto frontiers over every
+/// evaluated design, precision point and objective row — the
+/// accuracy–efficiency trade-off of the paper's narrative (precision
+/// points are deliberately *pooled*: trading accuracy against energy is
+/// exactly a cross-precision comparison). Depends only on the set of
+/// points, so shard count never changes the outcome; −SQNR is a
+/// monotone error axis where bit-exact points sit at −∞ (best).
+pub(crate) fn compute_accuracy_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
+    let mut groups: Vec<(&str, u64)> = Vec::new();
+    for p in points {
+        let key = (p.network.as_str(), p.sparsity.to_bits());
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let multi_sparsity = {
+        let mut sparsities: Vec<u64> = groups.iter().map(|&(_, s)| s).collect();
+        sparsities.sort_unstable();
+        sparsities.dedup();
+        sparsities.len() > 1
+    };
+    groups
+        .iter()
+        .map(|&(name, sp_bits)| {
+            let idx: Vec<usize> = (0..points.len())
+                .filter(|&i| {
+                    points[i].network == name && points[i].sparsity.to_bits() == sp_bits
+                })
+                .collect();
+            let coords: Vec<(f64, f64)> = idx
+                .iter()
+                .map(|&i| (points[i].energy_fj, -points[i].sqnr_db))
+                .collect();
+            let front = pareto_front(&coords);
+            let mut label = format!("{name} accuracy-vs-energy");
+            if multi_sparsity {
+                label.push_str(&format!(" @ sparsity {}", f64::from_bits(sp_bits)));
+            }
+            (label, front.into_iter().map(|j| idx[j]).collect())
+        })
+        .collect()
+}
+
 /// Merge per-shard summaries back into a full-grid summary: points are
 /// reassembled in canonical task order (duplicates collapse), cache
-/// counters accumulate, and the global Pareto frontier is recomputed —
-/// bit-identical to a single-shard run over the same tasks.
+/// counters accumulate, and the global Pareto frontiers (cost and
+/// accuracy) are recomputed — bit-identical to a single-shard run over
+/// the same tasks.
 pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
     let mut points: Vec<GridPoint> = parts.iter().flat_map(|s| s.points.clone()).collect();
     points.sort_by_key(|p| p.task_index);
@@ -486,12 +578,14 @@ pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
         cache.merge(&s.cache);
     }
     let frontiers = compute_frontiers(&points);
+    let accuracy_frontiers = compute_accuracy_frontiers(&points);
     SweepSummary {
         shards: parts.first().map(|s| s.shards).unwrap_or(1),
         shard_index: None,
         total_tasks: parts.iter().map(|s| s.total_tasks).max().unwrap_or(0),
         points,
         frontiers,
+        accuracy_frontiers,
         cache,
         merged: true,
     }
@@ -690,6 +784,36 @@ mod tests {
         assert_eq!(re.name, sys.name);
         assert_eq!(re.total_cells(), sys.total_cells());
         assert!(PrecisionPoint::Fixed(Precision::new(3, 4)).apply(sys).is_none());
+    }
+
+    #[test]
+    fn grid_points_carry_accuracy_and_accuracy_frontiers() {
+        let systems = table2_systems();
+        let grid = SweepGrid {
+            // one lossy AIMC design, one bit-exact DIMC design
+            systems: vec![systems[0].clone(), systems[2].clone()],
+            networks: vec![deep_autoencoder()],
+            precisions: vec![PrecisionPoint::Native],
+            sparsities: vec![DEFAULT_SPARSITY],
+            objectives: vec![Objective::Energy],
+        };
+        let s = run_sweep(&grid, &SweepOptions::default());
+        assert_eq!(s.points.len(), 2);
+        let aimc = &s.points[0];
+        let dimc = &s.points[1];
+        assert_eq!(aimc.family, ImcFamily::Aimc);
+        assert_eq!(dimc.family, ImcFamily::Dimc);
+        // DIMC is bit-exact; the under-provisioned AIMC ADC is not
+        assert_eq!(dimc.sqnr_db, f64::INFINITY);
+        assert_eq!((dimc.max_abs_err, dimc.clip_rate), (0.0, 0.0));
+        assert!(aimc.sqnr_db.is_finite());
+        assert!(aimc.max_abs_err > 0.0);
+        // the exact point has the minimal error axis value: it must be
+        // on the accuracy-vs-energy frontier
+        assert_eq!(s.accuracy_frontiers.len(), 1);
+        let (label, front) = &s.accuracy_frontiers[0];
+        assert!(label.contains("accuracy-vs-energy"), "{label}");
+        assert!(front.contains(&1), "exact DIMC point missing: {front:?}");
     }
 
     #[test]

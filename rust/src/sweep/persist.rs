@@ -21,6 +21,7 @@ use crate::arch::ImcFamily;
 use crate::dse::{LayerSearch, MappingEval, Objective};
 use crate::mapping::{SpatialMapping, TemporalPolicy, TileCounts, Unroll};
 use crate::model::EnergyBreakdown;
+use crate::sim::AccuracyRecord;
 use crate::util::json::{parse, Json};
 use crate::workload::{LayerType, LoopDim};
 
@@ -28,14 +29,19 @@ use super::cache::{CostCache, CostKey};
 use crate::dse::reuse::{AccessCounts, TrafficEnergy};
 
 /// Schema version of the cache file. Bump on any change to [`CostKey`],
-/// [`LayerSearch`] or the cost model's meaning of either.
+/// [`LayerSearch`], the cost model's meaning of either, or the
+/// functional simulator's tensor protocol / datapath contract.
 ///
 /// History: **1** — the pre-precision-axis schema; **2** — the
 /// precision axis landed (re-quantized survey operating points flow
 /// through the cache, and the converter-derivation rules the key's
 /// `dac_res`/`adc_res` fields are produced by changed meaning), so v1
-/// files must be rejected rather than reused.
-pub const SWEEP_CACHE_VERSION: u64 = 2;
+/// files must be rejected rather than reused; **3** — the accuracy axis
+/// landed: every entry memoizes the bit-true simulator's
+/// [`AccuracyRecord`] alongside the cost optima, so v2 files (which
+/// carry no accuracy record) are rejected by name like v1 files before
+/// them.
+pub const SWEEP_CACHE_VERSION: u64 = 3;
 
 /// Why a cache file was rejected. In every case the in-memory cache is
 /// left untouched and the caller starts cold.
@@ -57,8 +63,9 @@ impl std::fmt::Display for CacheLoadError {
             CacheLoadError::VersionMismatch { found, expected } => write!(
                 f,
                 "cache file has schema version {found}, but this build requires version \
-                 {expected} (the CostKey/cost-model schema changed — e.g. a pre-precision-axis \
-                 cache); delete the file or let this run rewrite it"
+                 {expected} (the CostKey/cost-model/simulator schema changed — e.g. a \
+                 pre-precision-axis v1 or pre-accuracy v2 cache); delete the file or let \
+                 this run rewrite it"
             ),
             CacheLoadError::Malformed => f.write_str("cache file is not a valid sweep cost cache"),
         }
@@ -405,10 +412,33 @@ fn eval_from_json(j: &Json) -> Option<MappingEval> {
     })
 }
 
+fn accuracy_to_json(a: &AccuracyRecord) -> Json {
+    obj(vec![
+        ("signal", jf(a.signal)),
+        ("noise", jf(a.noise)),
+        ("max_abs_err", jf(a.max_abs_err)),
+        ("outputs", jbits(a.outputs)),
+        ("conversions", jbits(a.conversions)),
+        ("clipped", jbits(a.clipped)),
+    ])
+}
+
+fn accuracy_from_json(j: &Json) -> Option<AccuracyRecord> {
+    Some(AccuracyRecord {
+        signal: f_of(get(j, "signal")?)?,
+        noise: f_of(get(j, "noise")?)?,
+        max_abs_err: f_of(get(j, "max_abs_err")?)?,
+        outputs: bits_of(get(j, "outputs")?)?,
+        conversions: bits_of(get(j, "conversions")?)?,
+        clipped: bits_of(get(j, "clipped")?)?,
+    })
+}
+
 fn search_to_json(s: &LayerSearch) -> Json {
     obj(vec![
         ("evaluated", jn(s.evaluated)),
         ("pruned", jn(s.pruned)),
+        ("accuracy", accuracy_to_json(s.accuracy())),
         ("best_energy", eval_to_json(s.best(Objective::Energy))),
         ("best_latency", eval_to_json(s.best(Objective::Latency))),
         ("best_edp", eval_to_json(s.best(Objective::Edp))),
@@ -419,6 +449,7 @@ fn search_from_json(j: &Json) -> Option<LayerSearch> {
     Some(LayerSearch::from_parts(
         n_of(get(j, "evaluated")?)?,
         n_of(get(j, "pruned")?)?,
+        accuracy_from_json(get(j, "accuracy")?)?,
         eval_from_json(get(j, "best_energy")?)?,
         eval_from_json(get(j, "best_latency")?)?,
         eval_from_json(get(j, "best_edp")?)?,
@@ -530,6 +561,15 @@ mod tests {
             }
             assert_eq!(a.evaluated, b.evaluated);
             assert_eq!(a.pruned, b.pruned);
+            // the memoized accuracy record round-trips bit-exactly too
+            let (x, y) = (a.accuracy(), b.accuracy());
+            assert_eq!(x.signal.to_bits(), y.signal.to_bits());
+            assert_eq!(x.noise.to_bits(), y.noise.to_bits());
+            assert_eq!(x.max_abs_err.to_bits(), y.max_abs_err.to_bits());
+            assert_eq!(
+                (x.outputs, x.conversions, x.clipped),
+                (y.outputs, y.conversions, y.clipped)
+            );
         }
         // the warm cache answered everything from disk
         let s = warm.stats();
@@ -598,6 +638,23 @@ mod tests {
             CacheLoadError::VersionMismatch { found: 1, expected: SWEEP_CACHE_VERSION }
         ));
         assert!(err.to_string().contains("pre-precision"), "{err}");
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_accuracy_v2_cache_is_rejected_not_reused() {
+        // a v2 file predates the accuracy axis: it memoizes no accuracy
+        // record, so reusing it would leave sweeps without simulated
+        // accuracy — rejected by name, run starts cold
+        let path = cache_file_with_version("cache_v2", 2);
+        let fresh = CostCache::new();
+        let err = load_cache_into(&path, &fresh).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheLoadError::VersionMismatch { found: 2, expected: SWEEP_CACHE_VERSION }
+        ));
+        assert!(err.to_string().contains("pre-accuracy"), "{err}");
         assert_eq!(fresh.stats().entries, 0);
         std::fs::remove_file(&path).ok();
     }

@@ -8,11 +8,17 @@ use std::time::{Duration, Instant};
 /// Statistics over the measured sample times.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Number of timed samples.
     pub samples: usize,
+    /// Mean sample time (ns).
     pub mean_ns: f64,
+    /// Median sample time (ns).
     pub median_ns: f64,
+    /// Sample standard deviation (ns).
     pub stddev_ns: f64,
+    /// Fastest sample (ns).
     pub min_ns: f64,
+    /// Slowest sample (ns).
     pub max_ns: f64,
 }
 
@@ -133,6 +139,7 @@ impl Bench {
         elems as f64 / (stats.median_ns * 1e-9)
     }
 
+    /// All recorded (name, stats) pairs, in execution order.
     pub fn results(&self) -> &[(String, Stats)] {
         &self.results
     }

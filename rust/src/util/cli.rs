@@ -7,9 +7,13 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Leading non-flag token, if any.
     pub subcommand: Option<String>,
+    /// `--flag` tokens without values.
     pub flags: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Remaining positional arguments.
     pub positional: Vec<String>,
 }
 
@@ -39,22 +43,27 @@ impl Args {
         args
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed as a value-less flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `--name`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// [`Args::opt`] with a default.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// Parse option `--name` into `T` (None when absent).
     pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Option<Result<T, String>> {
         self.opt(name).map(|s| {
             s.parse::<T>()

@@ -8,15 +8,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (f64, like JSON itself).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic emission).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -24,6 +31,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if exactly representable.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 {
@@ -34,6 +42,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -41,6 +50,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -135,7 +147,9 @@ fn write_escaped(s: &str, out: &mut String) {
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset the parse failed at.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 

@@ -10,6 +10,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {
         // splitmix64 to expand the seed
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -25,6 +26,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

@@ -10,15 +10,22 @@ use std::collections::BTreeMap;
 /// A TOML-lite value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// An inline array.
     Arr(Vec<Value>),
+    /// A table (`[header]` section or inline).
     Table(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -26,6 +33,7 @@ impl Value {
         }
     }
 
+    /// The integer value, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -33,6 +41,7 @@ impl Value {
         }
     }
 
+    /// The numeric value (floats, and integers widened to f64).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -41,6 +50,7 @@ impl Value {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -48,6 +58,7 @@ impl Value {
         }
     }
 
+    /// The key/value map, if this is a table.
     pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Table(t) => Some(t),
@@ -55,6 +66,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -62,6 +74,7 @@ impl Value {
         }
     }
 
+    /// Table member access (`table.get("key")`).
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.as_table().and_then(|t| t.get(key))
     }
@@ -70,7 +83,9 @@ impl Value {
 /// Parse error with line number.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line the parse failed on.
     pub line: usize,
+    /// What went wrong.
     pub message: String,
 }
 

@@ -15,16 +15,25 @@
 /// The seven loop dimensions of Fig. 1 (+ stride).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LoopDim {
+    /// Batch.
     B,
+    /// Groups.
     G,
+    /// Output columns.
     OX,
+    /// Output rows.
     OY,
+    /// Output channels (per group).
     K,
+    /// Input channels (per group).
     C,
+    /// Weight columns.
     FX,
+    /// Weight rows.
     FY,
 }
 
+/// Every loop dimension, in the Fig. 1 nesting order.
 pub const ALL_DIMS: [LoopDim; 8] = [
     LoopDim::B,
     LoopDim::G,
@@ -37,6 +46,7 @@ pub const ALL_DIMS: [LoopDim; 8] = [
 ];
 
 impl LoopDim {
+    /// Canonical dimension tag (`B`, `G`, `OX`, …).
     pub fn as_str(&self) -> &'static str {
         match self {
             LoopDim::B => "B",
@@ -88,6 +98,7 @@ pub enum LayerType {
 }
 
 impl LayerType {
+    /// Canonical operator-type tag.
     pub fn as_str(&self) -> &'static str {
         match self {
             LayerType::Conv2d => "Conv2D",
@@ -107,20 +118,32 @@ impl std::fmt::Display for LayerType {
 /// One DNN layer: loop bounds + stride.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
+    /// Layer name (excluded from all shape-keyed caching).
     pub name: String,
+    /// Operator taxonomy class.
     pub ltype: LayerType,
+    /// Batch size B.
     pub b: usize,
+    /// Group count G.
     pub g: usize,
+    /// Output channels per group K.
     pub k: usize,
+    /// Input channels per group C.
     pub c: usize,
+    /// Output feature-map columns OX.
     pub ox: usize,
+    /// Output feature-map rows OY.
     pub oy: usize,
+    /// Weight kernel columns FX.
     pub fx: usize,
+    /// Weight kernel rows FY.
     pub fy: usize,
+    /// Convolution stride.
     pub stride: usize,
 }
 
 impl Layer {
+    /// Loop bound of dimension `d`.
     pub fn size(&self, d: LoopDim) -> usize {
         match d {
             LoopDim::B => self.b,

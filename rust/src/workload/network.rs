@@ -7,19 +7,23 @@ use super::layer::{Layer, LayerType};
 /// A DNN workload: a sequence of layers.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Network {
+    /// Network name (tinyMLPerf model tag).
     pub name: String,
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 
 /// MAC share per operator type (the Fig. 1 pie-chart data).
 #[derive(Debug, Clone, PartialEq)]
 pub struct OperatorBreakdown {
+    /// Total MACs across all operator types.
     pub total_macs: u64,
     /// (type, macs, fraction) sorted by descending share.
     pub shares: Vec<(LayerType, u64, f64)>,
 }
 
 impl Network {
+    /// Build a network from an ordered layer list.
     pub fn new(name: &str, layers: Vec<Layer>) -> Self {
         Network {
             name: name.into(),
@@ -27,10 +31,12 @@ impl Network {
         }
     }
 
+    /// Total MAC operations over all layers.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Total weight elements over all layers.
     pub fn total_weights(&self) -> u64 {
         self.layers.iter().map(|l| l.weight_elems()).sum()
     }
@@ -54,6 +60,7 @@ impl Network {
         }
     }
 
+    /// Validate every layer and the network structure.
     pub fn validate(&self) -> Result<(), String> {
         if self.layers.is_empty() {
             return Err(format!("{}: no layers", self.name));

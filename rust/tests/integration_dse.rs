@@ -6,8 +6,9 @@
 use imcsim::arch::{table2_systems, ImcFamily, ImcMacro, ImcSystem};
 use imcsim::dse::reuse::reuse_lower_bounds_ok;
 use imcsim::dse::{
-    evaluate, lower_bound, search_layer_all, search_layer_all_unpruned, search_network,
-    DseOptions, ALL_OBJECTIVES, DEFAULT_SPARSITY,
+    evaluate, lower_bound, search_layer_all, search_layer_all_seeded,
+    search_layer_all_unpruned, search_network, DseOptions, ALL_OBJECTIVES, COST_OBJECTIVES,
+    DEFAULT_SPARSITY,
 };
 use imcsim::mapping::{candidates, tile, ALL_POLICIES};
 use imcsim::model::TechParams;
@@ -243,6 +244,70 @@ fn property_pruned_search_equals_exhaustive_on_survey_designs() {
         total_evaluated < total_candidates,
         "pruning never fired ({total_candidates} candidates)"
     );
+}
+
+#[test]
+fn property_seeded_search_equals_exhaustive_with_carried_incumbents() {
+    // Cross-layer bound carryover: warm-start the search with the
+    // winning mappings of a previously-searched identically-shaped
+    // layer (same or different sparsity, with and without a policy
+    // restriction) and lock the optima bit-identical to the unpruned
+    // reference. Seeds only tighten pruning — never the winners.
+    use imcsim::mapping::TemporalPolicy;
+    let systems = table2_systems();
+    let layers = [
+        Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
+        Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
+        Layer::dense("fc", 128, 640),
+    ];
+    let mut exercised = 0usize;
+    for sys in &systems {
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        for layer in &layers {
+            for (donor_sparsity, target_sparsity) in [(0.3, 0.8), (0.5, 0.5)] {
+                for policy in [None, Some(TemporalPolicy::WeightStationary)] {
+                    let donor = search_layer_all(layer, sys, &tech, donor_sparsity, policy);
+                    let seeds = donor.seed_mappings();
+                    assert!(!seeds.is_empty());
+                    let seeded = search_layer_all_seeded(
+                        layer,
+                        sys,
+                        &tech,
+                        target_sparsity,
+                        policy,
+                        &seeds,
+                    );
+                    let full =
+                        search_layer_all_unpruned(layer, sys, &tech, target_sparsity, policy);
+                    // the whole space stays accounted for
+                    assert_eq!(
+                        seeded.evaluated + seeded.pruned,
+                        full.evaluated,
+                        "{} on {}: seeded space accounting broken",
+                        layer.name,
+                        sys.name
+                    );
+                    for objective in COST_OBJECTIVES {
+                        let a = seeded.best(objective);
+                        let b = full.best(objective);
+                        assert_eq!(
+                            a.total_energy_fj().to_bits(),
+                            b.total_energy_fj().to_bits(),
+                            "{} on {} ({objective}): seeded energy differs",
+                            layer.name,
+                            sys.name
+                        );
+                        assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+                        assert_eq!(a.policy, b.policy);
+                        assert_eq!(a.spatial, b.spatial);
+                        assert_eq!(a.tiles, b.tiles);
+                    }
+                    exercised += 1;
+                }
+            }
+        }
+    }
+    assert!(exercised >= 24, "seeded-search matrix too small: {exercised}");
 }
 
 #[test]

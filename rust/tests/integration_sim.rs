@@ -1,0 +1,135 @@
+//! Integration: the bit-true functional simulator's contract with the
+//! cost model — DIMC exactness, AIMC error monotonicity in ADC
+//! resolution, conversion counts consistent with the macro's datapath
+//! fields, and determinism of the accuracy records end to end (shard
+//! counts and cache temperature are covered in `integration_sweep`).
+
+use imcsim::arch::{ImcFamily, ImcMacro, Precision};
+use imcsim::sim::{layer_accuracy, AdcTransfer};
+use imcsim::workload::{all_networks, Layer};
+
+#[test]
+fn dimc_survey_designs_are_bit_exact_at_native_precision() {
+    // the digital family's whole pitch: exact integer accumulation at
+    // the adder-tree width — zero quantization error on every layer of
+    // every tinyMLPerf network, at the published operating point
+    let dimc: Vec<ImcMacro> = imcsim::db::survey()
+        .iter()
+        .filter(|e| e.family == ImcFamily::Dimc)
+        .map(|e| e.to_macro())
+        .collect();
+    assert!(dimc.len() >= 3, "survey lost its DIMC entries");
+    for m in &dimc {
+        for net in all_networks() {
+            for l in net.layers.iter().step_by(4) {
+                let r = layer_accuracy(l, m);
+                assert!(
+                    r.is_exact(),
+                    "{} on {}: DIMC not exact ({r:?})",
+                    l.name,
+                    m.name
+                );
+                assert_eq!(r.sqnr_db(), f64::INFINITY);
+                assert_eq!(r.conversions, 0, "DIMC has no ADCs");
+            }
+        }
+    }
+}
+
+#[test]
+fn aimc_error_is_monotone_non_increasing_in_adc_resolution() {
+    // sweep the ADC resolution on a survey-scale AIMC geometry: noise
+    // energy and max-abs error never increase with extra bits, and the
+    // fully-provisioned converter is bit-exact
+    let layers = [
+        Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
+        Layer::dense("fc", 128, 640),
+    ];
+    for l in &layers {
+        let mut last_noise = f64::INFINITY;
+        for adc_res in 3..=15 {
+            let m = ImcMacro::new(
+                "sweep", ImcFamily::Aimc, 1152, 256, 4, 4, 4, adc_res, 0.8, 28.0,
+            );
+            let r = layer_accuracy(l, &m);
+            assert!(
+                r.noise <= last_noise,
+                "{}: adc {adc_res} noise {} above {}",
+                l.name,
+                r.noise,
+                last_noise
+            );
+            last_noise = r.noise;
+        }
+        // dac_res + ceil(log2 d2) + 1 = 4 + 11 + 1 covers everything
+        let exact = ImcMacro::new(
+            "sweep", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 16, 0.8, 28.0,
+        );
+        assert!(layer_accuracy(l, &exact).is_exact());
+    }
+}
+
+#[test]
+fn conversion_counts_match_the_macro_datapath_fields() {
+    // the simulator performs exactly the conversions the cost model
+    // prices: per sampled output, one ADC conversion per (input slice,
+    // weight bit-slice) per resident chunk
+    let m = ImcMacro::new("a", ImcFamily::Aimc, 64, 256, 4, 8, 4, 8, 0.8, 28.0);
+    let l = Layer::dense("fc", 32, 200); // 200 > 64 rows: 4 chunks
+    let r = layer_accuracy(&l, &m);
+    let chunks = (l.reduction_size() as u64).div_ceil(m.rows as u64);
+    assert_eq!(chunks, 4);
+    let per_output = chunks * m.n_slices() as u64 * m.weight_bits as u64;
+    assert_eq!(r.conversions, r.outputs * per_output);
+    assert!(r.clip_rate() >= 0.0 && r.clip_rate() <= 1.0);
+}
+
+#[test]
+fn requantized_survey_points_keep_the_adc_slack_and_stay_comparable() {
+    // re-quantization preserves the design's quantization slack
+    // (model::adc::requantized_resolution): the derived ADC transfer
+    // truncates the same number of bits at every realizable activation
+    // width with the native slice width preserved
+    let mut checked = 0;
+    for e in imcsim::db::survey() {
+        if e.family != ImcFamily::Aimc {
+            continue;
+        }
+        let native = e.to_macro();
+        let Some(t0) = AdcTransfer::for_macro(&native) else {
+            continue;
+        };
+        // halve the activation width (when realizable): DAC clamps, ADC
+        // sheds range bits 1:1, slack — and hence the shift — invariant
+        let narrower = Precision::new(native.weight_bits, (native.act_bits / 2).max(1));
+        if let Some(re) = e.to_macro_at(narrower) {
+            if re.dac_res < native.dac_res {
+                let t1 = AdcTransfer::for_macro(&re).unwrap();
+                assert_eq!(
+                    t0.shift, t1.shift,
+                    "{}: requantization changed the ADC slack",
+                    native.name
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 2, "too few AIMC requantization points: {checked}");
+}
+
+#[test]
+fn accuracy_records_are_deterministic_across_repeated_runs() {
+    let m = ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0);
+    let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+    let a = layer_accuracy(&l, &m);
+    let b = layer_accuracy(&l, &m);
+    assert_eq!(a.signal.to_bits(), b.signal.to_bits());
+    assert_eq!(a.noise.to_bits(), b.noise.to_bits());
+    assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
+    assert_eq!((a.conversions, a.clipped, a.outputs), (b.conversions, b.clipped, b.outputs));
+    // identically-shaped layers of different names share tensors, like
+    // the sweep cost cache shares their searches
+    let renamed = Layer::conv2d("other_name", 16, 16, 32, 16, 3, 3, 1);
+    let c = layer_accuracy(&renamed, &m);
+    assert_eq!(a.noise.to_bits(), c.noise.to_bits());
+}

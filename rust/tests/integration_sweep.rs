@@ -4,9 +4,10 @@
 //! against the uncached DSE, the survey-grid builder, and warm starts
 //! from the persistent cost cache (with schema-mismatch rejection).
 
-use imcsim::arch::{table2_systems, Precision};
+use imcsim::arch::{table2_systems, ImcFamily, Precision};
 use imcsim::dse::{
-    search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES, DEFAULT_SPARSITY,
+    search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES, COST_OBJECTIVES,
+    DEFAULT_SPARSITY,
 };
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheLoadError,
@@ -23,7 +24,7 @@ fn small_grid() -> SweepGrid {
         networks: vec![deep_autoencoder(), ds_cnn()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
-        objectives: ALL_OBJECTIVES.to_vec(),
+        objectives: COST_OBJECTIVES.to_vec(),
     }
 }
 
@@ -43,7 +44,7 @@ fn widened_grid() -> SweepGrid {
         networks: vec![ds_cnn()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![0.3, 0.8],
-        objectives: ALL_OBJECTIVES.to_vec(),
+        objectives: COST_OBJECTIVES.to_vec(),
     }
 }
 
@@ -61,6 +62,11 @@ fn points_equal(a: &imcsim::sweep::SweepSummary, b: &imcsim::sweep::SweepSummary
         // bit-identical: same deterministic arithmetic on both paths
         assert_eq!(x.energy_fj.to_bits(), y.energy_fj.to_bits());
         assert_eq!(x.time_ns.to_bits(), y.time_ns.to_bits());
+        // the simulated accuracy record is bit-identical too (shard
+        // count, thread count and cache temperature must not matter)
+        assert_eq!(x.sqnr_db.to_bits(), y.sqnr_db.to_bits());
+        assert_eq!(x.max_abs_err.to_bits(), y.max_abs_err.to_bits());
+        assert_eq!(x.clip_rate.to_bits(), y.clip_rate.to_bits());
     }
 }
 
@@ -85,6 +91,7 @@ fn pareto_frontier_identical_across_shard_counts() {
         let merged = merge_summaries(&parts);
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
+        assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
     }
 }
 
@@ -121,6 +128,7 @@ fn shard_determinism_holds_on_widened_cells_sparsity_axes() {
         let merged = merge_summaries(&parts);
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
+        assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
     }
 }
 
@@ -166,6 +174,7 @@ fn shard_determinism_holds_on_precision_axis() {
         let merged = merge_summaries(&parts);
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
+        assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
     }
 }
 
@@ -198,6 +207,7 @@ fn unrealizable_precisions_skip_identically_across_shards() {
     let merged = merge_summaries(&parts);
     points_equal(&single, &merged);
     assert_eq!(single.frontiers, merged.frontiers);
+    assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
 }
 
 #[test]
@@ -248,6 +258,7 @@ fn warm_cache_file_reproduces_cold_run_with_full_hits() {
     // and reproduces the cold run's grid points bit-for-bit
     points_equal(&cold, &warm);
     assert_eq!(cold.frontiers, warm.frontiers);
+    assert_eq!(cold.accuracy_frontiers, warm.accuracy_frontiers);
     std::fs::remove_file(&path).ok();
 }
 
@@ -319,7 +330,7 @@ fn sweep_reports_bound_pruning() {
         networks: vec![imcsim::workload::resnet8(), imcsim::workload::mobilenet_v1()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
-        objectives: ALL_OBJECTIVES.to_vec(),
+        objectives: COST_OBJECTIVES.to_vec(),
     };
     let m = run_sweep(&multi, &SweepOptions::default());
     assert!(
@@ -434,5 +445,73 @@ fn objective_grid_points_are_consistent() {
         assert_eq!(e.network, l.network);
         assert!(l.time_ns <= e.time_ns * (1.0 + 1e-9));
         assert!(e.energy_fj <= l.energy_fj * (1.0 + 1e-9));
+    }
+}
+
+#[test]
+fn low_precision_aimc_trades_accuracy_for_cost() {
+    // The acceptance story of the accuracy axis: across the re-quantized
+    // precision points there is at least one AIMC grid point that is
+    // cost-Pareto-optimal (on the (energy, latency) frontier of its
+    // (network, precision) group) while being accuracy-dominated (some
+    // point of the same network carries strictly higher SQNR — the
+    // bit-exact DIMC designs always do). The whole run, simulator
+    // included, is std-only: no `xla` feature anywhere.
+    let grid = SweepGrid {
+        systems: table2_systems(),
+        networks: vec![imcsim::workload::resnet8(), deep_autoencoder()],
+        precisions: vec![
+            PrecisionPoint::Fixed(Precision::new(2, 8)),
+            PrecisionPoint::Fixed(Precision::new(4, 8)),
+            PrecisionPoint::Fixed(Precision::new(8, 8)),
+        ],
+        sparsities: vec![DEFAULT_SPARSITY],
+        objectives: vec![Objective::Energy, Objective::Latency],
+    };
+    let s = run_sweep(&grid, &SweepOptions::default());
+    assert!(!s.points.is_empty());
+
+    // family-level accuracy invariants of the simulator
+    for p in &s.points {
+        match p.family {
+            ImcFamily::Dimc => {
+                assert_eq!(p.sqnr_db, f64::INFINITY, "{}: DIMC must be exact", p.design);
+                assert_eq!(p.max_abs_err, 0.0);
+            }
+            ImcFamily::Aimc => {
+                assert!(p.sqnr_db.is_finite(), "{}: AIMC must be lossy", p.design);
+                assert!(p.max_abs_err > 0.0);
+            }
+        }
+    }
+
+    // cost-dominant but accuracy-dominated: an AIMC point on a cost
+    // frontier whose SQNR is strictly below the best of its network
+    let on_cost_frontier: std::collections::HashSet<usize> = s
+        .frontiers
+        .iter()
+        .flat_map(|(_, f)| f.iter().copied())
+        .collect();
+    let dominated_aimc = s.points.iter().enumerate().any(|(i, p)| {
+        p.family == ImcFamily::Aimc
+            && on_cost_frontier.contains(&i)
+            && s.points
+                .iter()
+                .any(|q| q.network == p.network && q.sqnr_db > p.sqnr_db)
+    });
+    assert!(
+        dominated_aimc,
+        "no cost-optimal, accuracy-dominated AIMC point found"
+    );
+
+    // the accuracy-vs-energy frontiers pool precisions per network and
+    // keep every bit-exact minimum-error point
+    assert_eq!(s.accuracy_frontiers.len(), grid.networks.len());
+    for (label, front) in &s.accuracy_frontiers {
+        assert!(!front.is_empty(), "{label}: empty accuracy frontier");
+        assert!(
+            front.iter().any(|&i| s.points[i].sqnr_db == f64::INFINITY),
+            "{label}: no exact point on the accuracy frontier"
+        );
     }
 }
