@@ -3,6 +3,17 @@
 //! end-to-end run at several shard widths. Reports the cache hit rate
 //! and the bound-pruning evaluation reduction the full survey grid
 //! achieves (the acceptance bar is ≥2× fewer full cost evaluations).
+//!
+//! With `IMCSIM_BENCH_JSON=PATH` set, the run additionally emits a
+//! machine-readable trajectory file (`BENCH_sweep.json` in CI):
+//! per-benchmark median timings, every reported metric, and a `gate`
+//! object — evaluated/pruned candidate counts, cache hit rate, wall
+//! time and the pruning reduction on the multi-macro acceptance grid —
+//! that the CI `bench-trajectory` job archives per push and fails on
+//! when the reduction drops below 2×.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
 
 use imcsim::arch::table2_systems;
 use imcsim::dse::{
@@ -10,12 +21,20 @@ use imcsim::dse::{
     COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use imcsim::model::TechParams;
+use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{run_sweep, CostCache, PrecisionPoint, SweepGrid, SweepOptions};
 use imcsim::util::bench::{report_metric, Bench};
+use imcsim::util::json::Json;
 use imcsim::workload::{deep_autoencoder, ds_cnn, Layer};
 
 fn main() {
+    let t_start = Instant::now();
     let mut b = Bench::from_args();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let metric = |metrics: &mut Vec<(String, f64)>, name: &str, value: f64, unit: &str| {
+        report_metric(name, value, unit);
+        metrics.push((name.to_string(), value));
+    };
     let systems = table2_systems();
     let sys = &systems[1];
     let tech = TechParams::for_node(sys.imc.tech_nm);
@@ -32,7 +51,8 @@ fn main() {
         if let Some(warm) = b.bench("sweep/layer_search_cached", || {
             cache.evaluate_layer(&layer, sys, &tech, &opts).best.time_ns
         }) {
-            report_metric(
+            metric(
+                &mut metrics,
                 "sweep/cache_speedup",
                 cold.median_ns / warm.median_ns.max(1.0),
                 "x",
@@ -48,7 +68,8 @@ fn main() {
         if let Some(unpruned) = b.bench("sweep/layer_search_unpruned", || {
             search_layer_all_unpruned(&layer, sys, &tech, DEFAULT_SPARSITY, None).evaluated
         }) {
-            report_metric(
+            metric(
+                &mut metrics,
                 "sweep/prune_time_speedup",
                 unpruned.median_ns / pruned.median_ns.max(1.0),
                 "x",
@@ -62,6 +83,7 @@ fn main() {
         networks: vec![deep_autoencoder(), ds_cnn()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
+        noises: vec![NoiseSpec::Off],
         objectives: COST_OBJECTIVES.to_vec(),
     };
     for threads in [1usize, 4] {
@@ -79,12 +101,47 @@ fn main() {
     {
         let s = run_sweep(&grid, &SweepOptions::default());
         let evaluated = s.cache.evaluated.max(1) as f64;
-        report_metric(
+        metric(
+            &mut metrics,
             "sweep/mini_grid_eval_reduction",
             s.cache.candidates() as f64 / evaluated,
             "x",
         );
     }
+
+    // The trajectory gate: the multi-macro, conv-heavy acceptance grid
+    // (the mix that dominates the default survey) timed end to end.
+    // Its evaluated/pruned counts, hit rate and reduction are what the
+    // CI bench-trajectory job archives and gates on (reduction >= 2x),
+    // so this section runs exactly when a JSON path is set (CI always
+    // sets one) — a filtered or --quick local run without it skips the
+    // most expensive grid in the file.
+    let json_path = std::env::var("IMCSIM_BENCH_JSON").ok();
+    let gate = json_path.as_ref().map(|_| {
+        let gate_grid = SweepGrid {
+            systems: vec![systems[1].clone(), systems[3].clone()],
+            networks: vec![imcsim::workload::resnet8(), imcsim::workload::mobilenet_v1()],
+            precisions: vec![PrecisionPoint::Native],
+            sparsities: vec![DEFAULT_SPARSITY],
+            noises: vec![NoiseSpec::Off],
+            objectives: COST_OBJECTIVES.to_vec(),
+        };
+        let t0 = Instant::now();
+        let s = run_sweep(&gate_grid, &SweepOptions::default());
+        let wall = t0.elapsed().as_secs_f64();
+        let reduction = s.cache.candidates() as f64 / s.cache.evaluated.max(1) as f64;
+        metric(&mut metrics, "sweep/gate_evaluated", s.cache.evaluated as f64, "evals");
+        metric(&mut metrics, "sweep/gate_pruned", s.cache.pruned as f64, "cands");
+        metric(&mut metrics, "sweep/gate_eval_reduction", reduction, "x");
+        metric(
+            &mut metrics,
+            "sweep/gate_cache_hit_rate",
+            s.cache.hit_rate() * 100.0,
+            "%",
+        );
+        metric(&mut metrics, "sweep/gate_wall_seconds", wall, "s");
+        (s.cache, reduction, wall)
+    });
 
     // the headline metrics: cache effectiveness and bound-pruning
     // reduction on the real survey grid (the most expensive section —
@@ -95,17 +152,67 @@ fn main() {
         let s = run_sweep(&survey, &SweepOptions::default());
         let hit_pct = s.cache.hit_rate() * 100.0;
         let entries = s.cache.entries as f64;
-        report_metric("sweep/survey_grid_tasks", s.points.len() as f64, "tasks");
-        report_metric("sweep/survey_cache_hit_rate", hit_pct, "%");
-        report_metric("sweep/survey_cache_entries", entries, "entries");
+        metric(&mut metrics, "sweep/survey_grid_tasks", s.points.len() as f64, "tasks");
+        metric(&mut metrics, "sweep/survey_cache_hit_rate", hit_pct, "%");
+        metric(&mut metrics, "sweep/survey_cache_entries", entries, "entries");
         // candidates / evaluated: how many fewer full evaluate() calls
         // the admissible bound buys on the default grid (target: >= 2x)
-        report_metric("sweep/survey_candidates", s.cache.candidates() as f64, "cands");
-        report_metric("sweep/survey_evaluated", s.cache.evaluated as f64, "evals");
-        report_metric(
+        metric(
+            &mut metrics,
+            "sweep/survey_candidates",
+            s.cache.candidates() as f64,
+            "cands",
+        );
+        metric(&mut metrics, "sweep/survey_evaluated", s.cache.evaluated as f64, "evals");
+        metric(
+            &mut metrics,
             "sweep/survey_eval_reduction",
             s.cache.candidates() as f64 / s.cache.evaluated.max(1) as f64,
             "x",
         );
+    }
+
+    // machine-readable trajectory file for the CI bench-trajectory job
+    if let Some(path) = json_path {
+        let (cache, reduction, gate_wall) = gate.expect("gate ran whenever a JSON path is set");
+        let num = Json::Num;
+        let timings: BTreeMap<String, Json> = b
+            .results()
+            .iter()
+            .map(|(name, st)| (name.clone(), num(st.median_ns)))
+            .collect();
+        let metric_map: BTreeMap<String, Json> =
+            metrics.iter().map(|(n, v)| (n.clone(), num(*v))).collect();
+        let gate_obj: BTreeMap<String, Json> = [
+            ("evaluated".to_string(), num(cache.evaluated as f64)),
+            ("pruned".to_string(), num(cache.pruned as f64)),
+            ("candidates".to_string(), num(cache.candidates() as f64)),
+            ("reduction".to_string(), num(reduction)),
+            ("cache_hit_rate".to_string(), num(cache.hit_rate())),
+            ("wall_seconds".to_string(), num(gate_wall)),
+        ]
+        .into_iter()
+        .collect();
+        let doc: BTreeMap<String, Json> = [
+            ("bench".to_string(), Json::Str("sweep_grid".to_string())),
+            ("quick".to_string(), Json::Bool(b.is_quick())),
+            (
+                "total_wall_seconds".to_string(),
+                num(t_start.elapsed().as_secs_f64()),
+            ),
+            ("timings_median_ns".to_string(), Json::Obj(timings)),
+            ("metrics".to_string(), Json::Obj(metric_map)),
+            ("gate".to_string(), Json::Obj(gate_obj)),
+        ]
+        .into_iter()
+        .collect();
+        let text = Json::Obj(doc).to_string();
+        match std::fs::write(&path, &text) {
+            Ok(()) => println!("wrote bench trajectory to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }

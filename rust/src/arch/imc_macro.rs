@@ -200,6 +200,37 @@ impl ImcMacro {
         }
     }
 
+    /// Per-cell unit capacitance (fF) at this macro's technology node:
+    /// the Fig. 6 `C_inv` regression the cost model already charges per
+    /// wordline/bitline cell ([`crate::model::tech::TechParams`] sets
+    /// `C_WL = C_BL = C_inv`). The analog noise model scales its
+    /// Pelgrom mismatch and kT/C terms from this same quantity, so the
+    /// noise a design suffers and the energy it pays derive from one
+    /// cell geometry.
+    pub fn unit_cap_ff(&self) -> f64 {
+        crate::model::tech::c_inv_ff(self.tech_nm)
+    }
+
+    /// Total capacitance (fF) pooled on one column's charge-sharing
+    /// node: `D2` unit cells contribute to each accumulation
+    /// (`unit_cap_ff · D2`). This is the `C` of the kT/C thermal-noise
+    /// term — larger arrays integrate more charge and suffer less
+    /// input-referred thermal noise per level.
+    pub fn column_cap_ff(&self) -> f64 {
+        self.unit_cap_ff() * self.d2() as f64
+    }
+
+    /// Per-column relative capacitor-mismatch σ for a Pelgrom matching
+    /// coefficient `a_cap` (fraction·√fF): `σ = a_cap / √C_unit`. The
+    /// mismatch of a column's conversion gain is dominated by its
+    /// *unit* capacitor (the capacitive-DAC / charge-sharing cell), so
+    /// the σ shrinks with the cell capacitance the node provides — the
+    /// standard Pelgrom area/capacitance law, anchored to the same
+    /// `C_inv` regression the energy model uses.
+    pub fn cap_mismatch_sigma(&self, a_cap: f64) -> f64 {
+        a_cap / self.unit_cap_ff().sqrt()
+    }
+
     /// The macro's (weight × activation) precision operating point.
     pub fn precision(&self) -> Precision {
         Precision {
@@ -385,6 +416,22 @@ mod tests {
         assert_eq!(m.d2(), 64);
         assert_eq!(m.cycles_per_mvm(), 16); // 4 slices x 4 mux steps
         assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn cell_geometry_caps_scale_with_node_and_rows() {
+        let m = aimc(); // 28 nm, D2 = 1152
+        assert!(m.unit_cap_ff() > 0.0);
+        assert!((m.column_cap_ff() - m.unit_cap_ff() * 1152.0).abs() < 1e-12);
+        // a finer node has less unit capacitance, hence *more* relative
+        // mismatch at the same Pelgrom coefficient
+        let mut fine = aimc();
+        fine.tech_nm = 5.0;
+        assert!(fine.unit_cap_ff() < m.unit_cap_ff());
+        assert!(fine.cap_mismatch_sigma(0.02) > m.cap_mismatch_sigma(0.02));
+        // σ scales linearly in the coefficient, and is zero at zero
+        assert_eq!(m.cap_mismatch_sigma(0.0), 0.0);
+        assert!((m.cap_mismatch_sigma(0.04) / m.cap_mismatch_sigma(0.02) - 2.0).abs() < 1e-12);
     }
 
     #[test]

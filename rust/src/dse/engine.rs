@@ -21,7 +21,7 @@
 use crate::arch::ImcSystem;
 use crate::mapping::{tile, MappingCandidate, MappingSpace, SpatialMapping, TemporalPolicy};
 use crate::model::{EnergyBreakdown, TechParams};
-use crate::sim::AccuracyRecord;
+use crate::sim::{AccuracyRecord, NoiseSpec};
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{Layer, Network};
 
@@ -219,6 +219,11 @@ pub struct DseOptions {
     pub input_sparsity: f64,
     /// Restrict the temporal policies searched (None = all).
     pub policy: Option<TemporalPolicy>,
+    /// Analog noise model applied by the functional simulator
+    /// ([`crate::sim::noise`]). Cost-side search is noise-invariant;
+    /// only the accuracy record's trial statistics change. DIMC
+    /// systems are unaffected under every spec.
+    pub noise: NoiseSpec,
 }
 
 impl Default for DseOptions {
@@ -227,6 +232,7 @@ impl Default for DseOptions {
             objective: Objective::Energy,
             input_sparsity: DEFAULT_SPARSITY,
             policy: None,
+            noise: NoiseSpec::Off,
         }
     }
 }
@@ -323,6 +329,7 @@ fn search_layer_all_impl(
     tech: &TechParams,
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
+    noise: NoiseSpec,
     prune: bool,
     seeds: &[(SpatialMapping, TemporalPolicy)],
 ) -> LayerSearch {
@@ -402,7 +409,11 @@ fn search_layer_all_impl(
     LayerSearch {
         evaluated,
         pruned,
-        accuracy: crate::sim::layer_accuracy(layer, &sys.imc),
+        // serial trials: the engine's callers (sweep groups, network
+        // layer fan-out) already saturate the thread pool — nesting an
+        // 8-way spawn per layer would only add contention. Bit-identical
+        // to the parallel fan-out by the simulator's contract.
+        accuracy: crate::sim::noise::layer_accuracy_noisy_with(layer, &sys.imc, noise, 1),
         best_energy: energy.expect("at least one mapping candidate"),
         best_latency: latency.expect("at least one mapping candidate"),
         best_edp: edp.expect("at least one mapping candidate"),
@@ -422,7 +433,22 @@ pub fn search_layer_all(
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
 ) -> LayerSearch {
-    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, true, &[])
+    search_layer_all_noisy(layer, sys, tech, input_sparsity, policy, NoiseSpec::Off)
+}
+
+/// [`search_layer_all`] with an explicit analog-noise spec: the cost
+/// optima are identical for every spec (the mapping search never
+/// consults the simulator), but the attached [`AccuracyRecord`] carries
+/// the spec's seeded trial statistics.
+pub fn search_layer_all_noisy(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    input_sparsity: f64,
+    policy: Option<TemporalPolicy>,
+    noise: NoiseSpec,
+) -> LayerSearch {
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, noise, true, &[])
 }
 
 /// [`search_layer_all`] warm-started with mapping candidates from a
@@ -447,7 +473,22 @@ pub fn search_layer_all_seeded(
     policy: Option<TemporalPolicy>,
     seeds: &[(SpatialMapping, TemporalPolicy)],
 ) -> LayerSearch {
-    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, true, seeds)
+    search_layer_all_seeded_noisy(layer, sys, tech, input_sparsity, policy, NoiseSpec::Off, seeds)
+}
+
+/// [`search_layer_all_seeded`] with an explicit analog-noise spec (the
+/// memoized sweep cache's entry point — one search serves every
+/// objective at one (sparsity, noise) setting).
+pub fn search_layer_all_seeded_noisy(
+    layer: &Layer,
+    sys: &ImcSystem,
+    tech: &TechParams,
+    input_sparsity: f64,
+    policy: Option<TemporalPolicy>,
+    noise: NoiseSpec,
+    seeds: &[(SpatialMapping, TemporalPolicy)],
+) -> LayerSearch {
+    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, noise, true, seeds)
 }
 
 /// The no-pruning reference: evaluates every candidate in the space.
@@ -460,7 +501,16 @@ pub fn search_layer_all_unpruned(
     input_sparsity: f64,
     policy: Option<TemporalPolicy>,
 ) -> LayerSearch {
-    search_layer_all_impl(layer, sys, tech, input_sparsity, policy, false, &[])
+    search_layer_all_impl(
+        layer,
+        sys,
+        tech,
+        input_sparsity,
+        policy,
+        NoiseSpec::Off,
+        false,
+        &[],
+    )
 }
 
 /// Search the best mapping for one layer.
@@ -470,7 +520,7 @@ pub fn search_layer(
     tech: &TechParams,
     opts: &DseOptions,
 ) -> LayerResult {
-    search_layer_all(layer, sys, tech, opts.input_sparsity, opts.policy)
+    search_layer_all_noisy(layer, sys, tech, opts.input_sparsity, opts.policy, opts.noise)
         .to_result(layer, opts.objective)
 }
 
@@ -710,6 +760,33 @@ mod tests {
         assert_eq!("accuracy".parse::<Objective>(), Ok(Objective::Accuracy));
         assert!("speed".parse::<Objective>().is_err());
         assert_eq!(Objective::Accuracy.to_string(), "accuracy");
+    }
+
+    #[test]
+    fn noise_spec_changes_trials_but_never_cost_optima() {
+        use crate::sim::NoiseSpec;
+        let systems = table2_systems();
+        let sys = &systems[0]; // aimc_large: lossy AIMC
+        let l = Layer::dense("fc", 64, 256);
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        let off = search_layer_all(&l, sys, &tech, DEFAULT_SPARSITY, None);
+        let noisy =
+            search_layer_all_noisy(&l, sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        // the mapping search never consults the simulator: optima and
+        // search statistics are bit-identical under every noise spec
+        assert_eq!(noisy.evaluated, off.evaluated);
+        assert_eq!(noisy.pruned, off.pruned);
+        for objective in ALL_OBJECTIVES {
+            let (a, b) = (noisy.best(objective), off.best(objective));
+            assert_eq!(a.total_energy_fj().to_bits(), b.total_energy_fj().to_bits());
+            assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+            assert_eq!(a.spatial, b.spatial);
+        }
+        // the nominal accuracy fields agree; only the trials differ
+        assert_eq!(noisy.accuracy().noise.to_bits(), off.accuracy().noise.to_bits());
+        assert_ne!(noisy.accuracy().trial_noise, off.accuracy().trial_noise);
+        assert!(noisy.accuracy().sqnr_std_db() > 0.0);
+        assert_eq!(off.accuracy().sqnr_std_db(), 0.0);
     }
 
     #[test]

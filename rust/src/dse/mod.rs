@@ -35,10 +35,10 @@ pub use cost::{
     evaluate, evaluate_tiled, lower_bound, CandidateBound, MappingEval, DEFAULT_SPARSITY,
 };
 pub use engine::{
-    case_study, search_layer, search_layer_all, search_layer_all_seeded,
-    search_layer_all_unpruned, search_network, search_network_with, DseOptions,
-    ExhaustiveSearch, LayerEvaluator, LayerResult, LayerSearch, NetworkResult, Objective,
-    ALL_OBJECTIVES, COST_OBJECTIVES,
+    case_study, search_layer, search_layer_all, search_layer_all_noisy,
+    search_layer_all_seeded, search_layer_all_seeded_noisy, search_layer_all_unpruned,
+    search_network, search_network_with, DseOptions, ExhaustiveSearch, LayerEvaluator,
+    LayerResult, LayerSearch, NetworkResult, Objective, ALL_OBJECTIVES, COST_OBJECTIVES,
 };
-pub use pareto::pareto_front;
+pub use pareto::{pareto_front, pareto_front_3d};
 pub use reuse::{access_counts, psum_bits, traffic_energy_fj, AccessCounts, TrafficEnergy};

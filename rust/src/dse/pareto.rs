@@ -59,6 +59,61 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     out
 }
 
+/// Indices of the Pareto-optimal points of a 3-objective minimization
+/// (e.g. the sweep's (energy, latency, −SQNR) surface). Same semantics
+/// as [`pareto_front`] lifted to three coordinates: a point is
+/// dominated iff some other point is ≤ on every axis and < on at least
+/// one; duplicates of a non-dominated point are all kept, NaN points
+/// are incomparable and kept, and input order is preserved.
+///
+/// The scan sorts by the first axis and only tests candidate dominators
+/// with a smaller-or-equal first coordinate — `O(n·k)` where `k` is the
+/// prefix of cheaper points, which the grid-sized inputs here (10³–10⁴
+/// points, most of them dominated early) keep far from the all-pairs
+/// worst case. A full sort-free 3D skyline structure is not warranted
+/// at this scale.
+///
+/// ```
+/// use imcsim::dse::pareto_front_3d;
+///
+/// let pts = [(1.0, 1.0, 9.0), (2.0, 2.0, 9.0), (3.0, 3.0, 1.0)];
+/// // (2,2,9) is dominated by (1,1,9); (3,3,1) survives on the 3rd axis
+/// assert_eq!(pareto_front_3d(&pts), vec![0, 2]);
+/// ```
+pub fn pareto_front_3d(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .total_cmp(&points[b].0)
+            .then(points[a].1.total_cmp(&points[b].1))
+            .then(points[a].2.total_cmp(&points[b].2))
+            .then(a.cmp(&b))
+    });
+    let dominates = |d: (f64, f64, f64), p: (f64, f64, f64)| {
+        d.0 <= p.0
+            && d.1 <= p.1
+            && d.2 <= p.2
+            && (d.0 < p.0 || d.1 < p.1 || d.2 < p.2)
+    };
+    let mut out = Vec::new();
+    for (pos, &i) in order.iter().enumerate() {
+        let p = points[i];
+        // only points sorted before `i` can have a smaller (or equal)
+        // first coordinate; anything later is ≥ on axis 0 and would
+        // need to be strictly better elsewhere while tying axis 0 —
+        // covered by the equal-first-coordinate prefix neighbors, which
+        // also sort before `i` unless they tie on all three axes (then
+        // neither dominates)
+        let dominated = order[..pos].iter().any(|&j| dominates(points[j], p));
+        if !dominated {
+            out.push(i);
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +177,92 @@ mod tests {
         // hang on the never-equal group key
         let pts = [(f64::NAN, 1.0), (1.0, f64::NAN), (1.0, 2.0), (2.0, 1.0)];
         assert_eq!(pareto_front(&pts), reference(&pts));
+    }
+
+    /// The naive O(n²) 3-objective definition the scan must match.
+    fn reference_3d(points: &[(f64, f64, f64)]) -> Vec<usize> {
+        let mut out = Vec::new();
+        'outer: for (i, &(x, y, z)) in points.iter().enumerate() {
+            for (j, &(a, b, c)) in points.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                if a <= x && b <= y && c <= z && (a < x || b < y || c < z) {
+                    continue 'outer;
+                }
+            }
+            out.push(i);
+        }
+        out
+    }
+
+    #[test]
+    fn front_3d_keeps_per_axis_minima_and_drops_dominated() {
+        let pts = [
+            (1.0, 9.0, 9.0), // energy minimum
+            (9.0, 1.0, 9.0), // latency minimum
+            (9.0, 9.0, 1.0), // error minimum
+            (2.0, 2.0, 2.0), // balanced, non-dominated
+            (3.0, 3.0, 3.0), // dominated by the balanced point
+        ];
+        assert_eq!(pareto_front_3d(&pts), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn front_3d_duplicates_ties_empty_and_nan() {
+        assert!(pareto_front_3d(&[]).is_empty());
+        assert_eq!(pareto_front_3d(&[(4.0, 2.0, 1.0)]), vec![0]);
+        // duplicates of a non-dominated point are all kept
+        let dup = [(1.0, 1.0, 1.0), (1.0, 1.0, 1.0), (2.0, 1.0, 1.0)];
+        assert_eq!(pareto_front_3d(&dup), vec![0, 1]);
+        // a tie on two axes with strict improvement on the third kills
+        let two_tied = [(1.0, 1.0, 5.0), (1.0, 1.0, 4.0)];
+        assert_eq!(pareto_front_3d(&two_tied), vec![1]);
+        // NaN points are incomparable: kept, and never dominating
+        let nan = [(f64::NAN, 1.0, 1.0), (1.0, f64::NAN, 2.0), (1.0, 2.0, 2.0), (2.0, 1.0, 1.0)];
+        assert_eq!(pareto_front_3d(&nan), reference_3d(&nan));
+    }
+
+    #[test]
+    fn front_3d_exact_points_at_neg_infinity_survive() {
+        // an exact datapath sits at −∞ on the −SQNR axis: it can only
+        // be dominated by another exact point that is cheaper/faster
+        let pts = [
+            (5.0, 5.0, f64::NEG_INFINITY),
+            (1.0, 1.0, -30.0),
+            (6.0, 6.0, f64::NEG_INFINITY), // dominated by the first
+        ];
+        assert_eq!(pareto_front_3d(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn front_3d_matches_naive_reference_on_random_grids() {
+        let mut rng = crate::util::prng::Rng::new(13);
+        for n in [1usize, 2, 3, 10, 64, 257] {
+            let pts: Vec<(f64, f64, f64)> = (0..n)
+                .map(|_| {
+                    // coarse values force plenty of exact ties/duplicates
+                    (
+                        rng.below(6) as f64,
+                        rng.below(6) as f64,
+                        rng.below(6) as f64,
+                    )
+                })
+                .collect();
+            assert_eq!(pareto_front_3d(&pts), reference_3d(&pts), "n={n}: {pts:?}");
+        }
+    }
+
+    #[test]
+    fn front_3d_degenerate_third_axis_matches_2d_front() {
+        // with a constant third coordinate the 3D front reduces to the
+        // 2D front over the first two axes
+        let mut rng = crate::util::prng::Rng::new(21);
+        let pts2: Vec<(f64, f64)> = (0..64)
+            .map(|_| (rng.below(8) as f64, rng.below(8) as f64))
+            .collect();
+        let pts3: Vec<(f64, f64, f64)> = pts2.iter().map(|&(x, y)| (x, y, 7.0)).collect();
+        assert_eq!(pareto_front_3d(&pts3), pareto_front(&pts2));
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //!   (paper §III, Fig. 4) with provenance-tagged reported metrics.
 //! * [`sim`] — the std-only bit-true functional MVM simulator: DIMC
 //!   exact accumulation, AIMC DAC-slicing + ADC clipping/truncation,
-//!   exact partial-sum recombination; turns quantization error (SQNR,
-//!   max-abs error, clip rate) into a first-class sweep axis without
-//!   the `xla` runtime.
+//!   exact partial-sum recombination, plus a seeded Monte-Carlo model
+//!   of the analog non-idealities (capacitor mismatch, kT/C thermal
+//!   noise, comparator offset / IR drop); turns quantization and
+//!   analog error (SQNR, max-abs error, clip rate, trial statistics)
+//!   into first-class sweep axes without the `xla` runtime.
 //! * [`sweep`] — the sharded full-grid design-space sweep: survey
 //!   designs × tinyMLPerf networks × precision points × objectives,
 //!   with a memoized cost+accuracy cache and global Pareto aggregation
@@ -59,4 +61,4 @@ pub mod xla;
 
 pub use arch::{ImcFamily, ImcMacro, ImcSystem, Precision};
 pub use model::{EnergyBreakdown, MacroOpCounts, TechParams};
-pub use sim::AccuracyRecord;
+pub use sim::{AccuracyRecord, NoiseSpec};

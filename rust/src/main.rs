@@ -16,11 +16,12 @@ use imcsim::dse::{search_network, DseOptions, Objective};
 use imcsim::mapping::TemporalPolicy;
 use imcsim::report::{
     eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, fmt_sqnr,
-    parse_sweep_csv, sweep_csv, sweep_text, table2_text, Table,
+    fmt_sqnr_trials, parse_sweep_csv, surface_csv, sweep_csv, sweep_text, table2_text, Table,
 };
 use imcsim::runtime::{default_artifacts_dir, load_manifest};
 #[cfg(feature = "xla")]
 use imcsim::runtime::{Engine, Kind};
+use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
     CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,
@@ -48,34 +49,47 @@ Paper artifacts:
 Exploration & serving:
   dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
       [--objective energy|latency|edp|accuracy] [--policy ws|os|is] [--sparsity F]
+      [--noise off|typical|worst|A:T:O]
                        per-layer optimal mappings for one network, with
                        the bit-true simulator's per-layer SQNR (the
                        accuracy objective is mapping-invariant and
-                       reports the energy-optimal mapping)
+                       reports the energy-optimal mapping); --noise
+                       layers the seeded analog-noise model onto the
+                       AIMC datapath and reports trial mean/σ SQNR
   sweep [--shards N] [--shard-index K] [--cells N[,N...]]
-      [--precision P[,P...]] [--sparsity F[,F...]] [--cache-file FILE]
-      [--csv FILE]
+      [--precision P[,P...]] [--sparsity F[,F...]]
+      [--noise S[,S...]] [--cache-file FILE] [--csv FILE]
+      [--surface-csv FILE]
                        full-grid DSE sweep: every surveyed design (per
                        SRAM-cell budget) x every tinyMLPerf network x
                        every precision point x every sparsity level x
-                       every objective, streamed through the
-                       bound-pruned mapping search and a memoized
-                       cost+accuracy cache; prints per-(network,
-                       precision) cost Pareto frontiers, per-network
-                       accuracy-vs-energy frontiers (bit-true simulated
-                       SQNR / max-abs error / ADC clip rate columns),
-                       plus evaluated/pruned candidate counts.
+                       every noise spec x every objective, streamed
+                       through the bound-pruned mapping search and a
+                       memoized cost+accuracy cache; prints
+                       per-(network, precision) cost Pareto frontiers,
+                       per-network accuracy-vs-energy frontiers
+                       (bit-true simulated SQNR / max-abs error / ADC
+                       clip rate columns, plus trial mean/σ SQNR under
+                       noise), the 3-objective (energy, latency, SQNR)
+                       Pareto surface, and evaluated/pruned candidate
+                       counts.
                        --precision takes WxA weight-x-activation pairs
                        (e.g. 2x8,4x8,8x8) and/or 'native'; each design
                        is re-quantized to each point (converter
                        resolutions re-derived, unrealizable pairs
-                       skipped). --shards/--shard-index split the grid
-                       deterministically across CI jobs or machines;
-                       --cache-file persists the cost cache across runs
-                       (version-tagged; stale schemas are rejected).
-  sweepmerge [--csv FILE] SHARD.csv [SHARD.csv ...]
+                       skipped). --noise takes off|typical|worst and/or
+                       explicit A_CAP:T_FACTOR:OFFSET_LSB sigmas (e.g.
+                       0.02:1:0.25); DIMC designs are unaffected by
+                       every spec. --shards/--shard-index split the
+                       grid deterministically across CI jobs or
+                       machines; --cache-file persists the cost cache
+                       across runs (version-tagged; stale schemas are
+                       rejected); --surface-csv dumps the 3-objective
+                       Pareto surface.
+  sweepmerge [--csv FILE] [--surface-csv FILE] SHARD.csv [SHARD.csv ...]
                        merge shard CSVs (written by `sweep --csv`) back
-                       into the full-grid summary and Pareto frontiers
+                       into the full-grid summary, Pareto frontiers and
+                       3-objective surface
   archsweep --network <ae|resnet8|dscnn|mobilenet> [--family aimc|dimc]
       [--cells N]      geometry sweep of one network at equal SRAM
                        budget; prints the (energy, latency) Pareto front
@@ -187,6 +201,31 @@ fn cmd_validate() -> i32 {
 }
 
 fn cmd_dse(args: &Args) -> i32 {
+    // Reject unknown options rather than silently falling back to
+    // defaults — a misspelled --noise must not quietly report
+    // noise-free numbers as if they were the requested corner (the
+    // same guard `sweep` has for its axes).
+    const KNOWN: [&str; 7] = [
+        "network", "system", "config", "objective", "policy", "sparsity", "noise",
+    ];
+    if let Some(unknown) = args
+        .options
+        .keys()
+        .chain(args.flags.iter())
+        .find(|k| !KNOWN.contains(&k.as_str()))
+    {
+        eprintln!(
+            "unknown option --{unknown} (dse takes --network, --system, --config, \
+             --objective, --policy, --sparsity, --noise)"
+        );
+        return 2;
+    }
+    for opt in KNOWN {
+        if args.flag(opt) {
+            eprintln!("--{opt} requires a value");
+            return 2;
+        }
+    }
     let net = match args.opt("network") {
         Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
         Some("resnet8") => imcsim::workload::resnet8(),
@@ -235,14 +274,31 @@ fn cmd_dse(args: &Args) -> i32 {
             return 2;
         }
     };
-    let sparsity: f64 = args
-        .opt("sparsity")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0.5);
+    let sparsity: f64 = match args.opt("sparsity") {
+        None => 0.5,
+        Some(raw) => match raw.parse() {
+            Ok(f) if (0.0..=1.0).contains(&f) => f,
+            _ => {
+                eprintln!("--sparsity must be a number in [0, 1] (got '{raw}')");
+                return 2;
+            }
+        },
+    };
+    let noise: NoiseSpec = match args.opt("noise") {
+        None => NoiseSpec::Off,
+        Some(raw) => match raw.parse() {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
     let opts = DseOptions {
         objective,
         input_sparsity: sparsity,
         policy,
+        noise,
     };
     for sys in &systems {
         let t0 = Instant::now();
@@ -296,6 +352,13 @@ fn cmd_dse(args: &Args) -> i32 {
                 acc.outputs
             );
         }
+        if !matches!(noise, NoiseSpec::Off) {
+            println!(
+                "analog noise ({noise}): SQNR over {} seeded trials = {} dB",
+                imcsim::sim::NOISE_TRIALS,
+                fmt_sqnr_trials(acc.sqnr_mean_db(), acc.sqnr_std_db())
+            );
+        }
         let (evaluated, pruned) = r
             .layers
             .iter()
@@ -342,8 +405,9 @@ fn cmd_sweep(args: &Args) -> i32 {
     // rather than silently falling back to defaults: a CI matrix job
     // with an empty or misspelled shard variable must not quietly run
     // the whole grid.
-    const KNOWN: [&str; 7] = [
-        "shards", "shard-index", "cells", "precision", "sparsity", "csv", "cache-file",
+    const KNOWN: [&str; 9] = [
+        "shards", "shard-index", "cells", "precision", "sparsity", "noise", "csv",
+        "surface-csv", "cache-file",
     ];
     if let Some(unknown) = args
         .options
@@ -353,7 +417,8 @@ fn cmd_sweep(args: &Args) -> i32 {
     {
         eprintln!(
             "unknown option --{unknown} (sweep takes --shards, --shard-index, \
-             --cells, --precision, --sparsity, --csv, --cache-file)"
+             --cells, --precision, --sparsity, --noise, --csv, --surface-csv, \
+             --cache-file)"
         );
         return 2;
     }
@@ -408,6 +473,19 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         },
     };
+    let noises: Vec<NoiseSpec> = match args.opt("noise") {
+        None => vec![NoiseSpec::Off],
+        Some(raw) => match parse_list::<NoiseSpec>(raw, "noise") {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!(
+                    "{e} (--noise takes off|typical|worst and/or explicit \
+                     A_CAP:T_FACTOR:OFFSET_LSB sigma triples like 0.02:1:0.25)"
+                );
+                return 2;
+            }
+        },
+    };
 
     // Per-precision realizability report (the db-level validity filter;
     // same ImcMacro::requantized core the grid's per-group skip uses)
@@ -424,15 +502,17 @@ fn cmd_sweep(args: &Args) -> i32 {
         }
     }
 
-    let grid = SweepGrid::survey_tinymlperf_full(&cells, &precisions, &sparsities);
+    let grid = SweepGrid::survey_tinymlperf_full(&cells, &precisions, &sparsities, &noises);
     println!(
         "grid: {} designs ({} cell budgets) x {} networks x {} precisions x {} sparsities \
-         x {} objectives = {} tasks (unrealizable design-precision pairs are skipped)",
+         x {} noise specs x {} objectives = {} tasks (unrealizable design-precision pairs \
+         are skipped)",
         grid.systems.len(),
         cells.len(),
         grid.networks.len(),
         grid.precisions.len(),
         grid.sparsities.len(),
+        grid.noises.len(),
         grid.objectives.len(),
         grid.n_tasks()
     );
@@ -508,19 +588,45 @@ fn cmd_sweep(args: &Args) -> i32 {
         }
         println!("wrote {path}");
     }
+    if let Some(path) = args.opt("surface-csv") {
+        if let Err(e) = std::fs::write(path, surface_csv(&summary)) {
+            eprintln!("cannot write surface csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
     0
 }
 
 /// Merge shard CSVs (written by `sweep --shards N --shard-index K
 /// --csv ...`) back into the full-grid summary: the CI matrix path.
 /// Points are parsed losslessly, reassembled in canonical task order
-/// and the per-network Pareto frontiers recomputed — bit-identical to a
-/// single-process run over the same tasks.
+/// and the per-network Pareto frontiers and the 3-objective surface
+/// recomputed — bit-identical to a single-process run over the same
+/// tasks.
 fn cmd_sweepmerge(args: &Args) -> i32 {
+    // same guard as sweep/dse: a misspelled --surface-csv must not
+    // silently drop the surface artifact with exit 0
+    const KNOWN: [&str; 2] = ["csv", "surface-csv"];
+    if let Some(unknown) = args
+        .options
+        .keys()
+        .chain(args.flags.iter())
+        .find(|k| !KNOWN.contains(&k.as_str()))
+    {
+        eprintln!("unknown option --{unknown} (sweepmerge takes --csv and --surface-csv)");
+        return 2;
+    }
+    for opt in KNOWN {
+        if args.flag(opt) {
+            eprintln!("--{opt} requires a value");
+            return 2;
+        }
+    }
     if args.positional.is_empty() {
         eprintln!(
             "sweepmerge needs at least one shard CSV \
-             (usage: sweepmerge [--csv OUT] SHARD.csv ...)"
+             (usage: sweepmerge [--csv OUT] [--surface-csv OUT] SHARD.csv ...)"
         );
         return 2;
     }
@@ -548,6 +654,7 @@ fn cmd_sweepmerge(args: &Args) -> i32 {
             points,
             frontiers: Vec::new(),
             accuracy_frontiers: Vec::new(),
+            surfaces: Vec::new(),
             cache: CacheStats::default(),
             merged: false,
         });
@@ -562,6 +669,13 @@ fn cmd_sweepmerge(args: &Args) -> i32 {
     if let Some(path) = args.opt("csv") {
         if let Err(e) = std::fs::write(path, sweep_csv(&merged)) {
             eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.opt("surface-csv") {
+        if let Err(e) = std::fs::write(path, surface_csv(&merged)) {
+            eprintln!("cannot write surface csv: {e}");
             return 1;
         }
         println!("wrote {path}");

@@ -268,7 +268,7 @@ pub fn accuracy_tradeoff_text(s: &crate::sweep::SweepSummary) -> String {
             front.len()
         ));
         let mut t = Table::new(&[
-            "design", "prec", "objective", "E [uJ]", "SQNR[dB]", "max|err|", "clip",
+            "design", "prec", "noise", "objective", "E [uJ]", "SQNR[dB]", "max|err|", "clip",
         ]);
         let mut rows: Vec<&crate::sweep::GridPoint> =
             front.iter().map(|&i| &s.points[i]).collect();
@@ -277,6 +277,7 @@ pub fn accuracy_tradeoff_text(s: &crate::sweep::SweepSummary) -> String {
             t.row(vec![
                 p.design.clone(),
                 format!("{}x{}", p.weight_bits, p.act_bits),
+                p.noise.to_string(),
                 p.objective.to_string(),
                 format!("{:.3}", p.energy_fj * 1e-9),
                 super::sweep::fmt_sqnr(p.sqnr_db),
@@ -306,6 +307,63 @@ pub fn accuracy_tradeoff_text(s: &crate::sweep::SweepSummary) -> String {
         }
         out.push('\n');
         out.push_str(&plot.render());
+    }
+    out
+}
+
+/// The 3-objective (energy, latency, SQNR) Pareto-surface view of a
+/// sweep summary: per (network, sparsity, noise corner), the surviving
+/// points of the surface pooled across designs, precision points and
+/// objectives — sorted by energy, with the noise-aware trial-mean SQNR
+/// (±σ over the seeded trials) as the accuracy column — plus an ASCII
+/// projection onto the (latency, SQNR) plane (the energy axis is
+/// already covered by the 2-D frontier views above it).
+pub fn pareto_surface_text(s: &crate::sweep::SweepSummary) -> String {
+    let mut out = String::new();
+    for (label, surface) in &s.surfaces {
+        out.push_str(&format!(
+            "\n-- {label}: 3-objective (energy, latency, SQNR) Pareto surface — {} points --\n",
+            surface.len()
+        ));
+        let mut t = Table::new(&[
+            "design", "prec", "noise", "objective", "E [uJ]", "t [us]", "SQNR[dB]",
+        ]);
+        let mut rows: Vec<&crate::sweep::GridPoint> =
+            surface.iter().map(|&i| &s.points[i]).collect();
+        rows.sort_by(|a, b| a.energy_fj.partial_cmp(&b.energy_fj).unwrap());
+        for p in &rows {
+            t.row(vec![
+                p.design.clone(),
+                format!("{}x{}", p.weight_bits, p.act_bits),
+                p.noise.to_string(),
+                p.objective.to_string(),
+                format!("{:.3}", p.energy_fj * 1e-9),
+                format!("{:.2}", p.time_ns * 1e-3),
+                super::sweep::fmt_sqnr_trials(p.sqnr_mean_db, p.sqnr_std_db),
+            ]);
+        }
+        out.push_str(&t.render());
+        if rows.len() > 1 {
+            let mut plot = ScatterPlot::new(
+                "surface projection: latency vs SQNR (* = surface point; exact capped at 96 dB)",
+                "latency [us]",
+                "SQNR [dB]",
+                true,
+            );
+            plot.add_series(
+                '*',
+                rows.iter()
+                    .map(|p| {
+                        (
+                            p.time_ns * 1e-3,
+                            p.sqnr_mean_db.min(SQNR_PLOT_CAP_DB).max(0.1),
+                        )
+                    })
+                    .collect(),
+            );
+            out.push('\n');
+            out.push_str(&plot.render());
+        }
     }
     out
 }

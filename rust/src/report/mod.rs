@@ -9,7 +9,7 @@ pub mod table;
 pub use ascii_plot::ScatterPlot;
 pub use figures::{
     accuracy_tradeoff_text, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text,
-    table2_text,
+    pareto_surface_text, table2_text,
 };
-pub use sweep::{fmt_sqnr, parse_sweep_csv, sweep_csv, sweep_text};
+pub use sweep::{fmt_sqnr, fmt_sqnr_trials, parse_sweep_csv, surface_csv, sweep_csv, sweep_text};
 pub use table::{eng, Table};

@@ -7,6 +7,7 @@ use std::collections::HashSet;
 
 use crate::arch::ImcFamily;
 use crate::dse::Objective;
+use crate::sim::NoiseSpec;
 use crate::sweep::{GridPoint, PrecisionPoint, SweepSummary};
 
 use super::ascii_plot::ScatterPlot;
@@ -23,6 +24,18 @@ pub fn fmt_sqnr(sqnr_db: f64) -> String {
     }
 }
 
+/// Render the trial-mean SQNR with its spread (`exact` for bit-exact
+/// datapaths; the `±σ` tail only when the spread is nonzero).
+pub fn fmt_sqnr_trials(mean_db: f64, std_db: f64) -> String {
+    if mean_db == f64::INFINITY {
+        "exact".to_string()
+    } else if std_db == 0.0 {
+        format!("{mean_db:.1}")
+    } else {
+        format!("{mean_db:.1}±{std_db:.1}")
+    }
+}
+
 fn point_row(p: &GridPoint) -> Vec<String> {
     vec![
         p.design.clone(),
@@ -33,18 +46,20 @@ fn point_row(p: &GridPoint) -> Vec<String> {
         p.n_macros.to_string(),
         super::table::eng(p.cells as f64),
         format!("{:.2}", p.sparsity),
+        p.noise.to_string(),
         format!("{:.3}", p.energy_fj * 1e-9),
         format!("{:.2}", p.time_ns * 1e-3),
         format!("{:.1}", p.tops_per_watt),
         format!("{:.1}%", p.utilization * 100.0),
         fmt_sqnr(p.sqnr_db),
+        fmt_sqnr_trials(p.sqnr_mean_db, p.sqnr_std_db),
         format!("{:.2}%", p.clip_rate * 100.0),
     ]
 }
 
-const POINT_HEADERS: [&str; 13] = [
-    "design", "network", "prec", "objective", "macros", "cells", "spars", "E [uJ]", "t [us]",
-    "TOP/s/W", "util", "SQNR[dB]", "clip",
+const POINT_HEADERS: [&str; 15] = [
+    "design", "network", "prec", "objective", "macros", "cells", "spars", "noise", "E [uJ]",
+    "t [us]", "TOP/s/W", "util", "SQNR[dB]", "SQNRtrial", "clip",
 ];
 
 /// Human-readable sweep summary: scope line, per-network Pareto
@@ -72,6 +87,7 @@ pub fn sweep_text(s: &SweepSummary) -> String {
                         p.network == p0.network
                             && p.precision == p0.precision
                             && p.sparsity.to_bits() == p0.sparsity.to_bits()
+                            && p.noise.fingerprint() == p0.noise.fingerprint()
                     })
                     .count()
             }
@@ -117,6 +133,9 @@ pub fn sweep_text(s: &SweepSummary) -> String {
     // designs buy efficiency with quantization error)
     out.push_str(&super::figures::accuracy_tradeoff_text(s));
 
+    // the 3-objective (energy, latency, SQNR) Pareto surface
+    out.push_str(&super::figures::pareto_surface_text(s));
+
     // merged shard runs sum independent caches, so label accordingly
     let entries_label = if s.merged {
         " (summed across shard caches)"
@@ -143,14 +162,17 @@ pub fn sweep_text(s: &SweepSummary) -> String {
 /// The sweep CSV column set; [`sweep_csv`] and [`parse_sweep_csv`] must
 /// stay inverses of each other over it. `precision` is the grid-axis
 /// *setting* (`native` or a `WxA` pair); `weight_bits`/`act_bits` are
-/// the realized operand widths of the evaluated macro;
-/// `sqnr_db`/`max_abs_err`/`clip_rate` are the simulated accuracy
-/// record (`sqnr_db` is `inf` for bit-exact datapaths and round-trips
-/// through Rust float formatting).
-const CSV_HEADERS: [&str; 21] = [
+/// the realized operand widths of the evaluated macro; `noise` is the
+/// analog-noise spec id (`off`/`typical`/`worst`/`A:T:O`);
+/// `sqnr_db`/`max_abs_err`/`clip_rate` are the nominal simulated
+/// accuracy record (`sqnr_db` is `inf` for bit-exact datapaths and
+/// round-trips through Rust float formatting) and
+/// `sqnr_mean_db`/`sqnr_std_db` the seeded-trial statistics.
+const CSV_HEADERS: [&str; 24] = [
     "task", "design", "family", "network", "precision", "weight_bits", "act_bits", "sparsity",
-    "objective", "macros", "cells", "energy_fj", "macro_fj", "time_ns", "edp_fj_ns", "tops_w",
-    "util", "sqnr_db", "max_abs_err", "clip_rate", "pareto",
+    "noise", "objective", "macros", "cells", "energy_fj", "macro_fj", "time_ns", "edp_fj_ns",
+    "tops_w", "util", "sqnr_db", "sqnr_mean_db", "sqnr_std_db", "max_abs_err", "clip_rate",
+    "pareto",
 ];
 
 /// Every evaluated grid point as CSV (canonical task order). Floats are
@@ -173,6 +195,7 @@ pub fn sweep_csv(s: &SweepSummary) -> String {
             p.weight_bits.to_string(),
             p.act_bits.to_string(),
             p.sparsity.to_string(),
+            p.noise.to_string(),
             p.objective.to_string(),
             p.n_macros.to_string(),
             p.cells.to_string(),
@@ -183,10 +206,46 @@ pub fn sweep_csv(s: &SweepSummary) -> String {
             p.tops_per_watt.to_string(),
             p.utilization.to_string(),
             p.sqnr_db.to_string(),
+            p.sqnr_mean_db.to_string(),
+            p.sqnr_std_db.to_string(),
             p.max_abs_err.to_string(),
             p.clip_rate.to_string(),
             if on_front.contains(&i) { "1".into() } else { "0".into() },
         ]);
+    }
+    t.to_csv()
+}
+
+/// The 3-objective Pareto-surface CSV: one row per surviving point of
+/// each per-(network, sparsity, noise) (energy, latency, SQNR) surface.
+/// Written by `sweep --surface-csv` and `sweepmerge --surface-csv`;
+/// floats use shortest-roundtrip formatting, so a shard-merged surface
+/// is byte-identical to the single-process one (the CI determinism job
+/// diffs exactly this).
+pub fn surface_csv(s: &SweepSummary) -> String {
+    let mut t = Table::new(&[
+        "surface", "task", "design", "family", "network", "precision", "noise", "sparsity",
+        "objective", "energy_fj", "time_ns", "sqnr_mean_db", "sqnr_std_db",
+    ]);
+    for (label, surface) in &s.surfaces {
+        for &i in surface {
+            let p = &s.points[i];
+            t.row(vec![
+                label.clone(),
+                p.task_index.to_string(),
+                p.design.clone(),
+                p.family.to_string(),
+                p.network.clone(),
+                p.precision.to_string(),
+                p.noise.to_string(),
+                p.sparsity.to_string(),
+                p.objective.to_string(),
+                p.energy_fj.to_string(),
+                p.time_ns.to_string(),
+                p.sqnr_mean_db.to_string(),
+                p.sqnr_std_db.to_string(),
+            ]);
+        }
     }
     t.to_csv()
 }
@@ -223,7 +282,7 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             "DIMC" => ImcFamily::Dimc,
             _ => return Err(err("family")),
         };
-        let objective: Objective = fields[8].parse().map_err(|_| err("objective"))?;
+        let objective: Objective = fields[9].parse().map_err(|_| err("objective"))?;
         points.push(GridPoint {
             task_index: fields[0].parse().map_err(|_| err("task"))?,
             design: fields[1].to_string(),
@@ -235,17 +294,20 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             weight_bits: fields[5].parse().map_err(|_| err("weight_bits"))?,
             act_bits: fields[6].parse().map_err(|_| err("act_bits"))?,
             sparsity: fields[7].parse().map_err(|_| err("sparsity"))?,
+            noise: fields[8].parse::<NoiseSpec>().map_err(|_| err("noise"))?,
             objective,
-            n_macros: fields[9].parse().map_err(|_| err("macros"))?,
-            cells: fields[10].parse().map_err(|_| err("cells"))?,
-            energy_fj: fields[11].parse().map_err(|_| err("energy_fj"))?,
-            macro_fj: fields[12].parse().map_err(|_| err("macro_fj"))?,
-            time_ns: fields[13].parse().map_err(|_| err("time_ns"))?,
-            tops_per_watt: fields[15].parse().map_err(|_| err("tops_w"))?,
-            utilization: fields[16].parse().map_err(|_| err("util"))?,
-            sqnr_db: fields[17].parse().map_err(|_| err("sqnr_db"))?,
-            max_abs_err: fields[18].parse().map_err(|_| err("max_abs_err"))?,
-            clip_rate: fields[19].parse().map_err(|_| err("clip_rate"))?,
+            n_macros: fields[10].parse().map_err(|_| err("macros"))?,
+            cells: fields[11].parse().map_err(|_| err("cells"))?,
+            energy_fj: fields[12].parse().map_err(|_| err("energy_fj"))?,
+            macro_fj: fields[13].parse().map_err(|_| err("macro_fj"))?,
+            time_ns: fields[14].parse().map_err(|_| err("time_ns"))?,
+            tops_per_watt: fields[16].parse().map_err(|_| err("tops_w"))?,
+            utilization: fields[17].parse().map_err(|_| err("util"))?,
+            sqnr_db: fields[18].parse().map_err(|_| err("sqnr_db"))?,
+            sqnr_mean_db: fields[19].parse().map_err(|_| err("sqnr_mean_db"))?,
+            sqnr_std_db: fields[20].parse().map_err(|_| err("sqnr_std_db"))?,
+            max_abs_err: fields[21].parse().map_err(|_| err("max_abs_err"))?,
+            clip_rate: fields[22].parse().map_err(|_| err("clip_rate"))?,
         });
     }
     Ok(points)
@@ -267,6 +329,7 @@ mod tests {
                 PrecisionPoint::Fixed(crate::arch::Precision::new(2, 8)),
             ],
             sparsities: vec![crate::dse::DEFAULT_SPARSITY],
+            noises: vec![NoiseSpec::Off, NoiseSpec::Typical],
             objectives: vec![Objective::Energy],
         };
         run_sweep(&grid, &SweepOptions::default())
@@ -290,12 +353,33 @@ mod tests {
         // accuracy columns and the trade-off view are rendered
         assert!(text.contains("SQNR"), "{text}");
         assert!(text.contains("accuracy-vs-energy"), "{text}");
+        // the noise axis labels its frontiers and the surface is shown
+        assert!(text.contains("@ noise typical"), "{text}");
+        assert!(text.contains("energy-latency-accuracy surface"), "{text}");
     }
 
     #[test]
     fn sqnr_formatting_marks_exact_datapaths() {
         assert_eq!(fmt_sqnr(f64::INFINITY), "exact");
         assert_eq!(fmt_sqnr(42.0512), "42.1");
+        assert_eq!(fmt_sqnr_trials(f64::INFINITY, 0.0), "exact");
+        assert_eq!(fmt_sqnr_trials(42.0512, 0.0), "42.1");
+        assert_eq!(fmt_sqnr_trials(42.0512, 1.26), "42.1±1.3");
+    }
+
+    #[test]
+    fn surface_csv_lists_every_surface_point() {
+        let s = summary();
+        let csv = surface_csv(&s);
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert!(lines[0].starts_with("surface,task,design"));
+        let n_rows: usize = s.surfaces.iter().map(|(_, f)| f.len()).sum();
+        assert_eq!(lines.len(), n_rows + 1);
+        assert!(n_rows > 0, "no surface points rendered");
+        // every data row names its surface and carries the noise id
+        for l in &lines[1..] {
+            assert!(l.contains("energy-latency-accuracy surface"), "{l}");
+        }
     }
 
     #[test]
@@ -335,16 +419,24 @@ mod tests {
             assert_eq!(a.n_macros, b.n_macros);
             assert_eq!(a.cells, b.cells);
             assert_eq!(a.sparsity.to_bits(), b.sparsity.to_bits());
+            assert_eq!(a.noise, b.noise);
             assert_eq!(a.energy_fj.to_bits(), b.energy_fj.to_bits());
             assert_eq!(a.macro_fj.to_bits(), b.macro_fj.to_bits());
             assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
             assert_eq!(a.tops_per_watt.to_bits(), b.tops_per_watt.to_bits());
             assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
             // accuracy columns round-trip too, including infinite SQNR
+            // and the trial statistics
             assert_eq!(a.sqnr_db.to_bits(), b.sqnr_db.to_bits());
+            assert_eq!(a.sqnr_mean_db.to_bits(), b.sqnr_mean_db.to_bits());
+            assert_eq!(a.sqnr_std_db.to_bits(), b.sqnr_std_db.to_bits());
             assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
             assert_eq!(a.clip_rate.to_bits(), b.clip_rate.to_bits());
         }
+        // the grid carries both noise corners, so the roundtrip
+        // exercises both noise-id encodings
+        assert!(parsed.iter().any(|p| p.noise == NoiseSpec::Off));
+        assert!(parsed.iter().any(|p| p.noise == NoiseSpec::Typical));
         // the grid above carries finite-SQNR (AIMC) points; exact
         // (infinite) SQNR round-trips through "inf"
         assert_eq!("inf".parse::<f64>().unwrap(), f64::INFINITY);

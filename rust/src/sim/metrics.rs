@@ -1,32 +1,57 @@
-//! Quantization-error metrics of a functional simulation.
+//! Quantization- and noise-error metrics of a functional simulation.
 //!
 //! The record keeps *raw sums* (signal energy, noise energy, conversion
-//! counts) rather than derived ratios, so records merge associatively:
-//! a network-level record is the plain sum of its layers', and the
-//! derived SQNR / clip rate are computed on demand. All fields
-//! round-trip bit-exactly through the persistent sweep cache.
+//! counts, per-trial noise energies) rather than derived ratios, so
+//! records merge associatively: a network-level record is the plain sum
+//! of its layers', and the derived SQNR / clip rate / trial mean and
+//! spread are computed on demand. All fields round-trip bit-exactly
+//! through the persistent sweep cache.
+//!
+//! Two error layers coexist in one record. The **nominal** fields
+//! (`noise`, `max_abs_err`, `clipped`) describe the deterministic
+//! quantization-only datapath — exactly the record the pre-noise
+//! simulator produced, bit for bit. The **trial** field layers the
+//! seeded Monte-Carlo analog non-idealities ([`crate::sim::noise`]) on
+//! top: `trial_noise[t]` is the total output-error energy of trial `t`
+//! (quantization *plus* cap mismatch, kT/C and offset). With the noise
+//! model off, every trial equals the nominal noise energy and the trial
+//! spread is exactly zero.
 
-/// Quantization-error record of one simulation (one layer, or a merged
-/// set of layers).
+/// Seeded Monte-Carlo trials per noisy evaluation. A compile-time
+/// constant so the per-trial energies live in a `Copy` array and merge
+/// associatively without allocation; changing it changes cached numbers
+/// (a `SWEEP_CACHE_VERSION` bump).
+pub const NOISE_TRIALS: usize = 8;
+
+/// Quantization/noise-error record of one simulation (one layer, or a
+/// merged set of layers).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AccuracyRecord {
     /// Σ reference² over the sampled outputs (signal energy).
     pub signal: f64,
-    /// Σ (simulated − reference)² over the sampled outputs (noise
-    /// energy). `0` means the datapath was bit-exact.
+    /// Σ (simulated − reference)² over the sampled outputs of the
+    /// *nominal* (quantization-only, noise-free) datapath. `0` means
+    /// that datapath was bit-exact.
     pub noise: f64,
-    /// Largest |simulated − reference| over the sampled outputs.
+    /// Largest |simulated − reference| over the nominal sampled outputs.
     pub max_abs_err: f64,
     /// Sampled outputs accumulated into this record.
     pub outputs: u64,
     /// ADC conversions performed (0 for DIMC).
     pub conversions: u64,
-    /// Conversions that clipped at the ADC full scale.
+    /// Conversions that clipped at the ADC full scale (nominal path).
     pub clipped: u64,
+    /// Per-trial total noise energy of the [`NOISE_TRIALS`] seeded
+    /// Monte-Carlo trials (quantization + analog sources). With the
+    /// noise model off every entry equals `noise`.
+    pub trial_noise: [f64; NOISE_TRIALS],
 }
 
 impl AccuracyRecord {
-    /// Fold one simulated output into the record.
+    /// Fold one simulated output of the nominal datapath into the
+    /// record. The per-trial energies are set afterwards — either
+    /// copied from `noise` ([`AccuracyRecord::fill_trials_nominal`]) or
+    /// measured by the Monte-Carlo trials.
     pub fn record_output(&mut self, exact: i64, simulated: i64) {
         let e = exact as f64;
         let err = (simulated - exact) as f64;
@@ -34,6 +59,13 @@ impl AccuracyRecord {
         self.noise += err * err;
         self.max_abs_err = self.max_abs_err.max(err.abs());
         self.outputs += 1;
+    }
+
+    /// Set every trial energy to the nominal noise energy: the
+    /// noise-model-off state (and the DIMC state under every corner —
+    /// no analog path, nothing to perturb). Trial spread is exactly 0.
+    pub fn fill_trials_nominal(&mut self) {
+        self.trial_noise = [self.noise; NOISE_TRIALS];
     }
 
     /// Merge another record (layer → network aggregation). Associative
@@ -47,16 +79,60 @@ impl AccuracyRecord {
         self.outputs += other.outputs;
         self.conversions += other.conversions;
         self.clipped += other.clipped;
+        for (slot, t) in self.trial_noise.iter_mut().zip(&other.trial_noise) {
+            *slot += t;
+        }
     }
 
-    /// Signal-to-quantization-noise ratio in dB;
-    /// [`f64::INFINITY`] for a bit-exact datapath (zero noise).
+    /// Signal-to-quantization-noise ratio of the nominal datapath in
+    /// dB; [`f64::INFINITY`] for a bit-exact datapath (zero noise).
     pub fn sqnr_db(&self) -> f64 {
-        if self.noise == 0.0 {
+        Self::sqnr_of(self.signal, self.noise)
+    }
+
+    fn sqnr_of(signal: f64, noise: f64) -> f64 {
+        if noise == 0.0 {
             f64::INFINITY
         } else {
-            10.0 * (self.signal / self.noise).log10()
+            10.0 * (signal / noise).log10()
         }
+    }
+
+    /// SQNR of Monte-Carlo trial `t` in dB (∞ for an exact trial).
+    pub fn sqnr_trial_db(&self, t: usize) -> f64 {
+        Self::sqnr_of(self.signal, self.trial_noise[t])
+    }
+
+    /// Mean SQNR over the seeded trials, in dB: the average of the
+    /// per-trial SQNRs. All-exact trials give ∞; mixed exact/noisy
+    /// trials (possible only in degenerate configurations) average over
+    /// the noisy ones.
+    pub fn sqnr_mean_db(&self) -> f64 {
+        let finite: Vec<f64> = (0..NOISE_TRIALS)
+            .map(|t| self.sqnr_trial_db(t))
+            .filter(|s| s.is_finite())
+            .collect();
+        if finite.is_empty() {
+            f64::INFINITY
+        } else {
+            finite.iter().sum::<f64>() / finite.len() as f64
+        }
+    }
+
+    /// Population standard deviation of the per-trial SQNRs in dB (over
+    /// the finite trials; 0 when fewer than two are finite). Exactly 0
+    /// with the noise model off — every trial is the nominal datapath.
+    pub fn sqnr_std_db(&self) -> f64 {
+        let finite: Vec<f64> = (0..NOISE_TRIALS)
+            .map(|t| self.sqnr_trial_db(t))
+            .filter(|s| s.is_finite())
+            .collect();
+        if finite.len() < 2 {
+            return 0.0;
+        }
+        let n = finite.len() as f64;
+        let mean = finite.iter().sum::<f64>() / n;
+        (finite.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n).sqrt()
     }
 
     /// Fraction of ADC conversions that clipped (0 when converter-free).
@@ -68,8 +144,9 @@ impl AccuracyRecord {
         }
     }
 
-    /// True when the simulated datapath reproduced every sampled output
-    /// exactly (DIMC always; AIMC with a fully-provisioned ADC).
+    /// True when the nominal simulated datapath reproduced every
+    /// sampled output exactly (DIMC always; AIMC with a
+    /// fully-provisioned ADC).
     pub fn is_exact(&self) -> bool {
         self.noise == 0.0 && self.max_abs_err == 0.0
     }
@@ -79,13 +156,37 @@ impl AccuracyRecord {
 mod tests {
     use super::*;
 
+    fn rec(
+        signal: f64,
+        noise: f64,
+        max_abs_err: f64,
+        outputs: u64,
+        conversions: u64,
+        clipped: u64,
+    ) -> AccuracyRecord {
+        let mut r = AccuracyRecord {
+            signal,
+            noise,
+            max_abs_err,
+            outputs,
+            conversions,
+            clipped,
+            ..Default::default()
+        };
+        r.fill_trials_nominal();
+        r
+    }
+
     #[test]
     fn exact_record_has_infinite_sqnr() {
         let mut r = AccuracyRecord::default();
         r.record_output(100, 100);
         r.record_output(-40, -40);
+        r.fill_trials_nominal();
         assert!(r.is_exact());
         assert_eq!(r.sqnr_db(), f64::INFINITY);
+        assert_eq!(r.sqnr_mean_db(), f64::INFINITY);
+        assert_eq!(r.sqnr_std_db(), 0.0);
         assert_eq!(r.clip_rate(), 0.0);
         assert_eq!(r.outputs, 2);
     }
@@ -95,30 +196,40 @@ mod tests {
         let mut r = AccuracyRecord::default();
         r.record_output(100, 90); // err 10
         r.record_output(50, 53); // err 3
+        r.fill_trials_nominal();
         assert!(!r.is_exact());
         assert_eq!(r.max_abs_err, 10.0);
         let expect = 10.0 * ((100.0f64 * 100.0 + 50.0 * 50.0) / (100.0 + 9.0)).log10();
         assert!((r.sqnr_db() - expect).abs() < 1e-12);
+        // nominal-filled trials: every trial SQNR equals the nominal
+        // one, the mean matches, and the spread is exactly zero
+        for t in 0..NOISE_TRIALS {
+            assert_eq!(r.sqnr_trial_db(t).to_bits(), r.sqnr_db().to_bits());
+        }
+        assert!((r.sqnr_mean_db() - r.sqnr_db()).abs() < 1e-12);
+        assert_eq!(r.sqnr_std_db(), 0.0);
     }
 
     #[test]
-    fn merge_pools_sums_and_maxima() {
-        let mut a = AccuracyRecord {
-            signal: 4.0,
+    fn trial_statistics_report_mean_and_spread() {
+        let mut r = AccuracyRecord {
+            signal: 1000.0,
             noise: 1.0,
-            max_abs_err: 1.0,
-            outputs: 2,
-            conversions: 10,
-            clipped: 1,
+            outputs: 4,
+            ..Default::default()
         };
-        let b = AccuracyRecord {
-            signal: 6.0,
-            noise: 0.0,
-            max_abs_err: 3.0,
-            outputs: 3,
-            conversions: 0,
-            clipped: 0,
-        };
+        r.trial_noise = [1.0, 10.0, 1.0, 10.0, 1.0, 10.0, 1.0, 10.0];
+        // per-trial SQNRs alternate 30 dB / 20 dB
+        assert!((r.sqnr_trial_db(0) - 30.0).abs() < 1e-12);
+        assert!((r.sqnr_trial_db(1) - 20.0).abs() < 1e-12);
+        assert!((r.sqnr_mean_db() - 25.0).abs() < 1e-12);
+        assert!((r.sqnr_std_db() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_pools_sums_maxima_and_trials() {
+        let mut a = rec(4.0, 1.0, 1.0, 2, 10, 1);
+        let b = rec(6.0, 0.0, 3.0, 3, 0, 0);
         a.merge(&b);
         assert_eq!(a.signal, 10.0);
         assert_eq!(a.noise, 1.0);
@@ -126,5 +237,37 @@ mod tests {
         assert_eq!(a.outputs, 5);
         assert_eq!((a.conversions, a.clipped), (10, 1));
         assert!((a.clip_rate() - 0.1).abs() < 1e-12);
+        // trial energies pool elementwise: 1.0 + 0.0 per slot
+        assert_eq!(a.trial_noise, [1.0; NOISE_TRIALS]);
+    }
+
+    #[test]
+    fn trial_merge_is_associative() {
+        // integer-valued energies make IEEE addition exact, so the two
+        // groupings agree bit for bit — the property the shard merge
+        // and the layer→network pooling rely on (for general values
+        // they agree up to IEEE reassociation, which the deterministic
+        // merge order fixes)
+        let mut a = rec(4.0, 2.0, 1.0, 2, 8, 1);
+        a.trial_noise = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut b = rec(16.0, 4.0, 2.0, 3, 4, 2);
+        b.trial_noise = [8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let mut c = rec(64.0, 8.0, 4.0, 5, 2, 0);
+        c.trial_noise = [2.0; NOISE_TRIALS];
+
+        // (a ⊕ b) ⊕ c
+        let mut left = a;
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+
+        assert_eq!(left, right);
+        assert_eq!(left.trial_noise, [11.0; NOISE_TRIALS]);
+        assert_eq!((left.signal, left.noise), (84.0, 14.0));
+        assert_eq!((left.outputs, left.conversions, left.clipped), (10, 14, 3));
     }
 }

@@ -22,6 +22,13 @@
 //!   `ceil(red / rows)` chunks recombined exactly at the recombination
 //!   width, as in the cost model's tiling.
 //!
+//! * **Analog non-idealities** — beyond quantization, the AIMC path can
+//!   run under a seeded Monte-Carlo noise model ([`noise`]): per-column
+//!   capacitor mismatch, kT/C thermal noise on the charge-sharing node
+//!   and comparator-offset/IR-drop, each applied in the analog domain
+//!   before the ADC clip/truncate transfer and scaled from the macro's
+//!   own cell geometry. DIMC is provably unaffected.
+//!
 //! Inputs follow the deterministic PRNG tensor protocol
 //! ([`tensor::generate`]): seeded from the layer *shape* and precision
 //! only, so every design is judged on identical tensors and every
@@ -32,8 +39,12 @@
 
 pub mod metrics;
 pub mod mvm;
+pub mod noise;
 pub mod tensor;
 
-pub use metrics::AccuracyRecord;
+pub use metrics::{AccuracyRecord, NOISE_TRIALS};
 pub use mvm::{layer_accuracy, macro_reduce, AdcTransfer, ConvStats};
+pub use noise::{
+    layer_accuracy_noisy, layer_accuracy_noisy_with, thermal_sigma_lsb, NoiseParams, NoiseSpec,
+};
 pub use tensor::{generate, layer_seed, LayerTensors};

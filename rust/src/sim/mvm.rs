@@ -93,6 +93,12 @@ impl AdcTransfer {
 
 /// One macro-resident chunk (`len <= rows`): bit-serial slices over the
 /// family's accumulation datapath.
+///
+/// The AIMC branch has a float twin in `super::noise::noisy_chunk`
+/// (same loop, analog perturbations injected before the conversion);
+/// a change to the datapath here must land there too — the zero-σ
+/// bit-identity test in `noise` sweeps every survey AIMC design to
+/// catch a divergence.
 fn chunk_mvm(
     m: &ImcMacro,
     adc: Option<&AdcTransfer>,
@@ -180,7 +186,13 @@ pub fn macro_reduce(
 /// Pure and deterministic — identical bits for any shard count, thread
 /// count or cache temperature.
 pub fn layer_accuracy(layer: &Layer, m: &ImcMacro) -> AccuracyRecord {
-    let t = tensor::generate(layer, m.precision());
+    layer_accuracy_on(m, &tensor::generate(layer, m.precision()))
+}
+
+/// [`layer_accuracy`] on pre-generated tensors: the noise model draws
+/// the tensors once and shares them between the nominal pass and every
+/// Monte-Carlo trial, instead of regenerating per pass.
+pub(crate) fn layer_accuracy_on(m: &ImcMacro, t: &tensor::LayerTensors) -> AccuracyRecord {
     let adc = AdcTransfer::for_macro(m);
     let mut rec = AccuracyRecord::default();
     let mut stats = ConvStats::default();
@@ -193,6 +205,10 @@ pub fn layer_accuracy(layer: &Layer, m: &ImcMacro) -> AccuracyRecord {
     }
     rec.conversions = stats.conversions;
     rec.clipped = stats.clipped;
+    // no analog noise on this path: every Monte-Carlo trial slot holds
+    // the deterministic quantization noise (zero trial spread); the
+    // noise model (`super::noise`) overwrites the slots when active
+    rec.fill_trials_nominal();
     rec
 }
 

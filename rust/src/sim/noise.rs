@@ -1,0 +1,615 @@
+//! Analog non-ideality noise models for the AIMC datapath — seeded,
+//! deterministic Monte-Carlo error sources layered onto the bit-true
+//! simulator *before* the ADC clip/truncate transfer, following the
+//! noise taxonomy of AnalogNAS (arXiv:2305.10459) and the quantitative
+//! AIMC modeling of Sun et al. (arXiv:2405.14978).
+//!
+//! Three sources, each scaled from the macro's own cell geometry (the
+//! same `C_inv` regression the energy model charges —
+//! [`crate::arch::ImcMacro::unit_cap_ff`]):
+//!
+//! * **Capacitor mismatch** — a static per-column conversion-gain error
+//!   `v = bl · (1 + ε_col)`, `ε_col ~ N(0, a_cap / √C_unit)` (Pelgrom's
+//!   law on the column's unit capacitor). Static per trial: the same
+//!   column keeps its mismatch across every output, input vector and
+//!   partial-sum chunk, exactly like fabricated silicon.
+//! * **kT/C thermal noise** — an additive per-conversion draw on the
+//!   capacitive-DAC charge-sharing node: voltage σ `√(t·kT/C_col)`
+//!   with `C_col = C_unit · D2`, referred to bitline LSBs through the
+//!   macro's own full-scale (`V / 2^(DAC_res + ⌊log2 D2⌋)` per level).
+//! * **Comparator offset / IR drop** — a static per-column
+//!   input-referred shift of the ADC transfer, specified in ADC LSBs
+//!   (and therefore worth `2^shift` bitline LSBs each).
+//!
+//! The perturbed analog value then passes the *existing*
+//! [`AdcTransfer`] clip/truncate semantics (floor to the code grid,
+//! clamp to `[0, max_code]`); recombination and offset removal stay
+//! exact. **DIMC is provably unaffected**: the digital family has no
+//! analog accumulation node, no converters and no comparator — the
+//! noisy path is never entered ([`layer_accuracy_noisy`] returns the
+//! nominal record for any spec), which the integration tests lock down
+//! corner by corner.
+//!
+//! **Seeding rule.** Trial `t` draws from
+//! `Rng::new(trial_seed(layer, precision, t))` — a pure function of the
+//! layer *shape*, the operand precision and the trial index, mixed into
+//! a stream family disjoint from the tensor draws. The noise *σ values
+//! deliberately do not enter the seed*: two specs share base draws and
+//! differ only by scale, so sweeping a σ re-scales the same perturbation
+//! field instead of resampling it (this is what makes per-σ comparisons
+//! — and the variance-monotonicity contract test — well conditioned).
+//! Draw order per trial: all per-column gains (channel-major,
+//! bit-minor), then all per-column offsets, then the per-conversion
+//! thermal stream in simulation order. Changing any of this changes
+//! cached numbers: it is a `SWEEP_CACHE_VERSION` bump (v4 is the first
+//! schema carrying trial statistics).
+
+use crate::arch::{ImcFamily, ImcMacro, Precision};
+use crate::util::pool::{default_threads, parallel_map_with};
+use crate::util::prng::Rng;
+use crate::workload::Layer;
+
+use super::metrics::{AccuracyRecord, NOISE_TRIALS};
+use super::mvm::{self, AdcTransfer};
+use super::tensor::{self, LayerTensors};
+
+/// Boltzmann kT at 300 K expressed in fF·V² (4.1419e−21 J): with the
+/// column capacitance in fF, `kT/C` is directly a voltage-noise
+/// variance in V².
+pub const KT_300K_FF_V2: f64 = 4.1419e-6;
+
+/// Explicit σ values of the three analog error sources. All fields are
+/// non-negative; zero everywhere is numerically identical to
+/// [`NoiseSpec::Off`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseParams {
+    /// Pelgrom capacitor-matching coefficient (fraction·√fF): the
+    /// per-column conversion-gain σ is `a_cap / √C_unit(node)`
+    /// ([`ImcMacro::cap_mismatch_sigma`]).
+    pub a_cap: f64,
+    /// kT/C scale factor multiplying the thermal-noise *variance*
+    /// (1.0 = physical kT at 300 K on the macro's own column
+    /// capacitance; 4.0 = doubled voltage noise).
+    pub t_factor: f64,
+    /// Static per-column comparator-offset / IR-drop σ, input-referred,
+    /// in ADC LSBs.
+    pub offset_lsb: f64,
+}
+
+impl NoiseParams {
+    /// The all-zero parameter set (numerically the off state).
+    pub const ZERO: NoiseParams = NoiseParams {
+        a_cap: 0.0,
+        t_factor: 0.0,
+        offset_lsb: 0.0,
+    };
+
+    /// Reject negative or non-finite σ values.
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, v) in [
+            ("a_cap", self.a_cap),
+            ("t_factor", self.t_factor),
+            ("offset_lsb", self.offset_lsb),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("noise {what} must be finite and >= 0 (got {v})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One setting of the analog-noise sweep axis: off, a preset corner, or
+/// explicit σs. The canonical text form (CLI token, CSV `noise`
+/// column) is `off` / `typical` / `worst` / `A:T:O` for
+/// [`NoiseSpec::Custom`] (e.g. `0.02:1:0.25`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseSpec {
+    /// No analog noise: the datapath is the PR-4 quantization-only
+    /// simulator, bit for bit.
+    Off,
+    /// The typical corner: nominal matching (`a_cap` 0.02 √fF·fraction),
+    /// physical kT/C at 300 K, a quarter-LSB comparator offset.
+    Typical,
+    /// The pessimistic corner: poor matching (0.08), 4× the thermal
+    /// voltage noise (`t_factor` 16), a full-LSB offset.
+    Worst,
+    /// Explicit σs.
+    Custom(NoiseParams),
+}
+
+impl NoiseSpec {
+    /// Resolve this spec to its σ values.
+    pub fn params(&self) -> NoiseParams {
+        match self {
+            NoiseSpec::Off => NoiseParams::ZERO,
+            NoiseSpec::Typical => NoiseParams {
+                a_cap: 0.02,
+                t_factor: 1.0,
+                offset_lsb: 0.25,
+            },
+            NoiseSpec::Worst => NoiseParams {
+                a_cap: 0.08,
+                t_factor: 16.0,
+                offset_lsb: 1.0,
+            },
+            NoiseSpec::Custom(p) => *p,
+        }
+    }
+
+    /// Whether every σ is zero — [`NoiseSpec::Off`] and the all-zero
+    /// custom spec alike (they are numerically identical, so both skip
+    /// the Monte-Carlo trials).
+    pub fn is_off(&self) -> bool {
+        self.params() == NoiseParams::ZERO
+    }
+
+    /// Bit-pattern fingerprint of the resolved σs — the cache-key
+    /// field ([`crate::sweep::CostCache`]): specs with identical σs
+    /// alias deliberately (they produce identical records).
+    pub fn fingerprint(&self) -> [u64; 3] {
+        let p = self.params();
+        [
+            p.a_cap.to_bits(),
+            p.t_factor.to_bits(),
+            p.offset_lsb.to_bits(),
+        ]
+    }
+}
+
+impl std::str::FromStr for NoiseSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Ok(NoiseSpec::Off),
+            "typical" => Ok(NoiseSpec::Typical),
+            "worst" => Ok(NoiseSpec::Worst),
+            other => {
+                let parts: Vec<&str> = other.split(':').collect();
+                if parts.len() != 3 {
+                    return Err(format!(
+                        "noise spec must be off|typical|worst or A_CAP:T_FACTOR:OFFSET_LSB \
+                         (e.g. 0.02:1:0.25), got '{s}'"
+                    ));
+                }
+                let mut v = [0.0f64; 3];
+                for (slot, part) in v.iter_mut().zip(&parts) {
+                    *slot = part
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad σ '{part}' in noise spec '{s}'"))?;
+                }
+                let p = NoiseParams {
+                    a_cap: v[0],
+                    t_factor: v[1],
+                    offset_lsb: v[2],
+                };
+                p.validate()?;
+                Ok(NoiseSpec::Custom(p))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for NoiseSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NoiseSpec::Off => f.write_str("off"),
+            NoiseSpec::Typical => f.write_str("typical"),
+            NoiseSpec::Worst => f.write_str("worst"),
+            NoiseSpec::Custom(p) => {
+                write!(f, "{}:{}:{}", p.a_cap, p.t_factor, p.offset_lsb)
+            }
+        }
+    }
+}
+
+/// Input-referred kT/C thermal-noise σ in bitline LSBs for one macro:
+/// voltage noise `√(t_factor · kT / C_col)` divided by the bitline LSB
+/// voltage `V / 2^(DAC_res + ⌊log2 D2⌋)`. Grows as `√(D2/C_unit)` —
+/// bigger accumulations spread the supply over more levels faster than
+/// the pooled capacitance quiets the node.
+pub fn thermal_sigma_lsb(m: &ImcMacro, t_factor: f64) -> f64 {
+    if t_factor <= 0.0 {
+        return 0.0;
+    }
+    let v_noise = (t_factor * KT_300K_FF_V2 / m.column_cap_ff()).sqrt();
+    let d2 = m.d2().max(1) as u64;
+    let floor_log2 = 63 - d2.leading_zeros();
+    let levels = (1u64 << (m.dac_res + floor_log2)) as f64;
+    v_noise * levels / m.vdd
+}
+
+/// Deterministic seed of one Monte-Carlo trial: a pure function of the
+/// layer *shape*, the operand precision and the trial index — never of
+/// the σ values (see the module docs) or the design name.
+pub fn trial_seed(layer: &Layer, p: Precision, trial: u32) -> u64 {
+    // start from the tensor protocol's shape seed, hop to a disjoint
+    // stream family, then mix the trial index (FNV-1a style)
+    let h = tensor::layer_seed(layer, p) ^ 0xA5A5_5A5A_0D15_EA5E;
+    (h ^ (trial as u64).wrapping_add(0x9E37_79B9_7F4A_7C15))
+        .wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// The frozen analog state of one Monte-Carlo trial: static per-column
+/// gains and offsets plus the per-conversion thermal stream. Base draws
+/// are σ-independent; σ only scales them.
+struct NoiseField {
+    bw: usize,
+    /// Per-(channel, bit) conversion gain `1 + ε`.
+    gain: Vec<f64>,
+    /// Per-(channel, bit) static shift in bitline LSBs.
+    offset: Vec<f64>,
+    sigma_thermal: f64,
+    rng: Rng,
+}
+
+impl NoiseField {
+    fn new(
+        layer: &Layer,
+        m: &ImcMacro,
+        adc: &AdcTransfer,
+        channels: usize,
+        p: &NoiseParams,
+        trial: u32,
+    ) -> NoiseField {
+        let mut rng = Rng::new(trial_seed(layer, m.precision(), trial));
+        let bw = m.weight_bits as usize;
+        let sigma_gain = m.cap_mismatch_sigma(p.a_cap);
+        // an ADC-LSB offset is worth 2^shift bitline LSBs
+        let sigma_offset = p.offset_lsb * (1i64 << adc.shift) as f64;
+        let n = channels * bw;
+        let gain: Vec<f64> = (0..n).map(|_| 1.0 + sigma_gain * rng.normal()).collect();
+        let offset: Vec<f64> = (0..n).map(|_| sigma_offset * rng.normal()).collect();
+        NoiseField {
+            bw,
+            gain,
+            offset,
+            sigma_thermal: thermal_sigma_lsb(m, p.t_factor),
+            rng,
+        }
+    }
+
+    fn gain(&self, channel: usize, bit: u32) -> f64 {
+        self.gain[channel * self.bw + bit as usize]
+    }
+
+    fn offset(&self, channel: usize, bit: u32) -> f64 {
+        self.offset[channel * self.bw + bit as usize]
+    }
+
+    fn thermal(&mut self) -> f64 {
+        // skip the 12-uniform draw when thermal is off: the scaled
+        // contribution would be ±0.0 either way (adding it is the IEEE
+        // identity), and the thermal stream is the rng's last consumer,
+        // so the gain/offset draws are unaffected — bit-identical,
+        // and it removes the dominant per-conversion cost of
+        // mismatch-/offset-only specs
+        if self.sigma_thermal == 0.0 {
+            return 0.0;
+        }
+        self.sigma_thermal * self.rng.normal()
+    }
+}
+
+/// Digitize one *perturbed* (real-valued) bitline value through the
+/// existing transfer semantics: floor to the code grid, clamp to
+/// `[0, max_code]`, reconstruct at the recombination input. For an
+/// unperturbed integer input this equals [`AdcTransfer::convert`] bit
+/// for bit (`v / 2^shift` is exact for `|v| < 2^53`, and `floor` on an
+/// exact quotient is the integer shift).
+fn convert_analog(adc: &AdcTransfer, v: f64) -> i64 {
+    let code = (v / (1i64 << adc.shift) as f64).floor();
+    let code = (code.max(0.0) as i64).min(adc.max_code);
+    code << adc.shift
+}
+
+/// One noisy macro-resident chunk: the AIMC offset-binary bit-slice
+/// loop of [`mvm`], with the three analog sources applied to each
+/// bitline sum before its conversion. Recombination and digital offset
+/// removal stay exact.
+///
+/// This deliberately mirrors `mvm::chunk_mvm`'s AIMC branch statement
+/// for statement (the nominal path stays hook-free and integer-only);
+/// any change to that datapath must land here too — the zero-σ
+/// bit-identity test below sweeps every survey AIMC design to catch a
+/// divergence.
+fn noisy_chunk(
+    m: &ImcMacro,
+    adc: &AdcTransfer,
+    w: &[i64],
+    a: &[i64],
+    channel: usize,
+    field: &mut NoiseField,
+) -> i64 {
+    let n_slices = m.n_slices();
+    let dac = m.dac_res.max(1);
+    let slice_mask = (1i64 << dac) - 1;
+    let bw = m.weight_bits;
+    let offset = 1i64 << (bw - 1);
+    let act_sum: i64 = a.iter().sum();
+    let mut acc = 0i64;
+    for s in 0..n_slices {
+        for b in 0..bw {
+            let mut bl = 0i64;
+            for (&wi, &ai) in w.iter().zip(a) {
+                let wbit = ((wi + offset) >> b) & 1;
+                bl += wbit * ((ai >> (s * dac)) & slice_mask);
+            }
+            let v =
+                bl as f64 * field.gain(channel, b) + field.thermal() + field.offset(channel, b);
+            acc += convert_analog(adc, v) << (b + s * dac);
+        }
+    }
+    acc - offset * act_sum
+}
+
+/// Total output-error energy (Σ err² over the sampled outputs) of one
+/// Monte-Carlo trial on one AIMC macro.
+fn trial_noise_energy(
+    layer: &Layer,
+    m: &ImcMacro,
+    adc: &AdcTransfer,
+    t: &LayerTensors,
+    p: &NoiseParams,
+    trial: u32,
+) -> f64 {
+    let rows = m.rows.max(1);
+    let mut field = NoiseField::new(layer, m, adc, t.weights.len(), p, trial);
+    let mut total = 0.0;
+    for (channel, w) in t.weights.iter().enumerate() {
+        for x in &t.inputs {
+            let exact: i64 = w.iter().zip(x).map(|(&wi, &xi)| wi * xi).sum();
+            let got: i64 = w
+                .chunks(rows)
+                .zip(x.chunks(rows))
+                .map(|(wc, ac)| noisy_chunk(m, adc, wc, ac, channel, &mut field))
+                .sum();
+            let err = (got - exact) as f64;
+            total += err * err;
+        }
+    }
+    total
+}
+
+/// [`mvm::layer_accuracy`] plus the analog noise model: the nominal
+/// (quantization-only) record — bit-identical to the pre-noise
+/// simulator — with its `trial_noise` filled by [`NOISE_TRIALS`] seeded
+/// Monte-Carlo trials fanned out over [`parallel_map_with`] (clamped to
+/// one worker per trial). Each trial is internally serial and draws its
+/// own seeded stream, so worker count never changes a bit.
+///
+/// DIMC macros — and any spec whose σs are all zero — return the
+/// nominal record with every trial equal to the nominal noise energy:
+/// the digital family has no analog node for these sources to act on.
+pub fn layer_accuracy_noisy(layer: &Layer, m: &ImcMacro, spec: NoiseSpec) -> AccuracyRecord {
+    layer_accuracy_noisy_with(layer, m, spec, default_threads().min(NOISE_TRIALS))
+}
+
+/// [`layer_accuracy_noisy`] with an explicit worker count for the
+/// trial fan-out. Callers already running inside a saturated thread
+/// pool pass 1 — the DSE engine does (its group/layer fan-out owns the
+/// cores; nesting another 8-way spawn per layer would only add
+/// contention) — while direct callers let the default parallelize.
+/// Results are bit-identical for every worker count.
+pub fn layer_accuracy_noisy_with(
+    layer: &Layer,
+    m: &ImcMacro,
+    spec: NoiseSpec,
+    threads: usize,
+) -> AccuracyRecord {
+    if spec.is_off() || m.family == ImcFamily::Dimc {
+        return mvm::layer_accuracy(layer, m);
+    }
+    let Some(adc) = AdcTransfer::for_macro(m) else {
+        return mvm::layer_accuracy(layer, m);
+    };
+    // one tensor draw shared by the nominal pass and every trial
+    let t = tensor::generate(layer, m.precision());
+    let mut rec = mvm::layer_accuracy_on(m, &t);
+    let p = spec.params();
+    let trials: Vec<u32> = (0..NOISE_TRIALS as u32).collect();
+    let energies = parallel_map_with(&trials, threads, |&k| {
+        trial_noise_energy(layer, m, &adc, &t, &p, k)
+    });
+    for (slot, e) in rec.trial_noise.iter_mut().zip(energies) {
+        *slot = e;
+    }
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::layer_accuracy;
+
+    fn aimc() -> ImcMacro {
+        ImcMacro::new("a", ImcFamily::Aimc, 256, 256, 4, 4, 4, 8, 0.8, 28.0)
+    }
+
+    fn dimc() -> ImcMacro {
+        ImcMacro::new("d", ImcFamily::Dimc, 256, 256, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    #[test]
+    fn spec_parses_and_roundtrips_through_display() {
+        for (text, spec) in [
+            ("off", NoiseSpec::Off),
+            ("typical", NoiseSpec::Typical),
+            ("worst", NoiseSpec::Worst),
+        ] {
+            assert_eq!(text.parse::<NoiseSpec>(), Ok(spec));
+            assert_eq!(spec.to_string(), text);
+            assert_eq!(spec.to_string().parse::<NoiseSpec>(), Ok(spec));
+        }
+        let custom: NoiseSpec = "0.02:1:0.25".parse().unwrap();
+        assert_eq!(
+            custom,
+            NoiseSpec::Custom(NoiseParams {
+                a_cap: 0.02,
+                t_factor: 1.0,
+                offset_lsb: 0.25
+            })
+        );
+        // display → parse is the identity (CSV noise-id roundtrip)
+        assert_eq!(custom.to_string().parse::<NoiseSpec>(), Ok(custom));
+        assert!("gaussian".parse::<NoiseSpec>().is_err());
+        assert!("1:2".parse::<NoiseSpec>().is_err());
+        assert!("-0.1:0:0".parse::<NoiseSpec>().is_err());
+        assert!("nan:0:0".parse::<NoiseSpec>().is_err());
+    }
+
+    #[test]
+    fn zero_sigma_custom_is_off() {
+        let zero = NoiseSpec::Custom(NoiseParams::ZERO);
+        assert!(zero.is_off());
+        assert!(NoiseSpec::Off.is_off());
+        assert!(!NoiseSpec::Typical.is_off());
+        assert_eq!(zero.fingerprint(), NoiseSpec::Off.fingerprint());
+        assert_ne!(NoiseSpec::Typical.fingerprint(), NoiseSpec::Worst.fingerprint());
+    }
+
+    #[test]
+    fn off_record_is_the_nominal_record_with_uniform_trials() {
+        let l = Layer::dense("fc", 32, 96);
+        let m = aimc();
+        let nominal = layer_accuracy(&l, &m);
+        let off = layer_accuracy_noisy(&l, &m, NoiseSpec::Off);
+        assert_eq!(nominal, off);
+        assert_eq!(off.trial_noise, [off.noise; NOISE_TRIALS]);
+        assert_eq!(off.sqnr_std_db(), 0.0);
+    }
+
+    #[test]
+    fn zero_sigma_trial_reproduces_the_integer_path_bit_for_bit() {
+        // The float analog path with all σ = 0 must equal the nominal
+        // integer ADC transfer exactly — the contract that makes the
+        // zero-σ custom spec and Off indistinguishable, and the lock
+        // coupling `noisy_chunk` to its `mvm::chunk_mvm` twin: a
+        // datapath change that lands in only one of them fails here.
+        // Swept over every survey AIMC design (all slice widths, ADC
+        // slacks and geometries) plus a multi-chunk reduction.
+        let mut macros = vec![
+            aimc(),
+            ImcMacro::new("b", ImcFamily::Aimc, 64, 256, 4, 8, 4, 6, 0.8, 28.0),
+        ];
+        macros.extend(
+            crate::db::survey()
+                .iter()
+                .filter(|e| e.family == ImcFamily::Aimc)
+                .map(|e| e.to_macro()),
+        );
+        assert!(macros.len() > 10, "survey lost its AIMC entries");
+        for m in macros {
+            let l = Layer::dense("fc", 8, 200); // 200 > rows: multi-chunk
+            let adc = AdcTransfer::for_macro(&m).unwrap();
+            let t = tensor::generate(&l, m.precision());
+            let nominal = layer_accuracy(&l, &m);
+            for trial in 0..2 {
+                let e = trial_noise_energy(&l, &m, &adc, &t, &NoiseParams::ZERO, trial);
+                assert_eq!(e.to_bits(), nominal.noise.to_bits(), "{}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn convert_analog_matches_integer_transfer_and_clamps_negatives() {
+        let adc = AdcTransfer { shift: 2, max_code: 15 };
+        let mut st = crate::sim::ConvStats::default();
+        for v in [0i64, 1, 5, 13, 59, 60, 61, 1000] {
+            assert_eq!(convert_analog(&adc, v as f64), adc.convert(v, &mut st));
+        }
+        // perturbed values floor within the grid and clamp below zero
+        assert_eq!(convert_analog(&adc, 13.9), 12);
+        assert_eq!(convert_analog(&adc, -3.0), 0);
+        assert_eq!(convert_analog(&adc, 1e9), adc.full_scale());
+    }
+
+    #[test]
+    fn dimc_is_invariant_under_every_corner() {
+        let l = Layer::conv2d("c", 8, 8, 16, 8, 3, 3, 1);
+        let m = dimc();
+        let nominal = layer_accuracy(&l, &m);
+        for spec in [
+            NoiseSpec::Off,
+            NoiseSpec::Typical,
+            NoiseSpec::Worst,
+            NoiseSpec::Custom(NoiseParams {
+                a_cap: 1.0,
+                t_factor: 100.0,
+                offset_lsb: 8.0,
+            }),
+        ] {
+            let r = layer_accuracy_noisy(&l, &m, spec);
+            assert_eq!(r, nominal, "DIMC perturbed by {spec}");
+            assert!(r.is_exact());
+            assert_eq!(r.sqnr_std_db(), 0.0);
+        }
+    }
+
+    #[test]
+    fn noisy_trials_are_deterministic_and_spread() {
+        let l = Layer::dense("fc", 32, 128);
+        let m = aimc();
+        let a = layer_accuracy_noisy(&l, &m, NoiseSpec::Typical);
+        let b = layer_accuracy_noisy(&l, &m, NoiseSpec::Typical);
+        for t in 0..NOISE_TRIALS {
+            assert_eq!(a.trial_noise[t].to_bits(), b.trial_noise[t].to_bits());
+        }
+        // the nominal fields are untouched by the trials
+        let nominal = layer_accuracy(&l, &m);
+        assert_eq!(a.noise.to_bits(), nominal.noise.to_bits());
+        assert_eq!(a.max_abs_err.to_bits(), nominal.max_abs_err.to_bits());
+        // trials genuinely differ from each other (seeded per trial)
+        let distinct: std::collections::BTreeSet<u64> =
+            a.trial_noise.iter().map(|n| n.to_bits()).collect();
+        assert!(distinct.len() > 1, "all trials identical: {:?}", a.trial_noise);
+        assert!(a.sqnr_std_db() > 0.0);
+        assert!(a.sqnr_mean_db().is_finite());
+    }
+
+    #[test]
+    fn worst_corner_is_noisier_than_typical() {
+        let l = Layer::dense("fc", 32, 128);
+        let m = aimc();
+        let typical = layer_accuracy_noisy(&l, &m, NoiseSpec::Typical);
+        let worst = layer_accuracy_noisy(&l, &m, NoiseSpec::Worst);
+        // shared base draws, larger σs: mean trial noise energy grows
+        let mean = |r: &AccuracyRecord| r.trial_noise.iter().sum::<f64>() / NOISE_TRIALS as f64;
+        assert!(
+            mean(&worst) > mean(&typical),
+            "worst {} !> typical {}",
+            mean(&worst),
+            mean(&typical)
+        );
+        assert!(worst.sqnr_mean_db() < typical.sqnr_mean_db());
+    }
+
+    #[test]
+    fn thermal_sigma_scales_with_geometry_and_temperature() {
+        let m = aimc();
+        assert_eq!(thermal_sigma_lsb(&m, 0.0), 0.0);
+        let s1 = thermal_sigma_lsb(&m, 1.0);
+        assert!(s1 > 0.0);
+        // variance factor 4 → σ factor 2
+        assert!((thermal_sigma_lsb(&m, 4.0) / s1 - 2.0).abs() < 1e-12);
+        // more rows: more levels per volt beats the quieter node —
+        // σ grows like √D2
+        let mut tall = aimc();
+        tall.rows = 1024;
+        assert!(thermal_sigma_lsb(&tall, 1.0) > s1);
+    }
+
+    #[test]
+    fn trial_seed_ignores_sigmas_but_not_shape_or_trial() {
+        let l = Layer::dense("fc", 64, 256);
+        let p = Precision::new(4, 4);
+        assert_ne!(trial_seed(&l, p, 0), trial_seed(&l, p, 1));
+        assert_ne!(trial_seed(&l, p, 0), tensor::layer_seed(&l, p));
+        let renamed = Layer::dense("other", 64, 256);
+        assert_eq!(trial_seed(&l, p, 3), trial_seed(&renamed, p, 3));
+        let wider = Layer::dense("fc", 64, 512);
+        assert_ne!(trial_seed(&l, p, 3), trial_seed(&wider, p, 3));
+    }
+}

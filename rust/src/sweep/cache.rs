@@ -15,10 +15,11 @@ use std::sync::Mutex;
 
 use crate::arch::{ImcFamily, ImcSystem};
 use crate::dse::{
-    search_layer_all_seeded, DseOptions, LayerEvaluator, LayerResult, LayerSearch,
+    search_layer_all_seeded_noisy, DseOptions, LayerEvaluator, LayerResult, LayerSearch,
 };
 use crate::mapping::{SpatialMapping, TemporalPolicy};
 use crate::model::TechParams;
+use crate::sim::NoiseSpec;
 use crate::workload::{Layer, LayerType};
 
 /// Everything that determines the outcome of a layer mapping search.
@@ -61,6 +62,20 @@ pub struct CostKey {
     // --- search options ---
     pub(crate) sparsity_bits: u64,
     pub(crate) policy: Option<TemporalPolicy>,
+    /// Bit patterns of the resolved analog-noise σs
+    /// ([`NoiseSpec::fingerprint`]): the accuracy record's trial
+    /// statistics depend on them, so settings with different σs must
+    /// never alias. Specs that resolve to identical σs (e.g. `Off` and
+    /// an all-zero custom spec) alias deliberately — they produce
+    /// bit-identical records.
+    ///
+    /// Known tradeoff: keying the whole entry on the σs re-runs the
+    /// (noise-invariant) mapping search and nominal simulation once
+    /// per corner. The cross-corner seed carryover makes the repeat
+    /// search prune from the first candidate, but a split cache
+    /// (noise-erased key for search + nominal record, σ-keyed only for
+    /// the trial energies) would avoid it entirely — an open item.
+    pub(crate) noise_bits: [u64; 3],
 }
 
 impl CostKey {
@@ -71,6 +86,7 @@ impl CostKey {
         tech: &TechParams,
         input_sparsity: f64,
         policy: Option<TemporalPolicy>,
+        noise: NoiseSpec,
     ) -> Self {
         let m = &sys.imc;
         let hierarchy = sys
@@ -120,6 +136,7 @@ impl CostKey {
             ],
             sparsity_bits: input_sparsity.to_bits(),
             policy,
+            noise_bits: noise.fingerprint(),
         }
     }
 }
@@ -202,13 +219,15 @@ impl CacheStats {
 ///
 /// **Cross-layer bound carryover.** Beside the exact-result map, the
 /// cache keeps the winning (spatial, policy) candidates of every search
-/// indexed by the key *with the sparsity field erased*. A miss whose
-/// shape/system/policy fingerprint was searched before at another
-/// sparsity warm-starts [`search_layer_all_seeded`] with those
-/// candidates: pruning bites from the first stream element, the optima
-/// stay bit-identical to the unpruned reference (the seeded search's
-/// guarantee), only the evaluated/pruned *statistics* may depend on
-/// which sparsity happened to be searched first.
+/// indexed by the key *with the sparsity and noise fields erased*
+/// (winning mappings are noise-invariant — the simulator never feeds
+/// the search). A miss whose shape/system/policy fingerprint was
+/// searched before at another sparsity or noise corner warm-starts
+/// [`search_layer_all_seeded_noisy`] with those candidates: pruning
+/// bites from the first stream element, the optima stay bit-identical
+/// to the unpruned reference (the seeded search's guarantee), only the
+/// evaluated/pruned *statistics* may depend on which setting happened
+/// to be searched first.
 #[derive(Default)]
 pub struct CostCache {
     map: Mutex<HashMap<CostKey, LayerSearch>>,
@@ -220,9 +239,21 @@ pub struct CostCache {
     pruned: AtomicU64,
 }
 
-/// Bit pattern no legal sparsity produces (a quiet NaN): the sentinel
-/// that erases the sparsity field of a seed-index key.
+/// Bit pattern no legal sparsity or noise σ produces (a quiet NaN —
+/// `NoiseParams::validate` rejects non-finite σs): the sentinel that
+/// erases the sparsity and noise fields of a seed-index key. Winning
+/// mappings are noise-invariant too (the simulator never feeds the
+/// search), so a search at one noise corner warm-starts every other.
 const SEED_SPARSITY_SENTINEL: u64 = u64::MAX;
+
+/// Erase the sparsity and noise fields of a key (the seed index's
+/// shape/system/policy fingerprint).
+fn seed_key_of(key: &CostKey) -> CostKey {
+    let mut seed_key = key.clone();
+    seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
+    seed_key.noise_bits = [SEED_SPARSITY_SENTINEL; 3];
+    seed_key
+}
 
 impl CostCache {
     /// An empty cache.
@@ -241,8 +272,8 @@ impl CostCache {
         }
     }
 
-    /// Memoized [`crate::dse::search_layer_all`], warm-started across
-    /// identically-shaped entries (see the type docs).
+    /// Memoized [`crate::dse::search_layer_all_noisy`], warm-started
+    /// across identically-shaped entries (see the type docs).
     pub fn search(
         &self,
         layer: &Layer,
@@ -250,15 +281,15 @@ impl CostCache {
         tech: &TechParams,
         input_sparsity: f64,
         policy: Option<TemporalPolicy>,
+        noise: NoiseSpec,
     ) -> LayerSearch {
-        let key = CostKey::new(layer, sys, tech, input_sparsity, policy);
+        let key = CostKey::new(layer, sys, tech, input_sparsity, policy, noise);
         if let Some(hit) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut seed_key = key.clone();
-        seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
+        let seed_key = seed_key_of(&key);
         let seeds = self
             .seeds
             .lock()
@@ -266,8 +297,15 @@ impl CostCache {
             .get(&seed_key)
             .cloned()
             .unwrap_or_default();
-        let search =
-            search_layer_all_seeded(layer, sys, tech, input_sparsity, policy, &seeds);
+        let search = search_layer_all_seeded_noisy(
+            layer,
+            sys,
+            tech,
+            input_sparsity,
+            policy,
+            noise,
+            &seeds,
+        );
         self.evaluated.fetch_add(search.evaluated as u64, Ordering::Relaxed);
         self.pruned.fetch_add(search.pruned as u64, Ordering::Relaxed);
         self.seeds
@@ -284,10 +322,10 @@ impl CostCache {
 
     /// Pre-seed an entry without touching the hit/miss counters (the
     /// disk-cache load path). The entry's winners also join the seed
-    /// index, so a warm cache warm-starts sparsities it has not seen.
+    /// index, so a warm cache warm-starts sparsities and noise corners
+    /// it has not seen.
     pub(crate) fn preload(&self, key: CostKey, search: LayerSearch) {
-        let mut seed_key = key.clone();
-        seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
+        let seed_key = seed_key_of(&key);
         self.seeds
             .lock()
             .unwrap()
@@ -314,7 +352,7 @@ impl LayerEvaluator for CostCache {
         tech: &TechParams,
         opts: &DseOptions,
     ) -> LayerResult {
-        self.search(layer, sys, tech, opts.input_sparsity, opts.policy)
+        self.search(layer, sys, tech, opts.input_sparsity, opts.policy, opts.noise)
             .to_result(layer, opts.objective)
     }
 }
@@ -336,8 +374,8 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 128, 640);
-        let a = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
-        let b = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        let a = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        let b = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
@@ -368,12 +406,12 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 64, 256);
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // different shape
         let wider = Layer::dense("fc", 64, 512);
-        cache.search(&wider, &sys, &tech, DEFAULT_SPARSITY, None);
+        cache.search(&wider, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // different sparsity
-        cache.search(&l, &sys, &tech, 0.9, None);
+        cache.search(&l, &sys, &tech, 0.9, None, NoiseSpec::Off);
         // different policy restriction
         cache.search(
             &l,
@@ -381,13 +419,74 @@ mod tests {
             &tech,
             DEFAULT_SPARSITY,
             Some(TemporalPolicy::WeightStationary),
+            NoiseSpec::Off,
         );
+        // different noise corner
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Typical);
         // different system
         let other = table2_systems().remove(3);
         let other_tech = TechParams::for_node(other.imc.tech_nm);
-        cache.search(&l, &other, &other_tech, DEFAULT_SPARSITY, None);
+        cache.search(&l, &other, &other_tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (0, 5, 5));
+        assert_eq!((s.hits, s.misses, s.entries), (0, 6, 6));
+    }
+
+    #[test]
+    fn noise_specs_alias_only_on_identical_sigmas() {
+        use crate::sim::NoiseParams;
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::dense("fc", 64, 256);
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        // the all-zero custom spec resolves to the same σs as Off: it
+        // must hit (the records are bit-identical by construction)
+        cache.search(
+            &l,
+            &sys,
+            &tech,
+            DEFAULT_SPARSITY,
+            None,
+            NoiseSpec::Custom(NoiseParams::ZERO),
+        );
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        // distinct σs key separately, and the corners carry genuinely
+        // different trial statistics
+        let typical = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Typical);
+        let worst = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        assert_eq!(cache.stats().entries, 3);
+        assert_ne!(typical.accuracy().trial_noise, worst.accuracy().trial_noise);
+        // cost optima are noise-invariant across all cached entries
+        let off = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        for objective in COST_OBJECTIVES {
+            assert_eq!(
+                typical.best(objective).total_energy_fj().to_bits(),
+                off.best(objective).total_energy_fj().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn cross_noise_seed_carryover_stays_bit_identical() {
+        // a search at one corner warm-starts the next corner's miss
+        // (the seed index erases the noise fields); the optima must
+        // still equal the unpruned reference bit for bit
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        let seeded = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        let reference =
+            crate::dse::search_layer_all_unpruned(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        assert_eq!(seeded.evaluated + seeded.pruned, reference.evaluated);
+        for objective in COST_OBJECTIVES {
+            let a = seeded.best(objective);
+            let b = reference.best(objective);
+            assert_eq!(a.total_energy_fj().to_bits(), b.total_energy_fj().to_bits());
+            assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+            assert_eq!(a.spatial, b.spatial);
+        }
+        assert_eq!(cache.stats().misses, 2);
     }
 
     #[test]
@@ -398,8 +497,8 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
-        cache.search(&l, &sys, &tech, 0.3, None);
-        let seeded = cache.search(&l, &sys, &tech, 0.8, None);
+        cache.search(&l, &sys, &tech, 0.3, None, NoiseSpec::Off);
+        let seeded = cache.search(&l, &sys, &tech, 0.8, None, NoiseSpec::Off);
         let reference = crate::dse::search_layer_all_unpruned(&l, &sys, &tech, 0.8, None);
         assert_eq!(seeded.evaluated + seeded.pruned, reference.evaluated);
         for objective in COST_OBJECTIVES {
@@ -420,14 +519,14 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 64, 256);
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None);
+        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // same chip re-quantized to INT8: the macro's precision and
         // re-derived converter fields change the key — no aliasing
         let re = ImcSystem {
             imc: sys.imc.requantized(Precision::new(8, 8)).unwrap(),
             ..sys.clone()
         };
-        cache.search(&l, &re, &tech, DEFAULT_SPARSITY, None);
+        cache.search(&l, &re, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
     }

@@ -2,38 +2,46 @@
 //!
 //! The grid is the cross product *survey designs (per SRAM-cell budget)
 //! × tinyMLPerf networks × precision points × activation sparsities ×
-//! objectives*; within one budget every design is normalized to the
-//! same total cell count (the paper's fairness rule), and the
-//! cell-budget / precision / sparsity axes are the widening knobs of
-//! the Sun et al. 2024 follow-up. A [`PrecisionPoint`] other than
-//! `Native` *re-quantizes* each design — converter resolutions
-//! re-derived, outputs never rescaled (see `docs/COST_MODEL.md`) — and
-//! designs that cannot realize a precision are skipped, so a grid may
-//! legitimately evaluate fewer points than `n_tasks()`.
+//! analog-noise specs × objectives*; within one budget every design is
+//! normalized to the same total cell count (the paper's fairness rule),
+//! and the cell-budget / precision / sparsity / noise axes are the
+//! widening knobs of the Sun et al. 2024 follow-up. A
+//! [`PrecisionPoint`] other than `Native` *re-quantizes* each design —
+//! converter resolutions re-derived, outputs never rescaled (see
+//! `docs/COST_MODEL.md`) — and designs that cannot realize a precision
+//! are skipped, so a grid may legitimately evaluate fewer points than
+//! `n_tasks()`.
 //!
 //! Every grid point also carries the bit-true simulator's accuracy
-//! record ([`crate::sim`]): SQNR, max-abs error and ADC clip rate of the
-//! network on that (design, precision) — memoized alongside cost in the
-//! [`CostCache`] — and the summary exposes per-(network, sparsity)
-//! accuracy-vs-energy frontiers pooled across precision points, so
-//! precision trades accuracy, not just energy/latency.
+//! record ([`crate::sim`]): the nominal SQNR, max-abs error and ADC
+//! clip rate of the network on that (design, precision), plus — under
+//! a non-off [`NoiseSpec`] — the mean and spread of the SQNR over the
+//! seeded Monte-Carlo analog-noise trials ([`crate::sim::noise`]) —
+//! memoized alongside cost in the [`CostCache`]. The summary exposes
+//! per-(network, sparsity, noise) accuracy-vs-energy frontiers pooled
+//! across precision points, and a 3-objective **(energy, latency,
+//! SQNR) Pareto surface** per (network, sparsity, noise) pooled across
+//! designs and precisions (corners stay apart: cost is noise-invariant,
+//! so pooling would let every off row dominate its noisy twins).
 //!
 //! Shard-determinism invariant: tasks are numbered in canonical order
-//! (systems → networks → precisions → sparsities → objectives) and
-//! whole *(design, network, precision, sparsity)* groups are dealt
-//! round-robin across shards, so `--shards N` splits the grid into N
-//! near-equal, deterministic slices that CI jobs or machines can run
-//! independently; [`merge_summaries`] recombines shard outputs into the
-//! same global Pareto frontier — bit-identical points and frontiers —
-//! that a single-shard run produces, for any shard count.
+//! (systems → networks → precisions → sparsities → noises → objectives)
+//! and whole *(design, network, precision, sparsity, noise)* groups are
+//! dealt round-robin across shards, so `--shards N` splits the grid
+//! into N near-equal, deterministic slices that CI jobs or machines can
+//! run independently; [`merge_summaries`] recombines shard outputs into
+//! the same global Pareto frontiers and surface — bit-identical points,
+//! frontiers and surfaces — that a single-shard run produces, for any
+//! shard count.
 
 use crate::arch::{ImcFamily, ImcSystem, Precision};
 use crate::db;
 use crate::dse::{
-    pareto_front, LayerResult, NetworkResult, Objective, COST_OBJECTIVES, DEFAULT_SPARSITY,
+    pareto_front, pareto_front_3d, LayerResult, NetworkResult, Objective, COST_OBJECTIVES,
+    DEFAULT_SPARSITY,
 };
 use crate::model::TechParams;
-use crate::sim::AccuracyRecord;
+use crate::sim::{AccuracyRecord, NoiseSpec};
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{all_networks, Network};
 
@@ -94,7 +102,8 @@ impl std::fmt::Display for PrecisionPoint {
 }
 
 /// The full evaluation grid. Canonical task order: systems outermost,
-/// then networks, then precisions, then sparsities, then objectives.
+/// then networks, then precisions, then sparsities, then noise specs,
+/// then objectives.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     /// Design axis: the systems evaluated.
@@ -107,6 +116,10 @@ pub struct SweepGrid {
     pub precisions: Vec<PrecisionPoint>,
     /// Activation-sparsity grid axis (every value in [0, 1]).
     pub sparsities: Vec<f64>,
+    /// Analog-noise grid axis: each (design, network, precision,
+    /// sparsity) is simulated under each spec. Cost numbers are
+    /// noise-invariant; the accuracy trial statistics are not.
+    pub noises: Vec<NoiseSpec>,
     /// Objective axis (cost objectives; accuracy rides as columns).
     pub objectives: Vec<Objective>,
 }
@@ -115,22 +128,27 @@ impl SweepGrid {
     /// The paper-scale grid: every surveyed silicon operating point
     /// (instantiated as a multi-macro system at `target_cells` total
     /// SRAM cells) × the four tinyMLPerf networks × all objectives, at
-    /// the paper's default 50 % activation sparsity.
+    /// the paper's default 50 % activation sparsity, noise off.
     pub fn survey_tinymlperf(target_cells: usize) -> Self {
         Self::survey_tinymlperf_grid(&[target_cells], &[DEFAULT_SPARSITY])
     }
 
     /// [`SweepGrid::survey_tinymlperf_grid`] widened further with the
-    /// precision axis: every design additionally re-quantized to each
-    /// of `precisions` (unrealizable pairs skipped at evaluation time).
+    /// precision and noise axes: every design additionally re-quantized
+    /// to each of `precisions` (unrealizable pairs skipped at
+    /// evaluation time) and simulated under each of `noises`.
     pub fn survey_tinymlperf_full(
         cell_budgets: &[usize],
         precisions: &[PrecisionPoint],
         sparsities: &[f64],
+        noises: &[NoiseSpec],
     ) -> Self {
         let mut grid = Self::survey_tinymlperf_grid(cell_budgets, sparsities);
         if !precisions.is_empty() {
             grid.precisions = precisions.to_vec();
+        }
+        if !noises.is_empty() {
+            grid.noises = noises.to_vec();
         }
         grid
     }
@@ -138,7 +156,7 @@ impl SweepGrid {
     /// The widened grid: the survey designs instantiated at *each* of
     /// `cell_budgets` (suffixed `@<cells>c` when more than one budget
     /// keeps the names unique) × the tinyMLPerf networks × each of
-    /// `sparsities` × all objectives, at native precision.
+    /// `sparsities` × all objectives, at native precision, noise off.
     pub fn survey_tinymlperf_grid(cell_budgets: &[usize], sparsities: &[f64]) -> Self {
         let mut systems = Vec::new();
         for &cells in cell_budgets {
@@ -160,45 +178,53 @@ impl SweepGrid {
             networks: all_networks(),
             precisions: vec![PrecisionPoint::Native],
             sparsities: sparsities.to_vec(),
+            noises: vec![NoiseSpec::Off],
             objectives: COST_OBJECTIVES.to_vec(),
         }
     }
 
     /// Number of grid tasks (design × network × precision × sparsity ×
-    /// objective points). Unrealizable (design, precision) pairs still
-    /// occupy task indices but evaluate to no grid points, so the
-    /// evaluated point count may be lower.
+    /// noise × objective points). Unrealizable (design, precision)
+    /// pairs still occupy task indices but evaluate to no grid points,
+    /// so the evaluated point count may be lower.
     pub fn n_tasks(&self) -> usize {
         self.systems.len()
             * self.networks.len()
             * self.precisions.len()
             * self.sparsities.len()
+            * self.noises.len()
             * self.objectives.len()
     }
 
-    /// Number of (design, network, precision, sparsity) evaluation
-    /// groups. A group is the unit of work: one mapping-space pass
-    /// serves every objective, so both the parallel fan-out and the
-    /// shard deal operate on groups — splitting a group's objective
-    /// points across workers or shard processes would re-run the search
-    /// up to `objectives.len()` times.
+    /// Number of (design, network, precision, sparsity, noise)
+    /// evaluation groups. A group is the unit of work: one
+    /// mapping-space pass serves every objective, so both the parallel
+    /// fan-out and the shard deal operate on groups — splitting a
+    /// group's objective points across workers or shard processes would
+    /// re-run the search up to `objectives.len()` times.
     pub fn n_groups(&self) -> usize {
-        self.systems.len() * self.networks.len() * self.precisions.len() * self.sparsities.len()
+        self.systems.len()
+            * self.networks.len()
+            * self.precisions.len()
+            * self.sparsities.len()
+            * self.noises.len()
     }
 
     /// Decompose a task index into its (system, network, precision,
-    /// sparsity, objective) grid coordinates — the inverse of the
-    /// canonical task numbering.
-    pub fn coords(&self, task: usize) -> (usize, usize, usize, usize, usize) {
+    /// sparsity, noise, objective) grid coordinates — the inverse of
+    /// the canonical task numbering.
+    pub fn coords(&self, task: usize) -> (usize, usize, usize, usize, usize, usize) {
         let n_obj = self.objectives.len();
+        let n_noise = self.noises.len();
         let n_sp = self.sparsities.len();
         let n_prec = self.precisions.len();
         let n_net = self.networks.len();
         (
-            task / (n_obj * n_sp * n_prec * n_net),
-            (task / (n_obj * n_sp * n_prec)) % n_net,
-            (task / (n_obj * n_sp)) % n_prec,
-            (task / n_obj) % n_sp,
+            task / (n_obj * n_noise * n_sp * n_prec * n_net),
+            (task / (n_obj * n_noise * n_sp * n_prec)) % n_net,
+            (task / (n_obj * n_noise * n_sp)) % n_prec,
+            (task / (n_obj * n_noise)) % n_sp,
+            (task / n_obj) % n_noise,
             task % n_obj,
         )
     }
@@ -244,8 +270,8 @@ impl Default for SweepOptions {
 }
 
 /// One evaluated grid point: a network mapped onto a design under one
-/// (precision, sparsity, objective) setting — the aggregate of its
-/// per-layer optima.
+/// (precision, sparsity, noise, objective) setting — the aggregate of
+/// its per-layer optima.
 #[derive(Debug, Clone)]
 pub struct GridPoint {
     /// Canonical grid position — the shard-independent identity.
@@ -269,6 +295,8 @@ pub struct GridPoint {
     pub act_bits: u32,
     /// Activation sparsity this point was evaluated at.
     pub sparsity: f64,
+    /// Analog-noise spec this point was simulated under.
+    pub noise: NoiseSpec,
     /// Objective the per-layer winners were selected by.
     pub objective: Objective,
     /// Total energy (fJ), datapath + memory traffic.
@@ -281,13 +309,21 @@ pub struct GridPoint {
     pub tops_per_watt: f64,
     /// MAC-weighted mean array utilization.
     pub utilization: f64,
-    /// Simulated network SQNR in dB ([`f64::INFINITY`] when the
-    /// datapath is bit-exact, e.g. DIMC). Mapping-invariant: identical
-    /// across the objective rows of one evaluation group.
+    /// Nominal (quantization-only) simulated network SQNR in dB
+    /// ([`f64::INFINITY`] when the datapath is bit-exact, e.g. DIMC).
+    /// Mapping- and noise-invariant: identical across the objective
+    /// rows of one evaluation group and across noise corners.
     pub sqnr_db: f64,
-    /// Largest simulated |output error| over the sampled outputs.
+    /// Mean SQNR (dB) over the seeded Monte-Carlo noise trials; equals
+    /// `sqnr_db` up to trial averaging when the noise spec is off.
+    pub sqnr_mean_db: f64,
+    /// Spread (population σ, dB) of the per-trial SQNRs; exactly 0
+    /// when the noise spec is off.
+    pub sqnr_std_db: f64,
+    /// Largest nominal simulated |output error| over the sampled
+    /// outputs.
     pub max_abs_err: f64,
-    /// Fraction of simulated ADC conversions that clipped.
+    /// Fraction of nominal simulated ADC conversions that clipped.
     pub clip_rate: f64,
 }
 
@@ -309,18 +345,28 @@ pub struct SweepSummary {
     pub total_tasks: usize,
     /// Evaluated points, sorted by `task_index`.
     pub points: Vec<GridPoint>,
-    /// Per-(network, precision, sparsity) (energy, latency) Pareto
-    /// frontiers over all evaluated designs and objectives: (label,
-    /// indices into `points`). The label is the network name, suffixed
-    /// with the precision point and/or sparsity level when the summary
-    /// spans more than one of either.
+    /// Per-(network, precision, sparsity, noise) (energy, latency)
+    /// Pareto frontiers over all evaluated designs and objectives:
+    /// (label, indices into `points`). The label is the network name,
+    /// suffixed with the precision point / sparsity level / noise spec
+    /// when the summary spans more than one of them.
     pub frontiers: Vec<(String, Vec<usize>)>,
-    /// Per-(network, sparsity) (energy, quantization-error) Pareto
-    /// frontiers *across precision points and designs* — the
+    /// Per-(network, sparsity, noise) (energy, quantization-error)
+    /// Pareto frontiers *across precision points and designs* — the
     /// accuracy–efficiency trade-off view: (label, indices into
     /// `points`). Minimizes energy and `-sqnr_db`, so a cheap but lossy
     /// re-quantized point and an expensive but exact one both survive.
     pub accuracy_frontiers: Vec<(String, Vec<usize>)>,
+    /// Per-(network, sparsity, noise) 3-objective **(energy, latency,
+    /// SQNR) Pareto surface** pooled across designs, precision points
+    /// and objectives: (label, indices into `points`). The accuracy
+    /// axis is the noise-aware trial-mean SQNR (`sqnr_mean_db`,
+    /// minimized as its negation); corners are kept apart because cost
+    /// is noise-invariant — pooled, the off corner would dominate its
+    /// noisy twins everywhere — so comparing a design's surfaces
+    /// across corners shows where noise pushes AIMC points off in
+    /// favor of exact DIMC ones.
+    pub surfaces: Vec<(String, Vec<usize>)>,
     /// Cost-cache statistics accumulated by this run.
     pub cache: CacheStats,
     /// True when this summary was assembled by [`merge_summaries`] —
@@ -330,7 +376,8 @@ pub struct SweepSummary {
 
 impl SweepSummary {
     /// Indices of `points` on the frontier labeled `label` (the network
-    /// name; plus the sparsity suffix in multi-sparsity summaries).
+    /// name; plus the precision/sparsity/noise suffixes in
+    /// multi-valued summaries).
     pub fn frontier(&self, label: &str) -> Option<&[usize]> {
         self.frontiers
             .iter()
@@ -346,13 +393,12 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepSummary {
 
 /// Evaluate the grid (or one shard of it) through an explicit — and
 /// possibly disk-warmed or shared — cost cache. *(design, network,
-/// precision, sparsity)* groups fan out over the thread pool; every
-/// group searches
-/// each layer once through the memoized cache (serially, so identical
-/// keys never race) and materializes one grid point per objective from
-/// that single pass. The summary reports only the statistics this run
-/// accumulated, so reusing one cache across several runs keeps each
-/// summary honest.
+/// precision, sparsity, noise)* groups fan out over the thread pool;
+/// every group searches each layer once through the memoized cache
+/// (serially, so identical keys never race) and materializes one grid
+/// point per objective from that single pass. The summary reports only
+/// the statistics this run accumulated, so reusing one cache across
+/// several runs keeps each summary honest.
 pub fn run_sweep_with_cache(
     grid: &SweepGrid,
     opts: &SweepOptions,
@@ -372,6 +418,7 @@ pub fn run_sweep_with_cache(
     .collect();
     let frontiers = compute_frontiers(&points);
     let accuracy_frontiers = compute_accuracy_frontiers(&points);
+    let surfaces = compute_surfaces(&points);
     SweepSummary {
         shards,
         shard_index: opts.shard_index,
@@ -379,25 +426,28 @@ pub fn run_sweep_with_cache(
         points,
         frontiers,
         accuracy_frontiers,
+        surfaces,
         cache: cache.stats().since(&stats_before),
         merged: false,
     }
 }
 
-/// Map one network onto one design at one (precision, sparsity) and
-/// emit a grid point per objective, all served by a single
+/// Map one network onto one design at one (precision, sparsity, noise)
+/// and emit a grid point per objective, all served by a single
 /// all-objective search per layer. Returns no points when the design
 /// cannot realize the precision (validity filtering — the skip is a
 /// pure function of the grid coordinates, so it is shard-independent).
 fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoint> {
     let n_obj = grid.objectives.len();
+    let n_noise = grid.noises.len();
     let n_sp = grid.sparsities.len();
     let n_prec = grid.precisions.len();
     let n_net = grid.networks.len();
-    let base = &grid.systems[group / (n_sp * n_prec * n_net)];
-    let net = &grid.networks[(group / (n_sp * n_prec)) % n_net];
-    let precision = grid.precisions[(group / n_sp) % n_prec];
-    let sparsity = grid.sparsities[group % n_sp];
+    let base = &grid.systems[group / (n_noise * n_sp * n_prec * n_net)];
+    let net = &grid.networks[(group / (n_noise * n_sp * n_prec)) % n_net];
+    let precision = grid.precisions[(group / (n_noise * n_sp)) % n_prec];
+    let sparsity = grid.sparsities[(group / n_noise) % n_sp];
+    let noise = grid.noises[group % n_noise];
     let sys = match precision.apply(base) {
         Some(sys) => sys,
         None => return Vec::new(),
@@ -407,7 +457,7 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
     let searches: Vec<_> = net
         .layers
         .iter()
-        .map(|l| cache.search(l, sys, &tech, sparsity, None))
+        .map(|l| cache.search(l, sys, &tech, sparsity, None, noise))
         .collect();
     // network accuracy: layer records pooled in network order
     // (mapping- and objective-invariant, so computed once per group)
@@ -441,6 +491,7 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
                 weight_bits: sys.imc.weight_bits,
                 act_bits: sys.imc.act_bits,
                 sparsity,
+                noise,
                 objective,
                 energy_fj: r.total_energy_fj(),
                 macro_fj: r.macro_breakdown().total_fj() + r.traffic_breakdown().gb_fj,
@@ -448,6 +499,8 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
                 tops_per_watt: r.effective_tops_per_watt(),
                 utilization: r.mean_utilization(),
                 sqnr_db: accuracy.sqnr_db(),
+                sqnr_mean_db: accuracy.sqnr_mean_db(),
+                sqnr_std_db: accuracy.sqnr_std_db(),
                 max_abs_err: accuracy.max_abs_err,
                 clip_rate: accuracy.clip_rate(),
             }
@@ -455,16 +508,15 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
         .collect()
 }
 
-/// Label a frontier group: per network, plus the precision point and/or
-/// sparsity level when the summary spans more than one of either
-/// (mixing precision or workload-sparsity assumptions in one frontier
-/// would compare incomparable points).
+/// Label a frontier group: per network, plus the precision point,
+/// sparsity level and/or noise spec when the summary spans more than
+/// one of them (mixing precision, workload-sparsity or noise
+/// assumptions in one frontier would compare incomparable points).
 fn frontier_label(
     network: &str,
-    precision: PrecisionPoint,
-    multi_precision: bool,
-    sparsity: f64,
-    multi_sparsity: bool,
+    (precision, multi_precision): (PrecisionPoint, bool),
+    (sparsity, multi_sparsity): (f64, bool),
+    (noise, multi_noise): (NoiseSpec, bool),
 ) -> String {
     let mut label = network.to_string();
     if multi_precision {
@@ -473,38 +525,48 @@ fn frontier_label(
     if multi_sparsity {
         label.push_str(&format!(" @ sparsity {sparsity}"));
     }
+    if multi_noise {
+        label.push_str(&format!(" @ noise {noise}"));
+    }
     label
 }
 
-/// Per-(network, precision, sparsity) (energy, latency) Pareto
+/// Whether a slice of keys carries more than one distinct value.
+fn multi<T: PartialEq>(values: &[T]) -> bool {
+    values.first().is_some_and(|f| values.iter().any(|v| v != f))
+}
+
+/// Per-(network, precision, sparsity, noise) (energy, latency) Pareto
 /// frontiers, preserving first-seen order. Depends only on the *set* of
 /// points (inputs are sorted by task index), so shard count never
 /// changes the outcome.
 pub(crate) fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
-    let mut groups: Vec<(&str, PrecisionPoint, u64)> = Vec::new();
+    let mut groups: Vec<(&str, PrecisionPoint, u64, [u64; 3])> = Vec::new();
     for p in points {
-        let key = (p.network.as_str(), p.precision, p.sparsity.to_bits());
+        let key = (
+            p.network.as_str(),
+            p.precision,
+            p.sparsity.to_bits(),
+            p.noise.fingerprint(),
+        );
         if !groups.contains(&key) {
             groups.push(key);
         }
     }
-    let multi_precision = groups
-        .first()
-        .is_some_and(|&(_, first, _)| groups.iter().any(|&(_, p, _)| p != first));
-    let multi_sparsity = {
-        let mut sparsities: Vec<u64> = groups.iter().map(|&(_, _, s)| s).collect();
-        sparsities.sort_unstable();
-        sparsities.dedup();
-        sparsities.len() > 1
-    };
+    let precisions: Vec<PrecisionPoint> = groups.iter().map(|&(_, p, _, _)| p).collect();
+    let sparsities: Vec<u64> = groups.iter().map(|&(_, _, s, _)| s).collect();
+    let noises: Vec<[u64; 3]> = groups.iter().map(|&(_, _, _, n)| n).collect();
+    let (multi_prec, multi_sp, multi_noise) =
+        (multi(&precisions), multi(&sparsities), multi(&noises));
     groups
         .iter()
-        .map(|&(name, prec, sp_bits)| {
+        .map(|&(name, prec, sp_bits, noise_fp)| {
             let idx: Vec<usize> = (0..points.len())
                 .filter(|&i| {
                     points[i].network == name
                         && points[i].precision == prec
                         && points[i].sparsity.to_bits() == sp_bits
+                        && points[i].noise.fingerprint() == noise_fp
                 })
                 .collect();
             let coords: Vec<(f64, f64)> = idx
@@ -513,41 +575,46 @@ pub(crate) fn compute_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>
                 .collect();
             let front = pareto_front(&coords);
             let sparsity = f64::from_bits(sp_bits);
+            let noise = points[idx[0]].noise;
             (
-                frontier_label(name, prec, multi_precision, sparsity, multi_sparsity),
+                frontier_label(
+                    name,
+                    (prec, multi_prec),
+                    (sparsity, multi_sp),
+                    (noise, multi_noise),
+                ),
                 front.into_iter().map(|j| idx[j]).collect(),
             )
         })
         .collect()
 }
 
-/// Per-(network, sparsity) (energy, −SQNR) Pareto frontiers over every
-/// evaluated design, precision point and objective row — the
+/// Per-(network, sparsity, noise) (energy, −SQNR) Pareto frontiers over
+/// every evaluated design, precision point and objective row — the
 /// accuracy–efficiency trade-off of the paper's narrative (precision
 /// points are deliberately *pooled*: trading accuracy against energy is
 /// exactly a cross-precision comparison). Depends only on the set of
 /// points, so shard count never changes the outcome; −SQNR is a
 /// monotone error axis where bit-exact points sit at −∞ (best).
 pub(crate) fn compute_accuracy_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
-    let mut groups: Vec<(&str, u64)> = Vec::new();
+    let mut groups: Vec<(&str, u64, [u64; 3])> = Vec::new();
     for p in points {
-        let key = (p.network.as_str(), p.sparsity.to_bits());
+        let key = (p.network.as_str(), p.sparsity.to_bits(), p.noise.fingerprint());
         if !groups.contains(&key) {
             groups.push(key);
         }
     }
-    let multi_sparsity = {
-        let mut sparsities: Vec<u64> = groups.iter().map(|&(_, s)| s).collect();
-        sparsities.sort_unstable();
-        sparsities.dedup();
-        sparsities.len() > 1
-    };
+    let sparsities: Vec<u64> = groups.iter().map(|&(_, s, _)| s).collect();
+    let noises: Vec<[u64; 3]> = groups.iter().map(|&(_, _, n)| n).collect();
+    let (multi_sp, multi_noise) = (multi(&sparsities), multi(&noises));
     groups
         .iter()
-        .map(|&(name, sp_bits)| {
+        .map(|&(name, sp_bits, noise_fp)| {
             let idx: Vec<usize> = (0..points.len())
                 .filter(|&i| {
-                    points[i].network == name && points[i].sparsity.to_bits() == sp_bits
+                    points[i].network == name
+                        && points[i].sparsity.to_bits() == sp_bits
+                        && points[i].noise.fingerprint() == noise_fp
                 })
                 .collect();
             let coords: Vec<(f64, f64)> = idx
@@ -556,8 +623,64 @@ pub(crate) fn compute_accuracy_frontiers(points: &[GridPoint]) -> Vec<(String, V
                 .collect();
             let front = pareto_front(&coords);
             let mut label = format!("{name} accuracy-vs-energy");
-            if multi_sparsity {
+            if multi_sp {
                 label.push_str(&format!(" @ sparsity {}", f64::from_bits(sp_bits)));
+            }
+            if multi_noise {
+                label.push_str(&format!(" @ noise {}", points[idx[0]].noise));
+            }
+            (label, front.into_iter().map(|j| idx[j]).collect())
+        })
+        .collect()
+}
+
+/// Per-(network, sparsity, noise) 3-objective (energy, latency,
+/// −mean-SQNR) Pareto surfaces pooled across designs, precision points
+/// and objectives. Corners are deliberately *not* pooled: cost is
+/// noise-invariant, so an AIMC design's noise-off row would strictly
+/// dominate its noisy twins (same energy/latency, higher mean SQNR)
+/// and a pooled surface could never show a noisy point — per-corner
+/// surfaces instead show how the frontier *shifts* as the corner
+/// hardens (the AIMC-vs-DIMC crossover story). Depends only on the set
+/// of points, so shard count never changes the outcome.
+pub(crate) fn compute_surfaces(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
+    let mut groups: Vec<(&str, u64, [u64; 3])> = Vec::new();
+    for p in points {
+        let key = (p.network.as_str(), p.sparsity.to_bits(), p.noise.fingerprint());
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let sparsities: Vec<u64> = groups.iter().map(|&(_, s, _)| s).collect();
+    let noises: Vec<[u64; 3]> = groups.iter().map(|&(_, _, n)| n).collect();
+    let (multi_sp, multi_noise) = (multi(&sparsities), multi(&noises));
+    groups
+        .iter()
+        .map(|&(name, sp_bits, noise_fp)| {
+            let idx: Vec<usize> = (0..points.len())
+                .filter(|&i| {
+                    points[i].network == name
+                        && points[i].sparsity.to_bits() == sp_bits
+                        && points[i].noise.fingerprint() == noise_fp
+                })
+                .collect();
+            let coords: Vec<(f64, f64, f64)> = idx
+                .iter()
+                .map(|&i| {
+                    (
+                        points[i].energy_fj,
+                        points[i].time_ns,
+                        -points[i].sqnr_mean_db,
+                    )
+                })
+                .collect();
+            let front = pareto_front_3d(&coords);
+            let mut label = format!("{name} energy-latency-accuracy surface");
+            if multi_sp {
+                label.push_str(&format!(" @ sparsity {}", f64::from_bits(sp_bits)));
+            }
+            if multi_noise {
+                label.push_str(&format!(" @ noise {}", points[idx[0]].noise));
             }
             (label, front.into_iter().map(|j| idx[j]).collect())
         })
@@ -567,8 +690,8 @@ pub(crate) fn compute_accuracy_frontiers(points: &[GridPoint]) -> Vec<(String, V
 /// Merge per-shard summaries back into a full-grid summary: points are
 /// reassembled in canonical task order (duplicates collapse), cache
 /// counters accumulate, and the global Pareto frontiers (cost and
-/// accuracy) are recomputed — bit-identical to a single-shard run over
-/// the same tasks.
+/// accuracy) plus the 3-objective surface are recomputed —
+/// bit-identical to a single-shard run over the same tasks.
 pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
     let mut points: Vec<GridPoint> = parts.iter().flat_map(|s| s.points.clone()).collect();
     points.sort_by_key(|p| p.task_index);
@@ -579,6 +702,7 @@ pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
     }
     let frontiers = compute_frontiers(&points);
     let accuracy_frontiers = compute_accuracy_frontiers(&points);
+    let surfaces = compute_surfaces(&points);
     SweepSummary {
         shards: parts.first().map(|s| s.shards).unwrap_or(1),
         shard_index: None,
@@ -586,6 +710,7 @@ pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
         points,
         frontiers,
         accuracy_frontiers,
+        surfaces,
         cache,
         merged: true,
     }
@@ -603,6 +728,7 @@ mod tests {
             networks: vec![deep_autoencoder()],
             precisions: vec![PrecisionPoint::Native],
             sparsities: vec![DEFAULT_SPARSITY],
+            noises: vec![NoiseSpec::Off],
             objectives: vec![Objective::Energy, Objective::Latency],
         }
     }
@@ -632,17 +758,21 @@ mod tests {
             PrecisionPoint::Fixed(Precision::new(8, 8)),
         ];
         grid.sparsities = vec![0.3, 0.5, 0.9];
+        grid.noises = vec![NoiseSpec::Off, NoiseSpec::Typical];
         let mut last = None;
         for t in 0..grid.n_tasks() {
-            let (si, ni, pri, spi, oi) = grid.coords(t);
+            let (si, ni, pri, spi, xi, oi) = grid.coords(t);
             assert!(si < grid.systems.len());
             assert!(ni < grid.networks.len());
             assert!(pri < grid.precisions.len());
             assert!(spi < grid.sparsities.len());
+            assert!(xi < grid.noises.len());
             assert!(oi < grid.objectives.len());
-            let flat = (((si * grid.networks.len() + ni) * grid.precisions.len() + pri)
+            let flat = ((((si * grid.networks.len() + ni) * grid.precisions.len() + pri)
                 * grid.sparsities.len()
                 + spi)
+                * grid.noises.len()
+                + xi)
                 * grid.objectives.len()
                 + oi;
             assert_eq!(flat, t);
@@ -673,6 +803,100 @@ mod tests {
                 assert_eq!(dense.objective, sparse.objective);
                 assert!((dense.sparsity, sparse.sparsity) == (0.0, 0.9));
                 assert!(dense.energy_fj > sparse.energy_fj);
+            }
+        }
+    }
+
+    #[test]
+    fn noise_axis_expands_tasks_and_keeps_cost_invariant() {
+        let mut grid = tiny_grid();
+        grid.systems.truncate(1); // aimc_large: a lossy AIMC design
+        grid.noises = vec![NoiseSpec::Off, NoiseSpec::Typical, NoiseSpec::Worst];
+        grid.objectives = vec![Objective::Energy];
+        assert_eq!(grid.n_tasks(), 3);
+        let s = run_sweep(&grid, &SweepOptions::default());
+        assert_eq!(s.points.len(), 3);
+        let (off, typical, worst) = (&s.points[0], &s.points[1], &s.points[2]);
+        assert_eq!(off.noise, NoiseSpec::Off);
+        assert_eq!(typical.noise, NoiseSpec::Typical);
+        assert_eq!(worst.noise, NoiseSpec::Worst);
+        // cost numbers are noise-invariant, bit for bit
+        assert_eq!(off.energy_fj.to_bits(), worst.energy_fj.to_bits());
+        assert_eq!(off.time_ns.to_bits(), worst.time_ns.to_bits());
+        // so is the nominal accuracy record
+        assert_eq!(off.sqnr_db.to_bits(), worst.sqnr_db.to_bits());
+        assert_eq!(off.max_abs_err.to_bits(), worst.max_abs_err.to_bits());
+        // but the trial statistics are not: off has zero spread, the
+        // corners spread and degrade monotonically with severity
+        assert_eq!(off.sqnr_std_db, 0.0);
+        assert!(typical.sqnr_std_db > 0.0);
+        assert!(worst.sqnr_std_db > 0.0);
+        assert!(typical.sqnr_mean_db < off.sqnr_mean_db + 1e-9);
+        assert!(worst.sqnr_mean_db < typical.sqnr_mean_db);
+        // frontiers label the noise spec when the axis is widened
+        assert_eq!(s.frontiers.len(), 3);
+        assert!(s.frontiers.iter().any(|(l, _)| l.contains("noise typical")));
+        // one 3D surface per corner (pooling would let the off corner
+        // dominate its cost-identical noisy twins everywhere)
+        assert_eq!(s.surfaces.len(), 3);
+        for (label, front) in &s.surfaces {
+            assert!(label.contains("@ noise"), "{label}");
+            assert!(!front.is_empty());
+        }
+    }
+
+    #[test]
+    fn surfaces_keep_the_three_single_objective_champions() {
+        // on a grid with a lossy AIMC and an exact DIMC design, the
+        // minimum-energy, minimum-latency and maximum-SQNR points all
+        // survive on the 3-objective surface
+        let systems = table2_systems();
+        let grid = SweepGrid {
+            systems: vec![systems[0].clone(), systems[2].clone()],
+            networks: vec![deep_autoencoder()],
+            precisions: vec![PrecisionPoint::Native],
+            sparsities: vec![DEFAULT_SPARSITY],
+            noises: vec![NoiseSpec::Off, NoiseSpec::Worst],
+            objectives: COST_OBJECTIVES.to_vec(),
+        };
+        let s = run_sweep(&grid, &SweepOptions::default());
+        // one surface per noise corner
+        assert_eq!(s.surfaces.len(), 2);
+        for (label, surface) in &s.surfaces {
+            assert!(label.contains("energy-latency-accuracy"), "{label}");
+            assert!(!surface.is_empty());
+            // the corner's point set: per axis, *some* point attaining
+            // the axis optimum survives (ties on one axis may be
+            // dominated through the others, but the lexicographically
+            // best of each tie class cannot be)
+            let noise_fp = s.points[surface[0]].noise.fingerprint();
+            let group: Vec<&GridPoint> = s
+                .points
+                .iter()
+                .filter(|p| p.noise.fingerprint() == noise_fp)
+                .collect();
+            let min_of = |f: &dyn Fn(&GridPoint) -> f64| {
+                group.iter().map(|p| f(p)).min_by(f64::total_cmp).unwrap()
+            };
+            let e_min = min_of(&|p: &GridPoint| p.energy_fj);
+            let t_min = min_of(&|p: &GridPoint| p.time_ns);
+            let q_min = min_of(&|p: &GridPoint| -p.sqnr_mean_db);
+            assert!(
+                surface.iter().any(|&i| s.points[i].energy_fj == e_min),
+                "{label}: no min-energy point on the surface"
+            );
+            assert!(
+                surface.iter().any(|&i| s.points[i].time_ns == t_min),
+                "{label}: no min-latency point on the surface"
+            );
+            assert!(
+                surface.iter().any(|&i| -s.points[i].sqnr_mean_db == q_min),
+                "{label}: no max-SQNR point on the surface"
+            );
+            // every surviving index refers to a point of the group
+            for &i in surface {
+                assert_eq!(s.points[i].network, "DeepAutoEncoder");
+                assert_eq!(s.points[i].noise.fingerprint(), noise_fp);
             }
         }
     }
@@ -712,6 +936,9 @@ mod tests {
         // one frontier, for the one network, and it is non-empty
         assert_eq!(s.frontiers.len(), 1);
         assert!(!s.frontiers[0].1.is_empty());
+        // one surface, likewise
+        assert_eq!(s.surfaces.len(), 1);
+        assert!(!s.surfaces[0].1.is_empty());
     }
 
     #[test]
@@ -762,7 +989,7 @@ mod tests {
         // the skip is part of the canonical numbering: surviving task
         // indices are exactly the native-precision slots
         for p in &s.points {
-            let (_, _, pri, _, _) = grid.coords(p.task_index);
+            let (_, _, pri, _, _, _) = grid.coords(p.task_index);
             assert_eq!(grid.precisions[pri], PrecisionPoint::Native);
         }
     }
@@ -795,6 +1022,7 @@ mod tests {
             networks: vec![deep_autoencoder()],
             precisions: vec![PrecisionPoint::Native],
             sparsities: vec![DEFAULT_SPARSITY],
+            noises: vec![NoiseSpec::Off],
             objectives: vec![Objective::Energy],
         };
         let s = run_sweep(&grid, &SweepOptions::default());
@@ -805,9 +1033,13 @@ mod tests {
         assert_eq!(dimc.family, ImcFamily::Dimc);
         // DIMC is bit-exact; the under-provisioned AIMC ADC is not
         assert_eq!(dimc.sqnr_db, f64::INFINITY);
+        assert_eq!(dimc.sqnr_mean_db, f64::INFINITY);
         assert_eq!((dimc.max_abs_err, dimc.clip_rate), (0.0, 0.0));
         assert!(aimc.sqnr_db.is_finite());
         assert!(aimc.max_abs_err > 0.0);
+        // noise off: zero trial spread, mean ≈ nominal
+        assert_eq!(aimc.sqnr_std_db, 0.0);
+        assert!((aimc.sqnr_mean_db - aimc.sqnr_db).abs() < 1e-9);
         // the exact point has the minimal error axis value: it must be
         // on the accuracy-vs-energy frontier
         assert_eq!(s.accuracy_frontiers.len(), 1);

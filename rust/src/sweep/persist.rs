@@ -21,7 +21,7 @@ use crate::arch::ImcFamily;
 use crate::dse::{LayerSearch, MappingEval, Objective};
 use crate::mapping::{SpatialMapping, TemporalPolicy, TileCounts, Unroll};
 use crate::model::EnergyBreakdown;
-use crate::sim::AccuracyRecord;
+use crate::sim::{AccuracyRecord, NOISE_TRIALS};
 use crate::util::json::{parse, Json};
 use crate::workload::{LayerType, LoopDim};
 
@@ -40,8 +40,11 @@ use crate::dse::reuse::{AccessCounts, TrafficEnergy};
 /// landed: every entry memoizes the bit-true simulator's
 /// [`AccuracyRecord`] alongside the cost optima, so v2 files (which
 /// carry no accuracy record) are rejected by name like v1 files before
-/// them.
-pub const SWEEP_CACHE_VERSION: u64 = 3;
+/// them; **4** — the analog-noise axis landed: [`CostKey`] gained the
+/// noise-σ fingerprint and [`AccuracyRecord`] its per-trial noise
+/// energies, so v3 files (which key no noise and carry no trial
+/// statistics) are rejected by name like v1 and v2 before them.
+pub const SWEEP_CACHE_VERSION: u64 = 4;
 
 /// Why a cache file was rejected. In every case the in-memory cache is
 /// left untouched and the caller starts cold.
@@ -64,8 +67,8 @@ impl std::fmt::Display for CacheLoadError {
                 f,
                 "cache file has schema version {found}, but this build requires version \
                  {expected} (the CostKey/cost-model/simulator schema changed — e.g. a \
-                 pre-precision-axis v1 or pre-accuracy v2 cache); delete the file or let \
-                 this run rewrite it"
+                 pre-precision-axis v1, pre-accuracy v2 or pre-noise v3 cache); delete \
+                 the file or let this run rewrite it"
             ),
             CacheLoadError::Malformed => f.write_str("cache file is not a valid sweep cost cache"),
         }
@@ -204,6 +207,7 @@ fn key_to_json(k: &CostKey) -> Json {
                 None => Json::Null,
             },
         ),
+        ("noise_bits", Json::Arr(k.noise_bits.iter().map(|&b| jbits(b)).collect())),
     ])
 }
 
@@ -247,6 +251,11 @@ fn key_from_json(j: &Json) -> Option<CostKey> {
         Json::Null => None,
         p => Some(parse_policy(p.as_str()?)?),
     };
+    let nb = get(j, "noise_bits")?.as_arr()?;
+    if nb.len() != 3 {
+        return None;
+    }
+    let noise_bits = [bits_of(&nb[0])?, bits_of(&nb[1])?, bits_of(&nb[2])?];
     Some(CostKey {
         family: parse_family(get(j, "family")?.as_str()?)?,
         rows: n_of(get(j, "rows")?)?,
@@ -266,6 +275,7 @@ fn key_from_json(j: &Json) -> Option<CostKey> {
         dims,
         sparsity_bits: bits_of(get(j, "sparsity_bits")?)?,
         policy,
+        noise_bits,
     })
 }
 
@@ -420,10 +430,22 @@ fn accuracy_to_json(a: &AccuracyRecord) -> Json {
         ("outputs", jbits(a.outputs)),
         ("conversions", jbits(a.conversions)),
         ("clipped", jbits(a.clipped)),
+        (
+            "trial_noise",
+            Json::Arr(a.trial_noise.iter().map(|&t| jf(t)).collect()),
+        ),
     ])
 }
 
 fn accuracy_from_json(j: &Json) -> Option<AccuracyRecord> {
+    let trials = get(j, "trial_noise")?.as_arr()?;
+    if trials.len() != NOISE_TRIALS {
+        return None;
+    }
+    let mut trial_noise = [0.0f64; NOISE_TRIALS];
+    for (slot, t) in trial_noise.iter_mut().zip(trials) {
+        *slot = f_of(t)?;
+    }
     Some(AccuracyRecord {
         signal: f_of(get(j, "signal")?)?,
         noise: f_of(get(j, "noise")?)?,
@@ -431,6 +453,7 @@ fn accuracy_from_json(j: &Json) -> Option<AccuracyRecord> {
         outputs: bits_of(get(j, "outputs")?)?,
         conversions: bits_of(get(j, "conversions")?)?,
         clipped: bits_of(get(j, "clipped")?)?,
+        trial_noise,
     })
 }
 
@@ -530,6 +553,7 @@ mod tests {
 
     #[test]
     fn roundtrip_is_bit_exact_and_warm_cache_fully_hits() {
+        use crate::sim::NoiseSpec;
         let sys = table2_systems().remove(1);
         let tech = TechParams::for_node(sys.imc.tech_nm);
         let cold = CostCache::new();
@@ -538,8 +562,17 @@ mod tests {
             Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
             Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
         ];
+        // a noisy corner on the first layer exercises the trial-noise
+        // serialization with genuinely distinct per-trial energies
+        let noise_of = |l: &Layer| {
+            if l.name == "fc" {
+                NoiseSpec::Typical
+            } else {
+                NoiseSpec::Off
+            }
+        };
         for l in &layers {
-            cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
+            cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
         }
         let path = tmp("cache_roundtrip");
         save_cache(&cold, &path).unwrap();
@@ -548,8 +581,8 @@ mod tests {
         let loaded = load_cache_into(&path, &warm).expect("cache file loads");
         assert_eq!(loaded, layers.len());
         for l in &layers {
-            let a = cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
-            let b = warm.search(l, &sys, &tech, DEFAULT_SPARSITY, None);
+            let a = cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
+            let b = warm.search(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
             for objective in crate::dse::ALL_OBJECTIVES {
                 let (x, y) = (a.best(objective), b.best(objective));
                 assert_eq!(x.total_energy_fj().to_bits(), y.total_energy_fj().to_bits());
@@ -561,7 +594,8 @@ mod tests {
             }
             assert_eq!(a.evaluated, b.evaluated);
             assert_eq!(a.pruned, b.pruned);
-            // the memoized accuracy record round-trips bit-exactly too
+            // the memoized accuracy record round-trips bit-exactly too,
+            // per-trial noise energies included
             let (x, y) = (a.accuracy(), b.accuracy());
             assert_eq!(x.signal.to_bits(), y.signal.to_bits());
             assert_eq!(x.noise.to_bits(), y.noise.to_bits());
@@ -570,6 +604,12 @@ mod tests {
                 (x.outputs, x.conversions, x.clipped),
                 (y.outputs, y.conversions, y.clipped)
             );
+            for t in 0..NOISE_TRIALS {
+                assert_eq!(x.trial_noise[t].to_bits(), y.trial_noise[t].to_bits());
+            }
+            if l.name == "fc" {
+                assert!(x.sqnr_std_db() > 0.0, "noisy trials flattened by the roundtrip");
+            }
         }
         // the warm cache answered everything from disk
         let s = warm.stats();
@@ -655,6 +695,24 @@ mod tests {
             CacheLoadError::VersionMismatch { found: 2, expected: SWEEP_CACHE_VERSION }
         ));
         assert!(err.to_string().contains("pre-accuracy"), "{err}");
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_noise_v3_cache_is_rejected_not_reused() {
+        // a v3 file predates the analog-noise axis: its keys carry no
+        // noise fingerprint and its records no trial statistics, so
+        // reusing it would alias noise corners and report no trial
+        // spread — rejected by name, run starts cold
+        let path = cache_file_with_version("cache_v3", 3);
+        let fresh = CostCache::new();
+        let err = load_cache_into(&path, &fresh).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheLoadError::VersionMismatch { found: 3, expected: SWEEP_CACHE_VERSION }
+        ));
+        assert!(err.to_string().contains("pre-noise"), "{err}");
         assert_eq!(fresh.stats().entries, 0);
         std::fs::remove_file(&path).ok();
     }

@@ -33,6 +33,15 @@ where
 }
 
 /// [`parallel_map`] with an explicit worker count.
+///
+/// The worker count is clamped to `threads.clamp(1, items.len())`:
+/// `threads == 0` runs single-threaded rather than panicking, and
+/// `threads > items.len()` spawns exactly one worker per item — never
+/// more — so callers may pass a global thread budget to a tiny batch
+/// (e.g. the K seeded noise trials of [`crate::sim::noise`]) without
+/// paying for idle threads. With one effective worker the items are
+/// mapped inline on the calling thread (no spawn at all). Results
+/// always come back in input order regardless of completion order.
 pub fn parallel_map_with<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -109,6 +118,20 @@ mod tests {
     fn more_threads_than_items() {
         let items = [7];
         assert_eq!(parallel_map_with(&items, 32, |&x| x), vec![7]);
+    }
+
+    #[test]
+    fn thread_count_clamps_to_item_count() {
+        // threads > items.len() on a multi-item batch: the clamp caps
+        // the workers at one per item, every slot is filled exactly
+        // once, and order is preserved — the shape the K-noise-trial
+        // fan-out relies on (K small, thread budget large)
+        let items: Vec<u64> = (0..5).collect();
+        let out = parallel_map_with(&items, 64, |&x| x * 3);
+        assert_eq!(out, vec![0, 3, 6, 9, 12]);
+        // threads == items.len() is the boundary case of the clamp
+        let exact = parallel_map_with(&items, items.len(), |&x| x + 1);
+        assert_eq!(exact, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

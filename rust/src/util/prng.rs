@@ -61,6 +61,20 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Approximately standard-normal draw via the Irwin–Hall 12-sum
+    /// (Σ of 12 uniforms − 6: zero mean, unit variance, support
+    /// [−6, 6]). Chosen over Box–Muller deliberately: only additions —
+    /// no `ln`/`cos` whose last bits may differ across libm builds — so
+    /// the Monte-Carlo noise trials are bit-identical on every platform,
+    /// the same guarantee the rest of the simulator gives.
+    pub fn normal(&mut self) -> f64 {
+        let mut s = 0.0;
+        for _ in 0..12 {
+            s += self.f64();
+        }
+        s - 6.0
+    }
+
     /// Pick one element.
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len() as u64) as usize]
@@ -107,6 +121,21 @@ mod tests {
             seen_hi |= v == 7;
         }
         assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn normal_has_zero_mean_unit_variance_and_bounded_support() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let draws: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean: f64 = draws.iter().sum::<f64>() / n as f64;
+        let var: f64 = draws.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "variance {var}");
+        assert!(draws.iter().all(|d| (-6.0..=6.0).contains(d)));
+        // deterministic: the same seed replays the same stream
+        let a: Vec<f64> = (0..16).map(|_| Rng::new(5).normal()).collect();
+        assert!(a.windows(2).all(|w| w[0].to_bits() == w[1].to_bits()));
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! counts and cache temperature are covered in `integration_sweep`).
 
 use imcsim::arch::{ImcFamily, ImcMacro, Precision};
-use imcsim::sim::{layer_accuracy, AdcTransfer};
+use imcsim::sim::{
+    layer_accuracy, layer_accuracy_noisy, AdcTransfer, NoiseParams, NoiseSpec, NOISE_TRIALS,
+};
 use imcsim::workload::{all_networks, Layer};
 
 #[test]
@@ -115,6 +117,137 @@ fn requantized_survey_points_keep_the_adc_slack_and_stay_comparable() {
         }
     }
     assert!(checked >= 2, "too few AIMC requantization points: {checked}");
+}
+
+#[test]
+fn noise_off_is_bit_identical_to_the_quantization_only_simulator_on_all_survey_designs() {
+    // the acceptance lock of the noise axis: under NoiseSpec::Off the
+    // record equals the pre-noise simulator's output field for field —
+    // on every survey design (both families), with every trial slot
+    // holding the nominal noise energy and exactly zero trial spread
+    for e in imcsim::db::survey() {
+        let m = e.to_macro();
+        for net in all_networks() {
+            for l in net.layers.iter().step_by(5) {
+                let nominal = layer_accuracy(l, &m);
+                let off = layer_accuracy_noisy(l, &m, NoiseSpec::Off);
+                assert_eq!(nominal.signal.to_bits(), off.signal.to_bits(), "{}", m.name);
+                assert_eq!(nominal.noise.to_bits(), off.noise.to_bits(), "{}", m.name);
+                assert_eq!(
+                    nominal.max_abs_err.to_bits(),
+                    off.max_abs_err.to_bits(),
+                    "{}",
+                    m.name
+                );
+                assert_eq!(
+                    (nominal.outputs, nominal.conversions, nominal.clipped),
+                    (off.outputs, off.conversions, off.clipped)
+                );
+                assert_eq!(off.trial_noise, [off.noise; NOISE_TRIALS], "{}", m.name);
+                assert_eq!(off.sqnr_std_db(), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn sqnr_trial_variance_is_monotone_non_decreasing_in_cap_mismatch_sigma() {
+    // sweeping only the capacitor-mismatch coefficient (thermal and
+    // offset off) on a survey-scale AIMC geometry: the per-trial base
+    // draws are σ-independent (the seed excludes the σs), so a larger
+    // coefficient re-scales the same perturbation field — the spread of
+    // the per-trial SQNRs and the mean trial noise energy both grow
+    // monotonically with it
+    let m = ImcMacro::new("sweep", ImcFamily::Aimc, 256, 256, 4, 4, 4, 8, 0.8, 28.0);
+    let l = Layer::dense("fc", 32, 128);
+    let mut last_std = -1.0f64;
+    let mut last_mean_energy = -1.0f64;
+    for a_cap in [0.0, 0.01, 0.02, 0.04, 0.08, 0.16, 0.32] {
+        let spec = NoiseSpec::Custom(NoiseParams {
+            a_cap,
+            t_factor: 0.0,
+            offset_lsb: 0.0,
+        });
+        let r = layer_accuracy_noisy(&l, &m, spec);
+        let std = r.sqnr_std_db();
+        let mean_energy = r.trial_noise.iter().sum::<f64>() / NOISE_TRIALS as f64;
+        assert!(
+            std >= last_std,
+            "a_cap {a_cap}: SQNR spread {std} below {last_std}"
+        );
+        assert!(
+            mean_energy >= last_mean_energy,
+            "a_cap {a_cap}: mean trial noise {mean_energy} below {last_mean_energy}"
+        );
+        last_std = std;
+        last_mean_energy = mean_energy;
+    }
+    // the σ=0 start is exactly the nominal datapath…
+    assert!(last_std > 0.0, "largest σ produced no spread");
+    let zero = layer_accuracy_noisy(
+        &l,
+        &m,
+        NoiseSpec::Custom(NoiseParams {
+            a_cap: 0.0,
+            t_factor: 0.0,
+            offset_lsb: 0.0,
+        }),
+    );
+    assert_eq!(zero.sqnr_std_db(), 0.0);
+    assert_eq!(zero.trial_noise, [zero.noise; NOISE_TRIALS]);
+}
+
+#[test]
+fn dimc_survey_designs_are_invariant_under_every_noise_corner() {
+    // the digital family has no analog accumulation node, converters or
+    // comparators: every noise corner leaves every record bit-identical
+    // to the nominal one, across the survey's DIMC entries
+    let corners = [
+        NoiseSpec::Typical,
+        NoiseSpec::Worst,
+        NoiseSpec::Custom(NoiseParams {
+            a_cap: 0.5,
+            t_factor: 64.0,
+            offset_lsb: 4.0,
+        }),
+    ];
+    let mut checked = 0;
+    for e in imcsim::db::survey() {
+        if e.family != ImcFamily::Dimc {
+            continue;
+        }
+        let m = e.to_macro();
+        let l = Layer::dense("fc", 32, 96);
+        let nominal = layer_accuracy_noisy(&l, &m, NoiseSpec::Off);
+        for spec in corners {
+            let r = layer_accuracy_noisy(&l, &m, spec);
+            assert_eq!(r, nominal, "{} perturbed by {spec}", m.name);
+            assert!(r.is_exact());
+        }
+        checked += 1;
+    }
+    assert!(checked >= 3, "survey lost its DIMC entries");
+}
+
+#[test]
+fn noise_corners_are_deterministic_and_ordered_on_aimc() {
+    // a lossy survey-scale AIMC point: corners reproduce bit for bit
+    // and degrade in severity order (validated numerically — shared
+    // base draws make the ordering robust, not statistical)
+    let m = ImcMacro::new("a", ImcFamily::Aimc, 1152, 256, 4, 4, 4, 8, 0.8, 28.0);
+    let l = Layer::dense("fc", 64, 256);
+    let typical = layer_accuracy_noisy(&l, &m, NoiseSpec::Typical);
+    let again = layer_accuracy_noisy(&l, &m, NoiseSpec::Typical);
+    for t in 0..NOISE_TRIALS {
+        assert_eq!(typical.trial_noise[t].to_bits(), again.trial_noise[t].to_bits());
+    }
+    let worst = layer_accuracy_noisy(&l, &m, NoiseSpec::Worst);
+    assert!(typical.sqnr_std_db() > 0.0);
+    assert!(worst.sqnr_std_db() > 0.0);
+    assert!(worst.sqnr_mean_db() < typical.sqnr_mean_db());
+    // the nominal fields never move with the corner
+    assert_eq!(typical.noise.to_bits(), worst.noise.to_bits());
+    assert_eq!(typical.max_abs_err.to_bits(), worst.max_abs_err.to_bits());
 }
 
 #[test]

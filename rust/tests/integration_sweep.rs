@@ -1,14 +1,16 @@
 //! Integration: the sharded full-grid sweep — shard determinism (the
-//! Pareto frontier must not depend on the shard count, including over
-//! the widened cells × precision × sparsity axes), cache correctness
-//! against the uncached DSE, the survey-grid builder, and warm starts
-//! from the persistent cost cache (with schema-mismatch rejection).
+//! Pareto frontiers and the 3-objective surface must not depend on the
+//! shard count, including over the widened cells × precision ×
+//! sparsity × noise axes), cache correctness against the uncached DSE,
+//! the survey-grid builder, and warm starts from the persistent cost
+//! cache (with schema-mismatch rejection).
 
 use imcsim::arch::{table2_systems, ImcFamily, Precision};
 use imcsim::dse::{
     search_network, search_network_with, DseOptions, Objective, ALL_OBJECTIVES, COST_OBJECTIVES,
     DEFAULT_SPARSITY,
 };
+use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheLoadError,
     CostCache, PrecisionPoint, SweepGrid, SweepOptions, DEFAULT_GRID_CELLS, SWEEP_CACHE_VERSION,
@@ -24,6 +26,7 @@ fn small_grid() -> SweepGrid {
         networks: vec![deep_autoencoder(), ds_cnn()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
+        noises: vec![NoiseSpec::Off],
         objectives: COST_OBJECTIVES.to_vec(),
     }
 }
@@ -44,6 +47,7 @@ fn widened_grid() -> SweepGrid {
         networks: vec![ds_cnn()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![0.3, 0.8],
+        noises: vec![NoiseSpec::Off],
         objectives: COST_OBJECTIVES.to_vec(),
     }
 }
@@ -64,7 +68,10 @@ fn points_equal(a: &imcsim::sweep::SweepSummary, b: &imcsim::sweep::SweepSummary
         assert_eq!(x.time_ns.to_bits(), y.time_ns.to_bits());
         // the simulated accuracy record is bit-identical too (shard
         // count, thread count and cache temperature must not matter)
+        assert_eq!(x.noise, y.noise);
         assert_eq!(x.sqnr_db.to_bits(), y.sqnr_db.to_bits());
+        assert_eq!(x.sqnr_mean_db.to_bits(), y.sqnr_mean_db.to_bits());
+        assert_eq!(x.sqnr_std_db.to_bits(), y.sqnr_std_db.to_bits());
         assert_eq!(x.max_abs_err.to_bits(), y.max_abs_err.to_bits());
         assert_eq!(x.clip_rate.to_bits(), y.clip_rate.to_bits());
     }
@@ -92,6 +99,7 @@ fn pareto_frontier_identical_across_shard_counts() {
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
         assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
+        assert_eq!(single.surfaces, merged.surfaces);
     }
 }
 
@@ -129,6 +137,7 @@ fn shard_determinism_holds_on_widened_cells_sparsity_axes() {
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
         assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
+        assert_eq!(single.surfaces, merged.surfaces);
     }
 }
 
@@ -175,6 +184,58 @@ fn shard_determinism_holds_on_precision_axis() {
         points_equal(&single, &merged);
         assert_eq!(single.frontiers, merged.frontiers);
         assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
+        assert_eq!(single.surfaces, merged.surfaces);
+    }
+}
+
+#[test]
+fn shard_determinism_holds_on_noise_axis() {
+    // the noise axis widens the group numbering and the Monte-Carlo
+    // trials run inside the cached layer search: the N-shard merge must
+    // stay bit-identical to the 1-shard run, trial statistics and the
+    // 3-objective surface included
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    grid.noises = vec![NoiseSpec::Off, NoiseSpec::Typical, NoiseSpec::Worst];
+    let single = run_sweep(&grid, &SweepOptions::default());
+    assert_eq!(single.points.len(), grid.n_tasks());
+    // all three corners materialized, labeled apart in the frontiers
+    let mut noises: Vec<String> = single.points.iter().map(|p| p.noise.to_string()).collect();
+    noises.sort_unstable();
+    noises.dedup();
+    assert_eq!(noises, vec!["off", "typical", "worst"]);
+    assert_eq!(single.frontiers.len(), 3);
+    // the AIMC design's trial spread is zero only at the off corner
+    for p in &single.points {
+        if p.family == imcsim::arch::ImcFamily::Aimc {
+            match p.noise {
+                NoiseSpec::Off => assert_eq!(p.sqnr_std_db, 0.0),
+                _ => assert!(p.sqnr_std_db > 0.0, "{}: no spread under {}", p.design, p.noise),
+            }
+        }
+    }
+    // one surface per (network, noise corner): pooling corners would
+    // let the cost-identical off rows dominate the noisy ones
+    assert_eq!(single.surfaces.len(), 3);
+    assert!(single.surfaces.iter().all(|(l, f)| l.contains("@ noise") && !f.is_empty()));
+
+    for shards in [2, 4] {
+        let parts: Vec<_> = (0..shards)
+            .map(|k| {
+                let opts = SweepOptions {
+                    shards,
+                    shard_index: Some(k),
+                    threads: 2,
+                    ..Default::default()
+                };
+                run_sweep(&grid, &opts)
+            })
+            .collect();
+        let merged = merge_summaries(&parts);
+        points_equal(&single, &merged);
+        assert_eq!(single.frontiers, merged.frontiers);
+        assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
+        assert_eq!(single.surfaces, merged.surfaces);
     }
 }
 
@@ -208,6 +269,7 @@ fn unrealizable_precisions_skip_identically_across_shards() {
     points_equal(&single, &merged);
     assert_eq!(single.frontiers, merged.frontiers);
     assert_eq!(single.accuracy_frontiers, merged.accuracy_frontiers);
+    assert_eq!(single.surfaces, merged.surfaces);
 }
 
 #[test]
@@ -259,6 +321,7 @@ fn warm_cache_file_reproduces_cold_run_with_full_hits() {
     points_equal(&cold, &warm);
     assert_eq!(cold.frontiers, warm.frontiers);
     assert_eq!(cold.accuracy_frontiers, warm.accuracy_frontiers);
+    assert_eq!(cold.surfaces, warm.surfaces);
     std::fs::remove_file(&path).ok();
 }
 
@@ -330,6 +393,7 @@ fn sweep_reports_bound_pruning() {
         networks: vec![imcsim::workload::resnet8(), imcsim::workload::mobilenet_v1()],
         precisions: vec![PrecisionPoint::Native],
         sparsities: vec![DEFAULT_SPARSITY],
+        noises: vec![NoiseSpec::Off],
         objectives: COST_OBJECTIVES.to_vec(),
     };
     let m = run_sweep(&multi, &SweepOptions::default());
@@ -466,6 +530,7 @@ fn low_precision_aimc_trades_accuracy_for_cost() {
             PrecisionPoint::Fixed(Precision::new(8, 8)),
         ],
         sparsities: vec![DEFAULT_SPARSITY],
+        noises: vec![NoiseSpec::Off],
         objectives: vec![Objective::Energy, Objective::Latency],
     };
     let s = run_sweep(&grid, &SweepOptions::default());
