@@ -1,16 +1,21 @@
 //! Perf bench: the grid-sweep pipeline — memoized vs exhaustive layer
-//! search, pruned vs unpruned mapping search, and a mini-grid
-//! end-to-end run at several shard widths. Reports the cache hit rate
-//! and the bound-pruning evaluation reduction the full survey grid
-//! achieves (the acceptance bar is ≥2× fewer full cost evaluations).
+//! search, pruned vs unpruned mapping search, scalar vs bit-plane
+//! simulator, and a mini-grid end-to-end run at several shard widths.
+//! Reports the cache hit rate, the bound-pruning evaluation reduction
+//! the full survey grid achieves (the acceptance bar is ≥2× fewer full
+//! cost evaluations), and the bit-plane simulator's speedup over the
+//! retained scalar reference (the acceptance bar is ≥5×).
 //!
 //! With `IMCSIM_BENCH_JSON=PATH` set, the run additionally emits a
 //! machine-readable trajectory file (`BENCH_sweep.json` in CI):
 //! per-benchmark median timings, every reported metric, and a `gate`
 //! object — evaluated/pruned candidate counts, cache hit rate, wall
-//! time and the pruning reduction on the multi-macro acceptance grid —
-//! that the CI `bench-trajectory` job archives per push and fails on
-//! when the reduction drops below 2×.
+//! time, the pruning reduction on the multi-macro acceptance grid, the
+//! scalar-vs-bitplane `sim_speedup`, and the `cross_corner_rate` of
+//! the noise-split cache (the fraction of uncached lookups on the
+//! two-corner gate grid that skipped the mapping search) — that the CI
+//! `bench-trajectory` job archives per push and fails on when the
+//! reduction drops below 2× or the sim speedup below 5×.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -55,6 +60,28 @@ fn main() {
                 &mut metrics,
                 "sweep/cache_speedup",
                 cold.median_ns / warm.median_ns.max(1.0),
+                "x",
+            );
+        }
+    }
+
+    // bit-plane vs scalar bit-true simulator on a representative AIMC
+    // design (DIMC gains are larger still: no per-bitline ADC transfer
+    // interrupts the popcount loop there)
+    let aimc = systems
+        .iter()
+        .find(|s| s.imc.family == imcsim::arch::ImcFamily::Aimc)
+        .expect("table2 carries an AIMC design");
+    if let Some(scalar) = b.bench("sweep/sim_layer_scalar", || {
+        imcsim::sim::mvm::scalar::layer_accuracy(&layer, &aimc.imc).outputs
+    }) {
+        if let Some(bitplane) = b.bench("sweep/sim_layer_bitplane", || {
+            imcsim::sim::layer_accuracy(&layer, &aimc.imc).outputs
+        }) {
+            metric(
+                &mut metrics,
+                "sweep/sim_speedup",
+                scalar.median_ns / bitplane.median_ns.max(1.0),
                 "x",
             );
         }
@@ -118,12 +145,15 @@ fn main() {
     // most expensive grid in the file.
     let json_path = std::env::var("IMCSIM_BENCH_JSON").ok();
     let gate = json_path.as_ref().map(|_| {
+        // the gate runs both the off and the typical noise corner: with
+        // the noise-split cache the second corner must reuse every
+        // mapping search (cross_corner_rate is what proves it)
         let gate_grid = SweepGrid {
             systems: vec![systems[1].clone(), systems[3].clone()],
             networks: vec![imcsim::workload::resnet8(), imcsim::workload::mobilenet_v1()],
             precisions: vec![PrecisionPoint::Native],
             sparsities: vec![DEFAULT_SPARSITY],
-            noises: vec![NoiseSpec::Off],
+            noises: vec![NoiseSpec::Off, NoiseSpec::Typical],
             objectives: COST_OBJECTIVES.to_vec(),
         };
         let t0 = Instant::now();
@@ -139,8 +169,34 @@ fn main() {
             s.cache.hit_rate() * 100.0,
             "%",
         );
+        metric(
+            &mut metrics,
+            "sweep/gate_cross_corner_rate",
+            s.cache.cross_corner_rate() * 100.0,
+            "%",
+        );
         metric(&mut metrics, "sweep/gate_wall_seconds", wall, "s");
-        (s.cache, reduction, wall)
+
+        // the scalar-vs-bitplane simulator gate is measured directly
+        // (never filtered out: CI always needs a sim_speedup value)
+        let median_secs = |f: &mut dyn FnMut() -> u64| {
+            let mut ts: Vec<f64> = (0..5)
+                .map(|_| {
+                    let t = Instant::now();
+                    std::hint::black_box(f());
+                    t.elapsed().as_secs_f64()
+                })
+                .collect();
+            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ts[ts.len() / 2]
+        };
+        let t_scalar =
+            median_secs(&mut || imcsim::sim::mvm::scalar::layer_accuracy(&layer, &aimc.imc).outputs);
+        let t_bitplane =
+            median_secs(&mut || imcsim::sim::layer_accuracy(&layer, &aimc.imc).outputs);
+        let sim_speedup = t_scalar / t_bitplane.max(1e-12);
+        metric(&mut metrics, "sweep/gate_sim_speedup", sim_speedup, "x");
+        (s.cache, reduction, wall, sim_speedup)
     });
 
     // the headline metrics: cache effectiveness and bound-pruning
@@ -174,7 +230,8 @@ fn main() {
 
     // machine-readable trajectory file for the CI bench-trajectory job
     if let Some(path) = json_path {
-        let (cache, reduction, gate_wall) = gate.expect("gate ran whenever a JSON path is set");
+        let (cache, reduction, gate_wall, sim_speedup) =
+            gate.expect("gate ran whenever a JSON path is set");
         let num = Json::Num;
         let timings: BTreeMap<String, Json> = b
             .results()
@@ -189,6 +246,8 @@ fn main() {
             ("candidates".to_string(), num(cache.candidates() as f64)),
             ("reduction".to_string(), num(reduction)),
             ("cache_hit_rate".to_string(), num(cache.hit_rate())),
+            ("cross_corner_rate".to_string(), num(cache.cross_corner_rate())),
+            ("sim_speedup".to_string(), num(sim_speedup)),
             ("wall_seconds".to_string(), num(gate_wall)),
         ]
         .into_iter()

@@ -21,7 +21,7 @@
 use crate::arch::ImcSystem;
 use crate::mapping::{tile, MappingCandidate, MappingSpace, SpatialMapping, TemporalPolicy};
 use crate::model::{EnergyBreakdown, TechParams};
-use crate::sim::{AccuracyRecord, NoiseSpec};
+use crate::sim::{AccuracyRecord, NoiseSpec, NOISE_TRIALS};
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{Layer, Network};
 
@@ -270,6 +270,18 @@ impl LayerSearch {
     /// point.
     pub fn accuracy(&self) -> &AccuracyRecord {
         &self.accuracy
+    }
+
+    /// This search with its Monte-Carlo trial energies replaced — the
+    /// noise-splice the sweep cache uses to serve a σ corner from a
+    /// noise-erased search record plus per-corner trial energies
+    /// ([`crate::sim::noise`] computes them; every other field of the
+    /// record is σ-invariant, so the spliced search is bit-identical
+    /// to one run at that corner directly).
+    pub fn with_trial_noise(&self, trial_noise: [f64; NOISE_TRIALS]) -> LayerSearch {
+        let mut out = self.clone();
+        out.accuracy.trial_noise = trial_noise;
+        out
     }
 
     /// Reassemble a search from its parts (the persistent sweep cache

@@ -24,9 +24,9 @@ use imcsim::runtime::{Engine, Kind};
 use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
-    CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,
+    CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary,
 };
-use imcsim::util::cli::Args;
+use imcsim::util::cli::{reject_unknown, Args, SweepAxes};
 #[cfg(feature = "xla")]
 use imcsim::util::prng::Rng;
 
@@ -48,14 +48,18 @@ Paper artifacts:
 
 Exploration & serving:
   dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
-      [--objective energy|latency|edp|accuracy] [--policy ws|os|is] [--sparsity F]
-      [--noise off|typical|worst|A:T:O]
+      [--objective energy|latency|edp|accuracy] [--policy ws|os|is]
+      [--sparsity F[,F...]] [--noise S[,S...]]
                        per-layer optimal mappings for one network, with
                        the bit-true simulator's per-layer SQNR (the
                        accuracy objective is mapping-invariant and
                        reports the energy-optimal mapping); --noise
                        layers the seeded analog-noise model onto the
-                       AIMC datapath and reports trial mean/σ SQNR
+                       AIMC datapath and reports trial mean/σ SQNR.
+                       --sparsity and --noise take the same comma-list
+                       forms `sweep` does (off|typical|worst and/or
+                       A_CAP:T_FACTOR:OFFSET_LSB triples) and report
+                       each combination in turn
   sweep [--shards N] [--shard-index K] [--cells N[,N...]]
       [--precision P[,P...]] [--sparsity F[,F...]]
       [--noise S[,S...]] [--cache-file FILE] [--csv FILE]
@@ -115,6 +119,10 @@ fn main() {
             0
         }
         Some("fig5") => {
+            if let Err(e) = reject_unknown(&args, "fig5", &["family"]) {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
             let family = match args.opt("family") {
                 Some("aimc") => Some(ImcFamily::Aimc),
                 Some("dimc") => Some(ImcFamily::Dimc),
@@ -156,6 +164,10 @@ fn main() {
 }
 
 fn cmd_fig7(args: &Args) -> i32 {
+    if let Err(e) = reject_unknown(args, "fig7", &["csv"]) {
+        eprintln!("{e}");
+        return 2;
+    }
     let t0 = Instant::now();
     let results = fig7_results();
     println!("{}", fig7_text(&results));
@@ -205,26 +217,13 @@ fn cmd_dse(args: &Args) -> i32 {
     // defaults — a misspelled --noise must not quietly report
     // noise-free numbers as if they were the requested corner (the
     // same guard `sweep` has for its axes).
-    const KNOWN: [&str; 7] = [
-        "network", "system", "config", "objective", "policy", "sparsity", "noise",
-    ];
-    if let Some(unknown) = args
-        .options
-        .keys()
-        .chain(args.flags.iter())
-        .find(|k| !KNOWN.contains(&k.as_str()))
-    {
-        eprintln!(
-            "unknown option --{unknown} (dse takes --network, --system, --config, \
-             --objective, --policy, --sparsity, --noise)"
-        );
+    if let Err(e) = reject_unknown(
+        args,
+        "dse",
+        &["network", "system", "config", "objective", "policy", "sparsity", "noise"],
+    ) {
+        eprintln!("{e}");
         return 2;
-    }
-    for opt in KNOWN {
-        if args.flag(opt) {
-            eprintln!("--{opt} requires a value");
-            return 2;
-        }
     }
     let net = match args.opt("network") {
         Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
@@ -274,114 +273,114 @@ fn cmd_dse(args: &Args) -> i32 {
             return 2;
         }
     };
-    let sparsity: f64 = match args.opt("sparsity") {
-        None => 0.5,
-        Some(raw) => match raw.parse() {
-            Ok(f) if (0.0..=1.0).contains(&f) => f,
-            _ => {
-                eprintln!("--sparsity must be a number in [0, 1] (got '{raw}')");
-                return 2;
-            }
-        },
+    // the comma-list sparsity/noise axes, parsed exactly as `sweep`
+    // parses them (dse ignores the cells/precision axes, which its
+    // accepted-option list already rejects)
+    let axes = match SweepAxes::from_args(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
-    let noise: NoiseSpec = match args.opt("noise") {
-        None => NoiseSpec::Off,
-        Some(raw) => match raw.parse() {
-            Ok(n) => n,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
-        },
-    };
-    let opts = DseOptions {
-        objective,
-        input_sparsity: sparsity,
-        policy,
-        noise,
-    };
+    let multi = axes.sparsities.len() * axes.noises.len() > 1;
     for sys in &systems {
-        let t0 = Instant::now();
-        let r = search_network(&net, sys, &opts);
-        println!(
-            "\n=== {} on {} ({} layers, {:.1} ms search) ===",
-            r.network,
-            r.system,
-            r.layers.len(),
-            t0.elapsed().as_secs_f64() * 1e3
-        );
-        let mut t = Table::new(&[
-            "layer", "type", "MACs", "policy", "macros", "util", "E_macro[nJ]", "E_mem[nJ]",
-            "t[us]", "TOP/s/W", "SQNR[dB]",
-        ]);
-        for l in &r.layers {
-            let b = &l.best;
-            let sqnr = fmt_sqnr(l.accuracy.sqnr_db());
-            t.row(vec![
-                l.layer.name.clone(),
-                l.layer.ltype.to_string(),
-                eng(l.layer.macs() as f64),
-                b.policy.as_str().into(),
-                b.tiles.active_macros.to_string(),
-                format!("{:.1}%", b.utilization * 100.0),
-                format!("{:.2}", b.macro_energy.total_fj() * 1e-6),
-                format!("{:.2}", b.traffic.total_fj() * 1e-6),
-                format!("{:.2}", b.time_ns * 1e-3),
-                format!("{:.0}", b.tops_per_watt()),
-                sqnr,
-            ]);
+        for &sparsity in &axes.sparsities {
+            for &noise in &axes.noises {
+                let opts = DseOptions {
+                    objective,
+                    input_sparsity: sparsity,
+                    policy,
+                    noise,
+                };
+                let tag = if multi {
+                    format!(" @ sparsity {sparsity}, noise {noise}")
+                } else {
+                    String::new()
+                };
+                dse_report(&net, sys, &opts, &tag);
+            }
         }
-        println!("{}", t.render());
-        let acc = r.accuracy();
-        println!(
-            "total: E={:.2} uJ  t={:.2} ms  eff={:.1} TOP/s/W  util={:.1}%",
-            r.total_energy_fj() * 1e-9,
-            r.total_time_ns() * 1e-6,
-            r.effective_tops_per_watt(),
-            r.mean_utilization() * 100.0
-        );
-        if acc.is_exact() {
-            println!("accuracy: bit-exact datapath (simulated, {} outputs)", acc.outputs);
-        } else {
-            println!(
-                "accuracy: SQNR={:.1} dB  max|err|={:.0}  ADC clip rate={:.2}% \
-                 (simulated, {} outputs)",
-                acc.sqnr_db(),
-                acc.max_abs_err,
-                acc.clip_rate() * 100.0,
-                acc.outputs
-            );
-        }
-        if !matches!(noise, NoiseSpec::Off) {
-            println!(
-                "analog noise ({noise}): SQNR over {} seeded trials = {} dB",
-                imcsim::sim::NOISE_TRIALS,
-                fmt_sqnr_trials(acc.sqnr_mean_db(), acc.sqnr_std_db())
-            );
-        }
-        let (evaluated, pruned) = r
-            .layers
-            .iter()
-            .fold((0usize, 0usize), |(e, p), l| (e + l.evaluated, p + l.pruned));
-        println!(
-            "mapping search: {} candidates — {evaluated} evaluated, {pruned} pruned by bound",
-            evaluated + pruned
-        );
     }
     0
 }
 
-/// Parse a comma-separated option value list (`--cells 294912,147456`).
-fn parse_list<T: std::str::FromStr>(raw: &str, what: &str) -> Result<Vec<T>, String> {
-    let vals: Result<Vec<T>, _> = raw
-        .split(',')
-        .map(|p| p.trim().parse::<T>().map_err(|_| format!("invalid {what} value '{p}'")))
-        .collect();
-    match vals {
-        Ok(v) if !v.is_empty() => Ok(v),
-        Ok(_) => Err(format!("--{what} needs at least one value")),
-        Err(e) => Err(e),
+/// Search one (system, sparsity, noise) combination and print the
+/// per-layer mapping table, totals, accuracy and search statistics —
+/// the body of each `dse` axis combination.
+fn dse_report(
+    net: &imcsim::workload::Network,
+    sys: &imcsim::arch::ImcSystem,
+    opts: &DseOptions,
+    tag: &str,
+) {
+    let noise = opts.noise;
+    let t0 = Instant::now();
+    let r = search_network(net, sys, opts);
+    println!(
+        "\n=== {} on {}{tag} ({} layers, {:.1} ms search) ===",
+        r.network,
+        r.system,
+        r.layers.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let mut t = Table::new(&[
+        "layer", "type", "MACs", "policy", "macros", "util", "E_macro[nJ]", "E_mem[nJ]",
+        "t[us]", "TOP/s/W", "SQNR[dB]",
+    ]);
+    for l in &r.layers {
+        let b = &l.best;
+        let sqnr = fmt_sqnr(l.accuracy.sqnr_db());
+        t.row(vec![
+            l.layer.name.clone(),
+            l.layer.ltype.to_string(),
+            eng(l.layer.macs() as f64),
+            b.policy.as_str().into(),
+            b.tiles.active_macros.to_string(),
+            format!("{:.1}%", b.utilization * 100.0),
+            format!("{:.2}", b.macro_energy.total_fj() * 1e-6),
+            format!("{:.2}", b.traffic.total_fj() * 1e-6),
+            format!("{:.2}", b.time_ns * 1e-3),
+            format!("{:.0}", b.tops_per_watt()),
+            sqnr,
+        ]);
     }
+    println!("{}", t.render());
+    let acc = r.accuracy();
+    println!(
+        "total: E={:.2} uJ  t={:.2} ms  eff={:.1} TOP/s/W  util={:.1}%",
+        r.total_energy_fj() * 1e-9,
+        r.total_time_ns() * 1e-6,
+        r.effective_tops_per_watt(),
+        r.mean_utilization() * 100.0
+    );
+    if acc.is_exact() {
+        println!("accuracy: bit-exact datapath (simulated, {} outputs)", acc.outputs);
+    } else {
+        println!(
+            "accuracy: SQNR={:.1} dB  max|err|={:.0}  ADC clip rate={:.2}% \
+             (simulated, {} outputs)",
+            acc.sqnr_db(),
+            acc.max_abs_err,
+            acc.clip_rate() * 100.0,
+            acc.outputs
+        );
+    }
+    if !matches!(noise, NoiseSpec::Off) {
+        println!(
+            "analog noise ({noise}): SQNR over {} seeded trials = {} dB",
+            imcsim::sim::NOISE_TRIALS,
+            fmt_sqnr_trials(acc.sqnr_mean_db(), acc.sqnr_std_db())
+        );
+    }
+    let (evaluated, pruned) = r
+        .layers
+        .iter()
+        .fold((0usize, 0usize), |(e, p), l| (e + l.evaluated, p + l.pruned));
+    println!(
+        "mapping search: {} candidates — {evaluated} evaluated, {pruned} pruned by bound",
+        evaluated + pruned
+    );
 }
 
 /// Full-grid DSE sweep: every surveyed silicon design (instantiated per
@@ -405,28 +404,16 @@ fn cmd_sweep(args: &Args) -> i32 {
     // rather than silently falling back to defaults: a CI matrix job
     // with an empty or misspelled shard variable must not quietly run
     // the whole grid.
-    const KNOWN: [&str; 9] = [
-        "shards", "shard-index", "cells", "precision", "sparsity", "noise", "csv",
-        "surface-csv", "cache-file",
-    ];
-    if let Some(unknown) = args
-        .options
-        .keys()
-        .chain(args.flags.iter())
-        .find(|k| !KNOWN.contains(&k.as_str()))
-    {
-        eprintln!(
-            "unknown option --{unknown} (sweep takes --shards, --shard-index, \
-             --cells, --precision, --sparsity, --noise, --csv, --surface-csv, \
-             --cache-file)"
-        );
+    if let Err(e) = reject_unknown(
+        args,
+        "sweep",
+        &[
+            "shards", "shard-index", "cells", "precision", "sparsity", "noise", "csv",
+            "surface-csv", "cache-file",
+        ],
+    ) {
+        eprintln!("{e}");
         return 2;
-    }
-    for opt in KNOWN {
-        if args.flag(opt) {
-            eprintln!("--{opt} requires a value");
-            return 2;
-        }
     }
     let shards: usize = match args.opt_parse("shards").unwrap_or(Ok(1)) {
         Ok(n) if n >= 1 => n,
@@ -443,48 +430,13 @@ fn cmd_sweep(args: &Args) -> i32 {
             return 2;
         }
     };
-    let cells: Vec<usize> = match args.opt("cells") {
-        None => vec![DEFAULT_GRID_CELLS],
-        Some(raw) => match parse_list::<usize>(raw, "cells") {
-            Ok(v) if v.iter().all(|&n| n > 0) => v,
-            _ => {
-                eprintln!("--cells must be a comma-separated list of positive integers");
-                return 2;
-            }
-        },
-    };
-    let precisions: Vec<PrecisionPoint> = match args.opt("precision") {
-        None => vec![PrecisionPoint::Native],
-        Some(raw) => match parse_list::<PrecisionPoint>(raw, "precision") {
-            Ok(v) => v,
-            Err(e) => {
-                eprintln!("{e} (--precision takes WxA pairs like 2x8,4x8,8x8, or 'native')");
-                return 2;
-            }
-        },
-    };
-    let sparsities: Vec<f64> = match args.opt("sparsity") {
-        None => vec![imcsim::dse::DEFAULT_SPARSITY],
-        Some(raw) => match parse_list::<f64>(raw, "sparsity") {
-            Ok(v) if v.iter().all(|f| (0.0..=1.0).contains(f)) => v,
-            _ => {
-                eprintln!("--sparsity must be a comma-separated list of numbers in [0, 1]");
-                return 2;
-            }
-        },
-    };
-    let noises: Vec<NoiseSpec> = match args.opt("noise") {
-        None => vec![NoiseSpec::Off],
-        Some(raw) => match parse_list::<NoiseSpec>(raw, "noise") {
-            Ok(v) => v,
-            Err(e) => {
-                eprintln!(
-                    "{e} (--noise takes off|typical|worst and/or explicit \
-                     A_CAP:T_FACTOR:OFFSET_LSB sigma triples like 0.02:1:0.25)"
-                );
-                return 2;
-            }
-        },
+    // The four shared axes, in the same comma-list forms `dse` accepts
+    let SweepAxes { cells, precisions, sparsities, noises } = match SweepAxes::from_args(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
 
     // Per-precision realizability report (the db-level validity filter;
@@ -522,7 +474,10 @@ fn cmd_sweep(args: &Args) -> i32 {
     if let Some(path) = &cache_file {
         use imcsim::sweep::CacheLoadError;
         match load_cache_into(path, &cache) {
-            Ok(n) => println!("cost cache: warmed {n} entries from {}", path.display()),
+            Ok(n) => println!(
+                "cost cache: warmed {n} records (searches + trial energies) from {}",
+                path.display()
+            ),
             // no file yet is the normal first run, not an error
             Err(CacheLoadError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => {
                 println!("cost cache: {} not found — starting cold", path.display())
@@ -570,11 +525,15 @@ fn cmd_sweep(args: &Args) -> i32 {
     println!("(evaluated in {:.2}s)", t0.elapsed().as_secs_f64());
     if let Some(path) = &cache_file {
         match save_cache(&cache, path) {
-            Ok(()) => println!(
-                "cost cache: saved {} entries to {}",
-                cache.stats().entries,
-                path.display()
-            ),
+            Ok(()) => {
+                let s = cache.stats();
+                println!(
+                    "cost cache: saved {} search entries + {} trial records to {}",
+                    s.entries,
+                    s.trial_entries,
+                    path.display()
+                )
+            }
             Err(e) => {
                 eprintln!("cannot write cache file: {e}");
                 return 1;
@@ -607,21 +566,9 @@ fn cmd_sweep(args: &Args) -> i32 {
 fn cmd_sweepmerge(args: &Args) -> i32 {
     // same guard as sweep/dse: a misspelled --surface-csv must not
     // silently drop the surface artifact with exit 0
-    const KNOWN: [&str; 2] = ["csv", "surface-csv"];
-    if let Some(unknown) = args
-        .options
-        .keys()
-        .chain(args.flags.iter())
-        .find(|k| !KNOWN.contains(&k.as_str()))
-    {
-        eprintln!("unknown option --{unknown} (sweepmerge takes --csv and --surface-csv)");
+    if let Err(e) = reject_unknown(args, "sweepmerge", &["csv", "surface-csv"]) {
+        eprintln!("{e}");
         return 2;
-    }
-    for opt in KNOWN {
-        if args.flag(opt) {
-            eprintln!("--{opt} requires a value");
-            return 2;
-        }
     }
     if args.positional.is_empty() {
         eprintln!(
@@ -691,6 +638,10 @@ fn cmd_archsweep(args: &Args) -> i32 {
     use imcsim::arch::{ImcFamily, ImcMacro, ImcSystem};
     use imcsim::dse::pareto_front;
 
+    if let Err(e) = reject_unknown(args, "archsweep", &["network", "family", "cells"]) {
+        eprintln!("{e}");
+        return 2;
+    }
     let net = match args.opt("network") {
         Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
         Some("resnet8") => imcsim::workload::resnet8(),

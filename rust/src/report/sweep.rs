@@ -143,11 +143,21 @@ pub fn sweep_text(s: &SweepSummary) -> String {
         ""
     };
     out.push_str(&format!(
-        "\ncost cache: {} entries{entries_label}, {} hits / {} lookups ({:.1}% hit rate)\n",
+        "\ncost cache: {} search entries + {} trial records{entries_label}, {} hits / {} \
+         lookups ({:.1}% hit rate)\n",
         s.cache.entries,
+        s.cache.trial_entries,
         s.cache.hits,
         s.cache.lookups(),
         s.cache.hit_rate() * 100.0
+    ));
+    out.push_str(&format!(
+        "noise split: {} searches run, {} cross-corner reuses ({:.1}% of uncached lookups \
+         skipped the mapping search), {} trial simulations\n",
+        s.cache.searches,
+        s.cache.cross_corner,
+        s.cache.cross_corner_rate() * 100.0,
+        s.cache.trial_sims
     ));
     out.push_str(&format!(
         "mapping search: {} candidates — {} evaluated, {} pruned by bound ({:.1}%)\n",

@@ -21,6 +21,13 @@
 //! * **Partial sums** — reductions longer than the array fold into
 //!   `ceil(red / rows)` chunks recombined exactly at the recombination
 //!   width, as in the cost model's tiling.
+//! * **Bit-plane execution** — the production inner loop packs weight
+//!   and activation bit-slices into `u64` bitplanes and accumulates
+//!   bitline sums via `count_ones()` ([`mvm`] § packing layout), ~an
+//!   order of magnitude faster than element-at-a-time arithmetic; the
+//!   scalar datapath survives as [`mvm::scalar`], the executable
+//!   reference the bitplane path is tested bit-identical against over
+//!   every survey design × precision × noise corner.
 //!
 //! * **Analog non-idealities** — beyond quantization, the AIMC path can
 //!   run under a seeded Monte-Carlo noise model ([`noise`]): per-column

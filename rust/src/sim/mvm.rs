@@ -21,13 +21,28 @@
 //! non-negative sum of per-conversion deficits — and therefore
 //! pointwise non-increasing in the ADC resolution, the monotonicity the
 //! contract tests lock down.
+//!
+//! # Two implementations, one contract
+//!
+//! The default datapath is **bit-plane SIMD**: weight bit-slices and
+//! activation bit-slices are packed into `u64` words ([`ChunkPlanes`]),
+//! and every bitline sum becomes a handful of `count_ones()` popcounts
+//! instead of a `rows`-long multiply-accumulate loop. The element-wise
+//! loop survives as [`scalar`] — the executable reference the
+//! equivalence tests replay against every survey design × precision ×
+//! noise corner. Both paths are exact integer arithmetic up to the ADC
+//! transfer, so they are *bit-identical by construction*; the tests
+//! make that a regression lock rather than an argument.
+//!
+//! The packing layout and the identity
+//! `bitline(s, b) = Σ_j 2^j · popcount(wplane_b & aplane_{s·DAC+j})`
+//! are written down in `docs/COST_MODEL.md` §9.
 
 use crate::arch::{ImcFamily, ImcMacro};
-use crate::model::adder_tree;
 use crate::workload::Layer;
 
 use super::metrics::AccuracyRecord;
-use super::tensor;
+use super::tensor::{self, LayerTensors};
 
 /// ADC conversion counters accumulated over a simulation.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -91,67 +106,223 @@ impl AdcTransfer {
     }
 }
 
-/// One macro-resident chunk (`len <= rows`): bit-serial slices over the
-/// family's accumulation datapath.
-///
-/// The AIMC branch has a float twin in `super::noise::noisy_chunk`
-/// (same loop, analog perturbations injected before the conversion);
-/// a change to the datapath here must land there too — the zero-σ
-/// bit-identity test in `noise` sweeps every survey AIMC design to
-/// catch a divergence.
-fn chunk_mvm(
+/// The element-wise reference datapath. This is the loop the hardware
+/// description reads off directly — one multiply-accumulate per resident
+/// weight per slice — kept as the executable specification the
+/// bit-plane path is tested against (`bitplane ≡ scalar` over every
+/// survey design × precision × noise corner). Use the parent module's
+/// functions for anything performance-sensitive.
+pub mod scalar {
+    use super::*;
+    use crate::model::adder_tree;
+
+    /// One macro-resident chunk (`len <= rows`): bit-serial slices over
+    /// the family's accumulation datapath, element by element.
+    fn chunk_mvm(
+        m: &ImcMacro,
+        adc: Option<&AdcTransfer>,
+        w: &[i64],
+        a: &[i64],
+        stats: &mut ConvStats,
+    ) -> i64 {
+        debug_assert_eq!(w.len(), a.len());
+        let n_slices = m.n_slices();
+        let dac = m.dac_res.max(1);
+        let slice_mask = (1i64 << dac) - 1;
+        match adc {
+            // DIMC: digital multiply at the cell, exact adder-tree
+            // accumulation per D2 row-mux group, exact shift-add across
+            // slices and mux steps.
+            None => {
+                let d2 = m.d2().max(1);
+                let mut acc = 0i64;
+                for s in 0..n_slices {
+                    let mut slice_sum = 0i64;
+                    for (wg, ag) in w.chunks(d2).zip(a.chunks(d2)) {
+                        let mut tree = 0i64;
+                        for (&wi, &ai) in wg.iter().zip(ag) {
+                            tree += wi * ((ai >> (s * dac)) & slice_mask);
+                        }
+                        // the signed sum fits the Eq. 9–10 tree width for
+                        // (B_w + DAC_res - 1)-bit products over D2 inputs
+                        let ob = adder_tree::output_bits(d2, m.weight_bits + dac);
+                        debug_assert!(
+                            tree.unsigned_abs() <= 1u64 << (ob.min(62) - 1),
+                            "adder-tree width contract violated"
+                        );
+                        slice_sum += tree;
+                    }
+                    acc += slice_sum << (s * dac);
+                }
+                acc
+            }
+            // AIMC: offset-binary weight bit-slices on B_w bitlines, one
+            // ADC conversion per (slice, bitline), exact shift-add
+            // recombination, exact digital offset removal.
+            Some(adc) => {
+                let bw = m.weight_bits;
+                let offset = 1i64 << (bw - 1);
+                let act_sum: i64 = a.iter().sum();
+                let mut acc = 0i64;
+                for s in 0..n_slices {
+                    for b in 0..bw {
+                        let mut bl = 0i64;
+                        for (&wi, &ai) in w.iter().zip(a) {
+                            let wbit = ((wi + offset) >> b) & 1;
+                            bl += wbit * ((ai >> (s * dac)) & slice_mask);
+                        }
+                        acc += adc.convert(bl, stats) << (b + s * dac);
+                    }
+                }
+                acc - offset * act_sum
+            }
+        }
+    }
+
+    /// [`super::macro_reduce`], element-wise.
+    pub fn macro_reduce(
+        m: &ImcMacro,
+        adc: Option<&AdcTransfer>,
+        weights: &[i64],
+        acts: &[i64],
+        stats: &mut ConvStats,
+    ) -> i64 {
+        debug_assert_eq!(weights.len(), acts.len());
+        let rows = m.rows.max(1);
+        weights
+            .chunks(rows)
+            .zip(acts.chunks(rows))
+            .map(|(wc, ac)| chunk_mvm(m, adc, wc, ac, stats))
+            .sum()
+    }
+
+    /// [`super::layer_accuracy`], element-wise (the reference the
+    /// equivalence tests and the `sim_speedup` bench compare against).
+    pub fn layer_accuracy(layer: &Layer, m: &ImcMacro) -> AccuracyRecord {
+        layer_accuracy_on(m, &tensor::generate(layer, m.precision()))
+    }
+
+    /// [`scalar::layer_accuracy`](layer_accuracy) on pre-generated
+    /// tensors.
+    pub(crate) fn layer_accuracy_on(m: &ImcMacro, t: &LayerTensors) -> AccuracyRecord {
+        let adc = AdcTransfer::for_macro(m);
+        let mut rec = AccuracyRecord::default();
+        let mut stats = ConvStats::default();
+        for w in &t.weights {
+            for x in &t.inputs {
+                let exact: i64 = w.iter().zip(x).map(|(&wi, &xi)| wi * xi).sum();
+                let got = macro_reduce(m, adc.as_ref(), w, x, &mut stats);
+                rec.record_output(exact, got);
+            }
+        }
+        rec.conversions = stats.conversions;
+        rec.clipped = stats.clipped;
+        rec.fill_trials_nominal();
+        rec
+    }
+}
+
+// ---- bit-plane SIMD datapath ---------------------------------------------
+
+/// Bit-planes of one macro-resident chunk: plane `p` packs bit `p` of
+/// every element into `words` little-endian `u64` words (element `i` →
+/// word `i/64`, bit `i%64`). Weights pack with `bias = 2^(B_w-1)`
+/// (AIMC offset-binary) or `bias = 0` (DIMC two's complement — the
+/// wrapping cast keeps the low `B_w` bits); activations pack unsigned
+/// with one plane per DAC-addressable bit (`n_slices · DAC_res`
+/// planes). Values must fit the packed plane count — the tensor
+/// protocol guarantees it, and the scalar reference truncates to the
+/// same bits, so the equivalence lock covers the boundary.
+pub(crate) struct ChunkPlanes {
+    /// Flattened `[n_planes][words]` plane data.
+    planes: Vec<u64>,
+    words: usize,
+    n_planes: u32,
+}
+
+impl ChunkPlanes {
+    pub(crate) fn pack(values: &[i64], bias: i64, n_planes: u32) -> ChunkPlanes {
+        let words = values.len().div_ceil(64);
+        let mut planes = vec![0u64; n_planes as usize * words];
+        for (i, &v) in values.iter().enumerate() {
+            let u = (v + bias) as u64;
+            let word = i / 64;
+            let bit = (i % 64) as u32;
+            for p in 0..n_planes {
+                planes[p as usize * words + word] |= ((u >> p) & 1) << bit;
+            }
+        }
+        ChunkPlanes { planes, words, n_planes }
+    }
+
+    fn plane(&self, p: u32) -> &[u64] {
+        let lo = p as usize * self.words;
+        &self.planes[lo..lo + self.words]
+    }
+}
+
+/// `Σ_i x_i & y_i` popcount across two equal-length plane slices.
+fn popcount_and(x: &[u64], y: &[u64]) -> i64 {
+    x.iter().zip(y).map(|(&a, &b)| i64::from((a & b).count_ones())).sum()
+}
+
+/// One bitline sum of the packed chunk: weight plane `b` against input
+/// slice `s`, i.e. `Σ_i wbit_i(b) · aslice_i(s)` recombined from the
+/// slice's `DAC_res` activation planes —
+/// `Σ_{j<DAC} 2^j · popcount(wplane_b & aplane_{s·DAC+j})`. Exactly the
+/// integer the scalar reference accumulates element-wise.
+pub(crate) fn bitline(w: &ChunkPlanes, a: &ChunkPlanes, b: u32, s: u32, dac: u32) -> i64 {
+    (0..dac)
+        .map(|j| popcount_and(w.plane(b), a.plane(s * dac + j)) << j)
+        .sum()
+}
+
+/// Exact `Σ w·x` of one packed chunk, reconstructed from all planes:
+/// `wbias > 0` reads the weight planes offset-binary (and removes
+/// `wbias · Σx` digitally), `wbias == 0` reads them two's-complement
+/// (the top plane carries coefficient `-2^(B_w-1)`).
+fn chunk_exact(w: &ChunkPlanes, a: &ChunkPlanes, wbias: i64, act_sum: i64) -> i64 {
+    let mut sum = 0i64;
+    for b in 0..w.n_planes {
+        let mut part = 0i64;
+        for j in 0..a.n_planes {
+            part += popcount_and(w.plane(b), a.plane(j)) << j;
+        }
+        if wbias == 0 && b + 1 == w.n_planes {
+            sum -= part << b; // two's-complement sign plane
+        } else {
+            sum += part << b;
+        }
+    }
+    sum - wbias * act_sum
+}
+
+/// One macro-resident chunk on packed planes — the bit-plane twin of
+/// the scalar reference, sharing the identical [`AdcTransfer::convert`]
+/// stream (same `(slice, bitline)` order, same integer inputs), so
+/// [`ConvStats`] and every output bit agree with `scalar`.
+fn chunk_mvm_planes(
     m: &ImcMacro,
     adc: Option<&AdcTransfer>,
-    w: &[i64],
-    a: &[i64],
+    w: &ChunkPlanes,
+    a: &ChunkPlanes,
+    act_sum: i64,
     stats: &mut ConvStats,
 ) -> i64 {
-    debug_assert_eq!(w.len(), a.len());
-    let n_slices = m.n_slices();
-    let dac = m.dac_res.max(1);
-    let slice_mask = (1i64 << dac) - 1;
     match adc {
-        // DIMC: digital multiply at the cell, exact adder-tree
-        // accumulation per D2 row-mux group, exact shift-add across
-        // slices and mux steps.
-        None => {
-            let d2 = m.d2().max(1);
-            let mut acc = 0i64;
-            for s in 0..n_slices {
-                let mut slice_sum = 0i64;
-                for (wg, ag) in w.chunks(d2).zip(a.chunks(d2)) {
-                    let mut tree = 0i64;
-                    for (&wi, &ai) in wg.iter().zip(ag) {
-                        tree += wi * ((ai >> (s * dac)) & slice_mask);
-                    }
-                    // the signed sum fits the Eq. 9–10 tree width for
-                    // (B_w + DAC_res - 1)-bit products over D2 inputs
-                    let ob = adder_tree::output_bits(d2, m.weight_bits + dac);
-                    debug_assert!(
-                        tree.unsigned_abs() <= 1u64 << (ob.min(62) - 1),
-                        "adder-tree width contract violated"
-                    );
-                    slice_sum += tree;
-                }
-                acc += slice_sum << (s * dac);
-            }
-            acc
-        }
-        // AIMC: offset-binary weight bit-slices on B_w bitlines, one
-        // ADC conversion per (slice, bitline), exact shift-add
-        // recombination, exact digital offset removal.
+        // DIMC retires the full dot product exactly (the scalar path's
+        // per-D2-group adder trees recombine without loss), so the
+        // whole-chunk plane reconstruction is the same integer.
+        None => chunk_exact(w, a, 0, act_sum),
         Some(adc) => {
+            let n_slices = m.n_slices();
+            let dac = m.dac_res.max(1);
             let bw = m.weight_bits;
             let offset = 1i64 << (bw - 1);
-            let act_sum: i64 = a.iter().sum();
             let mut acc = 0i64;
             for s in 0..n_slices {
                 for b in 0..bw {
-                    let mut bl = 0i64;
-                    for (&wi, &ai) in w.iter().zip(a) {
-                        let wbit = ((wi + offset) >> b) & 1;
-                        bl += wbit * ((ai >> (s * dac)) & slice_mask);
-                    }
+                    let bl = bitline(w, a, b, s, dac);
                     acc += adc.convert(bl, stats) << (b + s * dac);
                 }
             }
@@ -163,7 +334,8 @@ fn chunk_mvm(
 /// Simulate one full reduction (any length) on one macro: the reduction
 /// folds into chunks of `rows` resident weights; chunk partial sums are
 /// recombined exactly at the recombination width, mirroring the cost
-/// model's tiling.
+/// model's tiling. Bit-plane SIMD; [`scalar::macro_reduce`] is the
+/// element-wise reference.
 pub fn macro_reduce(
     m: &ImcMacro,
     adc: Option<&AdcTransfer>,
@@ -173,18 +345,83 @@ pub fn macro_reduce(
 ) -> i64 {
     debug_assert_eq!(weights.len(), acts.len());
     let rows = m.rows.max(1);
+    let wbias = if adc.is_some() { 1i64 << (m.weight_bits - 1) } else { 0 };
+    let a_planes = m.n_slices() * m.dac_res.max(1);
     weights
         .chunks(rows)
         .zip(acts.chunks(rows))
-        .map(|(wc, ac)| chunk_mvm(m, adc, wc, ac, stats))
+        .map(|(wc, ac)| {
+            let w = ChunkPlanes::pack(wc, wbias, m.weight_bits);
+            let a = ChunkPlanes::pack(ac, 0, a_planes);
+            chunk_mvm_planes(m, adc, &w, &a, ac.iter().sum(), stats)
+        })
         .sum()
+}
+
+/// One layer's tensors packed for a specific macro: per-chunk bit-planes
+/// of every weight and input vector, the per-chunk activation sums
+/// (AIMC offset removal) and the exact reference dot products. Packing
+/// is done once and shared by the nominal pass and every Monte-Carlo
+/// noise trial — the amortization that makes the bit-plane path fast.
+pub(crate) struct PackedLayer {
+    /// Per weight vector (output channel), per `rows`-chunk.
+    pub(crate) weights: Vec<Vec<ChunkPlanes>>,
+    /// Per input vector, per `rows`-chunk, with the chunk's raw
+    /// activation sum.
+    pub(crate) inputs: Vec<Vec<(ChunkPlanes, i64)>>,
+    /// Exact `Σ w·x` per (weight vector, input vector) pair.
+    pub(crate) exact: Vec<Vec<i64>>,
+}
+
+impl PackedLayer {
+    pub(crate) fn new(m: &ImcMacro, t: &LayerTensors) -> PackedLayer {
+        let rows = m.rows.max(1);
+        let offset_binary = AdcTransfer::for_macro(m).is_some();
+        let wbias = if offset_binary { 1i64 << (m.weight_bits - 1) } else { 0 };
+        let a_planes = m.n_slices() * m.dac_res.max(1);
+        let weights: Vec<Vec<ChunkPlanes>> = t
+            .weights
+            .iter()
+            .map(|w| w.chunks(rows).map(|wc| ChunkPlanes::pack(wc, wbias, m.weight_bits)).collect())
+            .collect();
+        let inputs: Vec<Vec<(ChunkPlanes, i64)>> = t
+            .inputs
+            .iter()
+            .map(|x| {
+                x.chunks(rows)
+                    .map(|ac| (ChunkPlanes::pack(ac, 0, a_planes), ac.iter().sum()))
+                    .collect()
+            })
+            .collect();
+        let exact: Vec<Vec<i64>> = weights
+            .iter()
+            .map(|wp| {
+                inputs
+                    .iter()
+                    .map(|xp| {
+                        wp.iter()
+                            .zip(xp)
+                            .map(|(wc, (ac, sum))| chunk_exact(wc, ac, wbias, *sum))
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect();
+        PackedLayer { weights, inputs, exact }
+    }
+
+    /// Number of weight vectors (output channels) packed.
+    pub(crate) fn channels(&self) -> usize {
+        self.weights.len()
+    }
 }
 
 /// Simulate the sampled outputs of one layer on one macro and compare
 /// against the exact integer reference: the per-(design, precision)
 /// quantization-error record the DSE attaches to every layer search.
 /// Pure and deterministic — identical bits for any shard count, thread
-/// count or cache temperature.
+/// count or cache temperature, and bit-identical to
+/// [`scalar::layer_accuracy`] (test-locked).
 pub fn layer_accuracy(layer: &Layer, m: &ImcMacro) -> AccuracyRecord {
     layer_accuracy_on(m, &tensor::generate(layer, m.precision()))
 }
@@ -192,15 +429,24 @@ pub fn layer_accuracy(layer: &Layer, m: &ImcMacro) -> AccuracyRecord {
 /// [`layer_accuracy`] on pre-generated tensors: the noise model draws
 /// the tensors once and shares them between the nominal pass and every
 /// Monte-Carlo trial, instead of regenerating per pass.
-pub(crate) fn layer_accuracy_on(m: &ImcMacro, t: &tensor::LayerTensors) -> AccuracyRecord {
+pub(crate) fn layer_accuracy_on(m: &ImcMacro, t: &LayerTensors) -> AccuracyRecord {
+    layer_accuracy_packed(m, &PackedLayer::new(m, t))
+}
+
+/// [`layer_accuracy`] on pre-packed planes (shared with the noise
+/// model's trial fan-out so the layer packs exactly once per call).
+pub(crate) fn layer_accuracy_packed(m: &ImcMacro, p: &PackedLayer) -> AccuracyRecord {
     let adc = AdcTransfer::for_macro(m);
     let mut rec = AccuracyRecord::default();
     let mut stats = ConvStats::default();
-    for w in &t.weights {
-        for x in &t.inputs {
-            let exact: i64 = w.iter().zip(x).map(|(&wi, &xi)| wi * xi).sum();
-            let got = macro_reduce(m, adc.as_ref(), w, x, &mut stats);
-            rec.record_output(exact, got);
+    for (wi, wp) in p.weights.iter().enumerate() {
+        for (xi, xp) in p.inputs.iter().enumerate() {
+            let got: i64 = wp
+                .iter()
+                .zip(xp)
+                .map(|(wc, (ac, sum))| chunk_mvm_planes(m, adc.as_ref(), wc, ac, *sum, &mut stats))
+                .sum();
+            rec.record_output(p.exact[wi][xi], got);
         }
     }
     rec.conversions = stats.conversions;
@@ -354,5 +600,78 @@ mod tests {
         let re = m.requantized(Precision::new(4, 2)).unwrap();
         let requant = AdcTransfer::for_macro(&re).unwrap();
         assert_eq!(native.shift, requant.shift);
+    }
+
+    // ---- bitplane ≡ scalar equivalence locks -----------------------------
+
+    /// The precision points the sweep grid exposes, plus native.
+    fn precision_variants(m: &ImcMacro) -> Vec<ImcMacro> {
+        let mut variants = vec![m.clone()];
+        for (w, a) in [(2u32, 8u32), (4, 8), (8, 8), (4, 2)] {
+            if let Some(re) = m.requantized(Precision::new(w, a)) {
+                variants.push(re);
+            }
+        }
+        variants
+    }
+
+    #[test]
+    fn bitplane_reduce_matches_scalar_reference_bit_for_bit() {
+        // every survey design (both families, every geometry / slice
+        // width / ADC slack) × every realizable precision point, on a
+        // multi-chunk reduction: outputs AND conversion counters agree
+        for e in crate::db::survey() {
+            for m in precision_variants(&e.to_macro()) {
+                let adc = AdcTransfer::for_macro(&m);
+                let len = m.rows * 2 + 7; // 3 chunks, ragged tail
+                let half_w = 1i64 << (m.weight_bits - 1);
+                let amax = (1i64 << m.act_bits) - 1;
+                let w: Vec<i64> = (0..len).map(|i| (i as i64 * 7 + 3) % (2 * half_w) - half_w).collect();
+                let a: Vec<i64> = (0..len).map(|i| (i as i64 * 11 + 5) % (amax + 1)).collect();
+                let mut st_bp = ConvStats::default();
+                let mut st_sc = ConvStats::default();
+                let got_bp = macro_reduce(&m, adc.as_ref(), &w, &a, &mut st_bp);
+                let got_sc = scalar::macro_reduce(&m, adc.as_ref(), &w, &a, &mut st_sc);
+                assert_eq!(got_bp, got_sc, "{} diverged", m.name);
+                assert_eq!(st_bp, st_sc, "{} conversion stats diverged", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_layer_accuracy_matches_scalar_on_survey_and_precisions() {
+        // full AccuracyRecord equality (signal/noise/max-abs/counters
+        // and the nominal-filled trial slots) for every survey design ×
+        // realizable precision on a multi-chunk layer
+        let l = Layer::dense("fc", 8, 200);
+        let mut checked = 0;
+        for e in crate::db::survey() {
+            for m in precision_variants(&e.to_macro()) {
+                assert_eq!(
+                    layer_accuracy(&l, &m),
+                    scalar::layer_accuracy(&l, &m),
+                    "{} diverged",
+                    m.name
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 20, "survey lost its designs ({checked})");
+    }
+
+    #[test]
+    fn packed_layer_exact_matches_the_integer_dot_product() {
+        for m in [aimc(64, 4, 8), dimc(64)] {
+            let l = Layer::dense("fc", 8, 200);
+            let t = tensor::generate(&l, m.precision());
+            let p = PackedLayer::new(&m, &t);
+            assert_eq!(p.channels(), t.weights.len());
+            for (wi, w) in t.weights.iter().enumerate() {
+                for (xi, x) in t.inputs.iter().enumerate() {
+                    let exact: i64 = w.iter().zip(x).map(|(&a, &b)| a * b).sum();
+                    assert_eq!(p.exact[wi][xi], exact, "{} pair ({wi},{xi})", m.name);
+                }
+            }
+        }
     }
 }

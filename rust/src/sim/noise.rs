@@ -30,6 +30,14 @@
 //! nominal record for any spec), which the integration tests lock down
 //! corner by corner.
 //!
+//! The trial loop runs on the same bit-plane machinery as the nominal
+//! simulator: each bitline sum is a [`mvm::bitline`] popcount over the
+//! layer's [`PackedLayer`] planes (packed once, shared across all
+//! trials), perturbed in float and converted. The element-wise noisy
+//! loop survives as a `#[cfg(test)]` reference that the trial-energy
+//! equivalence test replays across every survey AIMC design ×
+//! precision × corner.
+//!
 //! **Seeding rule.** Trial `t` draws from
 //! `Rng::new(trial_seed(layer, precision, t))` — a pure function of the
 //! layer *shape*, the operand precision and the trial index, mixed into
@@ -42,7 +50,8 @@
 //! bit-minor), then all per-column offsets, then the per-conversion
 //! thermal stream in simulation order. Changing any of this changes
 //! cached numbers: it is a `SWEEP_CACHE_VERSION` bump (v4 is the first
-//! schema carrying trial statistics).
+//! schema carrying trial statistics; v5 stores them σ-keyed next to a
+//! noise-erased search record — see `sweep::persist`).
 
 use crate::arch::{ImcFamily, ImcMacro, Precision};
 use crate::util::pool::{default_threads, parallel_map_with};
@@ -50,8 +59,8 @@ use crate::util::prng::Rng;
 use crate::workload::Layer;
 
 use super::metrics::{AccuracyRecord, NOISE_TRIALS};
-use super::mvm::{self, AdcTransfer};
-use super::tensor::{self, LayerTensors};
+use super::mvm::{self, AdcTransfer, PackedLayer};
+use super::tensor;
 
 /// Boltzmann kT at 300 K expressed in fF·V² (4.1419e−21 J): with the
 /// column capacitance in fF, `kT/C` is directly a voltage-noise
@@ -144,8 +153,8 @@ impl NoiseSpec {
         self.params() == NoiseParams::ZERO
     }
 
-    /// Bit-pattern fingerprint of the resolved σs — the cache-key
-    /// field ([`crate::sweep::CostCache`]): specs with identical σs
+    /// Bit-pattern fingerprint of the resolved σs — the trial-cache
+    /// key field ([`crate::sweep::CostCache`]): specs with identical σs
     /// alias deliberately (they produce identical records).
     pub fn fingerprint(&self) -> [u64; 3] {
         let p = self.params();
@@ -305,38 +314,31 @@ fn convert_analog(adc: &AdcTransfer, v: f64) -> i64 {
     code << adc.shift
 }
 
-/// One noisy macro-resident chunk: the AIMC offset-binary bit-slice
-/// loop of [`mvm`], with the three analog sources applied to each
-/// bitline sum before its conversion. Recombination and digital offset
-/// removal stay exact.
-///
-/// This deliberately mirrors `mvm::chunk_mvm`'s AIMC branch statement
-/// for statement (the nominal path stays hook-free and integer-only);
-/// any change to that datapath must land here too — the zero-σ
-/// bit-identity test below sweeps every survey AIMC design to catch a
-/// divergence.
-fn noisy_chunk(
+/// One noisy macro-resident chunk on packed planes: the AIMC
+/// offset-binary bit-slice loop of [`mvm`], each bitline a
+/// [`mvm::bitline`] popcount, with the three analog sources applied to
+/// the sum before its conversion. Recombination and digital offset
+/// removal stay exact. Same `(slice, bitline)` order as the nominal
+/// path and the scalar reference, so the thermal rng stream is
+/// consumed identically — the zero-σ and scalar-equivalence tests
+/// below lock both couplings.
+fn noisy_chunk_planes(
     m: &ImcMacro,
     adc: &AdcTransfer,
-    w: &[i64],
-    a: &[i64],
+    w: &mvm::ChunkPlanes,
+    a: &mvm::ChunkPlanes,
+    act_sum: i64,
     channel: usize,
     field: &mut NoiseField,
 ) -> i64 {
     let n_slices = m.n_slices();
     let dac = m.dac_res.max(1);
-    let slice_mask = (1i64 << dac) - 1;
     let bw = m.weight_bits;
     let offset = 1i64 << (bw - 1);
-    let act_sum: i64 = a.iter().sum();
     let mut acc = 0i64;
     for s in 0..n_slices {
         for b in 0..bw {
-            let mut bl = 0i64;
-            for (&wi, &ai) in w.iter().zip(a) {
-                let wbit = ((wi + offset) >> b) & 1;
-                bl += wbit * ((ai >> (s * dac)) & slice_mask);
-            }
+            let bl = mvm::bitline(w, a, b, s, dac);
             let v =
                 bl as f64 * field.gain(channel, b) + field.thermal() + field.offset(channel, b);
             acc += convert_analog(adc, v) << (b + s * dac);
@@ -346,31 +348,74 @@ fn noisy_chunk(
 }
 
 /// Total output-error energy (Σ err² over the sampled outputs) of one
-/// Monte-Carlo trial on one AIMC macro.
+/// Monte-Carlo trial on one AIMC macro, on pre-packed planes.
 fn trial_noise_energy(
     layer: &Layer,
     m: &ImcMacro,
     adc: &AdcTransfer,
-    t: &LayerTensors,
+    packed: &PackedLayer,
     p: &NoiseParams,
     trial: u32,
 ) -> f64 {
-    let rows = m.rows.max(1);
-    let mut field = NoiseField::new(layer, m, adc, t.weights.len(), p, trial);
+    let mut field = NoiseField::new(layer, m, adc, packed.channels(), p, trial);
     let mut total = 0.0;
-    for (channel, w) in t.weights.iter().enumerate() {
-        for x in &t.inputs {
-            let exact: i64 = w.iter().zip(x).map(|(&wi, &xi)| wi * xi).sum();
-            let got: i64 = w
-                .chunks(rows)
-                .zip(x.chunks(rows))
-                .map(|(wc, ac)| noisy_chunk(m, adc, wc, ac, channel, &mut field))
+    for (channel, wp) in packed.weights.iter().enumerate() {
+        for (xi, xp) in packed.inputs.iter().enumerate() {
+            let got: i64 = wp
+                .iter()
+                .zip(xp)
+                .map(|(wc, (ac, sum))| noisy_chunk_planes(m, adc, wc, ac, *sum, channel, &mut field))
                 .sum();
-            let err = (got - exact) as f64;
+            let err = (got - packed.exact[channel][xi]) as f64;
             total += err * err;
         }
     }
     total
+}
+
+/// All [`NOISE_TRIALS`] trial energies of one (layer, macro, σ) point,
+/// fanned out over `threads` workers (each trial is internally serial
+/// with its own seeded stream — bit-identical for any worker count).
+fn trial_energies_on(
+    layer: &Layer,
+    m: &ImcMacro,
+    adc: &AdcTransfer,
+    packed: &PackedLayer,
+    p: &NoiseParams,
+    threads: usize,
+) -> [f64; NOISE_TRIALS] {
+    let trials: Vec<u32> = (0..NOISE_TRIALS as u32).collect();
+    let energies = parallel_map_with(&trials, threads, |&k| {
+        trial_noise_energy(layer, m, adc, packed, p, k)
+    });
+    let mut out = [0.0; NOISE_TRIALS];
+    out.copy_from_slice(&energies);
+    out
+}
+
+/// Just the per-σ Monte-Carlo trial energies of one (layer, macro,
+/// spec) point — the σ-dependent remainder of
+/// [`layer_accuracy_noisy_with`], computed without re-running the
+/// nominal search path. `None` when the spec has no effect (all-zero
+/// σs, or a DIMC macro with no analog node): the caller keeps the
+/// nominal record's uniform trial slots. This is what the sweep cache
+/// recomputes per extra noise corner after its single noise-erased
+/// mapping search ([`crate::sweep::CostCache::get_or_compute`]) — the
+/// spliced record is bit-identical to the full noisy path because that
+/// path fills `trial_noise` with exactly these energies.
+pub(crate) fn trial_energies(
+    layer: &Layer,
+    m: &ImcMacro,
+    spec: NoiseSpec,
+    threads: usize,
+) -> Option<[f64; NOISE_TRIALS]> {
+    if spec.is_off() || m.family == ImcFamily::Dimc {
+        return None;
+    }
+    let adc = AdcTransfer::for_macro(m)?;
+    let t = tensor::generate(layer, m.precision());
+    let packed = PackedLayer::new(m, &t);
+    Some(trial_energies_on(layer, m, &adc, &packed, &spec.params(), threads))
 }
 
 /// [`mvm::layer_accuracy`] plus the analog noise model: the nominal
@@ -393,6 +438,9 @@ pub fn layer_accuracy_noisy(layer: &Layer, m: &ImcMacro, spec: NoiseSpec) -> Acc
 /// cores; nesting another 8-way spawn per layer would only add
 /// contention) — while direct callers let the default parallelize.
 /// Results are bit-identical for every worker count.
+///
+/// The layer's tensors are generated and bit-plane-packed exactly once,
+/// shared by the nominal pass and every trial.
 pub fn layer_accuracy_noisy_with(
     layer: &Layer,
     m: &ImcMacro,
@@ -405,17 +453,12 @@ pub fn layer_accuracy_noisy_with(
     let Some(adc) = AdcTransfer::for_macro(m) else {
         return mvm::layer_accuracy(layer, m);
     };
-    // one tensor draw shared by the nominal pass and every trial
+    // one tensor draw + one packing shared by the nominal pass and
+    // every trial
     let t = tensor::generate(layer, m.precision());
-    let mut rec = mvm::layer_accuracy_on(m, &t);
-    let p = spec.params();
-    let trials: Vec<u32> = (0..NOISE_TRIALS as u32).collect();
-    let energies = parallel_map_with(&trials, threads, |&k| {
-        trial_noise_energy(layer, m, &adc, &t, &p, k)
-    });
-    for (slot, e) in rec.trial_noise.iter_mut().zip(energies) {
-        *slot = e;
-    }
+    let packed = PackedLayer::new(m, &t);
+    let mut rec = mvm::layer_accuracy_packed(m, &packed);
+    rec.trial_noise = trial_energies_on(layer, m, &adc, &packed, &spec.params(), threads);
     rec
 }
 
@@ -430,6 +473,68 @@ mod tests {
 
     fn dimc() -> ImcMacro {
         ImcMacro::new("d", ImcFamily::Dimc, 256, 256, 4, 4, 1, 0, 0.8, 22.0)
+    }
+
+    /// The element-wise noisy chunk — the executable reference
+    /// [`noisy_chunk_planes`] is locked against. Mirrors
+    /// `mvm::scalar`'s AIMC branch statement for statement with the
+    /// analog perturbation applied to each bitline sum.
+    fn noisy_chunk_scalar(
+        m: &ImcMacro,
+        adc: &AdcTransfer,
+        w: &[i64],
+        a: &[i64],
+        channel: usize,
+        field: &mut NoiseField,
+    ) -> i64 {
+        let n_slices = m.n_slices();
+        let dac = m.dac_res.max(1);
+        let slice_mask = (1i64 << dac) - 1;
+        let bw = m.weight_bits;
+        let offset = 1i64 << (bw - 1);
+        let act_sum: i64 = a.iter().sum();
+        let mut acc = 0i64;
+        for s in 0..n_slices {
+            for b in 0..bw {
+                let mut bl = 0i64;
+                for (&wi, &ai) in w.iter().zip(a) {
+                    let wbit = ((wi + offset) >> b) & 1;
+                    bl += wbit * ((ai >> (s * dac)) & slice_mask);
+                }
+                let v = bl as f64 * field.gain(channel, b)
+                    + field.thermal()
+                    + field.offset(channel, b);
+                acc += convert_analog(adc, v) << (b + s * dac);
+            }
+        }
+        acc - offset * act_sum
+    }
+
+    /// [`trial_noise_energy`] on raw tensors through the scalar chunk.
+    fn trial_noise_energy_scalar(
+        layer: &Layer,
+        m: &ImcMacro,
+        adc: &AdcTransfer,
+        t: &tensor::LayerTensors,
+        p: &NoiseParams,
+        trial: u32,
+    ) -> f64 {
+        let rows = m.rows.max(1);
+        let mut field = NoiseField::new(layer, m, adc, t.weights.len(), p, trial);
+        let mut total = 0.0;
+        for (channel, w) in t.weights.iter().enumerate() {
+            for x in &t.inputs {
+                let exact: i64 = w.iter().zip(x).map(|(&wi, &xi)| wi * xi).sum();
+                let got: i64 = w
+                    .chunks(rows)
+                    .zip(x.chunks(rows))
+                    .map(|(wc, ac)| noisy_chunk_scalar(m, adc, wc, ac, channel, &mut field))
+                    .sum();
+                let err = (got - exact) as f64;
+                total += err * err;
+            }
+        }
+        total
     }
 
     #[test]
@@ -479,6 +584,9 @@ mod tests {
         assert_eq!(nominal, off);
         assert_eq!(off.trial_noise, [off.noise; NOISE_TRIALS]);
         assert_eq!(off.sqnr_std_db(), 0.0);
+        // and the trial-only entry point agrees the spec is a no-op
+        assert!(trial_energies(&l, &m, NoiseSpec::Off, 1).is_none());
+        assert!(trial_energies(&l, &dimc(), NoiseSpec::Worst, 1).is_none());
     }
 
     #[test]
@@ -486,10 +594,10 @@ mod tests {
         // The float analog path with all σ = 0 must equal the nominal
         // integer ADC transfer exactly — the contract that makes the
         // zero-σ custom spec and Off indistinguishable, and the lock
-        // coupling `noisy_chunk` to its `mvm::chunk_mvm` twin: a
-        // datapath change that lands in only one of them fails here.
-        // Swept over every survey AIMC design (all slice widths, ADC
-        // slacks and geometries) plus a multi-chunk reduction.
+        // coupling `noisy_chunk_planes` to its `mvm` twin: a datapath
+        // change that lands in only one of them fails here. Swept over
+        // every survey AIMC design (all slice widths, ADC slacks and
+        // geometries) plus a multi-chunk reduction.
         let mut macros = vec![
             aimc(),
             ImcMacro::new("b", ImcFamily::Aimc, 64, 256, 4, 8, 4, 6, 0.8, 28.0),
@@ -505,11 +613,72 @@ mod tests {
             let l = Layer::dense("fc", 8, 200); // 200 > rows: multi-chunk
             let adc = AdcTransfer::for_macro(&m).unwrap();
             let t = tensor::generate(&l, m.precision());
+            let packed = PackedLayer::new(&m, &t);
             let nominal = layer_accuracy(&l, &m);
             for trial in 0..2 {
-                let e = trial_noise_energy(&l, &m, &adc, &t, &NoiseParams::ZERO, trial);
+                let e = trial_noise_energy(&l, &m, &adc, &packed, &NoiseParams::ZERO, trial);
                 assert_eq!(e.to_bits(), nominal.noise.to_bits(), "{}", m.name);
             }
+        }
+    }
+
+    #[test]
+    fn bitplane_trial_energies_match_the_scalar_reference_bit_for_bit() {
+        // the packed trial loop consumes the same rng stream and
+        // produces the same perturbed bitline values as the retained
+        // element-wise reference, on every survey AIMC design ×
+        // precision × (non-zero) corner
+        let l = Layer::dense("fc", 8, 200);
+        let corners = [
+            NoiseSpec::Typical,
+            NoiseSpec::Worst,
+            NoiseSpec::Custom(NoiseParams {
+                a_cap: 0.05,
+                t_factor: 2.0,
+                offset_lsb: 0.5,
+            }),
+        ];
+        let mut checked = 0;
+        for e in crate::db::survey() {
+            if e.family != ImcFamily::Aimc {
+                continue;
+            }
+            let base = e.to_macro();
+            let mut variants = vec![base.clone()];
+            for (wb, ab) in [(2u32, 8u32), (4, 8), (8, 8)] {
+                if let Some(re) = base.requantized(Precision::new(wb, ab)) {
+                    variants.push(re);
+                }
+            }
+            for m in variants {
+                let adc = AdcTransfer::for_macro(&m).unwrap();
+                let t = tensor::generate(&l, m.precision());
+                let packed = PackedLayer::new(&m, &t);
+                for spec in corners {
+                    let p = spec.params();
+                    for trial in [0u32, 3] {
+                        let bp = trial_noise_energy(&l, &m, &adc, &packed, &p, trial);
+                        let sc = trial_noise_energy_scalar(&l, &m, &adc, &t, &p, trial);
+                        assert_eq!(bp.to_bits(), sc.to_bits(), "{} @ {spec}", m.name);
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 50, "survey lost its AIMC entries ({checked})");
+    }
+
+    #[test]
+    fn trial_energies_slot_into_the_full_noisy_record() {
+        // the cache's splice path (nominal search record + per-σ
+        // trial_energies) must reproduce layer_accuracy_noisy exactly
+        let l = Layer::dense("fc", 32, 128);
+        let m = aimc();
+        for spec in [NoiseSpec::Typical, NoiseSpec::Worst] {
+            let full = layer_accuracy_noisy_with(&l, &m, spec, 1);
+            let mut spliced = layer_accuracy(&l, &m);
+            spliced.trial_noise = trial_energies(&l, &m, spec, 1).unwrap();
+            assert_eq!(full, spliced, "splice diverged at {spec}");
         }
     }
 

@@ -1,13 +1,36 @@
-//! Memoized cost-model cache for grid sweeps.
+//! Memoized cost-model cache for grid sweeps, split along the noise
+//! axis.
 //!
 //! The full survey × tinyMLPerf grid evaluates the same (macro
 //! geometry, layer shape) cost points over and over: networks repeat
 //! layer shapes internally (DS-CNN's four identical dw/pw stages, the
-//! autoencoder's 128×128 stack), and the three objectives share one
-//! mapping-space pass. The cache keys on everything that determines a
-//! [`LayerSearch`] — macro geometry, memory hierarchy, macro count,
-//! layer *shape* (names excluded), sparsity and policy restriction —
-//! and stores the per-objective optima, so a hit answers any objective.
+//! autoencoder's 128×128 stack), the three objectives share one
+//! mapping-space pass, and — the expensive repetition this module's
+//! split removes — every analog-noise corner asks for the *same*
+//! mapping search and nominal simulation, differing only in eight
+//! Monte-Carlo trial energies.
+//!
+//! The cache therefore keeps two maps under two key types:
+//!
+//! * [`SearchKey`] → [`LayerSearch`] — everything that determines the
+//!   mapping search and the nominal (quantization-only) simulation:
+//!   macro geometry, memory hierarchy, macro count, layer *shape*
+//!   (names excluded), sparsity and policy restriction. **No σ
+//!   fields**: the search is noise-invariant (the simulator never
+//!   feeds the candidate scoring, and the nominal record ignores σ by
+//!   definition), so one entry serves every corner.
+//! * [`TrialKey`] (= `SearchKey` + the σ fingerprint) →
+//!   `[f64; NOISE_TRIALS]` — the per-corner Monte-Carlo trial
+//!   energies, the *only* σ-dependent output. They are recomputed per
+//!   corner by [`crate::sim::noise::trial_energies`] and spliced into
+//!   the cached search via [`LayerSearch::with_trial_noise`].
+//!
+//! An M-corner sweep of one (design, layer, precision, sparsity) point
+//! thus runs exactly **one** mapping search plus M−1 cheap trial
+//! simulations, instead of M full searches. The spliced record is
+//! bit-identical to a direct noisy search (test-locked): the direct
+//! path also computes the nominal record first and then overwrites the
+//! trial slots with the same energies.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,14 +38,16 @@ use std::sync::Mutex;
 
 use crate::arch::{ImcFamily, ImcSystem};
 use crate::dse::{
-    search_layer_all_seeded_noisy, DseOptions, LayerEvaluator, LayerResult, LayerSearch,
+    search_layer_all_seeded, DseOptions, LayerEvaluator, LayerResult, LayerSearch,
 };
 use crate::mapping::{SpatialMapping, TemporalPolicy};
 use crate::model::TechParams;
-use crate::sim::NoiseSpec;
+use crate::sim::{NoiseSpec, NOISE_TRIALS};
 use crate::workload::{Layer, LayerType};
 
-/// Everything that determines the outcome of a layer mapping search.
+/// Everything that determines the outcome of a layer mapping search
+/// and its nominal simulation — deliberately *excluding* the analog
+/// noise σs, which only affect the trial energies ([`TrialKey`]).
 /// Fields are `pub(crate)` so the on-disk cache (`super::persist`) can
 /// serialize and reassemble keys without widening the public API.
 ///
@@ -34,8 +59,19 @@ use crate::workload::{Layer, LayerType};
 /// version of the persistent cache ([`super::persist`]): the rules that
 /// *produce* those fields are part of the cost model's meaning, so
 /// changing them bumps `SWEEP_CACHE_VERSION`.
+///
+/// **No-aliasing argument for the noise erasure.** Two settings that
+/// agree on every `SearchKey` field but differ in σs run the identical
+/// candidate stream (the search never consults the simulator), score
+/// it with the identical cost model, and simulate the identical
+/// nominal datapath — every field of the resulting [`LayerSearch`]
+/// except `accuracy.trial_noise` is a pure function of this key. The
+/// σ-dependent remainder lives under [`TrialKey`], which extends this
+/// key with [`NoiseSpec::fingerprint`]; specs that resolve to
+/// identical σs (e.g. `Off` and an all-zero custom spec) alias
+/// deliberately — they produce bit-identical records.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct CostKey {
+pub struct SearchKey {
     // --- macro geometry (paper Table I) ---
     pub(crate) family: ImcFamily,
     pub(crate) rows: usize,
@@ -62,23 +98,13 @@ pub struct CostKey {
     // --- search options ---
     pub(crate) sparsity_bits: u64,
     pub(crate) policy: Option<TemporalPolicy>,
-    /// Bit patterns of the resolved analog-noise σs
-    /// ([`NoiseSpec::fingerprint`]): the accuracy record's trial
-    /// statistics depend on them, so settings with different σs must
-    /// never alias. Specs that resolve to identical σs (e.g. `Off` and
-    /// an all-zero custom spec) alias deliberately — they produce
-    /// bit-identical records.
-    ///
-    /// Known tradeoff: keying the whole entry on the σs re-runs the
-    /// (noise-invariant) mapping search and nominal simulation once
-    /// per corner. The cross-corner seed carryover makes the repeat
-    /// search prune from the first candidate, but a split cache
-    /// (noise-erased key for search + nominal record, σ-keyed only for
-    /// the trial energies) would avoid it entirely — an open item.
-    pub(crate) noise_bits: [u64; 3],
 }
 
-impl CostKey {
+/// Bit pattern no legal sparsity produces (a quiet NaN): the sentinel
+/// that erases the sparsity field of a seed-index key.
+const SEED_SPARSITY_SENTINEL: u64 = u64::MAX;
+
+impl SearchKey {
     /// Fingerprint one (layer, system, tech, options) search setting.
     pub fn new(
         layer: &Layer,
@@ -86,7 +112,6 @@ impl CostKey {
         tech: &TechParams,
         input_sparsity: f64,
         policy: Option<TemporalPolicy>,
-        noise: NoiseSpec,
     ) -> Self {
         let m = &sys.imc;
         let hierarchy = sys
@@ -109,7 +134,7 @@ impl CostKey {
                 )
             })
             .collect();
-        CostKey {
+        SearchKey {
             family: m.family,
             rows: m.rows,
             cols: m.cols,
@@ -136,35 +161,68 @@ impl CostKey {
             ],
             sparsity_bits: input_sparsity.to_bits(),
             policy,
-            noise_bits: noise.fingerprint(),
         }
     }
+
+    /// This key with its sparsity field erased — the seed index's
+    /// shape/system/policy fingerprint. Winning mappings are
+    /// sparsity-robust warm starts (and noise-invariant by the key's
+    /// construction), so a search at one sparsity warm-starts every
+    /// other.
+    pub(crate) fn seed_key(&self) -> SearchKey {
+        let mut seed_key = self.clone();
+        seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
+        seed_key
+    }
+}
+
+/// A [`SearchKey`] extended with the resolved analog-noise σs: the key
+/// of the per-corner Monte-Carlo trial energies — the only σ-dependent
+/// output of a layer evaluation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TrialKey {
+    pub(crate) search: SearchKey,
+    /// Bit patterns of the resolved σs ([`NoiseSpec::fingerprint`]):
+    /// settings with different σs must never alias; specs resolving to
+    /// identical σs alias deliberately.
+    pub(crate) noise_bits: [u64; 3],
 }
 
 /// Hit/miss and mapping-search counters of a [`CostCache`] (or of
 /// several merged shards).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups answered from the cache.
+    /// Lookups answered entirely from the cache (search entry hit, and
+    /// — where the corner needs them — trial energies hit too).
     pub hits: u64,
-    /// Lookups that ran a search.
-    pub misses: u64,
-    /// Entries currently held.
+    /// Lookups whose search entry hit but whose σ corner was new: the
+    /// split's payoff — the mapping search was reused and only the
+    /// trial energies were simulated.
+    pub cross_corner: u64,
+    /// Lookups that ran a full mapping search.
+    pub searches: u64,
+    /// Per-corner trial simulations run (each is one
+    /// [`crate::sim::noise::trial_energies`] call — a few MVM passes,
+    /// orders of magnitude cheaper than a search).
+    pub trial_sims: u64,
+    /// Search entries currently held.
     pub entries: usize,
-    /// Mapping candidates fully costed across all cache misses.
+    /// Per-corner trial records currently held.
+    pub trial_entries: usize,
+    /// Mapping candidates fully costed across all searches run.
     pub evaluated: u64,
     /// Mapping candidates discarded by the admissible bound across all
-    /// cache misses (no full evaluation).
+    /// searches run (no full evaluation).
     pub pruned: u64,
 }
 
 impl CacheStats {
-    /// Total lookups (hits + misses).
+    /// Total lookups (hits + cross-corner reuses + searches).
     pub fn lookups(&self) -> u64 {
-        self.hits + self.misses
+        self.hits + self.cross_corner + self.searches
     }
 
-    /// Fraction of lookups answered from the cache.
+    /// Fraction of lookups answered entirely from the cache.
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {
             0.0
@@ -173,7 +231,20 @@ impl CacheStats {
         }
     }
 
-    /// Candidates considered across all misses (full + pruned).
+    /// Fraction of search-entry uses that were cross-corner reuses —
+    /// of the lookups that could *not* be answered entirely from the
+    /// cache, how many still skipped the mapping search because
+    /// another σ corner had already run it.
+    pub fn cross_corner_rate(&self) -> f64 {
+        let denom = self.cross_corner + self.searches;
+        if denom == 0 {
+            0.0
+        } else {
+            self.cross_corner as f64 / denom as f64
+        }
+    }
+
+    /// Candidates considered across all searches (full + pruned).
     pub fn candidates(&self) -> u64 {
         self.evaluated + self.pruned
     }
@@ -187,72 +258,79 @@ impl CacheStats {
         }
     }
 
-    /// Accumulate another shard's counters. `entries` becomes the total
-    /// held across the (independent) shard caches — shards may cache the
-    /// same key, so this is an upper bound on distinct keys.
+    /// Accumulate another shard's counters. `entries`/`trial_entries`
+    /// become the totals held across the (independent) shard caches —
+    /// shards may cache the same key, so these are upper bounds on
+    /// distinct keys.
     pub fn merge(&mut self, other: &CacheStats) {
         self.hits += other.hits;
-        self.misses += other.misses;
+        self.cross_corner += other.cross_corner;
+        self.searches += other.searches;
+        self.trial_sims += other.trial_sims;
         self.entries += other.entries;
+        self.trial_entries += other.trial_entries;
         self.evaluated += other.evaluated;
         self.pruned += other.pruned;
     }
 
     /// Counters accumulated since an earlier snapshot of the *same*
-    /// cache (`entries` stays the current total). Lets a long-lived,
-    /// possibly disk-warmed cache report per-run statistics.
+    /// cache (`entries`/`trial_entries` stay the current totals). Lets
+    /// a long-lived, possibly disk-warmed cache report per-run
+    /// statistics.
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits - earlier.hits,
-            misses: self.misses - earlier.misses,
+            cross_corner: self.cross_corner - earlier.cross_corner,
+            searches: self.searches - earlier.searches,
+            trial_sims: self.trial_sims - earlier.trial_sims,
             entries: self.entries,
+            trial_entries: self.trial_entries,
             evaluated: self.evaluated - earlier.evaluated,
             pruned: self.pruned - earlier.pruned,
         }
     }
 }
 
-/// Thread-safe memoized layer-search cache. Plugs into network search as
-/// a [`LayerEvaluator`]. Misses are computed outside the lock, so
+/// Thread-safe memoized layer-search cache, split along the noise axis
+/// (see the module docs). Plugs into network search as a
+/// [`LayerEvaluator`]. Misses are computed outside the lock, so
 /// concurrent first lookups of the same key may both evaluate (both
-/// count as misses; the first insert wins).
+/// count; the first insert wins).
 ///
-/// **Cross-layer bound carryover.** Beside the exact-result map, the
+/// **Contract of [`CostCache::get_or_compute`].** The returned
+/// [`LayerSearch`] is bit-identical to
+/// `crate::dse::search_layer_all_noisy(layer, sys, tech, input_sparsity,
+/// policy, noise)` for every input, regardless of cache temperature,
+/// lookup order, or which σ corner populated the search entry. The
+/// noise spec enters *only* the trial-energy lookup: it never
+/// influences which mapping search runs, and two specs with equal
+/// [`NoiseSpec::fingerprint`]s share one trial record. σ corners that
+/// provably have no trial statistics — every DIMC design, and any spec
+/// whose σs are all zero — skip the trial map entirely and return the
+/// nominal record.
+///
+/// **Cross-layer bound carryover.** Beside the two result maps, the
 /// cache keeps the winning (spatial, policy) candidates of every search
-/// indexed by the key *with the sparsity and noise fields erased*
-/// (winning mappings are noise-invariant — the simulator never feeds
-/// the search). A miss whose shape/system/policy fingerprint was
-/// searched before at another sparsity or noise corner warm-starts
-/// [`search_layer_all_seeded_noisy`] with those candidates: pruning
-/// bites from the first stream element, the optima stay bit-identical
-/// to the unpruned reference (the seeded search's guarantee), only the
-/// evaluated/pruned *statistics* may depend on which setting happened
-/// to be searched first.
+/// indexed by [`SearchKey::seed_key`] (the key with its sparsity field
+/// erased; the noise fields are gone from the key by design). A search
+/// whose shape/system/policy fingerprint was searched before at another
+/// sparsity warm-starts [`search_layer_all_seeded`] with those
+/// candidates: pruning bites from the first stream element, the optima
+/// stay bit-identical to the unpruned reference (the seeded search's
+/// guarantee), only the evaluated/pruned *statistics* may depend on
+/// which setting happened to be searched first.
 #[derive(Default)]
 pub struct CostCache {
-    map: Mutex<HashMap<CostKey, LayerSearch>>,
+    searches: Mutex<HashMap<SearchKey, LayerSearch>>,
+    trials: Mutex<HashMap<TrialKey, [f64; NOISE_TRIALS]>>,
     /// Winning mappings per sparsity-erased key (the seed index).
-    seeds: Mutex<HashMap<CostKey, Vec<(SpatialMapping, TemporalPolicy)>>>,
+    seeds: Mutex<HashMap<SearchKey, Vec<(SpatialMapping, TemporalPolicy)>>>,
     hits: AtomicU64,
-    misses: AtomicU64,
+    cross_corner: AtomicU64,
+    searches_run: AtomicU64,
+    trial_sims: AtomicU64,
     evaluated: AtomicU64,
     pruned: AtomicU64,
-}
-
-/// Bit pattern no legal sparsity or noise σ produces (a quiet NaN —
-/// `NoiseParams::validate` rejects non-finite σs): the sentinel that
-/// erases the sparsity and noise fields of a seed-index key. Winning
-/// mappings are noise-invariant too (the simulator never feeds the
-/// search), so a search at one noise corner warm-starts every other.
-const SEED_SPARSITY_SENTINEL: u64 = u64::MAX;
-
-/// Erase the sparsity and noise fields of a key (the seed index's
-/// shape/system/policy fingerprint).
-fn seed_key_of(key: &CostKey) -> CostKey {
-    let mut seed_key = key.clone();
-    seed_key.sparsity_bits = SEED_SPARSITY_SENTINEL;
-    seed_key.noise_bits = [SEED_SPARSITY_SENTINEL; 3];
-    seed_key
 }
 
 impl CostCache {
@@ -265,16 +343,22 @@ impl CostCache {
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().unwrap().len(),
+            cross_corner: self.cross_corner.load(Ordering::Relaxed),
+            searches: self.searches_run.load(Ordering::Relaxed),
+            trial_sims: self.trial_sims.load(Ordering::Relaxed),
+            entries: self.searches.lock().unwrap().len(),
+            trial_entries: self.trials.lock().unwrap().len(),
             evaluated: self.evaluated.load(Ordering::Relaxed),
             pruned: self.pruned.load(Ordering::Relaxed),
         }
     }
 
-    /// Memoized [`crate::dse::search_layer_all_noisy`], warm-started
-    /// across identically-shaped entries (see the type docs).
-    pub fn search(
+    /// Memoized [`crate::dse::search_layer_all_noisy`]: the search
+    /// coordinates select (or run) one noise-erased mapping search; the
+    /// noise spec separately selects (or simulates) the σ corner's
+    /// trial energies, spliced in via [`LayerSearch::with_trial_noise`].
+    /// See the type docs for the full contract.
+    pub fn get_or_compute(
         &self,
         layer: &Layer,
         sys: &ImcSystem,
@@ -283,63 +367,103 @@ impl CostCache {
         policy: Option<TemporalPolicy>,
         noise: NoiseSpec,
     ) -> LayerSearch {
-        let key = CostKey::new(layer, sys, tech, input_sparsity, policy, noise);
-        if let Some(hit) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
+        let key = SearchKey::new(layer, sys, tech, input_sparsity, policy);
+        // DIMC has no analog node and zero-σ specs perturb nothing:
+        // their records carry the nominal trial slots, so the search
+        // entry alone answers the lookup
+        let needs_trials = !noise.is_off() && sys.imc.family == ImcFamily::Aimc;
+        let cached = self.searches.lock().unwrap().get(&key).cloned();
+        let search_hit = cached.is_some();
+        let search = match cached {
+            Some(hit) => hit,
+            None => {
+                self.searches_run.fetch_add(1, Ordering::Relaxed);
+                let seed_key = key.seed_key();
+                let seeds = self
+                    .seeds
+                    .lock()
+                    .unwrap()
+                    .get(&seed_key)
+                    .cloned()
+                    .unwrap_or_default();
+                let search =
+                    search_layer_all_seeded(layer, sys, tech, input_sparsity, policy, &seeds);
+                self.evaluated.fetch_add(search.evaluated as u64, Ordering::Relaxed);
+                self.pruned.fetch_add(search.pruned as u64, Ordering::Relaxed);
+                self.seeds
+                    .lock()
+                    .unwrap()
+                    .insert(seed_key, search.seed_mappings());
+                self.searches
+                    .lock()
+                    .unwrap()
+                    .entry(key.clone())
+                    .or_insert(search)
+                    .clone()
+            }
+        };
+        if !needs_trials {
+            if search_hit {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return search;
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let seed_key = seed_key_of(&key);
-        let seeds = self
-            .seeds
-            .lock()
-            .unwrap()
-            .get(&seed_key)
-            .cloned()
-            .unwrap_or_default();
-        let search = search_layer_all_seeded_noisy(
-            layer,
-            sys,
-            tech,
-            input_sparsity,
-            policy,
-            noise,
-            &seeds,
-        );
-        self.evaluated.fetch_add(search.evaluated as u64, Ordering::Relaxed);
-        self.pruned.fetch_add(search.pruned as u64, Ordering::Relaxed);
-        self.seeds
-            .lock()
-            .unwrap()
-            .insert(seed_key, search.seed_mappings());
-        self.map
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert(search)
-            .clone()
+        let tkey = TrialKey {
+            search: key,
+            noise_bits: noise.fingerprint(),
+        };
+        if let Some(trials) = self.trials.lock().unwrap().get(&tkey).copied() {
+            if search_hit {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return search.with_trial_noise(trials);
+        }
+        if search_hit {
+            self.cross_corner.fetch_add(1, Ordering::Relaxed);
+        }
+        self.trial_sims.fetch_add(1, Ordering::Relaxed);
+        let trials = crate::sim::noise::trial_energies(layer, &sys.imc, noise, 1)
+            // unreachable given needs_trials, but a missing transfer
+            // must never invent statistics: keep the nominal slots
+            .unwrap_or(search.accuracy().trial_noise);
+        self.trials.lock().unwrap().insert(tkey, trials);
+        search.with_trial_noise(trials)
     }
 
-    /// Pre-seed an entry without touching the hit/miss counters (the
+    /// Pre-seed a search entry without touching the counters (the
     /// disk-cache load path). The entry's winners also join the seed
-    /// index, so a warm cache warm-starts sparsities and noise corners
-    /// it has not seen.
-    pub(crate) fn preload(&self, key: CostKey, search: LayerSearch) {
-        let seed_key = seed_key_of(&key);
+    /// index, so a warm cache warm-starts sparsities it has not seen.
+    pub(crate) fn preload_search(&self, key: SearchKey, search: LayerSearch) {
         self.seeds
             .lock()
             .unwrap()
-            .insert(seed_key, search.seed_mappings());
-        self.map.lock().unwrap().insert(key, search);
+            .insert(key.seed_key(), search.seed_mappings());
+        self.searches.lock().unwrap().insert(key, search);
     }
 
-    /// Clone out every entry (the disk-cache save path).
-    pub(crate) fn snapshot(&self) -> Vec<(CostKey, LayerSearch)> {
-        self.map
+    /// Pre-seed one σ corner's trial energies without touching the
+    /// counters (the disk-cache load path).
+    pub(crate) fn preload_trials(&self, key: TrialKey, trials: [f64; NOISE_TRIALS]) {
+        self.trials.lock().unwrap().insert(key, trials);
+    }
+
+    /// Clone out every search entry (the disk-cache save path).
+    pub(crate) fn snapshot_searches(&self) -> Vec<(SearchKey, LayerSearch)> {
+        self.searches
             .lock()
             .unwrap()
             .iter()
             .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Clone out every trial record (the disk-cache save path).
+    pub(crate) fn snapshot_trials(&self) -> Vec<(TrialKey, [f64; NOISE_TRIALS])> {
+        self.trials
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
             .collect()
     }
 }
@@ -352,7 +476,7 @@ impl LayerEvaluator for CostCache {
         tech: &TechParams,
         opts: &DseOptions,
     ) -> LayerResult {
-        self.search(layer, sys, tech, opts.input_sparsity, opts.policy, opts.noise)
+        self.get_or_compute(layer, sys, tech, opts.input_sparsity, opts.policy, opts.noise)
             .to_result(layer, opts.objective)
     }
 }
@@ -374,10 +498,10 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 128, 640);
-        let a = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
-        let b = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        let a = cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        let b = cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!((s.hits, s.searches, s.entries), (1, 1, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(
             a.best(Objective::Energy).total_energy_fj(),
@@ -395,7 +519,7 @@ mod tests {
         let ra = cache.evaluate_layer(&first, &sys, &tech, &opts);
         let rb = cache.evaluate_layer(&same_shape, &sys, &tech, &opts);
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!((s.hits, s.searches), (1, 1));
         assert_eq!(ra.layer.name, "fc_a");
         assert_eq!(rb.layer.name, "fc_b");
         assert_eq!(ra.best.total_energy_fj(), rb.best.total_energy_fj());
@@ -406,14 +530,14 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 64, 256);
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // different shape
         let wider = Layer::dense("fc", 64, 512);
-        cache.search(&wider, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        cache.get_or_compute(&wider, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // different sparsity
-        cache.search(&l, &sys, &tech, 0.9, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &sys, &tech, 0.9, None, NoiseSpec::Off);
         // different policy restriction
-        cache.search(
+        cache.get_or_compute(
             &l,
             &sys,
             &tech,
@@ -421,14 +545,17 @@ mod tests {
             Some(TemporalPolicy::WeightStationary),
             NoiseSpec::Off,
         );
-        // different noise corner
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Typical);
+        // a different noise corner is NOT a new search: it reuses the
+        // first lookup's search entry and only simulates its trials
+        cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Typical);
         // different system
         let other = table2_systems().remove(3);
         let other_tech = TechParams::for_node(other.imc.tech_nm);
-        cache.search(&l, &other, &other_tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &other, &other_tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (0, 6, 6));
+        assert_eq!((s.hits, s.searches, s.entries), (0, 5, 5));
+        assert_eq!((s.cross_corner, s.trial_sims, s.trial_entries), (1, 1, 1));
+        assert_eq!(s.lookups(), 6);
     }
 
     #[test]
@@ -437,10 +564,10 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 64, 256);
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // the all-zero custom spec resolves to the same σs as Off: it
         // must hit (the records are bit-identical by construction)
-        cache.search(
+        cache.get_or_compute(
             &l,
             &sys,
             &tech,
@@ -449,15 +576,19 @@ mod tests {
             NoiseSpec::Custom(NoiseParams::ZERO),
         );
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses), (1, 1));
-        // distinct σs key separately, and the corners carry genuinely
-        // different trial statistics
-        let typical = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Typical);
-        let worst = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
-        assert_eq!(cache.stats().entries, 3);
+        assert_eq!((s.hits, s.searches), (1, 1));
+        // distinct σs share the one search entry but keep separate
+        // trial records, and the corners carry genuinely different
+        // trial statistics
+        let typical =
+            cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Typical);
+        let worst =
+            cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.trial_entries, s.cross_corner), (1, 2, 2));
         assert_ne!(typical.accuracy().trial_noise, worst.accuracy().trial_noise);
         // cost optima are noise-invariant across all cached entries
-        let off = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        let off = cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         for objective in COST_OBJECTIVES {
             assert_eq!(
                 typical.best(objective).total_energy_fj().to_bits(),
@@ -467,38 +598,64 @@ mod tests {
     }
 
     #[test]
-    fn cross_noise_seed_carryover_stays_bit_identical() {
-        // a search at one corner warm-starts the next corner's miss
-        // (the seed index erases the noise fields); the optima must
-        // still equal the unpruned reference bit for bit
+    fn m_corner_sweep_searches_once_and_splices_trials() {
+        // the split's headline behavior: M corners of one (design,
+        // layer, precision, sparsity) point run exactly one mapping
+        // search, and every spliced record is bit-identical to the
+        // direct noisy search
+        use crate::sim::NoiseParams;
         let (sys, tech) = ctx();
         let cache = CostCache::new();
-        let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
-        let seeded = cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
-        let reference =
-            crate::dse::search_layer_all_unpruned(&l, &sys, &tech, DEFAULT_SPARSITY, None);
-        assert_eq!(seeded.evaluated + seeded.pruned, reference.evaluated);
-        for objective in COST_OBJECTIVES {
-            let a = seeded.best(objective);
-            let b = reference.best(objective);
-            assert_eq!(a.total_energy_fj().to_bits(), b.total_energy_fj().to_bits());
-            assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
-            assert_eq!(a.spatial, b.spatial);
+        let l = Layer::dense("fc", 64, 256);
+        let corners = [
+            NoiseSpec::Typical,
+            NoiseSpec::Worst,
+            NoiseSpec::Custom(NoiseParams {
+                a_cap: 0.05,
+                t_factor: 2.0,
+                offset_lsb: 0.5,
+            }),
+        ];
+        let off = cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        for spec in corners {
+            let spliced = cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, spec);
+            let direct =
+                crate::dse::search_layer_all_noisy(&l, &sys, &tech, DEFAULT_SPARSITY, None, spec);
+            assert_eq!(
+                spliced.accuracy(),
+                direct.accuracy(),
+                "spliced record diverged from the direct noisy search at {spec}"
+            );
+            // the cost optima are the Off search's, bit for bit
+            for objective in COST_OBJECTIVES {
+                assert_eq!(
+                    spliced.best(objective).total_energy_fj().to_bits(),
+                    off.best(objective).total_energy_fj().to_bits()
+                );
+            }
         }
-        assert_eq!(cache.stats().misses, 2);
+        let s = cache.stats();
+        assert_eq!(
+            (s.searches, s.cross_corner, s.trial_sims, s.entries, s.trial_entries),
+            (1, 3, 3, 1, 3)
+        );
+        assert!((s.cross_corner_rate() - 0.75).abs() < 1e-12);
+        // a revisited corner is a full hit: both maps answer
+        cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().trial_sims, 3);
     }
 
     #[test]
     fn cross_sparsity_seed_carryover_stays_bit_identical() {
-        // the second sparsity's miss is warm-started from the first
+        // the second sparsity's search is warm-started from the first
         // search's winners; its optima must still equal the unpruned
         // reference bit for bit, with the space fully accounted
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1);
-        cache.search(&l, &sys, &tech, 0.3, None, NoiseSpec::Off);
-        let seeded = cache.search(&l, &sys, &tech, 0.8, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &sys, &tech, 0.3, None, NoiseSpec::Off);
+        let seeded = cache.get_or_compute(&l, &sys, &tech, 0.8, None, NoiseSpec::Off);
         let reference = crate::dse::search_layer_all_unpruned(&l, &sys, &tech, 0.8, None);
         assert_eq!(seeded.evaluated + seeded.pruned, reference.evaluated);
         for objective in COST_OBJECTIVES {
@@ -510,7 +667,7 @@ mod tests {
             assert_eq!(a.spatial, b.spatial);
         }
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
+        assert_eq!((s.hits, s.searches, s.entries), (0, 2, 2));
     }
 
     #[test]
@@ -519,16 +676,16 @@ mod tests {
         let (sys, tech) = ctx();
         let cache = CostCache::new();
         let l = Layer::dense("fc", 64, 256);
-        cache.search(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         // same chip re-quantized to INT8: the macro's precision and
         // re-derived converter fields change the key — no aliasing
         let re = ImcSystem {
             imc: sys.imc.requantized(Precision::new(8, 8)).unwrap(),
             ..sys.clone()
         };
-        cache.search(&l, &re, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        cache.get_or_compute(&l, &re, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
+        assert_eq!((s.hits, s.searches, s.entries), (0, 2, 2));
     }
 
     #[test]
@@ -549,6 +706,6 @@ mod tests {
         }
         // one search pass served all three objectives
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses), (2, 1));
+        assert_eq!((s.hits, s.searches), (2, 1));
     }
 }

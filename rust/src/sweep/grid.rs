@@ -457,7 +457,7 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
     let searches: Vec<_> = net
         .layers
         .iter()
-        .map(|l| cache.search(l, sys, &tech, sparsity, None, noise))
+        .map(|l| cache.get_or_compute(l, sys, &tech, sparsity, None, noise))
         .collect();
     // network accuracy: layer records pooled in network order
     // (mapping- and objective-invariant, so computed once per group)

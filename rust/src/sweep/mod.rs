@@ -4,13 +4,17 @@
 //! as a parallel pipeline with a memoized cost-model cache and
 //! aggregated into per-(network, precision) Pareto frontiers.
 //!
-//! * [`cache`] — the memoized cost cache keyed on everything that
-//!   determines a layer search: macro geometry *including the operand
-//!   precisions and re-derived converter resolutions*, memory
-//!   hierarchy, layer shape, sparsity and policy restriction. Identical
-//!   layer shapes across networks and objectives are searched once; a
-//!   re-quantized design keys differently by construction, so precision
-//!   points can never alias in the cache.
+//! * [`cache`] — the memoized cost cache, split along the noise axis:
+//!   a noise-erased [`SearchKey`] (macro geometry *including the
+//!   operand precisions and re-derived converter resolutions*, memory
+//!   hierarchy, layer shape, sparsity and policy restriction) maps to
+//!   the expensive mapping search + nominal simulation, shared across
+//!   every σ corner; a σ-keyed [`TrialKey`] maps to the cheap
+//!   per-corner Monte-Carlo trial energies. An M-corner sweep therefore
+//!   runs the mapping search once, not M times. Identical layer shapes
+//!   across networks and objectives are searched once; a re-quantized
+//!   design keys differently by construction, so precision points can
+//!   never alias in the cache.
 //! * [`grid`] — grid construction (SRAM-cell budget, precision and
 //!   activation-sparsity axes), deterministic sharding
 //!   (`--shards`/`--shard-index`), parallel execution and shard-result
@@ -22,9 +26,9 @@
 //! * [`persist`] — bit-exact on-disk serialization of the cost cache
 //!   (`sweep --cache-file`), version-tagged with
 //!   [`persist::SWEEP_CACHE_VERSION`]; files from another schema
-//!   generation (e.g. pre-precision-axis caches) are rejected with an
-//!   error naming the mismatch, so repeated CI sweeps start warm but
-//!   never warm *wrong*.
+//!   generation (pre-precision v1 through pre-noise-split v4) are
+//!   rejected with an error naming the mismatch, so repeated CI sweeps
+//!   and incremental re-sweeps start warm but never warm *wrong*.
 //!
 //! The cost-model equations behind every cached number, the
 //! precision-scaling rules and the admissibility argument for the
@@ -34,7 +38,7 @@ pub mod cache;
 pub mod grid;
 pub mod persist;
 
-pub use cache::{CacheStats, CostCache};
+pub use cache::{CacheStats, CostCache, SearchKey, TrialKey};
 pub use grid::{
     merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, PrecisionPoint, SweepGrid,
     SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,

@@ -3,16 +3,23 @@
 //! CI sweeps re-run the identical survey grid on every push; a warm
 //! cache turns the whole mapping search into a lookup. The format is
 //! the workspace's own minimal JSON ([`crate::util::json`] — no serde):
-//! a version tag plus a flat entry list of `(CostKey, LayerSearch)`
-//! pairs. Files with a different version tag (or any malformed
-//! structure) are rejected wholesale with a [`CacheLoadError`] naming
-//! the mismatch — a stale schema must never seed a cache with wrong
-//! costs — and the run simply starts cold.
+//! a version tag plus two flat lists mirroring the split in-memory
+//! cache — `searches` holds `(SearchKey, LayerSearch)` pairs (the
+//! noise-erased mapping searches and nominal records), `trials` holds
+//! `(SearchKey, σ fingerprint, trial energies)` triples (the per-corner
+//! Monte-Carlo remainders). Files with a different version tag (or any
+//! malformed structure) are rejected wholesale with a
+//! [`CacheLoadError`] naming the mismatch — a stale schema must never
+//! seed a cache with wrong costs — and the run simply starts cold.
 //!
-//! Every `f64` (and every `u64` bit pattern inside [`CostKey`]) is
+//! Every `f64` (and every `u64` bit pattern inside [`SearchKey`]) is
 //! stored as a 16-digit hex string of its bit pattern, so a
 //! save/load round trip is *bit-exact*: a warm run reproduces the cold
-//! run's grid points to the bit and reports a 100 % hit rate.
+//! run's grid points to the bit and reports a 100 % hit rate. This is
+//! also what makes the incremental re-sweep mode sound
+//! (`sweep --cache-file` across grid widenings): a widened grid reuses
+//! every previously-searched point verbatim and adds noise corners at
+//! trial-simulation cost only.
 
 use std::io;
 use std::path::Path;
@@ -25,12 +32,13 @@ use crate::sim::{AccuracyRecord, NOISE_TRIALS};
 use crate::util::json::{parse, Json};
 use crate::workload::{LayerType, LoopDim};
 
-use super::cache::{CostCache, CostKey};
+use super::cache::{CostCache, SearchKey, TrialKey};
 use crate::dse::reuse::{AccessCounts, TrafficEnergy};
 
-/// Schema version of the cache file. Bump on any change to [`CostKey`],
-/// [`LayerSearch`], the cost model's meaning of either, or the
-/// functional simulator's tensor protocol / datapath contract.
+/// Schema version of the cache file. Bump on any change to
+/// [`SearchKey`], [`TrialKey`], [`LayerSearch`], the cost model's
+/// meaning of any of them, or the functional simulator's tensor
+/// protocol / datapath contract.
 ///
 /// History: **1** — the pre-precision-axis schema; **2** — the
 /// precision axis landed (re-quantized survey operating points flow
@@ -40,11 +48,13 @@ use crate::dse::reuse::{AccessCounts, TrafficEnergy};
 /// landed: every entry memoizes the bit-true simulator's
 /// [`AccuracyRecord`] alongside the cost optima, so v2 files (which
 /// carry no accuracy record) are rejected by name like v1 files before
-/// them; **4** — the analog-noise axis landed: [`CostKey`] gained the
-/// noise-σ fingerprint and [`AccuracyRecord`] its per-trial noise
-/// energies, so v3 files (which key no noise and carry no trial
-/// statistics) are rejected by name like v1 and v2 before them.
-pub const SWEEP_CACHE_VERSION: u64 = 4;
+/// them; **4** — the analog-noise axis landed: the (then-monolithic)
+/// `CostKey` gained the noise-σ fingerprint and [`AccuracyRecord`] its
+/// per-trial noise energies; **5** — the noise-split cache landed: the
+/// monolithic key became the noise-erased [`SearchKey`] plus a σ-keyed
+/// trial list, so v4 files (one full entry per σ corner, σs baked into
+/// every key) are rejected by name like v1–v3 before them.
+pub const SWEEP_CACHE_VERSION: u64 = 5;
 
 /// Why a cache file was rejected. In every case the in-memory cache is
 /// left untouched and the caller starts cold.
@@ -53,7 +63,7 @@ pub enum CacheLoadError {
     /// The file could not be read (missing, unreadable, …).
     Io(io::Error),
     /// The file carries a different schema version — most commonly a
-    /// pre-precision (v1) cache after the precision-axis change.
+    /// cache written by an earlier build after a schema change.
     VersionMismatch { found: u64, expected: u64 },
     /// The file is not a structurally valid sweep cost cache.
     Malformed,
@@ -66,9 +76,9 @@ impl std::fmt::Display for CacheLoadError {
             CacheLoadError::VersionMismatch { found, expected } => write!(
                 f,
                 "cache file has schema version {found}, but this build requires version \
-                 {expected} (the CostKey/cost-model/simulator schema changed — e.g. a \
-                 pre-precision-axis v1, pre-accuracy v2 or pre-noise v3 cache); delete \
-                 the file or let this run rewrite it"
+                 {expected} (the SearchKey/cost-model/simulator schema changed — e.g. a \
+                 pre-precision-axis v1, pre-accuracy v2, pre-noise v3 or pre-split v4 \
+                 cache); delete the file or let this run rewrite it"
             ),
             CacheLoadError::Malformed => f.write_str("cache file is not a valid sweep cost cache"),
         }
@@ -173,14 +183,14 @@ fn parse_dim(s: &str) -> Option<LoopDim> {
     }
 }
 
-// ---- CostKey -------------------------------------------------------------
+// ---- SearchKey -----------------------------------------------------------
 
 fn level_to_json(level: &(u64, u64, u64, u64, u8)) -> Json {
     let (size, read, write, bw, mask) = *level;
     Json::Arr(vec![jbits(size), jbits(read), jbits(write), jbits(bw), jn(mask as usize)])
 }
 
-fn key_to_json(k: &CostKey) -> Json {
+fn key_to_json(k: &SearchKey) -> Json {
     let hierarchy = Json::Arr(k.hierarchy.iter().map(level_to_json).collect());
     obj(vec![
         ("family", jstr(k.family.as_str())),
@@ -207,11 +217,10 @@ fn key_to_json(k: &CostKey) -> Json {
                 None => Json::Null,
             },
         ),
-        ("noise_bits", Json::Arr(k.noise_bits.iter().map(|&b| jbits(b)).collect())),
     ])
 }
 
-fn key_from_json(j: &Json) -> Option<CostKey> {
+fn key_from_json(j: &Json) -> Option<SearchKey> {
     let hierarchy = get(j, "hierarchy")?
         .as_arr()?
         .iter()
@@ -251,12 +260,7 @@ fn key_from_json(j: &Json) -> Option<CostKey> {
         Json::Null => None,
         p => Some(parse_policy(p.as_str()?)?),
     };
-    let nb = get(j, "noise_bits")?.as_arr()?;
-    if nb.len() != 3 {
-        return None;
-    }
-    let noise_bits = [bits_of(&nb[0])?, bits_of(&nb[1])?, bits_of(&nb[2])?];
-    Some(CostKey {
+    Some(SearchKey {
         family: parse_family(get(j, "family")?.as_str()?)?,
         rows: n_of(get(j, "rows")?)?,
         cols: n_of(get(j, "cols")?)?,
@@ -275,8 +279,35 @@ fn key_from_json(j: &Json) -> Option<CostKey> {
         dims,
         sparsity_bits: bits_of(get(j, "sparsity_bits")?)?,
         policy,
-        noise_bits,
     })
+}
+
+// ---- trial records -------------------------------------------------------
+
+fn trial_to_json(k: &TrialKey, trials: &[f64; NOISE_TRIALS]) -> Json {
+    obj(vec![
+        ("key", key_to_json(&k.search)),
+        ("noise_bits", Json::Arr(k.noise_bits.iter().map(|&b| jbits(b)).collect())),
+        ("trial_noise", Json::Arr(trials.iter().map(|&t| jf(t)).collect())),
+    ])
+}
+
+fn trial_from_json(j: &Json) -> Option<(TrialKey, [f64; NOISE_TRIALS])> {
+    let search = key_from_json(get(j, "key")?)?;
+    let nb = get(j, "noise_bits")?.as_arr()?;
+    if nb.len() != 3 {
+        return None;
+    }
+    let noise_bits = [bits_of(&nb[0])?, bits_of(&nb[1])?, bits_of(&nb[2])?];
+    let trials = get(j, "trial_noise")?.as_arr()?;
+    if trials.len() != NOISE_TRIALS {
+        return None;
+    }
+    let mut trial_noise = [0.0f64; NOISE_TRIALS];
+    for (slot, t) in trial_noise.iter_mut().zip(trials) {
+        *slot = f_of(t)?;
+    }
+    Some((TrialKey { search, noise_bits }, trial_noise))
 }
 
 // ---- LayerSearch ---------------------------------------------------------
@@ -481,12 +512,13 @@ fn search_from_json(j: &Json) -> Option<LayerSearch> {
 
 // ---- file API ------------------------------------------------------------
 
-/// Serialize every cache entry to `path` (atomic-enough: full rewrite).
+/// Serialize every cache entry — search entries and per-corner trial
+/// records — to `path` (atomic-enough: full rewrite).
 pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
     // serialize each key once; sort on the prebuilt string for a
     // deterministic file
-    let mut entries: Vec<(String, Json)> = cache
-        .snapshot()
+    let mut searches: Vec<(String, Json)> = cache
+        .snapshot_searches()
         .iter()
         .map(|(k, s)| {
             let key = key_to_json(k);
@@ -494,21 +526,32 @@ pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
             (sort_key, obj(vec![("key", key), ("search", search_to_json(s))]))
         })
         .collect();
-    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    searches.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut trials: Vec<(String, Json)> = cache
+        .snapshot_trials()
+        .iter()
+        .map(|(k, t)| {
+            let entry = trial_to_json(k, t);
+            (entry.to_string(), entry)
+        })
+        .collect();
+    trials.sort_by(|a, b| a.0.cmp(&b.0));
     let doc = obj(vec![
         ("version", Json::Num(SWEEP_CACHE_VERSION as f64)),
-        ("entries", Json::Arr(entries.into_iter().map(|(_, e)| e).collect())),
+        ("searches", Json::Arr(searches.into_iter().map(|(_, e)| e).collect())),
+        ("trials", Json::Arr(trials.into_iter().map(|(_, e)| e).collect())),
     ]);
     std::fs::write(path, doc.to_string())
 }
 
-/// Load a cache file. Returns the number of entries preloaded into
-/// `cache`; a [`CacheLoadError`] when the file is missing, carries a
-/// different schema version, or fails to parse — in every such case
-/// `cache` is left untouched and the caller starts cold. A version
-/// mismatch is reported explicitly (not silently reused): pre-precision
-/// v1 caches hold costs derived under a different converter-derivation
-/// schema.
+/// Load a cache file. Returns the total number of records preloaded
+/// into `cache` (search entries + trial records); a [`CacheLoadError`]
+/// when the file is missing, carries a different schema version, or
+/// fails to parse — in every such case `cache` is left untouched and
+/// the caller starts cold. A version mismatch is reported explicitly
+/// (not silently reused): e.g. a pre-split v4 cache bakes σs into every
+/// key and would miss every lookup of this build while silently
+/// bloating the maps.
 pub fn load_cache_into(path: &Path, cache: &CostCache) -> Result<usize, CacheLoadError> {
     let text = std::fs::read_to_string(path).map_err(CacheLoadError::Io)?;
     let doc = parse(&text).map_err(|_| CacheLoadError::Malformed)?;
@@ -524,17 +567,28 @@ pub fn load_cache_into(path: &Path, cache: &CostCache) -> Result<usize, CacheLoa
     }
     // parse everything before touching the cache: a half-loaded file
     // must not leave a partially-seeded cache behind
-    let entries: Vec<(CostKey, LayerSearch)> = doc
-        .get("entries")
+    let searches: Vec<(SearchKey, LayerSearch)> = doc
+        .get("searches")
         .and_then(|e| e.as_arr())
         .ok_or(CacheLoadError::Malformed)?
         .iter()
         .map(|e| Some((key_from_json(get(e, "key")?)?, search_from_json(get(e, "search")?)?)))
         .collect::<Option<Vec<_>>>()
         .ok_or(CacheLoadError::Malformed)?;
-    let n = entries.len();
-    for (k, s) in entries {
-        cache.preload(k, s);
+    let trials: Vec<(TrialKey, [f64; NOISE_TRIALS])> = doc
+        .get("trials")
+        .and_then(|e| e.as_arr())
+        .ok_or(CacheLoadError::Malformed)?
+        .iter()
+        .map(trial_from_json)
+        .collect::<Option<Vec<_>>>()
+        .ok_or(CacheLoadError::Malformed)?;
+    let n = searches.len() + trials.len();
+    for (k, s) in searches {
+        cache.preload_search(k, s);
+    }
+    for (k, t) in trials {
+        cache.preload_trials(k, t);
     }
     Ok(n)
 }
@@ -562,7 +616,7 @@ mod tests {
             Layer::conv2d("c", 16, 16, 32, 16, 3, 3, 1),
             Layer::depthwise("dw", 24, 24, 64, 3, 3, 1),
         ];
-        // a noisy corner on the first layer exercises the trial-noise
+        // a noisy corner on the first layer exercises the trial-record
         // serialization with genuinely distinct per-trial energies
         let noise_of = |l: &Layer| {
             if l.name == "fc" {
@@ -572,17 +626,18 @@ mod tests {
             }
         };
         for l in &layers {
-            cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
+            cold.get_or_compute(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
         }
         let path = tmp("cache_roundtrip");
         save_cache(&cold, &path).unwrap();
 
         let warm = CostCache::new();
         let loaded = load_cache_into(&path, &warm).expect("cache file loads");
-        assert_eq!(loaded, layers.len());
+        // three search entries plus the fc layer's one trial record
+        assert_eq!(loaded, layers.len() + 1);
         for l in &layers {
-            let a = cold.search(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
-            let b = warm.search(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
+            let a = cold.get_or_compute(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
+            let b = warm.get_or_compute(l, &sys, &tech, DEFAULT_SPARSITY, None, noise_of(l));
             for objective in crate::dse::ALL_OBJECTIVES {
                 let (x, y) = (a.best(objective), b.best(objective));
                 assert_eq!(x.total_energy_fj().to_bits(), y.total_energy_fj().to_bits());
@@ -613,9 +668,55 @@ mod tests {
         }
         // the warm cache answered everything from disk
         let s = warm.stats();
-        assert_eq!(s.misses, 0, "warm run missed: {s:?}");
+        assert_eq!((s.searches, s.cross_corner, s.trial_sims), (0, 0, 0), "warm run missed: {s:?}");
         assert_eq!(s.hits, layers.len() as u64);
         assert!((s.hit_rate() - 1.0).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incremental_resweep_adds_noise_corners_at_trial_cost_only() {
+        // the `sweep --cache-file` widening workflow: a prior run
+        // searched at Off; a later run adds a σ corner. The warm cache
+        // must reuse the persisted search (zero mapping searches) and
+        // simulate only the trial energies — and the spliced result
+        // must equal the direct noisy search bit for bit.
+        use crate::sim::NoiseSpec;
+        let sys = table2_systems().remove(1);
+        let tech = TechParams::for_node(sys.imc.tech_nm);
+        let l = Layer::dense("fc", 64, 256);
+        let prior = CostCache::new();
+        prior.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Off);
+        let path = tmp("cache_resweep");
+        save_cache(&prior, &path).unwrap();
+
+        let warm = CostCache::new();
+        load_cache_into(&path, &warm).expect("cache file loads");
+        let spliced =
+            warm.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        let s = warm.stats();
+        assert_eq!(
+            (s.searches, s.cross_corner, s.trial_sims),
+            (0, 1, 1),
+            "widened corner re-searched: {s:?}"
+        );
+        let direct = crate::dse::search_layer_all_noisy(
+            &l,
+            &sys,
+            &tech,
+            DEFAULT_SPARSITY,
+            None,
+            NoiseSpec::Worst,
+        );
+        assert_eq!(spliced.accuracy(), direct.accuracy());
+        // the new corner persists: a re-save + re-load serves it as a
+        // full hit
+        save_cache(&warm, &path).unwrap();
+        let rewarm = CostCache::new();
+        assert_eq!(load_cache_into(&path, &rewarm).unwrap(), 2);
+        rewarm.get_or_compute(&l, &sys, &tech, DEFAULT_SPARSITY, None, NoiseSpec::Worst);
+        let s = rewarm.stats();
+        assert_eq!((s.hits, s.searches, s.trial_sims), (1, 0, 0));
         std::fs::remove_file(&path).ok();
     }
 
@@ -713,6 +814,24 @@ mod tests {
             CacheLoadError::VersionMismatch { found: 3, expected: SWEEP_CACHE_VERSION }
         ));
         assert!(err.to_string().contains("pre-noise"), "{err}");
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_split_v4_cache_is_rejected_not_reused() {
+        // a v4 file predates the SearchKey/TrialKey split: σs are baked
+        // into every key and trial statistics live inside the entry, so
+        // its structure cannot seed the split maps — rejected by name,
+        // run starts cold
+        let path = cache_file_with_version("cache_v4", 4);
+        let fresh = CostCache::new();
+        let err = load_cache_into(&path, &fresh).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheLoadError::VersionMismatch { found: 4, expected: SWEEP_CACHE_VERSION }
+        ));
+        assert!(err.to_string().contains("pre-split"), "{err}");
         assert_eq!(fresh.stats().entries, 0);
         std::fs::remove_file(&path).ok();
     }

@@ -1,8 +1,18 @@
 //! Minimal CLI argument parser (offline build: no clap).
 //!
-//! Supports `imcsim <subcommand> [--flag] [--key value] [positional…]`.
+//! Supports `imcsim <subcommand> [--flag] [--key value] [positional…]`,
+//! plus the shared pieces every subcommand builds its surface from:
+//! [`reject_unknown`] (one accepted-flag list per command, so the
+//! unknown-option message can never drift from the options actually
+//! parsed) and [`SweepAxes`] (the canonical `--cells` / `--precision` /
+//! `--sparsity` / `--noise` comma-list parser shared by `sweep` and
+//! `dse`, with one error format for all four axes).
 
 use std::collections::BTreeMap;
+
+use crate::dse::DEFAULT_SPARSITY;
+use crate::sim::NoiseSpec;
+use crate::sweep::{PrecisionPoint, DEFAULT_GRID_CELLS};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -72,6 +82,131 @@ impl Args {
     }
 }
 
+/// Reject options/flags outside `known`, and value-less uses of the
+/// known (all value-requiring) ones. The accepted-flag list in the
+/// error message is derived from the same `known` slice the caller
+/// matches against, so the two can never drift apart.
+pub fn reject_unknown(args: &Args, cmd: &str, known: &[&str]) -> Result<(), String> {
+    if let Some(unknown) = args
+        .options
+        .keys()
+        .chain(args.flags.iter())
+        .find(|k| !known.contains(&k.as_str()))
+    {
+        let accepted: Vec<String> = known.iter().map(|k| format!("--{k}")).collect();
+        return Err(format!(
+            "unknown option --{unknown} ({cmd} takes {})",
+            accepted.join(", ")
+        ));
+    }
+    for opt in known {
+        if args.flag(opt) {
+            return Err(format!("--{opt} requires a value"));
+        }
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated option value list (`--cells 294912,147456`).
+pub fn parse_list<T: std::str::FromStr>(raw: &str, what: &str) -> Result<Vec<T>, String> {
+    let vals: Result<Vec<T>, _> = raw
+        .split(',')
+        .map(|p| p.trim().parse::<T>().map_err(|_| format!("invalid {what} value '{p}'")))
+        .collect();
+    match vals {
+        Ok(v) if !v.is_empty() => Ok(v),
+        Ok(_) => Err(format!("--{what} needs at least one value")),
+        Err(e) => Err(e),
+    }
+}
+
+/// The four shared sweep axes, parsed from their comma-list options.
+/// `sweep` consumes all four; `dse` consumes the sparsity and noise
+/// axes in the same comma-list forms (so a corner list pasted from a
+/// sweep invocation means the same thing to both commands).
+#[derive(Debug, Clone)]
+pub struct SweepAxes {
+    /// `--cells` SRAM-cell budgets (default: the survey budget).
+    pub cells: Vec<usize>,
+    /// `--precision` operating points (default: native).
+    pub precisions: Vec<PrecisionPoint>,
+    /// `--sparsity` activation-sparsity levels (default: 0.5).
+    pub sparsities: Vec<f64>,
+    /// `--noise` analog-noise corners (default: off).
+    pub noises: Vec<NoiseSpec>,
+}
+
+/// One axis parse with the canonical error format shared by every axis:
+/// `--<axis>: invalid value '<token>' — takes a comma-separated list of
+/// <forms>`. Out-of-range values use the same shape as unparseable ones.
+fn parse_axis<T: std::str::FromStr>(
+    raw: Option<&str>,
+    name: &str,
+    forms: &str,
+    default: Vec<T>,
+    ok: impl Fn(&T) -> bool,
+) -> Result<Vec<T>, String> {
+    let Some(raw) = raw else { return Ok(default) };
+    let mut out = Vec::new();
+    for p in raw.split(',') {
+        let p = p.trim();
+        match p.parse::<T>() {
+            Ok(v) if ok(&v) => out.push(v),
+            _ => {
+                return Err(format!(
+                    "--{name}: invalid value '{p}' — takes a comma-separated list of {forms}"
+                ))
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(format!(
+            "--{name}: needs at least one value — takes a comma-separated list of {forms}"
+        ));
+    }
+    Ok(out)
+}
+
+impl SweepAxes {
+    /// Parse `--cells`, `--precision`, `--sparsity` and `--noise` from
+    /// the parsed command line, applying the grid defaults for absent
+    /// options. Every axis reports errors in the one canonical format
+    /// of [`parse_axis`].
+    pub fn from_args(args: &Args) -> Result<SweepAxes, String> {
+        Ok(SweepAxes {
+            cells: parse_axis(
+                args.opt("cells"),
+                "cells",
+                "positive SRAM-cell counts (e.g. 294912,73728)",
+                vec![DEFAULT_GRID_CELLS],
+                |&n: &usize| n > 0,
+            )?,
+            precisions: parse_axis(
+                args.opt("precision"),
+                "precision",
+                "WxA weight-x-activation pairs and/or 'native' (e.g. 2x8,4x8,native)",
+                vec![PrecisionPoint::Native],
+                |_| true,
+            )?,
+            sparsities: parse_axis(
+                args.opt("sparsity"),
+                "sparsity",
+                "numbers in [0, 1] (e.g. 0.3,0.5,0.8)",
+                vec![DEFAULT_SPARSITY],
+                |f: &f64| (0.0..=1.0).contains(f),
+            )?,
+            noises: parse_axis(
+                args.opt("noise"),
+                "noise",
+                "off|typical|worst and/or A_CAP:T_FACTOR:OFFSET_LSB sigma triples \
+                 (e.g. off,typical,0.02:1:0.25)",
+                vec![NoiseSpec::Off],
+                |_| true,
+            )?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +250,66 @@ mod tests {
     fn opt_parse_error() {
         let a = parse("x --n abc");
         assert!(a.opt_parse::<u32>("n").unwrap().is_err());
+    }
+
+    #[test]
+    fn reject_unknown_derives_the_accepted_list_from_the_known_slice() {
+        let a = parse("sweepmerge --surface-cvs out.csv a.csv");
+        let err = reject_unknown(&a, "sweepmerge", &["csv", "surface-csv"]).unwrap_err();
+        // the message names the offender and exactly the known list —
+        // derived, not hand-written, so it cannot drift
+        assert!(err.contains("--surface-cvs"), "{err}");
+        assert!(err.contains("sweepmerge takes --csv, --surface-csv"), "{err}");
+        assert!(reject_unknown(&a, "sweepmerge", &["csv", "surface-csv", "surface-cvs"]).is_ok());
+    }
+
+    #[test]
+    fn reject_unknown_requires_values_for_known_options() {
+        let a = parse("sweep --csv");
+        let err = reject_unknown(&a, "sweep", &["csv"]).unwrap_err();
+        assert_eq!(err, "--csv requires a value");
+    }
+
+    #[test]
+    fn sweep_axes_default_when_absent() {
+        let axes = SweepAxes::from_args(&parse("sweep")).unwrap();
+        assert_eq!(axes.cells, vec![DEFAULT_GRID_CELLS]);
+        assert_eq!(axes.precisions, vec![PrecisionPoint::Native]);
+        assert_eq!(axes.sparsities, vec![DEFAULT_SPARSITY]);
+        assert_eq!(axes.noises, vec![NoiseSpec::Off]);
+    }
+
+    #[test]
+    fn sweep_axes_parse_comma_lists() {
+        let axes = SweepAxes::from_args(&parse(
+            "sweep --cells 294912,73728 --precision 2x8,native --sparsity 0.3,0.8 \
+             --noise off,typical,0.02:1:0.25",
+        ))
+        .unwrap();
+        assert_eq!(axes.cells, vec![294912, 73728]);
+        assert_eq!(axes.precisions.len(), 2);
+        assert_eq!(axes.sparsities, vec![0.3, 0.8]);
+        assert_eq!(axes.noises.len(), 3);
+        assert!(matches!(axes.noises[2], NoiseSpec::Custom(_)));
+    }
+
+    #[test]
+    fn sweep_axes_errors_share_one_canonical_format() {
+        for (cmd, axis, token) in [
+            ("sweep --cells 0", "cells", "0"),
+            ("sweep --cells 294912,nope", "cells", "nope"),
+            ("sweep --precision 3q8", "precision", "3q8"),
+            ("sweep --sparsity 1.5", "sparsity", "1.5"),
+            ("dse --noise worst,typcial", "noise", "typcial"),
+        ] {
+            let err = SweepAxes::from_args(&parse(cmd)).unwrap_err();
+            assert!(
+                err.starts_with(&format!("--{axis}: invalid value '{token}' — ")),
+                "{cmd}: {err}"
+            );
+            assert!(err.contains("comma-separated list of"), "{cmd}: {err}");
+        }
+        let err = SweepAxes::from_args(&parse("sweep --noise=")).unwrap_err();
+        assert!(err.starts_with("--noise: invalid value ''"), "{err}");
     }
 }

@@ -305,7 +305,7 @@ fn warm_cache_file_reproduces_cold_run_with_full_hits() {
 
     let cold_cache = CostCache::new();
     let cold = run_sweep_with_cache(&grid, &SweepOptions::default(), &cold_cache);
-    assert!(cold.cache.misses > 0);
+    assert!(cold.cache.searches > 0);
     save_cache(&cold_cache, &path).unwrap();
 
     let warm_cache = CostCache::new();
@@ -313,8 +313,11 @@ fn warm_cache_file_reproduces_cold_run_with_full_hits() {
     assert_eq!(loaded, cold_cache.stats().entries);
     let warm = run_sweep_with_cache(&grid, &SweepOptions::default(), &warm_cache);
 
-    // the warm run answers every lookup from disk: 100 % hit rate
-    assert_eq!(warm.cache.misses, 0, "warm run missed: {:?}", warm.cache);
+    // the warm run answers every lookup from disk: 100 % hit rate, no
+    // mapping searches and no trial re-simulations
+    assert_eq!(warm.cache.searches, 0, "warm run searched: {:?}", warm.cache);
+    assert_eq!(warm.cache.cross_corner, 0);
+    assert_eq!(warm.cache.trial_sims, 0);
     assert_eq!(warm.cache.lookups(), cold.cache.lookups());
     assert!((warm.cache.hit_rate() - 1.0).abs() < 1e-12);
     // and reproduces the cold run's grid points bit-for-bit
@@ -357,10 +360,10 @@ fn cache_file_with_mismatched_schema_is_rejected_cold() {
     let msg = err.to_string();
     assert!(msg.contains("version 1") && msg.contains(&format!("version {SWEEP_CACHE_VERSION}")));
     // the rejected file seeded nothing: the rerun starts cold (same
-    // miss count as the original cold run) but stays bit-identical
+    // search count as the original cold run) but stays bit-identical
     assert_eq!(fresh_cache.stats().entries, 0);
     let rerun = run_sweep_with_cache(&grid, &SweepOptions::default(), &fresh_cache);
-    assert_eq!(rerun.cache.misses, cold.cache.misses);
+    assert_eq!(rerun.cache.searches, cold.cache.searches);
     points_equal(&cold, &rerun);
     std::fs::remove_file(&path).ok();
 }
