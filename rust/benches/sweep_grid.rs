@@ -8,14 +8,18 @@
 //!
 //! With `IMCSIM_BENCH_JSON=PATH` set, the run additionally emits a
 //! machine-readable trajectory file (`BENCH_sweep.json` in CI):
-//! per-benchmark median timings, every reported metric, and a `gate`
-//! object — evaluated/pruned candidate counts, cache hit rate, wall
-//! time, the pruning reduction on the multi-macro acceptance grid, the
-//! scalar-vs-bitplane `sim_speedup`, and the `cross_corner_rate` of
-//! the noise-split cache (the fraction of uncached lookups on the
-//! two-corner gate grid that skipped the mapping search) — that the CI
+//! per-benchmark median timings, every reported metric, a `scaling`
+//! object (gate-grid wall time at 1/4/8/16 worker threads), and a
+//! `gate` object — evaluated/pruned candidate counts, cache hit rate,
+//! wall time, the pruning reduction on the multi-macro acceptance
+//! grid, the scalar-vs-bitplane `sim_speedup`, the `cross_corner_rate`
+//! of the noise-split cache (the fraction of uncached lookups on the
+//! two-corner gate grid that skipped the mapping search), the
+//! single-flight `duplicate_searches` tripwire and the 8-thread
+//! `wall_speedup_8t` of the (group × layer) scheduler — that the CI
 //! `bench-trajectory` job archives per push and fails on when the
-//! reduction drops below 2× or the sim speedup below 5×.
+//! reduction drops below 2×, the sim speedup below 5×, the wall
+//! speedup below 3×, or any search is ever duplicated.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -113,7 +117,7 @@ fn main() {
         noises: vec![NoiseSpec::Off],
         objectives: COST_OBJECTIVES.to_vec(),
     };
-    for threads in [1usize, 4] {
+    for threads in [1usize, 4, 16] {
         let name = format!("sweep/mini_grid_{threads}_threads");
         b.bench(&name, || {
             let run = SweepOptions {
@@ -176,6 +180,33 @@ fn main() {
             "%",
         );
         metric(&mut metrics, "sweep/gate_wall_seconds", wall, "s");
+        metric(
+            &mut metrics,
+            "sweep/gate_duplicate_searches",
+            s.cache.duplicate_searches as f64,
+            "searches",
+        );
+
+        // thread-scaling on the same gate grid: a fresh cold cache per
+        // width (run_sweep builds its own), so every wall time measures
+        // the full search workload through the (group × layer)
+        // scheduler at that worker count
+        let mut scaling: Vec<(usize, f64)> = Vec::new();
+        for threads in [1usize, 4, 8, 16] {
+            let run = SweepOptions {
+                threads,
+                ..Default::default()
+            };
+            let t = Instant::now();
+            std::hint::black_box(run_sweep(&gate_grid, &run).points.len());
+            let w = t.elapsed().as_secs_f64();
+            metric(&mut metrics, &format!("sweep/gate_wall_{threads}t"), w, "s");
+            scaling.push((threads, w));
+        }
+        let wall_1t = scaling[0].1;
+        let wall_8t = scaling.iter().find(|&&(t, _)| t == 8).expect("8t ran").1;
+        let wall_speedup_8t = wall_1t / wall_8t.max(1e-12);
+        metric(&mut metrics, "sweep/gate_wall_speedup_8t", wall_speedup_8t, "x");
 
         // the scalar-vs-bitplane simulator gate is measured directly
         // (never filtered out: CI always needs a sim_speedup value)
@@ -196,7 +227,7 @@ fn main() {
             median_secs(&mut || imcsim::sim::layer_accuracy(&layer, &aimc.imc).outputs);
         let sim_speedup = t_scalar / t_bitplane.max(1e-12);
         metric(&mut metrics, "sweep/gate_sim_speedup", sim_speedup, "x");
-        (s.cache, reduction, wall, sim_speedup)
+        (s.cache, reduction, wall, sim_speedup, wall_speedup_8t, scaling)
     });
 
     // the headline metrics: cache effectiveness and bound-pruning
@@ -230,7 +261,7 @@ fn main() {
 
     // machine-readable trajectory file for the CI bench-trajectory job
     if let Some(path) = json_path {
-        let (cache, reduction, gate_wall, sim_speedup) =
+        let (cache, reduction, gate_wall, sim_speedup, wall_speedup_8t, scaling) =
             gate.expect("gate ran whenever a JSON path is set");
         let num = Json::Num;
         let timings: BTreeMap<String, Json> = b
@@ -249,9 +280,18 @@ fn main() {
             ("cross_corner_rate".to_string(), num(cache.cross_corner_rate())),
             ("sim_speedup".to_string(), num(sim_speedup)),
             ("wall_seconds".to_string(), num(gate_wall)),
+            (
+                "duplicate_searches".to_string(),
+                num(cache.duplicate_searches as f64),
+            ),
+            ("wall_speedup_8t".to_string(), num(wall_speedup_8t)),
         ]
         .into_iter()
         .collect();
+        let scaling_obj: BTreeMap<String, Json> = scaling
+            .iter()
+            .map(|&(t, w)| (format!("wall_seconds_{t}t"), num(w)))
+            .collect();
         let doc: BTreeMap<String, Json> = [
             ("bench".to_string(), Json::Str("sweep_grid".to_string())),
             ("quick".to_string(), Json::Bool(b.is_quick())),
@@ -261,6 +301,7 @@ fn main() {
             ),
             ("timings_median_ns".to_string(), Json::Obj(timings)),
             ("metrics".to_string(), Json::Obj(metric_map)),
+            ("scaling".to_string(), Json::Obj(scaling_obj)),
             ("gate".to_string(), Json::Obj(gate_obj)),
         ]
         .into_iter()

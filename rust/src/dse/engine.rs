@@ -277,7 +277,10 @@ impl LayerSearch {
     /// noise-erased search record plus per-corner trial energies
     /// ([`crate::sim::noise`] computes them; every other field of the
     /// record is σ-invariant, so the spliced search is bit-identical
-    /// to one run at that corner directly).
+    /// to one run at that corner directly). The one clone per splice
+    /// is deliberate: the cache shares nominal records as
+    /// `Arc<LayerSearch>` (zero-clone hits), and only a corner that
+    /// genuinely diverges in its trial slots materializes a copy.
     pub fn with_trial_noise(&self, trial_noise: [f64; NOISE_TRIALS]) -> LayerSearch {
         let mut out = self.clone();
         out.accuracy.trial_noise = trial_noise;
@@ -539,7 +542,11 @@ pub fn search_layer(
 /// The reusable per-layer evaluation hook: the single-network DSE and
 /// the grid sweep both drive network search through this trait, so a
 /// memoizing implementation (see `sweep::CostCache`) slots in wherever
-/// the plain exhaustive search does.
+/// the plain exhaustive search does. Implementations must be safe to
+/// call from many threads at once — the sweep scheduler fans layer
+/// tasks out concurrently, and the cost cache answers them through
+/// shared `Arc<LayerSearch>` entries under single-flight miss
+/// resolution.
 pub trait LayerEvaluator: Sync {
     /// Search (or look up) the per-objective optima of one layer on one
     /// system and materialize the result for `opts.objective`.

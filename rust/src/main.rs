@@ -12,7 +12,7 @@ use std::time::Instant;
 use imcsim::arch::{load_system, table2_systems, ImcFamily};
 #[cfg(feature = "xla")]
 use imcsim::coordinator::{Tensor4, Tiler, TinyCnn};
-use imcsim::dse::{search_network, DseOptions, Objective};
+use imcsim::dse::{search_network_with, DseOptions, ExhaustiveSearch, Objective};
 use imcsim::mapping::TemporalPolicy;
 use imcsim::report::{
     eng, fig1_text, fig4_text, fig5_text, fig6_text, fig7_results, fig7_text, fmt_sqnr,
@@ -26,7 +26,8 @@ use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
     CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary,
 };
-use imcsim::util::cli::{reject_unknown, Args, SweepAxes};
+use imcsim::util::cli::{parse_threads, reject_unknown, Args, SweepAxes};
+use imcsim::util::pool::parallel_map_with;
 #[cfg(feature = "xla")]
 use imcsim::util::prng::Rng;
 
@@ -49,7 +50,7 @@ Paper artifacts:
 Exploration & serving:
   dse --network <ae|resnet8|dscnn|mobilenet> [--system NAME] [--config FILE]
       [--objective energy|latency|edp|accuracy] [--policy ws|os|is]
-      [--sparsity F[,F...]] [--noise S[,S...]]
+      [--sparsity F[,F...]] [--noise S[,S...]] [--threads N]
                        per-layer optimal mappings for one network, with
                        the bit-true simulator's per-layer SQNR (the
                        accuracy objective is mapping-invariant and
@@ -63,7 +64,7 @@ Exploration & serving:
   sweep [--shards N] [--shard-index K] [--cells N[,N...]]
       [--precision P[,P...]] [--sparsity F[,F...]]
       [--noise S[,S...]] [--cache-file FILE] [--csv FILE]
-      [--surface-csv FILE]
+      [--surface-csv FILE] [--threads N]
                        full-grid DSE sweep: every surveyed design (per
                        SRAM-cell budget) x every tinyMLPerf network x
                        every precision point x every sparsity level x
@@ -90,12 +91,14 @@ Exploration & serving:
                        across runs (version-tagged; stale schemas are
                        rejected); --surface-csv dumps the 3-objective
                        Pareto surface.
-  sweepmerge [--csv FILE] [--surface-csv FILE] SHARD.csv [SHARD.csv ...]
+  sweepmerge [--csv FILE] [--surface-csv FILE] [--threads N]
+      SHARD.csv [SHARD.csv ...]
                        merge shard CSVs (written by `sweep --csv`) back
                        into the full-grid summary, Pareto frontiers and
                        3-objective surface
   archsweep --network <ae|resnet8|dscnn|mobilenet> [--family aimc|dimc]
-      [--cells N]      geometry sweep of one network at equal SRAM
+      [--cells N] [--threads N]
+                       geometry sweep of one network at equal SRAM
                        budget; prints the (energy, latency) Pareto front
   serve [--design aimc_large|...] [--images N]
                        run the functional TinyCNN through the PJRT
@@ -105,6 +108,10 @@ Exploration & serving:
 
 Options:
   --artifacts DIR      artifact directory (default: ./artifacts or $IMCSIM_ARTIFACTS)
+  --threads N          worker threads for dse/sweep/sweepmerge/archsweep
+                       (default: $IMCSIM_THREADS, else the CPU count; the
+                       flag wins over the environment variable). Results
+                       are bit-identical for every thread count.
 ";
 
 fn main() {
@@ -220,11 +227,18 @@ fn cmd_dse(args: &Args) -> i32 {
     if let Err(e) = reject_unknown(
         args,
         "dse",
-        &["network", "system", "config", "objective", "policy", "sparsity", "noise"],
+        &["network", "system", "config", "objective", "policy", "sparsity", "noise", "threads"],
     ) {
         eprintln!("{e}");
         return 2;
     }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let net = match args.opt("network") {
         Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
         Some("resnet8") => imcsim::workload::resnet8(),
@@ -298,7 +312,7 @@ fn cmd_dse(args: &Args) -> i32 {
                 } else {
                     String::new()
                 };
-                dse_report(&net, sys, &opts, &tag);
+                dse_report(&net, sys, &opts, &tag, threads);
             }
         }
     }
@@ -313,10 +327,11 @@ fn dse_report(
     sys: &imcsim::arch::ImcSystem,
     opts: &DseOptions,
     tag: &str,
+    threads: usize,
 ) {
     let noise = opts.noise;
     let t0 = Instant::now();
-    let r = search_network(net, sys, opts);
+    let r = search_network_with(net, sys, opts, &ExhaustiveSearch, threads);
     println!(
         "\n=== {} on {}{tag} ({} layers, {:.1} ms search) ===",
         r.network,
@@ -409,12 +424,19 @@ fn cmd_sweep(args: &Args) -> i32 {
         "sweep",
         &[
             "shards", "shard-index", "cells", "precision", "sparsity", "noise", "csv",
-            "surface-csv", "cache-file",
+            "surface-csv", "cache-file", "threads",
         ],
     ) {
         eprintln!("{e}");
         return 2;
     }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let shards: usize = match args.opt_parse("shards").unwrap_or(Ok(1)) {
         Ok(n) if n >= 1 => n,
         _ => {
@@ -494,6 +516,7 @@ fn cmd_sweep(args: &Args) -> i32 {
             let opts = SweepOptions {
                 shards,
                 shard_index,
+                threads,
                 ..Default::default()
             };
             run_sweep_with_cache(&grid, &opts, &cache)
@@ -508,6 +531,7 @@ fn cmd_sweep(args: &Args) -> i32 {
                     let opts = SweepOptions {
                         shards,
                         shard_index: Some(k),
+                        threads,
                         ..Default::default()
                     };
                     if cache_file.is_some() {
@@ -519,7 +543,10 @@ fn cmd_sweep(args: &Args) -> i32 {
                 .collect();
             merge_summaries(&parts)
         }
-        None => run_sweep_with_cache(&grid, &SweepOptions::default(), &cache),
+        None => {
+            let opts = SweepOptions { threads, ..Default::default() };
+            run_sweep_with_cache(&grid, &opts, &cache)
+        }
     };
     println!("{}", sweep_text(&summary));
     println!("(evaluated in {:.2}s)", t0.elapsed().as_secs_f64());
@@ -566,10 +593,17 @@ fn cmd_sweep(args: &Args) -> i32 {
 fn cmd_sweepmerge(args: &Args) -> i32 {
     // same guard as sweep/dse: a misspelled --surface-csv must not
     // silently drop the surface artifact with exit 0
-    if let Err(e) = reject_unknown(args, "sweepmerge", &["csv", "surface-csv"]) {
+    if let Err(e) = reject_unknown(args, "sweepmerge", &["csv", "surface-csv", "threads"]) {
         eprintln!("{e}");
         return 2;
     }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     if args.positional.is_empty() {
         eprintln!(
             "sweepmerge needs at least one shard CSV \
@@ -577,25 +611,17 @@ fn cmd_sweepmerge(args: &Args) -> i32 {
         );
         return 2;
     }
-    let mut parts: Vec<SweepSummary> = Vec::new();
-    for path in &args.positional {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("cannot read {path}: {e}");
-                return 1;
-            }
-        };
-        let points = match parse_sweep_csv(&text) {
-            Ok(p) => p,
-            Err(e) => {
-                eprintln!("{path}: {e}");
-                return 1;
-            }
-        };
+    // Shard files parse independently, so read them on the same pool
+    // the sweep itself uses; parallel_map_with keeps input order, so
+    // the merged result is identical to the old serial loop's.
+    let n_shards = args.positional.len();
+    let parsed = parallel_map_with(&args.positional, threads, |path| {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        let points = parse_sweep_csv(&text).map_err(|e| format!("{path}: {e}"))?;
         let max_task = points.iter().map(|p| p.task_index + 1).max().unwrap_or(0);
-        parts.push(SweepSummary {
-            shards: args.positional.len(),
+        Ok::<SweepSummary, String>(SweepSummary {
+            shards: n_shards,
             shard_index: None,
             total_tasks: max_task,
             points,
@@ -604,7 +630,17 @@ fn cmd_sweepmerge(args: &Args) -> i32 {
             surfaces: Vec::new(),
             cache: CacheStats::default(),
             merged: false,
-        });
+        })
+    });
+    let mut parts: Vec<SweepSummary> = Vec::new();
+    for r in parsed {
+        match r {
+            Ok(s) => parts.push(s),
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
     }
     let merged = merge_summaries(&parts);
     println!(
@@ -638,10 +674,17 @@ fn cmd_archsweep(args: &Args) -> i32 {
     use imcsim::arch::{ImcFamily, ImcMacro, ImcSystem};
     use imcsim::dse::pareto_front;
 
-    if let Err(e) = reject_unknown(args, "archsweep", &["network", "family", "cells"]) {
+    if let Err(e) = reject_unknown(args, "archsweep", &["network", "family", "cells", "threads"]) {
         eprintln!("{e}");
         return 2;
     }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let net = match args.opt("network") {
         Some("ae") | Some("autoencoder") => imcsim::workload::deep_autoencoder(),
         Some("resnet8") => imcsim::workload::resnet8(),
@@ -700,7 +743,7 @@ fn cmd_archsweep(args: &Args) -> i32 {
                     &sys,
                     &DseOptions::default(),
                     &cache,
-                    imcsim::util::pool::default_threads(),
+                    threads,
                 );
                 // Pareto energy axis: macro + buffer level (DRAM traffic
                 // is geometry-independent and would flatten the sweep)

@@ -160,6 +160,12 @@ pub fn sweep_text(s: &SweepSummary) -> String {
         s.cache.trial_sims
     ));
     out.push_str(&format!(
+        "dedup: {} duplicated searches under concurrency ({}-stripe single-flight cache; \
+         0 means every unique key was computed exactly once)\n",
+        s.cache.duplicate_searches,
+        crate::sweep::CACHE_STRIPES
+    ));
+    out.push_str(&format!(
         "mapping search: {} candidates — {} evaluated, {} pruned by bound ({:.1}%)\n",
         s.cache.candidates(),
         s.cache.evaluated,
@@ -353,6 +359,8 @@ mod tests {
         assert!(text.contains("Pareto frontier"), "{text}");
         assert!(text.contains("cost cache:"), "{text}");
         assert!(text.contains("hit rate"), "{text}");
+        assert!(text.contains("dedup:"), "{text}");
+        assert!(text.contains("single-flight"), "{text}");
         assert!(text.contains("pruned by bound"), "{text}");
         assert!(text.contains("evaluated"), "{text}");
         // multi-precision summaries label frontiers with the point and

@@ -1,5 +1,5 @@
 //! Memoized cost-model cache for grid sweeps, split along the noise
-//! axis.
+//! axis and lock-striped for contention-free parallel lookups.
 //!
 //! The full survey × tinyMLPerf grid evaluates the same (macro
 //! geometry, layer shape) cost points over and over: networks repeat
@@ -31,10 +31,25 @@
 //! bit-identical to a direct noisy search (test-locked): the direct
 //! path also computes the nominal record first and then overwrites the
 //! trial slots with the same energies.
+//!
+//! # Concurrency layout (see `docs/COST_MODEL.md` §10)
+//!
+//! Each map is sharded across [`CACHE_STRIPES`] independently locked
+//! stripes selected by key hash, so concurrent lookups of different
+//! keys almost never touch the same mutex. Within a stripe, misses are
+//! **single-flight**: the first thread to miss a key installs an
+//! in-flight marker and computes outside the lock; concurrent lookups
+//! of the same key block on the stripe's condvar and reuse the
+//! published result instead of duplicating the mapping search. The
+//! [`CacheStats::duplicate_searches`] counter is a tripwire on that
+//! protocol — it stays zero unless two threads ever computed the same
+//! key, and CI gates on it staying zero.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arch::{ImcFamily, ImcSystem};
 use crate::dse::{
@@ -44,6 +59,14 @@ use crate::mapping::{SpatialMapping, TemporalPolicy};
 use crate::model::TechParams;
 use crate::sim::{NoiseSpec, NOISE_TRIALS};
 use crate::workload::{Layer, LayerType};
+
+/// Number of lock stripes each cache map is sharded across — a power
+/// of two so the stripe index is a mask of the key hash. Sixteen
+/// stripes match the worker-pool cap ([`crate::util::pool`] spawns at
+/// most 16 threads), keeping the probability that two concurrent
+/// lookups of *different* keys contend on one mutex low, for a few
+/// hundred bytes of stripe headers.
+pub const CACHE_STRIPES: usize = 16;
 
 /// Everything that determines the outcome of a layer mapping search
 /// and its nominal simulation — deliberately *excluding* the analog
@@ -190,22 +213,48 @@ pub struct TrialKey {
 
 /// Hit/miss and mapping-search counters of a [`CostCache`] (or of
 /// several merged shards).
+///
+/// **Snapshot semantics.** Every counter is individually monotone:
+/// [`CostCache::stats`] reads each atomic independently, so a snapshot
+/// taken mid-run may mix counter values from slightly different
+/// instants, but a later snapshot of the same cache is `>=` an earlier
+/// one field by field — [`CacheStats::since`] therefore never
+/// underflows. A `since` window attributes **every** event the cache
+/// served during the window, including lookups issued by *other* runs
+/// concurrently sharing the cache; deltas over overlapping windows can
+/// thus double-count shared activity (their sum is `>=` the cache's
+/// own totals), while the totals themselves stay exact and — thanks to
+/// single-flight — thread-count-invariant for `searches`, `trial_sims`
+/// and `entries`/`trial_entries`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups answered entirely from the cache (search entry hit, and
-    /// — where the corner needs them — trial energies hit too).
+    /// — where the corner needs them — trial energies hit too). A
+    /// lookup that blocked on another thread's in-flight computation
+    /// and reused its result counts here: it ran no search and no
+    /// trial simulation, exactly like a lookup arriving after the
+    /// result was published.
     pub hits: u64,
     /// Lookups whose search entry hit but whose σ corner was new: the
     /// split's payoff — the mapping search was reused and only the
     /// trial energies were simulated.
     pub cross_corner: u64,
-    /// Lookups that ran a full mapping search.
+    /// Lookups that ran a full mapping search. Single-flight makes
+    /// this exactly the number of unique [`SearchKey`]s computed,
+    /// regardless of thread count.
     pub searches: u64,
     /// Per-corner trial simulations run (each is one
     /// [`crate::sim::noise::trial_energies`] call — a few MVM passes,
-    /// orders of magnitude cheaper than a search).
+    /// orders of magnitude cheaper than a search). Single-flight makes
+    /// this exactly the number of unique [`TrialKey`]s computed.
     pub trial_sims: u64,
-    /// Search entries currently held.
+    /// Mapping searches (or trial simulations) whose published result
+    /// found the slot already filled by another thread — i.e. work the
+    /// single-flight protocol failed to deduplicate. Zero by
+    /// construction; CI gates on it staying zero
+    /// (`BENCH_sweep.json: .gate.duplicate_searches`).
+    pub duplicate_searches: u64,
+    /// Search entries currently held (in-flight markers excluded).
     pub entries: usize,
     /// Per-corner trial records currently held.
     pub trial_entries: usize,
@@ -267,6 +316,7 @@ impl CacheStats {
         self.cross_corner += other.cross_corner;
         self.searches += other.searches;
         self.trial_sims += other.trial_sims;
+        self.duplicate_searches += other.duplicate_searches;
         self.entries += other.entries;
         self.trial_entries += other.trial_entries;
         self.evaluated += other.evaluated;
@@ -276,13 +326,16 @@ impl CacheStats {
     /// Counters accumulated since an earlier snapshot of the *same*
     /// cache (`entries`/`trial_entries` stay the current totals). Lets
     /// a long-lived, possibly disk-warmed cache report per-run
-    /// statistics.
+    /// statistics. When several runs share one cache concurrently, a
+    /// window's delta includes the other runs' activity during the
+    /// window — see the type docs for the exact attribution rules.
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits - earlier.hits,
             cross_corner: self.cross_corner - earlier.cross_corner,
             searches: self.searches - earlier.searches,
             trial_sims: self.trial_sims - earlier.trial_sims,
+            duplicate_searches: self.duplicate_searches - earlier.duplicate_searches,
             entries: self.entries,
             trial_entries: self.trial_entries,
             evaluated: self.evaluated - earlier.evaluated,
@@ -291,23 +344,188 @@ impl CacheStats {
     }
 }
 
+/// One entry of a striped map: either the published value or a marker
+/// that some thread is currently computing it.
+enum Slot<V> {
+    InFlight,
+    Ready(V),
+}
+
+/// One lock stripe: a fraction of the key space under its own mutex,
+/// plus the condvar single-flight waiters block on.
+struct Stripe<K, V> {
+    slots: Mutex<HashMap<K, Slot<V>>>,
+    published: Condvar,
+}
+
+/// A hash map sharded across [`CACHE_STRIPES`] independently locked
+/// stripes, with single-flight miss resolution: [`Striped::get_or_claim`]
+/// either returns a ready value (waiting out another thread's in-flight
+/// computation if necessary) or hands the caller an exclusive
+/// [`Claim`] obligating it to compute and publish.
+struct Striped<K, V> {
+    stripes: Vec<Stripe<K, V>>,
+}
+
+/// Outcome of [`Striped::get_or_claim`].
+enum Lookup<'a, K: Hash + Eq + Clone, V: Clone> {
+    /// The value was (or became) available without this thread
+    /// computing anything.
+    Ready(V),
+    /// The key is this thread's to compute: publish the result through
+    /// the claim (dropping it unpublished withdraws the in-flight
+    /// marker so a waiter can claim instead of blocking forever).
+    Claimed(Claim<'a, K, V>),
+}
+
+/// Exclusive right (and obligation) to compute one key's value.
+struct Claim<'a, K: Hash + Eq + Clone, V: Clone> {
+    stripe: &'a Stripe<K, V>,
+    /// Taken by [`Claim::publish`]; still present in `drop` only if the
+    /// computation unwound before publishing.
+    key: Option<K>,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> Claim<'_, K, V> {
+    /// Install the computed value and wake every waiter. Returns true
+    /// iff the slot already held a ready value — i.e. another thread
+    /// duplicated this computation, which single-flight rules out;
+    /// callers surface it as [`CacheStats::duplicate_searches`].
+    fn publish(mut self, value: V) -> bool {
+        let key = self.key.take().expect("claim published twice");
+        let mut slots = self.stripe.slots.lock().unwrap();
+        let duplicated = matches!(slots.get(&key), Some(Slot::Ready(_)));
+        slots.insert(key, Slot::Ready(value));
+        self.stripe.published.notify_all();
+        duplicated
+    }
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> Drop for Claim<'_, K, V> {
+    fn drop(&mut self) {
+        // reached with the key still held only if the computation
+        // panicked (or was otherwise abandoned): withdraw the marker
+        // so waiters re-claim rather than deadlock
+        if let Some(key) = self.key.take() {
+            let mut slots = self.stripe.slots.lock().unwrap();
+            if matches!(slots.get(&key), Some(Slot::InFlight)) {
+                slots.remove(&key);
+            }
+            self.stripe.published.notify_all();
+        }
+    }
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> Striped<K, V> {
+    fn new() -> Self {
+        Striped {
+            stripes: (0..CACHE_STRIPES)
+                .map(|_| Stripe {
+                    slots: Mutex::new(HashMap::new()),
+                    published: Condvar::new(),
+                })
+                .collect(),
+        }
+    }
+
+    /// The stripe owning `key`. `DefaultHasher::new()` is seed-free,
+    /// so the assignment is deterministic within a process — not that
+    /// it matters for output: stripes only partition lock ownership.
+    fn stripe(&self, key: &K) -> &Stripe<K, V> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.stripes[(h.finish() as usize) & (CACHE_STRIPES - 1)]
+    }
+
+    /// The single-flight lookup: a ready value, or an exclusive claim
+    /// to compute one. Blocks while another thread holds the claim.
+    fn get_or_claim(&self, key: &K) -> Lookup<'_, K, V> {
+        let stripe = self.stripe(key);
+        let mut slots = stripe.slots.lock().unwrap();
+        loop {
+            match slots.get(key) {
+                Some(Slot::Ready(v)) => return Lookup::Ready(v.clone()),
+                Some(Slot::InFlight) => slots = stripe.published.wait(slots).unwrap(),
+                None => {
+                    slots.insert(key.clone(), Slot::InFlight);
+                    return Lookup::Claimed(Claim {
+                        stripe,
+                        key: Some(key.clone()),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Non-blocking read of a published value (the seed-index path —
+    /// a stale/absent read only weakens a warm start, never correctness).
+    fn get(&self, key: &K) -> Option<V> {
+        match self.stripe(key).slots.lock().unwrap().get(key) {
+            Some(Slot::Ready(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    /// Unconditional publish (seed-index updates and disk preloads).
+    fn insert(&self, key: K, value: V) {
+        let stripe = self.stripe(&key);
+        stripe.slots.lock().unwrap().insert(key, Slot::Ready(value));
+        stripe.published.notify_all();
+    }
+
+    /// Number of published entries (in-flight markers excluded).
+    fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| {
+                s.slots
+                    .lock()
+                    .unwrap()
+                    .values()
+                    .filter(|v| matches!(v, Slot::Ready(_)))
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Clone out every published entry.
+    fn snapshot(&self) -> Vec<(K, V)> {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            for (k, v) in stripe.slots.lock().unwrap().iter() {
+                if let Slot::Ready(v) = v {
+                    out.push((k.clone(), v.clone()));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> Default for Striped<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Thread-safe memoized layer-search cache, split along the noise axis
-/// (see the module docs). Plugs into network search as a
-/// [`LayerEvaluator`]. Misses are computed outside the lock, so
-/// concurrent first lookups of the same key may both evaluate (both
-/// count; the first insert wins).
+/// and lock-striped with single-flight miss resolution (see the module
+/// docs). Plugs into network search as a [`LayerEvaluator`]. Misses
+/// are computed outside the lock under an in-flight marker, so exactly
+/// one thread runs the mapping search per unique [`SearchKey`] —
+/// concurrent lookups of the same key block briefly and count as hits.
 ///
 /// **Contract of [`CostCache::get_or_compute`].** The returned
 /// [`LayerSearch`] is bit-identical to
 /// `crate::dse::search_layer_all_noisy(layer, sys, tech, input_sparsity,
 /// policy, noise)` for every input, regardless of cache temperature,
-/// lookup order, or which σ corner populated the search entry. The
-/// noise spec enters *only* the trial-energy lookup: it never
-/// influences which mapping search runs, and two specs with equal
-/// [`NoiseSpec::fingerprint`]s share one trial record. σ corners that
-/// provably have no trial statistics — every DIMC design, and any spec
-/// whose σs are all zero — skip the trial map entirely and return the
-/// nominal record.
+/// lookup order, thread count, or which σ corner populated the search
+/// entry. The noise spec enters *only* the trial-energy lookup: it
+/// never influences which mapping search runs, and two specs with
+/// equal [`NoiseSpec::fingerprint`]s share one trial record. σ corners
+/// that provably have no trial statistics — every DIMC design, and any
+/// spec whose σs are all zero — skip the trial map entirely and return
+/// the nominal record.
 ///
 /// **Cross-layer bound carryover.** Beside the two result maps, the
 /// cache keeps the winning (spatial, policy) candidates of every search
@@ -321,14 +539,15 @@ impl CacheStats {
 /// which setting happened to be searched first.
 #[derive(Default)]
 pub struct CostCache {
-    searches: Mutex<HashMap<SearchKey, LayerSearch>>,
-    trials: Mutex<HashMap<TrialKey, [f64; NOISE_TRIALS]>>,
+    searches: Striped<SearchKey, Arc<LayerSearch>>,
+    trials: Striped<TrialKey, [f64; NOISE_TRIALS]>,
     /// Winning mappings per sparsity-erased key (the seed index).
-    seeds: Mutex<HashMap<SearchKey, Vec<(SpatialMapping, TemporalPolicy)>>>,
+    seeds: Striped<SearchKey, Vec<(SpatialMapping, TemporalPolicy)>>,
     hits: AtomicU64,
     cross_corner: AtomicU64,
     searches_run: AtomicU64,
     trial_sims: AtomicU64,
+    duplicate_searches: AtomicU64,
     evaluated: AtomicU64,
     pruned: AtomicU64,
 }
@@ -339,25 +558,30 @@ impl CostCache {
         Self::default()
     }
 
-    /// Snapshot the counters.
+    /// Snapshot the counters. Each atomic is read independently (no
+    /// global stats lock), so a mid-run snapshot may mix instants; see
+    /// [`CacheStats`] for why `since` deltas stay well-defined anyway.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             cross_corner: self.cross_corner.load(Ordering::Relaxed),
             searches: self.searches_run.load(Ordering::Relaxed),
             trial_sims: self.trial_sims.load(Ordering::Relaxed),
-            entries: self.searches.lock().unwrap().len(),
-            trial_entries: self.trials.lock().unwrap().len(),
+            duplicate_searches: self.duplicate_searches.load(Ordering::Relaxed),
+            entries: self.searches.len(),
+            trial_entries: self.trials.len(),
             evaluated: self.evaluated.load(Ordering::Relaxed),
             pruned: self.pruned.load(Ordering::Relaxed),
         }
     }
 
     /// Memoized [`crate::dse::search_layer_all_noisy`]: the search
-    /// coordinates select (or run) one noise-erased mapping search; the
-    /// noise spec separately selects (or simulates) the σ corner's
-    /// trial energies, spliced in via [`LayerSearch::with_trial_noise`].
-    /// See the type docs for the full contract.
+    /// coordinates select (or run, under single-flight) one
+    /// noise-erased mapping search; the noise spec separately selects
+    /// (or simulates) the σ corner's trial energies, spliced in via
+    /// [`LayerSearch::with_trial_noise`]. Hits hand back the shared
+    /// `Arc` without cloning the record. See the type docs for the
+    /// full contract.
     pub fn get_or_compute(
         &self,
         layer: &Layer,
@@ -366,40 +590,28 @@ impl CostCache {
         input_sparsity: f64,
         policy: Option<TemporalPolicy>,
         noise: NoiseSpec,
-    ) -> LayerSearch {
+    ) -> Arc<LayerSearch> {
         let key = SearchKey::new(layer, sys, tech, input_sparsity, policy);
         // DIMC has no analog node and zero-σ specs perturb nothing:
         // their records carry the nominal trial slots, so the search
         // entry alone answers the lookup
         let needs_trials = !noise.is_off() && sys.imc.family == ImcFamily::Aimc;
-        let cached = self.searches.lock().unwrap().get(&key).cloned();
-        let search_hit = cached.is_some();
-        let search = match cached {
-            Some(hit) => hit,
-            None => {
+        let (search, search_hit) = match self.searches.get_or_claim(&key) {
+            Lookup::Ready(hit) => (hit, true),
+            Lookup::Claimed(claim) => {
                 self.searches_run.fetch_add(1, Ordering::Relaxed);
                 let seed_key = key.seed_key();
-                let seeds = self
-                    .seeds
-                    .lock()
-                    .unwrap()
-                    .get(&seed_key)
-                    .cloned()
-                    .unwrap_or_default();
+                let seeds = self.seeds.get(&seed_key).unwrap_or_default();
                 let search =
                     search_layer_all_seeded(layer, sys, tech, input_sparsity, policy, &seeds);
                 self.evaluated.fetch_add(search.evaluated as u64, Ordering::Relaxed);
                 self.pruned.fetch_add(search.pruned as u64, Ordering::Relaxed);
-                self.seeds
-                    .lock()
-                    .unwrap()
-                    .insert(seed_key, search.seed_mappings());
-                self.searches
-                    .lock()
-                    .unwrap()
-                    .entry(key.clone())
-                    .or_insert(search)
-                    .clone()
+                self.seeds.insert(seed_key, search.seed_mappings());
+                let search = Arc::new(search);
+                if claim.publish(search.clone()) {
+                    self.duplicate_searches.fetch_add(1, Ordering::Relaxed);
+                }
+                (search, false)
             }
         };
         if !needs_trials {
@@ -412,59 +624,53 @@ impl CostCache {
             search: key,
             noise_bits: noise.fingerprint(),
         };
-        if let Some(trials) = self.trials.lock().unwrap().get(&tkey).copied() {
-            if search_hit {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+        match self.trials.get_or_claim(&tkey) {
+            Lookup::Ready(trials) => {
+                if search_hit {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Arc::new(search.with_trial_noise(trials))
             }
-            return search.with_trial_noise(trials);
+            Lookup::Claimed(claim) => {
+                if search_hit {
+                    self.cross_corner.fetch_add(1, Ordering::Relaxed);
+                }
+                self.trial_sims.fetch_add(1, Ordering::Relaxed);
+                let trials = crate::sim::noise::trial_energies(layer, &sys.imc, noise, 1)
+                    // unreachable given needs_trials, but a missing transfer
+                    // must never invent statistics: keep the nominal slots
+                    .unwrap_or(search.accuracy().trial_noise);
+                if claim.publish(trials) {
+                    self.duplicate_searches.fetch_add(1, Ordering::Relaxed);
+                }
+                Arc::new(search.with_trial_noise(trials))
+            }
         }
-        if search_hit {
-            self.cross_corner.fetch_add(1, Ordering::Relaxed);
-        }
-        self.trial_sims.fetch_add(1, Ordering::Relaxed);
-        let trials = crate::sim::noise::trial_energies(layer, &sys.imc, noise, 1)
-            // unreachable given needs_trials, but a missing transfer
-            // must never invent statistics: keep the nominal slots
-            .unwrap_or(search.accuracy().trial_noise);
-        self.trials.lock().unwrap().insert(tkey, trials);
-        search.with_trial_noise(trials)
     }
 
     /// Pre-seed a search entry without touching the counters (the
     /// disk-cache load path). The entry's winners also join the seed
     /// index, so a warm cache warm-starts sparsities it has not seen.
     pub(crate) fn preload_search(&self, key: SearchKey, search: LayerSearch) {
-        self.seeds
-            .lock()
-            .unwrap()
-            .insert(key.seed_key(), search.seed_mappings());
-        self.searches.lock().unwrap().insert(key, search);
+        self.seeds.insert(key.seed_key(), search.seed_mappings());
+        self.searches.insert(key, Arc::new(search));
     }
 
     /// Pre-seed one σ corner's trial energies without touching the
     /// counters (the disk-cache load path).
     pub(crate) fn preload_trials(&self, key: TrialKey, trials: [f64; NOISE_TRIALS]) {
-        self.trials.lock().unwrap().insert(key, trials);
+        self.trials.insert(key, trials);
     }
 
-    /// Clone out every search entry (the disk-cache save path).
-    pub(crate) fn snapshot_searches(&self) -> Vec<(SearchKey, LayerSearch)> {
-        self.searches
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), v.clone()))
-            .collect()
+    /// Share out every search entry (the disk-cache save path); the
+    /// `Arc`s alias the live cache entries, so nothing is deep-cloned.
+    pub(crate) fn snapshot_searches(&self) -> Vec<(SearchKey, Arc<LayerSearch>)> {
+        self.searches.snapshot()
     }
 
     /// Clone out every trial record (the disk-cache save path).
     pub(crate) fn snapshot_trials(&self) -> Vec<(TrialKey, [f64; NOISE_TRIALS])> {
-        self.trials
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), *v))
-            .collect()
+        self.trials.snapshot()
     }
 }
 
@@ -707,5 +913,77 @@ mod tests {
         // one search pass served all three objectives
         let s = cache.stats();
         assert_eq!((s.hits, s.searches), (2, 1));
+    }
+
+    #[test]
+    fn concurrent_overlapping_lookups_run_each_search_once() {
+        // the single-flight stress: many threads hammer the same
+        // (layer × corner) settings concurrently, every thread starting
+        // at a different rotation so claims collide from every angle.
+        // Exactly one mapping search per unique SearchKey and one trial
+        // sim per unique TrialKey may run, nothing may be duplicated,
+        // and every returned record must be bit-identical to the
+        // serial reference.
+        let (sys, tech) = ctx();
+        let cache = CostCache::new();
+        let layers = [Layer::dense("fc_a", 64, 256), Layer::dense("fc_b", 128, 640)];
+        let corners = [NoiseSpec::Off, NoiseSpec::Typical, NoiseSpec::Worst];
+        let settings: Vec<(&Layer, NoiseSpec)> = layers
+            .iter()
+            .flat_map(|l| corners.iter().map(move |&c| (l, c)))
+            .collect();
+        let reference: Vec<LayerSearch> = settings
+            .iter()
+            .map(|(l, c)| {
+                crate::dse::search_layer_all_noisy(l, &sys, &tech, DEFAULT_SPARSITY, None, *c)
+            })
+            .collect();
+        let n_threads = 8;
+        let rounds = 3;
+        std::thread::scope(|scope| {
+            for t in 0..n_threads {
+                let cache = &cache;
+                let sys = &sys;
+                let tech = &tech;
+                let settings = &settings;
+                let reference = &reference;
+                scope.spawn(move || {
+                    for r in 0..rounds {
+                        for i in 0..settings.len() {
+                            let j = (i + t + r) % settings.len();
+                            let (l, spec) = settings[j];
+                            let got =
+                                cache.get_or_compute(l, sys, tech, DEFAULT_SPARSITY, None, spec);
+                            let want = &reference[j];
+                            assert_eq!(got.accuracy(), want.accuracy());
+                            for objective in COST_OBJECTIVES {
+                                assert_eq!(
+                                    got.best(objective).total_energy_fj().to_bits(),
+                                    want.best(objective).total_energy_fj().to_bits()
+                                );
+                                assert_eq!(
+                                    got.best(objective).time_ns.to_bits(),
+                                    want.best(objective).time_ns.to_bits()
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        // single-flight: searches == unique SearchKeys (the corner
+        // axis is erased from the key), trial sims == unique TrialKeys
+        // (AIMC × non-off corners only), zero duplicated work
+        assert_eq!(s.searches, layers.len() as u64);
+        assert_eq!(s.trial_sims, (layers.len() * 2) as u64);
+        assert_eq!(s.duplicate_searches, 0);
+        assert_eq!(s.entries, layers.len());
+        assert_eq!(s.trial_entries, layers.len() * 2);
+        // every lookup was accounted to exactly one of hits /
+        // cross_corner / searches — none was double- or un-counted
+        let total_calls = (n_threads * rounds * settings.len()) as u64;
+        assert_eq!(s.lookups(), total_calls);
+        assert_eq!(s.hits + s.cross_corner + s.searches, total_calls);
     }
 }

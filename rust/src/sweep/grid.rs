@@ -34,11 +34,13 @@
 //! frontiers and surfaces — that a single-shard run produces, for any
 //! shard count.
 
+use std::sync::Arc;
+
 use crate::arch::{ImcFamily, ImcSystem, Precision};
 use crate::db;
 use crate::dse::{
-    pareto_front, pareto_front_3d, LayerResult, NetworkResult, Objective, COST_OBJECTIVES,
-    DEFAULT_SPARSITY,
+    pareto_front, pareto_front_3d, LayerResult, LayerSearch, NetworkResult, Objective,
+    COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use crate::model::TechParams;
 use crate::sim::{AccuracyRecord, NoiseSpec};
@@ -255,7 +257,11 @@ pub struct SweepOptions {
 
     /// Evaluate only this shard (`None`: the whole grid).
     pub shard_index: Option<usize>,
-    /// Worker threads for the group-level fan-out.
+    /// Worker threads for the (group × layer) task fan-out. The
+    /// scheduler expands every evaluation group into one work item per
+    /// layer, so the effective parallelism is bounded by the layer-task
+    /// count, not the (much smaller) group count; the output is
+    /// bit-identical for every value (see `docs/COST_MODEL.md` §10).
     pub threads: usize,
 }
 
@@ -392,13 +398,27 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepSummary {
 }
 
 /// Evaluate the grid (or one shard of it) through an explicit — and
-/// possibly disk-warmed or shared — cost cache. *(design, network,
-/// precision, sparsity, noise)* groups fan out over the thread pool;
-/// every group searches each layer once through the memoized cache
-/// (serially, so identical keys never race) and materializes one grid
-/// point per objective from that single pass. The summary reports only
-/// the statistics this run accumulated, so reusing one cache across
-/// several runs keeps each summary honest.
+/// possibly disk-warmed or shared — cost cache, on the two-level
+/// (group × layer) scheduler:
+///
+/// 1. every *(design, network, precision, sparsity, noise)* group is
+///    realized (precision applied, invalid groups skipped) and expanded
+///    into one work item per layer;
+/// 2. the flat layer-task list fans out over the thread pool — so the
+///    effective parallelism is bounded by the layer count, not the
+///    group count, and concurrent corners of one setting overlap on
+///    the cache's single-flight miss resolution instead of duplicating
+///    the mapping search;
+/// 3. each group's grid points (one per objective) are assembled from
+///    its input-ordered slice of the layer-search results.
+///
+/// Every layer search is a pure function of its grid coordinates (the
+/// cache's `get_or_compute` contract), and assembly reads the results
+/// in canonical group order, so the emitted points are bit-identical
+/// for every thread count, shard split and cache temperature. The
+/// summary reports only the statistics this run accumulated, so
+/// reusing one cache across several runs keeps each summary honest
+/// (see [`CacheStats`] for the concurrent-window attribution rules).
 pub fn run_sweep_with_cache(
     grid: &SweepGrid,
     opts: &SweepOptions,
@@ -410,8 +430,26 @@ pub fn run_sweep_with_cache(
         None => (0..grid.n_groups()).collect(),
     };
     let stats_before = cache.stats();
-    let points: Vec<GridPoint> = parallel_map_with(&groups, opts.threads, |&group| {
-        eval_group(grid, group, cache)
+    // level 1: realize the groups (cheap, validity filtering included)
+    // and flatten them into (group, layer) work items
+    let realized: Vec<RealizedGroup> =
+        groups.iter().filter_map(|&g| realize_group(grid, g)).collect();
+    let mut items: Vec<(usize, usize)> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::with_capacity(realized.len());
+    for (gi, r) in realized.iter().enumerate() {
+        offsets.push(items.len());
+        items.extend((0..r.net.layers.len()).map(|li| (gi, li)));
+    }
+    let searches: Vec<Arc<LayerSearch>> = parallel_map_with(&items, opts.threads, |&(gi, li)| {
+        let r = &realized[gi];
+        cache.get_or_compute(&r.net.layers[li], &r.sys, &r.tech, r.sparsity, None, r.noise)
+    });
+    // level 2: assemble each group's objective rows from its slice of
+    // the layer-search results (order restored by the offsets table)
+    let group_indices: Vec<usize> = (0..realized.len()).collect();
+    let points: Vec<GridPoint> = parallel_map_with(&group_indices, opts.threads, |&gi| {
+        let r = &realized[gi];
+        group_points(grid, r, &searches[offsets[gi]..offsets[gi] + r.net.layers.len()])
     })
     .into_iter()
     .flatten()
@@ -432,13 +470,25 @@ pub fn run_sweep_with_cache(
     }
 }
 
-/// Map one network onto one design at one (precision, sparsity, noise)
-/// and emit a grid point per objective, all served by a single
-/// all-objective search per layer. Returns no points when the design
-/// cannot realize the precision (validity filtering — the skip is a
-/// pure function of the grid coordinates, so it is shard-independent).
-fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoint> {
-    let n_obj = grid.objectives.len();
+/// One evaluation group realized for execution: its canonical group
+/// index, precision-applied system and the remaining axis coordinates.
+/// The scheduler expands it into per-layer work items and later
+/// assembles its grid points from their results.
+struct RealizedGroup<'a> {
+    group: usize,
+    sys: ImcSystem,
+    tech: TechParams,
+    net: &'a Network,
+    precision: PrecisionPoint,
+    sparsity: f64,
+    noise: NoiseSpec,
+}
+
+/// Decode one group's grid coordinates and apply its precision point.
+/// `None` when the design cannot realize the precision (validity
+/// filtering — the skip is a pure function of the grid coordinates, so
+/// it is shard- and thread-independent).
+fn realize_group(grid: &SweepGrid, group: usize) -> Option<RealizedGroup<'_>> {
     let n_noise = grid.noises.len();
     let n_sp = grid.sparsities.len();
     let n_prec = grid.precisions.len();
@@ -448,21 +498,35 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
     let precision = grid.precisions[(group / (n_noise * n_sp)) % n_prec];
     let sparsity = grid.sparsities[(group / n_noise) % n_sp];
     let noise = grid.noises[group % n_noise];
-    let sys = match precision.apply(base) {
-        Some(sys) => sys,
-        None => return Vec::new(),
-    };
-    let sys = &sys;
+    let sys = precision.apply(base)?;
     let tech = TechParams::for_node(sys.imc.tech_nm);
-    let searches: Vec<_> = net
-        .layers
-        .iter()
-        .map(|l| cache.get_or_compute(l, sys, &tech, sparsity, None, noise))
-        .collect();
+    Some(RealizedGroup {
+        group,
+        sys,
+        tech,
+        net,
+        precision,
+        sparsity,
+        noise,
+    })
+}
+
+/// Emit one group's grid point per objective from its layer-search
+/// results (in network layer order), all served by the single
+/// all-objective search pass each layer item ran.
+fn group_points(
+    grid: &SweepGrid,
+    rg: &RealizedGroup<'_>,
+    searches: &[Arc<LayerSearch>],
+) -> Vec<GridPoint> {
+    let n_obj = grid.objectives.len();
+    let sys = &rg.sys;
+    let net = rg.net;
+    let (precision, sparsity, noise) = (rg.precision, rg.sparsity, rg.noise);
     // network accuracy: layer records pooled in network order
     // (mapping- and objective-invariant, so computed once per group)
     let mut accuracy = AccuracyRecord::default();
-    for s in &searches {
+    for s in searches {
         accuracy.merge(s.accuracy());
     }
     grid.objectives
@@ -472,7 +536,7 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
             let layers: Vec<LayerResult> = net
                 .layers
                 .iter()
-                .zip(&searches)
+                .zip(searches)
                 .map(|(l, s)| s.to_result(l, objective))
                 .collect();
             let r = NetworkResult {
@@ -481,7 +545,7 @@ fn eval_group(grid: &SweepGrid, group: usize, cache: &CostCache) -> Vec<GridPoin
                 layers,
             };
             GridPoint {
-                task_index: group * n_obj + oi,
+                task_index: rg.group * n_obj + oi,
                 design: sys.name.clone(),
                 family: sys.imc.family,
                 n_macros: sys.n_macros,
@@ -930,9 +994,11 @@ mod tests {
             assert_eq!(p.task_index, i);
             assert!(p.energy_fj > 0.0 && p.time_ns > 0.0);
         }
-        // the autoencoder repeats its 128×128 stack, and layers within a
-        // group are searched serially — hits are deterministic, not racy
+        // the autoencoder repeats its 128×128 stack; single-flight
+        // makes the hit count deterministic even though layer items run
+        // concurrently — hits = lookups − unique keys
         assert!(s.cache.hits > 0, "no cache hits: {:?}", s.cache);
+        assert_eq!(s.cache.duplicate_searches, 0);
         // one frontier, for the one network, and it is non-empty
         assert_eq!(s.frontiers.len(), 1);
         assert!(!s.frontiers[0].1.is_empty());

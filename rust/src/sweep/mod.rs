@@ -14,13 +14,18 @@
 //!   runs the mapping search once, not M times. Identical layer shapes
 //!   across networks and objectives are searched once; a re-quantized
 //!   design keys differently by construction, so precision points can
-//!   never alias in the cache.
+//!   never alias in the cache. The maps are lock-striped
+//!   ([`cache::CACHE_STRIPES`] stripes by key hash) with single-flight
+//!   miss resolution: concurrent lookups of one key run exactly one
+//!   search, tracked by [`CacheStats::duplicate_searches`] (a tripwire
+//!   CI keeps at zero).
 //! * [`grid`] — grid construction (SRAM-cell budget, precision and
 //!   activation-sparsity axes), deterministic sharding
-//!   (`--shards`/`--shard-index`), parallel execution and shard-result
-//!   merging. The shard-determinism invariant: points and Pareto
-//!   frontiers are bit-identical for any shard count, because tasks are
-//!   canonically numbered, whole evaluation groups are dealt
+//!   (`--shards`/`--shard-index`), the two-level (group × layer) task
+//!   scheduler (`--threads`) and shard-result merging. The determinism
+//!   invariant: points and Pareto frontiers are bit-identical for any
+//!   shard count, thread count and cache temperature, because tasks
+//!   are canonically numbered, whole evaluation groups are dealt
 //!   round-robin, and every per-point computation is a pure function of
 //!   the grid coordinates.
 //! * [`persist`] — bit-exact on-disk serialization of the cost cache
@@ -38,7 +43,7 @@ pub mod cache;
 pub mod grid;
 pub mod persist;
 
-pub use cache::{CacheStats, CostCache, SearchKey, TrialKey};
+pub use cache::{CacheStats, CostCache, SearchKey, TrialKey, CACHE_STRIPES};
 pub use grid::{
     merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, PrecisionPoint, SweepGrid,
     SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,

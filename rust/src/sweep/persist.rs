@@ -513,7 +513,9 @@ fn search_from_json(j: &Json) -> Option<LayerSearch> {
 // ---- file API ------------------------------------------------------------
 
 /// Serialize every cache entry — search entries and per-corner trial
-/// records — to `path` (atomic-enough: full rewrite).
+/// records — to `path` (atomic-enough: full rewrite). The search
+/// snapshot shares the cache's `Arc<LayerSearch>` entries, so saving
+/// never deep-clones a record.
 pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
     // serialize each key once; sort on the prebuilt string for a
     // deterministic file

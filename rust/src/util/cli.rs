@@ -107,6 +107,22 @@ pub fn reject_unknown(args: &Args, cmd: &str, known: &[&str]) -> Result<(), Stri
     Ok(())
 }
 
+/// Parse the shared `--threads N` option: the worker count for the
+/// sweep/DSE thread pools. Absent → [`default_threads`] (which itself
+/// honours `IMCSIM_THREADS`); present → a positive integer. The flag
+/// takes precedence over the environment variable because it is the
+/// more specific request.
+pub fn parse_threads(args: &Args) -> Result<usize, String> {
+    match args.opt_parse::<usize>("threads") {
+        None => Ok(crate::util::pool::default_threads()),
+        Some(Ok(n)) if n >= 1 => Ok(n),
+        Some(_) => Err(format!(
+            "--threads must be a positive integer (got '{}')",
+            args.opt_or("threads", "")
+        )),
+    }
+}
+
 /// Parse a comma-separated option value list (`--cells 294912,147456`).
 pub fn parse_list<T: std::str::FromStr>(raw: &str, what: &str) -> Result<Vec<T>, String> {
     let vals: Result<Vec<T>, _> = raw
@@ -268,6 +284,20 @@ mod tests {
         let a = parse("sweep --csv");
         let err = reject_unknown(&a, "sweep", &["csv"]).unwrap_err();
         assert_eq!(err, "--csv requires a value");
+    }
+
+    #[test]
+    fn parse_threads_defaults_and_validates() {
+        assert_eq!(
+            parse_threads(&parse("sweep")).unwrap(),
+            crate::util::pool::default_threads()
+        );
+        assert_eq!(parse_threads(&parse("sweep --threads 1")).unwrap(), 1);
+        assert_eq!(parse_threads(&parse("sweep --threads=16")).unwrap(), 16);
+        for bad in ["sweep --threads 0", "sweep --threads eight", "sweep --threads -2"] {
+            let err = parse_threads(&parse(bad)).unwrap_err();
+            assert!(err.contains("--threads must be a positive integer"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! The DSE engine evaluates thousands of independent (layer × mapping)
 //! cost points; [`parallel_map`] fans them out over a fixed worker count
 //! with a simple atomic work index (dynamic load balancing, no unsafe).
+//! Results are collected into **chunked result slots**: one slot per
+//! worker, not per item — each worker accumulates its `(index, result)`
+//! pairs locally and parks the whole chunk with a single lock operation
+//! when it drains the queue, so a million-item map costs `threads`
+//! mutexes instead of a million.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -40,8 +45,13 @@ where
 /// more — so callers may pass a global thread budget to a tiny batch
 /// (e.g. the K seeded noise trials of [`crate::sim::noise`]) without
 /// paying for idle threads. With one effective worker the items are
-/// mapped inline on the calling thread (no spawn at all). Results
-/// always come back in input order regardless of completion order.
+/// mapped inline on the calling thread (no spawn at all).
+///
+/// Work is claimed dynamically through one atomic index; each worker
+/// tags its results with their input index and parks them in its own
+/// chunk slot, and the chunks are reassembled into input order after
+/// the scope joins — results always come back in input order
+/// regardless of completion order or which worker ran which item.
 pub fn parallel_map_with<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -58,24 +68,39 @@ where
     }
 
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    // one result chunk per worker, not one mutex per item: a worker
+    // touches its slot exactly once, after draining the work queue
+    let chunks: Vec<Mutex<Vec<(usize, R)>>> = (0..threads).map(|_| Mutex::new(Vec::new())).collect();
 
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        for chunk in &chunks {
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(&items[i])));
                 }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
+                *chunk.lock().unwrap() = local;
             });
         }
     });
 
-    results
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for chunk in chunks {
+        for (i, r) in chunk.into_inner().unwrap() {
+            debug_assert!(slots[i].is_none(), "item {i} mapped twice");
+            slots[i] = Some(r);
+        }
+    }
+    slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker failed to fill slot"))
+        .map(|s| s.expect("worker failed to fill slot"))
         .collect()
 }
 
@@ -167,6 +192,23 @@ mod tests {
             x + 1
         });
         assert_eq!(out, (1..=64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn chunked_slots_reassemble_every_index_exactly_once() {
+        // the chunked-result-slot contract: worker-local chunks cover
+        // the index space as a partition (every index exactly once),
+        // and reassembly restores input order even when per-item
+        // durations scatter items across workers unpredictably
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map_with(&items, 8, |&x| {
+            if x % 37 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(300));
+            }
+            x * 7 + 1
+        });
+        assert_eq!(out.len(), items.len());
+        assert_eq!(out, items.iter().map(|x| x * 7 + 1).collect::<Vec<_>>());
     }
 
     #[test]

@@ -437,10 +437,11 @@ fn grid_run_reports_cache_hits() {
     let s = run_sweep(&grid, &SweepOptions::default());
     assert!(s.cache.hits > 0, "expected cache hits on the grid run");
     assert!(s.cache.hit_rate() > 0.0);
-    // Layers inside a (design, network) group are searched serially, so
-    // intra-network shape repeats hit deterministically: the AE's
-    // 128×128 stack repeats 5 of 10 layers, DS-CNN's dw/pw stages 6 of
-    // 10 — at least a quarter of all lookups must hit.
+    // Single-flight makes the hit count deterministic even though the
+    // scheduler fans layer items out concurrently (hits = lookups −
+    // unique keys): the AE's 128×128 stack repeats 5 of 10 layers,
+    // DS-CNN's dw/pw stages 6 of 10 — at least a quarter of all
+    // lookups must hit.
     assert!(
         s.cache.hits >= s.cache.lookups() / 4,
         "hits {} < lookups/4 ({})",
@@ -451,6 +452,87 @@ fn grid_run_reports_cache_hits() {
     // share a single search pass
     let total_layers: usize = grid.networks.iter().map(|n| n.layers.len()).sum();
     assert_eq!(s.cache.lookups() as usize, grid.systems.len() * total_layers);
+}
+
+#[test]
+fn grid_points_identical_across_thread_counts() {
+    // the two-level scheduler's determinism invariant, end to end: the
+    // layer fan-out order changes with the worker count, but the
+    // emitted points must not — trial statistics under analog noise
+    // included. The CI `thread-determinism` job checks the same
+    // property on the full default grid by comparing CSV bytes.
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    grid.noises = vec![NoiseSpec::Off, NoiseSpec::Typical];
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let cache = CostCache::new();
+        let opts = SweepOptions { threads, ..Default::default() };
+        runs.push(run_sweep_with_cache(&grid, &opts, &cache));
+    }
+    let serial = &runs[0];
+    for s in &runs[1..] {
+        points_equal(serial, s);
+        assert_eq!(serial.frontiers, s.frontiers);
+        assert_eq!(serial.accuracy_frontiers, s.accuracy_frontiers);
+        assert_eq!(serial.surfaces, s.surfaces);
+        // single-flight makes the work totals thread-count invariant
+        // too: every unique key is computed exactly once either way
+        assert_eq!(serial.cache.searches, s.cache.searches);
+        assert_eq!(serial.cache.trial_sims, s.cache.trial_sims);
+        assert_eq!(serial.cache.entries, s.cache.entries);
+        assert_eq!(serial.cache.trial_entries, s.cache.trial_entries);
+        assert_eq!(serial.cache.lookups(), s.cache.lookups());
+        assert_eq!(s.cache.duplicate_searches, 0, "{:?}", s.cache);
+    }
+}
+
+#[test]
+fn concurrent_sweep_runs_share_one_cache_consistently() {
+    // Two sweeps running concurrently against ONE cache: both must see
+    // bit-identical points, the cache must do each unique search once
+    // in total (single-flight dedups across runs, not just within
+    // one), and the per-run stat windows must follow the CacheStats
+    // attribution rules — each window bounded by the totals, the
+    // windows jointly covering all recorded activity (overlap may be
+    // double-counted, never under-counted).
+    let mut grid = small_grid();
+    grid.networks.truncate(1);
+    grid.noises = vec![NoiseSpec::Off, NoiseSpec::Typical];
+
+    let reference_cache = CostCache::new();
+    let reference = run_sweep_with_cache(&grid, &SweepOptions::default(), &reference_cache);
+    let ref_totals = reference_cache.stats();
+
+    let shared = CostCache::new();
+    let opts = SweepOptions { threads: 4, ..Default::default() };
+    let (a, b) = std::thread::scope(|scope| {
+        let ja = scope.spawn(|| run_sweep_with_cache(&grid, &opts, &shared));
+        let jb = scope.spawn(|| run_sweep_with_cache(&grid, &opts, &shared));
+        (ja.join().unwrap(), jb.join().unwrap())
+    });
+    points_equal(&reference, &a);
+    points_equal(&reference, &b);
+    assert_eq!(reference.frontiers, a.frontiers);
+    assert_eq!(reference.frontiers, b.frontiers);
+    assert_eq!(reference.surfaces, a.surfaces);
+    assert_eq!(reference.surfaces, b.surfaces);
+
+    let totals = shared.stats();
+    assert_eq!(totals.searches, ref_totals.searches, "{totals:?}");
+    assert_eq!(totals.trial_sims, ref_totals.trial_sims);
+    assert_eq!(totals.entries, ref_totals.entries);
+    assert_eq!(totals.trial_entries, ref_totals.trial_entries);
+    assert_eq!(totals.duplicate_searches, 0, "{totals:?}");
+
+    for w in [&a.cache, &b.cache] {
+        assert!(w.searches <= totals.searches, "window exceeds totals: {w:?}");
+        assert!(w.trial_sims <= totals.trial_sims);
+        assert!(w.lookups() <= totals.lookups());
+    }
+    assert!(a.cache.searches + b.cache.searches >= totals.searches);
+    assert!(a.cache.trial_sims + b.cache.trial_sims >= totals.trial_sims);
+    assert!(a.cache.lookups() + b.cache.lookups() >= totals.lookups());
 }
 
 #[test]
