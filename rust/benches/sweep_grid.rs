@@ -6,6 +6,10 @@
 //! cost evaluations), and the bit-plane simulator's speedup over the
 //! retained scalar reference (the acceptance bar is ≥5×).
 //!
+//! Also carries the serving simulator's first trajectory points
+//! (`serve/replay_4096_reqs` wall time, the modeled req/s and the
+//! host-side replay rate) — archived per push, not gated yet.
+//!
 //! With `IMCSIM_BENCH_JSON=PATH` set, the run additionally emits a
 //! machine-readable trajectory file (`BENCH_sweep.json` in CI):
 //! per-benchmark median timings, every reported metric, a `scaling`
@@ -26,10 +30,11 @@ use std::time::Instant;
 
 use imcsim::arch::table2_systems;
 use imcsim::dse::{
-    search_layer, search_layer_all, search_layer_all_unpruned, DseOptions, LayerEvaluator,
-    COST_OBJECTIVES, DEFAULT_SPARSITY,
+    search_layer, search_layer_all, search_layer_all_unpruned, search_network, DseOptions,
+    LayerEvaluator, COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use imcsim::model::TechParams;
+use imcsim::serve::{poisson_arrivals, simulate, NetworkServeCost, Schedule};
 use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{run_sweep, CostCache, PrecisionPoint, SweepGrid, SweepOptions};
 use imcsim::util::bench::{report_metric, Bench};
@@ -126,6 +131,33 @@ fn main() {
             };
             run_sweep(&grid, &run).points.len()
         });
+    }
+
+    // the serving simulator: replay wall time and modeled sustained
+    // req/s on one representative (design, network) pair — the serving
+    // path's first trajectory points (archived, no gate yet)
+    {
+        let serve_sys = &systems[1];
+        let net = ds_cnn();
+        let r = search_network(&net, serve_sys, &opts);
+        let cost = NetworkServeCost::from_result(&r, serve_sys);
+        let interval = cost.bottleneck_ps(Schedule::LayerPipelined, 8) as f64 / 8.0;
+        let mean_gap = ((interval / 0.8).round() as u64).max(1);
+        let arrivals = poisson_arrivals(42, mean_gap, 4096);
+        if let Some(st) = b.bench("serve/replay_4096_reqs", || {
+            simulate(&cost, Schedule::LayerPipelined, 8, &arrivals).latency.count()
+        }) {
+            let rep = simulate(&cost, Schedule::LayerPipelined, 8, &arrivals);
+            // modeled throughput of the simulated accelerator...
+            metric(&mut metrics, "serve/modeled_rps", rep.achieved_rps, "req/s");
+            // ...and the simulator's own replay rate on the host
+            metric(
+                &mut metrics,
+                "serve/replay_reqs_per_wall_sec",
+                4096.0 / (st.median_ns * 1e-9).max(1e-12),
+                "req/s",
+            );
+        }
     }
 
     // evaluation-reduction on the mini grid (cheap enough for --quick)

@@ -1,14 +1,16 @@
 //! The serving coordinator (L3 request path): tile scheduler, request
-//! batcher, integer network execution and serving statistics. Python is
-//! never on this path — MVMs execute through the AOT artifacts via the
-//! PJRT runtime.
+//! batcher and integer network execution. Python is never on this path —
+//! MVMs execute through the AOT artifacts via the PJRT runtime.
+//!
+//! Serving *statistics* live in [`crate::serve::metrics`] (std-only,
+//! exact nearest-rank quantiles); the old `stats::LatencyStats`
+//! (interpolated percentiles on wall-clock microseconds) was retired in
+//! its favor.
 
 pub mod batcher;
 pub mod network;
-pub mod stats;
 pub mod tiler;
 
 pub use batcher::{BatchServer, BatcherStats, MvmRequest, MvmResponse};
 pub use network::{im2col, ConvWeights, Tensor4, TinyCnn};
-pub use stats::LatencyStats;
 pub use tiler::{argmax_rows, requantize, MatI32, TileStats, Tiler};

@@ -29,6 +29,11 @@
 //!   designs × tinyMLPerf networks × precision points × objectives,
 //!   with a memoized cost+accuracy cache and global Pareto aggregation
 //!   (cost frontiers and accuracy-vs-energy frontiers).
+//! * [`serve`] — the std-only multi-tenant serving simulator on the
+//!   calibrated cost model: seeded Poisson/bursty arrival traces,
+//!   batch>1 weight-reuse amortization and D1-residency reload energy,
+//!   a serialized vs layer-pipelined schedule knob, and exact
+//!   deterministic p50/p99 + SLO-constrained-throughput metrics.
 //! * [`runtime`] — PJRT loader executing the AOT-compiled functional
 //!   macro simulator (JAX/Pallas, built once by `make artifacts`).
 //!   The executor needs the `xla` cargo feature; the manifest does not.
@@ -53,6 +58,7 @@ pub mod mapping;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod workload;

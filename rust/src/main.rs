@@ -5,13 +5,9 @@
 //! inference through the AOT-compiled macro artifacts.
 
 use std::path::PathBuf;
-#[cfg(feature = "xla")]
-use std::sync::Arc;
 use std::time::Instant;
 
 use imcsim::arch::{load_system, table2_systems, ImcFamily};
-#[cfg(feature = "xla")]
-use imcsim::coordinator::{Tensor4, Tiler, TinyCnn};
 use imcsim::dse::{search_network_with, DseOptions, ExhaustiveSearch, Objective};
 use imcsim::mapping::TemporalPolicy;
 use imcsim::report::{
@@ -19,17 +15,17 @@ use imcsim::report::{
     fmt_sqnr_trials, parse_sweep_csv, surface_csv, sweep_csv, sweep_text, table2_text, Table,
 };
 use imcsim::runtime::{default_artifacts_dir, load_manifest};
-#[cfg(feature = "xla")]
-use imcsim::runtime::{Engine, Kind};
+use imcsim::serve::{
+    bursty_arrivals, poisson_arrivals, simulate, slo_throughput, NetworkServeCost, Schedule,
+    TraceKind,
+};
 use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
     CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary,
 };
-use imcsim::util::cli::{parse_threads, reject_unknown, Args, SweepAxes};
+use imcsim::util::cli::{parse_list, parse_threads, reject_unknown, Args, SweepAxes};
 use imcsim::util::pool::parallel_map_with;
-#[cfg(feature = "xla")]
-use imcsim::util::prng::Rng;
 
 const HELP: &str = "\
 imcsim — benchmarking & modeling of analog/digital SRAM in-memory computing
@@ -100,10 +96,22 @@ Exploration & serving:
       [--cells N] [--threads N]
                        geometry sweep of one network at equal SRAM
                        budget; prints the (energy, latency) Pareto front
-  serve [--design aimc_large|...] [--images N]
-                       run the functional TinyCNN through the PJRT
-                       artifacts; reports accuracy vs exact + throughput
-                       (requires the `xla` build feature)
+  serve [--design NAME[,NAME...]] [--network <ae|resnet8|dscnn|mobilenet>[,...]]
+      [--schedule serialized|layer-pipelined[,...]] [--batch N[,N...]]
+      [--util F[,F...]] [--trace poisson|bursty] [--requests N]
+      [--seed S] [--burst-period-us F] [--burst-duty PCT]
+      [--slo-ms F] [--csv FILE] [--threads N]
+                       multi-tenant serving simulation on the calibrated
+                       cost model (std-only): replay a seeded synthetic
+                       arrival trace against each (design, network,
+                       schedule, max-batch, utilization) cell with
+                       greedy FIFO batching; reports p50/p99/mean/max
+                       latency, energy and weight-reload energy per
+                       request, sustained req/s, and SLO-constrained
+                       req/s under the --slo-ms p99 target. --util is
+                       the offered load as a fraction of the schedule's
+                       bottleneck capacity; same --seed => byte-identical
+                       CSV for every --threads count
   artifacts            show the AOT artifact manifest
 
 Options:
@@ -628,6 +636,7 @@ fn cmd_sweepmerge(args: &Args) -> i32 {
             frontiers: Vec::new(),
             accuracy_frontiers: Vec::new(),
             surfaces: Vec::new(),
+            serve_frontiers: Vec::new(),
             cache: CacheStats::default(),
             merged: false,
         })
@@ -836,93 +845,230 @@ fn cmd_artifacts(args: &Args) -> i32 {
     }
 }
 
-#[cfg(not(feature = "xla"))]
-fn cmd_serve(_args: &Args) -> i32 {
-    eprintln!(
-        "serve needs the PJRT executor: rebuild with `--features xla` \
-         (requires the `xla` crate; see rust/Cargo.toml)"
-    );
-    1
-}
+/// The columns of the serve table/CSV, in output order.
+const SERVE_HEADERS: [&str; 16] = [
+    "design", "network", "schedule", "trace", "requests", "max_batch", "util", "batches",
+    "p50_ps", "p99_ps", "mean_ps", "max_ps", "fj_per_req", "reload_fj_per_req", "achieved_rps",
+    "slo_rps",
+];
 
-#[cfg(feature = "xla")]
 fn cmd_serve(args: &Args) -> i32 {
-    let dir = artifacts_dir(args);
-    let design = args.opt_or("design", "aimc_large").to_string();
-    let images: usize = args
-        .opt("images")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(64);
-    match serve(&dir, &design, images) {
-        Ok(()) => 0,
+    if let Err(e) = reject_unknown(
+        args,
+        "serve",
+        &[
+            "design", "network", "schedule", "batch", "util", "trace", "requests", "seed",
+            "burst-period-us", "burst-duty", "slo-ms", "csv", "threads",
+        ],
+    ) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
         Err(e) => {
-            eprintln!("serve failed: {e:#}");
-            1
+            eprintln!("{e}");
+            return 2;
         }
-    }
-}
-
-#[cfg(feature = "xla")]
-fn serve(dir: &PathBuf, design: &str, images: usize) -> imcsim::anyhow::Result<()> {
-    let manifest = load_manifest(dir)?;
-    let engine = Arc::new(Engine::new(manifest)?);
-    println!(
-        "PJRT platform: {} | design: {design} | images: {images}",
-        engine.platform()
-    );
-    let d = engine.design(design)?;
-    let act_bits = d.config.act_bits;
-    let net = TinyCnn::random(42, 16, act_bits, d.config.weight_bits);
-    let tiler = Tiler::new(&engine, design)?;
-
-    let mut rng = Rng::new(7);
-    let batch = engine.batch();
-    let mut done = 0usize;
-    let mut agree = 0usize;
-    let mut mvms = 0u64;
-    let t0 = Instant::now();
-    while done < images {
-        let b = batch.min(images - done);
-        let x = Tensor4::random(&mut rng, b, net.image, net.image, 1, act_bits);
-        let (_, preds, st) = net.forward(&tiler, &x, Kind::Macro)?;
-        let (_, preds_ref, _) = net.forward(&tiler, &x, Kind::Reference)?;
-        agree += preds
-            .iter()
-            .zip(&preds_ref)
-            .filter(|(a, b)| a == b)
-            .count();
-        mvms += st.mvms;
-        done += b;
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    // analytical energy estimate for this workload on the matching system
-    let sys = table2_systems().into_iter().find(|s| s.name == design);
-    let energy_note = match sys {
-        Some(sys) => {
-            let tech = imcsim::model::TechParams::for_node(sys.imc.tech_nm);
-            let per_mac = imcsim::model::peak_energy_per_mac_fj(&sys.imc, &tech, 0.5);
-            let e_inf = per_mac * net.macs_per_image() as f64;
-            format!(
-                "analytical macro energy: {:.2} fJ/MAC -> {:.2} nJ/inference (peak-mapping bound)",
-                per_mac,
-                e_inf * 1e-6
-            )
-        }
-        None => String::new(),
     };
-    println!(
-        "served {done} images in {dt:.2}s ({:.1} img/s, {:.0} MACs/img, {mvms} macro MVMs)",
-        done as f64 / dt,
-        net.macs_per_image() as f64
-    );
-    println!(
-        "AIMC-vs-exact prediction agreement: {}/{} ({:.1}%)",
-        agree,
-        done,
-        agree as f64 / done as f64 * 100.0
-    );
-    if !energy_note.is_empty() {
-        println!("{energy_note}");
+    // axis lists (comma forms, the sweep convention)
+    let all = table2_systems();
+    let systems: Vec<imcsim::arch::ImcSystem> = match args.opt("design") {
+        Some(raw) => {
+            let names = match parse_list::<String>(raw, "design") {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let mut picked = Vec::new();
+            for name in names {
+                match all.iter().find(|s| s.name == name) {
+                    Some(s) => picked.push(s.clone()),
+                    None => {
+                        eprintln!("unknown design '{name}'");
+                        return 2;
+                    }
+                }
+            }
+            picked
+        }
+        None => all,
+    };
+    let networks: Vec<imcsim::workload::Network> = {
+        let mut nets = Vec::new();
+        for token in args.opt_or("network", "ae,resnet8,dscnn,mobilenet").split(',') {
+            match token.trim() {
+                "ae" | "autoencoder" => nets.push(imcsim::workload::deep_autoencoder()),
+                "resnet8" => nets.push(imcsim::workload::resnet8()),
+                "dscnn" | "ds-cnn" => nets.push(imcsim::workload::ds_cnn()),
+                "mobilenet" => nets.push(imcsim::workload::mobilenet_v1()),
+                other => {
+                    eprintln!("--network must be ae|resnet8|dscnn|mobilenet (got '{other}')");
+                    return 2;
+                }
+            }
+        }
+        nets
+    };
+    let schedules: Vec<Schedule> =
+        match parse_list(args.opt_or("schedule", "serialized"), "schedule") {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    let batches: Vec<usize> = match parse_list(args.opt_or("batch", "1,8"), "batch") {
+        Ok(b) if b.iter().all(|&b| b >= 1) => b,
+        Ok(_) => {
+            eprintln!("--batch values must be at least 1");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let utils: Vec<f64> = match parse_list(args.opt_or("util", "0.8"), "util") {
+        Ok(u) if u.iter().all(|&u| u > 0.0 && u <= 1.0) => u,
+        Ok(_) => {
+            eprintln!("--util values must be in (0, 1]");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trace: TraceKind = match args.opt_or("trace", "poisson").parse() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let requests: usize = match args.opt_or("requests", "512").parse() {
+        Ok(n) if n > 0 => n,
+        _ => {
+            eprintln!("--requests must be a positive integer");
+            return 2;
+        }
+    };
+    let seed: u64 = match args.opt_or("seed", "42").parse() {
+        Ok(s) => s,
+        Err(_) => {
+            eprintln!("--seed must be an unsigned integer");
+            return 2;
+        }
+    };
+    let burst_period_ps: u64 = match args.opt_or("burst-period-us", "100").parse::<f64>() {
+        Ok(us) if us > 0.0 => (us * 1e6).round() as u64,
+        _ => {
+            eprintln!("--burst-period-us must be a positive number");
+            return 2;
+        }
+    };
+    let burst_duty: u64 = match args.opt_or("burst-duty", "20").parse() {
+        Ok(d) if (1..=100).contains(&d) => d,
+        _ => {
+            eprintln!("--burst-duty must be a percentage in 1..=100");
+            return 2;
+        }
+    };
+    let slo_ps: u64 = match args.opt_or("slo-ms", "2").parse::<f64>() {
+        Ok(ms) if ms > 0.0 => (ms * 1e9).round() as u64,
+        _ => {
+            eprintln!("--slo-ms must be a positive number");
+            return 2;
+        }
+    };
+
+    // phase 1: one cost-model search per (design, network) pair, fanned
+    // across pairs through the memoized cost cache (energy-optimal
+    // mappings, the DseOptions default — the serving-relevant choice)
+    let t0 = Instant::now();
+    let cache = CostCache::new();
+    let pairs: Vec<(usize, usize)> = systems
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| (0..networks.len()).map(move |ni| (si, ni)))
+        .collect();
+    let costs: Vec<NetworkServeCost> = parallel_map_with(&pairs, threads, |&(si, ni)| {
+        let r = search_network_with(
+            &networks[ni],
+            &systems[si],
+            &DseOptions::default(),
+            &cache,
+            1,
+        );
+        NetworkServeCost::from_result(&r, &systems[si])
+    });
+
+    // phase 2: replay every (pair, schedule, batch, util) cell; the fan
+    // preserves input order, so the table is thread-count-invariant
+    let mut cells: Vec<(usize, Schedule, usize, f64)> = Vec::new();
+    for pi in 0..pairs.len() {
+        for &schedule in &schedules {
+            for &max_batch in &batches {
+                for &util in &utils {
+                    cells.push((pi, schedule, max_batch, util));
+                }
+            }
+        }
     }
-    Ok(())
+    let rows = parallel_map_with(&cells, threads, |&(pi, schedule, max_batch, util)| {
+        let cost = &costs[pi];
+        // offered load: util × the schedule's amortized batch capacity
+        let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
+        let mean_gap = ((interval / util).round() as u64).max(1);
+        let arrivals = match trace {
+            TraceKind::Poisson => poisson_arrivals(seed, mean_gap, requests),
+            TraceKind::Bursty => {
+                bursty_arrivals(seed, mean_gap, requests, burst_period_ps, burst_duty)
+            }
+        };
+        let rep = simulate(cost, schedule, max_batch, &arrivals);
+        let slo_rps = slo_throughput(cost, schedule, max_batch, seed, requests, slo_ps);
+        vec![
+            cost.system.clone(),
+            cost.network.clone(),
+            schedule.to_string(),
+            trace.to_string(),
+            requests.to_string(),
+            max_batch.to_string(),
+            util.to_string(),
+            rep.batches.to_string(),
+            rep.latency.percentile_ps(50.0).to_string(),
+            rep.latency.percentile_ps(99.0).to_string(),
+            rep.latency.mean_ps().to_string(),
+            rep.latency.max_ps().to_string(),
+            rep.latency.fj_per_request().to_string(),
+            rep.latency.reload_fj_per_request().to_string(),
+            rep.achieved_rps.to_string(),
+            slo_rps.to_string(),
+        ]
+    });
+
+    let mut t = Table::new(&SERVE_HEADERS);
+    for row in rows {
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} cells ({} searches) in {:.2}s — seed {seed}, trace {trace}, SLO p99 <= {} ms",
+        cells.len(),
+        pairs.len(),
+        t0.elapsed().as_secs_f64(),
+        slo_ps as f64 / 1e9
+    );
+    if let Some(path) = args.opt("csv") {
+        if let Err(e) = std::fs::write(path, t.to_csv()) {
+            eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
 }

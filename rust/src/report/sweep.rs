@@ -136,6 +136,39 @@ pub fn sweep_text(s: &SweepSummary) -> String {
     // the 3-objective (energy, latency, SQNR) Pareto surface
     out.push_str(&super::figures::pareto_surface_text(s));
 
+    // the serving cut: throughput-under-SLO vs energy/request (the
+    // "which design serves N req/s under a 2 ms p99?" view)
+    for (label, frontier) in &s.serve_frontiers {
+        if frontier.is_empty() {
+            continue;
+        }
+        out.push_str(&format!(
+            "\n-- {label}: (energy/request, throughput-under-SLO) Pareto cut — {} points --\n",
+            frontier.len()
+        ));
+        let mut t = Table::new(&[
+            "design", "network", "prec", "objective", "slo req/s", "fJ/req", "p99 [us]",
+        ]);
+        let mut rows: Vec<&GridPoint> = frontier.iter().map(|&i| &s.points[i]).collect();
+        rows.sort_by(|a, b| a.serve_fj_per_req.partial_cmp(&b.serve_fj_per_req).unwrap());
+        for p in rows {
+            t.row(vec![
+                p.design.clone(),
+                p.network.clone(),
+                format!("{}x{}", p.weight_bits, p.act_bits),
+                p.objective.to_string(),
+                if p.serve_rps > 0.0 {
+                    format!("{:.0}", p.serve_rps)
+                } else {
+                    "miss".to_string()
+                },
+                format!("{:.0}", p.serve_fj_per_req),
+                format!("{:.2}", p.serve_p99_ns * 1e-3),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+
     // merged shard runs sum independent caches, so label accordingly
     let entries_label = if s.merged {
         " (summed across shard caches)"
@@ -183,12 +216,15 @@ pub fn sweep_text(s: &SweepSummary) -> String {
 /// `sqnr_db`/`max_abs_err`/`clip_rate` are the nominal simulated
 /// accuracy record (`sqnr_db` is `inf` for bit-exact datapaths and
 /// round-trips through Rust float formatting) and
-/// `sqnr_mean_db`/`sqnr_std_db` the seeded-trial statistics.
-const CSV_HEADERS: [&str; 24] = [
+/// `sqnr_mean_db`/`sqnr_std_db` the seeded-trial statistics;
+/// `serve_rps`/`serve_fj_per_req`/`serve_p99_ns` are the serving
+/// simulator's columns under the canonical `serve::SWEEP_SERVE_*`
+/// configuration.
+const CSV_HEADERS: [&str; 27] = [
     "task", "design", "family", "network", "precision", "weight_bits", "act_bits", "sparsity",
     "noise", "objective", "macros", "cells", "energy_fj", "macro_fj", "time_ns", "edp_fj_ns",
     "tops_w", "util", "sqnr_db", "sqnr_mean_db", "sqnr_std_db", "max_abs_err", "clip_rate",
-    "pareto",
+    "serve_rps", "serve_fj_per_req", "serve_p99_ns", "pareto",
 ];
 
 /// Every evaluated grid point as CSV (canonical task order). Floats are
@@ -226,6 +262,9 @@ pub fn sweep_csv(s: &SweepSummary) -> String {
             p.sqnr_std_db.to_string(),
             p.max_abs_err.to_string(),
             p.clip_rate.to_string(),
+            p.serve_rps.to_string(),
+            p.serve_fj_per_req.to_string(),
+            p.serve_p99_ns.to_string(),
             if on_front.contains(&i) { "1".into() } else { "0".into() },
         ]);
     }
@@ -324,6 +363,9 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             sqnr_std_db: fields[20].parse().map_err(|_| err("sqnr_std_db"))?,
             max_abs_err: fields[21].parse().map_err(|_| err("max_abs_err"))?,
             clip_rate: fields[22].parse().map_err(|_| err("clip_rate"))?,
+            serve_rps: fields[23].parse().map_err(|_| err("serve_rps"))?,
+            serve_fj_per_req: fields[24].parse().map_err(|_| err("serve_fj_per_req"))?,
+            serve_p99_ns: fields[25].parse().map_err(|_| err("serve_p99_ns"))?,
         });
     }
     Ok(points)
@@ -374,6 +416,10 @@ mod tests {
         // the noise axis labels its frontiers and the surface is shown
         assert!(text.contains("@ noise typical"), "{text}");
         assert!(text.contains("energy-latency-accuracy surface"), "{text}");
+        // the serving Pareto cut is rendered with its columns
+        assert!(text.contains("serving throughput-vs-energy"), "{text}");
+        assert!(text.contains("slo req/s"), "{text}");
+        assert!(text.contains("fJ/req"), "{text}");
     }
 
     #[test]
@@ -450,6 +496,10 @@ mod tests {
             assert_eq!(a.sqnr_std_db.to_bits(), b.sqnr_std_db.to_bits());
             assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
             assert_eq!(a.clip_rate.to_bits(), b.clip_rate.to_bits());
+            // the serving columns round-trip bit-exactly too
+            assert_eq!(a.serve_rps.to_bits(), b.serve_rps.to_bits());
+            assert_eq!(a.serve_fj_per_req.to_bits(), b.serve_fj_per_req.to_bits());
+            assert_eq!(a.serve_p99_ns.to_bits(), b.serve_p99_ns.to_bits());
         }
         // the grid carries both noise corners, so the roundtrip
         // exercises both noise-id encodings

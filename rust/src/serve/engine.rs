@@ -1,0 +1,344 @@
+//! The discrete-event serving engine: deterministic trace replay of a
+//! seeded arrival stream against a [`NetworkServeCost`], under either
+//! schedule.
+//!
+//! Determinism argument (the repo's bit-identical contract, `docs/
+//! COST_MODEL.md` §11): the replay walks the arrival vector once, in
+//! arrival order, on an integer picosecond clock — there is no float
+//! time and no data-dependent iteration order anywhere. Ties are broken
+//! canonically: a request arriving exactly when the server (or the
+//! first pipeline stage) frees joins that dispatch — i.e. completions
+//! at time `t` are processed before arrivals at time `t`. One
+//! [`simulate`] call is sequential; thread-level parallelism lives one
+//! level up (the CLI fans independent (design × network × knob) cells
+//! through `parallel_map_with`, which preserves output order), so the
+//! produced CSV is byte-identical across `--threads` counts.
+
+use super::metrics::LatencyRecord;
+use super::trace::poisson_arrivals;
+use super::{
+    NetworkServeCost, Schedule, SWEEP_SERVE_MAX_BATCH, SWEEP_SERVE_REQUESTS, SWEEP_SERVE_SCHEDULE,
+    SWEEP_SERVE_SEED, SWEEP_SERVE_SLO_PS, SWEEP_SERVE_UTIL,
+};
+use crate::arch::ImcSystem;
+use crate::dse::NetworkResult;
+
+/// Result of one trace replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Schedule the trace was replayed under.
+    pub schedule: Schedule,
+    /// Batch-size cap of the greedy FIFO batcher.
+    pub max_batch: usize,
+    /// Per-request latencies + energy totals.
+    pub latency: LatencyRecord,
+    /// Number of batches dispatched.
+    pub batches: usize,
+    /// Sustained throughput (requests per second): requests served over
+    /// the last completion time. 0 for an empty trace.
+    pub achieved_rps: f64,
+}
+
+/// Replay an arrival trace (ps, nondecreasing) against a serving cost
+/// under the given schedule, with greedy FIFO batching capped at
+/// `max_batch`.
+///
+/// Batching semantics: a batch is formed whenever the dispatch point
+/// frees (the whole accelerator when serialized, pipeline stage 0 when
+/// layer-pipelined) and takes every already-arrived request in FIFO
+/// order, up to `max_batch`. Under the serialized schedule a batch
+/// occupies the accelerator for the sum of its per-layer batch times;
+/// under the layer-pipelined schedule it flows through the layer
+/// stages, each stage FIFO (no overtaking), so consecutive batches
+/// overlap and steady-state throughput is set by the slowest stage.
+/// Energy is charged per [`NetworkServeCost::fj_per_request`] — the
+/// weight-reload share appears once per batch on non-resident networks.
+pub fn simulate(
+    cost: &NetworkServeCost,
+    schedule: Schedule,
+    max_batch: usize,
+    arrivals_ps: &[u64],
+) -> ServeReport {
+    assert!(max_batch >= 1, "max_batch must be at least 1");
+    let n = arrivals_ps.len();
+    // per-batch-size stage times, computed once
+    let stage_cache: Vec<Vec<u64>> = (1..=max_batch).map(|b| cost.stage_times_ps(b)).collect();
+    let n_stages = cost.n_layers();
+    let mut stage_free = vec![0u64; n_stages.max(1)];
+    let mut free = 0u64; // serialized: the single server's free time
+    let mut latencies = Vec::with_capacity(n);
+    let mut energy_fj = 0.0;
+    let mut reload_fj = 0.0;
+    let mut batches = 0usize;
+    let mut last_done = 0u64;
+    let mut i = 0usize;
+    while i < n {
+        // dispatch when the entry point frees AND a request has arrived
+        let entry_free = match schedule {
+            Schedule::Serialized => free,
+            Schedule::LayerPipelined => stage_free[0],
+        };
+        let start = entry_free.max(arrivals_ps[i]);
+        // greedy FIFO batch: everything arrived by `start`, capped
+        let mut b = 1usize;
+        while i + b < n && b < max_batch && arrivals_ps[i + b] <= start {
+            b += 1;
+        }
+        let stages = &stage_cache[b - 1];
+        let done = match schedule {
+            Schedule::Serialized => {
+                let service: u64 = stages.iter().sum();
+                let done = start + service;
+                free = done;
+                done
+            }
+            Schedule::LayerPipelined => {
+                let mut done = start;
+                for (l, &t) in stages.iter().enumerate() {
+                    let enter = done.max(stage_free[l]);
+                    done = enter + t;
+                    stage_free[l] = done;
+                }
+                done
+            }
+        };
+        for &arr in &arrivals_ps[i..i + b] {
+            latencies.push(done - arr);
+        }
+        energy_fj += b as f64 * cost.fj_per_request(b);
+        reload_fj += b as f64 * cost.reload_fj_per_request(b);
+        last_done = last_done.max(done);
+        batches += 1;
+        i += b;
+    }
+    let achieved_rps = if last_done > 0 {
+        n as f64 * 1e12 / last_done as f64
+    } else {
+        0.0
+    };
+    ServeReport {
+        schedule,
+        max_batch,
+        latency: LatencyRecord::from_samples(latencies, energy_fj, reload_fj, last_done),
+        batches,
+        achieved_rps,
+    }
+}
+
+/// Offered-load rungs of the SLO ladder, as fractions of the
+/// schedule's bottleneck capacity.
+pub const SLO_UTILS: [f64; 6] = [0.3, 0.5, 0.7, 0.8, 0.9, 0.95];
+
+/// SLO-constrained throughput (requests per second): replay seeded
+/// Poisson traces at each utilization rung of [`SLO_UTILS`] and report
+/// the best sustained throughput among the rungs whose p99 latency
+/// meets `slo_ps`; 0.0 when every rung misses. Loosening the SLO can
+/// only widen the passing set, so the result is monotone
+/// non-decreasing in `slo_ps` by construction. The ladder is a fixed,
+/// deterministic probe set — no bisection on floats — so the answer is
+/// a pure function of `(cost, schedule, max_batch, seed, n_requests,
+/// slo_ps)`.
+pub fn slo_throughput(
+    cost: &NetworkServeCost,
+    schedule: Schedule,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+    slo_ps: u64,
+) -> f64 {
+    // capacity: one batch's bottleneck occupancy amortized per request
+    let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
+    let mut best = 0.0;
+    for &util in SLO_UTILS.iter() {
+        let mean_gap = ((interval / util).round() as u64).max(1);
+        let arrivals = poisson_arrivals(seed, mean_gap, n_requests);
+        let rep = simulate(cost, schedule, max_batch, &arrivals);
+        if rep.latency.percentile_ps(99.0) <= slo_ps {
+            best = rep.achieved_rps.max(best);
+        }
+    }
+    best
+}
+
+/// The serve columns of one sweep grid point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSweepPoint {
+    /// SLO-constrained throughput (req/s) under the canonical sweep
+    /// serving configuration; 0.0 when no ladder rung meets the SLO.
+    pub rps: f64,
+    /// Energy per request (fJ) in the canonical measurement run.
+    pub fj_per_req: f64,
+    /// p99 latency (ns) in the canonical measurement run.
+    pub p99_ns: f64,
+}
+
+/// Evaluate the canonical serving operating point of one searched
+/// (design, network) grid point: a layer-pipelined, batch-≤8 replay of
+/// the seed-42 Poisson trace at 0.8× capacity for p99/energy, plus the
+/// 2 ms-p99 SLO ladder for throughput (the `SWEEP_SERVE_*` constants).
+/// Pure function of its arguments — safe to fan across sweep threads.
+pub fn sweep_serve_metrics(r: &NetworkResult, sys: &ImcSystem) -> ServeSweepPoint {
+    let cost = NetworkServeCost::from_result(r, sys);
+    let interval =
+        cost.bottleneck_ps(SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH) as f64
+            / SWEEP_SERVE_MAX_BATCH as f64;
+    let mean_gap = ((interval / SWEEP_SERVE_UTIL).round() as u64).max(1);
+    let arrivals = poisson_arrivals(SWEEP_SERVE_SEED, mean_gap, SWEEP_SERVE_REQUESTS);
+    let rep = simulate(&cost, SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH, &arrivals);
+    let rps = slo_throughput(
+        &cost,
+        SWEEP_SERVE_SCHEDULE,
+        SWEEP_SERVE_MAX_BATCH,
+        SWEEP_SERVE_SEED,
+        SWEEP_SERVE_REQUESTS,
+        SWEEP_SERVE_SLO_PS,
+    );
+    ServeSweepPoint {
+        rps,
+        fj_per_req: rep.latency.fj_per_request(),
+        p99_ns: rep.latency.percentile_ps(99.0) as f64 / 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::LayerServeCost;
+
+    /// A hand-checkable two-stage cost: layer times are batch-linear in
+    /// compute (no memory bound), 150 ns and 80 ns at b=1.
+    fn synthetic_cost(resident: bool) -> NetworkServeCost {
+        NetworkServeCost {
+            system: "synthetic".into(),
+            network: "two_layer".into(),
+            layers: vec![
+                LayerServeCost {
+                    mvm_cycles: 100.0,
+                    load_cycles: 50.0,
+                    mem_cycles: 10.0,
+                    weight_fj: 30.0,
+                    base_fj: 70.0,
+                },
+                LayerServeCost {
+                    mvm_cycles: 60.0,
+                    load_cycles: 20.0,
+                    mem_cycles: 5.0,
+                    weight_fj: 10.0,
+                    base_fj: 40.0,
+                },
+            ],
+            t_cycle_ns: 1.0,
+            resident,
+        }
+    }
+
+    #[test]
+    fn single_request_latency_is_the_service_time_under_both_schedules() {
+        let cost = synthetic_cost(true);
+        // b=1: (100+50)*1 = 150 ns and (60+20)*1 = 80 ns → 230 ns total
+        assert_eq!(cost.layer_time_ps(0, 1), 150_000);
+        assert_eq!(cost.layer_time_ps(1, 1), 80_000);
+        for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+            let rep = simulate(&cost, schedule, 4, &[1_000]);
+            // a lone request sees no contention: latency = Σ stages
+            assert_eq!(rep.latency.percentile_ps(100.0), 230_000);
+            assert_eq!(rep.latency.count(), 1);
+            assert_eq!(rep.batches, 1);
+            assert_eq!(rep.latency.last_completion_ps, 231_000);
+        }
+    }
+
+    #[test]
+    fn backlogged_arrivals_batch_greedily_in_fifo_order() {
+        let cost = synthetic_cost(true);
+        // four simultaneous arrivals, max_batch 2 → two batches of 2
+        let rep = simulate(&cost, Schedule::Serialized, 2, &[1, 1, 1, 1]);
+        assert_eq!(rep.batches, 2);
+        assert_eq!(rep.latency.count(), 4);
+        // b=2: (2*100+50).max(2*10)=250 ns, (2*60+20).max(2*5)=140 ns → 390 ns
+        let s2 = 390_000u64;
+        // batch 1 completes at 1+s2; batch 2 starts there, done at 1+2*s2
+        assert_eq!(rep.latency.percentile_ps(50.0), s2);
+        assert_eq!(rep.latency.percentile_ps(100.0), 2 * s2);
+        assert_eq!(rep.latency.last_completion_ps, 1 + 2 * s2);
+    }
+
+    #[test]
+    fn batch_cap_one_disables_batching() {
+        let cost = synthetic_cost(true);
+        let rep = simulate(&cost, Schedule::Serialized, 1, &[1, 1, 1]);
+        assert_eq!(rep.batches, 3);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let cost = synthetic_cost(false);
+        let arrivals = poisson_arrivals(11, 100_000, 2_000);
+        let a = simulate(&cost, Schedule::LayerPipelined, 8, &arrivals);
+        let b = simulate(&cost, Schedule::LayerPipelined, 8, &arrivals);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pipelined_throughput_at_least_matches_serialized_under_backlog() {
+        let cost = synthetic_cost(true);
+        let arrivals = vec![1u64; 64];
+        let ser = simulate(&cost, Schedule::Serialized, 4, &arrivals);
+        let pipe = simulate(&cost, Schedule::LayerPipelined, 4, &arrivals);
+        assert!(
+            pipe.achieved_rps >= ser.achieved_rps,
+            "pipelined {} < serialized {}",
+            pipe.achieved_rps,
+            ser.achieved_rps
+        );
+        // with two overlapping stages the pipeline strictly wins here
+        assert!(pipe.latency.last_completion_ps < ser.latency.last_completion_ps);
+    }
+
+    #[test]
+    fn energy_charges_weight_reload_once_per_batch_when_not_resident() {
+        let resident = simulate(&synthetic_cost(true), Schedule::Serialized, 2, &[1, 1]);
+        assert_eq!(resident.latency.reload_fj, 0.0);
+        // base energy: 2 requests × (70+40) fJ
+        assert_eq!(resident.latency.energy_fj, 220.0);
+
+        let reload = simulate(&synthetic_cost(false), Schedule::Serialized, 2, &[1, 1]);
+        // one batch of 2: weight traffic (30+10) charged once
+        assert_eq!(reload.latency.reload_fj, 40.0);
+        assert_eq!(reload.latency.energy_fj, 260.0);
+        // split across two singleton batches it is charged twice
+        let single = simulate(&synthetic_cost(false), Schedule::Serialized, 1, &[1, 1]);
+        assert_eq!(single.latency.reload_fj, 80.0);
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let rep = simulate(&synthetic_cost(true), Schedule::Serialized, 4, &[]);
+        assert_eq!(rep.latency.count(), 0);
+        assert_eq!(rep.batches, 0);
+        assert_eq!(rep.achieved_rps, 0.0);
+    }
+
+    #[test]
+    fn slo_ladder_is_monotone_in_the_slo_and_bottoms_out_at_zero() {
+        let cost = synthetic_cost(true);
+        // an impossible SLO (1 ps) admits nothing
+        assert_eq!(
+            slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 512, 1),
+            0.0
+        );
+        // a generous SLO (1 s) admits the top rung and beats a tight one
+        let loose = slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 512, 1_000_000_000_000);
+        let tight = slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 512, 300_000);
+        assert!(loose > 0.0);
+        assert!(loose >= tight);
+    }
+
+    #[test]
+    fn slo_throughput_is_deterministic() {
+        let cost = synthetic_cost(false);
+        let a = slo_throughput(&cost, Schedule::Serialized, 4, 7, 400, 2_000_000_000);
+        let b = slo_throughput(&cost, Schedule::Serialized, 4, 7, 400, 2_000_000_000);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

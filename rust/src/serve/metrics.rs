@@ -1,0 +1,237 @@
+//! Serving metrics: exact deterministic latency quantiles plus energy
+//! accounting, in a mergeable per-run record.
+//!
+//! [`LatencyRecord`] stores the full sorted multiset of per-request
+//! latencies (integer picoseconds — no float time anywhere), so every
+//! percentile is *exact* nearest-rank, not an approximation, and
+//! [`LatencyRecord::merge`] is a sorted multiset union: associative and
+//! order-invariant, the same contract `sim::AccuracyRecord::merge`
+//! gives the sweep's shard merges. This supersedes the retired
+//! `coordinator::stats::LatencyStats` (index-interpolated percentiles
+//! on wall-clock microseconds) for the std-only serving path.
+
+/// Latency + energy record of one simulated serving run (or a merge of
+/// several).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyRecord {
+    /// Per-request latencies (ps), sorted ascending.
+    samples_ps: Vec<u64>,
+    /// Total energy charged over all requests (fJ).
+    pub energy_fj: f64,
+    /// Weight-reload share of [`LatencyRecord::energy_fj`] (fJ): the
+    /// per-batch weight-traffic charge on designs whose D1 cannot hold
+    /// the network resident. Zero when every layer fits.
+    pub reload_fj: f64,
+    /// Completion time of the last request (ps since trace start).
+    pub last_completion_ps: u64,
+}
+
+impl LatencyRecord {
+    /// Build a record from raw (unsorted) latency samples and the run's
+    /// energy totals.
+    pub fn from_samples(
+        mut samples_ps: Vec<u64>,
+        energy_fj: f64,
+        reload_fj: f64,
+        last_completion_ps: u64,
+    ) -> Self {
+        samples_ps.sort_unstable();
+        LatencyRecord {
+            samples_ps,
+            energy_fj,
+            reload_fj,
+            last_completion_ps,
+        }
+    }
+
+    /// Number of requests recorded.
+    pub fn count(&self) -> usize {
+        self.samples_ps.len()
+    }
+
+    /// Exact nearest-rank percentile (ps): the smallest recorded
+    /// latency `v` such that at least `⌈p/100 · n⌉` samples are `≤ v`.
+    /// `p` is clamped to `(0, 100]`; an empty record reports 0.
+    pub fn percentile_ps(&self, p: f64) -> u64 {
+        let n = self.samples_ps.len();
+        if n == 0 {
+            return 0;
+        }
+        let rank = (p / 100.0 * n as f64).ceil() as usize;
+        self.samples_ps[rank.clamp(1, n) - 1]
+    }
+
+    /// Mean latency (ps, truncated integer division; 0 when empty).
+    pub fn mean_ps(&self) -> u64 {
+        let n = self.samples_ps.len() as u128;
+        if n == 0 {
+            return 0;
+        }
+        (self.samples_ps.iter().map(|&s| s as u128).sum::<u128>() / n) as u64
+    }
+
+    /// Maximum recorded latency (ps; 0 when empty).
+    pub fn max_ps(&self) -> u64 {
+        self.samples_ps.last().copied().unwrap_or(0)
+    }
+
+    /// Mean energy per request (fJ; 0 when empty).
+    pub fn fj_per_request(&self) -> f64 {
+        if self.samples_ps.is_empty() {
+            0.0
+        } else {
+            self.energy_fj / self.samples_ps.len() as f64
+        }
+    }
+
+    /// Mean weight-reload energy per request (fJ; 0 when empty).
+    pub fn reload_fj_per_request(&self) -> f64 {
+        if self.samples_ps.is_empty() {
+            0.0
+        } else {
+            self.reload_fj / self.samples_ps.len() as f64
+        }
+    }
+
+    /// Merge another record into this one: sorted multiset union of the
+    /// latency samples, sums of the energy totals, max of the last
+    /// completion times. Associative and order-invariant on the sample
+    /// multiset by construction (a sorted union forgets insertion
+    /// order); the energy sums are order-invariant whenever the
+    /// addends' sums are exactly representable (integer-valued fJ in
+    /// the tests, mirroring `AccuracyRecord`'s merge contract).
+    pub fn merge(&mut self, other: &LatencyRecord) {
+        let mut merged = Vec::with_capacity(self.samples_ps.len() + other.samples_ps.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.samples_ps.len() && j < other.samples_ps.len() {
+            if self.samples_ps[i] <= other.samples_ps[j] {
+                merged.push(self.samples_ps[i]);
+                i += 1;
+            } else {
+                merged.push(other.samples_ps[j]);
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&self.samples_ps[i..]);
+        merged.extend_from_slice(&other.samples_ps[j..]);
+        self.samples_ps = merged;
+        self.energy_fj += other.energy_fj;
+        self.reload_fj += other.reload_fj;
+        self.last_completion_ps = self.last_completion_ps.max(other.last_completion_ps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// The naive reference: full sort, index by explicit rank.
+    fn naive_percentile(samples: &[u64], p: f64) -> u64 {
+        if samples.is_empty() {
+            return 0;
+        }
+        let mut s = samples.to_vec();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+        s[rank.clamp(1, s.len()) - 1]
+    }
+
+    #[test]
+    fn percentiles_match_naive_reference_on_random_inputs() {
+        let mut rng = Rng::new(23);
+        for trial in 0..50 {
+            let n = 1 + rng.below(500) as usize;
+            let samples: Vec<u64> = (0..n).map(|_| rng.below(1_000_000)).collect();
+            let rec = LatencyRecord::from_samples(samples.clone(), 0.0, 0.0, 0);
+            for p in [0.1, 1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+                assert_eq!(
+                    rec.percentile_ps(p),
+                    naive_percentile(&samples, p),
+                    "trial {trial}: n={n} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // empty
+        let empty = LatencyRecord::default();
+        assert_eq!(empty.percentile_ps(50.0), 0);
+        assert_eq!(empty.mean_ps(), 0);
+        assert_eq!(empty.fj_per_request(), 0.0);
+        // single sample: every percentile is that sample
+        let one = LatencyRecord::from_samples(vec![7], 0.0, 0.0, 7);
+        for p in [0.001, 50.0, 99.0, 100.0] {
+            assert_eq!(one.percentile_ps(p), 7);
+        }
+        // all-equal: every percentile is the common value
+        let eq = LatencyRecord::from_samples(vec![5; 100], 0.0, 0.0, 5);
+        for p in [1.0, 50.0, 99.0] {
+            assert_eq!(eq.percentile_ps(p), 5);
+        }
+        // ties at the quantile boundary: nearest-rank picks the tied value
+        let ties = LatencyRecord::from_samples(vec![1, 2, 2, 2, 3], 0.0, 0.0, 3);
+        assert_eq!(ties.percentile_ps(50.0), 2);
+        assert_eq!(ties.percentile_ps(80.0), 2);
+        assert_eq!(ties.percentile_ps(81.0), 3);
+        // p50 of [1..4]: rank ceil(2) = 2nd smallest
+        let r = LatencyRecord::from_samples(vec![4, 1, 3, 2], 0.0, 0.0, 4);
+        assert_eq!(r.percentile_ps(50.0), 2);
+        assert_eq!(r.percentile_ps(100.0), 4);
+        assert_eq!(r.max_ps(), 4);
+        assert_eq!(r.mean_ps(), 2);
+    }
+
+    #[test]
+    fn merge_is_associative_and_order_invariant() {
+        // integer-valued energies: sums are exact, so bit-comparisons
+        // are legitimate (the AccuracyRecord merge-test convention)
+        let a = LatencyRecord::from_samples(vec![5, 1, 9], 10.0, 1.0, 9);
+        let b = LatencyRecord::from_samples(vec![2, 9], 20.0, 2.0, 11);
+        let c = LatencyRecord::from_samples(vec![7, 3, 3], 30.0, 4.0, 8);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+
+        let mut cba = c.clone();
+        cba.merge(&b);
+        cba.merge(&a);
+        assert_eq!(ab_c.samples_ps, cba.samples_ps);
+        assert_eq!(ab_c.energy_fj.to_bits(), cba.energy_fj.to_bits());
+        assert_eq!(ab_c.reload_fj.to_bits(), cba.reload_fj.to_bits());
+        assert_eq!(ab_c.last_completion_ps, cba.last_completion_ps);
+
+        // merged percentiles equal the pooled recompute
+        let pooled = LatencyRecord::from_samples(vec![5, 1, 9, 2, 9, 7, 3, 3], 60.0, 7.0, 11);
+        assert_eq!(ab_c, pooled);
+        for p in [10.0, 50.0, 99.0] {
+            assert_eq!(ab_c.percentile_ps(p), pooled.percentile_ps(p));
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = LatencyRecord::from_samples(vec![4, 2], 6.0, 0.0, 4);
+        let mut m = a.clone();
+        m.merge(&LatencyRecord::default());
+        assert_eq!(m, a);
+        let mut e = LatencyRecord::default();
+        e.merge(&a);
+        assert_eq!(e, a);
+    }
+
+    #[test]
+    fn energy_per_request_divides_totals() {
+        let r = LatencyRecord::from_samples(vec![1, 2, 3, 4], 100.0, 20.0, 4);
+        assert_eq!(r.fj_per_request(), 25.0);
+        assert_eq!(r.reload_fj_per_request(), 5.0);
+    }
+}

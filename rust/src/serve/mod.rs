@@ -1,0 +1,378 @@
+//! Multi-tenant serving simulator on the calibrated cost model
+//! (std-only — no `xla` feature): seeded synthetic arrival traces,
+//! batch>1 cost semantics, a serialized vs layer-pipelined schedule
+//! knob, and exact deterministic latency/energy/throughput metrics.
+//!
+//! * [`trace`] — Poisson and bursty arrival generators on an integer
+//!   picosecond timeline, seeded like the sim PRNG (same seed ⇒
+//!   bit-identical trace; the exponential sampler is von Neumann's
+//!   comparison method, no libm).
+//! * [`NetworkServeCost`] — the bridge from a cost-model
+//!   [`NetworkResult`] to per-layer serving costs: the batch-`b`
+//!   latency decomposition reuses the evaluator's own cycle expressions
+//!   (`dse::cost::evaluate_tiled`) in identical operation order, so at
+//!   `b = 1` the serialized service time is **bit-identical** to
+//!   [`NetworkResult::total_time_ns`] — the `CandidateBound` precedent
+//!   applied to serving.
+//! * [`engine`] — the discrete-event simulator: integer event time,
+//!   canonical event ordering (completions before arrivals at equal
+//!   time), greedy FIFO batching, both schedules, and the
+//!   SLO-constrained-throughput ladder.
+//! * [`metrics`] — exact nearest-rank latency quantiles over the full
+//!   sorted sample multiset plus energy accounting, with an
+//!   associative order-invariant merge (supersedes the retired
+//!   `coordinator::stats::LatencyStats`).
+//!
+//! The cost semantics, arrival models, schedule contract and the
+//! determinism argument are written down in `docs/COST_MODEL.md` §11.
+
+pub mod engine;
+pub mod metrics;
+pub mod trace;
+
+pub use engine::{simulate, slo_throughput, sweep_serve_metrics, ServeReport, ServeSweepPoint};
+pub use metrics::LatencyRecord;
+pub use trace::{bursty_arrivals, exp_sample, poisson_arrivals, TraceKind};
+
+use crate::arch::ImcSystem;
+use crate::dse::NetworkResult;
+
+/// Execution schedule of a multi-layer network on one accelerator —
+/// `selfspec-calculator`'s `soc.schedule` knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// All macros execute one layer at a time; a batch occupies the
+    /// whole accelerator for the sum of the per-layer times.
+    Serialized,
+    /// Layers are pinned to macro groups forming a pipeline; a batch
+    /// flows through the layer stages and throughput is set by the
+    /// slowest stage, not the sum.
+    LayerPipelined,
+}
+
+impl Schedule {
+    /// Canonical lowercase name (CLI/CSV token).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Schedule::Serialized => "serialized",
+            Schedule::LayerPipelined => "layer-pipelined",
+        }
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "serialized" => Ok(Schedule::Serialized),
+            "layer-pipelined" => Ok(Schedule::LayerPipelined),
+            other => Err(format!(
+                "unknown schedule '{other}' (serialized|layer-pipelined)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-layer serving cost, decomposed so batch-`b` quantities can be
+/// reassembled with the evaluator's own arithmetic (see
+/// [`NetworkServeCost::layer_time_ns`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerServeCost {
+    /// Per-request MVM compute cycles
+    /// (`tiles.mvms · cycles_per_mvm`, as the evaluator computes them).
+    pub mvm_cycles: f64,
+    /// Per-batch weight-load cycles
+    /// (`weight_loads_per_macro · rows_used_avg`) — amortized across a
+    /// batch, which reuses the loaded weights.
+    pub load_cycles: f64,
+    /// Per-request shared-buffer roofline cycles (the evaluator's
+    /// `gb_total · avg_bits / bw_bits_per_cycle`).
+    pub mem_cycles: f64,
+    /// Per-request weight-traffic energy (fJ): the weight terms of
+    /// `dse::reuse::traffic_energy_fj` — the part a resident network
+    /// never pays again and a non-resident one pays once per batch.
+    pub weight_fj: f64,
+    /// Per-request non-weight energy (fJ): datapath plus
+    /// input/psum/output traffic.
+    pub base_fj: f64,
+}
+
+/// The serving cost of one (network, system, mapping) triple: per-layer
+/// [`LayerServeCost`]s in network order, the macro cycle time, and the
+/// D1 weight-residency verdict that decides whether reload energy is
+/// charged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkServeCost {
+    /// Name of the system this cost was derived on.
+    pub system: String,
+    /// Name of the network.
+    pub network: String,
+    /// Per-layer costs, in network order.
+    pub layers: Vec<LayerServeCost>,
+    /// Macro cycle time (ns), `model::latency::cycle_ns`.
+    pub t_cycle_ns: f64,
+    /// Whether every layer's weights fit in the macros' D1 capacity at
+    /// once (`Σ weight_elems ≤ n_weights · n_macros`). Resident ⇒ zero
+    /// weight-reload energy in steady state; otherwise the per-request
+    /// weight traffic is charged once per batch.
+    pub resident: bool,
+}
+
+impl NetworkServeCost {
+    /// Derive the serving cost from a searched [`NetworkResult`] on the
+    /// system it was searched on. Every stored term copies the
+    /// evaluator's own expressions (`dse::cost::evaluate_tiled`,
+    /// `dse::reuse::traffic_energy_fj`) with identical operation order,
+    /// which is what makes [`NetworkServeCost::serialized_service_ns`]
+    /// at batch 1 bit-identical to [`NetworkResult::total_time_ns`].
+    pub fn from_result(r: &NetworkResult, sys: &ImcSystem) -> Self {
+        let gb = &sys.hierarchy.levels[0];
+        let dram = sys.hierarchy.levels.last().unwrap();
+        let layers = r
+            .layers
+            .iter()
+            .map(|l| {
+                let e = &l.best;
+                let c = &e.accesses;
+                // identical to the evaluator's latency arithmetic
+                let mvm_cycles = e.tiles.mvms as f64 * sys.imc.cycles_per_mvm() as f64;
+                let load_cycles =
+                    c.weight_loads_per_macro as f64 * e.tiles.rows_used_avg;
+                let avg_bits = 8.0; // the evaluator's traffic-mix width
+                let mem_cycles = c.gb_total() * avg_bits / gb.bw_bits_per_cycle as f64;
+                // the weight/non-weight split of traffic_energy_fj
+                let ib = sys.imc.act_bits as f64;
+                let wb = sys.imc.weight_bits as f64;
+                let ob = crate::dse::psum_bits(&l.layer, sys) as f64;
+                let weight_fj = c.weight_gb_reads * wb * gb.read_fj_per_bit
+                    + c.weight_dram_reads * wb * dram.read_fj_per_bit;
+                let base_fj = e.macro_energy.total_fj()
+                    + c.input_gb_reads * ib * gb.read_fj_per_bit
+                    + c.psum_gb_reads * ob * gb.read_fj_per_bit
+                    + c.psum_gb_writes * ob * gb.write_fj_per_bit
+                    + c.output_gb_writes * ob * gb.write_fj_per_bit
+                    + c.input_dram_reads * ib * dram.read_fj_per_bit
+                    + c.output_dram_writes * ob * dram.write_fj_per_bit;
+                LayerServeCost {
+                    mvm_cycles,
+                    load_cycles,
+                    mem_cycles,
+                    weight_fj,
+                    base_fj,
+                }
+            })
+            .collect();
+        let total_weights: u64 = r.layers.iter().map(|l| l.layer.weight_elems()).sum();
+        NetworkServeCost {
+            system: r.system.clone(),
+            network: r.network.clone(),
+            layers,
+            t_cycle_ns: crate::model::latency::cycle_ns(&sys.imc),
+            resident: total_weights <= sys.total_weights() as u64,
+        }
+    }
+
+    /// Batch-`b` latency of layer `l` (ns): the evaluator's roofline
+    /// with the batch folded in —
+    /// `((b·mvm + load).max(b·mem)) · t_cycle`. The MVM compute and the
+    /// buffer traffic scale with the batch; the weight-load cycles are
+    /// paid once per batch (the weight-reuse amortization). At `b = 1`
+    /// this is bit-identical to the evaluator's `time_ns`
+    /// (`1.0 · x == x` in IEEE arithmetic, and the summation order
+    /// matches `evaluate_tiled`'s).
+    pub fn layer_time_ns(&self, l: usize, batch: usize) -> f64 {
+        let c = &self.layers[l];
+        let b = batch as f64;
+        (b * c.mvm_cycles + c.load_cycles).max(b * c.mem_cycles) * self.t_cycle_ns
+    }
+
+    /// [`NetworkServeCost::layer_time_ns`] on the integer picosecond
+    /// event timeline (rounded to nearest, floored at 1 ps).
+    pub fn layer_time_ps(&self, l: usize, batch: usize) -> u64 {
+        ((self.layer_time_ns(l, batch) * 1e3).round() as u64).max(1)
+    }
+
+    /// Number of layer stages.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Serialized batch-`b` service time (ns): the per-layer times
+    /// summed in network order — the same fold
+    /// [`NetworkResult::total_time_ns`] runs, so at `b = 1` the two are
+    /// bit-identical.
+    pub fn serialized_service_ns(&self, batch: usize) -> f64 {
+        (0..self.layers.len()).map(|l| self.layer_time_ns(l, batch)).sum()
+    }
+
+    /// Per-stage batch-`b` service times on the event timeline (ps).
+    pub fn stage_times_ps(&self, batch: usize) -> Vec<u64> {
+        (0..self.layers.len()).map(|l| self.layer_time_ps(l, batch)).collect()
+    }
+
+    /// The schedule's steady-state bottleneck occupancy of one batch
+    /// (ps): the full service time when serialized (one batch occupies
+    /// everything), the slowest stage when layer-pipelined (stages
+    /// overlap across batches). `pipelined ≤ serialized` always, which
+    /// is why pipelined throughput can only be higher.
+    pub fn bottleneck_ps(&self, schedule: Schedule, batch: usize) -> u64 {
+        let stages = self.stage_times_ps(batch);
+        match schedule {
+            Schedule::Serialized => stages.iter().sum(),
+            Schedule::LayerPipelined => stages.into_iter().max().unwrap_or(1),
+        }
+    }
+
+    /// Energy charged per request in a batch of `b` (fJ): the
+    /// non-weight energy per request, plus — only when the network is
+    /// not D1-resident — the weight traffic amortized over the batch
+    /// (charged once per batch, shared by its `b` requests).
+    pub fn fj_per_request(&self, batch: usize) -> f64 {
+        let base: f64 = self.layers.iter().map(|c| c.base_fj).sum();
+        base + self.reload_fj_per_request(batch)
+    }
+
+    /// Weight-reload energy per request in a batch of `b` (fJ): zero
+    /// when the network is D1-resident (weights are loaded once, ever),
+    /// otherwise the per-inference weight traffic divided by the batch
+    /// size it is shared across. Strictly positive for every
+    /// non-resident network (a mapping always reads each weight at
+    /// least once).
+    pub fn reload_fj_per_request(&self, batch: usize) -> f64 {
+        if self.resident {
+            0.0
+        } else {
+            self.layers.iter().map(|c| c.weight_fj).sum::<f64>() / batch as f64
+        }
+    }
+}
+
+/// Canonical per-`GridPoint` serving configuration of the sweep
+/// extension (one fixed, documented operating point so every grid
+/// point's serve columns are comparable): trace seed.
+pub const SWEEP_SERVE_SEED: u64 = 42;
+/// Requests per simulated trace in the sweep's serve columns.
+pub const SWEEP_SERVE_REQUESTS: usize = 512;
+/// Maximum batch size the greedy FIFO batcher forms in the sweep's
+/// serve columns.
+pub const SWEEP_SERVE_MAX_BATCH: usize = 8;
+/// Offered-load utilization (fraction of the schedule's bottleneck
+/// capacity) of the sweep's canonical latency/energy measurement run.
+pub const SWEEP_SERVE_UTIL: f64 = 0.8;
+/// The sweep's p99 latency SLO (ps): 2 ms — the ROADMAP's "which
+/// surveyed design serves N req/s under a 2 ms p99?" query.
+pub const SWEEP_SERVE_SLO_PS: u64 = 2_000_000_000;
+/// Schedule of the sweep's serve columns (layer-pipelined: the
+/// throughput-oriented operating point).
+pub const SWEEP_SERVE_SCHEDULE: Schedule = Schedule::LayerPipelined;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::table2_systems;
+    use crate::dse::{search_network, DseOptions};
+    use crate::workload::all_networks;
+
+    #[test]
+    fn schedule_parses_and_displays() {
+        assert_eq!("serialized".parse::<Schedule>(), Ok(Schedule::Serialized));
+        assert_eq!(
+            "layer-pipelined".parse::<Schedule>(),
+            Ok(Schedule::LayerPipelined)
+        );
+        assert!("pipelined".parse::<Schedule>().is_err());
+        assert_eq!(Schedule::Serialized.to_string(), "serialized");
+        assert_eq!(Schedule::LayerPipelined.to_string(), "layer-pipelined");
+    }
+
+    #[test]
+    fn batch1_serialized_service_is_bit_identical_to_cost_model_latency() {
+        let sys = &table2_systems()[0];
+        for net in all_networks() {
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            assert_eq!(
+                cost.serialized_service_ns(1).to_bits(),
+                r.total_time_ns().to_bits(),
+                "{}",
+                net.name
+            );
+            // and per layer, against the evaluator's own time_ns
+            for (l, lr) in r.layers.iter().enumerate() {
+                assert_eq!(
+                    cost.layer_time_ns(l, 1).to_bits(),
+                    lr.best.time_ns.to_bits(),
+                    "{} layer {l}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_but_never_beats_linear_scaling() {
+        let sys = &table2_systems()[0];
+        let net = all_networks().remove(0);
+        let r = search_network(&net, sys, &DseOptions::default());
+        let cost = NetworkServeCost::from_result(&r, sys);
+        let t1 = cost.serialized_service_ns(1);
+        for b in [2usize, 4, 8] {
+            let tb = cost.serialized_service_ns(b);
+            // a batch is never faster than one request...
+            assert!(tb >= t1, "batch {b}: {tb} < {t1}");
+            // ...and never slower than b independent requests (the
+            // amortized weight loads can only help)
+            assert!(tb <= t1 * b as f64 + 1e-6, "batch {b}: {tb} > {}", t1 * b as f64);
+        }
+    }
+
+    #[test]
+    fn pipelined_bottleneck_never_exceeds_serialized() {
+        let sys = &table2_systems()[1];
+        for net in all_networks() {
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            for b in [1usize, 4, 8] {
+                assert!(
+                    cost.bottleneck_ps(Schedule::LayerPipelined, b)
+                        <= cost.bottleneck_ps(Schedule::Serialized, b),
+                    "{} b={b}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reload_energy_zero_iff_resident() {
+        let systems = table2_systems();
+        let mut saw_resident = false;
+        let mut saw_nonresident = false;
+        for sys in &systems {
+            for net in all_networks() {
+                let r = search_network(&net, sys, &DseOptions::default());
+                let cost = NetworkServeCost::from_result(&r, sys);
+                let reload = cost.reload_fj_per_request(4);
+                if cost.resident {
+                    assert_eq!(reload, 0.0, "{}/{}", sys.name, net.name);
+                    saw_resident = true;
+                } else {
+                    assert!(reload > 0.0, "{}/{}", sys.name, net.name);
+                    saw_nonresident = true;
+                }
+                // amortization: per-request reload halves when the batch doubles
+                if !cost.resident {
+                    assert!(cost.reload_fj_per_request(8) < cost.reload_fj_per_request(4));
+                }
+            }
+        }
+        assert!(saw_resident && saw_nonresident, "test grid exercises both branches");
+    }
+}

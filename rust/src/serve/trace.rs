@@ -1,0 +1,220 @@
+//! Seeded synthetic arrival traces for the serving simulator: Poisson
+//! and bursty (on/off duty-cycle) request streams on the integer
+//! picosecond timeline the discrete-event engine runs on.
+//!
+//! Determinism contract (the same one the sim PRNG gives): a trace is a
+//! pure function of `(seed, parameters)` — same seed ⇒ bit-identical
+//! arrival vector on every platform and thread count. To keep that
+//! guarantee the exponential inter-arrival sampler uses von Neumann's
+//! comparison method ([`exp_sample`]): uniform draws, comparisons and
+//! additions only — no `ln`, whose last bits may differ across libm
+//! builds (the same reason `Rng::normal` is an Irwin–Hall sum).
+
+use crate::util::prng::Rng;
+
+/// One exact standard-exponential (`Exp(1)`) draw via von Neumann's
+/// comparison method. Draw `u₁` and count the length `n` of the maximal
+/// strictly-decreasing run `u₁ > u₂ > …` it starts; accept `k + u₁`
+/// when `n` is odd, otherwise bump the integer part `k` and retry.
+/// `P(n odd | u₁ = u) = e^{-u}`, so the accepted fractional part has
+/// the truncated-exponential density on `[0, 1)` and `k` is geometric
+/// with failure probability `e^{-1}` — together exactly `Exp(1)`,
+/// using nothing but `Rng::f64` draws and IEEE comparisons/additions.
+pub fn exp_sample(rng: &mut Rng) -> f64 {
+    let mut k = 0.0f64;
+    loop {
+        let u1 = rng.f64();
+        let mut prev = u1;
+        let mut n = 1u32;
+        loop {
+            let u = rng.f64();
+            if u < prev {
+                prev = u;
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        if n % 2 == 1 {
+            return k + u1;
+        }
+        k += 1.0;
+    }
+}
+
+/// Arrival-process family of a synthetic trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Memoryless arrivals: exponential inter-arrival gaps.
+    Poisson,
+    /// On/off duty-cycle bursts: a Poisson stream compressed into the
+    /// leading `duty%` window of every period (same long-run rate).
+    Bursty,
+}
+
+impl TraceKind {
+    /// Canonical lowercase name (CLI/CSV token).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceKind::Poisson => "poisson",
+            TraceKind::Bursty => "bursty",
+        }
+    }
+}
+
+impl std::str::FromStr for TraceKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "poisson" => Ok(TraceKind::Poisson),
+            "bursty" => Ok(TraceKind::Bursty),
+            other => Err(format!("unknown trace kind '{other}' (poisson|bursty)")),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// `n` Poisson arrival times (ps, nondecreasing, starting after 0):
+/// inter-arrival gaps are `round(Exp(1) · mean_gap_ps)`, so the
+/// long-run rate is `1e12 / mean_gap_ps` requests per second.
+pub fn poisson_arrivals(seed: u64, mean_gap_ps: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t = t.saturating_add(gap_ps(&mut rng, mean_gap_ps));
+        out.push(t);
+    }
+    out
+}
+
+/// `n` bursty arrival times (ps, nondecreasing): a Poisson stream at
+/// `duty_pct/100`-compressed mean gap, folded into the leading
+/// `window = period_ps·duty_pct/100` of every `period_ps` window. Every
+/// arrival satisfies `t % period_ps < window`, and the long-run mean
+/// gap is still `mean_gap_ps` (the on-window rate is `100/duty_pct`
+/// times the Poisson trace's). `duty_pct` must be in `1..=100`;
+/// `duty_pct == 100` degenerates to the plain Poisson trace.
+pub fn bursty_arrivals(
+    seed: u64,
+    mean_gap_ps: u64,
+    n: usize,
+    period_ps: u64,
+    duty_pct: u64,
+) -> Vec<u64> {
+    assert!((1..=100).contains(&duty_pct), "duty_pct must be in 1..=100");
+    assert!(period_ps > 0, "period_ps must be positive");
+    let window = (period_ps * duty_pct / 100).max(1);
+    let on_gap = (mean_gap_ps * duty_pct / 100).max(1);
+    let mut rng = Rng::new(seed);
+    let mut tau = 0u64; // dense "on-time" clock
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        tau = tau.saturating_add(gap_ps(&mut rng, on_gap));
+        // unfold the dense clock onto the duty-cycled real timeline
+        out.push((tau / window) * period_ps + tau % window);
+    }
+    out
+}
+
+/// One integer inter-arrival gap (ps) at the given mean.
+fn gap_ps(rng: &mut Rng, mean_gap_ps: u64) -> u64 {
+    (exp_sample(rng) * mean_gap_ps as f64).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_sample_has_unit_mean_and_is_nonnegative() {
+        let mut rng = Rng::new(17);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        for _ in 0..n {
+            let x = exp_sample(&mut rng);
+            assert!(x >= 0.0);
+            sum += x;
+            sum_sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum_sq / n as f64 - mean * mean;
+        // Exp(1): mean 1, variance 1
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "variance {var}");
+    }
+
+    #[test]
+    fn same_seed_gives_bit_identical_traces() {
+        let a = poisson_arrivals(42, 1_000_000, 5_000);
+        let b = poisson_arrivals(42, 1_000_000, 5_000);
+        assert_eq!(a, b);
+        let c = bursty_arrivals(42, 1_000_000, 5_000, 10_000_000, 20);
+        let d = bursty_arrivals(42, 1_000_000, 5_000, 10_000_000, 20);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = poisson_arrivals(1, 1_000_000, 1_000);
+        let b = poisson_arrivals(2, 1_000_000, 1_000);
+        assert_ne!(a, b);
+        let c = bursty_arrivals(1, 1_000_000, 1_000, 10_000_000, 20);
+        let d = bursty_arrivals(2, 1_000_000, 1_000, 10_000_000, 20);
+        assert_ne!(c, d);
+    }
+
+    #[test]
+    fn traces_are_nondecreasing() {
+        let p = poisson_arrivals(7, 500_000, 10_000);
+        assert!(p.windows(2).all(|w| w[0] <= w[1]));
+        let b = bursty_arrivals(7, 500_000, 10_000, 5_000_000, 10);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        let mean_gap = 1_000_000u64; // 1 µs → 1e6 req/s
+        let n = 100_000;
+        let t = poisson_arrivals(5, mean_gap, n);
+        let measured = *t.last().unwrap() as f64 / n as f64;
+        let err = (measured - mean_gap as f64).abs() / mean_gap as f64;
+        assert!(err < 0.02, "mean gap {measured} vs {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_honors_duty_cycle_and_rate() {
+        let mean_gap = 1_000_000u64;
+        let period = 20_000_000u64;
+        for duty in [5u64, 20, 50] {
+            let n = 50_000;
+            let t = bursty_arrivals(9, mean_gap, n, period, duty);
+            let window = period * duty / 100;
+            // every arrival lands inside the on-window of its period
+            assert!(
+                t.iter().all(|&x| x % period < window),
+                "duty {duty}: arrival outside on-window"
+            );
+            // long-run rate unchanged by the duty cycle
+            let measured = *t.last().unwrap() as f64 / n as f64;
+            let err = (measured - mean_gap as f64).abs() / mean_gap as f64;
+            assert!(err < 0.05, "duty {duty}: mean gap {measured} vs {mean_gap}");
+        }
+    }
+
+    #[test]
+    fn full_duty_cycle_degenerates_to_poisson() {
+        // duty 100%: window == period, the fold is the identity on
+        // every in-window tick, so the gap stream is the Poisson one
+        let a = bursty_arrivals(3, 1_000_000, 2_000, 4_000_000, 100);
+        let p = poisson_arrivals(3, 1_000_000, 2_000);
+        assert_eq!(a, p);
+    }
+}

@@ -24,6 +24,17 @@
 //! designs and precisions (corners stay apart: cost is noise-invariant,
 //! so pooling would let every off row dominate its noisy twins).
 //!
+//! Every grid point additionally carries three *serving* columns from
+//! the multi-tenant serving simulator ([`crate::serve`]): the
+//! SLO-constrained throughput, the energy per request and the p99
+//! latency of the point's mapping replayed under the canonical serving
+//! configuration (`serve::SWEEP_SERVE_*` — seed-42 Poisson trace,
+//! layer-pipelined, batch ≤ 8, 2 ms p99 SLO). The summary exposes a
+//! per-(network, sparsity, noise) **(energy/request,
+//! throughput-under-SLO) serving Pareto cut** next to the cost and
+//! accuracy frontiers — the ROADMAP's "which surveyed design serves N
+//! req/s under a 2 ms p99?" query.
+//!
 //! Shard-determinism invariant: tasks are numbered in canonical order
 //! (systems → networks → precisions → sparsities → noises → objectives)
 //! and whole *(design, network, precision, sparsity, noise)* groups are
@@ -43,6 +54,7 @@ use crate::dse::{
     COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use crate::model::TechParams;
+use crate::serve::sweep_serve_metrics;
 use crate::sim::{AccuracyRecord, NoiseSpec};
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{all_networks, Network};
@@ -331,6 +343,16 @@ pub struct GridPoint {
     pub max_abs_err: f64,
     /// Fraction of nominal simulated ADC conversions that clipped.
     pub clip_rate: f64,
+    /// SLO-constrained serving throughput (req/s) under the canonical
+    /// serving configuration (`crate::serve::SWEEP_SERVE_*`): the
+    /// highest ladder rung whose p99 meets the 2 ms SLO; 0 when none
+    /// does.
+    pub serve_rps: f64,
+    /// Energy per request (fJ) in the canonical serving run — includes
+    /// the per-batch weight-reload charge on non-D1-resident designs.
+    pub serve_fj_per_req: f64,
+    /// p99 request latency (ns) in the canonical serving run.
+    pub serve_p99_ns: f64,
 }
 
 impl GridPoint {
@@ -373,6 +395,12 @@ pub struct SweepSummary {
     /// across corners shows where noise pushes AIMC points off in
     /// favor of exact DIMC ones.
     pub surfaces: Vec<(String, Vec<usize>)>,
+    /// Per-(network, sparsity, noise) **(energy/request,
+    /// throughput-under-SLO) serving Pareto cut** pooled across designs,
+    /// precision points and objectives: (label, indices into `points`).
+    /// Minimizes `serve_fj_per_req` and `-serve_rps`, so the frugal and
+    /// the fast serving designs both survive.
+    pub serve_frontiers: Vec<(String, Vec<usize>)>,
     /// Cost-cache statistics accumulated by this run.
     pub cache: CacheStats,
     /// True when this summary was assembled by [`merge_summaries`] —
@@ -457,6 +485,7 @@ pub fn run_sweep_with_cache(
     let frontiers = compute_frontiers(&points);
     let accuracy_frontiers = compute_accuracy_frontiers(&points);
     let surfaces = compute_surfaces(&points);
+    let serve_frontiers = compute_serve_frontiers(&points);
     SweepSummary {
         shards,
         shard_index: opts.shard_index,
@@ -465,6 +494,7 @@ pub fn run_sweep_with_cache(
         frontiers,
         accuracy_frontiers,
         surfaces,
+        serve_frontiers,
         cache: cache.stats().since(&stats_before),
         merged: false,
     }
@@ -544,6 +574,11 @@ fn group_points(
                 network: net.name.clone(),
                 layers,
             };
+            // serving columns: this objective's mapping replayed under
+            // the canonical serving configuration — a pure function of
+            // (r, sys), so thread-/shard-/cache-independent like the
+            // cost columns
+            let serve = sweep_serve_metrics(&r, sys);
             GridPoint {
                 task_index: rg.group * n_obj + oi,
                 design: sys.name.clone(),
@@ -567,6 +602,9 @@ fn group_points(
                 sqnr_std_db: accuracy.sqnr_std_db(),
                 max_abs_err: accuracy.max_abs_err,
                 clip_rate: accuracy.clip_rate(),
+                serve_rps: serve.rps,
+                serve_fj_per_req: serve.fj_per_req,
+                serve_p99_ns: serve.p99_ns,
             }
         })
         .collect()
@@ -751,6 +789,51 @@ pub(crate) fn compute_surfaces(points: &[GridPoint]) -> Vec<(String, Vec<usize>)
         .collect()
 }
 
+/// Per-(network, sparsity, noise) (energy/request, −throughput) serving
+/// Pareto cuts pooled across designs, precision points and objectives —
+/// the "which design serves N req/s under the SLO, and at what energy
+/// per request?" view. Points that fail the SLO at every ladder rung
+/// (`serve_rps == 0`) still participate; they only survive when nothing
+/// that actually serves is also cheaper. Depends only on the set of
+/// points, so shard count never changes the outcome.
+pub(crate) fn compute_serve_frontiers(points: &[GridPoint]) -> Vec<(String, Vec<usize>)> {
+    let mut groups: Vec<(&str, u64, [u64; 3])> = Vec::new();
+    for p in points {
+        let key = (p.network.as_str(), p.sparsity.to_bits(), p.noise.fingerprint());
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let sparsities: Vec<u64> = groups.iter().map(|&(_, s, _)| s).collect();
+    let noises: Vec<[u64; 3]> = groups.iter().map(|&(_, _, n)| n).collect();
+    let (multi_sp, multi_noise) = (multi(&sparsities), multi(&noises));
+    groups
+        .iter()
+        .map(|&(name, sp_bits, noise_fp)| {
+            let idx: Vec<usize> = (0..points.len())
+                .filter(|&i| {
+                    points[i].network == name
+                        && points[i].sparsity.to_bits() == sp_bits
+                        && points[i].noise.fingerprint() == noise_fp
+                })
+                .collect();
+            let coords: Vec<(f64, f64)> = idx
+                .iter()
+                .map(|&i| (points[i].serve_fj_per_req, -points[i].serve_rps))
+                .collect();
+            let front = pareto_front(&coords);
+            let mut label = format!("{name} serving throughput-vs-energy");
+            if multi_sp {
+                label.push_str(&format!(" @ sparsity {}", f64::from_bits(sp_bits)));
+            }
+            if multi_noise {
+                label.push_str(&format!(" @ noise {}", points[idx[0]].noise));
+            }
+            (label, front.into_iter().map(|j| idx[j]).collect())
+        })
+        .collect()
+}
+
 /// Merge per-shard summaries back into a full-grid summary: points are
 /// reassembled in canonical task order (duplicates collapse), cache
 /// counters accumulate, and the global Pareto frontiers (cost and
@@ -767,6 +850,7 @@ pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
     let frontiers = compute_frontiers(&points);
     let accuracy_frontiers = compute_accuracy_frontiers(&points);
     let surfaces = compute_surfaces(&points);
+    let serve_frontiers = compute_serve_frontiers(&points);
     SweepSummary {
         shards: parts.first().map(|s| s.shards).unwrap_or(1),
         shard_index: None,
@@ -775,6 +859,7 @@ pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
         frontiers,
         accuracy_frontiers,
         surfaces,
+        serve_frontiers,
         cache,
         merged: true,
     }
@@ -1005,6 +1090,43 @@ mod tests {
         // one surface, likewise
         assert_eq!(s.surfaces.len(), 1);
         assert!(!s.surfaces[0].1.is_empty());
+        // and one serving Pareto cut
+        assert_eq!(s.serve_frontiers.len(), 1);
+        assert!(!s.serve_frontiers[0].1.is_empty());
+    }
+
+    #[test]
+    fn serve_columns_are_populated_and_deterministic() {
+        let grid = tiny_grid();
+        let a = run_sweep(&grid, &SweepOptions::default());
+        let b = run_sweep(
+            &grid,
+            &SweepOptions {
+                threads: 4,
+                ..Default::default()
+            },
+        );
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            // the canonical serving run always completes its requests,
+            // so latency and energy are strictly positive
+            assert!(pa.serve_p99_ns > 0.0, "{}: no p99", pa.design);
+            assert!(pa.serve_fj_per_req > 0.0, "{}: no energy", pa.design);
+            assert!(pa.serve_rps >= 0.0);
+            // serving columns are thread-count-invariant, bit for bit
+            assert_eq!(pa.serve_rps.to_bits(), pb.serve_rps.to_bits());
+            assert_eq!(pa.serve_fj_per_req.to_bits(), pb.serve_fj_per_req.to_bits());
+            assert_eq!(pa.serve_p99_ns.to_bits(), pb.serve_p99_ns.to_bits());
+        }
+        let (label, front) = &a.serve_frontiers[0];
+        assert!(label.contains("serving throughput-vs-energy"), "{label}");
+        // the cheapest-per-request point always survives the cut
+        let min_fj = a
+            .points
+            .iter()
+            .map(|p| p.serve_fj_per_req)
+            .min_by(f64::total_cmp)
+            .unwrap();
+        assert!(front.iter().any(|&i| a.points[i].serve_fj_per_req == min_fj));
     }
 
     #[test]

@@ -22,7 +22,11 @@
 //! * [`grid`] — grid construction (SRAM-cell budget, precision and
 //!   activation-sparsity axes), deterministic sharding
 //!   (`--shards`/`--shard-index`), the two-level (group × layer) task
-//!   scheduler (`--threads`) and shard-result merging. The determinism
+//!   scheduler (`--threads`) and shard-result merging. Each grid point
+//!   also carries the serving simulator's canonical-trace columns
+//!   (`serve_rps` / `serve_fj_per_req` / `serve_p99_ns`, produced by
+//!   [`crate::serve::sweep_serve_metrics`]), aggregated into
+//!   per-network (energy/request, throughput-under-SLO) Pareto cuts. The determinism
 //!   invariant: points and Pareto frontiers are bit-identical for any
 //!   shard count, thread count and cache temperature, because tasks
 //!   are canonically numbered, whole evaluation groups are dealt

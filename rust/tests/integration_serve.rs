@@ -1,0 +1,164 @@
+//! Integration: the serving simulator's schedule contract against the
+//! cost model — batch=1 serialized latency bit-identical to the
+//! network's single-request latency, layer-pipelined throughput ≥
+//! serialized on every multi-layer tinyMLPerf network, weight-reload
+//! energy zero iff the network is D1-resident — plus the seeded-trace
+//! determinism the CI `serve` CSV comparison relies on.
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{search_network, DseOptions};
+use imcsim::serve::{
+    bursty_arrivals, poisson_arrivals, simulate, slo_throughput, NetworkServeCost, Schedule,
+};
+use imcsim::workload::all_networks;
+
+/// The acceptance criterion: with batch 1 under the serialized
+/// schedule, a lone request's service time reproduces the cost model's
+/// end-to-end network latency *bit-exactly* — the serving simulator is
+/// the cost model replayed, not a re-implementation of it.
+#[test]
+fn batch1_serialized_latency_is_bit_identical_to_the_cost_model() {
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            // the analytic service-time fold reproduces total_time_ns
+            assert_eq!(
+                cost.serialized_service_ns(1).to_bits(),
+                r.total_time_ns().to_bits(),
+                "{}/{}: serialized batch-1 service != network latency",
+                sys.name,
+                net.name
+            );
+            // and the replayed event time is its ps rounding: one
+            // request, no queueing, latency = Σ per-layer stage times
+            let rep = simulate(&cost, Schedule::Serialized, 1, &[0]);
+            let expected_ps: u64 = (0..cost.n_layers()).map(|l| cost.layer_time_ps(l, 1)).sum();
+            assert_eq!(rep.latency.percentile_ps(100.0), expected_ps);
+        }
+    }
+}
+
+/// The schedule knob's throughput contract: pipelining layer stages
+/// can only help — on every multi-layer network and design, sustained
+/// throughput under backlog is at least the serialized schedule's.
+#[test]
+fn layer_pipelined_throughput_beats_serialized_on_every_network() {
+    let backlog = vec![0u64; 96];
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            assert!(net.layers.len() > 1, "{} is not multi-layer", net.name);
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            for max_batch in [1usize, 8] {
+                let ser = simulate(&cost, Schedule::Serialized, max_batch, &backlog);
+                let pipe = simulate(&cost, Schedule::LayerPipelined, max_batch, &backlog);
+                assert!(
+                    pipe.achieved_rps >= ser.achieved_rps,
+                    "{}/{} b<={max_batch}: pipelined {} < serialized {} req/s",
+                    sys.name,
+                    net.name,
+                    pipe.achieved_rps,
+                    ser.achieved_rps
+                );
+                // both schedules serve every request of the trace
+                assert_eq!(pipe.latency.count(), backlog.len());
+                assert_eq!(ser.latency.count(), backlog.len());
+            }
+        }
+    }
+}
+
+/// Weight-reload energy contract: zero whenever every layer's weights
+/// fit in the macros' D1 capacity at once, strictly positive otherwise
+/// — and the test grid must exercise both branches to prove the "iff".
+#[test]
+fn weight_reload_energy_is_zero_iff_the_network_is_d1_resident() {
+    let mut saw_resident = false;
+    let mut saw_nonresident = false;
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            let fits = net.total_weights() <= sys.total_weights() as u64;
+            assert_eq!(cost.resident, fits, "{}/{}", sys.name, net.name);
+            let rep = simulate(&cost, Schedule::Serialized, 4, &[0, 0, 0, 0]);
+            if fits {
+                saw_resident = true;
+                assert_eq!(
+                    rep.latency.reload_fj, 0.0,
+                    "{}/{}: resident network charged reload energy",
+                    sys.name, net.name
+                );
+            } else {
+                saw_nonresident = true;
+                assert!(
+                    rep.latency.reload_fj > 0.0,
+                    "{}/{}: non-resident network charged no reload energy",
+                    sys.name, net.name
+                );
+                // amortization: doubling the batch halves the
+                // per-request reload share
+                let b4 = cost.reload_fj_per_request(4);
+                let b8 = cost.reload_fj_per_request(8);
+                assert!(b8 < b4, "{}/{}: no amortization", sys.name, net.name);
+            }
+            // reload energy is part of (and never exceeds) the total
+            assert!(rep.latency.reload_fj <= rep.latency.energy_fj);
+        }
+    }
+    assert!(
+        saw_resident && saw_nonresident,
+        "table2 × tinyMLPerf no longer exercises both residency branches"
+    );
+}
+
+/// Seeded-trace determinism across the whole serving pipeline: the same
+/// seed replays to identical reports (the property the CI `cmp` of
+/// repeated `serve --csv` runs locks in at the byte level), and both
+/// trace families hold it.
+#[test]
+fn seeded_replay_is_bit_identical_end_to_end() {
+    let sys = &table2_systems()[1]; // aimc_multi: many small macros
+    let net = all_networks().remove(1);
+    let r = search_network(&net, sys, &DseOptions::default());
+    let cost = NetworkServeCost::from_result(&r, sys);
+    let interval = cost.bottleneck_ps(Schedule::LayerPipelined, 8) as f64 / 8.0;
+    let mean_gap = ((interval / 0.8).round() as u64).max(1);
+    for arrivals in [
+        poisson_arrivals(42, mean_gap, 512),
+        bursty_arrivals(42, mean_gap, 512, 100_000_000, 20),
+    ] {
+        let a = simulate(&cost, Schedule::LayerPipelined, 8, &arrivals);
+        let b = simulate(&cost, Schedule::LayerPipelined, 8, &arrivals);
+        assert_eq!(a, b);
+        assert_eq!(a.latency.count(), 512);
+    }
+    // the SLO ladder is deterministic too
+    let t1 = slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 256, 2_000_000_000);
+    let t2 = slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 256, 2_000_000_000);
+    assert_eq!(t1.to_bits(), t2.to_bits());
+}
+
+/// The SLO knob orders throughput sensibly on real hardware points: a
+/// looser SLO never reports lower throughput, and an impossible SLO
+/// reports zero.
+#[test]
+fn slo_constrained_throughput_is_monotone_in_the_slo() {
+    let sys = &table2_systems()[2]; // dimc_large
+    let net = all_networks().remove(0);
+    let r = search_network(&net, sys, &DseOptions::default());
+    let cost = NetworkServeCost::from_result(&r, sys);
+    let impossible = slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 256, 1);
+    assert_eq!(impossible, 0.0);
+    let mut last = 0.0f64;
+    for slo_ps in [1_000_000u64, 100_000_000, 2_000_000_000, 1_000_000_000_000] {
+        let t = slo_throughput(&cost, Schedule::LayerPipelined, 8, 42, 256, slo_ps);
+        assert!(
+            t >= last,
+            "slo {slo_ps} ps: throughput {t} < {last} at a tighter SLO"
+        );
+        last = t;
+    }
+    assert!(last > 0.0, "even the loosest SLO admits nothing");
+}
