@@ -6,9 +6,10 @@
 //! cost evaluations), and the bit-plane simulator's speedup over the
 //! retained scalar reference (the acceptance bar is ≥5×).
 //!
-//! Also carries the serving simulator's first trajectory points
+//! Also carries the serving simulator's trajectory points
 //! (`serve/replay_4096_reqs` wall time, the modeled req/s and the
-//! host-side replay rate) — archived per push, not gated yet.
+//! host-side replay rate) and, on the gate grid, the serve
+//! memoization's replay-reduction metrics.
 //!
 //! With `IMCSIM_BENCH_JSON=PATH` set, the run additionally emits a
 //! machine-readable trajectory file (`BENCH_sweep.json` in CI):
@@ -19,11 +20,15 @@
 //! grid, the scalar-vs-bitplane `sim_speedup`, the `cross_corner_rate`
 //! of the noise-split cache (the fraction of uncached lookups on the
 //! two-corner gate grid that skipped the mapping search), the
-//! single-flight `duplicate_searches` tripwire and the 8-thread
-//! `wall_speedup_8t` of the (group × layer) scheduler — that the CI
-//! `bench-trajectory` job archives per push and fails on when the
-//! reduction drops below 2×, the sim speedup below 5×, the wall
-//! speedup below 3×, or any search is ever duplicated.
+//! single-flight `duplicate_searches` tripwire, the 8-thread
+//! `wall_speedup_8t` of the (group × layer) scheduler, and the serve
+//! store's `serve_replay_reduction` (naive replay volume for the
+//! grid's serving columns ÷ requests actually replayed through the
+//! memoized, rung-pruned ladder) with its `duplicate_serves`
+//! tripwire — that the CI `bench-trajectory` job archives per push
+//! and fails on when the reduction drops below 2×, the sim speedup
+//! below 5×, the wall speedup below 3×, the serve replay reduction
+//! below 10×, or any search or serve replay is ever duplicated.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -218,6 +223,33 @@ fn main() {
             s.cache.duplicate_searches as f64,
             "searches",
         );
+        // the serving columns' replay economy on the same gate grid:
+        // every grid point's canonical point + config search, counted
+        // against the naive volume of replaying each from scratch
+        metric(
+            &mut metrics,
+            "serve/gate_replayed_reqs",
+            s.cache.serve_replayed_reqs as f64,
+            "reqs",
+        );
+        metric(
+            &mut metrics,
+            "serve/gate_naive_reqs",
+            s.cache.serve_naive_reqs as f64,
+            "reqs",
+        );
+        metric(
+            &mut metrics,
+            "serve/gate_replay_reduction",
+            s.cache.serve_replay_reduction(),
+            "x",
+        );
+        metric(
+            &mut metrics,
+            "serve/gate_duplicate_serves",
+            s.cache.duplicate_serves as f64,
+            "replays",
+        );
 
         // thread-scaling on the same gate grid: a fresh cold cache per
         // width (run_sweep builds its own), so every wall time measures
@@ -317,6 +349,22 @@ fn main() {
                 num(cache.duplicate_searches as f64),
             ),
             ("wall_speedup_8t".to_string(), num(wall_speedup_8t)),
+            (
+                "serve_replay_reduction".to_string(),
+                num(cache.serve_replay_reduction()),
+            ),
+            (
+                "duplicate_serves".to_string(),
+                num(cache.duplicate_serves as f64),
+            ),
+            (
+                "serve_replayed_reqs".to_string(),
+                num(cache.serve_replayed_reqs as f64),
+            ),
+            (
+                "serve_naive_reqs".to_string(),
+                num(cache.serve_naive_reqs as f64),
+            ),
         ]
         .into_iter()
         .collect();

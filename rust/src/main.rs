@@ -17,14 +17,16 @@ use imcsim::report::{
 use imcsim::runtime::{default_artifacts_dir, load_manifest};
 use imcsim::serve::{
     bursty_arrivals, poisson_arrivals, simulate, slo_throughput, NetworkServeCost, Schedule,
-    TraceKind,
+    ServeConfig, TraceKind,
 };
 use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{
     load_cache_into, merge_summaries, run_sweep, run_sweep_with_cache, save_cache, CacheStats,
     CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary,
 };
-use imcsim::util::cli::{parse_list, parse_threads, reject_unknown, Args, SweepAxes};
+use imcsim::util::cli::{
+    parse_list, parse_serve_config, parse_threads, reject_unknown, Args, SweepAxes,
+};
 use imcsim::util::pool::parallel_map_with;
 
 const HELP: &str = "\
@@ -59,7 +61,8 @@ Exploration & serving:
                        each combination in turn
   sweep [--shards N] [--shard-index K] [--cells N[,N...]]
       [--precision P[,P...]] [--sparsity F[,F...]]
-      [--noise S[,S...]] [--cache-file FILE] [--csv FILE]
+      [--noise S[,S...]] [--serve-requests N] [--serve-slo-ms F]
+      [--serve-seed S] [--cache-file FILE] [--csv FILE]
       [--surface-csv FILE] [--threads N]
                        full-grid DSE sweep: every surveyed design (per
                        SRAM-cell budget) x every tinyMLPerf network x
@@ -86,9 +89,19 @@ Exploration & serving:
                        machines; --cache-file persists the cost cache
                        across runs (version-tagged; stale schemas are
                        rejected); --surface-csv dumps the 3-objective
-                       Pareto surface.
-  sweepmerge [--csv FILE] [--surface-csv FILE] [--threads N]
-      SHARD.csv [SHARD.csv ...]
+                       Pareto surface. Every grid point also carries
+                       the serving columns (canonical-trace req/s
+                       under SLO plus the best (schedule, batch)
+                       config found by the pruned serving search),
+                       memoized so identical replays across
+                       objectives and noise corners run once;
+                       --serve-requests / --serve-slo-ms /
+                       --serve-seed retarget the serving trace
+                       (defaults 512 / 2 / 42 keep CSVs bit-identical
+                       to earlier releases).
+  sweepmerge [--csv FILE] [--surface-csv FILE]
+      [--serve-requests N] [--serve-slo-ms F] [--serve-seed S]
+      [--threads N] SHARD.csv [SHARD.csv ...]
                        merge shard CSVs (written by `sweep --csv`) back
                        into the full-grid summary, Pareto frontiers and
                        3-objective surface
@@ -111,6 +124,16 @@ Exploration & serving:
                        req/s under the --slo-ms p99 target. --util is
                        the offered load as a fraction of the schedule's
                        bottleneck capacity; same --seed => byte-identical
+                       CSV for every --threads count
+  serve --sweep [--design NAME[,NAME...]] [--network <ae|resnet8|dscnn|mobilenet>[,...]]
+      [--requests N] [--seed S] [--slo-ms F] [--csv FILE] [--threads N]
+                       serving-configuration search: for each (design,
+                       network) pair search schedule x batch cap
+                       (layer-pipelined/serialized x 8,4,2,1) for the
+                       best SLO-constrained req/s, with admissible
+                       incumbent pruning and memoized replays; reports
+                       the canonical-trace point beside the winner and
+                       the replay-reduction statistics. Byte-identical
                        CSV for every --threads count
   artifacts            show the AOT artifact manifest
 
@@ -431,13 +454,21 @@ fn cmd_sweep(args: &Args) -> i32 {
         args,
         "sweep",
         &[
-            "shards", "shard-index", "cells", "precision", "sparsity", "noise", "csv",
-            "surface-csv", "cache-file", "threads",
+            "shards", "shard-index", "cells", "precision", "sparsity", "noise",
+            "serve-requests", "serve-slo-ms", "serve-seed", "csv", "surface-csv", "cache-file",
+            "threads",
         ],
     ) {
         eprintln!("{e}");
         return 2;
     }
+    let serve = match parse_serve_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let threads = match parse_threads(args) {
         Ok(n) => n,
         Err(e) => {
@@ -505,7 +536,8 @@ fn cmd_sweep(args: &Args) -> i32 {
         use imcsim::sweep::CacheLoadError;
         match load_cache_into(path, &cache) {
             Ok(n) => println!(
-                "cost cache: warmed {n} records (searches + trial energies) from {}",
+                "cost cache: warmed {n} records (searches + trial energies + serve replays) \
+                 from {}",
                 path.display()
             ),
             // no file yet is the normal first run, not an error
@@ -525,6 +557,7 @@ fn cmd_sweep(args: &Args) -> i32 {
                 shards,
                 shard_index,
                 threads,
+                serve,
                 ..Default::default()
             };
             run_sweep_with_cache(&grid, &opts, &cache)
@@ -540,6 +573,7 @@ fn cmd_sweep(args: &Args) -> i32 {
                         shards,
                         shard_index: Some(k),
                         threads,
+                        serve,
                         ..Default::default()
                     };
                     if cache_file.is_some() {
@@ -552,7 +586,7 @@ fn cmd_sweep(args: &Args) -> i32 {
             merge_summaries(&parts)
         }
         None => {
-            let opts = SweepOptions { threads, ..Default::default() };
+            let opts = SweepOptions { threads, serve, ..Default::default() };
             run_sweep_with_cache(&grid, &opts, &cache)
         }
     };
@@ -563,9 +597,11 @@ fn cmd_sweep(args: &Args) -> i32 {
             Ok(()) => {
                 let s = cache.stats();
                 println!(
-                    "cost cache: saved {} search entries + {} trial records to {}",
+                    "cost cache: saved {} search entries + {} trial records + {} serve \
+                     entries to {}",
                     s.entries,
                     s.trial_entries,
+                    s.serve_entries,
                     path.display()
                 )
             }
@@ -601,7 +637,19 @@ fn cmd_sweep(args: &Args) -> i32 {
 fn cmd_sweepmerge(args: &Args) -> i32 {
     // same guard as sweep/dse: a misspelled --surface-csv must not
     // silently drop the surface artifact with exit 0
-    if let Err(e) = reject_unknown(args, "sweepmerge", &["csv", "surface-csv", "threads"]) {
+    if let Err(e) = reject_unknown(
+        args,
+        "sweepmerge",
+        &["csv", "surface-csv", "serve-requests", "serve-slo-ms", "serve-seed", "threads"],
+    ) {
+        eprintln!("{e}");
+        return 2;
+    }
+    // sweepmerge accepts the same serve knobs its shard sweeps took so
+    // a CI matrix can pass one flag set to both commands; the merged
+    // serving columns come from the shard CSVs, so the values are only
+    // validated here, never applied.
+    if let Err(e) = parse_serve_config(args) {
         eprintln!("{e}");
         return 2;
     }
@@ -853,6 +901,12 @@ const SERVE_HEADERS: [&str; 16] = [
 ];
 
 fn cmd_serve(args: &Args) -> i32 {
+    // `--sweep` switches to the serving-configuration search; it is
+    // deliberately valueless, so it must branch before reject_unknown
+    // (which demands a value for every known option).
+    if args.flag("sweep") || args.opt("sweep").is_some() {
+        return cmd_serve_sweep(args);
+    }
     if let Err(e) = reject_unknown(
         args,
         "serve",
@@ -1062,6 +1116,184 @@ fn cmd_serve(args: &Args) -> i32 {
         pairs.len(),
         t0.elapsed().as_secs_f64(),
         slo_ps as f64 / 1e9
+    );
+    if let Some(path) = args.opt("csv") {
+        if let Err(e) = std::fs::write(path, t.to_csv()) {
+            eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// The columns of the `serve --sweep` best-config table/CSV, in
+/// output order: the canonical-trace point beside the search winner.
+const SERVE_SWEEP_HEADERS: [&str; 10] = [
+    "design", "network", "requests", "slo_ms", "serve_rps", "serve_fj_per_req", "serve_p99_ns",
+    "best_serve_schedule", "best_serve_batch", "best_serve_rps",
+];
+
+/// `serve --sweep`: the serving-configuration search. For each
+/// (design, network) pair, search schedule × batch cap for the best
+/// SLO-constrained throughput through the memoized serve store —
+/// identical ladder rungs across configs and pairs replay once, and
+/// the admissible per-config upper bound retires dominated configs
+/// without replaying their ladders. The row fan preserves input
+/// order and every row is a pure function of its pair, so the table
+/// is byte-identical for every `--threads` count (the CI determinism
+/// job `cmp`s exactly that).
+fn cmd_serve_sweep(args: &Args) -> i32 {
+    if args.opt("sweep").is_some() {
+        eprintln!("--sweep takes no value (it selects the serving-config search mode)");
+        return 2;
+    }
+    // reject_unknown demands a value for every known option and
+    // --sweep is valueless by design — strip it before the guard.
+    let mut rest = args.clone();
+    rest.flags.retain(|f| f != "sweep");
+    if let Err(e) = reject_unknown(
+        &rest,
+        "serve --sweep",
+        &["design", "network", "requests", "seed", "slo-ms", "csv", "threads"],
+    ) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let all = table2_systems();
+    let systems: Vec<imcsim::arch::ImcSystem> = match args.opt("design") {
+        Some(raw) => {
+            let names = match parse_list::<String>(raw, "design") {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let mut picked = Vec::new();
+            for name in names {
+                match all.iter().find(|s| s.name == name) {
+                    Some(s) => picked.push(s.clone()),
+                    None => {
+                        eprintln!("unknown design '{name}'");
+                        return 2;
+                    }
+                }
+            }
+            picked
+        }
+        None => all,
+    };
+    let networks: Vec<imcsim::workload::Network> = {
+        let mut nets = Vec::new();
+        for token in args.opt_or("network", "ae,resnet8,dscnn,mobilenet").split(',') {
+            match token.trim() {
+                "ae" | "autoencoder" => nets.push(imcsim::workload::deep_autoencoder()),
+                "resnet8" => nets.push(imcsim::workload::resnet8()),
+                "dscnn" | "ds-cnn" => nets.push(imcsim::workload::ds_cnn()),
+                "mobilenet" => nets.push(imcsim::workload::mobilenet_v1()),
+                other => {
+                    eprintln!("--network must be ae|resnet8|dscnn|mobilenet (got '{other}')");
+                    return 2;
+                }
+            }
+        }
+        nets
+    };
+    let requests: usize = match args.opt_or("requests", "512").parse() {
+        Ok(n) if n > 0 => n,
+        _ => {
+            eprintln!("--requests must be a positive integer");
+            return 2;
+        }
+    };
+    let seed: u64 = match args.opt_or("seed", "42").parse() {
+        Ok(s) => s,
+        Err(_) => {
+            eprintln!("--seed must be an unsigned integer");
+            return 2;
+        }
+    };
+    let slo_ps: u64 = match args.opt_or("slo-ms", "2").parse::<f64>() {
+        Ok(ms) if ms > 0.0 => (ms * 1e9).round() as u64,
+        _ => {
+            eprintln!("--slo-ms must be a positive number");
+            return 2;
+        }
+    };
+    let serve_cfg = ServeConfig { seed, requests, slo_ps };
+
+    // phase 1: one cost-model search per (design, network) pair — the
+    // same fan `serve` uses
+    let t0 = Instant::now();
+    let cache = CostCache::new();
+    let pairs: Vec<(usize, usize)> = systems
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| (0..networks.len()).map(move |ni| (si, ni)))
+        .collect();
+    let costs: Vec<NetworkServeCost> = parallel_map_with(&pairs, threads, |&(si, ni)| {
+        let r = search_network_with(
+            &networks[ni],
+            &systems[si],
+            &DseOptions::default(),
+            &cache,
+            1,
+        );
+        NetworkServeCost::from_result(&r, &systems[si])
+    });
+
+    // phase 2: per pair, the canonical-trace point and the pruned
+    // config search, both through the memoized serve store
+    let idx: Vec<usize> = (0..pairs.len()).collect();
+    let rows = parallel_map_with(&idx, threads, |&pi| {
+        let cost = &costs[pi];
+        let point = cache.serve_point(cost, &serve_cfg);
+        let best = cache.best_serve_config(cost, &serve_cfg);
+        vec![
+            cost.system.clone(),
+            cost.network.clone(),
+            requests.to_string(),
+            (slo_ps as f64 / 1e9).to_string(),
+            point.rps.to_string(),
+            point.fj_per_req.to_string(),
+            point.p99_ns.to_string(),
+            best.schedule.to_string(),
+            best.max_batch.to_string(),
+            best.rps.to_string(),
+        ]
+    });
+
+    let mut t = Table::new(&SERVE_SWEEP_HEADERS);
+    for row in rows {
+        t.row(row);
+    }
+    println!("{}", t.render());
+    let s = cache.stats();
+    println!(
+        "{} (design, network) pairs in {:.2}s — seed {seed}, {requests} requests, \
+         SLO p99 <= {} ms",
+        pairs.len(),
+        t0.elapsed().as_secs_f64(),
+        slo_ps as f64 / 1e9
+    );
+    println!(
+        "serve cache: {} serve entries, {} hits / {} replays ({} duplicated), \
+         {} of {} requests replayed ({:.1}x replay reduction)",
+        s.serve_entries,
+        s.serve_hits,
+        s.serve_replays,
+        s.duplicate_serves,
+        s.serve_replayed_reqs,
+        s.serve_naive_reqs,
+        s.serve_replay_reduction()
     );
     if let Some(path) = args.opt("csv") {
         if let Err(e) = std::fs::write(path, t.to_csv()) {

@@ -7,6 +7,7 @@ use std::collections::HashSet;
 
 use crate::arch::ImcFamily;
 use crate::dse::Objective;
+use crate::serve::Schedule;
 use crate::sim::NoiseSpec;
 use crate::sweep::{GridPoint, PrecisionPoint, SweepSummary};
 
@@ -148,6 +149,7 @@ pub fn sweep_text(s: &SweepSummary) -> String {
         ));
         let mut t = Table::new(&[
             "design", "network", "prec", "objective", "slo req/s", "fJ/req", "p99 [us]",
+            "best cfg", "best req/s",
         ]);
         let mut rows: Vec<&GridPoint> = frontier.iter().map(|&i| &s.points[i]).collect();
         rows.sort_by(|a, b| a.serve_fj_per_req.partial_cmp(&b.serve_fj_per_req).unwrap());
@@ -164,6 +166,12 @@ pub fn sweep_text(s: &SweepSummary) -> String {
                 },
                 format!("{:.0}", p.serve_fj_per_req),
                 format!("{:.2}", p.serve_p99_ns * 1e-3),
+                format!("{}@b{}", p.best_serve_schedule, p.best_serve_batch),
+                if p.best_serve_rps > 0.0 {
+                    format!("{:.0}", p.best_serve_rps)
+                } else {
+                    "miss".to_string()
+                },
             ]);
         }
         out.push_str(&t.render());
@@ -205,6 +213,17 @@ pub fn sweep_text(s: &SweepSummary) -> String {
         s.cache.pruned,
         s.cache.prune_rate() * 100.0
     ));
+    out.push_str(&format!(
+        "serve cache: {} serve entries, {} hits / {} replays ({} duplicated), {} of {} \
+         requests replayed ({:.1}x replay reduction)\n",
+        s.cache.serve_entries,
+        s.cache.serve_hits,
+        s.cache.serve_replays,
+        s.cache.duplicate_serves,
+        s.cache.serve_replayed_reqs,
+        s.cache.serve_naive_reqs,
+        s.cache.serve_replay_reduction()
+    ));
     out
 }
 
@@ -219,12 +238,16 @@ pub fn sweep_text(s: &SweepSummary) -> String {
 /// `sqnr_mean_db`/`sqnr_std_db` the seeded-trial statistics;
 /// `serve_rps`/`serve_fj_per_req`/`serve_p99_ns` are the serving
 /// simulator's columns under the canonical `serve::SWEEP_SERVE_*`
-/// configuration.
-const CSV_HEADERS: [&str; 27] = [
+/// configuration (or the run's `--serve-*` overrides) and
+/// `best_serve_rps`/`best_serve_schedule`/`best_serve_batch` the
+/// serving-config search's winner over schedule × batch cap
+/// (`serve::search::best_config`).
+const CSV_HEADERS: [&str; 30] = [
     "task", "design", "family", "network", "precision", "weight_bits", "act_bits", "sparsity",
     "noise", "objective", "macros", "cells", "energy_fj", "macro_fj", "time_ns", "edp_fj_ns",
     "tops_w", "util", "sqnr_db", "sqnr_mean_db", "sqnr_std_db", "max_abs_err", "clip_rate",
-    "serve_rps", "serve_fj_per_req", "serve_p99_ns", "pareto",
+    "serve_rps", "serve_fj_per_req", "serve_p99_ns", "best_serve_rps", "best_serve_schedule",
+    "best_serve_batch", "pareto",
 ];
 
 /// Every evaluated grid point as CSV (canonical task order). Floats are
@@ -265,6 +288,9 @@ pub fn sweep_csv(s: &SweepSummary) -> String {
             p.serve_rps.to_string(),
             p.serve_fj_per_req.to_string(),
             p.serve_p99_ns.to_string(),
+            p.best_serve_rps.to_string(),
+            p.best_serve_schedule.to_string(),
+            p.best_serve_batch.to_string(),
             if on_front.contains(&i) { "1".into() } else { "0".into() },
         ]);
     }
@@ -366,6 +392,11 @@ pub fn parse_sweep_csv(text: &str) -> Result<Vec<GridPoint>, String> {
             serve_rps: fields[23].parse().map_err(|_| err("serve_rps"))?,
             serve_fj_per_req: fields[24].parse().map_err(|_| err("serve_fj_per_req"))?,
             serve_p99_ns: fields[25].parse().map_err(|_| err("serve_p99_ns"))?,
+            best_serve_rps: fields[26].parse().map_err(|_| err("best_serve_rps"))?,
+            best_serve_schedule: fields[27]
+                .parse::<Schedule>()
+                .map_err(|_| err("best_serve_schedule"))?,
+            best_serve_batch: fields[28].parse().map_err(|_| err("best_serve_batch"))?,
         });
     }
     Ok(points)
@@ -416,10 +447,15 @@ mod tests {
         // the noise axis labels its frontiers and the surface is shown
         assert!(text.contains("@ noise typical"), "{text}");
         assert!(text.contains("energy-latency-accuracy surface"), "{text}");
-        // the serving Pareto cut is rendered with its columns
+        // the serving Pareto cut is rendered with its columns,
+        // best-config included
         assert!(text.contains("serving throughput-vs-energy"), "{text}");
         assert!(text.contains("slo req/s"), "{text}");
         assert!(text.contains("fJ/req"), "{text}");
+        assert!(text.contains("best cfg"), "{text}");
+        // and the serve-cache statistics line
+        assert!(text.contains("serve cache:"), "{text}");
+        assert!(text.contains("replay reduction"), "{text}");
     }
 
     #[test]
@@ -500,6 +536,10 @@ mod tests {
             assert_eq!(a.serve_rps.to_bits(), b.serve_rps.to_bits());
             assert_eq!(a.serve_fj_per_req.to_bits(), b.serve_fj_per_req.to_bits());
             assert_eq!(a.serve_p99_ns.to_bits(), b.serve_p99_ns.to_bits());
+            // and the best-config columns
+            assert_eq!(a.best_serve_rps.to_bits(), b.best_serve_rps.to_bits());
+            assert_eq!(a.best_serve_schedule, b.best_serve_schedule);
+            assert_eq!(a.best_serve_batch, b.best_serve_batch);
         }
         // the grid carries both noise corners, so the roundtrip
         // exercises both noise-id encodings

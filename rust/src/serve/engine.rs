@@ -13,15 +13,31 @@
 //! level up (the CLI fans independent (design × network × knob) cells
 //! through `parallel_map_with`, which preserves output order), so the
 //! produced CSV is byte-identical across `--threads` counts.
+//!
+//! Replay cost structure (`docs/COST_MODEL.md` §12): the per-batch-size
+//! stage times and energy shares are precomputed once into a
+//! [`StageTable`], so the replay inner loop is integer adds, compares
+//! and table lookups — one table is shared by every rung of an SLO
+//! ladder instead of being rebuilt per replay. The SLO ladder itself is
+//! pruned by an *admissible* bound pair ([`slo_throughput_with`]): the
+//! zero-queueing batch-1 service time lower-bounds every request's
+//! latency (so an SLO below it is decided without a single replay),
+//! and `n·10¹² / (a_last + min_service)` upper-bounds a rung's
+//! achievable throughput (so rungs that cannot beat the incumbent are
+//! skipped). Both bounds only ever skip work whose outcome is already
+//! decided, which is why the pruned ladder is bit-identical to the
+//! unpruned reference [`slo_throughput_unpruned`] — the
+//! `search_layer_all_unpruned` precedent applied to serving.
 
 use super::metrics::LatencyRecord;
-use super::trace::poisson_arrivals;
+use super::trace::{exp_sample, poisson_arrivals};
 use super::{
     NetworkServeCost, Schedule, SWEEP_SERVE_MAX_BATCH, SWEEP_SERVE_REQUESTS, SWEEP_SERVE_SCHEDULE,
     SWEEP_SERVE_SEED, SWEEP_SERVE_SLO_PS, SWEEP_SERVE_UTIL,
 };
 use crate::arch::ImcSystem;
 use crate::dse::NetworkResult;
+use crate::util::prng::Rng;
 
 /// Result of one trace replay.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +53,51 @@ pub struct ServeReport {
     /// Sustained throughput (requests per second): requests served over
     /// the last completion time. 0 for an empty trace.
     pub achieved_rps: f64,
+}
+
+/// Precomputed replay tables of one `(cost, max_batch)` pair: per-batch
+/// stage times on the event timeline and per-batch energy shares, so
+/// the replay inner loop is pure table lookups. The stored values are
+/// exactly [`NetworkServeCost::stage_times_ps`] /
+/// [`NetworkServeCost::fj_per_request`] /
+/// [`NetworkServeCost::reload_fj_per_request`] evaluated at each batch
+/// size `1..=max_batch` — pure functions — so a table-driven replay is
+/// bit-identical to one that re-derives them per dispatch. One table is
+/// shared by every replay of an SLO ladder (and, one level up, by the
+/// sweep cache's memoized replays).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageTable {
+    /// `stages[b-1][l]`: batch-`b` service time of layer stage `l` (ps).
+    stages: Vec<Vec<u64>>,
+    /// `fj[b-1]`: energy charged per request in a batch of `b` (fJ).
+    fj: Vec<f64>,
+    /// `reload_fj[b-1]`: weight-reload share of `fj[b-1]` (fJ).
+    reload_fj: Vec<f64>,
+    /// Number of layer stages.
+    n_stages: usize,
+    /// Batch-size cap the tables cover.
+    max_batch: usize,
+}
+
+impl StageTable {
+    /// Precompute the replay tables for batches `1..=max_batch`.
+    pub fn new(cost: &NetworkServeCost, max_batch: usize) -> Self {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        StageTable {
+            stages: (1..=max_batch).map(|b| cost.stage_times_ps(b)).collect(),
+            fj: (1..=max_batch).map(|b| cost.fj_per_request(b)).collect(),
+            reload_fj: (1..=max_batch)
+                .map(|b| cost.reload_fj_per_request(b))
+                .collect(),
+            n_stages: cost.n_layers(),
+            max_batch,
+        }
+    }
+
+    /// Batch-size cap the tables cover.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
 }
 
 /// Replay an arrival trace (ps, nondecreasing) against a serving cost
@@ -59,11 +120,21 @@ pub fn simulate(
     max_batch: usize,
     arrivals_ps: &[u64],
 ) -> ServeReport {
-    assert!(max_batch >= 1, "max_batch must be at least 1");
+    simulate_with_table(&StageTable::new(cost, max_batch), schedule, arrivals_ps)
+}
+
+/// [`simulate`] against a precomputed [`StageTable`] (the table fixes
+/// `max_batch`). Use this form when many traces replay the same cost —
+/// an SLO ladder, a config search, the sweep's memoized replays — so
+/// the per-batch tables are built once, not per replay.
+pub fn simulate_with_table(
+    table: &StageTable,
+    schedule: Schedule,
+    arrivals_ps: &[u64],
+) -> ServeReport {
+    let max_batch = table.max_batch;
     let n = arrivals_ps.len();
-    // per-batch-size stage times, computed once
-    let stage_cache: Vec<Vec<u64>> = (1..=max_batch).map(|b| cost.stage_times_ps(b)).collect();
-    let n_stages = cost.n_layers();
+    let n_stages = table.n_stages;
     let mut stage_free = vec![0u64; n_stages.max(1)];
     let mut free = 0u64; // serialized: the single server's free time
     let mut latencies = Vec::with_capacity(n);
@@ -84,7 +155,7 @@ pub fn simulate(
         while i + b < n && b < max_batch && arrivals_ps[i + b] <= start {
             b += 1;
         }
-        let stages = &stage_cache[b - 1];
+        let stages = &table.stages[b - 1];
         let done = match schedule {
             Schedule::Serialized => {
                 let service: u64 = stages.iter().sum();
@@ -105,8 +176,8 @@ pub fn simulate(
         for &arr in &arrivals_ps[i..i + b] {
             latencies.push(done - arr);
         }
-        energy_fj += b as f64 * cost.fj_per_request(b);
-        reload_fj += b as f64 * cost.reload_fj_per_request(b);
+        energy_fj += b as f64 * table.fj[b - 1];
+        reload_fj += b as f64 * table.reload_fj[b - 1];
         last_done = last_done.max(done);
         batches += 1;
         i += b;
@@ -125,19 +196,81 @@ pub fn simulate(
     }
 }
 
+/// The condensed outcome of one seeded Poisson replay — the value the
+/// sweep cache memoizes under a `ServeKey`, and everything the SLO
+/// ladder and the canonical sweep columns need from a replay: sustained
+/// throughput, exact p99 latency, and energy per request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeOutcome {
+    /// Sustained throughput (req/s) of the replay.
+    pub achieved_rps: f64,
+    /// Exact nearest-rank p99 latency (ps).
+    pub p99_ps: u64,
+    /// Energy per request (fJ), reload share included.
+    pub fj_per_req: f64,
+}
+
+/// Replay the seeded Poisson trace `(seed, mean_gap_ps, n_requests)`
+/// against a precomputed [`StageTable`] and condense the report into a
+/// [`ServeOutcome`]. Pure function of its arguments (`n_requests ≥ 1`)
+/// — the contract the sweep cache's serve memoization rests on.
+pub fn replay_outcome(
+    table: &StageTable,
+    schedule: Schedule,
+    seed: u64,
+    n_requests: usize,
+    mean_gap_ps: u64,
+) -> ServeOutcome {
+    let arrivals = poisson_arrivals(seed, mean_gap_ps, n_requests);
+    let rep = simulate_with_table(table, schedule, &arrivals);
+    ServeOutcome {
+        achieved_rps: rep.achieved_rps,
+        p99_ps: rep.latency.percentile_ps(99.0),
+        fj_per_req: rep.latency.fj_per_request(),
+    }
+}
+
 /// Offered-load rungs of the SLO ladder, as fractions of the
 /// schedule's bottleneck capacity.
 pub const SLO_UTILS: [f64; 6] = [0.3, 0.5, 0.7, 0.8, 0.9, 0.95];
+
+/// The `n` standard-exponential draws a seed expands to — the shared
+/// randomness of every rung of an SLO ladder. [`poisson_arrivals`]
+/// scales *these same draws* by the rung's mean gap
+/// (`round(eⱼ · mean_gap)`, saturating-summed), so one draw vector
+/// prices the arrival bound of every rung without regenerating traces.
+pub fn exp_draws(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| exp_sample(&mut rng)).collect()
+}
+
+/// The last arrival time (ps) of the seeded trace with the given mean
+/// gap, computed from the shared draw vector with *exactly* the trace
+/// generator's arithmetic (`round(eⱼ · mean_gap)` per gap,
+/// saturating-add fold) — bit-equal to
+/// `poisson_arrivals(seed, mean_gap_ps, n).last()`.
+pub fn last_arrival_ps(draws: &[f64], mean_gap_ps: u64) -> u64 {
+    let mut t = 0u64;
+    for &e in draws {
+        t = t.saturating_add((e * mean_gap_ps as f64).round() as u64);
+    }
+    t
+}
 
 /// SLO-constrained throughput (requests per second): replay seeded
 /// Poisson traces at each utilization rung of [`SLO_UTILS`] and report
 /// the best sustained throughput among the rungs whose p99 latency
 /// meets `slo_ps`; 0.0 when every rung misses. Loosening the SLO can
 /// only widen the passing set, so the result is monotone
-/// non-decreasing in `slo_ps` by construction. The ladder is a fixed,
-/// deterministic probe set — no bisection on floats — so the answer is
-/// a pure function of `(cost, schedule, max_batch, seed, n_requests,
-/// slo_ps)`.
+/// non-decreasing in `slo_ps` (test-locked, not just claimed). The
+/// ladder is a fixed, deterministic probe set — no bisection on floats
+/// — so the answer is a pure function of `(cost, schedule, max_batch,
+/// seed, n_requests, slo_ps)`.
+///
+/// This is the *pruned* ladder: rungs whose admissible bounds already
+/// decide them are skipped (see [`slo_throughput_with`]), and the
+/// result is bit-identical to [`slo_throughput_unpruned`] —
+/// test-locked across every survey design × schedule.
 pub fn slo_throughput(
     cost: &NetworkServeCost,
     schedule: Schedule,
@@ -146,7 +279,86 @@ pub fn slo_throughput(
     n_requests: usize,
     slo_ps: u64,
 ) -> f64 {
+    let table = StageTable::new(cost, max_batch);
     // capacity: one batch's bottleneck occupancy amortized per request
+    let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
+    slo_throughput_with(
+        cost.min_service_ps(),
+        interval,
+        seed,
+        n_requests,
+        slo_ps,
+        |mean_gap| replay_outcome(&table, schedule, seed, n_requests, mean_gap),
+    )
+}
+
+/// The pruned SLO ladder over an arbitrary replay oracle: `replay`
+/// maps a rung's mean arrival gap (ps) to the [`ServeOutcome`] of the
+/// seeded trace at that gap. The sweep cache passes a memoizing oracle
+/// here; [`slo_throughput`] passes a direct table replay — both
+/// produce bit-identical ladders because the pruning below only skips
+/// rungs whose contribution is already decided:
+///
+/// * **Global bound** — every request's latency is at least
+///   `min_service_ps`, the zero-queueing batch-1 service time: a
+///   request completes no earlier than its batch's full pass through
+///   the stages, `Σ_l t_l(b) ≥ Σ_l t_l(1)` since each
+///   `t_l(b) = ((b·mvm + load).max(b·mem))·t_cycle` is nondecreasing
+///   in `b`. If `min_service_ps > slo_ps`, every rung's p99 misses and
+///   the ladder returns 0.0 with **zero replays**.
+/// * **Per-rung bound** — a rung's sustained throughput is at most
+///   `n·10¹² / (a_last + min_service_ps)`: the last request arrives at
+///   `a_last` and cannot complete before `a_last + min_service_ps`.
+///   `a_last` is priced exactly from the shared draw vector
+///   ([`last_arrival_ps`]) without replaying. Rungs are visited in
+///   descending-utilization order (highest capacity first), and a rung
+///   whose bound cannot exceed the incumbent `best` is skipped — its
+///   `max` contribution would be a no-op. The surviving result is a
+///   plain `f64::max` fold over the passing rungs, which is
+///   order-invariant for the finite nonnegative values involved, so
+///   descending-with-skips equals the ascending unpruned fold bitwise.
+pub fn slo_throughput_with<F: FnMut(u64) -> ServeOutcome>(
+    min_service_ps: u64,
+    interval: f64,
+    seed: u64,
+    n_requests: usize,
+    slo_ps: u64,
+    mut replay: F,
+) -> f64 {
+    if min_service_ps > slo_ps {
+        return 0.0;
+    }
+    let draws = exp_draws(seed, n_requests);
+    let mut best = 0.0f64;
+    for &util in SLO_UTILS.iter().rev() {
+        let mean_gap = ((interval / util).round() as u64).max(1);
+        if best > 0.0 {
+            let floor_ps = last_arrival_ps(&draws, mean_gap).saturating_add(min_service_ps);
+            let rps_ub = n_requests as f64 * 1e12 / floor_ps as f64;
+            if rps_ub <= best {
+                continue;
+            }
+        }
+        let out = replay(mean_gap);
+        if out.p99_ps <= slo_ps {
+            best = out.achieved_rps.max(best);
+        }
+    }
+    best
+}
+
+/// The unpruned reference ladder: every rung replayed, ascending — the
+/// bit-identity oracle the pruned [`slo_throughput`] is test-locked
+/// against (the `search_layer_all_unpruned` precedent). Kept verbatim
+/// from the pre-pruning implementation; not used on any hot path.
+pub fn slo_throughput_unpruned(
+    cost: &NetworkServeCost,
+    schedule: Schedule,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+    slo_ps: u64,
+) -> f64 {
     let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
     let mut best = 0.0;
     for &util in SLO_UTILS.iter() {
@@ -172,6 +384,55 @@ pub struct ServeSweepPoint {
     pub p99_ns: f64,
 }
 
+/// The canonical measurement rung's mean arrival gap (ps): the seeded
+/// trace at [`SWEEP_SERVE_UTIL`]× the layer-pipelined batch-≤8
+/// bottleneck capacity. Shared between the measurement replay and the
+/// SLO ladder's 0.8 rung — the two land on the same gap by
+/// construction, so a memoizing cache serves both from one entry.
+pub fn sweep_measurement_gap_ps(cost: &NetworkServeCost) -> u64 {
+    let interval = cost.bottleneck_ps(SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH) as f64
+        / SWEEP_SERVE_MAX_BATCH as f64;
+    ((interval / SWEEP_SERVE_UTIL).round() as u64).max(1)
+}
+
+/// Evaluate the canonical serving operating point of a serving cost
+/// under an explicit `(seed, n_requests, slo_ps)` trace configuration:
+/// a layer-pipelined, batch-≤8 replay of the seeded Poisson trace at
+/// 0.8× capacity for p99/energy, plus the SLO ladder for throughput.
+/// Pure function of its arguments — safe to fan across sweep threads,
+/// and the uncached reference the sweep cache's memoized serve path is
+/// test-locked against.
+pub fn sweep_serve_point(
+    cost: &NetworkServeCost,
+    seed: u64,
+    n_requests: usize,
+    slo_ps: u64,
+) -> ServeSweepPoint {
+    let table = StageTable::new(cost, SWEEP_SERVE_MAX_BATCH);
+    let meas = replay_outcome(
+        &table,
+        SWEEP_SERVE_SCHEDULE,
+        seed,
+        n_requests,
+        sweep_measurement_gap_ps(cost),
+    );
+    let interval = cost.bottleneck_ps(SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH) as f64
+        / SWEEP_SERVE_MAX_BATCH as f64;
+    let rps = slo_throughput_with(
+        cost.min_service_ps(),
+        interval,
+        seed,
+        n_requests,
+        slo_ps,
+        |mean_gap| replay_outcome(&table, SWEEP_SERVE_SCHEDULE, seed, n_requests, mean_gap),
+    );
+    ServeSweepPoint {
+        rps,
+        fj_per_req: meas.fj_per_req,
+        p99_ns: meas.p99_ps as f64 / 1e3,
+    }
+}
+
 /// Evaluate the canonical serving operating point of one searched
 /// (design, network) grid point: a layer-pipelined, batch-≤8 replay of
 /// the seed-42 Poisson trace at 0.8× capacity for p99/energy, plus the
@@ -179,25 +440,12 @@ pub struct ServeSweepPoint {
 /// Pure function of its arguments — safe to fan across sweep threads.
 pub fn sweep_serve_metrics(r: &NetworkResult, sys: &ImcSystem) -> ServeSweepPoint {
     let cost = NetworkServeCost::from_result(r, sys);
-    let interval =
-        cost.bottleneck_ps(SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH) as f64
-            / SWEEP_SERVE_MAX_BATCH as f64;
-    let mean_gap = ((interval / SWEEP_SERVE_UTIL).round() as u64).max(1);
-    let arrivals = poisson_arrivals(SWEEP_SERVE_SEED, mean_gap, SWEEP_SERVE_REQUESTS);
-    let rep = simulate(&cost, SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH, &arrivals);
-    let rps = slo_throughput(
+    sweep_serve_point(
         &cost,
-        SWEEP_SERVE_SCHEDULE,
-        SWEEP_SERVE_MAX_BATCH,
         SWEEP_SERVE_SEED,
         SWEEP_SERVE_REQUESTS,
         SWEEP_SERVE_SLO_PS,
-    );
-    ServeSweepPoint {
-        rps,
-        fj_per_req: rep.latency.fj_per_request(),
-        p99_ns: rep.latency.percentile_ps(99.0) as f64 / 1e3,
-    }
+    )
 }
 
 #[cfg(test)]
@@ -280,6 +528,36 @@ mod tests {
     }
 
     #[test]
+    fn shared_stage_table_replays_are_identical_to_per_call_tables() {
+        // one table reused across traces and schedules == fresh builds
+        for resident in [true, false] {
+            let cost = synthetic_cost(resident);
+            let table = StageTable::new(&cost, 8);
+            for seed in [3u64, 11] {
+                let arrivals = poisson_arrivals(seed, 150_000, 1_000);
+                for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+                    let shared = simulate_with_table(&table, schedule, &arrivals);
+                    let fresh = simulate(&cost, schedule, 8, &arrivals);
+                    assert_eq!(shared, fresh);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn last_arrival_bound_is_exact_for_every_rung_gap() {
+        let draws = exp_draws(42, 512);
+        for mean_gap in [1u64, 37_500, 150_000, 1_000_000] {
+            let trace = poisson_arrivals(42, mean_gap, 512);
+            assert_eq!(
+                last_arrival_ps(&draws, mean_gap),
+                *trace.last().unwrap(),
+                "gap {mean_gap}"
+            );
+        }
+    }
+
+    #[test]
     fn pipelined_throughput_at_least_matches_serialized_under_backlog() {
         let cost = synthetic_cost(true);
         let arrivals = vec![1u64; 64];
@@ -340,5 +618,95 @@ mod tests {
         let a = slo_throughput(&cost, Schedule::Serialized, 4, 7, 400, 2_000_000_000);
         let b = slo_throughput(&cost, Schedule::Serialized, 4, 7, 400, 2_000_000_000);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn pruned_ladder_is_bit_identical_to_the_unpruned_reference() {
+        // every (residency × schedule × batch cap × SLO) combination,
+        // from impossible through tight to generous SLOs
+        for resident in [true, false] {
+            let cost = synthetic_cost(resident);
+            for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+                for max_batch in [1usize, 4, 8] {
+                    for slo_ps in [1u64, 250_000, 300_000, 500_000, 2_000_000_000] {
+                        let pruned = slo_throughput(&cost, schedule, max_batch, 42, 256, slo_ps);
+                        let unpruned =
+                            slo_throughput_unpruned(&cost, schedule, max_batch, 42, 256, slo_ps);
+                        assert_eq!(
+                            pruned.to_bits(),
+                            unpruned.to_bits(),
+                            "{schedule} b<={max_batch} slo {slo_ps}: {pruned} != {unpruned}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_slo_is_decided_without_a_single_replay() {
+        let cost = synthetic_cost(true);
+        // min service = 230 ns; an SLO below it needs no replays
+        assert_eq!(cost.min_service_ps(), 230_000);
+        let mut replays = 0usize;
+        let rps = slo_throughput_with(cost.min_service_ps(), 1_000.0, 42, 128, 229_999, |gap| {
+            replays += 1;
+            let table = StageTable::new(&cost, 8);
+            replay_outcome(&table, Schedule::LayerPipelined, 42, 128, gap)
+        });
+        assert_eq!(rps, 0.0);
+        assert_eq!(replays, 0);
+    }
+
+    #[test]
+    fn rung_bound_prunes_dominated_rungs() {
+        // generous SLO: the top rung passes, so its incumbent prunes
+        // every lower rung — the ladder replays strictly fewer than the
+        // 6 rungs the unpruned reference walks, with an identical result
+        let cost = synthetic_cost(true);
+        let table = StageTable::new(&cost, 8);
+        let interval = cost.bottleneck_ps(Schedule::LayerPipelined, 8) as f64 / 8.0;
+        let mut replays = 0usize;
+        let pruned = slo_throughput_with(
+            cost.min_service_ps(),
+            interval,
+            42,
+            512,
+            2_000_000_000,
+            |gap| {
+                replays += 1;
+                replay_outcome(&table, Schedule::LayerPipelined, 42, 512, gap)
+            },
+        );
+        let unpruned =
+            slo_throughput_unpruned(&cost, Schedule::LayerPipelined, 8, 42, 512, 2_000_000_000);
+        assert_eq!(pruned.to_bits(), unpruned.to_bits());
+        assert!(replays < SLO_UTILS.len(), "no rung was pruned");
+    }
+
+    #[test]
+    fn sweep_serve_point_matches_its_own_pieces() {
+        // the canonical point is the measurement replay + the ladder
+        let cost = synthetic_cost(false);
+        let p = sweep_serve_point(&cost, 42, 256, 2_000_000_000);
+        let table = StageTable::new(&cost, SWEEP_SERVE_MAX_BATCH);
+        let meas = replay_outcome(
+            &table,
+            SWEEP_SERVE_SCHEDULE,
+            42,
+            256,
+            sweep_measurement_gap_ps(&cost),
+        );
+        assert_eq!(p.fj_per_req.to_bits(), meas.fj_per_req.to_bits());
+        assert_eq!(p.p99_ns.to_bits(), (meas.p99_ps as f64 / 1e3).to_bits());
+        let rps = slo_throughput(
+            &cost,
+            SWEEP_SERVE_SCHEDULE,
+            SWEEP_SERVE_MAX_BATCH,
+            42,
+            256,
+            2_000_000_000,
+        );
+        assert_eq!(p.rps.to_bits(), rps.to_bits());
     }
 }

@@ -16,30 +16,46 @@
 //!   applied to serving.
 //! * [`engine`] — the discrete-event simulator: integer event time,
 //!   canonical event ordering (completions before arrivals at equal
-//!   time), greedy FIFO batching, both schedules, and the
-//!   SLO-constrained-throughput ladder.
+//!   time), greedy FIFO batching, both schedules, precomputed
+//!   [`StageTable`]s so the replay inner loop is table lookups, and
+//!   the SLO-constrained-throughput ladder with admissible-bound rung
+//!   pruning (bit-identical to the unpruned reference
+//!   [`engine::slo_throughput_unpruned`], test-locked).
+//! * [`search`] — the per-design serving-config search
+//!   ([`best_config`]): schedule × max-batch scanned in canonical
+//!   order with incumbent pruning on the same admissible bounds,
+//!   bit-identical to the exhaustive
+//!   [`search::best_config_unpruned`] reference.
 //! * [`metrics`] — exact nearest-rank latency quantiles over the full
 //!   sorted sample multiset plus energy accounting, with an
 //!   associative order-invariant merge (supersedes the retired
 //!   `coordinator::stats::LatencyStats`).
 //!
 //! The cost semantics, arrival models, schedule contract and the
-//! determinism argument are written down in `docs/COST_MODEL.md` §11.
+//! determinism argument are written down in `docs/COST_MODEL.md` §11;
+//! the replay memoization, the rung/config pruning bounds and their
+//! admissibility proofs are §12.
 
 pub mod engine;
 pub mod metrics;
+pub mod search;
 pub mod trace;
 
-pub use engine::{simulate, slo_throughput, sweep_serve_metrics, ServeReport, ServeSweepPoint};
+pub use engine::{
+    replay_outcome, simulate, simulate_with_table, slo_throughput, slo_throughput_with,
+    sweep_serve_metrics, sweep_serve_point, ServeOutcome, ServeReport, ServeSweepPoint, StageTable,
+};
 pub use metrics::LatencyRecord;
+pub use search::{best_config, BestConfig, SERVE_SEARCH_BATCHES};
 pub use trace::{bursty_arrivals, exp_sample, poisson_arrivals, TraceKind};
 
 use crate::arch::ImcSystem;
 use crate::dse::NetworkResult;
 
 /// Execution schedule of a multi-layer network on one accelerator —
-/// `selfspec-calculator`'s `soc.schedule` knob.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `selfspec-calculator`'s `soc.schedule` knob. (`Hash` because the
+/// schedule is part of the sweep cache's `ServeKey`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Schedule {
     /// All macros execute one layer at a time; a batch occupies the
     /// whole accelerator for the sum of the per-layer times.
@@ -250,6 +266,45 @@ impl NetworkServeCost {
             0.0
         } else {
             self.layers.iter().map(|c| c.weight_fj).sum::<f64>() / batch as f64
+        }
+    }
+
+    /// The zero-queueing batch-1 service time (ps): an *admissible*
+    /// lower bound on every request's latency under **both** schedules
+    /// and any batch cap. A request in a batch of `b` completes only
+    /// after its batch's full pass through the stages,
+    /// `Σ_l t_l(b) ≥ Σ_l t_l(1)`, because each stage time
+    /// `((b·mvm + load).max(b·mem))·t_cycle` is nondecreasing in `b`
+    /// (all cycle counts are nonnegative). The SLO ladder and the
+    /// config search prune on this bound; schedule- and
+    /// batch-independent by construction.
+    pub fn min_service_ps(&self) -> u64 {
+        self.stage_times_ps(1).iter().sum()
+    }
+}
+
+/// The sweep's serving-trace configuration — the three knobs
+/// `sweep --serve-requests/--serve-slo-ms/--serve-seed` expose. The
+/// `Default` is the canonical `SWEEP_SERVE_*` operating point, so
+/// sweeps that don't touch the knobs produce bit-identical CSVs to
+/// earlier releases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Trace seed ([`SWEEP_SERVE_SEED`] by default).
+    pub seed: u64,
+    /// Requests per replayed trace ([`SWEEP_SERVE_REQUESTS`]).
+    pub requests: usize,
+    /// p99 latency SLO (ps) of the throughput ladder
+    /// ([`SWEEP_SERVE_SLO_PS`]).
+    pub slo_ps: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            seed: SWEEP_SERVE_SEED,
+            requests: SWEEP_SERVE_REQUESTS,
+            slo_ps: SWEEP_SERVE_SLO_PS,
         }
     }
 }

@@ -32,6 +32,25 @@
 //! path also computes the nominal record first and then overwrites the
 //! trial slots with the same energies.
 //!
+//! A third map applies the same treatment to the serving simulator:
+//!
+//! * [`ServeKey`] → [`ServeOutcome`] — one seeded Poisson replay,
+//!   keyed by the **full serving-cost snapshot** (every per-layer cost
+//!   term as f64 bit patterns, the cycle time, the residency verdict)
+//!   plus the replay knobs (schedule, batch cap, seed, request count,
+//!   mean gap). Because the key *is* the replay's entire input — not a
+//!   hash of it — two entries alias exactly when the replays are
+//!   bit-identical, and nothing else (`docs/COST_MODEL.md` §12). The
+//!   snapshot deliberately excludes the system/network *names*:
+//!   objectives whose mappings coincide, σ corners (serving cost is
+//!   noise-invariant — [`crate::serve::NetworkServeCost::from_result`]
+//!   reads only the nominal search fields), and shape-identical grid
+//!   groups all collapse onto one replay. [`CacheStats`] tracks the
+//!   reuse (`serve_hits`), the realized replay volume
+//!   (`serve_replayed_reqs`) against the unmemoized-unpruned volume
+//!   for the same outputs (`serve_naive_reqs`), and a
+//!   `duplicate_serves` single-flight tripwire CI gates at zero.
+//!
 //! # Concurrency layout (see `docs/COST_MODEL.md` §10)
 //!
 //! Each map is sharded across [`CACHE_STRIPES`] independently locked
@@ -57,6 +76,15 @@ use crate::dse::{
 };
 use crate::mapping::{SpatialMapping, TemporalPolicy};
 use crate::model::TechParams;
+use crate::serve::engine::{
+    replay_outcome, slo_throughput_with, sweep_measurement_gap_ps, ServeOutcome, StageTable,
+    SLO_UTILS,
+};
+use crate::serve::search::{best_config_with, candidate_configs, BestConfig};
+use crate::serve::{
+    NetworkServeCost, Schedule, ServeConfig, ServeSweepPoint, SWEEP_SERVE_MAX_BATCH,
+    SWEEP_SERVE_SCHEDULE,
+};
 use crate::sim::{NoiseSpec, NOISE_TRIALS};
 use crate::workload::{Layer, LayerType};
 
@@ -211,6 +239,73 @@ pub struct TrialKey {
     pub(crate) noise_bits: [u64; 3],
 }
 
+/// Everything that determines the outcome of one seeded Poisson replay
+/// — the serving analogue of [`SearchKey`]. The key carries the *full*
+/// serving-cost snapshot (not a digest), so `Eq` on keys is exactly
+/// "the replays are bit-identical": the replay is a pure function of
+/// `(layers, t_cycle, resident, schedule, max_batch, seed, n_requests,
+/// mean_gap_ps)` and of nothing else. System/network names are
+/// deliberately excluded — identical snapshots reached from different
+/// objectives, σ corners (the snapshot reads only nominal search
+/// fields, so it is noise-invariant by construction) or grid groups
+/// *should* collapse onto one cached replay. Fields are `pub(crate)`
+/// for the on-disk cache (`super::persist`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ServeKey {
+    /// Per-layer cost terms as f64 bit patterns, in network order:
+    /// `[mvm_cycles, load_cycles, mem_cycles, weight_fj, base_fj]`.
+    pub(crate) layers: Vec<[u64; 5]>,
+    /// Bit pattern of the macro cycle time (ns).
+    pub(crate) t_cycle_bits: u64,
+    /// The D1 weight-residency verdict.
+    pub(crate) resident: bool,
+    /// Replay schedule.
+    pub(crate) schedule: Schedule,
+    /// Batch cap of the greedy FIFO batcher.
+    pub(crate) max_batch: usize,
+    /// Trace seed.
+    pub(crate) seed: u64,
+    /// Requests in the trace.
+    pub(crate) n_requests: usize,
+    /// Mean arrival gap (ps) of the Poisson trace.
+    pub(crate) mean_gap_ps: u64,
+}
+
+impl ServeKey {
+    /// Fingerprint one replay setting.
+    pub fn new(
+        cost: &NetworkServeCost,
+        schedule: Schedule,
+        max_batch: usize,
+        seed: u64,
+        n_requests: usize,
+        mean_gap_ps: u64,
+    ) -> Self {
+        ServeKey {
+            layers: cost
+                .layers
+                .iter()
+                .map(|l| {
+                    [
+                        l.mvm_cycles.to_bits(),
+                        l.load_cycles.to_bits(),
+                        l.mem_cycles.to_bits(),
+                        l.weight_fj.to_bits(),
+                        l.base_fj.to_bits(),
+                    ]
+                })
+                .collect(),
+            t_cycle_bits: cost.t_cycle_ns.to_bits(),
+            resident: cost.resident,
+            schedule,
+            max_batch,
+            seed,
+            n_requests,
+            mean_gap_ps,
+        }
+    }
+}
+
 /// Hit/miss and mapping-search counters of a [`CostCache`] (or of
 /// several merged shards).
 ///
@@ -263,6 +358,27 @@ pub struct CacheStats {
     /// Mapping candidates discarded by the admissible bound across all
     /// searches run (no full evaluation).
     pub pruned: u64,
+    /// Serve lookups answered from the cache (a blocked-then-reused
+    /// in-flight replay counts here, like search hits).
+    pub serve_hits: u64,
+    /// Seeded traces actually replayed. Single-flight makes this
+    /// exactly the number of unique [`ServeKey`]s computed.
+    pub serve_replays: u64,
+    /// Replays whose published outcome found the slot already filled —
+    /// the serving twin of `duplicate_searches`. Zero by construction;
+    /// CI gates on it (`BENCH_sweep.json: .gate.duplicate_serves`).
+    pub duplicate_serves: u64,
+    /// Serve outcomes currently held.
+    pub serve_entries: usize,
+    /// Requests actually replayed (`Σ n_requests` over
+    /// `serve_replays`) — the realized serving work.
+    pub serve_replayed_reqs: u64,
+    /// Requests an unmemoized, unpruned evaluation of the same outputs
+    /// would have replayed: `(1 + rungs)·n` per canonical serve point
+    /// and `configs·rungs·n` per best-config search. The numerator of
+    /// [`CacheStats::serve_replay_reduction`] — the same accounting
+    /// convention as `candidates()` vs `evaluated`.
+    pub serve_naive_reqs: u64,
 }
 
 impl CacheStats {
@@ -307,6 +423,16 @@ impl CacheStats {
         }
     }
 
+    /// How many× fewer requests the memoized, bound-pruned serving path
+    /// replayed than an unmemoized, unpruned evaluation of the same
+    /// outputs would have: `serve_naive_reqs / serve_replayed_reqs`
+    /// (0.0 before any serving evaluation ran). CI gates this at ≥ 10
+    /// on the bench grid (`BENCH_sweep.json:
+    /// .gate.serve_replay_reduction`).
+    pub fn serve_replay_reduction(&self) -> f64 {
+        self.serve_naive_reqs as f64 / self.serve_replayed_reqs.max(1) as f64
+    }
+
     /// Accumulate another shard's counters. `entries`/`trial_entries`
     /// become the totals held across the (independent) shard caches —
     /// shards may cache the same key, so these are upper bounds on
@@ -321,6 +447,12 @@ impl CacheStats {
         self.trial_entries += other.trial_entries;
         self.evaluated += other.evaluated;
         self.pruned += other.pruned;
+        self.serve_hits += other.serve_hits;
+        self.serve_replays += other.serve_replays;
+        self.duplicate_serves += other.duplicate_serves;
+        self.serve_entries += other.serve_entries;
+        self.serve_replayed_reqs += other.serve_replayed_reqs;
+        self.serve_naive_reqs += other.serve_naive_reqs;
     }
 
     /// Counters accumulated since an earlier snapshot of the *same*
@@ -340,6 +472,12 @@ impl CacheStats {
             trial_entries: self.trial_entries,
             evaluated: self.evaluated - earlier.evaluated,
             pruned: self.pruned - earlier.pruned,
+            serve_hits: self.serve_hits - earlier.serve_hits,
+            serve_replays: self.serve_replays - earlier.serve_replays,
+            duplicate_serves: self.duplicate_serves - earlier.duplicate_serves,
+            serve_entries: self.serve_entries,
+            serve_replayed_reqs: self.serve_replayed_reqs - earlier.serve_replayed_reqs,
+            serve_naive_reqs: self.serve_naive_reqs - earlier.serve_naive_reqs,
         }
     }
 }
@@ -543,6 +681,8 @@ pub struct CostCache {
     trials: Striped<TrialKey, [f64; NOISE_TRIALS]>,
     /// Winning mappings per sparsity-erased key (the seed index).
     seeds: Striped<SearchKey, Vec<(SpatialMapping, TemporalPolicy)>>,
+    /// Memoized serving replays (see [`ServeKey`]).
+    serves: Striped<ServeKey, ServeOutcome>,
     hits: AtomicU64,
     cross_corner: AtomicU64,
     searches_run: AtomicU64,
@@ -550,6 +690,11 @@ pub struct CostCache {
     duplicate_searches: AtomicU64,
     evaluated: AtomicU64,
     pruned: AtomicU64,
+    serve_hits: AtomicU64,
+    serve_replays: AtomicU64,
+    duplicate_serves: AtomicU64,
+    serve_replayed_reqs: AtomicU64,
+    serve_naive_reqs: AtomicU64,
 }
 
 impl CostCache {
@@ -572,6 +717,12 @@ impl CostCache {
             trial_entries: self.trials.len(),
             evaluated: self.evaluated.load(Ordering::Relaxed),
             pruned: self.pruned.load(Ordering::Relaxed),
+            serve_hits: self.serve_hits.load(Ordering::Relaxed),
+            serve_replays: self.serve_replays.load(Ordering::Relaxed),
+            duplicate_serves: self.duplicate_serves.load(Ordering::Relaxed),
+            serve_entries: self.serves.len(),
+            serve_replayed_reqs: self.serve_replayed_reqs.load(Ordering::Relaxed),
+            serve_naive_reqs: self.serve_naive_reqs.load(Ordering::Relaxed),
         }
     }
 
@@ -671,6 +822,136 @@ impl CostCache {
     /// Clone out every trial record (the disk-cache save path).
     pub(crate) fn snapshot_trials(&self) -> Vec<(TrialKey, [f64; NOISE_TRIALS])> {
         self.trials.snapshot()
+    }
+
+    /// One memoized, single-flight seeded replay: a [`ServeKey`] hit
+    /// hands back the cached [`ServeOutcome`]; a miss replays the trace
+    /// outside the stripe lock under an in-flight marker, so exactly
+    /// one thread replays per unique key. Bit-identical to
+    /// [`replay_outcome`] on the same inputs because the outcome is a
+    /// pure function of the key (and the key is the replay's entire
+    /// input — see [`ServeKey`]).
+    fn serve_replay(&self, table: &StageTable, key: ServeKey) -> ServeOutcome {
+        match self.serves.get_or_claim(&key) {
+            Lookup::Ready(out) => {
+                self.serve_hits.fetch_add(1, Ordering::Relaxed);
+                out
+            }
+            Lookup::Claimed(claim) => {
+                self.serve_replays.fetch_add(1, Ordering::Relaxed);
+                self.serve_replayed_reqs
+                    .fetch_add(key.n_requests as u64, Ordering::Relaxed);
+                let out = replay_outcome(
+                    table,
+                    key.schedule,
+                    key.seed,
+                    key.n_requests,
+                    key.mean_gap_ps,
+                );
+                if claim.publish(out) {
+                    self.duplicate_serves.fetch_add(1, Ordering::Relaxed);
+                }
+                out
+            }
+        }
+    }
+
+    /// The canonical serve columns of one grid point, with every trace
+    /// replay memoized through [`ServeKey`]s — bit-identical to the
+    /// uncached [`crate::serve::sweep_serve_point`] (test-locked),
+    /// because the pruned ladder only skips decided rungs and every
+    /// surviving replay is served by a pure-function cache. The
+    /// measurement replay and the ladder's 0.8 rung land on the same
+    /// key by construction and share one entry.
+    pub fn serve_point(&self, cost: &NetworkServeCost, cfg: &ServeConfig) -> ServeSweepPoint {
+        // naive volume for these outputs: one measurement + every rung
+        self.serve_naive_reqs.fetch_add(
+            ((1 + SLO_UTILS.len()) * cfg.requests) as u64,
+            Ordering::Relaxed,
+        );
+        let table = StageTable::new(cost, SWEEP_SERVE_MAX_BATCH);
+        let meas = self.serve_replay(
+            &table,
+            ServeKey::new(
+                cost,
+                SWEEP_SERVE_SCHEDULE,
+                SWEEP_SERVE_MAX_BATCH,
+                cfg.seed,
+                cfg.requests,
+                sweep_measurement_gap_ps(cost),
+            ),
+        );
+        let interval = cost.bottleneck_ps(SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH) as f64
+            / SWEEP_SERVE_MAX_BATCH as f64;
+        let rps = slo_throughput_with(
+            cost.min_service_ps(),
+            interval,
+            cfg.seed,
+            cfg.requests,
+            cfg.slo_ps,
+            |mean_gap| {
+                self.serve_replay(
+                    &table,
+                    ServeKey::new(
+                        cost,
+                        SWEEP_SERVE_SCHEDULE,
+                        SWEEP_SERVE_MAX_BATCH,
+                        cfg.seed,
+                        cfg.requests,
+                        mean_gap,
+                    ),
+                )
+            },
+        );
+        ServeSweepPoint {
+            rps,
+            fj_per_req: meas.fj_per_req,
+            p99_ns: meas.p99_ps as f64 / 1e3,
+        }
+    }
+
+    /// The serving-config search of one grid point, with every ladder
+    /// replay memoized — bit-identical to the direct
+    /// [`crate::serve::best_config`] (test-locked). The canonical
+    /// first config (layer-pipelined, batch ≤ 8) shares its ladder
+    /// entries with [`CostCache::serve_point`], so on a grid that
+    /// evaluates both, the config search's own replays are mostly
+    /// bound-pruned or cache hits.
+    pub fn best_serve_config(&self, cost: &NetworkServeCost, cfg: &ServeConfig) -> BestConfig {
+        // naive volume: the exhaustive search replays every config's
+        // full ladder
+        self.serve_naive_reqs.fetch_add(
+            (candidate_configs().len() * SLO_UTILS.len() * cfg.requests) as u64,
+            Ordering::Relaxed,
+        );
+        best_config_with(cost, cfg.seed, cfg.requests, cfg.slo_ps, |schedule, max_batch| {
+            let table = StageTable::new(cost, max_batch);
+            let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
+            slo_throughput_with(
+                cost.min_service_ps(),
+                interval,
+                cfg.seed,
+                cfg.requests,
+                cfg.slo_ps,
+                |mean_gap| {
+                    self.serve_replay(
+                        &table,
+                        ServeKey::new(cost, schedule, max_batch, cfg.seed, cfg.requests, mean_gap),
+                    )
+                },
+            )
+        })
+    }
+
+    /// Pre-seed one replay outcome without touching the counters (the
+    /// disk-cache load path).
+    pub(crate) fn preload_serve(&self, key: ServeKey, outcome: ServeOutcome) {
+        self.serves.insert(key, outcome);
+    }
+
+    /// Clone out every replay outcome (the disk-cache save path).
+    pub(crate) fn snapshot_serves(&self) -> Vec<(ServeKey, ServeOutcome)> {
+        self.serves.snapshot()
     }
 }
 
@@ -985,5 +1266,200 @@ mod tests {
         let total_calls = (n_threads * rounds * settings.len()) as u64;
         assert_eq!(s.lookups(), total_calls);
         assert_eq!(s.hits + s.cross_corner + s.searches, total_calls);
+    }
+
+    /// The serving tests' hand-checkable two-stage cost (the engine's
+    /// fixture), parameterized so distinct `scale`s key separately.
+    fn serve_cost(resident: bool, scale: f64) -> NetworkServeCost {
+        use crate::serve::LayerServeCost;
+        NetworkServeCost {
+            system: "synthetic".into(),
+            network: "two_layer".into(),
+            layers: vec![
+                LayerServeCost {
+                    mvm_cycles: 100.0 * scale,
+                    load_cycles: 50.0,
+                    mem_cycles: 10.0,
+                    weight_fj: 30.0,
+                    base_fj: 70.0,
+                },
+                LayerServeCost {
+                    mvm_cycles: 60.0 * scale,
+                    load_cycles: 20.0,
+                    mem_cycles: 5.0,
+                    weight_fj: 10.0,
+                    base_fj: 40.0,
+                },
+            ],
+            t_cycle_ns: 1.0,
+            resident,
+        }
+    }
+
+    #[test]
+    fn memoized_serve_point_is_bit_identical_to_the_uncached_reference() {
+        let cache = CostCache::new();
+        for resident in [true, false] {
+            let cost = serve_cost(resident, 1.0);
+            let cfg = ServeConfig {
+                seed: 42,
+                requests: 256,
+                slo_ps: 2_000_000_000,
+            };
+            let cached = cache.serve_point(&cost, &cfg);
+            let direct = crate::serve::sweep_serve_point(&cost, 42, 256, 2_000_000_000);
+            assert_eq!(cached.rps.to_bits(), direct.rps.to_bits());
+            assert_eq!(cached.fj_per_req.to_bits(), direct.fj_per_req.to_bits());
+            assert_eq!(cached.p99_ns.to_bits(), direct.p99_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn repeated_serve_points_hit_instead_of_replaying() {
+        let cache = CostCache::new();
+        let cost = serve_cost(false, 1.0);
+        let cfg = ServeConfig {
+            seed: 42,
+            requests: 256,
+            slo_ps: 2_000_000_000,
+        };
+        let a = cache.serve_point(&cost, &cfg);
+        let after_first = cache.stats();
+        assert!(after_first.serve_replays >= 1);
+        assert!(
+            after_first.serve_replays <= 1 + SLO_UTILS.len() as u64,
+            "more replays than rungs"
+        );
+        // naive volume: one measurement plus every rung
+        assert_eq!(
+            after_first.serve_naive_reqs,
+            ((1 + SLO_UTILS.len()) * cfg.requests) as u64
+        );
+        let b = cache.serve_point(&cost, &cfg);
+        let after_second = cache.stats();
+        // the repeat computed nothing new
+        assert_eq!(after_second.serve_replays, after_first.serve_replays);
+        assert_eq!(after_second.serve_replayed_reqs, after_first.serve_replayed_reqs);
+        assert!(after_second.serve_hits > after_first.serve_hits);
+        assert_eq!(a.rps.to_bits(), b.rps.to_bits());
+        // the reduction already clears the CI floor on a single repeat
+        assert!(
+            after_second.serve_replay_reduction() >= 2.0,
+            "reduction {}",
+            after_second.serve_replay_reduction()
+        );
+    }
+
+    #[test]
+    fn best_serve_config_is_bit_identical_to_the_direct_search() {
+        let cache = CostCache::new();
+        for resident in [true, false] {
+            let cost = serve_cost(resident, 1.0);
+            for slo_ps in [1u64, 400_000, 2_000_000_000] {
+                let cfg = ServeConfig {
+                    seed: 42,
+                    requests: 256,
+                    slo_ps,
+                };
+                let cached = cache.best_serve_config(&cost, &cfg);
+                let direct = crate::serve::best_config(&cost, 42, 256, slo_ps);
+                assert_eq!(cached.schedule, direct.schedule, "slo {slo_ps}");
+                assert_eq!(cached.max_batch, direct.max_batch, "slo {slo_ps}");
+                assert_eq!(cached.rps.to_bits(), direct.rps.to_bits(), "slo {slo_ps}");
+            }
+        }
+    }
+
+    #[test]
+    fn serve_point_and_config_search_share_canonical_ladder_entries() {
+        // the config search's first canonical config IS the canonical
+        // serve point's (schedule, batch): after a serve_point, the
+        // config search must not replay that config's surviving rungs
+        let cache = CostCache::new();
+        let cost = serve_cost(true, 1.0);
+        let cfg = ServeConfig {
+            seed: 42,
+            requests: 256,
+            slo_ps: 2_000_000_000,
+        };
+        cache.serve_point(&cost, &cfg);
+        let before = cache.stats();
+        cache.best_serve_config(&cost, &cfg);
+        let after = cache.stats();
+        assert!(
+            after.serve_hits > before.serve_hits,
+            "config search reused no canonical ladder entry"
+        );
+        // bound pruning + sharing: far fewer replays than the naive
+        // 8 configs × 6 rungs
+        let config_replays = after.serve_replays - before.serve_replays;
+        assert!(
+            config_replays <= 12,
+            "config search replayed {config_replays} traces"
+        );
+        assert!(after.serve_replay_reduction() >= 10.0, "gate-level reduction");
+    }
+
+    #[test]
+    fn concurrent_serve_replays_run_once_with_zero_duplicates() {
+        // the acceptance-criterion race: 16 threads hammer overlapping
+        // serve evaluations (both canonical points and config
+        // searches), every thread starting at a different rotation.
+        // Single-flight must keep duplicate_serves at zero, replays at
+        // the serial run's count, and every outcome bit-identical.
+        let cache = CostCache::new();
+        let costs: Vec<NetworkServeCost> = vec![
+            serve_cost(true, 1.0),
+            serve_cost(false, 1.0),
+            serve_cost(true, 3.0),
+            serve_cost(false, 5.0),
+        ];
+        let cfg = ServeConfig {
+            seed: 42,
+            requests: 128,
+            slo_ps: 2_000_000_000,
+        };
+        let serial = CostCache::new();
+        let want_points: Vec<ServeSweepPoint> =
+            costs.iter().map(|c| serial.serve_point(c, &cfg)).collect();
+        let want_configs: Vec<BestConfig> = costs
+            .iter()
+            .map(|c| serial.best_serve_config(c, &cfg))
+            .collect();
+        let serial_stats = serial.stats();
+        let n_threads = 16;
+        let rounds = 3;
+        std::thread::scope(|scope| {
+            for t in 0..n_threads {
+                let cache = &cache;
+                let costs = &costs;
+                let want_points = &want_points;
+                let want_configs = &want_configs;
+                let cfg = &cfg;
+                scope.spawn(move || {
+                    for r in 0..rounds {
+                        for i in 0..costs.len() {
+                            let j = (i + t + r) % costs.len();
+                            let p = cache.serve_point(&costs[j], cfg);
+                            assert_eq!(p.rps.to_bits(), want_points[j].rps.to_bits());
+                            assert_eq!(
+                                p.fj_per_req.to_bits(),
+                                want_points[j].fj_per_req.to_bits()
+                            );
+                            let b = cache.best_serve_config(&costs[j], cfg);
+                            assert_eq!(b.schedule, want_configs[j].schedule);
+                            assert_eq!(b.max_batch, want_configs[j].max_batch);
+                            assert_eq!(b.rps.to_bits(), want_configs[j].rps.to_bits());
+                        }
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.duplicate_serves, 0, "single-flight serve tripwire");
+        // racing threads computed exactly what one serial pass computes
+        assert_eq!(s.serve_replays, serial_stats.serve_replays);
+        assert_eq!(s.serve_replayed_reqs, serial_stats.serve_replayed_reqs);
+        assert_eq!(s.serve_entries, serial_stats.serve_entries);
     }
 }

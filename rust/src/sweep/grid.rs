@@ -24,13 +24,22 @@
 //! designs and precisions (corners stay apart: cost is noise-invariant,
 //! so pooling would let every off row dominate its noisy twins).
 //!
-//! Every grid point additionally carries three *serving* columns from
+//! Every grid point additionally carries six *serving* columns from
 //! the multi-tenant serving simulator ([`crate::serve`]): the
 //! SLO-constrained throughput, the energy per request and the p99
 //! latency of the point's mapping replayed under the canonical serving
 //! configuration (`serve::SWEEP_SERVE_*` — seed-42 Poisson trace,
-//! layer-pipelined, batch ≤ 8, 2 ms p99 SLO). The summary exposes a
-//! per-(network, sparsity, noise) **(energy/request,
+//! layer-pipelined, batch ≤ 8, 2 ms p99 SLO; the trace knobs are
+//! overridable via [`SweepOptions::serve`]), plus the **best serving
+//! config** of the point's mapping — the (schedule, batch-cap) pair of
+//! the serving-config search ([`crate::serve::search::best_config`])
+//! and its throughput. All replays run through the sweep cache's
+//! single-flight serve store ([`super::cache::ServeKey`]), so
+//! objective rows with coinciding mappings, noise corners (serving
+//! cost is noise-invariant) and repeated groups replay exactly once,
+//! and the SLO ladder + config search prune on admissible bounds —
+//! bit-identical to the uncached, unpruned PR-8 columns. The summary
+//! exposes a per-(network, sparsity, noise) **(energy/request,
 //! throughput-under-SLO) serving Pareto cut** next to the cost and
 //! accuracy frontiers — the ROADMAP's "which surveyed design serves N
 //! req/s under a 2 ms p99?" query.
@@ -54,7 +63,7 @@ use crate::dse::{
     COST_OBJECTIVES, DEFAULT_SPARSITY,
 };
 use crate::model::TechParams;
-use crate::serve::sweep_serve_metrics;
+use crate::serve::{NetworkServeCost, Schedule, ServeConfig};
 use crate::sim::{AccuracyRecord, NoiseSpec};
 use crate::util::pool::{default_threads, parallel_map_with};
 use crate::workload::{all_networks, Network};
@@ -275,6 +284,11 @@ pub struct SweepOptions {
     /// count, not the (much smaller) group count; the output is
     /// bit-identical for every value (see `docs/COST_MODEL.md` §10).
     pub threads: usize,
+    /// Serving-trace knobs (seed, request count, SLO) for the serve
+    /// columns. The default is the canonical `SWEEP_SERVE_*` operating
+    /// point, keeping untouched sweeps bit-identical to earlier
+    /// releases.
+    pub serve: ServeConfig,
 }
 
 impl Default for SweepOptions {
@@ -283,6 +297,7 @@ impl Default for SweepOptions {
             shards: 1,
             shard_index: None,
             threads: default_threads(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -353,6 +368,15 @@ pub struct GridPoint {
     pub serve_fj_per_req: f64,
     /// p99 request latency (ns) in the canonical serving run.
     pub serve_p99_ns: f64,
+    /// Highest SLO-constrained throughput (req/s) over the serving
+    /// config grid (schedule × batch cap,
+    /// [`crate::serve::search::best_config`]) — what this mapping
+    /// *could* serve if the scheduler were chosen per design.
+    pub best_serve_rps: f64,
+    /// Schedule of the winning serving config.
+    pub best_serve_schedule: Schedule,
+    /// Batch cap of the winning serving config.
+    pub best_serve_batch: usize,
 }
 
 impl GridPoint {
@@ -477,7 +501,13 @@ pub fn run_sweep_with_cache(
     let group_indices: Vec<usize> = (0..realized.len()).collect();
     let points: Vec<GridPoint> = parallel_map_with(&group_indices, opts.threads, |&gi| {
         let r = &realized[gi];
-        group_points(grid, r, &searches[offsets[gi]..offsets[gi] + r.net.layers.len()])
+        group_points(
+            grid,
+            r,
+            &searches[offsets[gi]..offsets[gi] + r.net.layers.len()],
+            cache,
+            &opts.serve,
+        )
     })
     .into_iter()
     .flatten()
@@ -548,6 +578,8 @@ fn group_points(
     grid: &SweepGrid,
     rg: &RealizedGroup<'_>,
     searches: &[Arc<LayerSearch>],
+    cache: &CostCache,
+    serve_cfg: &ServeConfig,
 ) -> Vec<GridPoint> {
     let n_obj = grid.objectives.len();
     let sys = &rg.sys;
@@ -575,10 +607,13 @@ fn group_points(
                 layers,
             };
             // serving columns: this objective's mapping replayed under
-            // the canonical serving configuration — a pure function of
-            // (r, sys), so thread-/shard-/cache-independent like the
-            // cost columns
-            let serve = sweep_serve_metrics(&r, sys);
+            // the serving configuration, and its best (schedule,
+            // batch-cap) searched — pure functions of (r, sys, cfg)
+            // memoized in the cache's single-flight serve store, so
+            // thread-/shard-/cache-independent like the cost columns
+            let cost = NetworkServeCost::from_result(&r, sys);
+            let serve = cache.serve_point(&cost, serve_cfg);
+            let best = cache.best_serve_config(&cost, serve_cfg);
             GridPoint {
                 task_index: rg.group * n_obj + oi,
                 design: sys.name.clone(),
@@ -605,6 +640,9 @@ fn group_points(
                 serve_rps: serve.rps,
                 serve_fj_per_req: serve.fj_per_req,
                 serve_p99_ns: serve.p99_ns,
+                best_serve_rps: best.rps,
+                best_serve_schedule: best.schedule,
+                best_serve_batch: best.max_batch,
             }
         })
         .collect()
@@ -869,6 +907,7 @@ pub fn merge_summaries(parts: &[SweepSummary]) -> SweepSummary {
 mod tests {
     use super::*;
     use crate::arch::table2_systems;
+    use crate::serve::SERVE_SEARCH_BATCHES;
     use crate::workload::deep_autoencoder;
 
     fn tiny_grid() -> SweepGrid {
@@ -1084,6 +1123,16 @@ mod tests {
         // concurrently — hits = lookups − unique keys
         assert!(s.cache.hits > 0, "no cache hits: {:?}", s.cache);
         assert_eq!(s.cache.duplicate_searches, 0);
+        // the serve columns ran through the single-flight serve store:
+        // replays happened, none twice, and memoization + pruning beat
+        // the naive (every rung and config replayed) request count
+        assert!(s.cache.serve_replays > 0, "no serve replays: {:?}", s.cache);
+        assert_eq!(s.cache.duplicate_serves, 0);
+        assert!(
+            s.cache.serve_replayed_reqs < s.cache.serve_naive_reqs,
+            "serve memoization saved nothing: {:?}",
+            s.cache
+        );
         // one frontier, for the one network, and it is non-empty
         assert_eq!(s.frontiers.len(), 1);
         assert!(!s.frontiers[0].1.is_empty());
@@ -1112,10 +1161,17 @@ mod tests {
             assert!(pa.serve_p99_ns > 0.0, "{}: no p99", pa.design);
             assert!(pa.serve_fj_per_req > 0.0, "{}: no energy", pa.design);
             assert!(pa.serve_rps >= 0.0);
+            // the searched best config can only improve on the
+            // canonical one (which is on the candidate grid)
+            assert!(pa.best_serve_rps >= pa.serve_rps, "{}", pa.design);
+            assert!(SERVE_SEARCH_BATCHES.contains(&pa.best_serve_batch));
             // serving columns are thread-count-invariant, bit for bit
             assert_eq!(pa.serve_rps.to_bits(), pb.serve_rps.to_bits());
             assert_eq!(pa.serve_fj_per_req.to_bits(), pb.serve_fj_per_req.to_bits());
             assert_eq!(pa.serve_p99_ns.to_bits(), pb.serve_p99_ns.to_bits());
+            assert_eq!(pa.best_serve_rps.to_bits(), pb.best_serve_rps.to_bits());
+            assert_eq!(pa.best_serve_schedule, pb.best_serve_schedule);
+            assert_eq!(pa.best_serve_batch, pb.best_serve_batch);
         }
         let (label, front) = &a.serve_frontiers[0];
         assert!(label.contains("serving throughput-vs-energy"), "{label}");

@@ -18,15 +18,25 @@
 //!   ([`cache::CACHE_STRIPES`] stripes by key hash) with single-flight
 //!   miss resolution: concurrent lookups of one key run exactly one
 //!   search, tracked by [`CacheStats::duplicate_searches`] (a tripwire
-//!   CI keeps at zero).
+//!   CI keeps at zero). The serving replays ride the same machinery: a
+//!   [`ServeKey`] (full cost snapshot × schedule × batch cap × trace
+//!   parameters) maps to its replayed [`crate::serve::ServeOutcome`],
+//!   so objective rows with coinciding mappings, noise corners
+//!   (serving cost is noise-invariant) and repeated ladder rungs
+//!   replay exactly once — [`CacheStats::duplicate_serves`] is the
+//!   serve-side tripwire and
+//!   [`CacheStats::serve_replay_reduction`] the gated speedup.
 //! * [`grid`] — grid construction (SRAM-cell budget, precision and
 //!   activation-sparsity axes), deterministic sharding
 //!   (`--shards`/`--shard-index`), the two-level (group × layer) task
 //!   scheduler (`--threads`) and shard-result merging. Each grid point
 //!   also carries the serving simulator's canonical-trace columns
-//!   (`serve_rps` / `serve_fj_per_req` / `serve_p99_ns`, produced by
-//!   [`crate::serve::sweep_serve_metrics`]), aggregated into
-//!   per-network (energy/request, throughput-under-SLO) Pareto cuts. The determinism
+//!   (`serve_rps` / `serve_fj_per_req` / `serve_p99_ns`) and the
+//!   serving-config search's best-config columns (`best_serve_rps` /
+//!   `best_serve_schedule` / `best_serve_batch`,
+//!   [`crate::serve::search::best_config`]), all memoized through the
+//!   cache's serve store, aggregated into per-network (energy/request,
+//!   throughput-under-SLO) Pareto cuts. The determinism
 //!   invariant: points and Pareto frontiers are bit-identical for any
 //!   shard count, thread count and cache temperature, because tasks
 //!   are canonically numbered, whole evaluation groups are dealt
@@ -35,7 +45,7 @@
 //! * [`persist`] — bit-exact on-disk serialization of the cost cache
 //!   (`sweep --cache-file`), version-tagged with
 //!   [`persist::SWEEP_CACHE_VERSION`]; files from another schema
-//!   generation (pre-precision v1 through pre-noise-split v4) are
+//!   generation (pre-precision v1 through pre-serve v5) are
 //!   rejected with an error naming the mismatch, so repeated CI sweeps
 //!   and incremental re-sweeps start warm but never warm *wrong*.
 //!
@@ -47,7 +57,7 @@ pub mod cache;
 pub mod grid;
 pub mod persist;
 
-pub use cache::{CacheStats, CostCache, SearchKey, TrialKey, CACHE_STRIPES};
+pub use cache::{CacheStats, CostCache, SearchKey, ServeKey, TrialKey, CACHE_STRIPES};
 pub use grid::{
     merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, PrecisionPoint, SweepGrid,
     SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,

@@ -3,11 +3,14 @@
 //! CI sweeps re-run the identical survey grid on every push; a warm
 //! cache turns the whole mapping search into a lookup. The format is
 //! the workspace's own minimal JSON ([`crate::util::json`] — no serde):
-//! a version tag plus two flat lists mirroring the split in-memory
+//! a version tag plus three flat lists mirroring the split in-memory
 //! cache — `searches` holds `(SearchKey, LayerSearch)` pairs (the
 //! noise-erased mapping searches and nominal records), `trials` holds
 //! `(SearchKey, σ fingerprint, trial energies)` triples (the per-corner
-//! Monte-Carlo remainders). Files with a different version tag (or any
+//! Monte-Carlo remainders), and `serves` holds
+//! `(ServeKey, ServeOutcome)` pairs (the memoized serving replays —
+//! one per distinct cost snapshot × schedule × batch cap × trace).
+//! Files with a different version tag (or any
 //! malformed structure) are rejected wholesale with a
 //! [`CacheLoadError`] naming the mismatch — a stale schema must never
 //! seed a cache with wrong costs — and the run simply starts cold.
@@ -32,8 +35,9 @@ use crate::sim::{AccuracyRecord, NOISE_TRIALS};
 use crate::util::json::{parse, Json};
 use crate::workload::{LayerType, LoopDim};
 
-use super::cache::{CostCache, SearchKey, TrialKey};
+use super::cache::{CostCache, SearchKey, ServeKey, TrialKey};
 use crate::dse::reuse::{AccessCounts, TrafficEnergy};
+use crate::serve::{Schedule, ServeOutcome};
 
 /// Schema version of the cache file. Bump on any change to
 /// [`SearchKey`], [`TrialKey`], [`LayerSearch`], the cost model's
@@ -53,8 +57,13 @@ use crate::dse::reuse::{AccessCounts, TrafficEnergy};
 /// per-trial noise energies; **5** — the noise-split cache landed: the
 /// monolithic key became the noise-erased [`SearchKey`] plus a σ-keyed
 /// trial list, so v4 files (one full entry per σ corner, σs baked into
-/// every key) are rejected by name like v1–v3 before them.
-pub const SWEEP_CACHE_VERSION: u64 = 5;
+/// every key) are rejected by name like v1–v3 before them; **6** — the
+/// serving store landed: the file gained the `serves` list (memoized
+/// [`ServeOutcome`]s keyed by the full serving-cost snapshot × schedule
+/// × batch cap × trace parameters), so v5 files (which carry no serve
+/// entries and whose absence would silently cost every warm sweep its
+/// serve memoization) are rejected by name like v1–v4 before them.
+pub const SWEEP_CACHE_VERSION: u64 = 6;
 
 /// Why a cache file was rejected. In every case the in-memory cache is
 /// left untouched and the caller starts cold.
@@ -77,8 +86,8 @@ impl std::fmt::Display for CacheLoadError {
                 f,
                 "cache file has schema version {found}, but this build requires version \
                  {expected} (the SearchKey/cost-model/simulator schema changed — e.g. a \
-                 pre-precision-axis v1, pre-accuracy v2, pre-noise v3 or pre-split v4 \
-                 cache); delete the file or let this run rewrite it"
+                 pre-precision-axis v1, pre-accuracy v2, pre-noise v3, pre-split v4 or \
+                 pre-serve v5 cache); delete the file or let this run rewrite it"
             ),
             CacheLoadError::Malformed => f.write_str("cache file is not a valid sweep cost cache"),
         }
@@ -310,6 +319,68 @@ fn trial_from_json(j: &Json) -> Option<(TrialKey, [f64; NOISE_TRIALS])> {
     Some((TrialKey { search, noise_bits }, trial_noise))
 }
 
+// ---- serve records -------------------------------------------------------
+
+fn serve_to_json(k: &ServeKey, o: &ServeOutcome) -> Json {
+    obj(vec![
+        (
+            "layers",
+            Json::Arr(
+                k.layers
+                    .iter()
+                    .map(|l| Json::Arr(l.iter().map(|&b| jbits(b)).collect()))
+                    .collect(),
+            ),
+        ),
+        ("t_cycle_bits", jbits(k.t_cycle_bits)),
+        ("resident", Json::Bool(k.resident)),
+        ("schedule", jstr(k.schedule.as_str())),
+        ("max_batch", jn(k.max_batch)),
+        ("seed", jbits(k.seed)),
+        ("n_requests", jn(k.n_requests)),
+        ("mean_gap_ps", jbits(k.mean_gap_ps)),
+        ("achieved_rps", jf(o.achieved_rps)),
+        ("p99_ps", jbits(o.p99_ps)),
+        ("fj_per_req", jf(o.fj_per_req)),
+    ])
+}
+
+fn serve_from_json(j: &Json) -> Option<(ServeKey, ServeOutcome)> {
+    let layers = get(j, "layers")?
+        .as_arr()?
+        .iter()
+        .map(|l| {
+            let terms = l.as_arr()?;
+            if terms.len() != 5 {
+                return None;
+            }
+            Some([
+                bits_of(&terms[0])?,
+                bits_of(&terms[1])?,
+                bits_of(&terms[2])?,
+                bits_of(&terms[3])?,
+                bits_of(&terms[4])?,
+            ])
+        })
+        .collect::<Option<Vec<_>>>()?;
+    let key = ServeKey {
+        layers,
+        t_cycle_bits: bits_of(get(j, "t_cycle_bits")?)?,
+        resident: get(j, "resident")?.as_bool()?,
+        schedule: get(j, "schedule")?.as_str()?.parse::<Schedule>().ok()?,
+        max_batch: n_of(get(j, "max_batch")?)?,
+        seed: bits_of(get(j, "seed")?)?,
+        n_requests: n_of(get(j, "n_requests")?)?,
+        mean_gap_ps: bits_of(get(j, "mean_gap_ps")?)?,
+    };
+    let outcome = ServeOutcome {
+        achieved_rps: f_of(get(j, "achieved_rps")?)?,
+        p99_ps: bits_of(get(j, "p99_ps")?)?,
+        fj_per_req: f_of(get(j, "fj_per_req")?)?,
+    };
+    Some((key, outcome))
+}
+
 // ---- LayerSearch ---------------------------------------------------------
 
 fn unrolls_to_json(unrolls: &[Unroll]) -> Json {
@@ -512,8 +583,9 @@ fn search_from_json(j: &Json) -> Option<LayerSearch> {
 
 // ---- file API ------------------------------------------------------------
 
-/// Serialize every cache entry — search entries and per-corner trial
-/// records — to `path` (atomic-enough: full rewrite). The search
+/// Serialize every cache entry — search entries, per-corner trial
+/// records and memoized serving replays — to `path` (atomic-enough:
+/// full rewrite). The search
 /// snapshot shares the cache's `Arc<LayerSearch>` entries, so saving
 /// never deep-clones a record.
 pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
@@ -538,16 +610,27 @@ pub fn save_cache(cache: &CostCache, path: &Path) -> io::Result<()> {
         })
         .collect();
     trials.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut serves: Vec<(String, Json)> = cache
+        .snapshot_serves()
+        .iter()
+        .map(|(k, o)| {
+            let entry = serve_to_json(k, o);
+            (entry.to_string(), entry)
+        })
+        .collect();
+    serves.sort_by(|a, b| a.0.cmp(&b.0));
     let doc = obj(vec![
         ("version", Json::Num(SWEEP_CACHE_VERSION as f64)),
         ("searches", Json::Arr(searches.into_iter().map(|(_, e)| e).collect())),
         ("trials", Json::Arr(trials.into_iter().map(|(_, e)| e).collect())),
+        ("serves", Json::Arr(serves.into_iter().map(|(_, e)| e).collect())),
     ]);
     std::fs::write(path, doc.to_string())
 }
 
 /// Load a cache file. Returns the total number of records preloaded
-/// into `cache` (search entries + trial records); a [`CacheLoadError`]
+/// into `cache` (search entries + trial records + serve entries); a
+/// [`CacheLoadError`]
 /// when the file is missing, carries a different schema version, or
 /// fails to parse — in every such case `cache` is left untouched and
 /// the caller starts cold. A version mismatch is reported explicitly
@@ -585,12 +668,23 @@ pub fn load_cache_into(path: &Path, cache: &CostCache) -> Result<usize, CacheLoa
         .map(trial_from_json)
         .collect::<Option<Vec<_>>>()
         .ok_or(CacheLoadError::Malformed)?;
-    let n = searches.len() + trials.len();
+    let serves: Vec<(ServeKey, ServeOutcome)> = doc
+        .get("serves")
+        .and_then(|e| e.as_arr())
+        .ok_or(CacheLoadError::Malformed)?
+        .iter()
+        .map(serve_from_json)
+        .collect::<Option<Vec<_>>>()
+        .ok_or(CacheLoadError::Malformed)?;
+    let n = searches.len() + trials.len() + serves.len();
     for (k, s) in searches {
         cache.preload_search(k, s);
     }
     for (k, t) in trials {
         cache.preload_trials(k, t);
+    }
+    for (k, o) in serves {
+        cache.preload_serve(k, o);
     }
     Ok(n)
 }
@@ -835,6 +929,77 @@ mod tests {
         ));
         assert!(err.to_string().contains("pre-split"), "{err}");
         assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_serve_v5_cache_is_rejected_not_reused() {
+        // a v5 file predates the serving store: it carries no `serves`
+        // list, so reusing it would silently cost every warm sweep its
+        // serve memoization — rejected by name, run starts cold
+        let path = cache_file_with_version("cache_v5", 5);
+        let fresh = CostCache::new();
+        let err = load_cache_into(&path, &fresh).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheLoadError::VersionMismatch { found: 5, expected: SWEEP_CACHE_VERSION }
+        ));
+        assert!(err.to_string().contains("pre-serve"), "{err}");
+        assert_eq!(fresh.stats().entries, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_entries_roundtrip_bit_exact_and_warm_cache_replays_nothing() {
+        use crate::serve::{LayerServeCost, NetworkServeCost, ServeConfig};
+        let cost = NetworkServeCost {
+            system: "persist".into(),
+            network: "two_layer".into(),
+            layers: vec![
+                LayerServeCost {
+                    mvm_cycles: 100.0,
+                    load_cycles: 50.0,
+                    mem_cycles: 10.0,
+                    weight_fj: 30.0,
+                    base_fj: 70.0,
+                },
+                LayerServeCost {
+                    mvm_cycles: 60.0,
+                    load_cycles: 20.0,
+                    mem_cycles: 5.0,
+                    weight_fj: 10.0,
+                    base_fj: 40.0,
+                },
+            ],
+            t_cycle_ns: 1.0,
+            resident: false,
+        };
+        let cfg = ServeConfig {
+            seed: 42,
+            requests: 128,
+            slo_ps: 2_000_000_000,
+        };
+        let cold = CostCache::new();
+        let point = cold.serve_point(&cost, &cfg);
+        let best = cold.best_serve_config(&cost, &cfg);
+        assert!(cold.stats().serve_replays > 0);
+        let path = tmp("cache_serve_roundtrip");
+        save_cache(&cold, &path).unwrap();
+
+        let warm = CostCache::new();
+        let loaded = load_cache_into(&path, &warm).expect("cache file loads");
+        assert_eq!(loaded, cold.stats().serve_entries);
+        // every replay is answered from disk, bit for bit
+        let wp = warm.serve_point(&cost, &cfg);
+        let wb = warm.best_serve_config(&cost, &cfg);
+        let s = warm.stats();
+        assert_eq!(s.serve_replays, 0, "warm serve run replayed: {s:?}");
+        assert!(s.serve_hits > 0);
+        assert_eq!(point.rps.to_bits(), wp.rps.to_bits());
+        assert_eq!(point.fj_per_req.to_bits(), wp.fj_per_req.to_bits());
+        assert_eq!(point.p99_ns.to_bits(), wp.p99_ns.to_bits());
+        assert_eq!(best.rps.to_bits(), wb.rps.to_bits());
+        assert_eq!((best.schedule, best.max_batch), (wb.schedule, wb.max_batch));
         std::fs::remove_file(&path).ok();
     }
 

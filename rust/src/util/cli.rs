@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::dse::DEFAULT_SPARSITY;
+use crate::serve::ServeConfig;
 use crate::sim::NoiseSpec;
 use crate::sweep::{PrecisionPoint, DEFAULT_GRID_CELLS};
 
@@ -121,6 +122,46 @@ pub fn parse_threads(args: &Args) -> Result<usize, String> {
             args.opt_or("threads", "")
         )),
     }
+}
+
+/// Parse the shared `--serve-requests` / `--serve-slo-ms` /
+/// `--serve-seed` options (`sweep`/`sweepmerge`) into a
+/// [`ServeConfig`]. Absent options keep the canonical `SWEEP_SERVE_*`
+/// defaults — a sweep that never touches the knobs replays the exact
+/// canonical trace and emits bit-identical CSVs to earlier releases.
+pub fn parse_serve_config(args: &Args) -> Result<ServeConfig, String> {
+    let mut cfg = ServeConfig::default();
+    match args.opt_parse::<usize>("serve-requests") {
+        None => {}
+        Some(Ok(n)) if n > 0 => cfg.requests = n,
+        _ => {
+            return Err(format!(
+                "--serve-requests must be a positive integer (got '{}')",
+                args.opt_or("serve-requests", "")
+            ))
+        }
+    }
+    match args.opt_parse::<f64>("serve-slo-ms") {
+        None => {}
+        Some(Ok(ms)) if ms > 0.0 && ms.is_finite() => cfg.slo_ps = (ms * 1e9).round() as u64,
+        _ => {
+            return Err(format!(
+                "--serve-slo-ms must be a positive number of milliseconds (got '{}')",
+                args.opt_or("serve-slo-ms", "")
+            ))
+        }
+    }
+    match args.opt_parse::<u64>("serve-seed") {
+        None => {}
+        Some(Ok(s)) => cfg.seed = s,
+        Some(Err(_)) => {
+            return Err(format!(
+                "--serve-seed must be an unsigned integer (got '{}')",
+                args.opt_or("serve-seed", "")
+            ))
+        }
+    }
+    Ok(cfg)
 }
 
 /// Parse a comma-separated option value list (`--cells 294912,147456`).
@@ -297,6 +338,37 @@ mod tests {
         for bad in ["sweep --threads 0", "sweep --threads eight", "sweep --threads -2"] {
             let err = parse_threads(&parse(bad)).unwrap_err();
             assert!(err.contains("--threads must be a positive integer"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn serve_config_defaults_to_the_canonical_operating_point() {
+        use crate::serve::{SWEEP_SERVE_REQUESTS, SWEEP_SERVE_SEED, SWEEP_SERVE_SLO_PS};
+        let cfg = parse_serve_config(&parse("sweep")).unwrap();
+        assert_eq!(cfg.seed, SWEEP_SERVE_SEED);
+        assert_eq!(cfg.requests, SWEEP_SERVE_REQUESTS);
+        assert_eq!(cfg.slo_ps, SWEEP_SERVE_SLO_PS);
+        assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_config_parses_overrides_and_rejects_bad_values() {
+        let cfg = parse_serve_config(&parse(
+            "sweep --serve-requests 1024 --serve-slo-ms 0.5 --serve-seed 7",
+        ))
+        .unwrap();
+        assert_eq!(cfg.requests, 1024);
+        assert_eq!(cfg.slo_ps, 500_000_000);
+        assert_eq!(cfg.seed, 7);
+        for (cmd, opt) in [
+            ("sweep --serve-requests 0", "--serve-requests"),
+            ("sweep --serve-requests many", "--serve-requests"),
+            ("sweep --serve-slo-ms -1", "--serve-slo-ms"),
+            ("sweep --serve-slo-ms soon", "--serve-slo-ms"),
+            ("sweep --serve-seed -3", "--serve-seed"),
+        ] {
+            let err = parse_serve_config(&parse(cmd)).unwrap_err();
+            assert!(err.starts_with(opt), "{cmd}: {err}");
         }
     }
 

@@ -7,8 +7,11 @@
 
 use imcsim::arch::table2_systems;
 use imcsim::dse::{search_network, DseOptions};
+use imcsim::serve::engine::slo_throughput_unpruned;
+use imcsim::serve::search::best_config_unpruned;
 use imcsim::serve::{
-    bursty_arrivals, poisson_arrivals, simulate, slo_throughput, NetworkServeCost, Schedule,
+    best_config, bursty_arrivals, poisson_arrivals, simulate, slo_throughput, NetworkServeCost,
+    Schedule,
 };
 use imcsim::workload::all_networks;
 
@@ -161,4 +164,85 @@ fn slo_constrained_throughput_is_monotone_in_the_slo() {
         last = t;
     }
     assert!(last > 0.0, "even the loosest SLO admits nothing");
+}
+
+/// The rung-pruning acceptance criterion: on every survey design ×
+/// tinyMLPerf network × schedule, the admissibly-pruned SLO ladder
+/// returns the *bit-identical* throughput of the exhaustive reference
+/// ladder — pruning is a pure work optimization, never a semantic one.
+#[test]
+fn pruned_slo_ladder_is_bit_identical_to_unpruned_on_every_survey_design() {
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+                for slo_ps in [1u64, 100_000_000, 2_000_000_000] {
+                    let pruned = slo_throughput(&cost, schedule, 8, 42, 128, slo_ps);
+                    let full = slo_throughput_unpruned(&cost, schedule, 8, 42, 128, slo_ps);
+                    assert_eq!(
+                        pruned.to_bits(),
+                        full.to_bits(),
+                        "{}/{} {schedule} slo={slo_ps}: pruned {pruned} != unpruned {full}",
+                        sys.name,
+                        net.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The config-search acceptance criterion: the incumbent-pruned
+/// schedule × batch-cap search returns the same winner (schedule,
+/// batch and bit-identical throughput) as exhaustively replaying
+/// every config's full ladder, on every survey design.
+#[test]
+fn pruned_config_search_matches_the_exhaustive_search_on_every_survey_design() {
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            let r = search_network(&net, sys, &DseOptions::default());
+            let cost = NetworkServeCost::from_result(&r, sys);
+            let fast = best_config(&cost, 42, 128, 2_000_000_000);
+            let full = best_config_unpruned(&cost, 42, 128, 2_000_000_000);
+            assert_eq!(fast.schedule, full.schedule, "{}/{}", sys.name, net.name);
+            assert_eq!(fast.max_batch, full.max_batch, "{}/{}", sys.name, net.name);
+            assert_eq!(
+                fast.rps.to_bits(),
+                full.rps.to_bits(),
+                "{}/{}: pruned {} != exhaustive {}",
+                sys.name,
+                net.name,
+                fast.rps,
+                full.rps
+            );
+        }
+    }
+}
+
+/// The slo_ps-monotonicity property, as a grid property rather than a
+/// single hand-picked design: on every survey design × schedule, a
+/// strictly looser SLO never lowers the reported throughput (the
+/// ladder only ever *adds* admissible rungs as the target relaxes).
+#[test]
+fn slo_monotonicity_holds_on_every_survey_design_and_schedule() {
+    let net = all_networks().remove(1); // resnet8: multi-layer, mid-size
+    for sys in &table2_systems() {
+        let r = search_network(&net, sys, &DseOptions::default());
+        let cost = NetworkServeCost::from_result(&r, sys);
+        for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+            let mut last = 0.0f64;
+            for slo_ps in
+                [1u64, 1_000_000, 100_000_000, 2_000_000_000, 1_000_000_000_000]
+            {
+                let t = slo_throughput(&cost, schedule, 8, 42, 128, slo_ps);
+                assert!(
+                    t >= last,
+                    "{}/{schedule} slo {slo_ps} ps: throughput {t} < {last} at a tighter SLO",
+                    sys.name
+                );
+                last = t;
+            }
+        }
+    }
 }
