@@ -1,0 +1,181 @@
+//! The multi-tenant headline demo: one interactive keyword-spotter
+//! (DS-CNN, D1-resident on every surveyed design) shares an
+//! accelerator with a best-effort ResNet8 (resident on neither design
+//! here), and the weight-swap cost decides who degrades.
+//!
+//! On `aimc_large`, every dispatch switch back to the resident DS-CNN
+//! re-serializes its weight load through 1,152-row macro columns — the
+//! interleaved timeline is swap-dominated. On `dimc_multi`, the same
+//! switch re-fills 48-row macros — the swap is noise. The demo replays
+//! the identical two-tenant workload on both designs and shows that
+//! the DIMC point's throughput-under-SLO degrades **strictly less**
+//! than the AIMC point's under tenant interleaving.
+//!
+//! Both tenants run closed-loop with a single client each (next
+//! arrival = last completion + think time). That is the regime where
+//! the swap cost is cleanly visible: the two clients ping-pong, so the
+//! dispatcher switches tenants on essentially every request and every
+//! swap stall pushes the whole timeline back — it is never absorbed by
+//! idle gaps. Under open (Poisson) load the comparison is
+//! regime-dependent instead: a swap-heavy design builds backlog, the
+//! dispatcher's earliest-feasible-start rule then favors the incumbent
+//! tenant, and the design can *avoid* most switches precisely because
+//! its swaps are expensive.
+//!
+//! The degradation baseline is exact, not hand-waved: the same replay
+//! with DS-CNN's residency flag cleared is the no-swap counterfactual
+//! — non-resident tenants are never charged a swap, and the residency
+//! flag changes nothing else about the timeline — so
+//! `1 − goodput/goodput_noswap` isolates precisely the swap stalls.
+//!
+//! Deterministic by construction (seeded traces, integer-ps event
+//! times): the CI determinism job runs this example twice and `cmp`s
+//! the printed output byte for byte.
+//!
+//! Run: `cargo run --release --example serve_tenants`
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{search_network, DseOptions};
+use imcsim::report::Table;
+use imcsim::serve::{
+    replay_tenants, DispatchPolicy, NetworkServeCost, Schedule, TenantLoad, TenantSpec,
+};
+use imcsim::workload::{ds_cnn, resnet8};
+
+const SEED: u64 = 42;
+const REQUESTS: usize = 256;
+const MAX_BATCH: usize = 8;
+const SCHEDULE: Schedule = Schedule::LayerPipelined;
+/// Client think time between a completion and the next request (1 µs):
+/// short against any service time here, so the pair stays interleaved.
+const THINK_PS: u64 = 1_000_000;
+/// Loose 1 s SLO — admission and SLO accounting stay out of the way so
+/// the degradation number isolates the swap stalls alone.
+const SLO_PS: u64 = 1_000_000_000_000;
+
+struct DesignPoint {
+    name: String,
+    swaps: usize,
+    stall_share: f64,
+    goodput: f64,
+    goodput_noswap: f64,
+    degradation: f64,
+}
+
+fn spec(name: &str, cost: NetworkServeCost, priority: u32, share: u32) -> TenantSpec {
+    TenantSpec {
+        name: name.into(),
+        cost,
+        load: TenantLoad::Closed { clients: 1, think_ps: THINK_PS },
+        slo_ps: SLO_PS,
+        priority,
+        share,
+    }
+}
+
+fn main() {
+    let systems = table2_systems();
+    let kws = ds_cnn();
+    let vision = resnet8();
+
+    let mut points = Vec::new();
+    let mut table = Table::new(&[
+        "design", "swaps", "stall [ms]", "stall share", "goodput [req/s]", "no-swap [req/s]",
+        "degradation",
+    ]);
+    for name in ["aimc_large", "dimc_multi"] {
+        let sys = systems.iter().find(|s| s.name == name).expect("survey design");
+        let kws_cost =
+            NetworkServeCost::from_result(&search_network(&kws, sys, &DseOptions::default()), sys);
+        let vis_cost = NetworkServeCost::from_result(
+            &search_network(&vision, sys, &DseOptions::default()),
+            sys,
+        );
+        assert!(kws_cost.resident, "{name}: DS-CNN must be D1-resident");
+        assert!(!vis_cost.resident, "{name}: ResNet8 must not fit D1 here");
+
+        // one closed-loop client per tenant: the interactive
+        // keyword-spotter keeps priority + the fair share, the vision
+        // tenant rides along best-effort
+        let specs = vec![
+            spec("kws", kws_cost.clone(), 2, 4),
+            spec("vision", vis_cost, 1, 1),
+        ];
+        let rep = replay_tenants(&specs, SCHEDULE, DispatchPolicy::Fifo, MAX_BATCH, SEED, REQUESTS);
+
+        // the no-swap counterfactual: identical workload, DS-CNN's
+        // residency cleared, so no switch-in ever stalls
+        let mut noswap = specs.clone();
+        noswap[0].cost.resident = false;
+        let base =
+            replay_tenants(&noswap, SCHEDULE, DispatchPolicy::Fifo, MAX_BATCH, SEED, REQUESTS);
+
+        let swaps: usize = rep.tenants.iter().map(|t| t.swaps).sum();
+        let stall: u64 = rep.tenants.iter().map(|t| t.swap_stall_ps).sum();
+        let noswap_swaps: usize = base.tenants.iter().map(|t| t.swaps).sum();
+        assert!(swaps > 0, "{name}: the pair must interleave and swap");
+        assert_eq!(noswap_swaps, 0, "{name}: the counterfactual must never swap");
+        let stall_share = stall as f64 / rep.last_done_ps.max(1) as f64;
+        let degradation = 1.0 - rep.goodput_rps / base.goodput_rps;
+
+        println!(
+            "{name}: {} switches, {swaps} swap-ins, {:.3} ms stalled ({:.1}% of the horizon) — \
+             goodput {:.1} req/s vs {:.1} req/s without swaps",
+            rep.switches,
+            stall as f64 / 1e9,
+            stall_share * 100.0,
+            rep.goodput_rps,
+            base.goodput_rps,
+        );
+        table.row(vec![
+            name.into(),
+            format!("{swaps}"),
+            format!("{:.3}", stall as f64 / 1e9),
+            format!("{:.1}%", stall_share * 100.0),
+            format!("{:.1}", rep.goodput_rps),
+            format!("{:.1}", base.goodput_rps),
+            format!("{:.2}%", degradation * 100.0),
+        ]);
+        points.push(DesignPoint {
+            name: name.into(),
+            swaps,
+            stall_share,
+            goodput: rep.goodput_rps,
+            goodput_noswap: base.goodput_rps,
+            degradation,
+        });
+    }
+
+    println!("\n== tenant interleaving: who pays for the swap? ==\n{}", table.render());
+
+    let (aimc, dimc) = (&points[0], &points[1]);
+    assert!(
+        aimc.stall_share > dimc.stall_share,
+        "{}: stall share {:.4} must exceed {}'s {:.4}",
+        aimc.name,
+        aimc.stall_share,
+        dimc.name,
+        dimc.stall_share
+    );
+    assert!(
+        dimc.degradation < aimc.degradation,
+        "{} degradation {:.4} must stay strictly below {} degradation {:.4}",
+        dimc.name,
+        dimc.degradation,
+        aimc.name,
+        aimc.degradation
+    );
+    assert!(dimc.goodput <= dimc.goodput_noswap && aimc.goodput <= aimc.goodput_noswap);
+    assert!(aimc.swaps > 0 && dimc.swaps > 0);
+
+    println!(
+        "under the same two-tenant workload, {} loses {:.2}% of its no-swap goodput to\n\
+         weight swaps while {} loses {:.2}% — the digital point's short weight-reload\n\
+         path makes tenant interleaving nearly free, the analog point's serialized\n\
+         1,152-row reload makes it the dominant cost.",
+        aimc.name,
+        aimc.degradation * 100.0,
+        dimc.name,
+        dimc.degradation * 100.0,
+    );
+}

@@ -16,8 +16,9 @@ use imcsim::report::{
 };
 use imcsim::runtime::{default_artifacts_dir, load_manifest};
 use imcsim::serve::{
-    bursty_arrivals, poisson_arrivals, simulate, slo_throughput, NetworkServeCost, Schedule,
-    ServeConfig, TraceKind,
+    bursty_arrivals, poisson_arrivals, replay_outcome_per_stage, rung_gap_ps, simulate,
+    simulate_per_stage, slo_throughput, slo_throughput_with, DispatchPolicy, NetworkServeCost,
+    Schedule, ServeConfig, StageTable, TenantSpec, TraceKind,
 };
 use imcsim::sim::NoiseSpec;
 use imcsim::sweep::{
@@ -25,7 +26,7 @@ use imcsim::sweep::{
     CostCache, PrecisionPoint, SweepGrid, SweepOptions, SweepSummary,
 };
 use imcsim::util::cli::{
-    parse_list, parse_serve_config, parse_threads, reject_unknown, Args, SweepAxes,
+    parse_list, parse_serve_config, parse_tenants, parse_threads, reject_unknown, Args, SweepAxes,
 };
 use imcsim::util::pool::parallel_map_with;
 
@@ -113,8 +114,8 @@ Exploration & serving:
       [--schedule serialized|layer-pipelined[,...]] [--batch N[,N...]]
       [--util F[,F...]] [--trace poisson|bursty] [--requests N]
       [--seed S] [--burst-period-us F] [--burst-duty PCT]
-      [--slo-ms F] [--csv FILE] [--threads N]
-                       multi-tenant serving simulation on the calibrated
+      [--slo-ms F] [--batching global|per-stage] [--csv FILE] [--threads N]
+                       single-tenant serving simulation on the calibrated
                        cost model (std-only): replay a seeded synthetic
                        arrival trace against each (design, network,
                        schedule, max-batch, utilization) cell with
@@ -123,8 +124,28 @@ Exploration & serving:
                        request, sustained req/s, and SLO-constrained
                        req/s under the --slo-ms p99 target. --util is
                        the offered load as a fraction of the schedule's
-                       bottleneck capacity; same --seed => byte-identical
-                       CSV for every --threads count
+                       bottleneck capacity; --batching per-stage rebatches
+                       at every pipeline stage (heterogeneous per-layer
+                       batches; layer-pipelined schedules only); same
+                       --seed => byte-identical CSV for every --threads
+                       count
+  serve --tenants NET[:key=val]...,NET[:key=val]... [--design NAME[,NAME...]]
+      [--schedule serialized|layer-pipelined[,...]]
+      [--policy fifo|priority|drr[,...]] [--batch N] [--requests N]
+      [--seed S] [--csv FILE] [--threads N]
+                       multi-tenant serving: all listed tenants time-share
+                       each design under one dispatch policy, with weight
+                       swap stalls/energy charged on tenant switch-ins
+                       (from the cost model's own weight-load terms),
+                       per-tenant SLO admission control (a tenant whose
+                       zero-queueing bound busts its SLO is rejected up
+                       front), and per-tenant latency/energy/goodput
+                       rows plus an aggregate '*' row per cell. Tenant
+                       keys: slo-ms, prio, share, util,
+                       trace=poisson|bursty|closed, period-us, duty,
+                       clients, think-us, name (see docs/COST_MODEL.md
+                       section 13). Same --seed => byte-identical CSV for
+                       every --threads count
   serve --sweep [--design NAME[,NAME...]] [--network <ae|resnet8|dscnn|mobilenet>[,...]]
       [--requests N] [--seed S] [--slo-ms F] [--csv FILE] [--threads N]
                        serving-configuration search: for each (design,
@@ -903,16 +924,20 @@ const SERVE_HEADERS: [&str; 16] = [
 fn cmd_serve(args: &Args) -> i32 {
     // `--sweep` switches to the serving-configuration search; it is
     // deliberately valueless, so it must branch before reject_unknown
-    // (which demands a value for every known option).
+    // (which demands a value for every known option). `--tenants`
+    // switches to the multi-tenant replay.
     if args.flag("sweep") || args.opt("sweep").is_some() {
         return cmd_serve_sweep(args);
+    }
+    if args.flag("tenants") || args.opt("tenants").is_some() {
+        return cmd_serve_tenants(args);
     }
     if let Err(e) = reject_unknown(
         args,
         "serve",
         &[
             "design", "network", "schedule", "batch", "util", "trace", "requests", "seed",
-            "burst-period-us", "burst-duty", "slo-ms", "csv", "threads",
+            "burst-period-us", "burst-duty", "slo-ms", "batching", "csv", "threads",
         ],
     ) {
         eprintln!("{e}");
@@ -1038,6 +1063,21 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let per_stage = match args.opt_or("batching", "global") {
+        "global" => false,
+        "per-stage" => true,
+        other => {
+            eprintln!("--batching must be global|per-stage (got '{other}')");
+            return 2;
+        }
+    };
+    if per_stage && schedules.iter().any(|&s| s != Schedule::LayerPipelined) {
+        eprintln!(
+            "--batching per-stage rebatches at pipeline stage boundaries and only \
+             applies to --schedule layer-pipelined"
+        );
+        return 2;
+    }
 
     // phase 1: one cost-model search per (design, network) pair, fanned
     // across pairs through the memoized cost cache (energy-optimal
@@ -1076,15 +1116,33 @@ fn cmd_serve(args: &Args) -> i32 {
         let cost = &costs[pi];
         // offered load: util × the schedule's amortized batch capacity
         let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
-        let mean_gap = ((interval / util).round() as u64).max(1);
+        let mean_gap = rung_gap_ps(interval, util);
         let arrivals = match trace {
             TraceKind::Poisson => poisson_arrivals(seed, mean_gap, requests),
             TraceKind::Bursty => {
                 bursty_arrivals(seed, mean_gap, requests, burst_period_ps, burst_duty)
             }
         };
-        let rep = simulate(cost, schedule, max_batch, &arrivals);
-        let slo_rps = slo_throughput(cost, schedule, max_batch, seed, requests, slo_ps);
+        let (rep, slo_rps) = if per_stage {
+            // heterogeneous per-layer batching: every pipeline stage
+            // rebatches independently, so the SLO ladder must replay
+            // through the per-stage engine too
+            let table = StageTable::new(cost, max_batch);
+            let rep = simulate_per_stage(&table, &arrivals);
+            let slo_rps = slo_throughput_with(
+                cost.min_service_ps(),
+                interval,
+                seed,
+                requests,
+                slo_ps,
+                |gap| replay_outcome_per_stage(&table, seed, requests, gap),
+            );
+            (rep, slo_rps)
+        } else {
+            let rep = simulate(cost, schedule, max_batch, &arrivals);
+            let slo_rps = slo_throughput(cost, schedule, max_batch, seed, requests, slo_ps);
+            (rep, slo_rps)
+        };
         vec![
             cost.system.clone(),
             cost.network.clone(),
@@ -1116,6 +1174,292 @@ fn cmd_serve(args: &Args) -> i32 {
         pairs.len(),
         t0.elapsed().as_secs_f64(),
         slo_ps as f64 / 1e9
+    );
+    if let Some(path) = args.opt("csv") {
+        if let Err(e) = std::fs::write(path, t.to_csv()) {
+            eprintln!("cannot write csv: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// The columns of the `serve --tenants` table/CSV, in output order:
+/// one row per (cell, tenant) plus an aggregate `*` row per cell. The
+/// cell-level ladder goodput and switch count appear only on the `*`
+/// row (`-` elsewhere); `-` likewise marks aggregates that have no
+/// meaningful pooled value (latency percentiles across tenants with
+/// different SLOs).
+const TENANT_HEADERS: [&str; 23] = [
+    "design", "schedule", "policy", "tenant", "network", "requests", "max_batch", "slo_ms",
+    "admitted", "served", "rejected", "batches", "swaps", "swap_stall_ps", "swap_fj", "p50_ps",
+    "p99_ps", "mean_ps", "fj_per_req", "slo_ok", "achieved_rps", "switches", "goodput_rps",
+];
+
+/// `serve --tenants`: the multi-tenant replay. Every listed tenant
+/// time-shares each design under each (schedule, policy) cell —
+/// weight-swap stalls/energy charged on switch-ins, SLO admission
+/// control up front, and the dispatch policy arbitrating ready
+/// tenants. Cells fan across threads through the memoized tenant
+/// store; rows are pure functions of their cell, so the table is
+/// byte-identical for every `--threads` count (the CI determinism job
+/// `cmp`s exactly that, for FIFO and DRR).
+fn cmd_serve_tenants(args: &Args) -> i32 {
+    let tenant_args = match args.opt("tenants") {
+        Some(raw) => match parse_tenants(raw) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => {
+            eprintln!("--tenants requires a value (a comma-separated tenant list)");
+            return 2;
+        }
+    };
+    if let Err(e) = reject_unknown(
+        args,
+        "serve --tenants",
+        &["tenants", "design", "schedule", "policy", "batch", "requests", "seed", "csv", "threads"],
+    ) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let threads = match parse_threads(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let all = table2_systems();
+    let systems: Vec<imcsim::arch::ImcSystem> = match args.opt("design") {
+        Some(raw) => {
+            let names = match parse_list::<String>(raw, "design") {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let mut picked = Vec::new();
+            for name in names {
+                match all.iter().find(|s| s.name == name) {
+                    Some(s) => picked.push(s.clone()),
+                    None => {
+                        eprintln!("unknown design '{name}'");
+                        return 2;
+                    }
+                }
+            }
+            picked
+        }
+        None => all,
+    };
+    let schedules: Vec<Schedule> =
+        match parse_list(args.opt_or("schedule", "layer-pipelined"), "schedule") {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    let policies: Vec<DispatchPolicy> = match parse_list(args.opt_or("policy", "fifo"), "policy") {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let max_batch: usize = match args.opt_or("batch", "8").parse() {
+        Ok(n) if n >= 1 => n,
+        _ => {
+            eprintln!("--batch must be a positive integer");
+            return 2;
+        }
+    };
+    let requests: usize = match args.opt_or("requests", "512").parse() {
+        Ok(n) if n > 0 => n,
+        _ => {
+            eprintln!("--requests must be a positive integer");
+            return 2;
+        }
+    };
+    let seed: u64 = match args.opt_or("seed", "42").parse() {
+        Ok(s) => s,
+        Err(_) => {
+            eprintln!("--seed must be an unsigned integer");
+            return 2;
+        }
+    };
+    // resolve each tenant's network once (distinct tokens, first-seen
+    // order) so repeated tenants of one network share a single search
+    let mut net_tokens: Vec<String> = Vec::new();
+    let mut net_index: Vec<usize> = Vec::with_capacity(tenant_args.len());
+    let mut networks: Vec<imcsim::workload::Network> = Vec::new();
+    for a in &tenant_args {
+        let net = match a.network.as_str() {
+            "ae" | "autoencoder" => imcsim::workload::deep_autoencoder(),
+            "resnet8" => imcsim::workload::resnet8(),
+            "dscnn" | "ds-cnn" => imcsim::workload::ds_cnn(),
+            "mobilenet" => imcsim::workload::mobilenet_v1(),
+            other => {
+                eprintln!("--tenants: network must be ae|resnet8|dscnn|mobilenet (got '{other}')");
+                return 2;
+            }
+        };
+        match net_tokens.iter().position(|t| *t == a.network) {
+            Some(i) => net_index.push(i),
+            None => {
+                net_index.push(net_tokens.len());
+                net_tokens.push(a.network.clone());
+                networks.push(net);
+            }
+        }
+    }
+
+    // phase 1: one cost-model search per (design, distinct network)
+    // pair — the same fan `serve` uses
+    let t0 = Instant::now();
+    let cache = CostCache::new();
+    let pairs: Vec<(usize, usize)> = systems
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| (0..networks.len()).map(move |ni| (si, ni)))
+        .collect();
+    let costs: Vec<NetworkServeCost> = parallel_map_with(&pairs, threads, |&(si, ni)| {
+        let r = search_network_with(
+            &networks[ni],
+            &systems[si],
+            &DseOptions::default(),
+            &cache,
+            1,
+        );
+        NetworkServeCost::from_result(&r, &systems[si])
+    });
+
+    // phase 2: one multi-tenant replay + goodput ladder per (design,
+    // schedule, policy) cell, through the memoized tenant store
+    let mut cells: Vec<(usize, Schedule, DispatchPolicy)> = Vec::new();
+    for si in 0..systems.len() {
+        for &schedule in &schedules {
+            for &policy in &policies {
+                cells.push((si, schedule, policy));
+            }
+        }
+    }
+    let cell_rows: Vec<Vec<Vec<String>>> =
+        parallel_map_with(&cells, threads, |&(si, schedule, policy)| {
+            let specs: Vec<TenantSpec> = tenant_args
+                .iter()
+                .enumerate()
+                .map(|(k, a)| {
+                    let cost = costs[si * networks.len() + net_index[k]].clone();
+                    a.into_spec(cost, schedule, max_batch, tenant_args.len())
+                })
+                .collect();
+            let (out, goodput) =
+                cache.tenant_point(&specs, schedule, policy, max_batch, seed, requests);
+            let design = &systems[si].name;
+            let mut rows = Vec::with_capacity(specs.len() + 1);
+            for (spec, p) in specs.iter().zip(out.per_tenant.iter()) {
+                rows.push(vec![
+                    design.clone(),
+                    schedule.to_string(),
+                    policy.to_string(),
+                    spec.name.clone(),
+                    spec.cost.network.clone(),
+                    requests.to_string(),
+                    max_batch.to_string(),
+                    (spec.slo_ps as f64 / 1e9).to_string(),
+                    p.admitted.to_string(),
+                    p.served.to_string(),
+                    p.rejected.to_string(),
+                    p.batches.to_string(),
+                    p.swaps.to_string(),
+                    p.swap_stall_ps.to_string(),
+                    p.swap_fj.to_string(),
+                    p.p50_ps.to_string(),
+                    p.p99_ps.to_string(),
+                    p.mean_ps.to_string(),
+                    p.fj_per_req.to_string(),
+                    p.slo_ok.to_string(),
+                    p.achieved_rps.to_string(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+            // the aggregate row: sums where pooling is meaningful, the
+            // cell-global switch count and ladder goodput, `-` elsewhere
+            let served: usize = out.per_tenant.iter().map(|p| p.served).sum();
+            let rejected: usize = out.per_tenant.iter().map(|p| p.rejected).sum();
+            let batches: usize = out.per_tenant.iter().map(|p| p.batches).sum();
+            let swaps: usize = out.per_tenant.iter().map(|p| p.swaps).sum();
+            let stall: u64 = out.per_tenant.iter().map(|p| p.swap_stall_ps).sum();
+            let swap_fj: f64 = out.per_tenant.iter().map(|p| p.swap_fj).sum();
+            let slo_ok: usize = out.per_tenant.iter().map(|p| p.slo_ok).sum();
+            let admitted = out.per_tenant.iter().filter(|p| p.admitted).count();
+            let achieved = if out.last_done_ps == 0 {
+                0.0
+            } else {
+                served as f64 * 1e12 / out.last_done_ps as f64
+            };
+            rows.push(vec![
+                design.clone(),
+                schedule.to_string(),
+                policy.to_string(),
+                "*".into(),
+                "*".into(),
+                requests.to_string(),
+                max_batch.to_string(),
+                "-".into(),
+                admitted.to_string(),
+                served.to_string(),
+                rejected.to_string(),
+                batches.to_string(),
+                swaps.to_string(),
+                stall.to_string(),
+                swap_fj.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                slo_ok.to_string(),
+                achieved.to_string(),
+                out.switches.to_string(),
+                goodput.to_string(),
+            ]);
+            rows
+        });
+
+    let mut t = Table::new(&TENANT_HEADERS);
+    for rows in cell_rows {
+        for row in rows {
+            t.row(row);
+        }
+    }
+    println!("{}", t.render());
+    let s = cache.stats();
+    println!(
+        "{} cells x {} tenants ({} searches) in {:.2}s — seed {seed}, {requests} \
+         requests/tenant, batch <= {max_batch}",
+        cells.len(),
+        tenant_args.len(),
+        pairs.len(),
+        t0.elapsed().as_secs_f64(),
+    );
+    println!(
+        "serve cache: {} serve entries, {} hits / {} replays ({} duplicated), \
+         {} of {} requests replayed ({:.1}x replay reduction)",
+        s.serve_entries,
+        s.serve_hits,
+        s.serve_replays,
+        s.duplicate_serves,
+        s.serve_replayed_reqs,
+        s.serve_naive_reqs,
+        s.serve_replay_reduction()
     );
     if let Some(path) = args.opt("csv") {
         if let Err(e) = std::fs::write(path, t.to_csv()) {

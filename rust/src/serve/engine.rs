@@ -73,6 +73,14 @@ pub struct StageTable {
     fj: Vec<f64>,
     /// `reload_fj[b-1]`: weight-reload share of `fj[b-1]` (fJ).
     reload_fj: Vec<f64>,
+    /// Per-stage non-weight energy per request (fJ) — the per-layer
+    /// split the per-stage batcher charges stage by stage.
+    layer_base_fj: Vec<f64>,
+    /// Per-stage weight-traffic energy (fJ), charged once per *stage
+    /// batch* on non-resident networks under per-stage batching.
+    layer_weight_fj: Vec<f64>,
+    /// The cost's D1-residency verdict.
+    resident: bool,
     /// Number of layer stages.
     n_stages: usize,
     /// Batch-size cap the tables cover.
@@ -89,6 +97,9 @@ impl StageTable {
             reload_fj: (1..=max_batch)
                 .map(|b| cost.reload_fj_per_request(b))
                 .collect(),
+            layer_base_fj: cost.layers.iter().map(|l| l.base_fj).collect(),
+            layer_weight_fj: cost.layers.iter().map(|l| l.weight_fj).collect(),
+            resident: cost.resident,
             n_stages: cost.n_layers(),
             max_batch,
         }
@@ -98,6 +109,38 @@ impl StageTable {
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
+
+    /// Number of layer stages the tables cover.
+    pub fn n_stages(&self) -> usize {
+        self.n_stages
+    }
+
+    /// Batch-`batch` service time of stage `l` (ps) — the precomputed
+    /// [`NetworkServeCost::layer_time_ps`].
+    pub fn stage_ps(&self, batch: usize, l: usize) -> u64 {
+        self.stages[batch - 1][l]
+    }
+
+    /// Energy charged per request in a batch of `batch` (fJ) — the
+    /// precomputed [`NetworkServeCost::fj_per_request`].
+    pub fn fj_at(&self, batch: usize) -> f64 {
+        self.fj[batch - 1]
+    }
+
+    /// Weight-reload share of [`StageTable::fj_at`] (fJ).
+    pub fn reload_fj_at(&self, batch: usize) -> f64 {
+        self.reload_fj[batch - 1]
+    }
+}
+
+/// A ladder rung's mean arrival gap (ps) at utilization `util` of a
+/// per-request capacity `interval` (ps/request): `(interval/util)`
+/// rounded to the integer timeline, floored at 1 ps. One helper so the
+/// ladder, the config search's bound pricing, the tenant ladder and
+/// the CLI all land on bit-identical gaps (gap equality is what lets
+/// the memoized serve store collapse their replays onto one key).
+pub fn rung_gap_ps(interval: f64, util: f64) -> u64 {
+    ((interval / util).round() as u64).max(1)
 }
 
 /// Replay an arrival trace (ps, nondecreasing) against a serving cost
@@ -193,6 +236,112 @@ pub fn simulate_with_table(
         latency: LatencyRecord::from_samples(latencies, energy_fj, reload_fj, last_done),
         batches,
         achieved_rps,
+    }
+}
+
+/// Replay an arrival trace under the layer-pipelined schedule with
+/// **per-stage heterogeneous batching**: each layer stage runs its own
+/// greedy FIFO batcher over the stream of requests reaching it, instead
+/// of one global batch `b` flowing through every stage. A fast stage
+/// drains its queue in small batches while a slow stage behind it
+/// accumulates larger ones — the batch size adapts to queue contents
+/// stage by stage.
+///
+/// Semantics, stage by stage (a cascade of single-server batch queues):
+/// the input of stage 0 is the arrival trace; the input of stage `l+1`
+/// is stage `l`'s completion stream. Within a stage, whenever the stage
+/// frees it takes every request already waiting (in FIFO order, i.e.
+/// index order — completion times are nondecreasing in index, see
+/// below) up to the table's batch cap, serves them for the stage's
+/// batch-`b` time, and all `b` requests exit together. FIFO order is
+/// well-defined because each stage preserves index order: batch starts
+/// are nondecreasing (the stage's free time only grows and inputs are
+/// nondecreasing), so outputs are nondecreasing too, by induction from
+/// the sorted arrival trace.
+///
+/// Energy is charged per stage batch from the per-layer split: a
+/// batch of `b` at stage `l` costs `b · base_fj[l]`, plus the stage's
+/// full `weight_fj[l]` once per batch when the network is not
+/// D1-resident (the same "reload once per batch, amortized over the
+/// batch" rule as the global path — applied per stage, so stages that
+/// batch better amortize better). On resident networks there is no
+/// reload term, and with the batch cap at 1 every stage serves
+/// singleton batches: both the timeline and the energy sum collapse to
+/// the global batch-1 pipelined replay (test-locked below).
+pub fn simulate_per_stage(table: &StageTable, arrivals_ps: &[u64]) -> ServeReport {
+    let max_batch = table.max_batch;
+    let n = arrivals_ps.len();
+    let mut energy_fj = 0.0;
+    let mut reload_fj = 0.0;
+    let mut batches = 0usize; // stage-0 dispatches, comparable to the global count
+    let mut times: Vec<u64> = arrivals_ps.to_vec();
+    for l in 0..table.n_stages {
+        let mut free = 0u64;
+        let mut out = Vec::with_capacity(n);
+        let mut i = 0usize;
+        while i < n {
+            let start = free.max(times[i]);
+            let mut b = 1usize;
+            while i + b < n && b < max_batch && times[i + b] <= start {
+                b += 1;
+            }
+            let done = start + table.stages[b - 1][l];
+            free = done;
+            for _ in 0..b {
+                out.push(done);
+            }
+            energy_fj += b as f64 * table.layer_base_fj[l];
+            if !table.resident {
+                energy_fj += table.layer_weight_fj[l];
+                reload_fj += table.layer_weight_fj[l];
+            }
+            if l == 0 {
+                batches += 1;
+            }
+            i += b;
+        }
+        times = out;
+    }
+    let mut latencies = Vec::with_capacity(n);
+    let mut last_done = 0u64;
+    for (arr, done) in arrivals_ps.iter().zip(times.iter()) {
+        latencies.push(done - arr);
+        last_done = last_done.max(*done);
+    }
+    let achieved_rps = if last_done > 0 {
+        n as f64 * 1e12 / last_done as f64
+    } else {
+        0.0
+    };
+    ServeReport {
+        schedule: Schedule::LayerPipelined,
+        max_batch,
+        latency: LatencyRecord::from_samples(latencies, energy_fj, reload_fj, last_done),
+        batches,
+        achieved_rps,
+    }
+}
+
+/// [`replay_outcome`] under per-stage heterogeneous batching: replay
+/// the seeded Poisson trace through [`simulate_per_stage`] and condense
+/// the report. Pure function of its arguments — the ladder oracle the
+/// CLI's `--batching per-stage` mode feeds to
+/// [`slo_throughput_with`] (the ladder's bounds stay admissible: every
+/// request still traverses all stages, so its latency is at least
+/// `Σ_l t_l(1) = min_service_ps`, and the last completion still trails
+/// the last arrival by at least that much).
+pub fn replay_outcome_per_stage(
+    table: &StageTable,
+    seed: u64,
+    n_requests: usize,
+    mean_gap_ps: u64,
+) -> ServeOutcome {
+    let arrivals = poisson_arrivals(seed, mean_gap_ps, n_requests);
+    let rep = simulate_per_stage(table, &arrivals);
+    ServeOutcome {
+        achieved_rps: rep.achieved_rps,
+        p99_ps: rep.latency.percentile_ps(99.0),
+        fj_per_req: rep.latency.fj_per_request(),
     }
 }
 
@@ -331,7 +480,7 @@ pub fn slo_throughput_with<F: FnMut(u64) -> ServeOutcome>(
     let draws = exp_draws(seed, n_requests);
     let mut best = 0.0f64;
     for &util in SLO_UTILS.iter().rev() {
-        let mean_gap = ((interval / util).round() as u64).max(1);
+        let mean_gap = rung_gap_ps(interval, util);
         if best > 0.0 {
             let floor_ps = last_arrival_ps(&draws, mean_gap).saturating_add(min_service_ps);
             let rps_ub = n_requests as f64 * 1e12 / floor_ps as f64;
@@ -362,7 +511,7 @@ pub fn slo_throughput_unpruned(
     let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
     let mut best = 0.0;
     for &util in SLO_UTILS.iter() {
-        let mean_gap = ((interval / util).round() as u64).max(1);
+        let mean_gap = rung_gap_ps(interval, util);
         let arrivals = poisson_arrivals(seed, mean_gap, n_requests);
         let rep = simulate(cost, schedule, max_batch, &arrivals);
         if rep.latency.percentile_ps(99.0) <= slo_ps {
@@ -392,7 +541,7 @@ pub struct ServeSweepPoint {
 pub fn sweep_measurement_gap_ps(cost: &NetworkServeCost) -> u64 {
     let interval = cost.bottleneck_ps(SWEEP_SERVE_SCHEDULE, SWEEP_SERVE_MAX_BATCH) as f64
         / SWEEP_SERVE_MAX_BATCH as f64;
-    ((interval / SWEEP_SERVE_UTIL).round() as u64).max(1)
+    rung_gap_ps(interval, SWEEP_SERVE_UTIL)
 }
 
 /// Evaluate the canonical serving operating point of a serving cost
@@ -708,5 +857,80 @@ mod tests {
             2_000_000_000,
         );
         assert_eq!(p.rps.to_bits(), rps.to_bits());
+    }
+
+    #[test]
+    fn per_stage_batch_cap_one_matches_the_global_pipelined_replay() {
+        // with singleton batches every stage serves requests one by one
+        // in arrival order — exactly the global batch-1 pipeline. The
+        // fixture's fJ terms are integer-valued, so the energy sums are
+        // exact and the whole report compares bit-identically.
+        for resident in [true, false] {
+            let cost = synthetic_cost(resident);
+            let table = StageTable::new(&cost, 1);
+            let arrivals = poisson_arrivals(42, 120_000, 1_000);
+            let per_stage = simulate_per_stage(&table, &arrivals);
+            let global = simulate_with_table(&table, Schedule::LayerPipelined, &arrivals);
+            assert_eq!(per_stage, global, "resident={resident}");
+        }
+    }
+
+    #[test]
+    fn per_stage_batching_adapts_the_batch_size_stage_by_stage() {
+        // stage 0 is fast (10 ns·b) and keeps up with the 20 ns arrival
+        // spacing in singleton batches; stage 1 is slow (100 ns·b) and
+        // accumulates a 3-batch while serving its first request.
+        let cost = NetworkServeCost {
+            system: "synthetic".into(),
+            network: "fast_then_slow".into(),
+            layers: vec![
+                LayerServeCost {
+                    mvm_cycles: 10.0,
+                    load_cycles: 0.0,
+                    mem_cycles: 0.0,
+                    weight_fj: 0.0,
+                    base_fj: 1.0,
+                },
+                LayerServeCost {
+                    mvm_cycles: 100.0,
+                    load_cycles: 0.0,
+                    mem_cycles: 0.0,
+                    weight_fj: 0.0,
+                    base_fj: 1.0,
+                },
+            ],
+            t_cycle_ns: 1.0,
+            resident: true,
+        };
+        let table = StageTable::new(&cost, 4);
+        let rep = simulate_per_stage(&table, &[0, 20_000, 40_000, 60_000]);
+        // stage 0 emits at 10/30/50/70 ns; stage 1 serves {1} then {3}:
+        // completions 110 ns and 410 ns (110 + 3·100)
+        assert_eq!(rep.batches, 4); // four singleton dispatches at stage 0
+        assert_eq!(rep.latency.last_completion_ps, 410_000);
+        assert_eq!(rep.latency.percentile_ps(25.0), 110_000);
+        assert_eq!(rep.latency.percentile_ps(100.0), 410_000 - 20_000);
+    }
+
+    #[test]
+    fn per_stage_latency_never_beats_the_zero_queueing_bound() {
+        for resident in [true, false] {
+            let cost = synthetic_cost(resident);
+            let table = StageTable::new(&cost, 8);
+            let arrivals = poisson_arrivals(7, 80_000, 512);
+            let rep = simulate_per_stage(&table, &arrivals);
+            assert!(rep.latency.percentile_ps(0.0) >= cost.min_service_ps());
+        }
+    }
+
+    #[test]
+    fn per_stage_replay_is_deterministic() {
+        let cost = synthetic_cost(false);
+        let table = StageTable::new(&cost, 8);
+        let a = replay_outcome_per_stage(&table, 42, 512, 90_000);
+        let b = replay_outcome_per_stage(&table, 42, 512, 90_000);
+        assert_eq!(a.achieved_rps.to_bits(), b.achieved_rps.to_bits());
+        assert_eq!(a.p99_ps, b.p99_ps);
+        assert_eq!(a.fj_per_req.to_bits(), b.fj_per_req.to_bits());
     }
 }

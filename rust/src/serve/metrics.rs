@@ -61,6 +61,13 @@ impl LatencyRecord {
         self.samples_ps[rank.clamp(1, n) - 1]
     }
 
+    /// Number of recorded latencies `≤ bound_ps` — the SLO-met count a
+    /// tenant's goodput is computed from. Binary search over the sorted
+    /// multiset; exact, like the percentiles.
+    pub fn count_within(&self, bound_ps: u64) -> usize {
+        self.samples_ps.partition_point(|&s| s <= bound_ps)
+    }
+
     /// Mean latency (ps, truncated integer division; 0 when empty).
     pub fn mean_ps(&self) -> u64 {
         let n = self.samples_ps.len() as u128;
@@ -233,5 +240,16 @@ mod tests {
         let r = LatencyRecord::from_samples(vec![1, 2, 3, 4], 100.0, 20.0, 4);
         assert_eq!(r.fj_per_request(), 25.0);
         assert_eq!(r.reload_fj_per_request(), 5.0);
+    }
+
+    #[test]
+    fn count_within_counts_the_slo_met_prefix() {
+        let r = LatencyRecord::from_samples(vec![4, 1, 3, 2, 2], 0.0, 0.0, 4);
+        assert_eq!(r.count_within(0), 0);
+        assert_eq!(r.count_within(1), 1);
+        assert_eq!(r.count_within(2), 3); // ties below the bound all count
+        assert_eq!(r.count_within(3), 4);
+        assert_eq!(r.count_within(100), 5);
+        assert_eq!(LatencyRecord::default().count_within(7), 0);
     }
 }

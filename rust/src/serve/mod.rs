@@ -30,24 +30,40 @@
 //!   sorted sample multiset plus energy accounting, with an
 //!   associative order-invariant merge (supersedes the retired
 //!   `coordinator::stats::LatencyStats`).
+//! * [`tenant`] — true multi-tenancy: several [`TenantSpec`]s
+//!   time-sharing one accelerator, with weight-swap stall/energy
+//!   charged on switches to resident tenants
+//!   ([`NetworkServeCost::swap_ps`]/[`NetworkServeCost::swap_fj`]),
+//!   per-tenant SLO admission control on the zero-queueing bound,
+//!   FIFO / priority / deficit-round-robin dispatch, closed-loop
+//!   (think-time) tenants beside the open traces, and a
+//!   goodput-under-SLO ladder with the same admissible-bound pruning.
 //!
 //! The cost semantics, arrival models, schedule contract and the
 //! determinism argument are written down in `docs/COST_MODEL.md` §11;
 //! the replay memoization, the rung/config pruning bounds and their
-//! admissibility proofs are §12.
+//! admissibility proofs are §12; the multi-tenant swap-cost equations,
+//! the admission bound and the dispatch-policy determinism argument
+//! are §13.
 
 pub mod engine;
 pub mod metrics;
 pub mod search;
+pub mod tenant;
 pub mod trace;
 
 pub use engine::{
-    replay_outcome, simulate, simulate_with_table, slo_throughput, slo_throughput_with,
-    sweep_serve_metrics, sweep_serve_point, ServeOutcome, ServeReport, ServeSweepPoint, StageTable,
+    replay_outcome, replay_outcome_per_stage, rung_gap_ps, simulate, simulate_per_stage,
+    simulate_with_table, slo_throughput, slo_throughput_with, sweep_serve_metrics,
+    sweep_serve_point, ServeOutcome, ServeReport, ServeSweepPoint, StageTable,
 };
 pub use metrics::LatencyRecord;
 pub use search::{best_config, BestConfig, SERVE_SEARCH_BATCHES};
-pub use trace::{bursty_arrivals, exp_sample, poisson_arrivals, TraceKind};
+pub use tenant::{
+    replay_tenants, replay_tenants_outcome, tenant_slo_goodput, DispatchPolicy, MultiTenantReport,
+    TenantArg, TenantLoad, TenantLoadArg, TenantOutcome, TenantReport, TenantSpec,
+};
+pub use trace::{bursty_arrivals, exp_sample, poisson_arrivals, ClosedLoopClients, TraceKind};
 
 use crate::arch::ImcSystem;
 use crate::dse::NetworkResult;
@@ -280,6 +296,31 @@ impl NetworkServeCost {
     /// batch-independent by construction.
     pub fn min_service_ps(&self) -> u64 {
         self.stage_times_ps(1).iter().sum()
+    }
+
+    /// Weight-swap stall (ps): the time to stream this network's full
+    /// weight set back into D1 after another tenant evicted it — the
+    /// per-layer weight-load cycles (the `load_cycles` the batch-`b`
+    /// roofline pays once per batch) summed over the network and priced
+    /// at the macro cycle time, each layer on the same
+    /// round-to-ps-floor-1 timeline as [`NetworkServeCost::layer_time_ps`].
+    /// Charged by the multi-tenant engine when dispatch switches to a
+    /// *resident* tenant that has been dispatched before (its weights
+    /// were in D1 and are gone now); non-resident tenants already pay
+    /// streaming reloads on every batch, so switching adds nothing.
+    pub fn swap_ps(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|c| ((c.load_cycles * self.t_cycle_ns * 1e3).round() as u64).max(1))
+            .sum()
+    }
+
+    /// Weight-swap energy (fJ): the full per-inference weight traffic
+    /// ([`LayerServeCost::weight_fj`] summed over layers) — the reload
+    /// term a resident tenant never pays in steady state, charged once
+    /// per tenant switch-in by the multi-tenant engine.
+    pub fn swap_fj(&self) -> f64 {
+        self.layers.iter().map(|c| c.weight_fj).sum()
     }
 }
 

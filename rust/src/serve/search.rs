@@ -22,8 +22,8 @@
 //! bounds alone.
 
 use super::engine::{
-    exp_draws, last_arrival_ps, replay_outcome, slo_throughput_with, ServeOutcome, StageTable,
-    SLO_UTILS,
+    exp_draws, last_arrival_ps, replay_outcome, rung_gap_ps, slo_throughput_with, ServeOutcome,
+    StageTable, SLO_UTILS,
 };
 use super::{NetworkServeCost, Schedule};
 
@@ -101,7 +101,7 @@ pub fn best_config_with<F: FnMut(Schedule, usize) -> f64>(
         if let Some(ref b) = best {
             if b.rps > 0.0 {
                 let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
-                let top_gap = ((interval / top_util).round() as u64).max(1);
+                let top_gap = rung_gap_ps(interval, top_util);
                 let floor_ps = last_arrival_ps(&draws, top_gap).saturating_add(min_service);
                 let rps_ub = n_requests as f64 * 1e12 / floor_ps as f64;
                 if rps_ub <= b.rps {

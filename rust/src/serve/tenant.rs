@@ -1,0 +1,1383 @@
+//! Multi-tenant serving: several networks time-sharing one
+//! accelerator, with weight-swap costs, per-tenant SLO admission
+//! control, and pluggable dispatch policies.
+//!
+//! A [`TenantSpec`] names a network's serving cost
+//! ([`NetworkServeCost`]), its load source ([`TenantLoad`]: open
+//! Poisson/bursty or closed-loop think-time clients), its p99 SLO, and
+//! its priority/fair-share weight. [`replay_tenants`] replays all
+//! tenants' seeded traces against **one** accelerator under a
+//! [`DispatchPolicy`]:
+//!
+//! * **Weight swaps** — dispatching a *resident* tenant after another
+//!   tenant ran evicts-then-reloads its weights: the batch is delayed
+//!   by [`NetworkServeCost::swap_ps`] and charged
+//!   [`NetworkServeCost::swap_fj`] (both derived from the cost model's
+//!   own weight-load/weight-traffic terms). Non-resident tenants pay
+//!   streaming reloads on every batch already, so a switch adds
+//!   nothing for them — this is exactly the asymmetry that makes
+//!   tenant interleaving brutal on weight-stationary analog macros and
+//!   nearly free on dataflow-flexible digital ones.
+//! * **Admission control** — a tenant whose zero-queueing bound
+//!   [`NetworkServeCost::min_service_ps`] already busts its SLO is
+//!   rejected up front: *no* schedule can serve any of its requests
+//!   within the SLO (the bound is admissible), so its whole trace is
+//!   refused rather than wasting accelerator time on guaranteed
+//!   misses. Rejection is decided per tenant from `(cost, slo)` only —
+//!   deterministic, load-independent, and monotone in the SLO.
+//! * **Dispatch** — whenever the accelerator's entry frees, the engine
+//!   dispatches one tenant's greedy FIFO batch. [`DispatchPolicy`]
+//!   picks *which* tenant among those ready at the earliest feasible
+//!   start: global FIFO (earliest waiting request), strict priority
+//!   (highest [`TenantSpec::priority`]), or deficit-round-robin
+//!   (cyclic scan with per-tenant batch quanta of
+//!   [`TenantSpec::share`] requests). Every rule is a total order on
+//!   the candidates, so the replay is a pure function of its inputs —
+//!   the CI `cmp`s hold the byte-identical contract across repeats
+//!   and thread counts.
+//!
+//! [`tenant_slo_goodput`] is the multi-tenant analogue of the SLO
+//! ladder: Poisson load at each utilization rung of
+//! [`SLO_UTILS`] split evenly across tenants, goodput (requests
+//! completing within their tenant's SLO, per second) per rung, best
+//! rung wins — pruned with the same admissible bounds and test-locked
+//! bit-identical to the unpruned reference.
+
+use super::engine::{exp_draws, last_arrival_ps, rung_gap_ps, StageTable, SLO_UTILS};
+use super::metrics::LatencyRecord;
+use super::trace::{bursty_arrivals, poisson_arrivals, ClosedLoopClients};
+use super::{NetworkServeCost, Schedule};
+
+/// Which tenant gets the accelerator when several are ready.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DispatchPolicy {
+    /// Global FIFO: the tenant whose head request arrived earliest
+    /// (ties by tenant index).
+    Fifo,
+    /// Strict priority: the highest [`TenantSpec::priority`] wins;
+    /// equal priorities fall back to the FIFO rule.
+    Priority,
+    /// Deficit round-robin: a cyclic scan over the ready tenants, each
+    /// dispatch capped at the tenant's accumulated deficit plus its
+    /// [`TenantSpec::share`] quantum — long-run service is shared in
+    /// proportion to the shares, and no backlogged tenant starves.
+    DeficitRoundRobin,
+}
+
+impl DispatchPolicy {
+    /// Canonical lowercase name (CLI/CSV token).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DispatchPolicy::Fifo => "fifo",
+            DispatchPolicy::Priority => "priority",
+            DispatchPolicy::DeficitRoundRobin => "drr",
+        }
+    }
+}
+
+impl std::str::FromStr for DispatchPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "fifo" => Ok(DispatchPolicy::Fifo),
+            "priority" => Ok(DispatchPolicy::Priority),
+            "drr" | "fair-share" => Ok(DispatchPolicy::DeficitRoundRobin),
+            other => Err(format!(
+                "unknown dispatch policy '{other}' (fifo|priority|drr)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for DispatchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A tenant's load source. `Copy + Eq + Hash` because the load is part
+/// of the sweep cache's multi-tenant replay key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TenantLoad {
+    /// Open Poisson arrivals at the given mean inter-arrival gap (ps).
+    Poisson {
+        /// Mean inter-arrival gap (ps).
+        mean_gap_ps: u64,
+    },
+    /// Open bursty (on/off duty-cycle) arrivals — the
+    /// [`bursty_arrivals`] generator's parameters.
+    Bursty {
+        /// Long-run mean inter-arrival gap (ps).
+        mean_gap_ps: u64,
+        /// Burst period (ps).
+        period_ps: u64,
+        /// On-window share of the period, percent (`1..=100`).
+        duty_pct: u64,
+    },
+    /// Closed-loop think-time clients ([`ClosedLoopClients`]): a fixed
+    /// pool, each resubmitting one think gap after its completion —
+    /// offered load self-throttles when the accelerator backs up.
+    Closed {
+        /// Client-pool size (max outstanding requests).
+        clients: usize,
+        /// Mean think gap (ps).
+        think_ps: u64,
+    },
+}
+
+/// One tenant of a multi-tenant replay: a network's serving cost plus
+/// its load, SLO and scheduling weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Display name (table/CSV label; not part of any cache key).
+    pub name: String,
+    /// The tenant's serving cost on the shared accelerator.
+    pub cost: NetworkServeCost,
+    /// The tenant's load source.
+    pub load: TenantLoad,
+    /// p99 latency SLO (ps) — the admission bound and the goodput
+    /// criterion.
+    pub slo_ps: u64,
+    /// Priority under [`DispatchPolicy::Priority`] (higher wins).
+    pub priority: u32,
+    /// Fair-share weight under [`DispatchPolicy::DeficitRoundRobin`]:
+    /// the per-turn batch quantum in requests (floored at 1).
+    pub share: u32,
+}
+
+/// The per-tenant trace seed: tenant `k` of a seed-`s` replay draws
+/// from `s + k·φ64` (wrapping; `φ64` is the 64-bit golden-ratio
+/// constant, the standard splitmix increment), so tenant streams are
+/// decorrelated while tenant 0 keeps the bare seed — a 1-tenant replay
+/// is bit-identical to the single-tenant engine on the same seed.
+pub fn tenant_seed(seed: u64, k: usize) -> u64 {
+    seed.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// The per-tenant mean arrival gap (ps) at which `n_tenants` equal
+/// tenants together offer `util`× one tenant's bottleneck capacity:
+/// each tenant gets `util/n_tenants` of its own solo capacity
+/// `interval = bottleneck/max_batch`. Built on the shared
+/// [`rung_gap_ps`] rounding so a measurement replay at
+/// `util = 0.8` and the goodput ladder's 0.8 rung land on the same
+/// integer gap — one memoized replay serves both.
+pub fn tenant_gap_ps(
+    cost: &NetworkServeCost,
+    schedule: Schedule,
+    max_batch: usize,
+    n_tenants: usize,
+    util: f64,
+) -> u64 {
+    let interval = cost.bottleneck_ps(schedule, max_batch) as f64 / max_batch as f64;
+    rung_gap_ps(interval * n_tenants as f64, util)
+}
+
+/// One tenant's slice of a [`MultiTenantReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantReport {
+    /// Tenant display name.
+    pub name: String,
+    /// Network name.
+    pub network: String,
+    /// The tenant's SLO (ps).
+    pub slo_ps: u64,
+    /// Whether the tenant passed admission control.
+    pub admitted: bool,
+    /// Requests served (0 when rejected).
+    pub served: usize,
+    /// Requests rejected at admission (the tenant's whole trace when
+    /// its zero-queueing bound busts the SLO; 0 otherwise).
+    pub rejected: usize,
+    /// Latency/energy record of the served requests (swap stalls and
+    /// swap energy included).
+    pub latency: LatencyRecord,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Weight swaps charged (switch-ins of this resident tenant).
+    pub swaps: usize,
+    /// Total swap stall (ps) this tenant's batches waited for.
+    pub swap_stall_ps: u64,
+    /// Total swap energy (fJ) charged to this tenant.
+    pub swap_fj: f64,
+    /// Served requests that completed within the tenant's SLO.
+    pub slo_ok: usize,
+    /// The tenant's served throughput (req/s) over the shared horizon
+    /// (served · 10¹² / global last completion).
+    pub achieved_rps: f64,
+}
+
+/// The outcome of one multi-tenant replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiTenantReport {
+    /// Per-tenant slices, in spec order.
+    pub tenants: Vec<TenantReport>,
+    /// Completion time of the last served request (ps).
+    pub last_done_ps: u64,
+    /// Tenant switch-ins (dispatches whose tenant differs from the
+    /// previous dispatch's; swaps are the charged subset).
+    pub switches: usize,
+    /// Goodput (req/s): requests completing within their tenant's SLO,
+    /// over the shared horizon.
+    pub goodput_rps: f64,
+}
+
+/// Per-tenant engine state during a replay.
+struct TenantState {
+    table: StageTable,
+    n_stages: usize,
+    swap_ps: u64,
+    swap_fj: f64,
+    resident: bool,
+    admitted: bool,
+    pending: Vec<u64>,
+    head: usize,
+    clients: Option<ClosedLoopClients>,
+    to_spawn: usize,
+    deficit: u64,
+    latencies: Vec<u64>,
+    energy_fj: f64,
+    reload_fj: f64,
+    batches: usize,
+    swaps: usize,
+    swap_stall_ps: u64,
+    swap_fj_total: f64,
+    rejected: usize,
+    last_done: u64,
+}
+
+/// Replay `n_requests` per tenant against one shared accelerator.
+///
+/// The engine is the single-tenant discrete-event loop generalized to
+/// a tenant set: whenever the dispatch point frees, every backlogged
+/// tenant's earliest feasible start is computed — the accelerator's
+/// free time for the incumbent (pipeline stage 0 when layer-pipelined,
+/// so the incumbent keeps overlapping its own batches), the *drain*
+/// time (last completion) for everyone else — and the policy picks one
+/// tenant among those tied at the earliest start. Its greedy FIFO
+/// batch (arrivals ≤ the start, capped at `max_batch`, and at the DRR
+/// quantum under fair-share) is then served under `schedule`.
+///
+/// **Swap charging.** If the dispatch switches tenants and the
+/// incoming tenant is D1-resident, the batch's service is delayed by
+/// [`NetworkServeCost::swap_ps`] and charged
+/// [`NetworkServeCost::swap_fj`] (booked in both the energy total and
+/// the reload share — it *is* weight traffic). The first-ever dispatch
+/// charges nothing (D1 starts empty either way, matching the
+/// single-tenant engine, which never charges resident networks), and
+/// non-resident tenants are never charged (their per-batch streaming
+/// reload already prices exactly the traffic a switch would cost).
+/// Requests arriving *during* a swap stall do not join the batch — the
+/// batch window closes at the pre-swap dispatch time.
+///
+/// **Determinism.** Arrival traces are pure functions of
+/// `(seed, spec)` via [`tenant_seed`]; closed-loop spawns depend only
+/// on completions the engine has already emitted (dispatch starts and
+/// completions are both nondecreasing, so a spawned arrival can never
+/// land before a batch that was already formed); every policy breaks
+/// ties through a total order ending in the tenant index. The whole
+/// replay is a pure function of its arguments — no wall clock, no
+/// thread count, no map iteration order anywhere.
+pub fn replay_tenants(
+    specs: &[TenantSpec],
+    schedule: Schedule,
+    policy: DispatchPolicy,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+) -> MultiTenantReport {
+    assert!(!specs.is_empty(), "at least one tenant is required");
+    assert!(max_batch >= 1, "max_batch must be at least 1");
+    let mut states: Vec<TenantState> = specs
+        .iter()
+        .enumerate()
+        .map(|(k, spec)| {
+            let admitted = spec.cost.min_service_ps() <= spec.slo_ps;
+            let tseed = tenant_seed(seed, k);
+            let mut clients = None;
+            let mut to_spawn = 0usize;
+            let pending = if !admitted {
+                Vec::new()
+            } else {
+                match spec.load {
+                    TenantLoad::Poisson { mean_gap_ps } => {
+                        poisson_arrivals(tseed, mean_gap_ps, n_requests)
+                    }
+                    TenantLoad::Bursty {
+                        mean_gap_ps,
+                        period_ps,
+                        duty_pct,
+                    } => bursty_arrivals(tseed, mean_gap_ps, n_requests, period_ps, duty_pct),
+                    TenantLoad::Closed {
+                        clients: pool,
+                        think_ps,
+                    } => {
+                        let mut gen = ClosedLoopClients::new(tseed, think_ps);
+                        let first = gen.first_arrivals(pool.max(1).min(n_requests));
+                        to_spawn = n_requests - first.len();
+                        clients = Some(gen);
+                        first
+                    }
+                }
+            };
+            TenantState {
+                table: StageTable::new(&spec.cost, max_batch),
+                n_stages: spec.cost.n_layers(),
+                swap_ps: spec.cost.swap_ps(),
+                swap_fj: spec.cost.swap_fj(),
+                resident: spec.cost.resident,
+                admitted,
+                pending,
+                head: 0,
+                clients,
+                to_spawn,
+                deficit: 0,
+                latencies: Vec::new(),
+                energy_fj: 0.0,
+                reload_fj: 0.0,
+                batches: 0,
+                swaps: 0,
+                swap_stall_ps: 0,
+                swap_fj_total: 0.0,
+                rejected: if admitted { 0 } else { n_requests },
+                last_done: 0,
+            }
+        })
+        .collect();
+
+    let n_tenants = specs.len();
+    let mut free = 0u64; // serialized: the single server's free time
+    let mut stage_free: Vec<u64> = Vec::new(); // incumbent's pipeline
+    let mut drain = 0u64; // last completion: pipeline-empty time
+    let mut last: Option<usize> = None;
+    let mut rr = 0usize; // DRR cyclic pointer
+    let mut switches = 0usize;
+    let mut last_done = 0u64;
+
+    loop {
+        // earliest feasible start per backlogged tenant
+        let mut best_t = u64::MAX;
+        for (k, st) in states.iter().enumerate() {
+            if st.head >= st.pending.len() {
+                continue;
+            }
+            let avail = match schedule {
+                Schedule::Serialized => free,
+                Schedule::LayerPipelined => {
+                    if last == Some(k) {
+                        stage_free.first().copied().unwrap_or(0)
+                    } else {
+                        drain
+                    }
+                }
+            };
+            best_t = best_t.min(avail.max(st.pending[st.head]));
+        }
+        if best_t == u64::MAX {
+            break; // no tenant has pending work
+        }
+        // candidates: tenants whose earliest feasible start is best_t
+        let start_of = |k: usize, st: &TenantState| -> u64 {
+            let avail = match schedule {
+                Schedule::Serialized => free,
+                Schedule::LayerPipelined => {
+                    if last == Some(k) {
+                        stage_free.first().copied().unwrap_or(0)
+                    } else {
+                        drain
+                    }
+                }
+            };
+            avail.max(st.pending[st.head])
+        };
+        let candidate = |k: usize, st: &TenantState| -> bool {
+            st.head < st.pending.len() && start_of(k, st) == best_t
+        };
+        // pick one tenant by policy (each rule is a total order)
+        let chosen = match policy {
+            DispatchPolicy::Fifo => {
+                let mut best: Option<(u64, usize)> = None;
+                for (k, st) in states.iter().enumerate() {
+                    if candidate(k, st) {
+                        let key = (st.pending[st.head], k);
+                        if best.map_or(true, |b| key < b) {
+                            best = Some(key);
+                        }
+                    }
+                }
+                best.unwrap().1
+            }
+            DispatchPolicy::Priority => {
+                let mut best: Option<(std::cmp::Reverse<u32>, u64, usize)> = None;
+                for (k, st) in states.iter().enumerate() {
+                    if candidate(k, st) {
+                        let key = (
+                            std::cmp::Reverse(specs[k].priority),
+                            st.pending[st.head],
+                            k,
+                        );
+                        if best.map_or(true, |b| key < b) {
+                            best = Some(key);
+                        }
+                    }
+                }
+                best.unwrap().2
+            }
+            DispatchPolicy::DeficitRoundRobin => {
+                let mut chosen = None;
+                for off in 0..n_tenants {
+                    let k = (rr + off) % n_tenants;
+                    if candidate(k, &states[k]) {
+                        chosen = Some(k);
+                        break;
+                    }
+                }
+                chosen.unwrap()
+            }
+        };
+
+        let st = &mut states[chosen];
+        // greedy FIFO batch: everything arrived by best_t, capped
+        let quantum = specs[chosen].share.max(1) as u64;
+        let cap = match policy {
+            DispatchPolicy::DeficitRoundRobin => {
+                (max_batch as u64).min(st.deficit + quantum) as usize
+            }
+            _ => max_batch,
+        };
+        let mut b = 1usize;
+        while st.head + b < st.pending.len()
+            && b < cap
+            && st.pending[st.head + b] <= best_t
+        {
+            b += 1;
+        }
+
+        let switching = last != Some(chosen);
+        let charge = switching && last.is_some() && st.resident;
+        let service_start = if charge {
+            st.swaps += 1;
+            st.swap_stall_ps += st.swap_ps;
+            st.swap_fj_total += st.swap_fj;
+            st.energy_fj += st.swap_fj;
+            st.reload_fj += st.swap_fj;
+            best_t + st.swap_ps
+        } else {
+            best_t
+        };
+        if switching && last.is_some() {
+            switches += 1;
+        }
+
+        let done = match schedule {
+            Schedule::Serialized => {
+                let service: u64 = (0..st.n_stages).map(|l| st.table.stage_ps(b, l)).sum();
+                let done = service_start + service;
+                free = done;
+                done
+            }
+            Schedule::LayerPipelined => {
+                if switching {
+                    stage_free.clear();
+                    stage_free.resize(st.n_stages, 0);
+                }
+                let mut done = service_start;
+                for l in 0..st.n_stages {
+                    let enter = done.max(stage_free[l]);
+                    done = enter + st.table.stage_ps(b, l);
+                    stage_free[l] = done;
+                }
+                done
+            }
+        };
+
+        for i in st.head..st.head + b {
+            st.latencies.push(done - st.pending[i]);
+        }
+        st.last_done = st.last_done.max(done);
+        st.energy_fj += b as f64 * st.table.fj_at(b);
+        st.reload_fj += b as f64 * st.table.reload_fj_at(b);
+        st.batches += 1;
+        st.head += b;
+        // closed-loop: each completed client thinks, then resubmits
+        if st.clients.is_some() {
+            for _ in 0..b.min(st.to_spawn) {
+                let arr = st.clients.as_mut().unwrap().next_arrival(done);
+                let at = st.head
+                    + st.pending[st.head..].partition_point(|&a| a <= arr);
+                st.pending.insert(at, arr);
+                st.to_spawn -= 1;
+            }
+        }
+
+        drain = done;
+        last_done = last_done.max(done);
+        last = Some(chosen);
+        if policy == DispatchPolicy::DeficitRoundRobin {
+            let allow = states[chosen].deficit + quantum;
+            states[chosen].deficit = if states[chosen].head < states[chosen].pending.len() {
+                (allow - b as u64).min(quantum)
+            } else {
+                0
+            };
+            rr = (chosen + 1) % n_tenants;
+        }
+    }
+
+    let mut tenants = Vec::with_capacity(n_tenants);
+    let mut slo_ok_total = 0usize;
+    for (spec, st) in specs.iter().zip(states.into_iter()) {
+        let served = st.latencies.len();
+        let latency = LatencyRecord::from_samples(
+            st.latencies,
+            st.energy_fj,
+            st.reload_fj,
+            st.last_done,
+        );
+        let slo_ok = latency.count_within(spec.slo_ps);
+        slo_ok_total += slo_ok;
+        let achieved_rps = if last_done > 0 {
+            served as f64 * 1e12 / last_done as f64
+        } else {
+            0.0
+        };
+        tenants.push(TenantReport {
+            name: spec.name.clone(),
+            network: spec.cost.network.clone(),
+            slo_ps: spec.slo_ps,
+            admitted: st.admitted,
+            served,
+            rejected: st.rejected,
+            latency,
+            batches: st.batches,
+            swaps: st.swaps,
+            swap_stall_ps: st.swap_stall_ps,
+            swap_fj: st.swap_fj_total,
+            slo_ok,
+            achieved_rps,
+        });
+    }
+    let goodput_rps = if last_done > 0 {
+        slo_ok_total as f64 * 1e12 / last_done as f64
+    } else {
+        0.0
+    };
+    MultiTenantReport {
+        tenants,
+        last_done_ps: last_done,
+        switches,
+        goodput_rps,
+    }
+}
+
+/// One tenant's condensed slice of a [`TenantOutcome`] — everything
+/// the CLI table, the goodput ladder and the bench need, without the
+/// full latency multiset (the value the sweep cache memoizes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantPoint {
+    /// Whether the tenant passed admission control.
+    pub admitted: bool,
+    /// Requests served.
+    pub served: usize,
+    /// Requests rejected at admission.
+    pub rejected: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Weight swaps charged.
+    pub swaps: usize,
+    /// Total swap stall (ps).
+    pub swap_stall_ps: u64,
+    /// Total swap energy (fJ).
+    pub swap_fj: f64,
+    /// Exact nearest-rank p50 latency (ps).
+    pub p50_ps: u64,
+    /// Exact nearest-rank p99 latency (ps).
+    pub p99_ps: u64,
+    /// Mean latency (ps).
+    pub mean_ps: u64,
+    /// Energy per served request (fJ), swap and reload shares included.
+    pub fj_per_req: f64,
+    /// Served requests that completed within the tenant's SLO.
+    pub slo_ok: usize,
+    /// Served throughput (req/s) over the shared horizon.
+    pub achieved_rps: f64,
+}
+
+/// The condensed outcome of one multi-tenant replay — the sweep
+/// cache's memoized value (no latency multisets, no names).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantOutcome {
+    /// Per-tenant points, in spec order.
+    pub per_tenant: Vec<TenantPoint>,
+    /// Goodput (req/s) over the shared horizon.
+    pub goodput_rps: f64,
+    /// Completion time of the last served request (ps).
+    pub last_done_ps: u64,
+    /// Tenant switch-ins.
+    pub switches: usize,
+}
+
+impl TenantOutcome {
+    /// Condense a full report (the pure function the cache memoizes:
+    /// `condense ∘ replay_tenants`).
+    pub fn from_report(rep: &MultiTenantReport) -> Self {
+        TenantOutcome {
+            per_tenant: rep
+                .tenants
+                .iter()
+                .map(|t| TenantPoint {
+                    admitted: t.admitted,
+                    served: t.served,
+                    rejected: t.rejected,
+                    batches: t.batches,
+                    swaps: t.swaps,
+                    swap_stall_ps: t.swap_stall_ps,
+                    swap_fj: t.swap_fj,
+                    p50_ps: t.latency.percentile_ps(50.0),
+                    p99_ps: t.latency.percentile_ps(99.0),
+                    mean_ps: t.latency.mean_ps(),
+                    fj_per_req: t.latency.fj_per_request(),
+                    slo_ok: t.slo_ok,
+                    achieved_rps: t.achieved_rps,
+                })
+                .collect(),
+            goodput_rps: rep.goodput_rps,
+            last_done_ps: rep.last_done_ps,
+            switches: rep.switches,
+        }
+    }
+}
+
+/// [`replay_tenants`] condensed to a [`TenantOutcome`]: the pure
+/// function the sweep cache memoizes under a multi-tenant replay key.
+pub fn replay_tenants_outcome(
+    specs: &[TenantSpec],
+    schedule: Schedule,
+    policy: DispatchPolicy,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+) -> TenantOutcome {
+    TenantOutcome::from_report(&replay_tenants(
+        specs, schedule, policy, max_batch, seed, n_requests,
+    ))
+}
+
+/// The multi-tenant goodput ladder over an arbitrary replay oracle:
+/// `replay(&gaps)` replays the tenants under open Poisson load at the
+/// given per-tenant mean gaps and returns the condensed outcome. The
+/// sweep cache passes a memoizing oracle; [`tenant_slo_goodput`]
+/// passes the direct replay — bit-identical results, because the
+/// pruning only skips rungs that provably cannot improve the running
+/// maximum:
+///
+/// * **Global bound** — if *every* tenant's zero-queueing bound busts
+///   its SLO, admission rejects them all at every rung: goodput is 0.0
+///   everywhere, returned with zero replays.
+/// * **Per-rung bound** — a rung's goodput is at most
+///   `N·10¹² / floor`, where `N` is the total admitted request count
+///   and `floor = max_k (a_last_k + min_service_k)` over admitted
+///   tenants: at most `N` requests can ever count toward goodput, and
+///   the shared horizon is at least every admitted tenant's last
+///   arrival plus its zero-queueing service. `a_last_k` is priced
+///   exactly from the per-tenant draw vectors ([`last_arrival_ps`] on
+///   [`exp_draws`] of [`tenant_seed`]) — no replay. Rungs are visited
+///   in descending-utilization order; a rung whose bound is ≤ the
+///   incumbent is skipped (its `max` contribution is a no-op). The
+///   surviving fold is a plain `f64::max` over nonnegative finite
+///   values — order-invariant, so the pruned descent equals the
+///   ascending unpruned reference bitwise.
+pub fn tenant_slo_goodput_with<F: FnMut(&[u64]) -> TenantOutcome>(
+    specs: &[TenantSpec],
+    schedule: Schedule,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+    mut replay: F,
+) -> f64 {
+    let admitted: Vec<bool> = specs
+        .iter()
+        .map(|s| s.cost.min_service_ps() <= s.slo_ps)
+        .collect();
+    if !admitted.iter().any(|&a| a) {
+        return 0.0;
+    }
+    let draws: Vec<Vec<f64>> = (0..specs.len())
+        .map(|k| exp_draws(tenant_seed(seed, k), n_requests))
+        .collect();
+    let n_admitted: usize = admitted.iter().filter(|&&a| a).count() * n_requests;
+    let mut best = 0.0f64;
+    for &util in SLO_UTILS.iter().rev() {
+        let gaps: Vec<u64> = specs
+            .iter()
+            .map(|s| tenant_gap_ps(&s.cost, schedule, max_batch, specs.len(), util))
+            .collect();
+        if best > 0.0 {
+            let mut floor_ps = 0u64;
+            for (k, spec) in specs.iter().enumerate() {
+                if admitted[k] {
+                    let f = last_arrival_ps(&draws[k], gaps[k])
+                        .saturating_add(spec.cost.min_service_ps());
+                    floor_ps = floor_ps.max(f);
+                }
+            }
+            let ub = n_admitted as f64 * 1e12 / floor_ps as f64;
+            if ub <= best {
+                continue;
+            }
+        }
+        let out = replay(&gaps);
+        best = out.goodput_rps.max(best);
+    }
+    best
+}
+
+/// Best goodput-under-SLO (req/s) across the utilization ladder: each
+/// rung offers every tenant Poisson load at `util/n_tenants`× its solo
+/// capacity ([`tenant_gap_ps`]), replays the multi-tenant engine, and
+/// scores goodput; the best rung wins. Pruned
+/// ([`tenant_slo_goodput_with`]) and bit-identical to
+/// [`tenant_slo_goodput_unpruned`], test-locked.
+pub fn tenant_slo_goodput(
+    specs: &[TenantSpec],
+    schedule: Schedule,
+    policy: DispatchPolicy,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+) -> f64 {
+    tenant_slo_goodput_with(specs, schedule, max_batch, seed, n_requests, |gaps| {
+        replay_tenants_outcome(
+            &poisson_probe(specs, gaps),
+            schedule,
+            policy,
+            max_batch,
+            seed,
+            n_requests,
+        )
+    })
+}
+
+/// The unpruned reference ladder: every rung replayed, ascending — the
+/// bit-identity oracle [`tenant_slo_goodput`] is test-locked against.
+pub fn tenant_slo_goodput_unpruned(
+    specs: &[TenantSpec],
+    schedule: Schedule,
+    policy: DispatchPolicy,
+    max_batch: usize,
+    seed: u64,
+    n_requests: usize,
+) -> f64 {
+    let mut best = 0.0f64;
+    for &util in SLO_UTILS.iter() {
+        let gaps: Vec<u64> = specs
+            .iter()
+            .map(|s| tenant_gap_ps(&s.cost, schedule, max_batch, specs.len(), util))
+            .collect();
+        let out = replay_tenants_outcome(
+            &poisson_probe(specs, &gaps),
+            schedule,
+            policy,
+            max_batch,
+            seed,
+            n_requests,
+        );
+        best = out.goodput_rps.max(best);
+    }
+    best
+}
+
+/// The specs with every load replaced by open Poisson at the given
+/// per-tenant gaps — the ladder's probe load (rungs probe offered
+/// *rate*; the measurement replay keeps the configured load kinds).
+pub fn poisson_probe(specs: &[TenantSpec], gaps: &[u64]) -> Vec<TenantSpec> {
+    specs
+        .iter()
+        .zip(gaps.iter())
+        .map(|(s, &gap)| TenantSpec {
+            load: TenantLoad::Poisson { mean_gap_ps: gap },
+            ..s.clone()
+        })
+        .collect()
+}
+
+/// CLI-side tenant description: what `serve --tenants` parses before
+/// the network's serving cost exists (the cost is searched per design
+/// afterwards; [`TenantArg::into_spec`] marries the two).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantArg {
+    /// Display name (defaults to the network token).
+    pub name: String,
+    /// Network name (must match a tinyMLPerf workload).
+    pub network: String,
+    /// p99 SLO (ps).
+    pub slo_ps: u64,
+    /// Priority (higher wins under the priority policy).
+    pub priority: u32,
+    /// Fair-share quantum (requests per DRR turn).
+    pub share: u32,
+    /// Offered utilization (fraction of the tenant's `1/K` capacity
+    /// slice) the open-load gap is derived at.
+    pub util: f64,
+    /// Load-shape argument (gap-free; the gap is derived per design).
+    pub load: TenantLoadArg,
+}
+
+/// The load shape of a CLI tenant, before the per-design mean gap is
+/// known.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TenantLoadArg {
+    /// Open Poisson arrivals.
+    Poisson,
+    /// Open bursty arrivals with the given period and duty cycle.
+    Bursty {
+        /// Burst period (ps).
+        period_ps: u64,
+        /// On-window percentage (`1..=100`).
+        duty_pct: u64,
+    },
+    /// Closed-loop clients with the given pool size and think time.
+    Closed {
+        /// Client-pool size.
+        clients: usize,
+        /// Mean think gap (ps).
+        think_ps: u64,
+    },
+}
+
+impl TenantArg {
+    /// Marry the CLI tenant with a searched serving cost into a
+    /// [`TenantSpec`], deriving the open-load mean gap from the
+    /// tenant's utilization share of this cost's capacity
+    /// ([`tenant_gap_ps`] with `n_tenants` co-tenants).
+    pub fn into_spec(
+        &self,
+        cost: NetworkServeCost,
+        schedule: Schedule,
+        max_batch: usize,
+        n_tenants: usize,
+    ) -> TenantSpec {
+        let gap = tenant_gap_ps(&cost, schedule, max_batch, n_tenants, self.util);
+        let load = match self.load {
+            TenantLoadArg::Poisson => TenantLoad::Poisson { mean_gap_ps: gap },
+            TenantLoadArg::Bursty {
+                period_ps,
+                duty_pct,
+            } => TenantLoad::Bursty {
+                mean_gap_ps: gap,
+                period_ps,
+                duty_pct,
+            },
+            TenantLoadArg::Closed { clients, think_ps } => {
+                TenantLoad::Closed { clients, think_ps }
+            }
+        };
+        TenantSpec {
+            name: self.name.clone(),
+            cost,
+            load,
+            slo_ps: self.slo_ps,
+            priority: self.priority,
+            share: self.share,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::simulate_with_table;
+    use crate::serve::LayerServeCost;
+
+    /// The engine-test fixture: two stages, 150/80 ns at b=1,
+    /// integer-valued fJ so energy sums compare exactly.
+    fn synthetic_cost(resident: bool) -> NetworkServeCost {
+        NetworkServeCost {
+            system: "synthetic".into(),
+            network: "two_layer".into(),
+            layers: vec![
+                LayerServeCost {
+                    mvm_cycles: 100.0,
+                    load_cycles: 50.0,
+                    mem_cycles: 10.0,
+                    weight_fj: 30.0,
+                    base_fj: 70.0,
+                },
+                LayerServeCost {
+                    mvm_cycles: 60.0,
+                    load_cycles: 20.0,
+                    mem_cycles: 5.0,
+                    weight_fj: 10.0,
+                    base_fj: 40.0,
+                },
+            ],
+            t_cycle_ns: 1.0,
+            resident,
+        }
+    }
+
+    fn spec(name: &str, resident: bool, gap: u64) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            cost: synthetic_cost(resident),
+            load: TenantLoad::Poisson { mean_gap_ps: gap },
+            slo_ps: 2_000_000_000,
+            priority: 1,
+            share: 1,
+        }
+    }
+
+    #[test]
+    fn tenant_zero_keeps_the_bare_seed() {
+        assert_eq!(tenant_seed(42, 0), 42);
+        assert_ne!(tenant_seed(42, 1), 42);
+        assert_ne!(tenant_seed(42, 1), tenant_seed(42, 2));
+    }
+
+    #[test]
+    fn one_tenant_replay_is_bit_identical_to_the_single_tenant_engine() {
+        // tenant 0 draws the bare seed, no co-tenant ever runs, no swap
+        // is ever charged — the multi-tenant loop must collapse to the
+        // single-tenant engine to the bit, under every policy and both
+        // schedules, resident or not.
+        for resident in [true, false] {
+            let specs = vec![spec("solo", resident, 120_000)];
+            let arrivals = poisson_arrivals(42, 120_000, 512);
+            for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+                let table = StageTable::new(&specs[0].cost, 8);
+                let single = simulate_with_table(&table, schedule, &arrivals);
+                for policy in [
+                    DispatchPolicy::Fifo,
+                    DispatchPolicy::Priority,
+                    DispatchPolicy::DeficitRoundRobin,
+                ] {
+                    // DRR with share 1 caps batches at 1 by design; use
+                    // a share wide enough to not constrain the batcher
+                    let mut sp = specs.clone();
+                    sp[0].share = 8;
+                    let multi = replay_tenants(&sp, schedule, policy, 8, 42, 512);
+                    let t = &multi.tenants[0];
+                    assert_eq!(t.latency, single.latency, "{schedule} {policy} {resident}");
+                    assert_eq!(t.batches, single.batches);
+                    assert_eq!(t.served, 512);
+                    assert_eq!(t.swaps, 0);
+                    assert_eq!(multi.switches, 0);
+                    assert_eq!(
+                        t.achieved_rps.to_bits(),
+                        single.achieved_rps.to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swaps_charge_only_resident_switch_ins_and_never_the_first_dispatch() {
+        // two resident tenants with sparse alternating load: every
+        // dispatch after the first switches tenants and pays the swap
+        let mut a = spec("a", true, 10_000_000);
+        let mut b = spec("b", true, 10_000_000);
+        a.cost.network = "net_a".into();
+        b.cost.network = "net_b".into();
+        let specs = vec![a, b];
+        let rep = replay_tenants(
+            &specs,
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            1,
+            42,
+            64,
+        );
+        let total_swaps: usize = rep.tenants.iter().map(|t| t.swaps).sum();
+        assert!(rep.switches > 0, "alternating tenants must switch");
+        assert!(total_swaps > 0, "resident switch-ins must charge swaps");
+        assert!(total_swaps <= rep.switches);
+        // swap accounting is consistent: stall = swaps·swap_ps per tenant
+        for (t, s) in rep.tenants.iter().zip(specs.iter()) {
+            assert_eq!(t.swap_stall_ps, t.swaps as u64 * s.cost.swap_ps());
+            assert_eq!(t.swap_fj, t.swaps as f64 * s.cost.swap_fj());
+        }
+
+        // non-resident tenants: same interleaving, zero swap charges
+        // (they stream their weights every batch already)
+        let specs_nr = vec![spec("a", false, 10_000_000), spec("b", false, 10_000_000)];
+        let rep_nr = replay_tenants(
+            &specs_nr,
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            1,
+            42,
+            64,
+        );
+        assert!(rep_nr.switches > 0);
+        for t in &rep_nr.tenants {
+            assert_eq!(t.swaps, 0);
+            assert_eq!(t.swap_stall_ps, 0);
+            assert_eq!(t.swap_fj, 0.0);
+            assert!(t.latency.reload_fj > 0.0, "streaming reload still paid");
+        }
+    }
+
+    #[test]
+    fn swap_stall_delays_completions() {
+        // identical load, resident vs not: the resident pair pays swap
+        // stalls on every alternation, so its horizon is strictly later
+        // than the same timeline without swap charges would be. Compare
+        // against a single tenant serving the same total arrivals: the
+        // two-resident-tenant replay's horizon must include the stalls.
+        let specs = vec![spec("a", true, 1_000_000), spec("b", true, 1_000_000)];
+        let rep = replay_tenants(
+            &specs,
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            1,
+            7,
+            128,
+        );
+        let stall: u64 = rep.tenants.iter().map(|t| t.swap_stall_ps).sum();
+        assert!(stall > 0);
+        // p99 under swap-heavy interleaving strictly exceeds the
+        // zero-queueing bound
+        for t in &rep.tenants {
+            assert!(t.latency.percentile_ps(99.0) > specs[0].cost.min_service_ps());
+        }
+    }
+
+    #[test]
+    fn admission_rejects_exactly_the_slo_busting_tenants() {
+        // min_service = 230 ns
+        let mut tight = spec("tight", true, 100_000);
+        tight.slo_ps = 229_999; // one ps below the bound: rejected
+        let mut loose = spec("loose", true, 100_000);
+        loose.slo_ps = 230_000; // exactly the bound: admitted
+        let rep = replay_tenants(
+            &[tight, loose],
+            Schedule::LayerPipelined,
+            DispatchPolicy::Fifo,
+            8,
+            42,
+            256,
+        );
+        assert!(!rep.tenants[0].admitted);
+        assert_eq!(rep.tenants[0].served, 0);
+        assert_eq!(rep.tenants[0].rejected, 256);
+        assert!(rep.tenants[1].admitted);
+        assert_eq!(rep.tenants[1].served, 256);
+        assert_eq!(rep.tenants[1].rejected, 0);
+    }
+
+    #[test]
+    fn rejected_count_is_monotone_non_increasing_in_the_slo() {
+        let mut prev = usize::MAX;
+        for slo in [1u64, 229_999, 230_000, 500_000, 2_000_000_000] {
+            let mut s = spec("t", true, 100_000);
+            s.slo_ps = slo;
+            let rep = replay_tenants(
+                &[s],
+                Schedule::Serialized,
+                DispatchPolicy::Fifo,
+                4,
+                42,
+                128,
+            );
+            let rejected = rep.tenants[0].rejected;
+            assert!(rejected <= prev.min(128), "slo {slo}");
+            prev = rejected;
+        }
+    }
+
+    #[test]
+    fn priority_policy_serves_the_high_priority_tenant_first() {
+        // both tenants fully backlogged from t=1: under strict priority
+        // the high-priority tenant drains completely before the other
+        // starts, so its max latency is below the other's min latency.
+        let mut hi = spec("hi", true, 1);
+        hi.priority = 9;
+        let lo = spec("lo", true, 1);
+        let rep = replay_tenants(
+            &[lo.clone(), hi.clone()],
+            Schedule::Serialized,
+            DispatchPolicy::Priority,
+            4,
+            3,
+            64,
+        );
+        let hi_rep = &rep.tenants[1];
+        let lo_rep = &rep.tenants[0];
+        // hi drains its whole backlog as soon as both queues are ready
+        // (the very first dispatch may go to whoever arrived first, but
+        // every contested dispatch after it goes to hi), so hi's worst
+        // latency sits well below lo's, which waits out hi's drain
+        assert!(hi_rep.latency.max_ps() < lo_rep.latency.max_ps());
+        assert!(hi_rep.latency.mean_ps() < lo_rep.latency.mean_ps());
+        // the same mix under FIFO interleaves by arrival order instead
+        let fifo = replay_tenants(
+            &[lo, hi],
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            4,
+            3,
+            64,
+        );
+        assert!(fifo.switches > rep.switches);
+    }
+
+    #[test]
+    fn drr_shares_service_by_the_configured_quanta() {
+        // both backlogged from t=1; shares 3 vs 1 → the wide tenant
+        // moves 3 requests per turn, the narrow one 1 — neither
+        // starves, and the wide tenant's queue drains ~3× faster.
+        let mut wide = spec("wide", true, 1);
+        wide.share = 3;
+        let narrow = spec("narrow", true, 1);
+        let rep = replay_tenants(
+            &[wide, narrow],
+            Schedule::Serialized,
+            DispatchPolicy::DeficitRoundRobin,
+            8,
+            5,
+            60,
+        );
+        let w = &rep.tenants[0];
+        let n = &rep.tenants[1];
+        assert_eq!(w.served, 60);
+        assert_eq!(n.served, 60);
+        // per-turn quanta show up as batch sizes: ~3 vs ~1
+        assert!(w.batches * 2 < n.batches, "wide {} narrow {}", w.batches, n.batches);
+        // and the wide tenant finishes its backlog earlier
+        assert!(w.latency.mean_ps() < n.latency.mean_ps());
+    }
+
+    #[test]
+    fn closed_loop_single_client_sees_zero_queueing_latency() {
+        // one client, one tenant, resident: every request is submitted
+        // only after the previous completed — no queueing, no swap, so
+        // every latency is exactly the zero-queueing service time.
+        let cost = synthetic_cost(true);
+        let min_service = cost.min_service_ps();
+        let specs = vec![TenantSpec {
+            name: "closed".into(),
+            cost,
+            load: TenantLoad::Closed {
+                clients: 1,
+                think_ps: 1_000_000,
+            },
+            slo_ps: 2_000_000_000,
+            priority: 1,
+            share: 1,
+        }];
+        let rep = replay_tenants(
+            &specs,
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            8,
+            42,
+            100,
+        );
+        let t = &rep.tenants[0];
+        assert_eq!(t.served, 100);
+        assert_eq!(t.latency.percentile_ps(0.1), min_service);
+        assert_eq!(t.latency.max_ps(), min_service);
+    }
+
+    #[test]
+    fn closed_loop_population_caps_outstanding_requests() {
+        // clients=4: at most 4 requests are ever outstanding, so even
+        // with ~zero think time the queue can't build past the pool.
+        // Worst case a request waits out the batch in flight and rides
+        // the next one — two batch-4 services: 2·(450 + 260) ns.
+        let cost = synthetic_cost(true);
+        let bound = 2 * (cost.layer_time_ps(0, 4) + cost.layer_time_ps(1, 4));
+        let specs = vec![TenantSpec {
+            name: "closed".into(),
+            cost,
+            load: TenantLoad::Closed {
+                clients: 4,
+                think_ps: 1,
+            },
+            slo_ps: 2_000_000_000,
+            priority: 1,
+            share: 1,
+        }];
+        let rep = replay_tenants(
+            &specs,
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            8,
+            42,
+            200,
+        );
+        assert_eq!(rep.tenants[0].served, 200);
+        assert!(rep.tenants[0].latency.max_ps() <= bound);
+    }
+
+    #[test]
+    fn replays_are_deterministic() {
+        let specs = vec![
+            spec("a", true, 150_000),
+            spec("b", false, 200_000),
+            TenantSpec {
+                name: "c".into(),
+                cost: synthetic_cost(true),
+                load: TenantLoad::Closed {
+                    clients: 3,
+                    think_ps: 500_000,
+                },
+                slo_ps: 1_000_000,
+                priority: 5,
+                share: 2,
+            },
+        ];
+        for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+            for policy in [
+                DispatchPolicy::Fifo,
+                DispatchPolicy::Priority,
+                DispatchPolicy::DeficitRoundRobin,
+            ] {
+                let a = replay_tenants(&specs, schedule, policy, 8, 42, 256);
+                let b = replay_tenants(&specs, schedule, policy, 8, 42, 256);
+                assert_eq!(a, b, "{schedule} {policy}");
+            }
+        }
+    }
+
+    #[test]
+    fn outcome_condenses_the_report_faithfully() {
+        let specs = vec![spec("a", true, 150_000), spec("b", false, 150_000)];
+        let rep = replay_tenants(
+            &specs,
+            Schedule::LayerPipelined,
+            DispatchPolicy::Fifo,
+            8,
+            42,
+            128,
+        );
+        let out = TenantOutcome::from_report(&rep);
+        assert_eq!(
+            out,
+            replay_tenants_outcome(
+                &specs,
+                Schedule::LayerPipelined,
+                DispatchPolicy::Fifo,
+                8,
+                42,
+                128
+            )
+        );
+        for (t, p) in rep.tenants.iter().zip(out.per_tenant.iter()) {
+            assert_eq!(p.served, t.served);
+            assert_eq!(p.p99_ps, t.latency.percentile_ps(99.0));
+            assert_eq!(p.fj_per_req.to_bits(), t.latency.fj_per_request().to_bits());
+            assert_eq!(p.slo_ok, t.slo_ok);
+        }
+        assert_eq!(out.goodput_rps.to_bits(), rep.goodput_rps.to_bits());
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_met_requests() {
+        // a hopeless SLO just above the admission bound: admitted, but
+        // queueing pushes most requests past it — goodput < throughput
+        let mut s = spec("t", true, 50_000); // overloaded: gap << service
+        s.slo_ps = 231_000;
+        let rep = replay_tenants(
+            &[s],
+            Schedule::Serialized,
+            DispatchPolicy::Fifo,
+            1,
+            42,
+            256,
+        );
+        let t = &rep.tenants[0];
+        assert!(t.slo_ok < t.served);
+        assert!(rep.goodput_rps < t.achieved_rps);
+    }
+
+    #[test]
+    fn pruned_goodput_ladder_is_bit_identical_to_the_unpruned_reference() {
+        for (ra, rb) in [(true, true), (true, false), (false, false)] {
+            for slo in [1u64, 250_000, 500_000, 2_000_000_000] {
+                let mut a = spec("a", ra, 0);
+                let mut b = spec("b", rb, 0);
+                a.slo_ps = slo;
+                b.slo_ps = slo;
+                let specs = vec![a, b];
+                for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+                    for policy in [DispatchPolicy::Fifo, DispatchPolicy::DeficitRoundRobin] {
+                        let pruned =
+                            tenant_slo_goodput(&specs, schedule, policy, 8, 42, 128);
+                        let unpruned = tenant_slo_goodput_unpruned(
+                            &specs, schedule, policy, 8, 42, 128,
+                        );
+                        assert_eq!(
+                            pruned.to_bits(),
+                            unpruned.to_bits(),
+                            "{schedule} {policy} slo {slo}: {pruned} != {unpruned}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_rejected_ladder_is_decided_without_a_single_replay() {
+        let mut a = spec("a", true, 0);
+        let mut b = spec("b", true, 0);
+        a.slo_ps = 1;
+        b.slo_ps = 1;
+        let mut replays = 0usize;
+        let g = tenant_slo_goodput_with(
+            &[a, b],
+            Schedule::LayerPipelined,
+            8,
+            42,
+            128,
+            |_gaps| {
+                replays += 1;
+                TenantOutcome {
+                    per_tenant: vec![],
+                    goodput_rps: 0.0,
+                    last_done_ps: 0,
+                    switches: 0,
+                }
+            },
+        );
+        assert_eq!(g, 0.0);
+        assert_eq!(replays, 0);
+    }
+
+    #[test]
+    fn measurement_gap_coincides_with_the_080_rung() {
+        // the CLI builds its measurement load at util 0.8 through the
+        // same tenant_gap_ps the ladder's 0.8 rung uses — equal gaps by
+        // construction is what lets one memoized replay serve both
+        let cost = synthetic_cost(true);
+        let meas = tenant_gap_ps(&cost, Schedule::LayerPipelined, 8, 2, 0.8);
+        let rung = tenant_gap_ps(&cost, Schedule::LayerPipelined, 8, 2, SLO_UTILS[3]);
+        assert_eq!(SLO_UTILS[3], 0.8);
+        assert_eq!(meas, rung);
+    }
+
+    #[test]
+    fn tenant_arg_into_spec_derives_the_gap_from_the_capacity_share() {
+        let arg = TenantArg {
+            name: "t".into(),
+            network: "two_layer".into(),
+            slo_ps: 2_000_000_000,
+            priority: 2,
+            share: 3,
+            util: 0.8,
+            load: TenantLoadArg::Poisson,
+        };
+        let cost = synthetic_cost(true);
+        let s = arg.into_spec(cost.clone(), Schedule::LayerPipelined, 8, 2);
+        assert_eq!(
+            s.load,
+            TenantLoad::Poisson {
+                mean_gap_ps: tenant_gap_ps(&cost, Schedule::LayerPipelined, 8, 2, 0.8)
+            }
+        );
+        assert_eq!(s.priority, 2);
+        assert_eq!(s.share, 3);
+    }
+}

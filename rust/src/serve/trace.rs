@@ -128,6 +128,55 @@ fn gap_ps(rng: &mut Rng, mean_gap_ps: u64) -> u64 {
     (exp_sample(rng) * mean_gap_ps as f64).round() as u64
 }
 
+/// Closed-loop (think-time) client population: the load source that
+/// reacts to the system, unlike the open [`poisson_arrivals`] /
+/// [`bursty_arrivals`] streams. A fixed pool of clients each submits a
+/// request, waits for its completion, "thinks" for an exponential
+/// `round(Exp(1) · think_ps)` gap, and submits again — so offered load
+/// self-throttles when the accelerator backs up (at most `clients`
+/// requests are ever outstanding).
+///
+/// The generator owns one seeded [`Rng`] and hands out think gaps in
+/// call order; because the replay engine that drives it dispatches and
+/// completes requests in a deterministic order, the spawned arrival
+/// sequence is a pure function of `(seed, think_ps, clients,
+/// engine schedule)` — the same bit-identical-everywhere contract as
+/// the open traces.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopClients {
+    rng: Rng,
+    think_ps: u64,
+}
+
+impl ClosedLoopClients {
+    /// A client pool drawing think gaps at mean `think_ps` from `seed`.
+    pub fn new(seed: u64, think_ps: u64) -> Self {
+        ClosedLoopClients {
+            rng: Rng::new(seed),
+            think_ps: think_ps.max(1),
+        }
+    }
+
+    /// The initial wave: each of the `clients` submits its first
+    /// request after one think gap from t=0. Returned sorted ascending
+    /// (clients are exchangeable; sorting fixes the FIFO order).
+    pub fn first_arrivals(&mut self, clients: usize) -> Vec<u64> {
+        let mut out: Vec<u64> = (0..clients).map(|_| self.think_gap()).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// The next arrival of a client whose request completed at
+    /// `completion_ps`: completion plus one think gap.
+    pub fn next_arrival(&mut self, completion_ps: u64) -> u64 {
+        completion_ps.saturating_add(self.think_gap())
+    }
+
+    fn think_gap(&mut self) -> u64 {
+        gap_ps(&mut self.rng, self.think_ps)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +256,39 @@ mod tests {
             let err = (measured - mean_gap as f64).abs() / mean_gap as f64;
             assert!(err < 0.05, "duty {duty}: mean gap {measured} vs {mean_gap}");
         }
+    }
+
+    #[test]
+    fn closed_loop_clients_are_deterministic_and_self_throttled() {
+        let mut a = ClosedLoopClients::new(42, 1_000_000);
+        let mut b = ClosedLoopClients::new(42, 1_000_000);
+        let first_a = a.first_arrivals(8);
+        let first_b = b.first_arrivals(8);
+        assert_eq!(first_a, first_b);
+        assert_eq!(first_a.len(), 8);
+        assert!(first_a.windows(2).all(|w| w[0] <= w[1]));
+        // respawn after a completion: strictly later than the completion
+        // whenever the think gap rounds above zero, identical across
+        // equal-seed generators
+        for done in [0u64, 5_000_000, 123_456_789] {
+            assert_eq!(a.next_arrival(done), b.next_arrival(done));
+        }
+        // different seeds diverge
+        let mut c = ClosedLoopClients::new(43, 1_000_000);
+        assert_ne!(c.first_arrivals(8), first_a);
+    }
+
+    #[test]
+    fn closed_loop_think_gaps_have_the_configured_mean() {
+        let mut g = ClosedLoopClients::new(11, 2_000_000);
+        let n = 50_000;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            sum += g.next_arrival(0);
+        }
+        let mean = sum as f64 / n as f64;
+        let err = (mean - 2_000_000.0).abs() / 2_000_000.0;
+        assert!(err < 0.02, "mean think gap {mean}");
     }
 
     #[test]

@@ -50,6 +50,17 @@
 //!   (`serve_replayed_reqs`) against the unmemoized-unpruned volume
 //!   for the same outputs (`serve_naive_reqs`), and a
 //!   `duplicate_serves` single-flight tripwire CI gates at zero.
+//! * [`TenantServeKey`] → [`TenantOutcome`] — one seeded multi-tenant
+//!   replay (`crate::serve::tenant`), keyed the same way: every
+//!   tenant's full cost snapshot plus its load, SLO and
+//!   priority/share, the dispatch policy, and the shared replay knobs.
+//!   Multi-tenant replays share the `serve_*` counters and the
+//!   `duplicate_serves` tripwire with the single-tenant store (one
+//!   accounting surface, one CI gate), but live in their own map —
+//!   the entries are **not** persisted to the on-disk cache (the
+//!   single-tenant schema stays at its current version; a warm
+//!   multi-tenant run rebuilds its replays and still wins through the
+//!   in-process ladder/measurement sharing).
 //!
 //! # Concurrency layout (see `docs/COST_MODEL.md` §10)
 //!
@@ -81,6 +92,10 @@ use crate::serve::engine::{
     SLO_UTILS,
 };
 use crate::serve::search::{best_config_with, candidate_configs, BestConfig};
+use crate::serve::tenant::{
+    poisson_probe, replay_tenants_outcome, tenant_slo_goodput_with, DispatchPolicy, TenantLoad,
+    TenantOutcome, TenantSpec,
+};
 use crate::serve::{
     NetworkServeCost, Schedule, ServeConfig, ServeSweepPoint, SWEEP_SERVE_MAX_BATCH,
     SWEEP_SERVE_SCHEDULE,
@@ -306,6 +321,101 @@ impl ServeKey {
     }
 }
 
+/// One tenant's slice of a [`TenantServeKey`]: the full cost snapshot
+/// (same bit-pattern convention as [`ServeKey`]) plus everything the
+/// multi-tenant engine reads off the spec — load shape, SLO, priority
+/// and fair-share quantum. Names are excluded for the same reason
+/// [`ServeKey`] excludes them.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TenantKeyEntry {
+    /// Per-layer cost terms as f64 bit patterns, in network order:
+    /// `[mvm_cycles, load_cycles, mem_cycles, weight_fj, base_fj]`.
+    layers: Vec<[u64; 5]>,
+    /// Bit pattern of the macro cycle time (ns).
+    t_cycle_bits: u64,
+    /// The D1 weight-residency verdict (decides swap charging).
+    resident: bool,
+    /// The tenant's offered load (all-integer parameters — hashable).
+    load: TenantLoad,
+    /// p99 SLO (ps) — read by admission control and goodput scoring.
+    slo_ps: u64,
+    /// Priority (read by the priority policy).
+    priority: u32,
+    /// Fair-share quantum (read by the DRR policy).
+    share: u32,
+}
+
+/// Everything that determines the outcome of one seeded multi-tenant
+/// replay — the [`ServeKey`] analogue for [`crate::serve::tenant`].
+/// `Eq` on keys is exactly "the replays are bit-identical": the replay
+/// is a pure function of the tenant list (each tenant's cost snapshot,
+/// load, SLO, priority, share — in order, since dispatch ties break by
+/// tenant index), the dispatch policy, and the shared replay knobs.
+/// Entries under this key live only in memory — they are **not**
+/// persisted by `super::persist` (the single-tenant schema version is
+/// unchanged).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TenantServeKey {
+    /// Per-tenant fingerprints, in spec order (order is semantic:
+    /// dispatch ties break by index).
+    tenants: Vec<TenantKeyEntry>,
+    /// Replay schedule.
+    schedule: Schedule,
+    /// Dispatch policy.
+    policy: DispatchPolicy,
+    /// Batch cap of the greedy batcher.
+    max_batch: usize,
+    /// Base trace seed (tenant `k` draws from `tenant_seed(seed, k)`).
+    seed: u64,
+    /// Requests per tenant.
+    n_requests: usize,
+}
+
+impl TenantServeKey {
+    /// Fingerprint one multi-tenant replay setting.
+    pub fn new(
+        specs: &[TenantSpec],
+        schedule: Schedule,
+        policy: DispatchPolicy,
+        max_batch: usize,
+        seed: u64,
+        n_requests: usize,
+    ) -> Self {
+        TenantServeKey {
+            tenants: specs
+                .iter()
+                .map(|s| TenantKeyEntry {
+                    layers: s
+                        .cost
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            [
+                                l.mvm_cycles.to_bits(),
+                                l.load_cycles.to_bits(),
+                                l.mem_cycles.to_bits(),
+                                l.weight_fj.to_bits(),
+                                l.base_fj.to_bits(),
+                            ]
+                        })
+                        .collect(),
+                    t_cycle_bits: s.cost.t_cycle_ns.to_bits(),
+                    resident: s.cost.resident,
+                    load: s.load,
+                    slo_ps: s.slo_ps,
+                    priority: s.priority,
+                    share: s.share,
+                })
+                .collect(),
+            schedule,
+            policy,
+            max_batch,
+            seed,
+            n_requests,
+        }
+    }
+}
+
 /// Hit/miss and mapping-search counters of a [`CostCache`] (or of
 /// several merged shards).
 ///
@@ -368,7 +478,7 @@ pub struct CacheStats {
     /// the serving twin of `duplicate_searches`. Zero by construction;
     /// CI gates on it (`BENCH_sweep.json: .gate.duplicate_serves`).
     pub duplicate_serves: u64,
-    /// Serve outcomes currently held.
+    /// Serve outcomes currently held (single-tenant + multi-tenant).
     pub serve_entries: usize,
     /// Requests actually replayed (`Σ n_requests` over
     /// `serve_replays`) — the realized serving work.
@@ -683,6 +793,9 @@ pub struct CostCache {
     seeds: Striped<SearchKey, Vec<(SpatialMapping, TemporalPolicy)>>,
     /// Memoized serving replays (see [`ServeKey`]).
     serves: Striped<ServeKey, ServeOutcome>,
+    /// Memoized multi-tenant replays (see [`TenantServeKey`]; never
+    /// persisted to disk).
+    tenant_serves: Striped<TenantServeKey, TenantOutcome>,
     hits: AtomicU64,
     cross_corner: AtomicU64,
     searches_run: AtomicU64,
@@ -720,7 +833,7 @@ impl CostCache {
             serve_hits: self.serve_hits.load(Ordering::Relaxed),
             serve_replays: self.serve_replays.load(Ordering::Relaxed),
             duplicate_serves: self.duplicate_serves.load(Ordering::Relaxed),
-            serve_entries: self.serves.len(),
+            serve_entries: self.serves.len() + self.tenant_serves.len(),
             serve_replayed_reqs: self.serve_replayed_reqs.load(Ordering::Relaxed),
             serve_naive_reqs: self.serve_naive_reqs.load(Ordering::Relaxed),
         }
@@ -952,6 +1065,77 @@ impl CostCache {
     /// Clone out every replay outcome (the disk-cache save path).
     pub(crate) fn snapshot_serves(&self) -> Vec<(ServeKey, ServeOutcome)> {
         self.serves.snapshot()
+    }
+
+    /// One memoized, single-flight multi-tenant replay — the
+    /// [`CostCache::serve_replay`] twin for [`TenantServeKey`]s. Shares
+    /// the `serve_*` counters and the `duplicate_serves` tripwire with
+    /// the single-tenant store (one accounting surface, one CI gate); a
+    /// replayed key books `n_requests × tenants` realized requests.
+    /// Bit-identical to [`replay_tenants_outcome`] on the same inputs
+    /// because the outcome is a pure function of the key.
+    fn tenant_replay(&self, specs: &[TenantSpec], key: TenantServeKey) -> TenantOutcome {
+        match self.tenant_serves.get_or_claim(&key) {
+            Lookup::Ready(out) => {
+                self.serve_hits.fetch_add(1, Ordering::Relaxed);
+                out
+            }
+            Lookup::Claimed(claim) => {
+                self.serve_replays.fetch_add(1, Ordering::Relaxed);
+                self.serve_replayed_reqs
+                    .fetch_add((key.n_requests * specs.len()) as u64, Ordering::Relaxed);
+                let out = replay_tenants_outcome(
+                    specs,
+                    key.schedule,
+                    key.policy,
+                    key.max_batch,
+                    key.seed,
+                    key.n_requests,
+                );
+                if claim.publish(out.clone()) {
+                    self.duplicate_serves.fetch_add(1, Ordering::Relaxed);
+                }
+                out
+            }
+        }
+    }
+
+    /// One multi-tenant grid cell — the measurement replay (the specs'
+    /// own load shapes) plus the goodput-under-SLO ladder (Poisson
+    /// probes via [`poisson_probe`]), every replay memoized through
+    /// [`TenantServeKey`]s. Bit-identical to the direct
+    /// [`replay_tenants_outcome`] + [`tenant_slo_goodput`] pair
+    /// (test-locked): the pruned ladder only skips decided rungs and
+    /// every surviving replay is served by a pure-function cache.
+    /// Returns the measurement outcome and the best ladder goodput
+    /// (req/s). When every tenant's load is Poisson at its 0.8-rung
+    /// gap, the measurement replay and the ladder's 0.8 rung land on
+    /// the same key and share one entry.
+    pub fn tenant_point(
+        &self,
+        specs: &[TenantSpec],
+        schedule: Schedule,
+        policy: DispatchPolicy,
+        max_batch: usize,
+        seed: u64,
+        n_requests: usize,
+    ) -> (TenantOutcome, f64) {
+        // naive volume for these outputs: one measurement + every rung,
+        // each replaying every tenant's full trace
+        self.serve_naive_reqs.fetch_add(
+            ((1 + SLO_UTILS.len()) * n_requests * specs.len()) as u64,
+            Ordering::Relaxed,
+        );
+        let meas = self.tenant_replay(
+            specs,
+            TenantServeKey::new(specs, schedule, policy, max_batch, seed, n_requests),
+        );
+        let goodput = tenant_slo_goodput_with(specs, schedule, max_batch, seed, n_requests, |gaps| {
+            let probe = poisson_probe(specs, gaps);
+            let key = TenantServeKey::new(&probe, schedule, policy, max_batch, seed, n_requests);
+            self.tenant_replay(&probe, key)
+        });
+        (meas, goodput)
     }
 }
 
@@ -1458,6 +1642,170 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.duplicate_serves, 0, "single-flight serve tripwire");
         // racing threads computed exactly what one serial pass computes
+        assert_eq!(s.serve_replays, serial_stats.serve_replays);
+        assert_eq!(s.serve_replayed_reqs, serial_stats.serve_replayed_reqs);
+        assert_eq!(s.serve_entries, serial_stats.serve_entries);
+    }
+
+    /// A mixed-load two-tenant fixture on the serving cost above:
+    /// tenant 0 resident (swap-charged on switch-in), tenant 1 slower
+    /// and non-resident, with distinct priorities and shares so every
+    /// dispatch policy reads every key field.
+    fn tenant_specs() -> Vec<crate::serve::TenantSpec> {
+        use crate::serve::TenantSpec;
+        vec![
+            TenantSpec {
+                name: "fast".into(),
+                cost: serve_cost(true, 1.0),
+                load: TenantLoad::Poisson {
+                    mean_gap_ps: 400_000,
+                },
+                slo_ps: 2_000_000_000,
+                priority: 2,
+                share: 2,
+            },
+            TenantSpec {
+                name: "slow".into(),
+                cost: serve_cost(false, 3.0),
+                load: TenantLoad::Bursty {
+                    mean_gap_ps: 900_000,
+                    period_ps: 4_000_000,
+                    duty_pct: 25,
+                },
+                slo_ps: 2_000_000_000,
+                priority: 1,
+                share: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn memoized_tenant_point_is_bit_identical_to_the_direct_pair() {
+        use crate::serve::{replay_tenants_outcome, tenant_slo_goodput};
+        let cache = CostCache::new();
+        let specs = tenant_specs();
+        for schedule in [Schedule::LayerPipelined, Schedule::Serialized] {
+            for policy in [
+                DispatchPolicy::Fifo,
+                DispatchPolicy::Priority,
+                DispatchPolicy::DeficitRoundRobin,
+            ] {
+                let (meas, goodput) = cache.tenant_point(&specs, schedule, policy, 8, 42, 128);
+                let direct = replay_tenants_outcome(&specs, schedule, policy, 8, 42, 128);
+                assert_eq!(meas, direct, "{schedule:?} {policy:?}");
+                let direct_goodput = tenant_slo_goodput(&specs, schedule, policy, 8, 42, 128);
+                assert_eq!(
+                    goodput.to_bits(),
+                    direct_goodput.to_bits(),
+                    "{schedule:?} {policy:?}"
+                );
+            }
+        }
+        assert_eq!(cache.stats().duplicate_serves, 0);
+    }
+
+    #[test]
+    fn repeated_tenant_points_hit_instead_of_replaying() {
+        let cache = CostCache::new();
+        let specs = tenant_specs();
+        let (a, ga) =
+            cache.tenant_point(&specs, Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 128);
+        let after_first = cache.stats();
+        assert!(after_first.serve_replays >= 1);
+        assert!(
+            after_first.serve_replays <= 1 + SLO_UTILS.len() as u64,
+            "more replays than measurement + rungs"
+        );
+        // naive volume: (measurement + rungs) × per-tenant trace length
+        assert_eq!(
+            after_first.serve_naive_reqs,
+            ((1 + SLO_UTILS.len()) * 128 * specs.len()) as u64
+        );
+        let (b, gb) =
+            cache.tenant_point(&specs, Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 128);
+        let after_second = cache.stats();
+        // the repeat computed nothing new
+        assert_eq!(after_second.serve_replays, after_first.serve_replays);
+        assert_eq!(after_second.serve_replayed_reqs, after_first.serve_replayed_reqs);
+        assert!(after_second.serve_hits > after_first.serve_hits);
+        assert_eq!(after_second.duplicate_serves, 0);
+        assert_eq!(a, b);
+        assert_eq!(ga.to_bits(), gb.to_bits());
+        // a single warm repeat already clears the CI tenant-replay floor
+        assert!(
+            after_second.serve_replay_reduction() >= 5.0,
+            "reduction {}",
+            after_second.serve_replay_reduction()
+        );
+    }
+
+    #[test]
+    fn distinct_tenant_orders_and_policies_key_separately() {
+        // dispatch ties break by tenant index, so spec order is
+        // semantic and must not collapse onto one entry; the policy is
+        // likewise part of the key
+        let cache = CostCache::new();
+        let specs = tenant_specs();
+        let swapped: Vec<crate::serve::TenantSpec> =
+            specs.iter().rev().cloned().collect();
+        cache.tenant_point(&specs, Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 64);
+        let one = cache.stats();
+        cache.tenant_point(&swapped, Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 64);
+        let two = cache.stats();
+        assert!(two.serve_replays > one.serve_replays, "order erased from key");
+        cache.tenant_point(&specs, Schedule::LayerPipelined, DispatchPolicy::Priority, 8, 42, 64);
+        let three = cache.stats();
+        assert!(three.serve_replays > two.serve_replays, "policy erased from key");
+    }
+
+    #[test]
+    fn concurrent_tenant_points_run_once_with_zero_duplicates() {
+        // the multi-tenant acceptance race: 16 threads hammer
+        // overlapping tenant points across policies; single-flight must
+        // keep duplicate_serves at zero, replays at the serial count,
+        // and every outcome bit-identical
+        let cache = CostCache::new();
+        let specs = tenant_specs();
+        let policies = [
+            DispatchPolicy::Fifo,
+            DispatchPolicy::Priority,
+            DispatchPolicy::DeficitRoundRobin,
+        ];
+        let serial = CostCache::new();
+        let want: Vec<(crate::serve::TenantOutcome, f64)> = policies
+            .iter()
+            .map(|&p| serial.tenant_point(&specs, Schedule::LayerPipelined, p, 8, 42, 96))
+            .collect();
+        let serial_stats = serial.stats();
+        let n_threads = 16;
+        let rounds = 3;
+        std::thread::scope(|scope| {
+            for t in 0..n_threads {
+                let cache = &cache;
+                let specs = &specs;
+                let policies = &policies;
+                let want = &want;
+                scope.spawn(move || {
+                    for r in 0..rounds {
+                        for i in 0..policies.len() {
+                            let j = (i + t + r) % policies.len();
+                            let (out, goodput) = cache.tenant_point(
+                                specs,
+                                Schedule::LayerPipelined,
+                                policies[j],
+                                8,
+                                42,
+                                96,
+                            );
+                            assert_eq!(out, want[j].0);
+                            assert_eq!(goodput.to_bits(), want[j].1.to_bits());
+                        }
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.duplicate_serves, 0, "single-flight tenant tripwire");
         assert_eq!(s.serve_replays, serial_stats.serve_replays);
         assert_eq!(s.serve_replayed_reqs, serial_stats.serve_replayed_reqs);
         assert_eq!(s.serve_entries, serial_stats.serve_entries);

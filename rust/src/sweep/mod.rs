@@ -26,6 +26,13 @@
 //!   replay exactly once — [`CacheStats::duplicate_serves`] is the
 //!   serve-side tripwire and
 //!   [`CacheStats::serve_replay_reduction`] the gated speedup.
+//!   Multi-tenant replays ([`crate::serve::tenant`]) join the same
+//!   machinery under a [`TenantServeKey`] (every tenant's cost
+//!   snapshot, load, SLO and priority/share × dispatch policy ×
+//!   replay knobs) mapping to the condensed
+//!   [`crate::serve::TenantOutcome`]; they share the serve counters
+//!   and the zero-duplicates gate but are in-memory only (never
+//!   persisted — the single-tenant disk schema is unchanged).
 //! * [`grid`] — grid construction (SRAM-cell budget, precision and
 //!   activation-sparsity axes), deterministic sharding
 //!   (`--shards`/`--shard-index`), the two-level (group × layer) task
@@ -57,7 +64,9 @@ pub mod cache;
 pub mod grid;
 pub mod persist;
 
-pub use cache::{CacheStats, CostCache, SearchKey, ServeKey, TrialKey, CACHE_STRIPES};
+pub use cache::{
+    CacheStats, CostCache, SearchKey, ServeKey, TenantServeKey, TrialKey, CACHE_STRIPES,
+};
 pub use grid::{
     merge_summaries, run_sweep, run_sweep_with_cache, GridPoint, PrecisionPoint, SweepGrid,
     SweepOptions, SweepSummary, DEFAULT_GRID_CELLS,

@@ -10,6 +10,9 @@
 //! Monte-Carlo remainders), and `serves` holds
 //! `(ServeKey, ServeOutcome)` pairs (the memoized serving replays —
 //! one per distinct cost snapshot × schedule × batch cap × trace).
+//! Multi-tenant replays (`TenantServeKey`) are deliberately *not*
+//! persisted — they memoize in memory only, so this schema is
+//! unchanged by the tenant store.
 //! Files with a different version tag (or any
 //! malformed structure) are rejected wholesale with a
 //! [`CacheLoadError`] naming the mismatch — a stale schema must never

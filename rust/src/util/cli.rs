@@ -11,7 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::dse::DEFAULT_SPARSITY;
-use crate::serve::ServeConfig;
+use crate::serve::{ServeConfig, TenantArg, TenantLoadArg};
 use crate::sim::NoiseSpec;
 use crate::sweep::{PrecisionPoint, DEFAULT_GRID_CELLS};
 
@@ -162,6 +162,141 @@ pub fn parse_serve_config(args: &Args) -> Result<ServeConfig, String> {
         }
     }
     Ok(cfg)
+}
+
+/// Parse the `serve --tenants` comma-list. Each tenant is
+/// `<network>[:key=value]…` — a tinyMLPerf network token followed by
+/// colon-separated settings:
+///
+/// * `slo-ms=F` — p99 SLO in milliseconds (default 2)
+/// * `prio=N` — priority, higher wins under `--policy priority`
+///   (default 1)
+/// * `share=N` — DRR batch quantum under `--policy drr` (default 1)
+/// * `util=F` — offered utilization of the tenant's `1/K` capacity
+///   slice (default 0.8; `> 1` deliberately overloads)
+/// * `trace=poisson|bursty|closed` — load shape (default poisson)
+/// * `period-us=F` / `duty=N` — bursty period and on-window percent
+///   (defaults 1000 / 20; read only under `trace=bursty`)
+/// * `clients=N` / `think-us=F` — closed-loop pool size and mean think
+///   time (defaults 4 / 1000; read only under `trace=closed`)
+/// * `name=S` — display label (defaults to the network token)
+///
+/// e.g. `--tenants dscnn:prio=2:share=4,resnet8:slo-ms=0.5:trace=closed`.
+/// The open-load mean gap is deliberately *not* a setting: it is
+/// derived per design from `util` ([`TenantArg::into_spec`]), so one
+/// tenant list compares fairly across accelerators of different speed.
+pub fn parse_tenants(raw: &str) -> Result<Vec<TenantArg>, String> {
+    fn pos_f64(v: &str, what: &str, tok: &str) -> Result<f64, String> {
+        match v.parse::<f64>() {
+            Ok(f) if f > 0.0 && f.is_finite() => Ok(f),
+            _ => Err(format!(
+                "--tenants: {what} must be a positive number (got '{v}' in '{tok}')"
+            )),
+        }
+    }
+    let mut out = Vec::new();
+    for tok in raw.split(',') {
+        let tok = tok.trim();
+        let mut parts = tok.split(':');
+        let network = parts.next().unwrap_or("").to_string();
+        if network.is_empty() || network.contains('=') {
+            return Err(format!(
+                "--tenants: each tenant starts with a network name (got '{tok}')"
+            ));
+        }
+        let mut arg = TenantArg {
+            name: network.clone(),
+            network,
+            slo_ps: 2_000_000_000,
+            priority: 1,
+            share: 1,
+            util: 0.8,
+            load: TenantLoadArg::Poisson,
+        };
+        let mut trace = "poisson";
+        let mut period_us = 1000.0f64;
+        let mut duty_pct = 20u64;
+        let mut clients = 4usize;
+        let mut think_us = 1000.0f64;
+        for kv in parts {
+            let Some((k, v)) = kv.split_once('=') else {
+                return Err(format!(
+                    "--tenants: expected key=value, got '{kv}' in '{tok}'"
+                ));
+            };
+            match k {
+                "slo-ms" => arg.slo_ps = (pos_f64(v, "slo-ms", tok)? * 1e9).round() as u64,
+                "prio" => {
+                    arg.priority = v.parse::<u32>().map_err(|_| {
+                        format!("--tenants: prio must be an unsigned integer (got '{v}' in '{tok}')")
+                    })?
+                }
+                "share" => {
+                    arg.share = match v.parse::<u32>() {
+                        Ok(n) if n >= 1 => n,
+                        _ => {
+                            return Err(format!(
+                                "--tenants: share must be a positive integer (got '{v}' in '{tok}')"
+                            ))
+                        }
+                    }
+                }
+                "util" => arg.util = pos_f64(v, "util", tok)?,
+                "trace" => {
+                    trace = match v {
+                        "poisson" | "bursty" | "closed" => v,
+                        _ => {
+                            return Err(format!(
+                                "--tenants: trace must be poisson|bursty|closed (got '{v}' in '{tok}')"
+                            ))
+                        }
+                    }
+                }
+                "period-us" => period_us = pos_f64(v, "period-us", tok)?,
+                "duty" => {
+                    duty_pct = match v.parse::<u64>() {
+                        Ok(n) if (1..=100).contains(&n) => n,
+                        _ => {
+                            return Err(format!(
+                                "--tenants: duty must be a percentage in 1..=100 (got '{v}' in '{tok}')"
+                            ))
+                        }
+                    }
+                }
+                "clients" => {
+                    clients = match v.parse::<usize>() {
+                        Ok(n) if n >= 1 => n,
+                        _ => {
+                            return Err(format!(
+                                "--tenants: clients must be a positive integer (got '{v}' in '{tok}')"
+                            ))
+                        }
+                    }
+                }
+                "think-us" => think_us = pos_f64(v, "think-us", tok)?,
+                "name" => arg.name = v.to_string(),
+                other => {
+                    return Err(format!(
+                        "--tenants: unknown setting '{other}' in '{tok}' (takes slo-ms, prio, \
+                         share, util, trace, period-us, duty, clients, think-us, name)"
+                    ))
+                }
+            }
+        }
+        arg.load = match trace {
+            "bursty" => TenantLoadArg::Bursty {
+                period_ps: ((period_us * 1e6).round() as u64).max(1),
+                duty_pct,
+            },
+            "closed" => TenantLoadArg::Closed {
+                clients,
+                think_ps: ((think_us * 1e6).round() as u64).max(1),
+            },
+            _ => TenantLoadArg::Poisson,
+        };
+        out.push(arg);
+    }
+    Ok(out)
 }
 
 /// Parse a comma-separated option value list (`--cells 294912,147456`).
@@ -369,6 +504,72 @@ mod tests {
         ] {
             let err = parse_serve_config(&parse(cmd)).unwrap_err();
             assert!(err.starts_with(opt), "{cmd}: {err}");
+        }
+    }
+
+    #[test]
+    fn parse_tenants_defaults_and_full_form() {
+        let ts = parse_tenants("dscnn").unwrap();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].network, "dscnn");
+        assert_eq!(ts[0].name, "dscnn");
+        assert_eq!(ts[0].slo_ps, 2_000_000_000);
+        assert_eq!(ts[0].priority, 1);
+        assert_eq!(ts[0].share, 1);
+        assert_eq!(ts[0].util, 0.8);
+        assert_eq!(ts[0].load, TenantLoadArg::Poisson);
+
+        let ts = parse_tenants(
+            "dscnn:prio=2:share=4:slo-ms=0.5:util=0.6:name=fg, \
+             resnet8:trace=bursty:period-us=100:duty=25, \
+             ae:trace=closed:clients=8:think-us=50",
+        )
+        .unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].name, "fg");
+        assert_eq!(ts[0].network, "dscnn");
+        assert_eq!(ts[0].priority, 2);
+        assert_eq!(ts[0].share, 4);
+        assert_eq!(ts[0].slo_ps, 500_000_000);
+        assert_eq!(ts[0].util, 0.6);
+        assert_eq!(
+            ts[1].load,
+            TenantLoadArg::Bursty {
+                period_ps: 100_000_000,
+                duty_pct: 25
+            }
+        );
+        assert_eq!(
+            ts[2].load,
+            TenantLoadArg::Closed {
+                clients: 8,
+                think_ps: 50_000_000
+            }
+        );
+    }
+
+    #[test]
+    fn parse_tenants_rejects_malformed_entries() {
+        for (raw, needle) in [
+            ("", "starts with a network name"),
+            ("dscnn,,ae", "starts with a network name"),
+            ("slo-ms=2", "starts with a network name"),
+            ("dscnn:slo-ms", "expected key=value"),
+            ("dscnn:slo-ms=0", "slo-ms must be a positive number"),
+            ("dscnn:slo-ms=soon", "slo-ms must be a positive number"),
+            ("dscnn:util=-0.5", "util must be a positive number"),
+            ("dscnn:share=0", "share must be a positive integer"),
+            ("dscnn:prio=-1", "prio must be an unsigned integer"),
+            ("dscnn:trace=steady", "trace must be poisson|bursty|closed"),
+            ("dscnn:duty=0", "duty must be a percentage in 1..=100"),
+            ("dscnn:duty=120", "duty must be a percentage in 1..=100"),
+            ("dscnn:clients=0", "clients must be a positive integer"),
+            ("dscnn:think-us=0", "think-us must be a positive number"),
+            ("dscnn:sloms=2", "unknown setting 'sloms'"),
+        ] {
+            let err = parse_tenants(raw).unwrap_err();
+            assert!(err.contains(needle), "{raw}: {err}");
+            assert!(err.starts_with("--tenants:"), "{raw}: {err}");
         }
     }
 

@@ -1,0 +1,266 @@
+//! Integration: the multi-tenant serving engine against the calibrated
+//! cost model — the 1-tenant replay collapses bit-identically to the
+//! single-tenant engine on every survey design × schedule, admission
+//! control admits exactly the tenants whose zero-queueing bound meets
+//! their SLO (and admitted closed-loop tenants then *hit* that bound),
+//! the rejected count is monotone in the SLO, swap charges follow the
+//! real residency matrix, and the whole replay (goodput ladder
+//! included) is a pure function of its arguments.
+
+use imcsim::arch::table2_systems;
+use imcsim::dse::{search_network, DseOptions};
+use imcsim::serve::tenant::{tenant_gap_ps, tenant_slo_goodput_unpruned};
+use imcsim::serve::{
+    poisson_arrivals, replay_outcome, replay_tenants, replay_tenants_outcome, simulate_with_table,
+    tenant_slo_goodput, DispatchPolicy, NetworkServeCost, Schedule, StageTable, TenantLoad,
+    TenantSpec,
+};
+use imcsim::workload::all_networks;
+
+const POLICIES: [DispatchPolicy; 3] = [
+    DispatchPolicy::Fifo,
+    DispatchPolicy::Priority,
+    DispatchPolicy::DeficitRoundRobin,
+];
+
+fn serve_cost(sys: &imcsim::arch::ImcSystem, net: &imcsim::workload::Network) -> NetworkServeCost {
+    let r = search_network(net, sys, &DseOptions::default());
+    NetworkServeCost::from_result(&r, sys)
+}
+
+fn solo_spec(cost: NetworkServeCost, load: TenantLoad, slo_ps: u64) -> TenantSpec {
+    TenantSpec {
+        name: "solo".into(),
+        cost,
+        load,
+        slo_ps,
+        priority: 1,
+        // DRR with share 1 caps batches at 1 by design; a share as wide
+        // as the batch cap leaves the greedy batcher unconstrained so
+        // every policy must degenerate to the same timeline.
+        share: 8,
+    }
+}
+
+/// The acceptance criterion for the multi-tenant rewrite: with one
+/// Poisson tenant (tenant 0 draws the bare seed), the shared-
+/// accelerator loop reproduces the single-tenant engine *bit-exactly*
+/// on every survey design × tinyMLPerf network × schedule × dispatch
+/// policy — outputs, p50/p99, energy per request, sustained req/s.
+#[test]
+fn one_tenant_replay_is_bit_identical_on_every_survey_design_and_schedule() {
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            let cost = serve_cost(sys, &net);
+            for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+                let gap = tenant_gap_ps(&cost, schedule, 8, 1, 0.8);
+                let table = StageTable::new(&cost, 8);
+                let arrivals = poisson_arrivals(42, gap, 128);
+                let single = simulate_with_table(&table, schedule, &arrivals);
+                let single_out = replay_outcome(&table, schedule, 42, 128, gap);
+                let spec =
+                    solo_spec(cost.clone(), TenantLoad::Poisson { mean_gap_ps: gap }, u64::MAX);
+                for policy in POLICIES {
+                    let rep = replay_tenants(&[spec.clone()], schedule, policy, 8, 42, 128);
+                    let t = &rep.tenants[0];
+                    assert_eq!(
+                        t.latency, single.latency,
+                        "{}/{} {schedule} {policy}: latency record diverged",
+                        sys.name, net.name
+                    );
+                    assert_eq!(t.batches, single.batches, "{}/{}", sys.name, net.name);
+                    assert_eq!(t.served, 128);
+                    assert_eq!((t.swaps, rep.switches), (0, 0));
+                    // and the condensed outcome matches the memoized
+                    // single-tenant path's ServeOutcome to the bit
+                    let out = replay_tenants_outcome(&[spec.clone()], schedule, policy, 8, 42, 128);
+                    let p = &out.per_tenant[0];
+                    assert_eq!(p.p99_ps, single_out.p99_ps, "{}/{}", sys.name, net.name);
+                    assert_eq!(p.p50_ps, single.latency.percentile_ps(50.0));
+                    assert_eq!(
+                        p.fj_per_req.to_bits(),
+                        single_out.fj_per_req.to_bits(),
+                        "{}/{}: energy per request diverged",
+                        sys.name,
+                        net.name
+                    );
+                    assert_eq!(p.achieved_rps.to_bits(), single_out.achieved_rps.to_bits());
+                }
+            }
+        }
+    }
+}
+
+/// Admission control's soundness half, on real hardware points: a
+/// closed-loop tenant with one client never queues, so every latency
+/// equals the zero-queueing bound `min_service_ps` — and whenever the
+/// tenant was admitted (`min_service_ps ≤ slo_ps`), its p99 therefore
+/// meets the SLO. One ps tighter and the same tenant is rejected
+/// outright (nothing served, everything counted as rejected).
+#[test]
+fn admitted_p99_meets_the_slo_under_the_zero_queueing_bound() {
+    for sys in &table2_systems() {
+        for net in all_networks() {
+            let cost = serve_cost(sys, &net);
+            let bound = cost.min_service_ps();
+            let load = TenantLoad::Closed { clients: 1, think_ps: 1_000_000 };
+
+            // SLO exactly at the bound: admitted, and p99 == bound ≤ SLO
+            let at = solo_spec(cost.clone(), load, bound);
+            let rep = replay_tenants(&[at], Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 96);
+            let t = &rep.tenants[0];
+            assert!(t.admitted, "{}/{}", sys.name, net.name);
+            assert_eq!(t.served, 96);
+            assert_eq!(
+                t.latency.percentile_ps(99.0),
+                bound,
+                "{}/{}: single closed-loop client must see zero queueing",
+                sys.name,
+                net.name
+            );
+            assert!(t.latency.percentile_ps(99.0) <= t.slo_ps);
+            assert_eq!(t.slo_ok, 96, "every request meets the SLO it was admitted under");
+
+            // one ps below the bound: rejected, nothing replayed
+            let under = solo_spec(cost.clone(), load, bound - 1);
+            let rep = replay_tenants(&[under], Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 96);
+            let t = &rep.tenants[0];
+            assert!(!t.admitted, "{}/{}", sys.name, net.name);
+            assert_eq!((t.served, t.rejected), (0, 96));
+        }
+    }
+}
+
+/// Admission control's monotonicity half, on real hardware points:
+/// loosening the SLO can only admit more — across a ladder of SLOs
+/// straddling each design's zero-queueing bound, the total rejected
+/// count of a two-tenant set never increases.
+#[test]
+fn rejected_count_is_monotone_non_increasing_in_the_slo_on_every_design() {
+    let nets = all_networks();
+    for sys in &table2_systems() {
+        let a = serve_cost(sys, &nets[2]); // ds_cnn: resident everywhere
+        let b = serve_cost(sys, &nets[1]); // resnet8
+        let bound = a.min_service_ps().max(b.min_service_ps());
+        let ladder = [
+            1u64,
+            bound.saturating_sub(1),
+            bound,
+            bound.saturating_mul(4),
+            u64::MAX,
+        ];
+        let mut prev = usize::MAX;
+        for slo in ladder {
+            let specs = vec![
+                TenantSpec {
+                    name: "a".into(),
+                    cost: a.clone(),
+                    load: TenantLoad::Poisson { mean_gap_ps: tenant_gap_ps(&a, Schedule::LayerPipelined, 8, 2, 0.8) },
+                    slo_ps: slo,
+                    priority: 2,
+                    share: 2,
+                },
+                TenantSpec {
+                    name: "b".into(),
+                    cost: b.clone(),
+                    load: TenantLoad::Poisson { mean_gap_ps: tenant_gap_ps(&b, Schedule::LayerPipelined, 8, 2, 0.8) },
+                    slo_ps: slo,
+                    priority: 1,
+                    share: 1,
+                },
+            ];
+            let rep = replay_tenants(&specs, Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 64);
+            let rejected: usize = rep.tenants.iter().map(|t| t.rejected).sum();
+            assert!(
+                rejected <= prev,
+                "{}: slo {slo} ps rejected {rejected} > {prev} at a tighter SLO",
+                sys.name
+            );
+            prev = rejected;
+        }
+        assert_eq!(prev, 0, "{}: the loosest SLO must admit everyone", sys.name);
+    }
+}
+
+/// Swap charges follow the real residency matrix: interleaving ds_cnn
+/// (D1-resident on every survey design) with MobileNet (resident on
+/// none) charges swap stalls and swap energy only to ds_cnn — the
+/// non-resident tenant already streams its weights every batch — and
+/// the per-tenant accounting identity `stall = swaps · swap_ps`,
+/// `energy = swaps · swap_fj` holds exactly.
+#[test]
+fn swap_charges_follow_the_residency_matrix_on_every_design() {
+    let nets = all_networks();
+    for sys in &table2_systems() {
+        let resident = serve_cost(sys, &nets[2]); // ds_cnn
+        let streaming = serve_cost(sys, &nets[3]); // mobilenet_v1
+        assert!(resident.resident, "{}: ds_cnn must be D1-resident", sys.name);
+        assert!(!streaming.resident, "{}: MobileNet must not fit D1", sys.name);
+        let gap = tenant_gap_ps(&resident, Schedule::LayerPipelined, 8, 2, 0.8)
+            .max(tenant_gap_ps(&streaming, Schedule::LayerPipelined, 8, 2, 0.8));
+        let mk = |name: &str, cost: &NetworkServeCost| TenantSpec {
+            name: name.into(),
+            cost: cost.clone(),
+            load: TenantLoad::Poisson { mean_gap_ps: gap },
+            slo_ps: u64::MAX,
+            priority: 1,
+            share: 1,
+        };
+        let specs = vec![mk("res", &resident), mk("str", &streaming)];
+        let rep = replay_tenants(&specs, Schedule::LayerPipelined, DispatchPolicy::Fifo, 8, 42, 96);
+        assert!(rep.switches > 0, "{}: the pair must interleave", sys.name);
+        let (r, s) = (&rep.tenants[0], &rep.tenants[1]);
+        assert!(r.swaps > 0, "{}: resident switch-ins must charge swaps", sys.name);
+        assert_eq!(r.swap_stall_ps, r.swaps as u64 * resident.swap_ps(), "{}", sys.name);
+        assert_eq!(r.swap_fj, r.swaps as f64 * resident.swap_fj(), "{}", sys.name);
+        assert_eq!((s.swaps, s.swap_stall_ps), (0, 0), "{}: streaming tenant charged", sys.name);
+        assert_eq!(s.swap_fj, 0.0);
+        assert!(s.latency.reload_fj > 0.0, "{}: streaming reload still paid", sys.name);
+    }
+}
+
+/// The whole multi-tenant surface is a pure function of its arguments
+/// on real designs — mixed trace families, every dispatch policy —
+/// and the pruned goodput ladder reproduces the exhaustive reference
+/// ladder bit-exactly (pruning is a work optimization, never a
+/// semantic one), mirroring the single-tenant rung-pruning contract.
+#[test]
+fn tenant_replay_and_goodput_ladder_are_deterministic_and_pruning_is_exact() {
+    let nets = all_networks();
+    let sys = &table2_systems()[0]; // aimc_large: swap-heavy reloads
+    let a = serve_cost(sys, &nets[2]);
+    let b = serve_cost(sys, &nets[1]);
+    let gap = tenant_gap_ps(&a, Schedule::LayerPipelined, 8, 2, 0.8);
+    let specs = vec![
+        TenantSpec {
+            name: "interactive".into(),
+            cost: a,
+            load: TenantLoad::Bursty { mean_gap_ps: gap, period_ps: 50_000_000, duty_pct: 25 },
+            slo_ps: 2_000_000_000,
+            priority: 2,
+            share: 4,
+        },
+        TenantSpec {
+            name: "batch".into(),
+            cost: b,
+            load: TenantLoad::Closed { clients: 4, think_ps: 1_000_000 },
+            slo_ps: 4_000_000_000,
+            priority: 1,
+            share: 1,
+        },
+    ];
+    for schedule in [Schedule::Serialized, Schedule::LayerPipelined] {
+        for policy in POLICIES {
+            let x = replay_tenants_outcome(&specs, schedule, policy, 8, 42, 128);
+            let y = replay_tenants_outcome(&specs, schedule, policy, 8, 42, 128);
+            assert_eq!(x, y, "{schedule} {policy}: replay is not a pure function");
+            let pruned = tenant_slo_goodput(&specs, schedule, policy, 8, 42, 128);
+            let full = tenant_slo_goodput_unpruned(&specs, schedule, policy, 8, 42, 128);
+            assert_eq!(
+                pruned.to_bits(),
+                full.to_bits(),
+                "{schedule} {policy}: pruned goodput {pruned} != unpruned {full}"
+            );
+        }
+    }
+}
